@@ -1,0 +1,54 @@
+//! Quickstart: the paper's pipeline (Algorithm 2) on a small synthetic
+//! dataset, end to end, with the XLA engine when artifacts are present.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! This is the E2E driver required by the repro spec: it exercises all
+//! three layers (Rust coordinator → AOT XLA artifacts → Pallas-lowered
+//! HLO) on a real small workload and prints the paper's metrics.
+
+use scrb::cluster::{Env, MethodKind};
+use scrb::config::{Engine, Kernel, PipelineConfig};
+use scrb::data::synth;
+use scrb::metrics::all_metrics;
+use scrb::runtime::XlaRuntime;
+
+fn main() {
+    // 1. data: the classic non-convex case K-means cannot solve
+    let ds = synth::two_moons(2_000, 0.06, 7);
+    println!("dataset: two moons, n={} d={} k={}", ds.n(), ds.d(), ds.k);
+
+    // 2. configuration (Algorithm 2 inputs: K, R, kernel σ)
+    let mut cfg = PipelineConfig::default();
+    cfg.k = 2;
+    cfg.r = 256;
+    cfg.kernel = Kernel::Laplacian { sigma: 0.15 };
+    cfg.engine = Engine::Auto;
+
+    // 3. optional XLA runtime (AOT Pallas kernels; falls back to native)
+    let xla = XlaRuntime::load(&cfg.artifacts_dir).ok();
+    println!(
+        "engine: {}",
+        if xla.is_some() { "xla (AOT artifacts loaded)" } else { "native (no artifacts)" }
+    );
+    let env = Env::with_xla(cfg, xla.as_ref());
+
+    // 4. run SC_RB and the K-means baseline
+    for kind in [MethodKind::ScRb, MethodKind::KMeans] {
+        let out = kind.run(&env, &ds.x);
+        let m = all_metrics(&out.labels, &ds.y);
+        println!(
+            "{:<8} acc={:.3} nmi={:.3} ri={:.3} fm={:.3}   [{}]",
+            kind.name(),
+            m.accuracy,
+            m.nmi,
+            m.rand_index,
+            m.f_measure,
+            out.timer.summary()
+        );
+        if let Some(kappa) = out.info.kappa {
+            println!("         κ = {kappa:.1} non-empty bins/grid (Definition 1)");
+        }
+    }
+    println!("\nSC_RB separates the moons; K-means cannot — the paper's motivating contrast.");
+}

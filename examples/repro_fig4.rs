@@ -1,0 +1,41 @@
+//! Reproduce Fig. 4: linear scalability of SC_RB in the number of samples
+//! N — per-stage runtimes (RB generation / eigensolver / K-means / total)
+//! on poker-like and susy-like data at fixed R.
+//!
+//!     cargo run --release --example repro_fig4 -- [--ns 1000,4000,...] [--r 256]
+//!
+//! Expected shape: every stage scales ~linearly in N (per-point cost ratio
+//! printed at the end ≈ 1).
+
+use scrb::cli::Args;
+use scrb::config::PipelineConfig;
+use scrb::coordinator::{experiment, report, Coordinator};
+
+fn main() {
+    let args = Args::from_env().unwrap();
+    let mut cfg = PipelineConfig::default();
+    cfg.apply_args(&args).unwrap();
+    cfg.verbose = true;
+    let coord = Coordinator::new(cfg, 1);
+
+    let r = args.get_usize("r", 256).unwrap();
+    let default_ns: &[usize] = if args.flag("full") {
+        &[10_000, 40_000, 160_000, 640_000, 1_025_010]
+    } else {
+        &[1_000, 4_000, 16_000, 64_000, 256_000]
+    };
+    let ns = args.get_usize_list("ns", default_ns).unwrap();
+
+    for dataset in ["poker", "susy"] {
+        let points = experiment::fig4(&coord, dataset, &ns, r);
+        println!("{}", report::render_fig4(dataset, &points));
+        let mut csv = String::from("n,rb_secs,svd_secs,kmeans_secs,total_secs,acc\n");
+        for p in &points {
+            csv.push_str(&format!(
+                "{},{},{},{},{},{}\n",
+                p.n, p.rb_secs, p.svd_secs, p.kmeans_secs, p.total_secs, p.accuracy
+            ));
+        }
+        let _ = report::save(&format!("fig4_{dataset}.csv"), &csv);
+    }
+}

@@ -1,0 +1,44 @@
+//! Reproduce Fig. 5: runtime scalability of all methods in the number of
+//! latent features R, on the four panel datasets (pendigits, letter,
+//! mnist, acoustic).
+//!
+//!     cargo run --release --example repro_fig5 -- [--scale 64] [--rs 16,64,256,1024]
+//!
+//! Expected shape: every approximation method is ~linear in R; KK_RF's
+//! K-means-on-dense-Z cost blows up at large R; exact SC is the flat
+//! quadratic reference where feasible.
+
+use scrb::cli::Args;
+use scrb::config::PipelineConfig;
+use scrb::coordinator::{experiment, report, Coordinator};
+
+fn main() {
+    let args = Args::from_env().unwrap();
+    let scale = if args.flag("full") { 1 } else { args.get_usize("scale", 64).unwrap() };
+    let mut cfg = PipelineConfig::default();
+    cfg.apply_args(&args).unwrap();
+    cfg.verbose = true;
+    let coord = Coordinator::new(cfg, scale);
+
+    let rs = args.get_usize_list("rs", &[16, 64, 256, 1024]).unwrap();
+    let names = args.get_str_list("datasets", &["pendigits", "letter", "mnist", "acoustic"]);
+    let mut csv = String::from("dataset,method,r,acc,secs\n");
+    for name in names {
+        let series = experiment::fig5(&coord, &name, &rs);
+        println!(
+            "{}",
+            report::render_series(&format!("Fig. 5: runtime vs R ({name})"), &series, "R")
+        );
+        for s in &series {
+            for p in &s.points {
+                csv.push_str(&format!(
+                    "{},{},{},{},{}\n",
+                    name, s.label, p.x as usize, p.acc, p.secs
+                ));
+            }
+        }
+    }
+    if let Ok(path) = report::save("fig5.csv", &csv) {
+        eprintln!("[saved {path}]");
+    }
+}

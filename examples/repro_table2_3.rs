@@ -1,0 +1,41 @@
+//! Reproduce Tables 1–3: dataset properties, average rank scores over
+//! (NMI, RI, FM, Acc), and wallclock for all 9 methods × 8 benchmarks.
+//!
+//!     cargo run --release --example repro_table2_3 -- [--scale 64] [--r 1024]
+//!
+//! Paper protocol (§5.1): R = 1024 for all methods, shared σ, same seeds;
+//! exact SC reported "−" where infeasible. Default --scale 64 keeps the
+//! full grid tractable; use --full and --r 1024 for paper-size runs.
+
+use scrb::cli::Args;
+use scrb::config::PipelineConfig;
+use scrb::coordinator::{experiment, report, Coordinator};
+
+fn main() {
+    let args = Args::from_env().unwrap();
+    let scale = if args.flag("full") { 1 } else { args.get_usize("scale", 64).unwrap() };
+    let mut cfg = PipelineConfig::default();
+    cfg.apply_args(&args).unwrap();
+    if args.get("r").is_none() {
+        cfg.r = 1024; // paper setting
+    }
+    cfg.verbose = true;
+
+    println!("Table 1: dataset properties");
+    println!("{}", report::render_table1(scale));
+
+    let coord = Coordinator::new(cfg, scale);
+    let names: Vec<String> = args.get_str_list("datasets", &experiment::TABLE_DATASETS);
+    let grid = experiment::table2_3(&coord, &names);
+
+    println!("\nTable 2: average rank scores (lower = better), R={}", coord.base_cfg.r);
+    println!("{}", report::render_table2(&grid));
+    println!("Table 3: computational time (seconds)");
+    println!("{}", report::render_table3(&grid));
+    println!("{}", report::render_detail(&grid));
+
+    let json = report::grid_to_json(&grid).to_string();
+    if let Ok(path) = report::save("table2_3.json", &json) {
+        eprintln!("[saved {path}]");
+    }
+}

@@ -1,0 +1,64 @@
+"""AOT lowering: L2 graphs (wrapping L1 Pallas kernels) → HLO text +
+manifest, consumed by the Rust runtime.
+
+HLO **text** is the interchange format, not serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: str, only: str | None = None) -> list[dict]:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for name, fn, specs, meta in model.roster():
+        if only and only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry = {"name": name, "file": fname, **meta}
+        entries.append(entry)
+        print(f"  wrote {fname} ({len(text)} chars)")
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--only", default=None, help="substring filter on variant names")
+    args = ap.parse_args()
+
+    print(f"AOT-lowering {len(model.roster())} variants to {args.out}")
+    entries = build(args.out, args.only)
+    manifest = {"format": 1, "entries": entries}
+    path = os.path.join(args.out, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  wrote manifest.json ({len(entries)} entries)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""L1 Pallas kernels: exact kernel blocks (Gaussian + Laplacian).
+
+The O(N²d) similarity-graph path of exact SC and the Nyström/landmark
+baselines, tiled as [bi, bj] output blocks over a 2-D grid.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+- Gaussian uses the matmul identity ‖x−y‖² = ‖x‖² + ‖y‖² − 2x·y, so the
+  inner loop is a [bi, d] × [d, bj] MXU contraction (same shape as a
+  flash-attention logits block).
+- Laplacian needs Σ|x_l − y_l| which has no matmul form; the kernel walks
+  the feature dimension in fixed chunks with a fori_loop so the broadcast
+  intermediate [bi, bj, dc] stays VMEM-sized (bi=bj=128, dc=100 →
+  ≈6.6 MB f32), instead of materializing [bi, bj, d].
+
+interpret=True for CPU-PJRT portability (see pallas_kmeans.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+# feature-chunk size for the Laplacian accumulation loop
+D_CHUNK = 100
+
+
+def _gaussian_kernel(x_ref, y_ref, g_ref, o_ref):
+    xb = x_ref[...]                                    # [bi, d]
+    yb = y_ref[...]                                    # [bj, d]
+    gamma = g_ref[0]
+    x2 = jnp.sum(xb * xb, axis=1, keepdims=True)
+    y2 = jnp.sum(yb * yb, axis=1)[None, :]
+    cross = jax.lax.dot_general(
+        xb, yb, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    d2 = jnp.maximum(x2 + y2 - 2.0 * cross, 0.0)
+    o_ref[...] = jnp.exp(-gamma * d2)
+
+
+def _laplacian_kernel_factory(d: int, d_chunk: int):
+    n_chunks, rem = divmod(d, d_chunk)
+    assert rem == 0, f"d={d} not divisible by chunk {d_chunk}"
+
+    def kernel(x_ref, y_ref, g_ref, o_ref):
+        gamma = g_ref[0]
+
+        def body(ci, acc):
+            lo = ci * d_chunk
+            xs = pl.load(x_ref, (slice(None), pl.dslice(lo, d_chunk)))  # [bi, dc]
+            ys = pl.load(y_ref, (slice(None), pl.dslice(lo, d_chunk)))  # [bj, dc]
+            diff = jnp.abs(xs[:, None, :] - ys[None, :, :])             # [bi, bj, dc]
+            return acc + jnp.sum(diff, axis=-1)
+
+        bi = x_ref.shape[0]
+        bj = y_ref.shape[0]
+        acc = jnp.zeros((bi, bj), dtype=jnp.float32)
+        acc = jax.lax.fori_loop(0, n_chunks, body, acc)
+        o_ref[...] = jnp.exp(-gamma * acc)
+
+    return kernel
+
+
+def _block_call(kernel, x, y, gamma, block):
+    t, d = x.shape
+    t2, _ = y.shape
+    bi = min(block, t)
+    bj = min(block, t2)
+    assert t % bi == 0 and t2 % bj == 0
+    return pl.pallas_call(
+        kernel,
+        grid=(t // bi, t2 // bj),
+        in_specs=[
+            pl.BlockSpec((bi, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bj, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bi, bj), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, t2), jnp.float32),
+        interpret=True,
+    )(x, y, gamma)
+
+
+def kernel_block_gaussian(x, y, gamma, block: int = DEFAULT_BLOCK):
+    """exp(-gamma‖x_i−y_j‖²) for row tiles x [t,d], y [t,d]; gamma: [1]."""
+    return _block_call(_gaussian_kernel, x, y, gamma, block)
+
+
+def kernel_block_laplacian(x, y, gamma, block: int = DEFAULT_BLOCK):
+    """exp(-gamma‖x_i−y_j‖₁); feature dim walked in VMEM-sized chunks."""
+    d = x.shape[1]
+    d_chunk = d if d <= 128 else D_CHUNK
+    kernel = _laplacian_kernel_factory(d, d_chunk)
+    return _block_call(kernel, x, y, gamma, block)
+
+
+def vmem_bytes_laplacian(block: int, d_chunk: int) -> int:
+    """Estimated VMEM working set per grid step (f32): the broadcast
+    intermediate dominates."""
+    return 4 * (block * block * d_chunk + 2 * block * d_chunk + block * block)

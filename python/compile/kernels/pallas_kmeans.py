@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: K-means assignment distances.
+
+The NK²t hot spot of every method's final step. TPU mapping (DESIGN.md
+§Hardware-Adaptation): the distance matrix is computed as
+‖x‖² + ‖c‖² − 2·x@cᵀ so the inner loop is a [bt, d] × [d, kp] contraction
+feeding the MXU; the (small) centroid block stays resident in VMEM across
+the row-tile grid, and x streams HBM→VMEM one row block per grid step.
+
+VMEM working set per step (f32): bt·d + kp·d + bt·kp
+  = 256·800 + 32·800 + 256·32 ≈ 0.94 MB — comfortably under ~16 MB.
+
+interpret=True: CPU PJRT cannot run Mosaic custom-calls; the lowered HLO
+is portable and is what the Rust runtime loads.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-block size: multiple of 8 (f32 sublane) and large enough to keep the
+# MXU busy on the [bt, d] x [d, kp] contraction.
+DEFAULT_BLOCK_T = 256
+
+
+def _assign_kernel(x_ref, c_ref, o_ref):
+    xb = x_ref[...]                                   # [bt, d]
+    cb = c_ref[...]                                   # [kp, d]
+    x2 = jnp.sum(xb * xb, axis=1, keepdims=True)      # [bt, 1]
+    c2 = jnp.sum(cb * cb, axis=1)[None, :]            # [1, kp]
+    # MXU contraction: [bt, d] @ [d, kp]
+    cross = jax.lax.dot_general(
+        xb, cb, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                  # [bt, kp]
+    o_ref[...] = x2 + c2 - 2.0 * cross
+
+
+def kmeans_assign(x, c, block_t: int = DEFAULT_BLOCK_T):
+    """Squared distances [t, kp] between rows of x [t, d] and c [kp, d]."""
+    t, d = x.shape
+    kp, d2 = c.shape
+    assert d == d2, f"dim mismatch {d} vs {d2}"
+    bt = min(block_t, t)
+    assert t % bt == 0, f"tile {t} not divisible by block {bt}"
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=(t // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),   # x streams by row block
+            pl.BlockSpec((kp, d), lambda i: (0, 0)),   # centroids resident
+        ],
+        out_specs=pl.BlockSpec((bt, kp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, kp), jnp.float32),
+        interpret=True,
+    )(x, c)
+
+
+def vmem_bytes(block_t: int, d: int, kp: int) -> int:
+    """Estimated VMEM working set per grid step (f32)."""
+    return 4 * (block_t * d + kp * d + block_t * kp)

@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: Random Fourier feature map cos(x·W + b).
+
+The RF-baseline feature generation (SC_RF / SV_RF / KK_RF). A single
+[bt, d] × [d, r] MXU contraction per row block with W resident in VMEM
+(d=800, r=1024 → 3.3 MB f32), followed by an elementwise cos on the VPU.
+The √(2/R) scale is applied by the Rust caller so padded columns can be
+sliced off first.
+
+interpret=True for CPU-PJRT portability (see pallas_kmeans.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_T = 256
+
+
+def _rf_kernel(x_ref, w_ref, b_ref, o_ref):
+    xb = x_ref[...]                                   # [bt, d]
+    wb = w_ref[...]                                   # [d, r]
+    bb = b_ref[...]                                   # [r]
+    proj = jax.lax.dot_general(
+        xb, wb, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                  # [bt, r]
+    o_ref[...] = jnp.cos(proj + bb[None, :])
+
+
+def rf_features(x, w, b, block_t: int = DEFAULT_BLOCK_T):
+    """cos(x@w + b): x [t, d], w [d, r], b [r] -> [t, r]."""
+    t, d = x.shape
+    d2, r = w.shape
+    assert d == d2
+    bt = min(block_t, t)
+    assert t % bt == 0
+    return pl.pallas_call(
+        _rf_kernel,
+        grid=(t // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, r), lambda i: (0, 0)),    # W resident
+            pl.BlockSpec((r,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, r), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+def vmem_bytes(block_t: int, d: int, r: int) -> int:
+    """Estimated VMEM working set per grid step (f32)."""
+    return 4 * (block_t * d + d * r + r + block_t * r)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: pytest checks every Pallas kernel
+against these on hypothesis-generated shapes, and the Rust runtime's
+numerics are validated against the same definitions in
+rust/tests/runtime_xla.rs.
+"""
+
+import jax.numpy as jnp
+
+
+def kmeans_assign_ref(x, c):
+    """Squared Euclidean distances point-to-centroid.
+
+    x: [t, d] f32, c: [kp, d] f32 -> [t, kp] f32.
+    """
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)      # [t, 1]
+    c2 = jnp.sum(c * c, axis=1)[None, :]            # [1, kp]
+    cross = x @ c.T                                  # [t, kp]
+    return x2 + c2 - 2.0 * cross
+
+
+def kernel_block_laplacian_ref(x, y, gamma):
+    """exp(-gamma * ||x_i - y_j||_1); gamma = 1/sigma.
+
+    x: [t, d], y: [t, d], gamma: [1] -> [t, t].
+    """
+    diff = jnp.abs(x[:, None, :] - y[None, :, :])   # [t, t, d]
+    return jnp.exp(-gamma[0] * jnp.sum(diff, axis=-1))
+
+
+def kernel_block_gaussian_ref(x, y, gamma):
+    """exp(-gamma * ||x_i - y_j||^2); gamma = 1/(2 sigma^2)."""
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)
+    y2 = jnp.sum(y * y, axis=1)[None, :]
+    cross = x @ y.T
+    d2 = jnp.maximum(x2 + y2 - 2.0 * cross, 0.0)
+    return jnp.exp(-gamma[0] * d2)
+
+
+def rf_features_ref(x, w, b):
+    """cos(x @ w + b) — the sqrt(2/R) scale is applied by the caller.
+
+    x: [t, d], w: [d, r], b: [r] -> [t, r].
+    """
+    return jnp.cos(x @ w + b[None, :])

@@ -1,0 +1,94 @@
+"""L2 — JAX compute graphs for the pipeline's dense hot spots.
+
+Each graph is a thin jax function that calls the corresponding L1 Pallas
+kernel, so a single AOT lowering captures both layers in one HLO module.
+`aot.py` lowers each graph for a fixed roster of padded shapes; the Rust
+runtime (rust/src/runtime/) pads inputs up to the nearest variant.
+
+All graphs return 1-tuples: the xla-crate loader unwraps with to_tuple1
+(see /opt/xla-example/README.md).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pallas_kernel_block, pallas_kmeans, pallas_rf
+
+
+def kmeans_assign(x, c):
+    """Squared point-to-centroid distances: x [t,d], c [kp,d] -> ([t,kp],).
+
+    The NK²t term of Algorithm 2's step 5 (and of the K-means baseline).
+    """
+    return (pallas_kmeans.kmeans_assign(x, c),)
+
+
+def kernel_block_laplacian(x, y, gamma):
+    """exp(-gamma·‖x_i−y_j‖₁): x [t,d], y [t,d], gamma [1] -> ([t,t],)."""
+    return (pallas_kernel_block.kernel_block_laplacian(x, y, gamma),)
+
+
+def kernel_block_gaussian(x, y, gamma):
+    """exp(-gamma·‖x_i−y_j‖²): x [t,d], y [t,d], gamma [1] -> ([t,t],)."""
+    return (pallas_kernel_block.kernel_block_gaussian(x, y, gamma),)
+
+
+def rf_features(x, w, b):
+    """cos(x·W + b): x [t,d], w [d,r], b [r] -> ([t,r],)."""
+    return (pallas_rf.rf_features(x, w, b),)
+
+
+def spec(shape):
+    """f32 ShapeDtypeStruct shorthand."""
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+# ---------------------------------------------------------------- roster
+
+# Padded shape variants compiled by aot.py. Dp covers the Table 1 feature
+# dimensions (16..54 → 64; 780 → 800); Kp=32 covers K ≤ 26 (letter).
+KMEANS_TILE = 2048
+KMEANS_KP = 32
+KERNEL_TILE = 512
+RF_TILE = 2048
+RF_R = 1024
+DIMS = (32, 128, 800)
+
+
+def roster():
+    """All (name, fn, arg specs, meta) variants to AOT-compile."""
+    out = []
+    for d in DIMS:
+        out.append(
+            (
+                f"kmeans_assign_t{KMEANS_TILE}_d{d}_k{KMEANS_KP}",
+                kmeans_assign,
+                (spec((KMEANS_TILE, d)), spec((KMEANS_KP, d))),
+                {"kind": "kmeans_assign", "tile": KMEANS_TILE, "dim": d, "kp": KMEANS_KP},
+            )
+        )
+        out.append(
+            (
+                f"kernel_block_laplacian_t{KERNEL_TILE}_d{d}",
+                kernel_block_laplacian,
+                (spec((KERNEL_TILE, d)), spec((KERNEL_TILE, d)), spec((1,))),
+                {"kind": "kernel_block_laplacian", "tile": KERNEL_TILE, "dim": d},
+            )
+        )
+        out.append(
+            (
+                f"kernel_block_gaussian_t{KERNEL_TILE}_d{d}",
+                kernel_block_gaussian,
+                (spec((KERNEL_TILE, d)), spec((KERNEL_TILE, d)), spec((1,))),
+                {"kind": "kernel_block_gaussian", "tile": KERNEL_TILE, "dim": d},
+            )
+        )
+        out.append(
+            (
+                f"rf_features_t{RF_TILE}_d{d}_r{RF_R}",
+                rf_features,
+                (spec((RF_TILE, d)), spec((d, RF_R)), spec((RF_R,))),
+                {"kind": "rf_features", "tile": RF_TILE, "dim": d, "r": RF_R},
+            )
+        )
+    return out

@@ -1,0 +1,155 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle, with
+hypothesis sweeping shapes and value ranges. This is the CORE correctness
+signal for the compute layer (the Rust side then revalidates the AOT'd
+artifacts against the same oracles in rust/tests/runtime_xla.rs)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    pallas_kernel_block,
+    pallas_kmeans,
+    pallas_rf,
+    ref,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+# ------------------------------------------------------------- kmeans
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t_blocks=st.integers(1, 4),
+    bt=st.sampled_from([8, 32, 64]),
+    d=st.integers(1, 40),
+    kp=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kmeans_assign_matches_ref(t_blocks, bt, d, kp, seed):
+    rng = np.random.default_rng(seed)
+    t = t_blocks * bt
+    x = rand(rng, t, d)
+    c = rand(rng, kp, d)
+    got = pallas_kmeans.kmeans_assign(x, c, block_t=bt)
+    want = ref.kmeans_assign_ref(x, c)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_kmeans_assign_zero_distance_on_centroids():
+    rng = np.random.default_rng(0)
+    c = rand(rng, 4, 8)
+    x = jnp.tile(c, (2, 1))  # 8 rows = centroids twice
+    d = pallas_kmeans.kmeans_assign(x, c, block_t=8)
+    for i in range(8):
+        assert abs(float(d[i, i % 4])) < 1e-4
+
+
+# ------------------------------------------------------- kernel blocks
+
+@settings(max_examples=20, deadline=None)
+@given(
+    blocks=st.integers(1, 3),
+    b=st.sampled_from([8, 16]),
+    d=st.integers(1, 24),
+    gamma=st.floats(0.05, 5.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gaussian_block_matches_ref(blocks, b, d, gamma, seed):
+    rng = np.random.default_rng(seed)
+    t = blocks * b
+    x = rand(rng, t, d)
+    y = rand(rng, t, d)
+    g = jnp.asarray([gamma], dtype=jnp.float32)
+    got = pallas_kernel_block.kernel_block_gaussian(x, y, g, block=b)
+    want = ref.kernel_block_gaussian_ref(x, y, g)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    blocks=st.integers(1, 3),
+    b=st.sampled_from([8, 16]),
+    d=st.sampled_from([1, 4, 17, 32, 128]),
+    gamma=st.floats(0.05, 5.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_laplacian_block_matches_ref(blocks, b, d, gamma, seed):
+    rng = np.random.default_rng(seed)
+    t = blocks * b
+    x = rand(rng, t, d)
+    y = rand(rng, t, d)
+    g = jnp.asarray([gamma], dtype=jnp.float32)
+    got = pallas_kernel_block.kernel_block_laplacian(x, y, g, block=b)
+    want = ref.kernel_block_laplacian_ref(x, y, g)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_laplacian_chunked_path_d800():
+    # exercises the fori_loop feature-chunk path (d > 128, chunk=100)
+    rng = np.random.default_rng(3)
+    x = rand(rng, 16, 800)
+    y = rand(rng, 16, 800)
+    g = jnp.asarray([0.3], dtype=jnp.float32)
+    got = pallas_kernel_block.kernel_block_laplacian(x, y, g, block=16)
+    want = ref.kernel_block_laplacian_ref(x, y, g)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-5)
+
+
+def test_kernel_blocks_symmetry_and_unit_diag():
+    rng = np.random.default_rng(5)
+    x = rand(rng, 16, 6)
+    g = jnp.asarray([1.0], dtype=jnp.float32)
+    for fn in (
+        pallas_kernel_block.kernel_block_gaussian,
+        pallas_kernel_block.kernel_block_laplacian,
+    ):
+        k = np.asarray(fn(x, x, g, block=8))
+        np.testing.assert_allclose(k, k.T, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.diag(k), 1.0, rtol=1e-5)
+
+
+# ------------------------------------------------------------------ rf
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t_blocks=st.integers(1, 3),
+    bt=st.sampled_from([8, 32]),
+    d=st.integers(1, 24),
+    r=st.sampled_from([4, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rf_features_matches_ref(t_blocks, bt, d, r, seed):
+    rng = np.random.default_rng(seed)
+    t = t_blocks * bt
+    x = rand(rng, t, d)
+    w = rand(rng, d, r)
+    b = rand(rng, r)
+    got = pallas_rf.rf_features(x, w, b, block_t=bt)
+    want = ref.rf_features_ref(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_rf_features_bounded():
+    rng = np.random.default_rng(7)
+    z = pallas_rf.rf_features(rand(rng, 32, 5), rand(rng, 5, 16), rand(rng, 16), block_t=16)
+    assert float(jnp.max(jnp.abs(z))) <= 1.0 + 1e-5
+
+
+# -------------------------------------------------- VMEM budget guards
+
+def test_vmem_budgets_under_16mb():
+    assert pallas_kmeans.vmem_bytes(256, 800, 32) < 16 * 2**20
+    assert pallas_kernel_block.vmem_bytes_laplacian(128, 100) < 16 * 2**20
+    assert pallas_rf.vmem_bytes(256, 800, 1024) < 16 * 2**20
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,46 @@
+//! Bench harness for Fig. 2: accuracy + runtime vs R (mnist-like),
+//! SC_RB vs RF-family, exact-SC reference. Bench-scale sweep; use
+//! `examples/repro_fig2 --full` for paper-size runs.
+
+use scrb::config::PipelineConfig;
+use scrb::coordinator::{experiment, report, Coordinator};
+use scrb::util::bench::Bencher;
+use std::time::Duration;
+
+fn main() {
+    let scale: usize = std::env::var("SCRB_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256);
+    let mut cfg = PipelineConfig::default();
+    cfg.kmeans_replicates = 3;
+    let coord = Coordinator::new(cfg, scale);
+
+    let rs = [16usize, 64, 256, 1024];
+    let fig = experiment::fig2(&coord, &rs, 1024);
+    println!("{}", report::render_fig2(&fig));
+
+    let mut b = Bencher::from_env();
+    for s in &fig.series {
+        for p in &s.points {
+            b.record_once(
+                &format!("fig2/{}/R={}", s.label, p.x as usize),
+                Duration::from_secs_f64(p.secs),
+            );
+        }
+    }
+    println!("{}", b.report());
+
+    // acceptance shape: SC_RB at max R should be at/above SC_RF at max R
+    let acc_at_max = |label: &str| {
+        fig.series
+            .iter()
+            .find(|s| s.label == label)
+            .and_then(|s| s.points.last())
+            .map(|p| p.acc)
+            .unwrap_or(f64::NAN)
+    };
+    let rb = acc_at_max("SC_RB");
+    let rf = acc_at_max("SC_RF");
+    println!("shape check: SC_RB({rb:.3}) vs SC_RF({rf:.3}) at their largest R — paper expects RB ≥ RF at same R");
+}

@@ -1,0 +1,35 @@
+//! Bench harness for Fig. 3: SVD-solver ablation (davidson/PRIMME vs
+//! lanczos/svds) on the clustered-spectrum covtype-like benchmark.
+
+use scrb::config::PipelineConfig;
+use scrb::coordinator::{experiment, report, Coordinator};
+use scrb::util::bench::Bencher;
+use std::time::Duration;
+
+fn main() {
+    let scale: usize = std::env::var("SCRB_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256);
+    let mut cfg = PipelineConfig::default();
+    cfg.kmeans_replicates = 3;
+    let coord = Coordinator::new(cfg, scale);
+
+    let rs = [16usize, 32, 64, 128];
+    let series = experiment::fig3(&coord, &rs);
+    println!(
+        "{}",
+        report::render_series("Fig. 3: SVD solver comparison (covtype-like)", &series, "R")
+    );
+
+    let mut b = Bencher::from_env();
+    for s in &series {
+        for p in &s.points {
+            b.record_once(
+                &format!("fig3/{}/R={}", s.label, p.x as usize),
+                Duration::from_secs_f64(p.secs),
+            );
+        }
+    }
+    println!("{}", b.report());
+}

@@ -1,0 +1,32 @@
+//! Bench harness for Fig. 4: SC_RB linear scalability in N with the
+//! per-stage breakdown (RB / SVD / K-means / total).
+
+use scrb::config::PipelineConfig;
+use scrb::coordinator::{experiment, report, Coordinator};
+use scrb::util::bench::Bencher;
+use std::time::Duration;
+
+fn main() {
+    let mut cfg = PipelineConfig::default();
+    cfg.kmeans_replicates = 3;
+    let coord = Coordinator::new(cfg, 1);
+
+    let ns: Vec<usize> = std::env::var("SCRB_BENCH_NS")
+        .ok()
+        .map(|v| v.split(',').filter_map(|s| s.parse().ok()).collect())
+        .unwrap_or_else(|| vec![1_000, 4_000, 16_000, 64_000]);
+    let r = 256;
+
+    let mut b = Bencher::from_env();
+    for dataset in ["poker", "susy"] {
+        let points = experiment::fig4(&coord, dataset, &ns, r);
+        println!("{}", report::render_fig4(dataset, &points));
+        for p in &points {
+            b.record_once(
+                &format!("fig4/{dataset}/N={}", p.n),
+                Duration::from_secs_f64(p.total_secs),
+            );
+        }
+    }
+    println!("{}", b.report());
+}

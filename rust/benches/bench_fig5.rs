@@ -1,0 +1,36 @@
+//! Bench harness for Fig. 5: per-method runtime scaling in R on the four
+//! panel datasets (pendigits, letter, mnist, acoustic).
+
+use scrb::config::PipelineConfig;
+use scrb::coordinator::{experiment, report, Coordinator};
+use scrb::util::bench::Bencher;
+use std::time::Duration;
+
+fn main() {
+    let scale: usize = std::env::var("SCRB_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256);
+    let mut cfg = PipelineConfig::default();
+    cfg.kmeans_replicates = 3;
+    let coord = Coordinator::new(cfg, scale);
+
+    let rs = [16usize, 64, 256];
+    let mut b = Bencher::from_env();
+    for dataset in ["pendigits", "letter", "mnist", "acoustic"] {
+        let series = experiment::fig5(&coord, dataset, &rs);
+        println!(
+            "{}",
+            report::render_series(&format!("Fig. 5: runtime vs R ({dataset})"), &series, "R")
+        );
+        for s in &series {
+            for p in &s.points {
+                b.record_once(
+                    &format!("fig5/{dataset}/{}/R={}", s.label, p.x as usize),
+                    Duration::from_secs_f64(p.secs),
+                );
+            }
+        }
+    }
+    println!("{}", b.report());
+}

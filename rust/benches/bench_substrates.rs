@@ -1,0 +1,98 @@
+//! Substrate micro-benchmarks (the profile targets of the §Perf pass):
+//! RB generation throughput, sparse matvec/matmat, dense gemm, K-means
+//! assignment (native vs XLA ablation), kernel blocks (native vs XLA).
+//!
+//!     cargo bench --bench bench_substrates
+//!     SCRB_BENCH_BUDGET_MS=200 cargo bench   # quick mode
+
+use scrb::config::Kernel;
+use scrb::data::synth;
+use scrb::kernels::kernel_block;
+use scrb::kmeans::{AssignEngine, NativeAssign};
+use scrb::linalg::Mat;
+use scrb::rb::rb_features;
+use scrb::rf::RfMap;
+use scrb::runtime::{ArtifactKind, XlaRuntime};
+use scrb::sparse::implicit_degrees;
+use scrb::util::bench::Bencher;
+use scrb::util::rng::Pcg;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    println!("== substrate micro-benchmarks (threads={}) ==", scrb::util::threads::num_threads());
+
+    // ---- RB generation (the O(NRd) stage)
+    let ds = synth::paper_benchmark("pendigits", 1, 42); // n=10992, d=16
+    let x = &ds.x;
+    for r in [64usize, 256] {
+        let stats = b.bench(&format!("rb_features n=10992 d=16 R={r}"), || {
+            rb_features(x, r, 0.25, 7)
+        });
+        let pts_per_s = (x.rows * r) as f64 / stats.median.as_secs_f64();
+        println!("    -> {:.2e} point-grids/s", pts_per_s);
+    }
+
+    // ---- sparse ops on a realistic Z
+    let rb = rb_features(x, 256, 0.25, 7);
+    let z = &rb.z;
+    println!(
+        "    Z: {}x{} nnz={} ({} MB)",
+        z.rows,
+        z.cols,
+        z.nnz(),
+        z.bytes() / (1 << 20)
+    );
+    let dense_v: Vec<f64> = (0..z.cols).map(|i| (i % 13) as f64).collect();
+    b.bench("csr_matvec (N x D)", || z.matvec(&dense_v));
+    let dense_u: Vec<f64> = (0..z.rows).map(|i| (i % 7) as f64).collect();
+    b.bench("csr_t_matvec (D x N)", || z.t_matvec(&dense_u));
+    let block = Mat::from_vec(z.cols, 10, (0..z.cols * 10).map(|i| (i % 5) as f64).collect());
+    b.bench("csr_matmat k=10", || z.matmat(&block));
+    let blockn = Mat::from_vec(z.rows, 10, (0..z.rows * 10).map(|i| (i % 5) as f64).collect());
+    b.bench("csr_t_matmat k=10", || z.t_matmat(&blockn));
+    b.bench("implicit_degrees", || implicit_degrees(z));
+
+    // ---- dense gemm (Rayleigh–Ritz shapes)
+    let mut rng = Pcg::seed(3);
+    let a = Mat::from_vec(10_000, 24, (0..240_000).map(|_| rng.f64()).collect());
+    let c = Mat::from_vec(10_000, 24, (0..240_000).map(|_| rng.f64()).collect());
+    b.bench("dense t_matmul 24x10000 * 10000x24", || a.t_matmul(&c));
+
+    // ---- K-means assignment: native vs XLA (ablation)
+    let km_x = synth::gaussian_blobs(8_192, 16, 10, 6.0, 5);
+    let centroids = km_x.x.row_block(0, 10);
+    b.bench("kmeans_assign native n=8192 d=16 k=10", || {
+        NativeAssign.assign(&km_x.x, &centroids)
+    });
+    let xla = XlaRuntime::load("artifacts").ok();
+    if let Some(rt) = &xla {
+        b.bench("kmeans_assign XLA    n=8192 d=16 k=10", || {
+            rt.kmeans_assign(&km_x.x, &centroids).unwrap()
+        });
+    } else {
+        println!("    [XLA ablations skipped: run `make artifacts`]");
+    }
+
+    // ---- kernel block: native vs XLA
+    let kb_x = km_x.x.row_block(0, 1024);
+    let kb_y = km_x.x.row_block(1024, 2048);
+    b.bench("kernel_block native 1024x1024 lap", || {
+        kernel_block(Kernel::Laplacian { sigma: 0.5 }, &kb_x, &kb_y)
+    });
+    if let Some(rt) = &xla {
+        b.bench("kernel_block XLA    1024x1024 lap", || {
+            rt.kernel_block(ArtifactKind::KernelBlockLaplacian, &kb_x, &kb_y, 2.0).unwrap()
+        });
+    }
+
+    // ---- RF features: native vs XLA
+    let map = RfMap::sample(Kernel::Laplacian { sigma: 0.5 }, 16, 512, 3);
+    b.bench("rf_features native n=8192 R=512", || map.features(&km_x.x));
+    if let Some(rt) = &xla {
+        b.bench("rf_features XLA    n=8192 R=512", || {
+            rt.rf_features(&km_x.x, &map.w, &map.b).unwrap()
+        });
+    }
+
+    println!("\n{}", b.report());
+}

@@ -1,0 +1,44 @@
+//! Bench harness for Tables 2 & 3: runs the full method × dataset grid at
+//! a bench-friendly scale and prints both paper tables plus per-method
+//! wallclock lines. (`examples/repro_table2_3` is the full-fidelity
+//! driver; this target exists so `cargo bench` regenerates every table.)
+//!
+//!     cargo bench --bench bench_table2_3
+//!     SCRB_BENCH_SCALE=256 cargo bench --bench bench_table2_3
+
+use scrb::config::PipelineConfig;
+use scrb::coordinator::{experiment, report, Coordinator};
+use scrb::util::bench::Bencher;
+use std::time::Duration;
+
+fn main() {
+    let scale: usize = std::env::var("SCRB_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256);
+    let mut cfg = PipelineConfig::default();
+    cfg.r = 256;
+    cfg.kmeans_replicates = 3;
+    let coord = Coordinator::new(cfg, scale);
+
+    println!("== Table 2/3 bench (scale=1/{scale}, R={}) ==", coord.base_cfg.r);
+    let names: Vec<String> = experiment::TABLE_DATASETS.iter().map(|s| s.to_string()).collect();
+    let grid = experiment::table2_3(&coord, &names);
+
+    println!("\nTable 2: average rank scores (lower = better)");
+    println!("{}", report::render_table2(&grid));
+    println!("Table 3: computational time (seconds)");
+    println!("{}", report::render_table3(&grid));
+
+    // criterion-style lines for regression tracking
+    let mut b = Bencher::from_env();
+    for row in &grid.datasets {
+        for run in row.runs.iter().flatten() {
+            b.record_once(
+                &format!("table3/{}/{}", row.name, run.method.name()),
+                Duration::from_secs_f64(run.secs),
+            );
+        }
+    }
+    println!("{}", b.report());
+}

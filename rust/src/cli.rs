@@ -1,0 +1,140 @@
+//! Hand-rolled CLI argument parsing (no clap offline).
+//!
+//! Grammar: `scrb <command> [positional...] [--key value | --flag]...`
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.command = it.next().unwrap();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    args.options.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    /// Parse a comma-separated list of usizes, e.g. `--rs 16,64,256`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse().map_err(|_| format!("--{name}: bad entry '{s}'")))
+                .collect(),
+        }
+    }
+
+    pub fn get_str_list(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn command_positional_options_flags() {
+        let a = parse("run mnist --r 1024 --sigma=2.5 --verbose --out /tmp/x");
+        assert_eq!(a.command, "run");
+        assert_eq!(a.positional, vec!["mnist"]);
+        assert_eq!(a.get_usize("r", 0).unwrap(), 1024);
+        assert_eq!(a.get_f64("sigma", 0.0).unwrap(), 2.5);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("out"), Some("/tmp/x"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("bench --quick");
+        assert!(a.flag("quick"));
+        assert_eq!(a.command, "bench");
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("fig 2 --rs 16,64,256");
+        assert_eq!(a.positional, vec!["2"]);
+        assert_eq!(a.get_usize_list("rs", &[]).unwrap(), vec![16, 64, 256]);
+        assert_eq!(a.get_usize_list("other", &[1, 2]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse("run --r nope");
+        assert!(a.get_usize("r", 0).is_err());
+    }
+}

@@ -1,0 +1,41 @@
+//! **KK_RF** [11] — approximate kernel K-means run *directly* on the dense
+//! N×R RF feature matrix. No SVD; the K-means itself costs O(NRKt), which
+//! is why the paper finds this method blows up at large R (Fig. 5).
+
+use super::method::{embed_and_cluster, ClusterOutput, Env, MethodInfo};
+use super::sc_rf::rf_matrix;
+use crate::linalg::Mat;
+use crate::util::timer::StageTimer;
+
+pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
+    let mut timer = StageTimer::new();
+    let z = timer.time("rf_features", || rf_matrix(env, x));
+    let feature_dim = z.cols;
+    let (labels, km) = embed_and_cluster(z, env, &mut timer, false);
+    ClusterOutput {
+        labels,
+        timer,
+        info: MethodInfo { feature_dim, svd: None, kappa: None, inertia: km.inertia },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Kernel, PipelineConfig};
+    use crate::data::synth;
+    use crate::metrics::accuracy;
+
+    #[test]
+    fn clusters_blobs() {
+        let ds = synth::gaussian_blobs(250, 4, 3, 9.0, 23);
+        let mut cfg = PipelineConfig::default();
+        cfg.k = 3;
+        cfg.r = 128;
+        cfg.kernel = Kernel::Gaussian { sigma: 0.6 };
+        cfg.kmeans_replicates = 3;
+        let out = run(&Env::new(cfg), &ds.x);
+        let acc = accuracy(&out.labels, &ds.y);
+        assert!(acc > 0.85, "KK_RF on blobs: {acc}");
+    }
+}

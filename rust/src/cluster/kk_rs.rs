@@ -1,0 +1,57 @@
+//! **KK_RS** [10] — approximate kernel K-means by random sampling: restrict
+//! the cluster centers to the span of R sampled points. Equivalent to
+//! K-means in the Nyström feature space K(X,L)·K(L,L)^{−1/2} *without* the
+//! Laplacian normalization or SVD (the contrast with SC_Nys the paper draws).
+
+use super::method::{embed_and_cluster, ClusterOutput, Env, MethodInfo};
+use super::sc_nys::kernel_block_env;
+use crate::linalg::{cholesky_jittered, whiten_rows, Mat};
+use crate::util::rng::Pcg;
+use crate::util::timer::StageTimer;
+
+pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
+    let cfg = &env.cfg;
+    let m = cfg.r.min(x.rows);
+    let mut timer = StageTimer::new();
+
+    let mut rng = Pcg::new(cfg.seed, 0x4b72);
+    let idx = rng.sample_indices(x.rows, m);
+    let landmarks = x.select_rows(&idx);
+
+    let c = timer.time("kernel_blocks", || kernel_block_env(env, x, &landmarks));
+    let w11 = timer.time("kernel_blocks", || kernel_block_env(env, &landmarks, &landmarks));
+    // Cholesky whitening: rows of C·L^{−T} have the same pairwise
+    // distances as C·W₁₁^{−1/2} (see linalg::chol), at O(m³/3).
+    let z = timer.time("embed", || {
+        let l = cholesky_jittered(&w11);
+        whiten_rows(&c, &l)
+    });
+
+    let (labels, km) = embed_and_cluster(z, env, &mut timer, false);
+    ClusterOutput {
+        labels,
+        timer,
+        info: MethodInfo { feature_dim: m, svd: None, kappa: None, inertia: km.inertia },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Kernel, PipelineConfig};
+    use crate::data::synth;
+    use crate::metrics::accuracy;
+
+    #[test]
+    fn clusters_blobs() {
+        let ds = synth::gaussian_blobs(250, 4, 3, 9.0, 37);
+        let mut cfg = PipelineConfig::default();
+        cfg.k = 3;
+        cfg.r = 48;
+        cfg.kernel = Kernel::Gaussian { sigma: 0.6 };
+        cfg.kmeans_replicates = 3;
+        let out = run(&Env::new(cfg), &ds.x);
+        let acc = accuracy(&out.labels, &ds.y);
+        assert!(acc > 0.85, "KK_RS on blobs: {acc}");
+    }
+}

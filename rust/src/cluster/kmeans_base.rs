@@ -1,0 +1,50 @@
+//! **K-means baseline** [15]: plain Lloyd on the raw data (the paper's
+//! geometry-limited reference point — strong on convex blobs, weak on
+//! non-convex structure).
+
+use super::method::{ClusterOutput, Env, MethodInfo};
+use crate::kmeans::kmeans;
+use crate::linalg::Mat;
+use crate::util::timer::StageTimer;
+
+pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
+    let mut timer = StageTimer::new();
+    let engine = env.assign_engine();
+    let opts = env.kmeans_opts(env.cfg.k);
+    let result = timer.time("kmeans", || kmeans(x, &opts, engine.as_ref()));
+    ClusterOutput {
+        labels: result.labels.iter().map(|&l| l as usize).collect(),
+        timer,
+        info: MethodInfo {
+            feature_dim: x.cols,
+            svd: None,
+            kappa: None,
+            inertia: result.inertia,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PipelineConfig;
+    use crate::data::synth;
+    use crate::metrics::accuracy;
+
+    #[test]
+    fn blobs_ok_moons_poor() {
+        let blobs = synth::gaussian_blobs(300, 3, 3, 9.0, 3);
+        let mut cfg = PipelineConfig::default();
+        cfg.k = 3;
+        cfg.kmeans_replicates = 5;
+        let out = run(&Env::new(cfg.clone()), &blobs.x);
+        assert!(accuracy(&out.labels, &blobs.y) > 0.95);
+
+        // non-convex: K-means should clearly fail where SC succeeds
+        let moons = synth::two_moons(600, 0.05, 3);
+        cfg.k = 2;
+        let out = run(&Env::new(cfg), &moons.x);
+        let acc = accuracy(&out.labels, &moons.y);
+        assert!(acc < 0.95, "K-means should not solve two moons: {acc}");
+    }
+}

@@ -1,0 +1,190 @@
+//! Common method interface: every clustering algorithm in the comparison
+//! grid (Table 2/3) runs through [`MethodKind::run`] and produces a
+//! [`ClusterOutput`] with labels, per-stage timings, and solver telemetry.
+
+use crate::config::{Engine, PipelineConfig};
+use crate::eigen::SvdStats;
+use crate::kmeans::{kmeans, AssignEngine, KmeansOpts, KmeansResult, NativeAssign};
+use crate::linalg::Mat;
+use crate::runtime::{XlaAssign, XlaRuntime};
+use crate::util::timer::StageTimer;
+
+/// Execution environment shared by all methods: configuration plus the
+/// optional XLA runtime for the dense hot spots.
+pub struct Env<'a> {
+    pub cfg: PipelineConfig,
+    pub xla: Option<&'a XlaRuntime>,
+}
+
+impl<'a> Env<'a> {
+    pub fn new(cfg: PipelineConfig) -> Env<'a> {
+        Env { cfg, xla: None }
+    }
+
+    pub fn with_xla(cfg: PipelineConfig, xla: Option<&'a XlaRuntime>) -> Env<'a> {
+        Env { cfg, xla }
+    }
+
+    /// The K-means assignment engine this environment prescribes.
+    pub fn assign_engine(&self) -> Box<dyn AssignEngine + '_> {
+        match (self.cfg.engine, self.xla) {
+            (Engine::Native, _) | (_, None) => Box::new(NativeAssign),
+            // Auto applies the runtime's calibrated cost model per call;
+            // Xla forces the artifact path (ablation / debugging).
+            (Engine::Xla, Some(rt)) => Box::new(XlaAssign { runtime: rt, force: true }),
+            (Engine::Auto, Some(rt)) => Box::new(XlaAssign::new(rt)),
+        }
+    }
+
+    /// K-means options from the pipeline config.
+    pub fn kmeans_opts(&self, k: usize) -> KmeansOpts {
+        KmeansOpts {
+            k,
+            replicates: self.cfg.kmeans_replicates,
+            max_iters: self.cfg.kmeans_max_iters,
+            tol: 1e-6,
+            seed: self.cfg.seed,
+            batch: None,
+        }
+    }
+}
+
+/// Extra telemetry a method reports besides labels.
+#[derive(Clone, Debug, Default)]
+pub struct MethodInfo {
+    /// Feature/embedding dimension the method worked in (D for RB, R for
+    /// RF/landmark methods, N for exact SC).
+    pub feature_dim: usize,
+    /// Eigensolver statistics if an iterative SVD ran.
+    pub svd: Option<SvdStats>,
+    /// RB κ estimate (Definition 1), SC_RB only.
+    pub kappa: Option<f64>,
+    /// K-means inertia of the final clustering step.
+    pub inertia: f64,
+}
+
+/// The result of one clustering run.
+pub struct ClusterOutput {
+    pub labels: Vec<usize>,
+    pub timer: StageTimer,
+    pub info: MethodInfo,
+}
+
+/// All methods in the paper's comparison (Table 2 column order).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MethodKind {
+    /// Standard K-means on the raw data [15].
+    KMeans,
+    /// Exact spectral clustering [21] — quadratic; capped to small N.
+    ScExact,
+    /// Approximate kernel K-means by random sampling [10].
+    KkRs,
+    /// Kernel K-means directly on the RF feature matrix [11].
+    KkRf,
+    /// Kernel K-means on singular vectors of the RF feature matrix [11].
+    SvRf,
+    /// Landmark-based spectral clustering (bipartite KNN graph) [9].
+    ScLsc,
+    /// Nyström spectral clustering [13].
+    ScNys,
+    /// SC on the RF-approximated Laplacian (paper's SV_RF variant).
+    ScRf,
+    /// This paper: SC via Random Binning features + PRIMME-style SVD.
+    ScRb,
+}
+
+impl MethodKind {
+    pub const ALL: [MethodKind; 9] = [
+        MethodKind::KMeans,
+        MethodKind::ScExact,
+        MethodKind::KkRs,
+        MethodKind::KkRf,
+        MethodKind::SvRf,
+        MethodKind::ScLsc,
+        MethodKind::ScNys,
+        MethodKind::ScRf,
+        MethodKind::ScRb,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MethodKind::KMeans => "K-means",
+            MethodKind::ScExact => "SC",
+            MethodKind::KkRs => "KK_RS",
+            MethodKind::KkRf => "KK_RF",
+            MethodKind::SvRf => "SV_RF",
+            MethodKind::ScLsc => "SC_LSC",
+            MethodKind::ScNys => "SC_Nys",
+            MethodKind::ScRf => "SC_RF",
+            MethodKind::ScRb => "SC_RB",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<MethodKind, String> {
+        let canon = s.to_lowercase().replace(['-', '_'], "");
+        match canon.as_str() {
+            "kmeans" => Ok(MethodKind::KMeans),
+            "sc" | "scexact" | "exact" => Ok(MethodKind::ScExact),
+            "kkrs" => Ok(MethodKind::KkRs),
+            "kkrf" => Ok(MethodKind::KkRf),
+            "svrf" => Ok(MethodKind::SvRf),
+            "sclsc" | "lsc" => Ok(MethodKind::ScLsc),
+            "scnys" | "nystrom" | "nys" => Ok(MethodKind::ScNys),
+            "scrf" => Ok(MethodKind::ScRf),
+            "scrb" | "rb" => Ok(MethodKind::ScRb),
+            other => Err(format!("unknown method '{other}'")),
+        }
+    }
+
+    /// Dispatch to the implementation.
+    pub fn run(&self, env: &Env, x: &Mat) -> ClusterOutput {
+        match self {
+            MethodKind::KMeans => super::kmeans_base::run(env, x),
+            MethodKind::ScExact => super::sc_exact::run(env, x),
+            MethodKind::KkRs => super::kk_rs::run(env, x),
+            MethodKind::KkRf => super::kk_rf::run(env, x),
+            MethodKind::SvRf => super::sv_rf::run(env, x),
+            MethodKind::ScLsc => super::sc_lsc::run(env, x),
+            MethodKind::ScNys => super::sc_nys::run(env, x),
+            MethodKind::ScRf => super::sc_rf::run(env, x),
+            MethodKind::ScRb => super::sc_rb::run(env, x),
+        }
+    }
+}
+
+/// Shared spectral epilogue (Algorithm 2 steps 4–5): optionally row-
+/// normalize the embedding, then K-means it into K clusters.
+pub fn embed_and_cluster(
+    mut u: Mat,
+    env: &Env,
+    timer: &mut StageTimer,
+    row_normalize: bool,
+) -> (Vec<usize>, KmeansResult) {
+    if row_normalize {
+        u.normalize_rows();
+    }
+    let engine = env.assign_engine();
+    let opts = env.kmeans_opts(env.cfg.k);
+    let result = timer.time("kmeans", || kmeans(&u, &opts, engine.as_ref()));
+    (result.labels.iter().map(|&l| l as usize).collect(), result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_names() {
+        for kind in MethodKind::ALL {
+            assert_eq!(MethodKind::parse(kind.name()).unwrap(), kind);
+        }
+        assert_eq!(MethodKind::parse("sc_rb").unwrap(), MethodKind::ScRb);
+        assert_eq!(MethodKind::parse("SC-Nys").unwrap(), MethodKind::ScNys);
+        assert!(MethodKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn all_covers_table2_columns() {
+        assert_eq!(MethodKind::ALL.len(), 9);
+    }
+}

@@ -1,0 +1,20 @@
+//! Clustering methods: the paper's SC_RB (Algorithm 2) and the eight
+//! baselines of the Table 2/3 comparison grid, all behind one
+//! [`MethodKind`] dispatch.
+
+pub mod kk_rf;
+pub mod kk_rs;
+pub mod kmeans_base;
+pub mod method;
+pub mod sc_exact;
+pub mod sc_lsc;
+pub mod sc_nys;
+pub mod sc_rb;
+pub mod sc_rf;
+pub mod sv_rf;
+
+pub use method::{embed_and_cluster, ClusterOutput, Env, MethodInfo, MethodKind};
+pub use sc_rb::ScRb;
+
+/// Re-export used by doc examples.
+pub use method::MethodKind as Method;

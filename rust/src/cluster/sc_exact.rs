@@ -1,0 +1,153 @@
+//! **Exact spectral clustering** [21] — the quadratic reference the paper
+//! dashes out ("−") for N ≥ ~98k. Builds the full N×N similarity matrix
+//! (optionally through the XLA kernel-block artifact), normalizes it, and
+//! extracts the top-K eigenvectors of S = D^{−1/2} W D^{−1/2} with the
+//! iterative solver applied to the symmetric operator.
+
+use super::method::{embed_and_cluster, ClusterOutput, Env, MethodInfo};
+use crate::config::Kernel;
+use crate::eigen::{svds, SvdOp, SvdsOpts};
+use crate::kernels::kernel_matrix;
+use crate::linalg::Mat;
+use crate::runtime::ArtifactKind;
+use crate::util::timer::StageTimer;
+
+/// Hard cap: above this the dense W would not fit time/memory budgets
+/// (mirrors the paper reporting "−" for the larger datasets).
+pub const MAX_EXACT_N: usize = 30_000;
+
+/// Symmetric PSD operator wrapper: `apply == apply_t == S·B`. Running the
+/// Gram-based solvers on it finds eigenpairs of S² — same eigenvectors,
+/// singular values equal to |λ(S)|.
+pub struct SymOp<'m>(pub &'m Mat);
+
+impl<'m> SvdOp for SymOp<'m> {
+    fn nrows(&self) -> usize {
+        self.0.rows
+    }
+    fn ncols(&self) -> usize {
+        self.0.rows
+    }
+    fn apply(&self, b: &Mat) -> Mat {
+        self.0.matmul(b)
+    }
+    fn apply_t(&self, b: &Mat) -> Mat {
+        self.0.matmul(b)
+    }
+    fn gram_diag(&self) -> Option<Vec<f64>> {
+        // diag(S²) = row squared norms of S
+        Some((0..self.0.rows).map(|i| crate::linalg::dot(self.0.row(i), self.0.row(i))).collect())
+    }
+}
+
+pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
+    let cfg = &env.cfg;
+    assert!(
+        x.rows <= MAX_EXACT_N,
+        "exact SC is O(N²); refusing N={} > {MAX_EXACT_N} (the paper reports '-' here too)",
+        x.rows
+    );
+    let mut timer = StageTimer::new();
+
+    // Full similarity matrix W (XLA kernel-block path when available).
+    let w = timer.time("kernel_matrix", || build_w(env, x));
+
+    // Normalized similarity S = D^{-1/2} W D^{-1/2}.
+    let s = timer.time("degrees", || {
+        let n = w.rows;
+        let mut scale = vec![0.0; n];
+        for i in 0..n {
+            let d: f64 = w.row(i).iter().sum();
+            scale[i] = if d > 1e-300 { 1.0 / d.sqrt() } else { 0.0 };
+        }
+        let mut s = w;
+        for i in 0..n {
+            let si = scale[i];
+            for j in 0..n {
+                s.set(i, j, si * s.at(i, j) * scale[j]);
+            }
+        }
+        s
+    });
+
+    let mut opts = SvdsOpts::new(cfg.k, cfg.solver);
+    opts.tol = cfg.svd_tol;
+    opts.max_matvecs = cfg.svd_max_iters;
+    let op = SymOp(&s);
+    let svd = timer.time("svd", || svds(&op, &opts, cfg.seed ^ 0xe8ac7));
+
+    let (labels, km) = embed_and_cluster(svd.u, env, &mut timer, true);
+    ClusterOutput {
+        labels,
+        timer,
+        info: MethodInfo {
+            feature_dim: x.rows,
+            svd: Some(svd.stats),
+            kappa: None,
+            inertia: km.inertia,
+        },
+    }
+}
+
+fn build_w(env: &Env, x: &Mat) -> Mat {
+    if let Some(rt) = env.xla {
+        let force = env.cfg.engine == crate::config::Engine::Xla;
+        if env.cfg.engine != crate::config::Engine::Native {
+            let (kind, gamma) = match env.cfg.kernel {
+                Kernel::Laplacian { sigma } => (ArtifactKind::KernelBlockLaplacian, 1.0 / sigma),
+                Kernel::Gaussian { sigma } => {
+                    (ArtifactKind::KernelBlockGaussian, 1.0 / (2.0 * sigma * sigma))
+                }
+            };
+            if force || rt.kernel_block_worthwhile(kind, x.cols) {
+                if let Some(w) = rt.kernel_block(kind, x, x, gamma) {
+                    return w;
+                }
+            }
+        }
+    }
+    kernel_matrix(env.cfg.kernel, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PipelineConfig;
+    use crate::data::synth;
+    use crate::metrics::accuracy;
+
+    #[test]
+    fn solves_two_moons() {
+        let ds = synth::two_moons(400, 0.05, 11);
+        let mut cfg = PipelineConfig::default();
+        cfg.k = 2;
+        cfg.kernel = Kernel::Gaussian { sigma: 0.12 };
+        cfg.kmeans_replicates = 5;
+        let out = run(&Env::new(cfg), &ds.x);
+        let acc = accuracy(&out.labels, &ds.y);
+        assert!(acc > 0.95, "exact SC on two moons: {acc}");
+    }
+
+    #[test]
+    fn agrees_with_rb_on_blobs() {
+        let ds = synth::gaussian_blobs(250, 3, 3, 9.0, 13);
+        let mut cfg = PipelineConfig::default();
+        cfg.k = 3;
+        cfg.kernel = Kernel::Laplacian { sigma: 0.6 };
+        cfg.kmeans_replicates = 5;
+        let exact = run(&Env::new(cfg.clone()), &ds.x);
+        cfg.r = 512;
+        let rb = super::super::sc_rb::run(&Env::new(cfg), &ds.x);
+        let a_exact = accuracy(&exact.labels, &ds.y);
+        let a_rb = accuracy(&rb.labels, &ds.y);
+        assert!(a_exact > 0.95 && a_rb > 0.95, "exact {a_exact} rb {a_rb}");
+    }
+
+    #[test]
+    #[should_panic(expected = "refusing")]
+    fn refuses_large_n() {
+        let x = Mat::zeros(MAX_EXACT_N + 1, 2);
+        let cfg = PipelineConfig::default();
+        let _ = run(&Env::new(cfg), &x);
+    }
+}

@@ -1,0 +1,120 @@
+//! **SC_Nys** [13] — Nyström spectral clustering: sample R landmark points,
+//! approximate W ≈ C·W₁₁⁻¹·Cᵀ with C = K(X, landmarks), W₁₁ = K(landmarks,
+//! landmarks), and run the spectral pipeline on the implicit low-rank form
+//! Ẑ = D^{−1/2}·C·W₁₁^{−1/2}.
+
+use super::method::{embed_and_cluster, ClusterOutput, Env, MethodInfo};
+use crate::config::Kernel;
+use crate::eigen::{svds, SvdsOpts};
+use crate::kernels::kernel_block;
+use crate::linalg::{cholesky_jittered, whiten_rows, Mat};
+use crate::runtime::ArtifactKind;
+use crate::util::rng::Pcg;
+use crate::util::timer::StageTimer;
+
+/// Kernel block through the XLA artifact when available (shared with the
+/// landmark methods).
+pub(super) fn kernel_block_env(env: &Env, x: &Mat, y: &Mat) -> Mat {
+    if let Some(rt) = env.xla {
+        let force = env.cfg.engine == crate::config::Engine::Xla;
+        if env.cfg.engine != crate::config::Engine::Native {
+            let (kind, gamma) = match env.cfg.kernel {
+                Kernel::Laplacian { sigma } => (ArtifactKind::KernelBlockLaplacian, 1.0 / sigma),
+                Kernel::Gaussian { sigma } => {
+                    (ArtifactKind::KernelBlockGaussian, 1.0 / (2.0 * sigma * sigma))
+                }
+            };
+            if force || rt.kernel_block_worthwhile(kind, x.cols.max(y.cols)) {
+                if let Some(w) = rt.kernel_block(kind, x, y, gamma) {
+                    return w;
+                }
+            }
+        }
+    }
+    kernel_block(env.cfg.kernel, x, y)
+}
+
+pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
+    let cfg = &env.cfg;
+    let m = cfg.r.min(x.rows);
+    let mut timer = StageTimer::new();
+
+    // landmarks: uniform sample (standard Nyström)
+    let mut rng = Pcg::new(cfg.seed, 0x4e79);
+    let idx = rng.sample_indices(x.rows, m);
+    let landmarks = x.select_rows(&idx);
+
+    // C = K(X, L) (N×m), W11 = K(L, L) (m×m)
+    let c = timer.time("kernel_blocks", || kernel_block_env(env, x, &landmarks));
+    let w11 = timer.time("kernel_blocks", || kernel_block_env(env, &landmarks, &landmarks));
+
+    // Ẑ = D^{-1/2} C W11^{-1/2}, degrees d = C·(W11⁻¹·(Cᵀ1)) ≈ Ŵ·1
+    let zny = timer.time("degrees", || {
+        // Cholesky whitening ≡ W₁₁^{−1/2} up to a right rotation, which
+        // changes neither Ŵ = z·zᵀ nor the left singular subspace.
+        let l = cholesky_jittered(&w11);
+        let mut z = whiten_rows(&c, &l); // N×m, Ŵ = z zᵀ
+        let ones = vec![1.0; z.rows];
+        let col = z.t_matvec(&ones);
+        let deg = z.matvec(&col);
+        let floor = 1e-8 * deg.iter().map(|d| d.abs()).fold(0.0, f64::max).max(1e-12);
+        for i in 0..z.rows {
+            let s = 1.0 / deg[i].max(floor).sqrt();
+            for v in z.row_mut(i) {
+                *v *= s;
+            }
+        }
+        z
+    });
+
+    let mut opts = SvdsOpts::new(cfg.k, cfg.solver);
+    opts.tol = cfg.svd_tol;
+    opts.max_matvecs = cfg.svd_max_iters;
+    let svd = timer.time("svd", || svds(&zny, &opts, cfg.seed ^ 0x4ce5));
+
+    let (labels, km) = embed_and_cluster(svd.u, env, &mut timer, true);
+    ClusterOutput {
+        labels,
+        timer,
+        info: MethodInfo {
+            feature_dim: m,
+            svd: Some(svd.stats),
+            kappa: None,
+            inertia: km.inertia,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PipelineConfig;
+    use crate::data::synth;
+    use crate::metrics::accuracy;
+
+    #[test]
+    fn clusters_blobs() {
+        let ds = synth::gaussian_blobs(300, 4, 3, 9.0, 29);
+        let mut cfg = PipelineConfig::default();
+        cfg.k = 3;
+        cfg.r = 64;
+        cfg.kernel = Kernel::Gaussian { sigma: 0.6 };
+        cfg.kmeans_replicates = 5;
+        let out = run(&Env::new(cfg), &ds.x);
+        let acc = accuracy(&out.labels, &ds.y);
+        assert!(acc > 0.9, "SC_Nys on blobs: {acc}");
+    }
+
+    #[test]
+    fn solves_two_moons_with_enough_landmarks() {
+        let ds = synth::two_moons(500, 0.05, 31);
+        let mut cfg = PipelineConfig::default();
+        cfg.k = 2;
+        cfg.r = 200;
+        cfg.kernel = Kernel::Gaussian { sigma: 0.12 };
+        cfg.kmeans_replicates = 5;
+        let out = run(&Env::new(cfg), &ds.x);
+        let acc = accuracy(&out.labels, &ds.y);
+        assert!(acc > 0.85, "SC_Nys on moons: {acc}");
+    }
+}

@@ -1,0 +1,126 @@
+//! **SC_RB — the paper's method (Algorithm 2).**
+//!
+//! 1. Build the sparse RB feature matrix Z (Algorithm 1) — the similarity
+//!    graph Ŵ = Z·Zᵀ is never materialized.
+//! 2. Degrees d = Z(Zᵀ1) (Eq. 6), Ẑ = D^{−1/2}Z.
+//! 3. Top-K left singular vectors of Ẑ via the PRIMME-style solver
+//!    (equivalently: smallest eigenvectors of L̂ = I − ẐẐᵀ).
+//! 4. Row-normalize U.
+//! 5. K-means on the rows of U.
+
+use super::method::{embed_and_cluster, ClusterOutput, Env, MethodInfo};
+use crate::config::PipelineConfig;
+use crate::eigen::{svds, SvdsOpts};
+use crate::linalg::Mat;
+use crate::rb::rb_features;
+use crate::sparse::{implicit_degrees, normalize_by_degree};
+use crate::util::timer::StageTimer;
+
+/// Run Algorithm 2 on data `x`.
+pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
+    let cfg = &env.cfg;
+    let mut timer = StageTimer::new();
+
+    // Step 1: RB feature generation (Algorithm 1).
+    let rb = timer.time("rb_features", || {
+        rb_features(x, cfg.r, cfg.kernel.sigma(), cfg.seed)
+    });
+    let feature_dim = rb.dim();
+    let kappa = rb.kappa;
+
+    // Step 2: implicit degrees + normalization (Eq. 6).
+    let zhat = timer.time("degrees", || {
+        let d = implicit_degrees(&rb.z);
+        normalize_by_degree(rb.z, &d)
+    });
+
+    // Step 3: top-K left singular vectors of Ẑ (PRIMME role).
+    let mut opts = SvdsOpts::new(cfg.k, cfg.solver);
+    opts.tol = cfg.svd_tol;
+    opts.max_matvecs = cfg.svd_max_iters;
+    let svd = timer.time("svd", || svds(&zhat, &opts, cfg.seed ^ 0x5bd5));
+
+    // Steps 4–5: row-normalize + K-means.
+    let (labels, km) = embed_and_cluster(svd.u, env, &mut timer, true);
+
+    ClusterOutput {
+        labels,
+        timer,
+        info: MethodInfo {
+            feature_dim,
+            svd: Some(svd.stats),
+            kappa: Some(kappa),
+            inertia: km.inertia,
+        },
+    }
+}
+
+/// Convenience wrapper used by the quickstart/docs: owns a config and runs
+/// SC_RB without an XLA runtime.
+pub struct ScRb {
+    pub cfg: PipelineConfig,
+}
+
+impl ScRb {
+    pub fn new(cfg: PipelineConfig) -> ScRb {
+        ScRb { cfg }
+    }
+
+    pub fn run(&self, x: &Mat) -> ClusterOutput {
+        let env = Env::new(self.cfg.clone());
+        run(&env, x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::metrics::accuracy;
+
+    #[test]
+    fn separates_two_moons() {
+        // the signature SC-beats-KMeans case
+        let ds = synth::two_moons(600, 0.05, 3);
+        let mut cfg = PipelineConfig::default();
+        cfg.k = 2;
+        cfg.r = 256;
+        cfg.kernel = crate::config::Kernel::Laplacian { sigma: 0.15 };
+        cfg.kmeans_replicates = 5;
+        let out = ScRb::new(cfg).run(&ds.x);
+        let acc = accuracy(&out.labels, &ds.y);
+        assert!(acc > 0.9, "SC_RB accuracy on two moons: {acc}");
+        assert!(out.info.kappa.unwrap() >= 1.0);
+        assert!(out.info.feature_dim > 0);
+        assert!(out.timer.secs("rb_features") >= 0.0);
+    }
+
+    #[test]
+    fn recovers_blobs_with_high_accuracy() {
+        let ds = synth::gaussian_blobs(400, 4, 3, 8.0, 5);
+        let mut cfg = PipelineConfig::default();
+        cfg.k = 3;
+        cfg.r = 128;
+        cfg.kernel = crate::config::Kernel::Laplacian { sigma: 0.8 };
+        cfg.kmeans_replicates = 5;
+        let out = ScRb::new(cfg).run(&ds.x);
+        let acc = accuracy(&out.labels, &ds.y);
+        assert!(acc > 0.95, "SC_RB accuracy on blobs: {acc}");
+    }
+
+    #[test]
+    fn works_with_both_solvers() {
+        let ds = synth::gaussian_blobs(200, 3, 2, 8.0, 7);
+        for solver in [crate::config::Solver::Davidson, crate::config::Solver::Lanczos] {
+            let mut cfg = PipelineConfig::default();
+            cfg.k = 2;
+            cfg.r = 64;
+            cfg.solver = solver;
+            cfg.kernel = crate::config::Kernel::Laplacian { sigma: 0.5 };
+            cfg.kmeans_replicates = 3;
+            let out = ScRb::new(cfg).run(&ds.x);
+            let acc = accuracy(&out.labels, &ds.y);
+            assert!(acc > 0.9, "{solver:?} accuracy {acc}");
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! **SC_RF** — the paper's modification of SV_RF into a true SC method:
+//! approximate the *normalized Laplacian* with RF features (degree
+//! normalization + top-K left singular vectors of Ẑ), then K-means.
+//! The direct convergence-rate competitor to SC_RB in Fig. 2.
+
+use super::method::{embed_and_cluster, ClusterOutput, Env, MethodInfo};
+use crate::eigen::{svds, SvdsOpts};
+use crate::linalg::Mat;
+use crate::rf::RfMap;
+use crate::util::timer::StageTimer;
+
+/// Build the dense RF feature matrix for `x` (XLA artifact when available,
+/// native otherwise). Shared by SC_RF / SV_RF / KK_RF.
+pub(super) fn rf_matrix(env: &Env, x: &Mat) -> Mat {
+    let cfg = &env.cfg;
+    let map = RfMap::sample(cfg.kernel, x.cols, cfg.r, cfg.seed ^ 0x8f8f);
+    if let Some(rt) = env.xla {
+        let force = cfg.engine == crate::config::Engine::Xla;
+        if cfg.engine != crate::config::Engine::Native
+            && (force || rt.rf_worthwhile(x.rows, x.cols, cfg.r))
+        {
+            if let Some(mut z) = rt.rf_features(x, &map.w, &map.b) {
+                // artifact computes cos(xW+b); apply the √(2/R) scale here
+                z.scale((2.0 / cfg.r as f64).sqrt());
+                return z;
+            }
+        }
+    }
+    map.features(x)
+}
+
+/// Degree-normalize a dense feature matrix: Ẑ = D^{−1/2}Z with
+/// d = Z(Zᵀ1) clamped away from zero (RF features are signed, so the
+/// approximate degrees can be slightly negative on small R).
+pub(super) fn normalize_dense_by_degree(z: &mut Mat) {
+    let ones = vec![1.0; z.rows];
+    let col_sums = z.t_matvec(&ones);
+    let deg = z.matvec(&col_sums);
+    let floor = 1e-8 * deg.iter().map(|d| d.abs()).fold(0.0, f64::max).max(1e-12);
+    for i in 0..z.rows {
+        let d = deg[i].max(floor);
+        let s = 1.0 / d.sqrt();
+        for v in z.row_mut(i) {
+            *v *= s;
+        }
+    }
+}
+
+pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
+    let cfg = &env.cfg;
+    let mut timer = StageTimer::new();
+    let mut z = timer.time("rf_features", || rf_matrix(env, x));
+    let feature_dim = z.cols;
+    timer.time("degrees", || normalize_dense_by_degree(&mut z));
+
+    let mut opts = SvdsOpts::new(cfg.k, cfg.solver);
+    opts.tol = cfg.svd_tol;
+    opts.max_matvecs = cfg.svd_max_iters;
+    let svd = timer.time("svd", || svds(&z, &opts, cfg.seed ^ 0x5cf5));
+
+    let (labels, km) = embed_and_cluster(svd.u, env, &mut timer, true);
+    ClusterOutput {
+        labels,
+        timer,
+        info: MethodInfo {
+            feature_dim,
+            svd: Some(svd.stats),
+            kappa: None,
+            inertia: km.inertia,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Kernel, PipelineConfig};
+    use crate::data::synth;
+    use crate::metrics::accuracy;
+
+    #[test]
+    fn clusters_blobs() {
+        let ds = synth::gaussian_blobs(300, 4, 3, 9.0, 17);
+        let mut cfg = PipelineConfig::default();
+        cfg.k = 3;
+        // R large enough that RF noise (~1/√R) sits well under the
+        // within-cluster kernel value — the regime Fig. 2 converges in.
+        cfg.r = 512;
+        cfg.kernel = Kernel::Gaussian { sigma: 1.2 };
+        cfg.kmeans_replicates = 5;
+        let out = run(&Env::new(cfg), &ds.x);
+        let acc = accuracy(&out.labels, &ds.y);
+        assert!(acc > 0.85, "SC_RF on blobs: {acc}");
+    }
+
+    #[test]
+    fn normalize_handles_signed_features() {
+        let mut z = Mat::from_vec(3, 2, vec![0.5, -0.5, 0.4, 0.3, -0.2, 0.6]);
+        normalize_dense_by_degree(&mut z);
+        assert!(z.data.iter().all(|v| v.is_finite()));
+    }
+}

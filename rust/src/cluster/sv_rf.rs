@@ -1,0 +1,62 @@
+//! **SV_RF** [11] — fast kernel K-means on the top singular vectors of the
+//! RF feature matrix Z (approximating the similarity matrix W = ZZᵀ, *not*
+//! the normalized Laplacian — the distinction §5.2 highlights).
+
+use super::method::{embed_and_cluster, ClusterOutput, Env, MethodInfo};
+use super::sc_rf::rf_matrix;
+use crate::eigen::{svds, SvdsOpts};
+use crate::linalg::Mat;
+use crate::util::timer::StageTimer;
+
+pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
+    let cfg = &env.cfg;
+    let mut timer = StageTimer::new();
+    let z = timer.time("rf_features", || rf_matrix(env, x));
+    let feature_dim = z.cols;
+
+    let mut opts = SvdsOpts::new(cfg.k, cfg.solver);
+    opts.tol = cfg.svd_tol;
+    opts.max_matvecs = cfg.svd_max_iters;
+    let svd = timer.time("svd", || svds(&z, &opts, cfg.seed ^ 0x57f5));
+
+    // kernel-kmeans view: cluster the PCA scores U·Σ (no row normalization,
+    // no degree scaling — this approximates W, not L).
+    let mut scores = svd.u;
+    for j in 0..svd.s.len() {
+        for i in 0..scores.rows {
+            scores.set(i, j, scores.at(i, j) * svd.s[j]);
+        }
+    }
+    let (labels, km) = embed_and_cluster(scores, env, &mut timer, false);
+    ClusterOutput {
+        labels,
+        timer,
+        info: MethodInfo {
+            feature_dim,
+            svd: Some(svd.stats),
+            kappa: None,
+            inertia: km.inertia,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Kernel, PipelineConfig};
+    use crate::data::synth;
+    use crate::metrics::accuracy;
+
+    #[test]
+    fn clusters_blobs() {
+        let ds = synth::gaussian_blobs(300, 4, 3, 9.0, 19);
+        let mut cfg = PipelineConfig::default();
+        cfg.k = 3;
+        cfg.r = 512;
+        cfg.kernel = Kernel::Gaussian { sigma: 1.2 };
+        cfg.kmeans_replicates = 5;
+        let out = run(&Env::new(cfg), &ds.x);
+        let acc = accuracy(&out.labels, &ds.y);
+        assert!(acc > 0.85, "SV_RF on blobs: {acc}");
+    }
+}

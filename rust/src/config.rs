@@ -1,0 +1,292 @@
+//! Typed configuration for the clustering pipeline and experiment drivers.
+//!
+//! Configs come from (lowest to highest precedence): built-in defaults, an
+//! optional `key = value` config file (`--config path`), then CLI options.
+
+use crate::cli::Args;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Similarity kernel for graph construction.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Kernel {
+    /// k(x,y) = exp(-||x-y||_1 / sigma). RB's native kernel (p(ω)∝ω·k″(ω) is
+    /// Gamma(2, σ)); RF approximates it with Cauchy-distributed ω.
+    Laplacian { sigma: f64 },
+    /// k(x,y) = exp(-||x-y||² / (2σ²)). RF approximates it with Normal ω.
+    Gaussian { sigma: f64 },
+}
+
+impl Kernel {
+    pub fn sigma(&self) -> f64 {
+        match self {
+            Kernel::Laplacian { sigma } | Kernel::Gaussian { sigma } => *sigma,
+        }
+    }
+
+    pub fn with_sigma(&self, sigma: f64) -> Kernel {
+        match self {
+            Kernel::Laplacian { .. } => Kernel::Laplacian { sigma },
+            Kernel::Gaussian { .. } => Kernel::Gaussian { sigma },
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::Laplacian { .. } => "laplacian",
+            Kernel::Gaussian { .. } => "gaussian",
+        }
+    }
+
+    pub fn parse(name: &str, sigma: f64) -> Result<Kernel, String> {
+        match name {
+            "laplacian" | "lap" | "l1" => Ok(Kernel::Laplacian { sigma }),
+            "gaussian" | "rbf" | "l2" => Ok(Kernel::Gaussian { sigma }),
+            other => Err(format!("unknown kernel '{other}' (laplacian|gaussian)")),
+        }
+    }
+}
+
+/// Which iterative SVD solver backs step 3 of Algorithm 2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Solver {
+    /// PRIMME-analogue: block Generalized-Davidson (GD+k) with thick restart.
+    Davidson,
+    /// Matlab-`svds` analogue: restarted Lanczos bidiagonalization.
+    Lanczos,
+}
+
+impl Solver {
+    pub fn parse(s: &str) -> Result<Solver, String> {
+        match s {
+            "davidson" | "primme" | "gd+k" => Ok(Solver::Davidson),
+            "lanczos" | "svds" | "lbd" => Ok(Solver::Lanczos),
+            other => Err(format!("unknown solver '{other}' (davidson|lanczos)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Solver::Davidson => "davidson",
+            Solver::Lanczos => "lanczos",
+        }
+    }
+}
+
+/// Dense-compute engine: native Rust or AOT-compiled XLA artifacts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    Native,
+    Xla,
+    /// Use XLA when artifacts are present, otherwise native.
+    Auto,
+}
+
+impl Engine {
+    pub fn parse(s: &str) -> Result<Engine, String> {
+        match s {
+            "native" => Ok(Engine::Native),
+            "xla" => Ok(Engine::Xla),
+            "auto" => Ok(Engine::Auto),
+            other => Err(format!("unknown engine '{other}' (native|xla|auto)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Native => "native",
+            Engine::Xla => "xla",
+            Engine::Auto => "auto",
+        }
+    }
+}
+
+/// Full pipeline configuration (Algorithm 2 + baselines).
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// Number of clusters K.
+    pub k: usize,
+    /// Number of RB grids / RF features / landmarks R (method-dependent rank).
+    pub r: usize,
+    pub kernel: Kernel,
+    pub seed: u64,
+    pub solver: Solver,
+    pub engine: Engine,
+    /// K-means replicates (paper: Matlab kmeans with 10 replicates).
+    pub kmeans_replicates: usize,
+    pub kmeans_max_iters: usize,
+    /// Eigensolver convergence tolerance (paper §5.3 uses 1e-5).
+    pub svd_tol: f64,
+    pub svd_max_iters: usize,
+    /// Directory with AOT artifacts + manifest.json.
+    pub artifacts_dir: String,
+    pub verbose: bool,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            k: 2,
+            r: 256,
+            kernel: Kernel::Laplacian { sigma: 1.0 },
+            seed: 42,
+            solver: Solver::Davidson,
+            engine: Engine::Auto,
+            kmeans_replicates: 10,
+            kmeans_max_iters: 100,
+            svd_tol: 1e-5,
+            svd_max_iters: 3000,
+            artifacts_dir: "artifacts".to_string(),
+            verbose: false,
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// Apply a parsed `key = value` map (config file layer).
+    pub fn apply_map(&mut self, map: &BTreeMap<String, String>) -> Result<(), String> {
+        for (k, v) in map {
+            self.apply_kv(k, v)?;
+        }
+        Ok(())
+    }
+
+    fn apply_kv(&mut self, key: &str, val: &str) -> Result<(), String> {
+        let bad = |k: &str, v: &str| format!("config: bad value '{v}' for '{k}'");
+        match key {
+            "k" => self.k = val.parse().map_err(|_| bad(key, val))?,
+            "r" => self.r = val.parse().map_err(|_| bad(key, val))?,
+            "sigma" => {
+                let s: f64 = val.parse().map_err(|_| bad(key, val))?;
+                self.kernel = self.kernel.with_sigma(s);
+            }
+            "kernel" => self.kernel = Kernel::parse(val, self.kernel.sigma())?,
+            "seed" => self.seed = val.parse().map_err(|_| bad(key, val))?,
+            "solver" => self.solver = Solver::parse(val)?,
+            "engine" => self.engine = Engine::parse(val)?,
+            "kmeans_replicates" => {
+                self.kmeans_replicates = val.parse().map_err(|_| bad(key, val))?
+            }
+            "kmeans_max_iters" => self.kmeans_max_iters = val.parse().map_err(|_| bad(key, val))?,
+            "svd_tol" => self.svd_tol = val.parse().map_err(|_| bad(key, val))?,
+            "svd_max_iters" => self.svd_max_iters = val.parse().map_err(|_| bad(key, val))?,
+            "artifacts_dir" => self.artifacts_dir = val.to_string(),
+            "verbose" => self.verbose = val.parse().map_err(|_| bad(key, val))?,
+            other => return Err(format!("config: unknown key '{other}'")),
+        }
+        Ok(())
+    }
+
+    /// Apply CLI options (highest precedence).
+    pub fn apply_args(&mut self, args: &Args) -> Result<(), String> {
+        if let Some(path) = args.get("config") {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| format!("cannot read config '{path}': {e}"))?;
+            self.apply_map(&parse_kv_file(&text)?)?;
+        }
+        for key in [
+            "k",
+            "r",
+            "sigma",
+            "kernel",
+            "seed",
+            "solver",
+            "engine",
+            "kmeans_replicates",
+            "kmeans_max_iters",
+            "svd_tol",
+            "svd_max_iters",
+            "artifacts_dir",
+        ] {
+            if let Some(v) = args.get(key) {
+                self.apply_kv(key, v)?;
+            }
+        }
+        if args.flag("verbose") {
+            self.verbose = true;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for PipelineConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "k={} r={} kernel={}(sigma={}) solver={} engine={} seed={}",
+            self.k,
+            self.r,
+            self.kernel.name(),
+            self.kernel.sigma(),
+            self.solver.name(),
+            self.engine.name(),
+            self.seed
+        )
+    }
+}
+
+/// Parse a `key = value` config file (TOML-subset: comments with '#',
+/// blank lines ignored, no sections).
+pub fn parse_kv_file(text: &str) -> Result<BTreeMap<String, String>, String> {
+    let mut map = BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| format!("config line {}: expected key = value", lineno + 1))?;
+        let v = v.trim().trim_matches('"').trim_matches('\'');
+        map.insert(k.trim().to_string(), v.to_string());
+    }
+    Ok(map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_then_file_then_cli() {
+        let mut cfg = PipelineConfig::default();
+        let file = "k = 10\nsigma = 2.0  # comment\nsolver = lanczos\n";
+        cfg.apply_map(&parse_kv_file(file).unwrap()).unwrap();
+        assert_eq!(cfg.k, 10);
+        assert_eq!(cfg.kernel.sigma(), 2.0);
+        assert_eq!(cfg.solver, Solver::Lanczos);
+
+        let args = Args::parse(
+            "run --k 7 --solver davidson --verbose".split_whitespace().map(String::from),
+        )
+        .unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.k, 7);
+        assert_eq!(cfg.solver, Solver::Davidson);
+        assert!(cfg.verbose);
+        // untouched key keeps file value
+        assert_eq!(cfg.kernel.sigma(), 2.0);
+    }
+
+    #[test]
+    fn kernel_switch_keeps_sigma() {
+        let mut cfg = PipelineConfig::default();
+        cfg.apply_kv("sigma", "3.5").unwrap();
+        cfg.apply_kv("kernel", "gaussian").unwrap();
+        assert_eq!(cfg.kernel, Kernel::Gaussian { sigma: 3.5 });
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut cfg = PipelineConfig::default();
+        assert!(cfg.apply_kv("nope", "1").is_err());
+    }
+
+    #[test]
+    fn parse_enums() {
+        assert_eq!(Solver::parse("primme").unwrap(), Solver::Davidson);
+        assert_eq!(Solver::parse("svds").unwrap(), Solver::Lanczos);
+        assert_eq!(Engine::parse("xla").unwrap(), Engine::Xla);
+        assert!(Kernel::parse("poly", 1.0).is_err());
+    }
+}

@@ -1,0 +1,383 @@
+//! One driver per paper table/figure (DESIGN.md §6). Each returns plain
+//! data that `report` renders; the `scrb` CLI, the `examples/repro_*`
+//! binaries, and the benches all call these.
+
+use super::{Coordinator, MethodRun};
+use crate::cluster::{Env, MethodKind};
+use crate::config::Solver;
+use crate::data::{synth, Dataset};
+use crate::eigen::{svds, SvdsOpts};
+use crate::linalg::Mat;
+use crate::metrics::average_rank_scores;
+use crate::rb::{exact_laplacian_gram, rb_features};
+use crate::sparse::{implicit_degrees, normalize_by_degree};
+use std::time::Instant;
+
+/// Datasets of Table 1, in paper order.
+pub const TABLE_DATASETS: [&str; 8] = [
+    "pendigits",
+    "letter",
+    "mnist",
+    "acoustic",
+    "ijcnn1",
+    "cod_rna",
+    "covtype-mult",
+    "poker",
+];
+
+/// Build (synthetic stand-in) benchmark `name` under the coordinator's
+/// scale.
+pub fn dataset(coord: &Coordinator, name: &str) -> Dataset {
+    synth::paper_benchmark(name, coord.scale, coord.base_cfg.seed)
+}
+
+// ---------------------------------------------------------------- Table 2+3
+
+/// Full comparison grid: every method × every requested dataset.
+/// Returns per-dataset: (dataset name, N, per-method runs in
+/// `MethodKind::ALL` order; infeasible methods are `None`).
+pub struct GridResult {
+    pub datasets: Vec<GridRow>,
+}
+
+pub struct GridRow {
+    pub name: String,
+    pub n: usize,
+    pub runs: Vec<Option<MethodRun>>,
+    /// Average rank score per method (NaN for methods that did not run).
+    pub ranks: Vec<f64>,
+}
+
+pub fn table2_3(coord: &Coordinator, datasets: &[String]) -> GridResult {
+    let mut rows = Vec::new();
+    for name in datasets {
+        let ds = dataset(coord, name);
+        let cfg = coord.cfg_for(&ds, None);
+        if coord.verbose {
+            eprintln!("[table2/3] {} n={} d={} k={} sigma={:.3}", ds.name, ds.n(), ds.d(), ds.k, cfg.kernel.sigma());
+        }
+        let mut runs: Vec<Option<MethodRun>> = Vec::new();
+        for kind in MethodKind::ALL {
+            if kind == MethodKind::ScExact && !coord.exact_sc_feasible(ds.n()) {
+                runs.push(None);
+                continue;
+            }
+            runs.push(Some(coord.run_method(kind, &ds, &cfg)));
+        }
+        // rank over the methods that ran; NaN keeps non-runners last
+        let scores: Vec<crate::metrics::ClusterMetrics> = runs
+            .iter()
+            .map(|r| {
+                r.as_ref().map(|m| m.metrics).unwrap_or(crate::metrics::ClusterMetrics {
+                    nmi: f64::NAN,
+                    rand_index: f64::NAN,
+                    f_measure: f64::NAN,
+                    accuracy: f64::NAN,
+                })
+            })
+            .collect();
+        let mut ranks = average_rank_scores(&scores);
+        for (i, r) in runs.iter().enumerate() {
+            if r.is_none() {
+                ranks[i] = f64::NAN;
+            }
+        }
+        rows.push(GridRow { name: ds.name.clone(), n: ds.n(), runs, ranks });
+    }
+    GridResult { datasets: rows }
+}
+
+// ------------------------------------------------------------------- Fig. 2
+
+/// One point of a figure series.
+#[derive(Clone, Debug)]
+pub struct SeriesPoint {
+    pub x: f64,
+    pub acc: f64,
+    pub secs: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<SeriesPoint>,
+}
+
+/// Fig. 2: accuracy + runtime vs R on the mnist-like benchmark for the
+/// random-feature methods, with the exact-SC accuracy as reference.
+pub struct Fig2Result {
+    pub series: Vec<Series>,
+    /// Exact SC reference (run at the feasibility cap): (n, acc, secs).
+    pub exact_ref: Option<(usize, f64, f64)>,
+}
+
+pub fn fig2(coord: &Coordinator, rs: &[usize], rb_max_r: usize) -> Fig2Result {
+    let ds = dataset(coord, "mnist");
+    let cfg0 = coord.cfg_for(&ds, None);
+    let methods = [MethodKind::ScRb, MethodKind::ScRf, MethodKind::SvRf, MethodKind::KkRf];
+    let mut series = Vec::new();
+    for kind in methods {
+        let mut points = Vec::new();
+        for &r in rs {
+            // the paper sweeps SC_RB only to 1024 (it converges by then)
+            if kind == MethodKind::ScRb && r > rb_max_r {
+                continue;
+            }
+            let mut cfg = cfg0.clone();
+            cfg.r = r;
+            let run = coord.run_method(kind, &ds, &cfg);
+            points.push(SeriesPoint { x: r as f64, acc: run.metrics.accuracy, secs: run.secs });
+        }
+        series.push(Series { label: kind.name().to_string(), points });
+    }
+    // exact SC reference on a feasible subset
+    let exact_ref = if coord.exact_sc_feasible(ds.n()) {
+        let run = coord.run_method(MethodKind::ScExact, &ds, &cfg0);
+        Some((ds.n(), run.metrics.accuracy, run.secs))
+    } else {
+        let mut small = ds.clone();
+        small.truncate(8_000.min(ds.n()));
+        let cfg = coord.cfg_for(&small, Some(cfg0.kernel.sigma()));
+        let run = coord.run_method(MethodKind::ScExact, &small, &cfg);
+        Some((small.n(), run.metrics.accuracy, run.secs))
+    };
+    Fig2Result { series, exact_ref }
+}
+
+// ------------------------------------------------------------------- Fig. 3
+
+/// Fig. 3: SC_RB accuracy + runtime vs R on covtype-like under the two SVD
+/// solvers (PRIMME-analogue Davidson vs Matlab-svds-analogue Lanczos).
+pub fn fig3(coord: &Coordinator, rs: &[usize]) -> Vec<Series> {
+    let ds = dataset(coord, "covtype-mult");
+    let cfg0 = coord.cfg_for(&ds, None);
+    let mut out = Vec::new();
+    for (solver, label) in
+        [(Solver::Davidson, "PRIMME_SVDS (davidson)"), (Solver::Lanczos, "SVDS (lanczos)")]
+    {
+        let mut points = Vec::new();
+        for &r in rs {
+            let mut cfg = cfg0.clone();
+            cfg.r = r;
+            cfg.solver = solver;
+            let run = coord.run_method(MethodKind::ScRb, &ds, &cfg);
+            points.push(SeriesPoint { x: r as f64, acc: run.metrics.accuracy, secs: run.secs });
+        }
+        out.push(Series { label: label.to_string(), points });
+    }
+    out
+}
+
+// ------------------------------------------------------------------- Fig. 4
+
+/// Per-stage timing of SC_RB at one N (Fig. 4 series).
+#[derive(Clone, Debug)]
+pub struct ScalePoint {
+    pub n: usize,
+    pub rb_secs: f64,
+    pub svd_secs: f64,
+    pub kmeans_secs: f64,
+    pub total_secs: f64,
+    pub accuracy: f64,
+}
+
+/// Fig. 4: SC_RB runtime decomposition while N sweeps (poker-like and
+/// susy-like), fixed R.
+pub fn fig4(coord: &Coordinator, dataset_name: &str, ns: &[usize], r: usize) -> Vec<ScalePoint> {
+    let spec = synth::spec_by_name(dataset_name).expect("unknown dataset");
+    let mut out = Vec::new();
+    for &n in ns {
+        let scale = (spec.n / n.max(1)).max(1);
+        let mut ds = synth::paper_benchmark(dataset_name, scale, coord.base_cfg.seed);
+        ds.truncate(n.min(ds.n()));
+        let mut cfg = coord.cfg_for(&ds, None);
+        cfg.r = r;
+        let run = coord.run_method(MethodKind::ScRb, &ds, &cfg);
+        let stage = |name: &str| {
+            run.stages.iter().find(|(s, _)| s == name).map(|(_, t)| *t).unwrap_or(0.0)
+        };
+        out.push(ScalePoint {
+            n: ds.n(),
+            rb_secs: stage("rb_features"),
+            svd_secs: stage("svd") + stage("degrees"),
+            kmeans_secs: stage("kmeans"),
+            total_secs: run.secs,
+            accuracy: run.metrics.accuracy,
+        });
+    }
+    out
+}
+
+// ------------------------------------------------------------------- Fig. 5
+
+/// Fig. 5: runtime vs R for all methods on one dataset (4 panels in the
+/// paper: pendigits, letter, mnist, acoustic).
+pub fn fig5(coord: &Coordinator, dataset_name: &str, rs: &[usize]) -> Vec<Series> {
+    let ds = dataset(coord, dataset_name);
+    let cfg0 = coord.cfg_for(&ds, None);
+    let mut out = Vec::new();
+    for kind in MethodKind::ALL {
+        if kind == MethodKind::ScExact {
+            // quadratic reference: run once (R-independent) if feasible
+            if coord.exact_sc_feasible(ds.n()) {
+                let run = coord.run_method(kind, &ds, &cfg0);
+                let points = rs
+                    .iter()
+                    .map(|&r| SeriesPoint { x: r as f64, acc: run.metrics.accuracy, secs: run.secs })
+                    .collect();
+                out.push(Series { label: kind.name().to_string(), points });
+            }
+            continue;
+        }
+        let mut points = Vec::new();
+        for &r in rs {
+            let mut cfg = cfg0.clone();
+            cfg.r = r;
+            let run = coord.run_method(kind, &ds, &cfg);
+            points.push(SeriesPoint { x: r as f64, acc: run.metrics.accuracy, secs: run.secs });
+        }
+        out.push(Series { label: kind.name().to_string(), points });
+    }
+    out
+}
+
+// ----------------------------------------------------- Theorem 1/2 empirics
+
+/// Empirical convergence of the RB spectral objective to the exact one:
+/// gap(R) = f(Û_R) − f(U*) where f(U) = trace(Uᵀ·L·U) under the *exact*
+/// normalized Laplacian. Theorem 2 predicts gap ≲ C/(κ·R).
+#[derive(Clone, Debug)]
+pub struct TheoryPoint {
+    pub r: usize,
+    pub kappa: f64,
+    pub gap: f64,
+    pub predicted_slope: f64,
+}
+
+pub fn theory_convergence(coord: &Coordinator, n: usize, rs: &[usize]) -> Vec<TheoryPoint> {
+    let mut ds = synth::gaussian_blobs(n, 4, 3, 6.0, coord.base_cfg.seed);
+    ds.minmax_normalize();
+    let cfg = coord.cfg_for(&ds, None);
+    let sigma = cfg.kernel.sigma();
+    let k = cfg.k;
+
+    // exact normalized similarity S and its top-k eigenbasis
+    let w = exact_laplacian_gram(&ds.x, sigma);
+    let s = {
+        let n_ = w.rows;
+        let mut scale = vec![0.0; n_];
+        for i in 0..n_ {
+            scale[i] = 1.0 / w.row(i).iter().sum::<f64>().sqrt();
+        }
+        let mut s = w.clone();
+        for i in 0..n_ {
+            for j in 0..n_ {
+                s.set(i, j, scale[i] * s.at(i, j) * scale[j]);
+            }
+        }
+        s
+    };
+    let objective = |u: &Mat| -> f64 {
+        // trace(Uᵀ L U) = k − trace(Uᵀ S U)
+        let su = s.matmul(u);
+        let m = u.t_matmul(&su);
+        (0..u.cols).map(|j| 1.0 - m.at(j, j)).sum()
+    };
+    let exact_op = crate::cluster::sc_exact::SymOp(&s);
+    let mut opts = SvdsOpts::new(k, Solver::Davidson);
+    opts.tol = 1e-9;
+    opts.max_matvecs = 50_000;
+    let exact_u = svds(&exact_op, &opts, 7).u;
+    let f_star = objective(&exact_u);
+
+    let mut out = Vec::new();
+    for &r in rs {
+        let rb = rb_features(&ds.x, r, sigma, coord.base_cfg.seed ^ 0x7e0);
+        let kappa = rb.kappa;
+        let d = implicit_degrees(&rb.z);
+        let zhat = normalize_by_degree(rb.z, &d);
+        let mut o = SvdsOpts::new(k, Solver::Davidson);
+        o.tol = 1e-8;
+        o.max_matvecs = 50_000;
+        let u = svds(&zhat, &o, 9).u;
+        let gap = (objective(&u) - f_star).max(0.0);
+        out.push(TheoryPoint { r, kappa, gap, predicted_slope: 1.0 / (kappa * r as f64) });
+    }
+    out
+}
+
+// -------------------------------------------------------------- single runs
+
+/// Run one named method on one benchmark (the `scrb run` command).
+pub fn single_run(
+    coord: &Coordinator,
+    method: MethodKind,
+    ds: &Dataset,
+    sigma_override: Option<f64>,
+) -> MethodRun {
+    let cfg = coord.cfg_for(ds, sigma_override);
+    coord.run_method(method, ds, &cfg)
+}
+
+/// Sanity helper used by tests and the quickstart: SC_RB on two moons via
+/// a bare Env (no coordinator).
+pub fn smoke_run() -> f64 {
+    let ds = synth::two_moons(400, 0.06, 3);
+    let mut cfg = crate::config::PipelineConfig::default();
+    cfg.k = 2;
+    cfg.r = 128;
+    cfg.kernel = crate::config::Kernel::Laplacian { sigma: 0.15 };
+    cfg.kmeans_replicates = 3;
+    let env = Env::new(cfg);
+    let t0 = Instant::now();
+    let out = MethodKind::ScRb.run(&env, &ds.x);
+    let _ = t0.elapsed();
+    crate::metrics::accuracy(&out.labels, &ds.y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Engine, PipelineConfig};
+
+    fn quick_coord() -> Coordinator {
+        let mut cfg = PipelineConfig::default();
+        cfg.engine = Engine::Native;
+        cfg.r = 32;
+        cfg.kmeans_replicates = 2;
+        cfg.svd_max_iters = 2000;
+        Coordinator::new(cfg, 2048)
+    }
+
+    #[test]
+    fn grid_runs_tiny() {
+        let coord = quick_coord();
+        let grid = table2_3(&coord, &["pendigits".to_string()]);
+        assert_eq!(grid.datasets.len(), 1);
+        let row = &grid.datasets[0];
+        assert_eq!(row.runs.len(), MethodKind::ALL.len());
+        // all methods ran at this tiny scale (exact SC included)
+        assert!(row.runs.iter().all(|r| r.is_some()));
+        // ranks are a permutation-ish set with mean (m+1)/2
+        let m = row.ranks.len() as f64;
+        let mean: f64 = row.ranks.iter().sum::<f64>() / m;
+        assert!((mean - (m + 1.0) / 2.0).abs() < 1e-9, "ranks {:?}", row.ranks);
+    }
+
+    #[test]
+    fn theory_gap_shrinks() {
+        let coord = quick_coord();
+        let pts = theory_convergence(&coord, 150, &[8, 128]);
+        assert_eq!(pts.len(), 2);
+        assert!(
+            pts[1].gap <= pts[0].gap + 1e-9,
+            "gap should shrink with R: {:?}",
+            pts
+        );
+    }
+
+    #[test]
+    fn smoke_clusters_moons() {
+        assert!(smoke_run() > 0.85);
+    }
+}

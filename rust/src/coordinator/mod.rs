@@ -1,0 +1,196 @@
+//! Experiment coordinator (the L3 orchestration layer): owns the XLA
+//! runtime, builds datasets, fans methods out over the comparison grid,
+//! collects metrics + stage timings, and renders the paper's tables and
+//! figures. Every driver in [`experiment`] maps 1:1 to a table/figure
+//! (see DESIGN.md §6).
+
+pub mod experiment;
+pub mod report;
+
+use crate::cluster::{ClusterOutput, Env, MethodKind};
+use crate::config::{Engine, PipelineConfig};
+use crate::data::Dataset;
+use crate::kernels::median_heuristic_sigma;
+use crate::metrics::{all_metrics, ClusterMetrics};
+use crate::runtime::XlaRuntime;
+use std::time::Instant;
+
+/// Shared context for experiment drivers.
+pub struct Coordinator {
+    pub base_cfg: PipelineConfig,
+    /// Dataset size divisor (1 = full paper sizes).
+    pub scale: usize,
+    pub xla: Option<XlaRuntime>,
+    pub verbose: bool,
+}
+
+/// One method's outcome on one dataset.
+#[derive(Clone, Debug)]
+pub struct MethodRun {
+    pub method: MethodKind,
+    pub dataset: String,
+    pub n: usize,
+    pub r: usize,
+    pub metrics: ClusterMetrics,
+    pub secs: f64,
+    /// (stage name, seconds) in execution order.
+    pub stages: Vec<(String, f64)>,
+    pub feature_dim: usize,
+    pub svd_matvecs: usize,
+    pub svd_converged: bool,
+    pub kappa: Option<f64>,
+}
+
+impl Coordinator {
+    /// Build a coordinator; tries to load the XLA runtime unless the
+    /// engine is `native`.
+    pub fn new(base_cfg: PipelineConfig, scale: usize) -> Coordinator {
+        let xla = match base_cfg.engine {
+            Engine::Native => None,
+            Engine::Xla | Engine::Auto => match XlaRuntime::load(&base_cfg.artifacts_dir) {
+                Ok(rt) => Some(rt),
+                Err(e) => {
+                    if base_cfg.engine == Engine::Xla {
+                        panic!("--engine xla requested but runtime failed to load: {e:#}");
+                    }
+                    None
+                }
+            },
+        };
+        let verbose = base_cfg.verbose;
+        Coordinator { base_cfg, scale, xla, verbose }
+    }
+
+    /// Pipeline config specialized to a dataset: K from the labels, σ
+    /// selected once per dataset and shared by all methods (the paper's
+    /// fairness protocol; it cross-validates σ in [0.01, 100] — we use an
+    /// unsupervised analogue: the eigengap criterion over candidate
+    /// multiples of the median-heuristic bandwidth) unless pinned via CLI.
+    pub fn cfg_for(&self, ds: &Dataset, sigma_override: Option<f64>) -> PipelineConfig {
+        let mut cfg = self.base_cfg.clone();
+        cfg.k = ds.k.max(2);
+        let sigma = sigma_override.unwrap_or_else(|| select_sigma(&cfg, ds));
+        cfg.kernel = cfg.kernel.with_sigma(sigma);
+        cfg
+    }
+
+    /// Run one method on one dataset and score it.
+    pub fn run_method(&self, kind: MethodKind, ds: &Dataset, cfg: &PipelineConfig) -> MethodRun {
+        let env = Env::with_xla(cfg.clone(), self.xla.as_ref());
+        let t0 = Instant::now();
+        let out: ClusterOutput = kind.run(&env, &ds.x);
+        let secs = t0.elapsed().as_secs_f64();
+        let metrics = all_metrics(&out.labels, &ds.y);
+        if self.verbose {
+            eprintln!(
+                "  {:<8} on {:<13} n={:<8} r={:<5} acc={:.3} nmi={:.3} {:.2}s [{}]",
+                kind.name(),
+                ds.name,
+                ds.n(),
+                cfg.r,
+                metrics.accuracy,
+                metrics.nmi,
+                secs,
+                out.timer.summary()
+            );
+        }
+        MethodRun {
+            method: kind,
+            dataset: ds.name.clone(),
+            n: ds.n(),
+            r: cfg.r,
+            metrics,
+            secs,
+            stages: out
+                .timer
+                .names()
+                .iter()
+                .map(|n| (n.clone(), out.timer.secs(n)))
+                .collect(),
+            feature_dim: out.info.feature_dim,
+            svd_matvecs: out.info.svd.as_ref().map(|s| s.matvecs).unwrap_or(0),
+            svd_converged: out.info.svd.as_ref().map(|s| s.converged).unwrap_or(true),
+            kappa: out.info.kappa,
+        }
+    }
+
+    /// Whether exact SC is feasible for this size (paper reports "−" above
+    /// ~tens of thousands of points).
+    pub fn exact_sc_feasible(&self, n: usize) -> bool {
+        n <= crate::cluster::sc_exact::MAX_EXACT_N.min(20_000)
+    }
+}
+
+/// Unsupervised bandwidth selection: evaluate candidate σ = median·f on a
+/// subsample by the eigengap λ_K − λ_{K+1} of the exact normalized
+/// similarity — the classical "well-separated clusters ⇔ large Laplacian
+/// eigengap" criterion (von Luxburg §8). Every method then shares the
+/// winning σ, mirroring the paper's per-dataset cross-validated kernel.
+pub fn select_sigma(cfg: &PipelineConfig, ds: &Dataset) -> f64 {
+    let med = median_heuristic_sigma(cfg.kernel.name(), &ds.x, cfg.seed);
+    let n_sub = 220.min(ds.n());
+    if n_sub < 3 * cfg.k.max(2) {
+        return med;
+    }
+    let mut rng = crate::util::rng::Pcg::new(cfg.seed, 0x516a);
+    let idx = rng.sample_indices(ds.n(), n_sub);
+    let xs = ds.x.select_rows(&idx);
+    let k = ds.k.max(2).min(n_sub - 2);
+    let mut best = (f64::NEG_INFINITY, med);
+    for f in [0.125f64, 0.25, 0.5, 1.0] {
+        let sigma = med * f;
+        let w = crate::kernels::kernel_matrix(cfg.kernel.with_sigma(sigma), &xs);
+        // normalized similarity S = D^{-1/2} W D^{-1/2}
+        let mut s = w;
+        let scale: Vec<f64> = (0..n_sub)
+            .map(|i| 1.0 / s.row(i).iter().sum::<f64>().max(1e-300).sqrt())
+            .collect();
+        for i in 0..n_sub {
+            for j in 0..n_sub {
+                let v = scale[i] * s.at(i, j) * scale[j];
+                s.set(i, j, v);
+            }
+        }
+        let eig = crate::linalg::sym_eig(&s);
+        // eigenvalues ascending; top-K gap:
+        let lam = &eig.w;
+        let m = lam.len();
+        let gap = lam[m - k] - lam[m - k - 1];
+        if gap > best.0 {
+            best = (gap, sigma);
+        }
+    }
+    best.1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn coordinator_runs_a_method() {
+        let mut cfg = PipelineConfig::default();
+        cfg.engine = Engine::Native;
+        cfg.r = 64;
+        cfg.kmeans_replicates = 2;
+        let coord = Coordinator::new(cfg, 1);
+        let ds = synth::gaussian_blobs(200, 3, 3, 8.0, 3);
+        let dcfg = coord.cfg_for(&ds, None);
+        assert_eq!(dcfg.k, 3);
+        assert!(dcfg.kernel.sigma() > 0.0);
+        let run = coord.run_method(MethodKind::ScRb, &ds, &dcfg);
+        assert_eq!(run.n, 200);
+        assert!(run.metrics.accuracy > 0.5);
+        assert!(run.secs > 0.0);
+        assert!(!run.stages.is_empty());
+    }
+
+    #[test]
+    fn exact_feasibility_gate() {
+        let cfg = PipelineConfig { engine: Engine::Native, ..Default::default() };
+        let coord = Coordinator::new(cfg, 1);
+        assert!(coord.exact_sc_feasible(5_000));
+        assert!(!coord.exact_sc_feasible(100_000));
+    }
+}

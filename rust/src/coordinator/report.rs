@@ -1,0 +1,231 @@
+//! Rendering of experiment results as paper-style text tables, CSV files,
+//! and JSON blobs under `results/`.
+
+use super::experiment::{Fig2Result, GridResult, ScalePoint, Series, TheoryPoint};
+use crate::cluster::MethodKind;
+use crate::util::json::Json;
+use crate::util::table::{fnum, Table};
+
+/// Render Table 1 (dataset properties).
+pub fn render_table1(scale: usize) -> String {
+    let mut t = Table::new(vec!["Name", "K: Classes", "d: Features", "N: Samples", "N (scaled)"]);
+    for spec in crate::data::PAPER_BENCHMARKS {
+        let scaled = (spec.n / scale.max(1)).max(64 * spec.k);
+        t.row(vec![
+            spec.name.to_string(),
+            spec.k.to_string(),
+            spec.d.to_string(),
+            spec.n.to_string(),
+            scaled.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+/// Render Table 2 (average rank scores — lower is better).
+pub fn render_table2(grid: &GridResult) -> String {
+    let mut header: Vec<String> = vec!["Dataset".into()];
+    header.extend(MethodKind::ALL.iter().map(|m| m.name().to_string()));
+    let mut t = Table::new(header);
+    for row in &grid.datasets {
+        let mut cells = vec![row.name.clone()];
+        for r in &row.ranks {
+            cells.push(if r.is_nan() { "-".to_string() } else { format!("{r:.2}") });
+        }
+        t.row(cells);
+    }
+    t.render()
+}
+
+/// Render Table 3 (computational time, seconds).
+pub fn render_table3(grid: &GridResult) -> String {
+    let mut header: Vec<String> = vec!["Dataset".into()];
+    header.extend(MethodKind::ALL.iter().map(|m| m.name().to_string()));
+    let mut t = Table::new(header);
+    for row in &grid.datasets {
+        let mut cells = vec![row.name.clone()];
+        for r in &row.runs {
+            cells.push(match r {
+                Some(run) => fnum(run.secs),
+                None => "-".to_string(),
+            });
+        }
+        t.row(cells);
+    }
+    t.render()
+}
+
+/// Per-metric detail table (one dataset): methods × (NMI, RI, FM, Acc, s).
+pub fn render_detail(grid: &GridResult) -> String {
+    let mut out = String::new();
+    for row in &grid.datasets {
+        out.push_str(&format!("== {} (N={}) ==\n", row.name, row.n));
+        let mut t =
+            Table::new(vec!["Method", "NMI", "RI", "FM", "Acc", "AvgRank", "Time(s)", "SVD mv"]);
+        for (i, r) in row.runs.iter().enumerate() {
+            match r {
+                Some(run) => {
+                    t.row(vec![
+                        run.method.name().to_string(),
+                        format!("{:.3}", run.metrics.nmi),
+                        format!("{:.3}", run.metrics.rand_index),
+                        format!("{:.3}", run.metrics.f_measure),
+                        format!("{:.3}", run.metrics.accuracy),
+                        format!("{:.2}", row.ranks[i]),
+                        fnum(run.secs),
+                        run.svd_matvecs.to_string(),
+                    ]);
+                }
+                None => {
+                    t.row(vec![
+                        MethodKind::ALL[i].name().to_string(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                    ]);
+                }
+            }
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    out
+}
+
+/// Render a figure's series as an aligned table: one block per series.
+pub fn render_series(title: &str, series: &[Series], xname: &str) -> String {
+    let mut out = format!("== {title} ==\n");
+    for s in series {
+        out.push_str(&format!("-- {} --\n", s.label));
+        let mut t = Table::new(vec![xname, "Acc", "Time(s)"]);
+        for p in &s.points {
+            t.row(vec![format!("{}", p.x as usize), format!("{:.3}", p.acc), fnum(p.secs)]);
+        }
+        out.push_str(&t.render());
+    }
+    out
+}
+
+pub fn render_fig2(fig: &Fig2Result) -> String {
+    let mut out = render_series("Fig. 2: accuracy & runtime vs R (mnist-like)", &fig.series, "R");
+    if let Some((n, acc, secs)) = fig.exact_ref {
+        out.push_str(&format!(
+            "-- exact SC reference -- (N={n})\nacc={acc:.3} time={}\n",
+            fnum(secs)
+        ));
+    }
+    out
+}
+
+pub fn render_fig4(dataset: &str, points: &[ScalePoint]) -> String {
+    let mut out = format!("== Fig. 4: SC_RB scalability in N ({dataset}) ==\n");
+    let mut t = Table::new(vec!["N", "RB(s)", "SVD(s)", "KMeans(s)", "Total(s)", "Acc"]);
+    for p in points {
+        t.row(vec![
+            p.n.to_string(),
+            fnum(p.rb_secs),
+            fnum(p.svd_secs),
+            fnum(p.kmeans_secs),
+            fnum(p.total_secs),
+            format!("{:.3}", p.accuracy),
+        ]);
+    }
+    out.push_str(&t.render());
+    // linear-fit sanity line: total(N) / N should be ~constant
+    if points.len() >= 2 {
+        let first = points.first().unwrap();
+        let last = points.last().unwrap();
+        let ratio = (last.total_secs / last.n as f64) / (first.total_secs / first.n as f64);
+        out.push_str(&format!(
+            "per-point cost ratio (largest/smallest N): {ratio:.2} (≈1 ⇒ linear, ≫1 ⇒ superlinear)\n"
+        ));
+    }
+    out
+}
+
+pub fn render_theory(points: &[TheoryPoint]) -> String {
+    let mut out = String::from("== Theorem 2 empirics: objective gap vs R ==\n");
+    let mut t = Table::new(vec!["R", "kappa", "gap f(Û)−f(U*)", "1/(κR) (theory slope)"]);
+    for p in points {
+        t.row(vec![
+            p.r.to_string(),
+            format!("{:.2}", p.kappa),
+            format!("{:.3e}", p.gap),
+            format!("{:.3e}", p.predicted_slope),
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+/// Dump a grid result to JSON (machine-readable record for EXPERIMENTS.md).
+pub fn grid_to_json(grid: &GridResult) -> Json {
+    let mut root = Json::obj();
+    let mut rows = Vec::new();
+    for row in &grid.datasets {
+        let mut jrow = Json::obj();
+        jrow.set("dataset", Json::Str(row.name.clone()));
+        jrow.set("n", Json::Num(row.n as f64));
+        let mut methods = Vec::new();
+        for (i, r) in row.runs.iter().enumerate() {
+            let mut jm = Json::obj();
+            jm.set("method", Json::Str(MethodKind::ALL[i].name().into()));
+            match r {
+                Some(run) => {
+                    jm.set("nmi", Json::Num(run.metrics.nmi));
+                    jm.set("ri", Json::Num(run.metrics.rand_index));
+                    jm.set("fm", Json::Num(run.metrics.f_measure));
+                    jm.set("acc", Json::Num(run.metrics.accuracy));
+                    jm.set("rank", Json::Num(row.ranks[i]));
+                    jm.set("secs", Json::Num(run.secs));
+                    jm.set("svd_matvecs", Json::Num(run.svd_matvecs as f64));
+                }
+                None => {
+                    jm.set("skipped", Json::Bool(true));
+                }
+            }
+            methods.push(jm);
+        }
+        jrow.set("methods", Json::Arr(methods));
+        rows.push(jrow);
+    }
+    root.set("rows", Json::Arr(rows));
+    root
+}
+
+/// Write a string to `results/<name>`, creating the directory.
+pub fn save(name: &str, content: &str) -> std::io::Result<String> {
+    std::fs::create_dir_all("results")?;
+    let path = format!("results/{name}");
+    std::fs::write(&path, content)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_lists_all_benchmarks() {
+        let t = render_table1(64);
+        for spec in crate::data::PAPER_BENCHMARKS {
+            assert!(t.contains(spec.name), "missing {}", spec.name);
+        }
+        assert!(t.contains("1025010"));
+    }
+
+    #[test]
+    fn series_renders() {
+        let s = vec![Series {
+            label: "SC_RB".into(),
+            points: vec![super::super::experiment::SeriesPoint { x: 16.0, acc: 0.5, secs: 1.0 }],
+        }];
+        let out = render_series("t", &s, "R");
+        assert!(out.contains("SC_RB"));
+        assert!(out.contains("16"));
+    }
+}

@@ -1,0 +1,148 @@
+//! Dataset container and preprocessing.
+
+use crate::linalg::Mat;
+use crate::util::rng::Pcg;
+
+/// A labeled clustering dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    /// N×d feature matrix.
+    pub x: Mat,
+    /// Ground-truth labels, length N.
+    pub y: Vec<usize>,
+    /// Number of true classes K.
+    pub k: usize,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, x: Mat, y: Vec<usize>) -> Dataset {
+        assert_eq!(x.rows, y.len(), "label/row mismatch");
+        let k = y.iter().copied().max().map(|m| m + 1).unwrap_or(0);
+        Dataset { name: name.into(), x, y, k }
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.rows
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols
+    }
+
+    /// Min-max scale every dimension to [0, 1] (constant dims collapse to
+    /// 0). Standard preprocessing before kernel methods — bin widths and
+    /// bandwidths then live on a comparable scale across datasets.
+    pub fn minmax_normalize(&mut self) {
+        let (n, d) = (self.x.rows, self.x.cols);
+        if n == 0 {
+            return;
+        }
+        let mut lo = vec![f64::INFINITY; d];
+        let mut hi = vec![f64::NEG_INFINITY; d];
+        for i in 0..n {
+            for (j, &v) in self.x.row(i).iter().enumerate() {
+                lo[j] = lo[j].min(v);
+                hi[j] = hi[j].max(v);
+            }
+        }
+        let span: Vec<f64> =
+            lo.iter().zip(hi.iter()).map(|(&l, &h)| if h > l { h - l } else { 1.0 }).collect();
+        for i in 0..n {
+            let row = self.x.row_mut(i);
+            for j in 0..d {
+                row[j] = (row[j] - lo[j]) / span[j];
+            }
+        }
+    }
+
+    /// Shuffle rows (and labels) in place.
+    pub fn shuffle(&mut self, rng: &mut Pcg) {
+        let n = self.n();
+        for i in (1..n).rev() {
+            let j = rng.below(i + 1);
+            if i != j {
+                // swap rows i and j of x
+                let cols = self.x.cols;
+                for c in 0..cols {
+                    let a = self.x.at(i, c);
+                    let b = self.x.at(j, c);
+                    self.x.set(i, c, b);
+                    self.x.set(j, c, a);
+                }
+                self.y.swap(i, j);
+            }
+        }
+    }
+
+    /// Keep only the first `n` rows (after an external shuffle).
+    pub fn truncate(&mut self, n: usize) {
+        if n >= self.n() {
+            return;
+        }
+        self.x = self.x.row_block(0, n);
+        self.y.truncate(n);
+        self.k = self.y.iter().copied().max().map(|m| m + 1).unwrap_or(0);
+    }
+
+    /// Per-class sizes.
+    pub fn class_sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.k];
+        for &c in &self.y {
+            sizes[c] += 1;
+        }
+        sizes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        let x = Mat::from_vec(4, 2, vec![0.0, 10.0, 2.0, 30.0, 4.0, 20.0, 2.0, 10.0]);
+        Dataset::new("toy", x, vec![0, 1, 1, 0])
+    }
+
+    #[test]
+    fn normalize_into_unit_box() {
+        let mut ds = toy();
+        ds.minmax_normalize();
+        for i in 0..ds.n() {
+            for &v in ds.x.row(i) {
+                assert!((0.0..=1.0).contains(&v));
+            }
+        }
+        assert_eq!(ds.x.at(0, 0), 0.0);
+        assert_eq!(ds.x.at(2, 0), 1.0);
+    }
+
+    #[test]
+    fn shuffle_preserves_pairs() {
+        let mut ds = toy();
+        let before: Vec<(Vec<f64>, usize)> =
+            (0..4).map(|i| (ds.x.row(i).to_vec(), ds.y[i])).collect();
+        let mut rng = Pcg::seed(3);
+        ds.shuffle(&mut rng);
+        let mut after: Vec<(Vec<f64>, usize)> =
+            (0..4).map(|i| (ds.x.row(i).to_vec(), ds.y[i])).collect();
+        for b in &before {
+            let pos = after.iter().position(|a| a == b).expect("row/label pair lost");
+            after.remove(pos);
+        }
+    }
+
+    #[test]
+    fn truncate_updates_k() {
+        let mut ds = toy();
+        ds.truncate(2);
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.k, 2);
+    }
+
+    #[test]
+    fn class_sizes_sum() {
+        let ds = toy();
+        assert_eq!(ds.class_sizes(), vec![2, 2]);
+    }
+}

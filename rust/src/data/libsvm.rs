@@ -1,0 +1,125 @@
+//! LibSVM-format dataset parser, so the real Table 1 benchmarks drop in
+//! when their files are available (`scrb run --data path.libsvm`).
+//!
+//! Format per line: `<label> <index>:<value> <index>:<value> ...`
+//! Indices are 1-based and may be sparse; labels may be arbitrary
+//! integers/floats (compacted to 0..K−1 in first-seen sorted order).
+
+use super::dataset::Dataset;
+use crate::linalg::Mat;
+use std::collections::BTreeMap;
+use std::io::BufRead;
+
+/// Parse a LibSVM text stream.
+pub fn parse_libsvm<R: BufRead>(reader: R, name: &str) -> Result<Dataset, String> {
+    let mut raw_rows: Vec<Vec<(usize, f64)>> = Vec::new();
+    let mut raw_labels: Vec<i64> = Vec::new();
+    let mut max_dim = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.map_err(|e| format!("read error at line {}: {e}", lineno + 1))?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label_tok = parts.next().ok_or_else(|| format!("line {}: empty", lineno + 1))?;
+        let label = label_tok
+            .parse::<f64>()
+            .map_err(|_| format!("line {}: bad label '{label_tok}'", lineno + 1))?
+            as i64;
+        let mut feats = Vec::new();
+        for tok in parts {
+            let (is, vs) = tok
+                .split_once(':')
+                .ok_or_else(|| format!("line {}: bad feature '{tok}'", lineno + 1))?;
+            let idx: usize = is
+                .parse()
+                .map_err(|_| format!("line {}: bad index '{is}'", lineno + 1))?;
+            if idx == 0 {
+                return Err(format!("line {}: LibSVM indices are 1-based", lineno + 1));
+            }
+            let val: f64 = vs
+                .parse()
+                .map_err(|_| format!("line {}: bad value '{vs}'", lineno + 1))?;
+            max_dim = max_dim.max(idx);
+            feats.push((idx - 1, val));
+        }
+        raw_rows.push(feats);
+        raw_labels.push(label);
+    }
+    if raw_rows.is_empty() {
+        return Err("empty dataset".to_string());
+    }
+    // compact labels
+    let uniq: BTreeMap<i64, usize> = {
+        let mut set: Vec<i64> = raw_labels.clone();
+        set.sort_unstable();
+        set.dedup();
+        set.into_iter().enumerate().map(|(i, l)| (l, i)).collect()
+    };
+    let n = raw_rows.len();
+    let mut x = Mat::zeros(n, max_dim);
+    for (i, feats) in raw_rows.into_iter().enumerate() {
+        for (j, v) in feats {
+            x.set(i, j, v);
+        }
+    }
+    let y: Vec<usize> = raw_labels.iter().map(|l| uniq[l]).collect();
+    Ok(Dataset::new(name, x, y))
+}
+
+/// Load a LibSVM file from disk.
+pub fn load_libsvm(path: &str) -> Result<Dataset, String> {
+    let file = std::fs::File::open(path).map_err(|e| format!("cannot open '{path}': {e}"))?;
+    let name = std::path::Path::new(path)
+        .file_stem()
+        .map(|s| s.to_string_lossy().to_string())
+        .unwrap_or_else(|| "libsvm".to_string());
+    parse_libsvm(std::io::BufReader::new(file), &name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_file() {
+        let text = "\
++1 1:0.5 3:1.5
+-1 2:2.0
++1 1:1.0 2:1.0 3:1.0
+";
+        let ds = parse_libsvm(std::io::Cursor::new(text), "t").unwrap();
+        assert_eq!(ds.n(), 3);
+        assert_eq!(ds.d(), 3);
+        assert_eq!(ds.k, 2);
+        assert_eq!(ds.y, vec![1, 0, 1]); // -1 → 0, +1 → 1 (sorted order)
+        assert_eq!(ds.x.at(0, 0), 0.5);
+        assert_eq!(ds.x.at(0, 1), 0.0); // sparse hole
+        assert_eq!(ds.x.at(1, 1), 2.0);
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let text = "# header\n\n1 1:1\n2 1:2\n";
+        let ds = parse_libsvm(std::io::Cursor::new(text), "t").unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.k, 2);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_libsvm(std::io::Cursor::new("1 nocolon\n"), "t").is_err());
+        assert!(parse_libsvm(std::io::Cursor::new("1 0:1.0\n"), "t").is_err());
+        assert!(parse_libsvm(std::io::Cursor::new(""), "t").is_err());
+        assert!(parse_libsvm(std::io::Cursor::new("abc 1:1\n"), "t").is_err());
+    }
+
+    #[test]
+    fn multiclass_labels_compact() {
+        let text = "10 1:1\n30 1:2\n20 1:3\n10 1:4\n";
+        let ds = parse_libsvm(std::io::Cursor::new(text), "t").unwrap();
+        assert_eq!(ds.k, 3);
+        assert_eq!(ds.y, vec![0, 2, 1, 0]);
+    }
+}

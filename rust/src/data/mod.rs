@@ -1,0 +1,13 @@
+//! Dataset substrate: containers, synthetic Table-1 stand-ins, and a
+//! LibSVM parser for real benchmark files.
+
+pub mod dataset;
+pub mod libsvm;
+pub mod synth;
+
+pub use dataset::Dataset;
+pub use libsvm::{load_libsvm, parse_libsvm};
+pub use synth::{
+    concentric_rings, gaussian_blobs, latent_blobs, paper_benchmark, spec_by_name, two_moons,
+    BenchSpec, PAPER_BENCHMARKS, SUSY,
+};

@@ -1,0 +1,310 @@
+//! Synthetic dataset generators.
+//!
+//! The paper evaluates on 8 LibSVM benchmarks (Table 1) plus SUSY. Those
+//! files are not available offline, so each benchmark gets a synthetic
+//! stand-in matching its (N, d, K) exactly and emulating the *clustering
+//! character* that drives the paper's comparisons (see DESIGN.md §5):
+//! non-convex structure where SC should beat K-means, heavy overlap where
+//! spectra are clustered (covtype-mult, the Fig. 3 stress case), and
+//! near-structureless data where all methods tie (poker). Real LibSVM
+//! files drop in through `data::libsvm` when available.
+
+use super::dataset::Dataset;
+use crate::linalg::Mat;
+use crate::util::rng::Pcg;
+
+/// Isotropic Gaussian blobs around `k` random centers in `d` dims.
+/// `sep` is the center spacing in units of the cluster std.
+pub fn gaussian_blobs(n: usize, d: usize, k: usize, sep: f64, seed: u64) -> Dataset {
+    let mut rng = Pcg::new(seed, 0xb10b);
+    let std = 1.0;
+    // centers ~ N(0, sep²/d · I): expected center spacing ≈ sep·std
+    let mut centers = Mat::zeros(k, d);
+    for v in centers.data.iter_mut() {
+        *v = rng.normal() * sep / (d as f64).sqrt();
+    }
+    let mut x = Mat::zeros(n, d);
+    let mut y = vec![0usize; n];
+    for i in 0..n {
+        let c = i % k;
+        y[i] = c;
+        let row = x.row_mut(i);
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = centers.at(c, j) + rng.normal() * std / (d as f64).sqrt();
+        }
+    }
+    let mut ds = Dataset::new("blobs", x, y);
+    ds.shuffle(&mut Pcg::new(seed, 0x5f1e));
+    ds
+}
+
+/// The classic two-moons non-convex benchmark (embedded in 2 dims) —
+/// K-means fails, spectral clustering succeeds.
+pub fn two_moons(n: usize, noise: f64, seed: u64) -> Dataset {
+    let mut rng = Pcg::new(seed, 0x3005);
+    let mut x = Mat::zeros(n, 2);
+    let mut y = vec![0usize; n];
+    for i in 0..n {
+        let c = i % 2;
+        y[i] = c;
+        let t = std::f64::consts::PI * rng.f64();
+        let (mut px, mut py) = if c == 0 {
+            (t.cos(), t.sin())
+        } else {
+            (1.0 - t.cos(), 0.5 - t.sin())
+        };
+        px += noise * rng.normal();
+        py += noise * rng.normal();
+        x.set(i, 0, px);
+        x.set(i, 1, py);
+    }
+    let mut ds = Dataset::new("two_moons", x, y);
+    ds.shuffle(&mut Pcg::new(seed, 0x5f2e));
+    ds
+}
+
+/// Concentric rings: `k` circles of increasing radius with Gaussian
+/// radial noise. For d > 2 the 2-D rings are pushed through a random
+/// linear embedding into all `d` dims (signal mixed into every coordinate;
+/// per-dim min-max normalization would otherwise blow pure-noise dims up
+/// to the signal scale and bury the manifold).
+pub fn concentric_rings(n: usize, d: usize, k: usize, noise: f64, seed: u64) -> Dataset {
+    assert!(d >= 2);
+    let mut rng = Pcg::new(seed, 0x0717);
+    // random 2→d embedding (identity when d == 2)
+    let mut embed = Mat::zeros(2, d);
+    if d == 2 {
+        embed.set(0, 0, 1.0);
+        embed.set(1, 1, 1.0);
+    } else {
+        for v in embed.data.iter_mut() {
+            *v = rng.normal() / (2f64).sqrt();
+        }
+    }
+    let mut x = Mat::zeros(n, d);
+    let mut y = vec![0usize; n];
+    for i in 0..n {
+        let c = i % k;
+        y[i] = c;
+        let radius = 1.0 + 2.0 * c as f64 + noise * rng.normal();
+        let theta = rng.range_f64(0.0, 2.0 * std::f64::consts::PI);
+        let (p, q) = (radius * theta.cos(), radius * theta.sin());
+        let row = x.row_mut(i);
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = p * embed.at(0, j) + q * embed.at(1, j) + noise * rng.normal();
+        }
+    }
+    let mut ds = Dataset::new("rings", x, y);
+    ds.shuffle(&mut Pcg::new(seed, 0x5f3e));
+    ds
+}
+
+/// Blobs generated in a `latent`-dimensional subspace, pushed through a
+/// random linear embedding into `d` dims, with optional sinusoidal warp —
+/// the high-dimensional benchmarks (mnist-like) use this.
+#[allow(clippy::too_many_arguments)]
+pub fn latent_blobs(
+    n: usize,
+    d: usize,
+    k: usize,
+    latent: usize,
+    sep: f64,
+    noise: f64,
+    warp: f64,
+    class_weights: Option<&[f64]>,
+    seed: u64,
+) -> Dataset {
+    let mut rng = Pcg::new(seed, 0x1a7e);
+    let mut centers = Mat::zeros(k, latent);
+    for v in centers.data.iter_mut() {
+        *v = rng.normal() * sep;
+    }
+    // random embedding latent → d
+    let mut embed = Mat::zeros(latent, d);
+    for v in embed.data.iter_mut() {
+        *v = rng.normal() / (latent as f64).sqrt();
+    }
+    // cumulative class distribution
+    let weights: Vec<f64> = match class_weights {
+        Some(w) => {
+            assert_eq!(w.len(), k);
+            let s: f64 = w.iter().sum();
+            w.iter().map(|v| v / s).collect()
+        }
+        None => vec![1.0 / k as f64; k],
+    };
+    let mut cum = vec![0.0; k];
+    let mut acc = 0.0;
+    for (c, w) in weights.iter().enumerate() {
+        acc += w;
+        cum[c] = acc;
+    }
+    let mut x = Mat::zeros(n, d);
+    let mut y = vec![0usize; n];
+    let mut z = vec![0.0; latent];
+    for i in 0..n {
+        let u = rng.f64();
+        let c = cum.iter().position(|&cv| u <= cv).unwrap_or(k - 1);
+        y[i] = c;
+        for (l, zv) in z.iter_mut().enumerate() {
+            *zv = centers.at(c, l) + rng.normal();
+        }
+        let row = x.row_mut(i);
+        for (j, v) in row.iter_mut().enumerate() {
+            let mut s = 0.0;
+            for (l, zv) in z.iter().enumerate() {
+                s += zv * embed.at(l, j);
+            }
+            if warp > 0.0 {
+                s += warp * (s * 1.7).sin();
+            }
+            *v = s + noise * rng.normal();
+        }
+    }
+    Dataset::new("latent_blobs", x, y)
+}
+
+/// Benchmark descriptors matching the paper's Table 1 (plus SUSY, §5.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BenchSpec {
+    pub name: &'static str,
+    pub k: usize,
+    pub d: usize,
+    pub n: usize,
+}
+
+/// Table 1 of the paper.
+pub const PAPER_BENCHMARKS: [BenchSpec; 8] = [
+    BenchSpec { name: "pendigits", k: 10, d: 16, n: 10_992 },
+    BenchSpec { name: "letter", k: 26, d: 16, n: 15_500 },
+    BenchSpec { name: "mnist", k: 10, d: 780, n: 70_000 },
+    BenchSpec { name: "acoustic", k: 3, d: 50, n: 98_528 },
+    BenchSpec { name: "ijcnn1", k: 2, d: 22, n: 126_701 },
+    BenchSpec { name: "cod_rna", k: 2, d: 8, n: 321_054 },
+    BenchSpec { name: "covtype-mult", k: 7, d: 54, n: 581_012 },
+    BenchSpec { name: "poker", k: 10, d: 10, n: 1_025_010 },
+];
+
+/// SUSY (used by the Fig. 4 scalability sweep).
+pub const SUSY: BenchSpec = BenchSpec { name: "susy", k: 2, d: 18, n: 4_000_000 };
+
+pub fn spec_by_name(name: &str) -> Option<BenchSpec> {
+    if name == "susy" {
+        return Some(SUSY);
+    }
+    PAPER_BENCHMARKS.iter().copied().find(|s| s.name == name)
+}
+
+/// Build the synthetic stand-in for a paper benchmark. `scale` divides N
+/// (1 = full paper size); min 64 points per class are kept. All outputs
+/// are min-max normalized to the unit box.
+pub fn paper_benchmark(name: &str, scale: usize, seed: u64) -> Dataset {
+    let spec = spec_by_name(name)
+        .unwrap_or_else(|| panic!("unknown benchmark '{name}' (see Table 1 names)"));
+    let n = (spec.n / scale.max(1)).max(64 * spec.k);
+    let (d, k) = (spec.d, spec.k);
+    let mut ds = match name {
+        // pendigits: well-separated digit strokes — easy for everyone.
+        "pendigits" => latent_blobs(n, d, k, 6, 2.2, 0.35, 0.5, None, seed),
+        // letter: 26 moderately overlapping classes — K-means ranks poorly.
+        "letter" => latent_blobs(n, d, k, 8, 1.3, 0.4, 0.7, None, seed),
+        // mnist: 10 classes in a low-dim manifold inside 780 dims.
+        "mnist" => latent_blobs(n, d, k, 10, 1.7, 0.3, 0.9, None, seed),
+        // acoustic: 3 broad overlapping sources.
+        "acoustic" => latent_blobs(n, d, k, 5, 1.0, 0.5, 0.3, Some(&[3.0, 2.0, 1.5]), seed),
+        // ijcnn1: binary, non-convex (ring + core) — SC territory.
+        "ijcnn1" => {
+            let mut ds = concentric_rings(n, d, k, 0.09, seed);
+            ds.name = "ijcnn1".into();
+            ds
+        }
+        // cod_rna: binary, imbalanced 2:1, mild nonlinearity.
+        "cod_rna" => latent_blobs(n, d, k, 4, 1.1, 0.45, 0.8, Some(&[2.0, 1.0]), seed),
+        // covtype-mult: 7 heavily overlapping classes — tiny eigengaps
+        // (the Fig. 3 "clustered spectrum" stress case).
+        "covtype-mult" => latent_blobs(
+            n,
+            d,
+            k,
+            6,
+            0.9,
+            0.35,
+            0.2,
+            Some(&[8.0, 10.0, 2.0, 1.0, 0.6, 1.2, 0.9]),
+            seed,
+        ),
+        // poker: hands are near-uniform — almost no geometric structure;
+        // every method lands in the same place (paper: scores all ≈ equal).
+        "poker" => latent_blobs(n, d, k, 2, 0.25, 0.9, 0.0, None, seed),
+        // susy: 2 broad classes, mild overlap (scalability driver only).
+        "susy" => latent_blobs(n, d, k, 4, 1.6, 0.3, 0.1, None, seed),
+        other => panic!("unhandled benchmark '{other}'"),
+    };
+    ds.name = spec.name.into();
+    ds.minmax_normalize();
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_match_table1() {
+        assert_eq!(PAPER_BENCHMARKS.len(), 8);
+        let poker = spec_by_name("poker").unwrap();
+        assert_eq!((poker.n, poker.d, poker.k), (1_025_010, 10, 10));
+        let mnist = spec_by_name("mnist").unwrap();
+        assert_eq!((mnist.n, mnist.d, mnist.k), (70_000, 780, 10));
+        assert!(spec_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn benchmark_shapes_and_normalization() {
+        for spec in &PAPER_BENCHMARKS {
+            let ds = paper_benchmark(spec.name, 64, 7);
+            assert_eq!(ds.d(), spec.d, "{}", spec.name);
+            assert_eq!(ds.k, spec.k, "{}", spec.name);
+            assert!(ds.n() >= 64 * spec.k);
+            for i in 0..ds.n().min(50) {
+                for &v in ds.x.row(i) {
+                    assert!((0.0..=1.0).contains(&v), "{} not normalized", spec.name);
+                }
+            }
+            // every class present
+            assert!(ds.class_sizes().iter().all(|&s| s > 0), "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn moons_nonconvex_structure() {
+        let ds = two_moons(400, 0.05, 3);
+        assert_eq!(ds.k, 2);
+        assert_eq!(ds.class_sizes(), vec![200, 200]);
+    }
+
+    #[test]
+    fn rings_radii_separate_classes() {
+        let ds = concentric_rings(300, 2, 2, 0.05, 5);
+        for i in 0..ds.n() {
+            let r = (ds.x.at(i, 0).powi(2) + ds.x.at(i, 1).powi(2)).sqrt();
+            let expected = 1.0 + 2.0 * ds.y[i] as f64;
+            assert!((r - expected).abs() < 1.0, "r {r} vs class {}", ds.y[i]);
+        }
+    }
+
+    #[test]
+    fn imbalance_respected() {
+        let ds = paper_benchmark("cod_rna", 512, 9);
+        let sizes = ds.class_sizes();
+        assert!(sizes[0] > sizes[1], "cod_rna should be imbalanced: {sizes:?}");
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = paper_benchmark("pendigits", 64, 11);
+        let b = paper_benchmark("pendigits", 64, 11);
+        assert_eq!(a.x.data, b.x.data);
+        assert_eq!(a.y, b.y);
+    }
+}

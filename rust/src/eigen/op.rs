@@ -1,0 +1,126 @@
+//! Operator abstraction for the iterative SVD solvers.
+//!
+//! The solvers only ever touch the matrix through block products `A·B` and
+//! `Aᵀ·B`, so the weighted RB feature matrix Ẑ (sparse CSR), dense matrices,
+//! and test operators all plug in through this trait — the paper's point
+//! that PRIMME needs no explicit form of L̂.
+
+use crate::linalg::Mat;
+use crate::sparse::Csr;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// A (possibly implicit) m×n linear operator with block apply.
+pub trait SvdOp: Sync {
+    fn nrows(&self) -> usize;
+    fn ncols(&self) -> usize;
+    /// Y = A · B, with B of shape ncols×k.
+    fn apply(&self, b: &Mat) -> Mat;
+    /// Y = Aᵀ · B, with B of shape nrows×k.
+    fn apply_t(&self, b: &Mat) -> Mat;
+    /// Diagonal of A·Aᵀ (row squared norms) if cheaply available — used by
+    /// the Davidson diagonal preconditioner.
+    fn gram_diag(&self) -> Option<Vec<f64>> {
+        None
+    }
+}
+
+impl SvdOp for Csr {
+    fn nrows(&self) -> usize {
+        self.rows
+    }
+    fn ncols(&self) -> usize {
+        self.cols
+    }
+    fn apply(&self, b: &Mat) -> Mat {
+        self.matmat(b)
+    }
+    fn apply_t(&self, b: &Mat) -> Mat {
+        self.t_matmat(b)
+    }
+    fn gram_diag(&self) -> Option<Vec<f64>> {
+        let mut d = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            d[i] = self.data[self.row_range(i)].iter().map(|v| v * v).sum();
+        }
+        Some(d)
+    }
+}
+
+impl SvdOp for Mat {
+    fn nrows(&self) -> usize {
+        self.rows
+    }
+    fn ncols(&self) -> usize {
+        self.cols
+    }
+    fn apply(&self, b: &Mat) -> Mat {
+        self.matmul(b)
+    }
+    fn apply_t(&self, b: &Mat) -> Mat {
+        self.t_matmul(b)
+    }
+    fn gram_diag(&self) -> Option<Vec<f64>> {
+        Some((0..self.rows).map(|i| crate::linalg::dot(self.row(i), self.row(i))).collect())
+    }
+}
+
+/// Wrapper that counts block-applies (each apply of width k counts k
+/// matvecs, matching how the paper reports solver iterations m).
+pub struct CountingOp<'a, O: SvdOp + ?Sized> {
+    pub inner: &'a O,
+    matvecs: AtomicUsize,
+}
+
+impl<'a, O: SvdOp + ?Sized> CountingOp<'a, O> {
+    pub fn new(inner: &'a O) -> Self {
+        CountingOp { inner, matvecs: AtomicUsize::new(0) }
+    }
+
+    pub fn matvecs(&self) -> usize {
+        self.matvecs.load(Ordering::Relaxed)
+    }
+}
+
+impl<'a, O: SvdOp + ?Sized> SvdOp for CountingOp<'a, O> {
+    fn nrows(&self) -> usize {
+        self.inner.nrows()
+    }
+    fn ncols(&self) -> usize {
+        self.inner.ncols()
+    }
+    fn apply(&self, b: &Mat) -> Mat {
+        self.matvecs.fetch_add(b.cols, Ordering::Relaxed);
+        self.inner.apply(b)
+    }
+    fn apply_t(&self, b: &Mat) -> Mat {
+        self.matvecs.fetch_add(b.cols, Ordering::Relaxed);
+        self.inner.apply_t(b)
+    }
+    fn gram_diag(&self) -> Option<Vec<f64>> {
+        self.inner.gram_diag()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counting_wrapper_counts() {
+        let a = Mat::from_vec(3, 2, vec![1., 0., 0., 1., 1., 1.]);
+        let c = CountingOp::new(&a);
+        let b = Mat::from_vec(2, 4, vec![0.0; 8]);
+        let _ = c.apply(&b);
+        let b2 = Mat::from_vec(3, 2, vec![0.0; 6]);
+        let _ = c.apply_t(&b2);
+        assert_eq!(c.matvecs(), 6);
+    }
+
+    #[test]
+    fn gram_diag_matches() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 2., 0., 3., 4.]);
+        assert_eq!(a.gram_diag().unwrap(), vec![9.0, 25.0]);
+        let z = Csr::from_rows(2, 3, vec![vec![(0, 1.0), (1, 2.0), (2, 2.0)], vec![(1, 3.0), (2, 4.0)]]);
+        assert_eq!(z.gram_diag().unwrap(), vec![9.0, 25.0]);
+    }
+}

@@ -1,0 +1,147 @@
+//! Exact kernel machinery: Gaussian and Laplacian similarity functions,
+//! blocked dense kernel panels (the `O(N²d)` path the paper is replacing),
+//! full kernel matrices for the exact-SC baseline, and cross-kernel blocks
+//! for Nyström / landmark methods.
+
+use crate::config::Kernel;
+use crate::linalg::{l1dist, sqdist, Mat};
+use crate::util::threads::parallel_rows_mut;
+
+impl Kernel {
+    /// Evaluate k(a, b).
+    #[inline]
+    pub fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
+        match self {
+            Kernel::Gaussian { sigma } => (-sqdist(a, b) / (2.0 * sigma * sigma)).exp(),
+            Kernel::Laplacian { sigma } => (-l1dist(a, b) / sigma).exp(),
+        }
+    }
+}
+
+/// Dense kernel block K[i][j] = k(x_i, y_j) for row sets `x` (m×d) and
+/// `y` (p×d); parallel over rows of the output.
+pub fn kernel_block(kernel: Kernel, x: &Mat, y: &Mat) -> Mat {
+    assert_eq!(x.cols, y.cols, "dimension mismatch");
+    let (m, p) = (x.rows, y.rows);
+    let mut out = Mat::zeros(m, p);
+    parallel_rows_mut(&mut out.data, p, |row0, chunk| {
+        for (r, orow) in chunk.chunks_mut(p).enumerate() {
+            let xi = x.row(row0 + r);
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o = kernel.eval(xi, y.row(j));
+            }
+        }
+    });
+    out
+}
+
+/// Full symmetric kernel matrix W (the exact-SC similarity graph);
+/// exploits symmetry, O(N²d/2).
+pub fn kernel_matrix(kernel: Kernel, x: &Mat) -> Mat {
+    let n = x.rows;
+    let mut w = Mat::zeros(n, n);
+    // parallel over rows; each row i computes j <= i, mirror later
+    parallel_rows_mut(&mut w.data, n, |row0, chunk| {
+        for (r, wrow) in chunk.chunks_mut(n).enumerate() {
+            let i = row0 + r;
+            let xi = x.row(i);
+            for (j, wv) in wrow.iter_mut().enumerate().take(i + 1) {
+                *wv = kernel.eval(xi, x.row(j));
+            }
+        }
+    });
+    // mirror lower triangle to upper
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let v = w.at(j, i);
+            w.set(i, j, v);
+        }
+    }
+    w
+}
+
+/// Median-heuristic bandwidth: median pairwise distance on a subsample
+/// (the paper selects σ by cross-validation in [0.01, 100]; the median
+/// heuristic is our automatic default, override with `--sigma`).
+pub fn median_heuristic_sigma(kernel_name: &str, x: &Mat, seed: u64) -> f64 {
+    let n = x.rows;
+    let sample = 200.min(n);
+    let mut rng = crate::util::rng::Pcg::new(seed, 0x51337);
+    let idx = rng.sample_indices(n, sample);
+    let mut dists = Vec::with_capacity(sample * (sample - 1) / 2);
+    for a in 0..sample {
+        for b in 0..a {
+            let d = match kernel_name {
+                "laplacian" => l1dist(x.row(idx[a]), x.row(idx[b])),
+                _ => sqdist(x.row(idx[a]), x.row(idx[b])).sqrt(),
+            };
+            dists.push(d);
+        }
+    }
+    if dists.is_empty() {
+        return 1.0;
+    }
+    dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = dists[dists.len() / 2];
+    if med > 0.0 {
+        med
+    } else {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn rand_data(rng: &mut Pcg, n: usize, d: usize) -> Mat {
+        Mat::from_vec(n, d, (0..n * d).map(|_| rng.f64()).collect())
+    }
+
+    #[test]
+    fn kernel_values_bounded_and_unit_diag() {
+        let mut rng = Pcg::seed(101);
+        let x = rand_data(&mut rng, 40, 6);
+        for kernel in [Kernel::Gaussian { sigma: 0.7 }, Kernel::Laplacian { sigma: 0.7 }] {
+            let w = kernel_matrix(kernel, &x);
+            for i in 0..40 {
+                assert!((w.at(i, i) - 1.0).abs() < 1e-12);
+                for j in 0..40 {
+                    assert!(w.at(i, j) > 0.0 && w.at(i, j) <= 1.0 + 1e-12);
+                    assert!((w.at(i, j) - w.at(j, i)).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_matches_matrix() {
+        let mut rng = Pcg::seed(102);
+        let x = rand_data(&mut rng, 25, 4);
+        let k = Kernel::Gaussian { sigma: 1.3 };
+        let w = kernel_matrix(k, &x);
+        let b = kernel_block(k, &x, &x);
+        assert!(w.sub(&b).frob_norm() < 1e-12);
+    }
+
+    #[test]
+    fn known_values() {
+        let g = Kernel::Gaussian { sigma: 1.0 };
+        assert!((g.eval(&[0.0], &[2.0]) - (-2.0f64).exp()).abs() < 1e-12);
+        let l = Kernel::Laplacian { sigma: 2.0 };
+        assert!((l.eval(&[0.0, 0.0], &[1.0, -1.0]) - (-1.0f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_sigma_positive_scales() {
+        let mut rng = Pcg::seed(103);
+        let x = rand_data(&mut rng, 100, 3);
+        let s1 = median_heuristic_sigma("gaussian", &x, 1);
+        assert!(s1 > 0.0);
+        let mut x10 = x.clone();
+        x10.scale(10.0);
+        let s10 = median_heuristic_sigma("gaussian", &x10, 1);
+        assert!(s10 > 5.0 * s1, "sigma should scale with the data: {s1} -> {s10}");
+    }
+}

@@ -1,0 +1,361 @@
+//! K-means substrate: k-means++ seeding, Lloyd iterations with replicates
+//! (the paper's protocol: Matlab kmeans, 10 replicates), a mini-batch mode
+//! for multi-million-point runs, and a pluggable assignment engine so the
+//! XLA runtime can offload the distance computation (the `NK²t` hot spot).
+
+use crate::linalg::{sqdist, Mat};
+use crate::util::rng::Pcg;
+use crate::util::threads::{num_threads, parallel_rows_mut};
+
+/// Assignment engine: nearest centroid per row. The native engine runs
+/// threaded Rust; `runtime::XlaAssign` offloads to an AOT Pallas kernel.
+/// Called from the coordinator thread only (implementations parallelize
+/// internally), so no `Sync` bound — the XLA engine holds a device cache.
+pub trait AssignEngine {
+    /// Returns (labels, squared distance to the assigned centroid).
+    fn assign(&self, x: &Mat, centroids: &Mat) -> (Vec<u32>, Vec<f64>);
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Threaded pure-Rust assignment.
+pub struct NativeAssign;
+
+impl AssignEngine for NativeAssign {
+    fn assign(&self, x: &Mat, centroids: &Mat) -> (Vec<u32>, Vec<f64>) {
+        let n = x.rows;
+        let k = centroids.rows;
+        let mut labels = vec![0u32; n];
+        let mut dists = vec![0.0f64; n];
+        // process rows in parallel; labels+dists written via zipped panels
+        let mut fused: Vec<(u32, f64)> = vec![(0, 0.0); n];
+        parallel_rows_mut(&mut fused, 1, |row0, chunk| {
+            for (t, slot) in chunk.iter_mut().enumerate() {
+                let xi = x.row(row0 + t);
+                let mut best = 0u32;
+                let mut bd = f64::INFINITY;
+                for c in 0..k {
+                    let d = sqdist(xi, centroids.row(c));
+                    if d < bd {
+                        bd = d;
+                        best = c as u32;
+                    }
+                }
+                *slot = (best, bd);
+            }
+        });
+        for (i, (l, d)) in fused.into_iter().enumerate() {
+            labels[i] = l;
+            dists[i] = d;
+        }
+        (labels, dists)
+    }
+}
+
+/// K-means options.
+#[derive(Clone, Debug)]
+pub struct KmeansOpts {
+    pub k: usize,
+    pub replicates: usize,
+    pub max_iters: usize,
+    /// Relative inertia improvement below which Lloyd stops.
+    pub tol: f64,
+    pub seed: u64,
+    /// Mini-batch size; None = full-batch Lloyd.
+    pub batch: Option<usize>,
+}
+
+impl KmeansOpts {
+    pub fn new(k: usize) -> Self {
+        KmeansOpts { k, replicates: 10, max_iters: 100, tol: 1e-6, seed: 42, batch: None }
+    }
+}
+
+/// K-means output.
+#[derive(Clone, Debug)]
+pub struct KmeansResult {
+    pub labels: Vec<u32>,
+    pub centroids: Mat,
+    /// Sum of squared distances to assigned centroids.
+    pub inertia: f64,
+    /// Total Lloyd iterations across the winning replicate.
+    pub iterations: usize,
+}
+
+/// k-means++ seeding (Arthur & Vassilvitskii).
+pub fn kmeanspp_init(x: &Mat, k: usize, rng: &mut Pcg) -> Mat {
+    let n = x.rows;
+    assert!(k >= 1 && n >= 1);
+    let mut centroids = Mat::zeros(k.min(n), x.cols);
+    let first = rng.below(n);
+    centroids.row_mut(0).copy_from_slice(x.row(first));
+    let mut d2: Vec<f64> = (0..n).map(|i| sqdist(x.row(i), centroids.row(0))).collect();
+    for c in 1..k.min(n) {
+        let total: f64 = d2.iter().sum();
+        let pick = if total <= 0.0 {
+            rng.below(n)
+        } else {
+            let mut target = rng.f64() * total;
+            let mut idx = n - 1;
+            for (i, &w) in d2.iter().enumerate() {
+                if target < w {
+                    idx = i;
+                    break;
+                }
+                target -= w;
+            }
+            idx
+        };
+        centroids.row_mut(c).copy_from_slice(x.row(pick));
+        // update distances
+        for i in 0..n {
+            let d = sqdist(x.row(i), centroids.row(c));
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+    centroids
+}
+
+/// Centroid update: mean of assigned points (parallel partial sums).
+/// Returns per-cluster counts.
+fn update_centroids(x: &Mat, labels: &[u32], k: usize, centroids: &mut Mat) -> Vec<usize> {
+    let d = x.cols;
+    let nt = num_threads();
+    let chunk = x.rows.div_ceil(nt).max(1);
+    let partials: Vec<(Mat, Vec<usize>)> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..nt {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(x.rows);
+            if lo >= hi {
+                break;
+            }
+            handles.push(s.spawn(move || {
+                let mut sums = Mat::zeros(k, d);
+                let mut counts = vec![0usize; k];
+                for i in lo..hi {
+                    let c = labels[i] as usize;
+                    counts[c] += 1;
+                    let row = x.row(i);
+                    let srow = sums.row_mut(c);
+                    for (sv, xv) in srow.iter_mut().zip(row.iter()) {
+                        *sv += *xv;
+                    }
+                }
+                (sums, counts)
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut sums = Mat::zeros(k, d);
+    let mut counts = vec![0usize; k];
+    for (ps, pc) in partials {
+        sums.add_assign(&ps);
+        for (c, p) in counts.iter_mut().zip(pc.iter()) {
+            *c += *p;
+        }
+    }
+    for c in 0..k {
+        if counts[c] > 0 {
+            let inv = 1.0 / counts[c] as f64;
+            let srow = sums.row(c).to_vec();
+            for (cv, sv) in centroids.row_mut(c).iter_mut().zip(srow.iter()) {
+                *cv = sv * inv;
+            }
+        }
+    }
+    counts
+}
+
+/// One full-batch Lloyd run from a given init.
+fn lloyd(
+    x: &Mat,
+    mut centroids: Mat,
+    opts: &KmeansOpts,
+    engine: &dyn AssignEngine,
+    rng: &mut Pcg,
+) -> KmeansResult {
+    let k = centroids.rows;
+    let mut prev_inertia = f64::INFINITY;
+    let mut labels = vec![0u32; x.rows];
+    let mut iterations = 0;
+    for _it in 0..opts.max_iters {
+        iterations += 1;
+        let (lab, dists) = engine.assign(x, &centroids);
+        labels = lab;
+        let inertia: f64 = dists.iter().sum();
+        let counts = update_centroids(x, &labels, k, &mut centroids);
+        // reseed empty clusters at the farthest points
+        for c in 0..k {
+            if counts[c] == 0 {
+                let far = dists
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or_else(|| rng.below(x.rows));
+                centroids.row_mut(c).copy_from_slice(x.row(far));
+            }
+        }
+        if prev_inertia.is_finite() && (prev_inertia - inertia) <= opts.tol * prev_inertia.abs() {
+            break;
+        }
+        prev_inertia = inertia;
+    }
+    // final consistent assignment
+    let (lab, dists) = engine.assign(x, &centroids);
+    labels = lab;
+    let inertia = dists.iter().sum();
+    KmeansResult { labels, centroids, inertia, iterations }
+}
+
+/// Mini-batch K-means (Sculley 2010): per-batch assignment and running
+/// per-centroid learning rates. Used for the 4M-point SUSY-like run.
+fn minibatch(
+    x: &Mat,
+    mut centroids: Mat,
+    batch: usize,
+    opts: &KmeansOpts,
+    engine: &dyn AssignEngine,
+    rng: &mut Pcg,
+) -> KmeansResult {
+    let n = x.rows;
+    let k = centroids.rows;
+    let mut counts = vec![1usize; k];
+    let iters = opts.max_iters.max(10);
+    for _ in 0..iters {
+        let idx = rng.sample_indices(n, batch.min(n));
+        let xb = x.select_rows(&idx);
+        let (labels, _) = engine.assign(&xb, &centroids);
+        for (row, &c) in labels.iter().enumerate() {
+            let c = c as usize;
+            counts[c] += 1;
+            let eta = 1.0 / counts[c] as f64;
+            let xrow = xb.row(row).to_vec();
+            for (cv, xv) in centroids.row_mut(c).iter_mut().zip(xrow.iter()) {
+                *cv += eta * (xv - *cv);
+            }
+        }
+    }
+    let (labels, dists) = engine.assign(x, &centroids);
+    let inertia = dists.iter().sum();
+    KmeansResult { labels, centroids, inertia, iterations: iters }
+}
+
+/// Run K-means with replicates, keeping the lowest-inertia solution.
+pub fn kmeans(x: &Mat, opts: &KmeansOpts, engine: &dyn AssignEngine) -> KmeansResult {
+    assert!(x.rows > 0, "empty data");
+    let k = opts.k.min(x.rows);
+    let mut best: Option<KmeansResult> = None;
+    for rep in 0..opts.replicates.max(1) {
+        let mut rng = Pcg::new(opts.seed, kmeans_stream(rep));
+        let init = kmeanspp_init(x, k, &mut rng);
+        let result = match opts.batch {
+            Some(b) if b < x.rows => minibatch(x, init, b, opts, engine, &mut rng),
+            _ => lloyd(x, init, opts, engine, &mut rng),
+        };
+        let better = best.as_ref().map(|b| result.inertia < b.inertia).unwrap_or(true);
+        if better {
+            best = Some(result);
+        }
+    }
+    best.unwrap()
+}
+
+/// Per-replicate RNG stream id.
+#[inline]
+fn kmeans_stream(rep: usize) -> u64 {
+    0x6b6d_0000u64 + rep as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn three_blobs(per: usize, seed: u64) -> (Mat, Vec<u32>) {
+        let centers = [[0.0, 0.0], [6.0, 0.0], [0.0, 6.0]];
+        let mut rng = Pcg::seed(seed);
+        let n = per * 3;
+        let mut x = Mat::zeros(n, 2);
+        let mut y = vec![0u32; n];
+        for c in 0..3 {
+            for i in 0..per {
+                let row = c * per + i;
+                x.set(row, 0, centers[c][0] + 0.5 * rng.normal());
+                x.set(row, 1, centers[c][1] + 0.5 * rng.normal());
+                y[row] = c as u32;
+            }
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let (x, y) = three_blobs(100, 7);
+        let mut opts = KmeansOpts::new(3);
+        opts.replicates = 5;
+        let r = kmeans(&x, &opts, &NativeAssign);
+        // same-cluster pairs agree (label permutation invariant)
+        let mut agree = 0usize;
+        let mut total = 0usize;
+        for i in 0..300 {
+            for j in 0..i {
+                total += 1;
+                if (y[i] == y[j]) == (r.labels[i] == r.labels[j]) {
+                    agree += 1;
+                }
+            }
+        }
+        assert!(agree as f64 / total as f64 > 0.99, "pair agreement {}", agree as f64 / total as f64);
+    }
+
+    #[test]
+    fn inertia_decreases_with_k() {
+        let (x, _) = three_blobs(60, 9);
+        let mut inertias = Vec::new();
+        for k in [1usize, 2, 3, 6] {
+            let mut opts = KmeansOpts::new(k);
+            opts.replicates = 3;
+            inertias.push(kmeans(&x, &opts, &NativeAssign).inertia);
+        }
+        for w in inertias.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "inertia must not increase with k: {inertias:?}");
+        }
+    }
+
+    #[test]
+    fn k_ge_n_degenerates_cleanly() {
+        let x = Mat::from_vec(3, 1, vec![0.0, 1.0, 2.0]);
+        let mut opts = KmeansOpts::new(10);
+        opts.replicates = 1;
+        let r = kmeans(&x, &opts, &NativeAssign);
+        assert!(r.inertia < 1e-12);
+    }
+
+    #[test]
+    fn minibatch_close_to_full() {
+        let (x, _) = three_blobs(200, 11);
+        let mut full = KmeansOpts::new(3);
+        full.replicates = 3;
+        let rf = kmeans(&x, &full, &NativeAssign);
+        let mut mb = KmeansOpts::new(3);
+        mb.replicates = 3;
+        mb.batch = Some(100);
+        mb.max_iters = 60;
+        let rm = kmeans(&x, &mb, &NativeAssign);
+        assert!(rm.inertia < rf.inertia * 1.5, "minibatch {} vs full {}", rm.inertia, rf.inertia);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let (x, _) = three_blobs(50, 13);
+        let opts = KmeansOpts { replicates: 2, ..KmeansOpts::new(3) };
+        let a = kmeans(&x, &opts, &NativeAssign);
+        let b = kmeans(&x, &opts, &NativeAssign);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.inertia, b.inertia);
+    }
+}

@@ -1,0 +1,54 @@
+//! # scrb — Scalable Spectral Clustering using Random Binning features
+//!
+//! A production-shaped reproduction of *"Scalable Spectral Clustering Using
+//! Random Binning Features"* (Wu et al., KDD 2018).
+//!
+//! The crate is the Layer-3 Rust coordinator of a three-layer stack:
+//! - **L3 (this crate)**: the full clustering framework — RB feature
+//!   generation, implicit-Laplacian sparse algebra, PRIMME-style iterative
+//!   SVD, K-means, eight baseline methods, metrics, datasets, and the
+//!   experiment coordinator that regenerates every table and figure of the
+//!   paper.
+//! - **L2 (python/compile/model.py)**: JAX compute graphs for the dense hot
+//!   spots (K-means assignment, exact kernel blocks, RF feature maps).
+//! - **L1 (python/compile/kernels/)**: Pallas kernels implementing those
+//!   graphs, AOT-lowered to HLO text artifacts loaded by [`runtime`].
+//!
+//! Python never runs on the request path: `scrb` is self-contained once
+//! `artifacts/` is built, and every XLA path has a native fallback.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use scrb::cluster::{ScRb, Method};
+//! use scrb::config::PipelineConfig;
+//! use scrb::data::synth;
+//!
+//! let ds = synth::two_moons(2000, 0.06, 7);
+//! let mut cfg = PipelineConfig::default();
+//! cfg.k = 2;
+//! cfg.r = 128;
+//! let out = ScRb::new(cfg).run(&ds.x);
+//! println!("labels: {:?}", &out.labels[..10]);
+//! ```
+
+pub mod cli;
+pub mod config;
+pub mod linalg;
+pub mod sparse;
+pub mod util;
+
+// modules below are enabled as they land (scaffolding order)
+pub mod cluster;
+pub mod coordinator;
+pub mod data;
+pub mod eigen;
+pub mod kernels;
+pub mod kmeans;
+pub mod metrics;
+pub mod rb;
+pub mod rf;
+pub mod runtime;
+
+/// Crate version string.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,455 @@
+//! Dense row-major matrix substrate.
+//!
+//! All coordinator-side numerics run in f64 (the XLA artifacts compute in
+//! f32; conversion happens at the runtime boundary). Matrices here are
+//! small-to-tall: N×d data panels, N×K embeddings, k×k projected problems.
+
+use crate::util::threads::{num_threads, parallel_rows_mut};
+use std::fmt;
+
+/// Row-major dense matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(6) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:>10.4} ", self.at(i, j))?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "..." } else { "" })?;
+        }
+        if self.rows > 6 {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    #[inline(always)]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline(always)]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self.set(i, j, v[i]);
+        }
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // blocked transpose for cache friendliness
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// C = A · B (threaded over rows of C, ikj loop order).
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let mut c = Mat::zeros(m, n);
+        let a = &self.data;
+        let bd = &b.data;
+        parallel_rows_mut(&mut c.data, n, |row0, chunk| {
+            let rows_here = chunk.len() / n;
+            for r in 0..rows_here {
+                let i = row0 + r;
+                let crow = &mut chunk[r * n..(r + 1) * n];
+                for l in 0..k {
+                    let aval = a[i * k + l];
+                    if aval == 0.0 {
+                        continue;
+                    }
+                    let brow = &bd[l * n..(l + 1) * n];
+                    for (cj, bj) in crow.iter_mut().zip(brow.iter()) {
+                        *cj += aval * *bj;
+                    }
+                }
+            }
+        });
+        c
+    }
+
+    /// C = Aᵀ · B where A is self (m×k → kᵀ side), i.e. (k×m)·(m×n).
+    pub fn t_matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.rows, b.rows, "t_matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        // Accumulate per-thread partial products over row blocks of A/B.
+        let nt = num_threads();
+        let chunk = m.div_ceil(nt).max(1);
+        let partials: Vec<Mat> = std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for t in 0..nt {
+                let lo = t * chunk;
+                let hi = ((t + 1) * chunk).min(m);
+                if lo >= hi {
+                    break;
+                }
+                let a = &self.data;
+                let bd = &b.data;
+                handles.push(s.spawn(move || {
+                    let mut p = Mat::zeros(k, n);
+                    for i in lo..hi {
+                        let arow = &a[i * k..(i + 1) * k];
+                        let brow = &bd[i * n..(i + 1) * n];
+                        for (l, &av) in arow.iter().enumerate() {
+                            if av == 0.0 {
+                                continue;
+                            }
+                            let prow = &mut p.data[l * n..(l + 1) * n];
+                            for (pj, bj) in prow.iter_mut().zip(brow.iter()) {
+                                *pj += av * *bj;
+                            }
+                        }
+                    }
+                    p
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let mut c = Mat::zeros(k, n);
+        for p in partials {
+            for (cv, pv) in c.data.iter_mut().zip(p.data.iter()) {
+                *cv += *pv;
+            }
+        }
+        c
+    }
+
+    /// C = A · Bᵀ, (m×k)·(n×k)ᵀ → m×n. Dot-product form; both row-major
+    /// operands stream contiguously.
+    pub fn matmul_t(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.cols, "matmul_t shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, b.rows);
+        let mut c = Mat::zeros(m, n);
+        let a = &self.data;
+        let bd = &b.data;
+        parallel_rows_mut(&mut c.data, n, |row0, chunk| {
+            let rows_here = chunk.len() / n;
+            for r in 0..rows_here {
+                let i = row0 + r;
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut chunk[r * n..(r + 1) * n];
+                for (j, cj) in crow.iter_mut().enumerate() {
+                    let brow = &bd[j * k..(j + 1) * k];
+                    *cj = dot(arow, brow);
+                }
+            }
+        });
+        c
+    }
+
+    /// y = A · x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows).map(|i| dot(self.row(i), x)).collect()
+    }
+
+    /// y = Aᵀ · x.
+    pub fn t_matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, x.len());
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            for (yj, aij) in y.iter_mut().zip(self.row(i)) {
+                *yj += xi * *aij;
+            }
+        }
+        y
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += *b;
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(other.data.iter()).map(|(a, b)| a - b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Normalize each row to unit L2 norm (step 4 of Algorithm 2); rows with
+    /// zero norm are left as-is.
+    pub fn normalize_rows(&mut self) {
+        let cols = self.cols;
+        parallel_rows_mut(&mut self.data, cols, |_row0, chunk| {
+            for row in chunk.chunks_mut(cols) {
+                let nrm = dot(row, row).sqrt();
+                if nrm > 0.0 {
+                    for v in row {
+                        *v /= nrm;
+                    }
+                }
+            }
+        });
+    }
+
+    /// Extract a sub-block of rows [lo, hi).
+    pub fn row_block(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.rows);
+        Mat::from_vec(hi - lo, self.cols, self.data[lo * self.cols..hi * self.cols].to_vec())
+    }
+
+    /// Select a subset of rows by index.
+    pub fn select_rows(&self, idx: &[usize]) -> Mat {
+        let mut m = Mat::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            m.row_mut(r).copy_from_slice(self.row(i));
+        }
+        m
+    }
+
+    /// Keep the first `k` columns.
+    pub fn first_cols(&self, k: usize) -> Mat {
+        assert!(k <= self.cols);
+        let mut m = Mat::zeros(self.rows, k);
+        for i in 0..self.rows {
+            m.row_mut(i).copy_from_slice(&self.row(i)[..k]);
+        }
+        m
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32).collect()
+    }
+}
+
+#[inline(always)]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled: lets LLVM vectorize without relying on fast-math.
+    let n = a.len();
+    let mut s0 = 0.0;
+    let mut s1 = 0.0;
+    let mut s2 = 0.0;
+    let mut s3 = 0.0;
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[inline(always)]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * *xi;
+    }
+}
+
+#[inline(always)]
+pub fn nrm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// Squared Euclidean distance.
+#[inline(always)]
+pub fn sqdist(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for (x, y) in a.iter().zip(b.iter()) {
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+/// L1 (Manhattan) distance — the Laplacian kernel's metric.
+#[inline(always)]
+pub fn l1dist(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for (x, y) in a.iter().zip(b.iter()) {
+        s += (x - y).abs();
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn randmat(rng: &mut Pcg, r: usize, c: usize) -> Mat {
+        Mat::from_vec(r, c, (0..r * c).map(|_| rng.range_f64(-1.0, 1.0)).collect())
+    }
+
+    fn naive_mm(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for l in 0..a.cols {
+                    s += a.at(i, l) * b.at(l, j);
+                }
+                c.set(i, j, s);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Pcg::seed(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (17, 9, 23), (64, 32, 8)] {
+            let a = randmat(&mut rng, m, k);
+            let b = randmat(&mut rng, k, n);
+            let c = a.matmul(&b);
+            let c0 = naive_mm(&a, &b);
+            assert!(c.sub(&c0).frob_norm() < 1e-10, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn t_matmul_and_matmul_t_match() {
+        let mut rng = Pcg::seed(2);
+        let a = randmat(&mut rng, 40, 7);
+        let b = randmat(&mut rng, 40, 11);
+        let c1 = a.t_matmul(&b);
+        let c0 = naive_mm(&a.transpose(), &b);
+        assert!(c1.sub(&c0).frob_norm() < 1e-10);
+
+        let d = randmat(&mut rng, 13, 7);
+        let c2 = a.matmul_t(&d);
+        let c3 = naive_mm(&a, &d.transpose());
+        assert!(c2.sub(&c3).frob_norm() < 1e-10);
+    }
+
+    #[test]
+    fn matvec_roundtrip() {
+        let mut rng = Pcg::seed(3);
+        let a = randmat(&mut rng, 20, 9);
+        let x: Vec<f64> = (0..9).map(|_| rng.f64()).collect();
+        let y = a.matvec(&x);
+        let y0 = naive_mm(&a, &Mat::from_vec(9, 1, x.clone()));
+        for i in 0..20 {
+            assert!((y[i] - y0.at(i, 0)).abs() < 1e-12);
+        }
+        let z = a.t_matvec(&y);
+        let z0 = naive_mm(&a.transpose(), &Mat::from_vec(20, 1, y)).col(0);
+        for j in 0..9 {
+            assert!((z[j] - z0[j]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg::seed(4);
+        let a = randmat(&mut rng, 37, 53);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn normalize_rows_unit() {
+        let mut rng = Pcg::seed(5);
+        let mut a = randmat(&mut rng, 10, 6);
+        a.row_mut(3).fill(0.0); // zero row survives
+        a.normalize_rows();
+        for i in 0..10 {
+            let n = nrm2(a.row(i));
+            if i == 3 {
+                assert_eq!(n, 0.0);
+            } else {
+                assert!((n - 1.0).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn distances() {
+        assert_eq!(sqdist(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+        assert_eq!(l1dist(&[0.0, 0.0], &[3.0, -4.0]), 7.0);
+    }
+
+    #[test]
+    fn select_and_blocks() {
+        let a = Mat::from_vec(4, 2, vec![0., 1., 2., 3., 4., 5., 6., 7.]);
+        let s = a.select_rows(&[3, 0]);
+        assert_eq!(s.data, vec![6., 7., 0., 1.]);
+        let b = a.row_block(1, 3);
+        assert_eq!(b.data, vec![2., 3., 4., 5.]);
+        let f = a.first_cols(1);
+        assert_eq!(f.data, vec![0., 2., 4., 6.]);
+    }
+}

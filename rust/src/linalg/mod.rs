@@ -1,0 +1,15 @@
+//! Dense linear-algebra substrate: row-major matrices, blocked/threaded
+//! products, thin QR, small symmetric eigensolver, and small SVD — the
+//! building blocks under the iterative solvers and baseline methods.
+
+pub mod chol;
+pub mod dense;
+pub mod qr;
+pub mod svd_small;
+pub mod symeig;
+
+pub use chol::{cholesky_jittered, whiten_rows};
+pub use dense::{axpy, dot, l1dist, nrm2, sqdist, Mat};
+pub use qr::{orthonormalize_against, thin_qr, ThinQr};
+pub use svd_small::{svd_thin, sym_inv_sqrt, top_left_singular, Svd};
+pub use symeig::{sym_eig, SymEig};

@@ -1,0 +1,157 @@
+//! Thin QR factorization via modified Gram–Schmidt with reorthogonalization.
+//!
+//! Used to orthonormalize tall-skinny basis blocks (N×k, k ≤ ~100) inside
+//! the Davidson/Lanczos solvers. MGS with one reorthogonalization pass is
+//! numerically equivalent to Householder for these shapes (Giraud et al.)
+//! and keeps everything row-major friendly.
+
+use super::dense::{axpy, dot, nrm2, Mat};
+
+/// Result of a thin QR: `q` has orthonormal columns, `r` is upper triangular,
+/// `rank` counts the columns that survived the deflation threshold.
+pub struct ThinQr {
+    pub q: Mat,
+    pub r: Mat,
+    pub rank: usize,
+}
+
+/// Thin QR of `a` (m×n, m ≥ n). Near-dependent columns are replaced by zero
+/// columns in `q` (and flagged through `rank`), so callers can deflate.
+pub fn thin_qr(a: &Mat) -> ThinQr {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "thin_qr expects tall matrix, got {m}x{n}");
+    // work on column-major copies for contiguous column ops
+    let mut cols: Vec<Vec<f64>> = (0..n).map(|j| a.col(j)).collect();
+    let mut r = Mat::zeros(n, n);
+    let mut rank = 0usize;
+    let scale = a.frob_norm().max(f64::MIN_POSITIVE);
+    let tol = 1e-12 * scale;
+    for j in 0..n {
+        // two MGS passes against previously accepted columns
+        for _pass in 0..2 {
+            for i in 0..j {
+                let qi = &cols[i];
+                if nrm2(qi) == 0.0 {
+                    continue;
+                }
+                let proj = dot(qi, &cols[j]);
+                r.set(i, j, r.at(i, j) + proj);
+                let qi_clone = qi.clone(); // avoid simultaneous borrow
+                axpy(-proj, &qi_clone, &mut cols[j]);
+            }
+        }
+        let nrm = nrm2(&cols[j]);
+        if nrm <= tol {
+            cols[j].iter_mut().for_each(|v| *v = 0.0);
+            r.set(j, j, 0.0);
+        } else {
+            let inv = 1.0 / nrm;
+            cols[j].iter_mut().for_each(|v| *v *= inv);
+            r.set(j, j, nrm);
+            rank += 1;
+        }
+    }
+    let mut q = Mat::zeros(m, n);
+    for (j, cj) in cols.iter().enumerate() {
+        q.set_col(j, cj);
+    }
+    ThinQr { q, r, rank }
+}
+
+/// Orthonormalize the columns of `a` against the columns of `against`
+/// (if given) and against each other; returns only the independent columns.
+pub fn orthonormalize_against(a: &Mat, against: Option<&Mat>) -> Mat {
+    let (m, n) = (a.rows, a.cols);
+    let mut cols: Vec<Vec<f64>> = (0..n).map(|j| a.col(j)).collect();
+    let mut kept: Vec<Vec<f64>> = Vec::new();
+    let scale = a.frob_norm().max(f64::MIN_POSITIVE);
+    let tol = 1e-10 * scale;
+    for cj in cols.iter_mut() {
+        for _pass in 0..2 {
+            if let Some(v) = against {
+                for i in 0..v.cols {
+                    let vi = v.col(i);
+                    let proj = dot(&vi, cj);
+                    axpy(-proj, &vi, cj);
+                }
+            }
+            for qk in &kept {
+                let proj = dot(qk, cj);
+                axpy(-proj, qk, cj);
+            }
+        }
+        let nrm = nrm2(cj);
+        if nrm > tol {
+            let inv = 1.0 / nrm;
+            let mut v = cj.clone();
+            v.iter_mut().for_each(|x| *x *= inv);
+            kept.push(v);
+        }
+    }
+    let mut q = Mat::zeros(m, kept.len());
+    for (j, cj) in kept.iter().enumerate() {
+        q.set_col(j, cj);
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn randmat(rng: &mut Pcg, r: usize, c: usize) -> Mat {
+        Mat::from_vec(r, c, (0..r * c).map(|_| rng.range_f64(-1.0, 1.0)).collect())
+    }
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Pcg::seed(10);
+        let a = randmat(&mut rng, 50, 8);
+        let ThinQr { q, r, rank } = thin_qr(&a);
+        assert_eq!(rank, 8);
+        let qr = q.matmul(&r);
+        assert!(qr.sub(&a).frob_norm() < 1e-10);
+        // orthonormality
+        let g = q.t_matmul(&q);
+        assert!(g.sub(&Mat::eye(8)).frob_norm() < 1e-10);
+    }
+
+    #[test]
+    fn qr_detects_rank_deficiency() {
+        let mut rng = Pcg::seed(11);
+        let mut a = randmat(&mut rng, 30, 5);
+        let c0 = a.col(0);
+        let c1 = a.col(1);
+        let dep: Vec<f64> = c0.iter().zip(&c1).map(|(x, y)| 2.0 * x - y).collect();
+        a.set_col(4, &dep);
+        let qr = thin_qr(&a);
+        assert_eq!(qr.rank, 4);
+        assert_eq!(qr.r.at(4, 4), 0.0);
+    }
+
+    #[test]
+    fn ortho_against_subspace() {
+        let mut rng = Pcg::seed(12);
+        let v = thin_qr(&randmat(&mut rng, 40, 3)).q;
+        let a = randmat(&mut rng, 40, 4);
+        let q = orthonormalize_against(&a, Some(&v));
+        assert_eq!(q.cols, 4);
+        // orthogonal to v
+        let cross = v.t_matmul(&q);
+        assert!(cross.frob_norm() < 1e-9);
+        // orthonormal among themselves
+        let g = q.t_matmul(&q);
+        assert!(g.sub(&Mat::eye(4)).frob_norm() < 1e-9);
+    }
+
+    #[test]
+    fn ortho_drops_dependent() {
+        let mut rng = Pcg::seed(13);
+        let v = thin_qr(&randmat(&mut rng, 25, 4)).q;
+        // columns that live inside span(v) must vanish
+        let inside = v.matmul(&randmat(&mut rng, 4, 2));
+        let q = orthonormalize_against(&inside, Some(&v));
+        assert_eq!(q.cols, 0);
+    }
+}

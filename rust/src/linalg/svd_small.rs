@@ -1,0 +1,138 @@
+//! Dense SVD for small/skinny matrices via the Gram-matrix route:
+//! A = U Σ Vᵀ with AᵀA = V Σ² Vᵀ (n ≤ ~500 columns). Used by the Nyström
+//! baseline, reference checks for the iterative solvers, and tiny exact-SC
+//! problems in tests.
+
+use super::dense::Mat;
+use super::symeig::sym_eig;
+
+/// Thin SVD result; singular values descending.
+pub struct Svd {
+    pub u: Mat,
+    pub s: Vec<f64>,
+    pub v: Mat,
+}
+
+/// Thin SVD of `a` (m×n). Computes eig of the smaller Gram matrix, so cost
+/// is O(min(m,n)³ + mn·min(m,n)).
+pub fn svd_thin(a: &Mat) -> Svd {
+    let (m, n) = (a.rows, a.cols);
+    if m >= n {
+        // AᵀA = V Σ² Vᵀ; U = A V Σ⁻¹
+        let g = a.t_matmul(a); // n×n
+        let e = sym_eig(&g);
+        // descending order
+        let mut s = Vec::with_capacity(n);
+        let mut v = Mat::zeros(n, n);
+        for j in 0..n {
+            let src = n - 1 - j;
+            let lam = e.w[src].max(0.0);
+            s.push(lam.sqrt());
+            let col = e.v.col(src);
+            v.set_col(j, &col);
+        }
+        let av = a.matmul(&v);
+        let mut u = Mat::zeros(m, n);
+        for j in 0..n {
+            let sj = s[j];
+            if sj > 1e-300 {
+                for i in 0..m {
+                    u.set(i, j, av.at(i, j) / sj);
+                }
+            }
+        }
+        Svd { u, s, v }
+    } else {
+        // work on the transpose and swap U/V
+        let at = a.transpose();
+        let Svd { u, s, v } = svd_thin(&at);
+        Svd { u: v, s, v: u }
+    }
+}
+
+/// Top-k left singular vectors (descending), convenience wrapper.
+pub fn top_left_singular(a: &Mat, k: usize) -> (Mat, Vec<f64>) {
+    let svd = svd_thin(a);
+    let k = k.min(svd.s.len());
+    (svd.u.first_cols(k), svd.s[..k].to_vec())
+}
+
+/// Symmetric positive-semidefinite inverse square root B = A^{-1/2} with
+/// eigenvalue clamping; used by the Nyström extension W_{11}^{-1/2}.
+pub fn sym_inv_sqrt(a: &Mat, eps: f64) -> Mat {
+    let e = sym_eig(a);
+    let n = a.rows;
+    let mut scaled = Mat::zeros(n, n);
+    for j in 0..n {
+        let lam = e.w[j];
+        let f = if lam > eps { 1.0 / lam.sqrt() } else { 0.0 };
+        for i in 0..n {
+            scaled.set(i, j, e.v.at(i, j) * f);
+        }
+    }
+    scaled.matmul_t(&e.v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn randmat(rng: &mut Pcg, r: usize, c: usize) -> Mat {
+        Mat::from_vec(r, c, (0..r * c).map(|_| rng.range_f64(-1.0, 1.0)).collect())
+    }
+
+    #[test]
+    fn reconstructs_tall_and_wide() {
+        let mut rng = Pcg::seed(31);
+        for &(m, n) in &[(20usize, 5usize), (5, 20), (12, 12)] {
+            let a = randmat(&mut rng, m, n);
+            let Svd { u, s, v } = svd_thin(&a);
+            // A ≈ U diag(s) Vᵀ
+            let k = s.len();
+            let mut us = u.clone();
+            for j in 0..k {
+                for i in 0..us.rows {
+                    us.set(i, j, us.at(i, j) * s[j]);
+                }
+            }
+            let rec = us.matmul_t(&v);
+            assert!(rec.sub(&a).frob_norm() < 1e-8 * (1.0 + a.frob_norm()), "({m},{n})");
+            // descending
+            for j in 1..k {
+                assert!(s[j] <= s[j - 1] + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn singular_values_match_known() {
+        // diag(3, 2) embedded in 3x2
+        let a = Mat::from_vec(3, 2, vec![3.0, 0.0, 0.0, 2.0, 0.0, 0.0]);
+        let svd = svd_thin(&a);
+        assert!((svd.s[0] - 3.0).abs() < 1e-10);
+        assert!((svd.s[1] - 2.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn inv_sqrt_inverts() {
+        let mut rng = Pcg::seed(32);
+        let b = randmat(&mut rng, 8, 8);
+        let a = b.t_matmul(&b); // SPD (generically)
+        let is = sym_inv_sqrt(&a, 1e-12);
+        // (A^{-1/2})ᵀ A (A^{-1/2}) ≈ I
+        let t = is.t_matmul(&a).matmul(&is);
+        assert!(t.sub(&Mat::eye(8)).frob_norm() < 1e-6);
+    }
+
+    #[test]
+    fn top_left_orthonormal() {
+        let mut rng = Pcg::seed(33);
+        let a = randmat(&mut rng, 30, 10);
+        let (u, s) = top_left_singular(&a, 4);
+        assert_eq!(u.cols, 4);
+        assert_eq!(s.len(), 4);
+        let g = u.t_matmul(&u);
+        assert!(g.sub(&Mat::eye(4)).frob_norm() < 1e-8);
+    }
+}

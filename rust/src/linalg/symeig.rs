@@ -1,0 +1,167 @@
+//! Dense symmetric eigensolver (cyclic Jacobi) for the small projected
+//! problems inside Rayleigh–Ritz (k ≤ ~200). Jacobi is simple, robust, and
+//! accurate to machine precision for these sizes.
+
+use super::dense::Mat;
+
+/// Eigendecomposition A = V diag(w) Vᵀ of a symmetric matrix.
+/// `w` ascending; `v` columns are the corresponding eigenvectors.
+pub struct SymEig {
+    pub w: Vec<f64>,
+    pub v: Mat,
+}
+
+/// Cyclic Jacobi with threshold sweeps. `a` must be symmetric.
+pub fn sym_eig(a: &Mat) -> SymEig {
+    let n = a.rows;
+    assert_eq!(a.rows, a.cols, "sym_eig expects square matrix");
+    if n == 0 {
+        return SymEig { w: vec![], v: Mat::zeros(0, 0) };
+    }
+    let mut m = a.clone();
+    // symmetry check (debug builds only)
+    debug_assert!({
+        let mut ok = true;
+        for i in 0..n {
+            for j in 0..i {
+                ok &= (m.at(i, j) - m.at(j, i)).abs()
+                    <= 1e-8 * (1.0 + m.at(i, j).abs().max(m.at(j, i).abs()));
+            }
+        }
+        ok
+    });
+    let mut v = Mat::eye(n);
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        // off-diagonal Frobenius norm
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m.at(i, j) * m.at(i, j);
+            }
+        }
+        if off.sqrt() <= 1e-14 * (1.0 + m.frob_norm()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.at(p, q);
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let app = m.at(p, p);
+                let aqq = m.at(q, q);
+                // Rutishauser rotation
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    1.0 / (theta - (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // update rows/cols p and q of m
+                for i in 0..n {
+                    let aip = m.at(i, p);
+                    let aiq = m.at(i, q);
+                    m.set(i, p, c * aip - s * aiq);
+                    m.set(i, q, s * aip + c * aiq);
+                }
+                for j in 0..n {
+                    let apj = m.at(p, j);
+                    let aqj = m.at(q, j);
+                    m.set(p, j, c * apj - s * aqj);
+                    m.set(q, j, s * apj + c * aqj);
+                }
+                // accumulate rotations into v
+                for i in 0..n {
+                    let vip = v.at(i, p);
+                    let viq = v.at(i, q);
+                    v.set(i, p, c * vip - s * viq);
+                    v.set(i, q, s * vip + c * viq);
+                }
+            }
+        }
+    }
+    // extract, sort ascending
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m.at(i, i), i)).collect();
+    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let w: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+    let mut vs = Mat::zeros(n, n);
+    for (newj, (_, oldj)) in pairs.iter().enumerate() {
+        let cj = v.col(*oldj);
+        vs.set_col(newj, &cj);
+    }
+    SymEig { w, v: vs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn rand_sym(rng: &mut Pcg, n: usize) -> Mat {
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let x = rng.range_f64(-1.0, 1.0);
+                a.set(i, j, x);
+                a.set(j, i, x);
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn diagonalizes_random_symmetric() {
+        let mut rng = Pcg::seed(21);
+        for &n in &[1usize, 2, 3, 10, 40] {
+            let a = rand_sym(&mut rng, n);
+            let SymEig { w, v } = sym_eig(&a);
+            // A v_i = w_i v_i
+            for j in 0..n {
+                let vj = v.col(j);
+                let av = a.matvec(&vj);
+                for i in 0..n {
+                    assert!(
+                        (av[i] - w[j] * vj[i]).abs() < 1e-9,
+                        "n={n} j={j}: residual {}",
+                        (av[i] - w[j] * vj[i]).abs()
+                    );
+                }
+            }
+            // sorted ascending
+            for j in 1..n {
+                assert!(w[j] >= w[j - 1]);
+            }
+            // orthonormal V
+            let g = v.t_matmul(&v);
+            assert!(g.sub(&Mat::eye(n)).frob_norm() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn known_eigenvalues() {
+        // [[2,1],[1,2]] -> eigenvalues 1 and 3
+        let a = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let e = sym_eig(&a);
+        assert!((e.w[0] - 1.0).abs() < 1e-12);
+        assert!((e.w[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diagonal_passthrough() {
+        let a = Mat::from_vec(3, 3, vec![3.0, 0.0, 0.0, 0.0, -1.0, 0.0, 0.0, 0.0, 2.0]);
+        let e = sym_eig(&a);
+        assert_eq!(e.w.iter().map(|x| x.round() as i64).collect::<Vec<_>>(), vec![-1, 2, 3]);
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let mut rng = Pcg::seed(22);
+        let a = rand_sym(&mut rng, 25);
+        let tr: f64 = (0..25).map(|i| a.at(i, i)).sum();
+        let e = sym_eig(&a);
+        assert!((e.w.iter().sum::<f64>() - tr).abs() < 1e-9);
+    }
+}

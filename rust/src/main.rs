@@ -1,0 +1,234 @@
+//! `scrb` — CLI for the SC_RB reproduction.
+//!
+//! Commands:
+//!   scrb info                         environment + artifact status
+//!   scrb run <dataset> [opts]         one method on one benchmark
+//!   scrb table <1|2|3> [opts]         regenerate a paper table
+//!   scrb fig <2|3|4|5|theory> [opts]  regenerate a paper figure's data
+//!
+//! Common options: --method NAME --r N --sigma S --kernel laplacian|gaussian
+//! --k K --seed S --solver davidson|lanczos --engine native|xla|auto
+//! --scale DIV (dataset size divisor; --full = paper sizes) --verbose
+//! --data path.libsvm (real data instead of the synthetic stand-in)
+
+use scrb::cli::Args;
+use scrb::cluster::MethodKind;
+use scrb::config::PipelineConfig;
+use scrb::coordinator::{experiment, report, Coordinator};
+use scrb::data;
+use scrb::util::table::fnum;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<(), String> {
+    match args.command.as_str() {
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        "info" => cmd_info(args),
+        "run" => cmd_run(args),
+        "table" => cmd_table(args),
+        "fig" => cmd_fig(args),
+        other => Err(format!("unknown command '{other}' (try: scrb help)")),
+    }
+}
+
+fn print_help() {
+    println!(
+        "scrb {} — Scalable Spectral Clustering using Random Binning features (KDD'18)\n\n\
+         usage: scrb <command> [options]\n\n\
+         commands:\n\
+         \x20 info                        environment + artifacts status\n\
+         \x20 run <dataset>               run one method (default SC_RB) on a benchmark\n\
+         \x20 table <1|2|3>               regenerate a paper table\n\
+         \x20 fig <2|3|4|5|theory>        regenerate a paper figure's series\n\n\
+         common options:\n\
+         \x20 --method NAME   one of: {}\n\
+         \x20 --r N           grids/features/landmarks rank (default 256)\n\
+         \x20 --sigma S       kernel bandwidth (default: median heuristic)\n\
+         \x20 --kernel NAME   laplacian (RB-native) | gaussian\n\
+         \x20 --solver NAME   davidson (PRIMME-like) | lanczos (svds-like)\n\
+         \x20 --engine NAME   native | xla | auto (default auto)\n\
+         \x20 --scale DIV     dataset size divisor (default 64); --full = paper sizes\n\
+         \x20 --data PATH     load a real LibSVM file instead of synthetic data\n\
+         \x20 --seed N --verbose",
+        scrb::VERSION,
+        MethodKind::ALL.map(|m| m.name()).join(", ")
+    );
+}
+
+fn base_config(args: &Args) -> Result<PipelineConfig, String> {
+    let mut cfg = PipelineConfig::default();
+    cfg.apply_args(args)?;
+    Ok(cfg)
+}
+
+fn scale_of(args: &Args) -> Result<usize, String> {
+    if args.flag("full") {
+        Ok(1)
+    } else {
+        args.get_usize("scale", 64)
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<(), String> {
+    let cfg = base_config(args)?;
+    println!("scrb {}", scrb::VERSION);
+    println!("threads: {}", scrb::util::threads::num_threads());
+    println!("config: {cfg}");
+    match scrb::runtime::Manifest::load(&cfg.artifacts_dir) {
+        Ok(m) => {
+            println!("artifacts: {} entries in {}/", m.entries.len(), cfg.artifacts_dir);
+            for e in &m.entries {
+                println!(
+                    "  {:<36} kind={:?} tile={} dim={} kp={} r={}",
+                    e.name, e.kind, e.tile, e.dim, e.kp, e.r
+                );
+            }
+            match scrb::runtime::XlaRuntime::load(&cfg.artifacts_dir) {
+                Ok(_) => println!("PJRT CPU client: ok"),
+                Err(e) => println!("PJRT CPU client: FAILED ({e:#})"),
+            }
+        }
+        Err(e) => println!("artifacts: not available ({e}); run `make artifacts`"),
+    }
+    println!("benchmarks: {}", data::PAPER_BENCHMARKS.map(|s| s.name).join(", "));
+    Ok(())
+}
+
+fn load_dataset(args: &Args, coord: &Coordinator) -> Result<data::Dataset, String> {
+    if let Some(path) = args.get("data") {
+        let mut ds = data::load_libsvm(path)?;
+        ds.minmax_normalize();
+        return Ok(ds);
+    }
+    let name = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "pendigits".to_string());
+    Ok(experiment::dataset(coord, &name))
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    let cfg = base_config(args)?;
+    let method = MethodKind::parse(args.get_or("method", "sc_rb"))?;
+    let coord = Coordinator::new(cfg, scale_of(args)?);
+    let ds = load_dataset(args, &coord)?;
+    println!("dataset {} n={} d={} k={}", ds.name, ds.n(), ds.d(), ds.k);
+    let sigma = args.get_f64("sigma", f64::NAN).ok().filter(|s| s.is_finite());
+    let run = experiment::single_run(&coord, method, &ds, sigma);
+    println!(
+        "{}: acc={:.3} nmi={:.3} ri={:.3} fm={:.3} time={}s",
+        run.method.name(),
+        run.metrics.accuracy,
+        run.metrics.nmi,
+        run.metrics.rand_index,
+        run.metrics.f_measure,
+        fnum(run.secs)
+    );
+    for (stage, secs) in &run.stages {
+        println!("  {stage}: {}s", fnum(*secs));
+    }
+    if let Some(k) = run.kappa {
+        println!("  kappa: {k:.2} (Definition 1)");
+    }
+    if run.svd_matvecs > 0 {
+        println!("  svd matvecs: {} converged: {}", run.svd_matvecs, run.svd_converged);
+    }
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> Result<(), String> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("2");
+    let scale = scale_of(args)?;
+    match which {
+        "1" => {
+            println!("{}", report::render_table1(scale));
+            Ok(())
+        }
+        "2" | "3" | "23" => {
+            let cfg = base_config(args)?;
+            let coord = Coordinator::new(cfg, scale);
+            let names: Vec<String> = args.get_str_list("datasets", &experiment::TABLE_DATASETS);
+            let grid = experiment::table2_3(&coord, &names);
+            println!("Table 2: average rank scores (lower = better), R={}", coord.base_cfg.r);
+            println!("{}", report::render_table2(&grid));
+            println!("Table 3: computational time (seconds)");
+            println!("{}", report::render_table3(&grid));
+            if args.flag("detail") {
+                println!("{}", report::render_detail(&grid));
+            }
+            let json = report::grid_to_json(&grid).to_string();
+            let path = report::save("table2_3.json", &json).map_err(|e| e.to_string())?;
+            eprintln!("[saved {path}]");
+            Ok(())
+        }
+        other => Err(format!("unknown table '{other}' (1|2|3)")),
+    }
+}
+
+fn cmd_fig(args: &Args) -> Result<(), String> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("2");
+    let cfg = base_config(args)?;
+    let coord = Coordinator::new(cfg, scale_of(args)?);
+    match which {
+        "2" => {
+            let rs = args.get_usize_list("rs", &[16, 64, 256, 1024, 4096])?;
+            let rb_max = args.get_usize("rb-max-r", 1024)?;
+            let fig = experiment::fig2(&coord, &rs, rb_max);
+            println!("{}", report::render_fig2(&fig));
+        }
+        "3" => {
+            let rs = args.get_usize_list("rs", &[16, 32, 64, 128])?;
+            let series = experiment::fig3(&coord, &rs);
+            println!(
+                "{}",
+                report::render_series("Fig. 3: SVD solver comparison (covtype-like)", &series, "R")
+            );
+        }
+        "4" => {
+            let name = args.get_or("dataset", "poker").to_string();
+            let ns = args.get_usize_list("ns", &[1_000, 4_000, 16_000, 64_000, 256_000])?;
+            let r = args.get_usize("r", 256)?;
+            let points = experiment::fig4(&coord, &name, &ns, r);
+            println!("{}", report::render_fig4(&name, &points));
+        }
+        "5" => {
+            let rs = args.get_usize_list("rs", &[16, 64, 256, 1024])?;
+            let names = args.get_str_list("datasets", &["pendigits", "letter", "mnist", "acoustic"]);
+            for name in names {
+                let series = experiment::fig5(&coord, &name, &rs);
+                println!(
+                    "{}",
+                    report::render_series(
+                        &format!("Fig. 5: runtime vs R ({name})"),
+                        &series,
+                        "R"
+                    )
+                );
+            }
+        }
+        "theory" => {
+            let n = args.get_usize("n", 300)?;
+            let rs = args.get_usize_list("rs", &[4, 8, 16, 32, 64, 128, 256])?;
+            let points = experiment::theory_convergence(&coord, n, &rs);
+            println!("{}", report::render_theory(&points));
+        }
+        other => return Err(format!("unknown figure '{other}' (2|3|4|5|theory)")),
+    }
+    Ok(())
+}

@@ -1,0 +1,156 @@
+//! Hungarian (Kuhn–Munkres) algorithm, O(n³), for the optimal label
+//! mapping in the Accuracy metric (the paper's best mapping function δ).
+
+/// Maximum-weight perfect matching on a square `n×n` profit matrix.
+/// Returns `assign[row] = col`.
+pub fn max_assignment(profit: &[Vec<f64>]) -> Vec<usize> {
+    let n = profit.len();
+    if n == 0 {
+        return vec![];
+    }
+    for row in profit {
+        assert_eq!(row.len(), n, "profit matrix must be square");
+    }
+    // Convert to min-cost with non-negative entries.
+    let maxv = profit.iter().flat_map(|r| r.iter()).cloned().fold(f64::MIN, f64::max);
+    let cost: Vec<Vec<f64>> = profit.iter().map(|r| r.iter().map(|&v| maxv - v).collect()).collect();
+    min_cost_assignment(&cost)
+}
+
+/// Minimum-cost perfect matching (Jonker-style potentials formulation of
+/// the Hungarian algorithm). `assign[row] = col`.
+pub fn min_cost_assignment(cost: &[Vec<f64>]) -> Vec<usize> {
+    let n = cost.len();
+    // potentials and matching arrays are 1-indexed internally
+    let inf = f64::INFINITY;
+    let mut u = vec![0.0f64; n + 1];
+    let mut v = vec![0.0f64; n + 1];
+    let mut p = vec![0usize; n + 1]; // p[col] = row matched to col (0 = none)
+    let mut way = vec![0usize; n + 1];
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![inf; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = inf;
+            let mut j1 = 0usize;
+            for j in 1..=n {
+                if used[j] {
+                    continue;
+                }
+                let cur = cost[i0 - 1][j - 1] - u[i0] - v[j];
+                if cur < minv[j] {
+                    minv[j] = cur;
+                    way[j] = j0;
+                }
+                if minv[j] < delta {
+                    delta = minv[j];
+                    j1 = j;
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+    let mut assign = vec![0usize; n];
+    for j in 1..=n {
+        if p[j] > 0 {
+            assign[p[j] - 1] = j - 1;
+        }
+    }
+    assign
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_profit() {
+        let profit = vec![
+            vec![10.0, 0.0, 0.0],
+            vec![0.0, 10.0, 0.0],
+            vec![0.0, 0.0, 10.0],
+        ];
+        assert_eq!(max_assignment(&profit), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn permuted_profit() {
+        let profit = vec![
+            vec![0.0, 5.0, 1.0],
+            vec![7.0, 0.0, 0.0],
+            vec![0.0, 1.0, 9.0],
+        ];
+        assert_eq!(max_assignment(&profit), vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn classic_min_cost() {
+        // classic example: optimal cost 5 (0->1, 1->0, 2->2)
+        let cost = vec![
+            vec![4.0, 1.0, 3.0],
+            vec![2.0, 0.0, 5.0],
+            vec![3.0, 2.0, 2.0],
+        ];
+        let a = min_cost_assignment(&cost);
+        let total: f64 = a.iter().enumerate().map(|(i, &j)| cost[i][j]).sum();
+        assert_eq!(total, 5.0);
+    }
+
+    #[test]
+    fn brute_force_agreement_small() {
+        // compare against brute force over all permutations, n=4
+        let cost = vec![
+            vec![9.0, 2.0, 7.0, 8.0],
+            vec![6.0, 4.0, 3.0, 7.0],
+            vec![5.0, 8.0, 1.0, 8.0],
+            vec![7.0, 6.0, 9.0, 4.0],
+        ];
+        let a = min_cost_assignment(&cost);
+        let total: f64 = a.iter().enumerate().map(|(i, &j)| cost[i][j]).sum();
+        // brute force
+        let mut best = f64::INFINITY;
+        let mut perm = [0usize, 1, 2, 3];
+        permute(&mut perm, 0, &mut |p| {
+            let c: f64 = p.iter().enumerate().map(|(i, &j)| cost[i][j]).sum();
+            if c < best {
+                best = c;
+            }
+        });
+        assert_eq!(total, best);
+    }
+
+    fn permute(arr: &mut [usize; 4], k: usize, f: &mut impl FnMut(&[usize; 4])) {
+        if k == 4 {
+            f(arr);
+            return;
+        }
+        for i in k..4 {
+            arr.swap(k, i);
+            permute(arr, k + 1, f);
+            arr.swap(k, i);
+        }
+    }
+}

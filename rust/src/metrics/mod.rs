@@ -1,0 +1,311 @@
+//! Clustering quality metrics (§5 of the paper): NMI, Rand Index,
+//! F-measure, and Accuracy under the optimal (Hungarian) label mapping,
+//! plus the average-rank aggregation of Yang & Leskovec used in Table 2.
+
+pub mod hungarian;
+
+use hungarian::max_assignment;
+use std::collections::BTreeSet;
+
+/// All four paper metrics for one clustering.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ClusterMetrics {
+    pub nmi: f64,
+    pub rand_index: f64,
+    pub f_measure: f64,
+    pub accuracy: f64,
+}
+
+impl ClusterMetrics {
+    pub fn as_array(&self) -> [f64; 4] {
+        [self.nmi, self.rand_index, self.f_measure, self.accuracy]
+    }
+
+    pub const NAMES: [&'static str; 4] = ["NMI", "RI", "FM", "Acc"];
+}
+
+/// Contingency table between predicted and true labels (labels may be any
+/// usize values; they are compacted first).
+struct Contingency {
+    /// counts[a][b] = |{i : pred_i = a, true_i = b}|
+    counts: Vec<Vec<usize>>,
+    pred_sizes: Vec<usize>,
+    true_sizes: Vec<usize>,
+    n: usize,
+}
+
+fn compact(labels: &[usize]) -> (Vec<usize>, usize) {
+    let uniq: BTreeSet<usize> = labels.iter().copied().collect();
+    let map: std::collections::BTreeMap<usize, usize> =
+        uniq.iter().enumerate().map(|(i, &v)| (v, i)).collect();
+    (labels.iter().map(|v| map[v]).collect(), uniq.len())
+}
+
+fn contingency(pred: &[usize], truth: &[usize]) -> Contingency {
+    assert_eq!(pred.len(), truth.len(), "label length mismatch");
+    let n = pred.len();
+    let (p, kp) = compact(pred);
+    let (t, kt) = compact(truth);
+    let mut counts = vec![vec![0usize; kt]; kp];
+    let mut pred_sizes = vec![0usize; kp];
+    let mut true_sizes = vec![0usize; kt];
+    for i in 0..n {
+        counts[p[i]][t[i]] += 1;
+        pred_sizes[p[i]] += 1;
+        true_sizes[t[i]] += 1;
+    }
+    Contingency { counts, pred_sizes, true_sizes, n }
+}
+
+fn entropy(sizes: &[usize], n: usize) -> f64 {
+    let nf = n as f64;
+    sizes
+        .iter()
+        .filter(|&&s| s > 0)
+        .map(|&s| {
+            let p = s as f64 / nf;
+            -p * p.ln()
+        })
+        .sum()
+}
+
+/// Normalized Mutual Information: 2·I(C, C′)/(H(C)+H(C′)).
+pub fn nmi(pred: &[usize], truth: &[usize]) -> f64 {
+    let ct = contingency(pred, truth);
+    let nf = ct.n as f64;
+    let mut mi = 0.0;
+    for (a, row) in ct.counts.iter().enumerate() {
+        for (b, &c) in row.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let pab = c as f64 / nf;
+            let pa = ct.pred_sizes[a] as f64 / nf;
+            let pb = ct.true_sizes[b] as f64 / nf;
+            mi += pab * (pab / (pa * pb)).ln();
+        }
+    }
+    let h = entropy(&ct.pred_sizes, ct.n) + entropy(&ct.true_sizes, ct.n);
+    if h <= 0.0 {
+        // both clusterings are single-cluster: identical by convention
+        1.0
+    } else {
+        (2.0 * mi / h).clamp(0.0, 1.0)
+    }
+}
+
+/// Rand Index: (TP+TN) / #pairs, over all C(n,2) point pairs.
+pub fn rand_index(pred: &[usize], truth: &[usize]) -> f64 {
+    let ct = contingency(pred, truth);
+    let n = ct.n;
+    if n < 2 {
+        return 1.0;
+    }
+    let c2 = |x: usize| (x * x.saturating_sub(1)) / 2;
+    let pairs = c2(n);
+    let same_both: usize = ct.counts.iter().flat_map(|r| r.iter()).map(|&c| c2(c)).sum();
+    let same_pred: usize = ct.pred_sizes.iter().map(|&s| c2(s)).sum();
+    let same_true: usize = ct.true_sizes.iter().map(|&s| c2(s)).sum();
+    // TP = same_both; FP = same_pred − TP; FN = same_true − TP;
+    // TN = pairs − TP − FP − FN.
+    let tp = same_both;
+    let fp = same_pred - tp;
+    let fnn = same_true - tp;
+    let tn = pairs - tp - fp - fnn;
+    (tp + tn) as f64 / pairs as f64
+}
+
+/// F-measure: mean over predicted clusters of the harmonic mean of
+/// precision/recall against each cluster's best-matching true class.
+pub fn f_measure(pred: &[usize], truth: &[usize]) -> f64 {
+    let ct = contingency(pred, truth);
+    if ct.counts.is_empty() {
+        return 0.0;
+    }
+    let mut total = 0.0;
+    for (a, row) in ct.counts.iter().enumerate() {
+        let mut best = 0.0f64;
+        for (b, &c) in row.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let prec = c as f64 / ct.pred_sizes[a] as f64;
+            let rec = c as f64 / ct.true_sizes[b] as f64;
+            let f = 2.0 * prec * rec / (prec + rec);
+            best = best.max(f);
+        }
+        total += best;
+    }
+    total / ct.counts.len() as f64
+}
+
+/// Accuracy: fraction of points whose predicted label equals the true
+/// label under the optimal one-to-one mapping (Hungarian on the padded
+/// contingency table).
+pub fn accuracy(pred: &[usize], truth: &[usize]) -> f64 {
+    let ct = contingency(pred, truth);
+    let k = ct.counts.len().max(ct.true_sizes.len());
+    // padded square profit matrix
+    let mut profit = vec![vec![0.0f64; k]; k];
+    for (a, row) in ct.counts.iter().enumerate() {
+        for (b, &c) in row.iter().enumerate() {
+            profit[a][b] = c as f64;
+        }
+    }
+    let assign = max_assignment(&profit);
+    let matched: f64 = assign
+        .iter()
+        .enumerate()
+        .map(|(a, &b)| if a < ct.counts.len() && b < ct.true_sizes.len() {
+            ct.counts[a][b] as f64
+        } else {
+            0.0
+        })
+        .sum();
+    matched / ct.n as f64
+}
+
+/// All four metrics at once.
+pub fn all_metrics(pred: &[usize], truth: &[usize]) -> ClusterMetrics {
+    ClusterMetrics {
+        nmi: nmi(pred, truth),
+        rand_index: rand_index(pred, truth),
+        f_measure: f_measure(pred, truth),
+        accuracy: accuracy(pred, truth),
+    }
+}
+
+/// Average-rank aggregation (Yang & Leskovec 2015, as used for Table 2):
+/// for each metric, rank the methods (1 = best, ties share the mean rank),
+/// then average each method's ranks across metrics. Lower is better.
+/// `scores[m]` holds method m's metric array; NaN = method did not run
+/// (ranked last).
+pub fn average_rank_scores(scores: &[ClusterMetrics]) -> Vec<f64> {
+    let n = scores.len();
+    let mut rank_sum = vec![0.0f64; n];
+    for metric_idx in 0..4 {
+        let vals: Vec<f64> = scores.iter().map(|s| s.as_array()[metric_idx]).collect();
+        let ranks = rank_descending(&vals);
+        for (r, acc) in ranks.iter().zip(rank_sum.iter_mut()) {
+            *acc += *r;
+        }
+    }
+    rank_sum.iter().map(|s| s / 4.0).collect()
+}
+
+/// Ranks with 1 = largest value; ties get the mean of their positions;
+/// NaN ranks after everything.
+pub fn rank_descending(vals: &[f64]) -> Vec<f64> {
+    let n = vals.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| {
+        let va = vals[a];
+        let vb = vals[b];
+        match (va.is_nan(), vb.is_nan()) {
+            (true, true) => std::cmp::Ordering::Equal,
+            (true, false) => std::cmp::Ordering::Greater,
+            (false, true) => std::cmp::Ordering::Less,
+            _ => vb.partial_cmp(&va).unwrap(),
+        }
+    });
+    let mut ranks = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        let vi = vals[idx[i]];
+        while j + 1 < n && (vals[idx[j + 1]] == vi || (vals[idx[j + 1]].is_nan() && vi.is_nan())) {
+            j += 1;
+        }
+        let mean_rank = (i + j) as f64 / 2.0 + 1.0;
+        for &slot in idx.iter().take(j + 1).skip(i) {
+            ranks[slot] = mean_rank;
+        }
+        i = j + 1;
+    }
+    ranks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_clustering_scores_one() {
+        let y = vec![0, 0, 1, 1, 2, 2];
+        let m = all_metrics(&y, &y);
+        assert!((m.nmi - 1.0).abs() < 1e-12);
+        assert!((m.rand_index - 1.0).abs() < 1e-12);
+        assert!((m.f_measure - 1.0).abs() < 1e-12);
+        assert!((m.accuracy - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn permutation_invariant() {
+        let truth = vec![0, 0, 1, 1, 2, 2];
+        let pred = vec![2, 2, 0, 0, 1, 1]; // same partition, renamed
+        let m = all_metrics(&pred, &truth);
+        assert!((m.accuracy - 1.0).abs() < 1e-12);
+        assert!((m.nmi - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_clustering_scores_low() {
+        // deterministic "random" labels
+        let truth: Vec<usize> = (0..400).map(|i| i % 4).collect();
+        let pred: Vec<usize> = (0..400).map(|i| (i * 7 + 3) % 5 % 4).collect();
+        let m = all_metrics(&pred, &truth);
+        assert!(m.nmi < 0.2, "nmi {}", m.nmi);
+        assert!(m.accuracy < 0.5, "acc {}", m.accuracy);
+    }
+
+    #[test]
+    fn accuracy_known_example() {
+        // pred cluster 0 = {0,1,2}, truth = {0,1},{2,3}: best map gives 3/4?
+        let truth = vec![0, 0, 1, 1];
+        let pred = vec![0, 0, 0, 1];
+        // optimal: 0->0 (2 hits), 1->1 (1 hit) = 3/4
+        assert!((accuracy(&pred, &truth) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rand_index_known_example() {
+        let truth = vec![0, 0, 1, 1];
+        let pred = vec![0, 1, 0, 1];
+        // pairs: 6; TP=0; same_pred=2, same_true=2 → FP=2, FN=2, TN=2 → RI=2/6
+        assert!((rand_index(&pred, &truth) - 2.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nmi_independent_is_zero() {
+        // truth splits first/second half; pred splits even/odd — independent
+        let truth: Vec<usize> = (0..1000).map(|i| i / 500).collect();
+        let pred: Vec<usize> = (0..1000).map(|i| i % 2).collect();
+        assert!(nmi(&pred, &truth) < 1e-10);
+    }
+
+    #[test]
+    fn more_clusters_than_truth_handled() {
+        let truth = vec![0, 0, 0, 1, 1, 1];
+        let pred = vec![0, 1, 2, 3, 4, 5]; // singletons
+        let m = all_metrics(&pred, &truth);
+        assert!(m.accuracy <= 2.0 / 6.0 + 1e-12);
+        assert!(m.f_measure < 0.6);
+    }
+
+    #[test]
+    fn rank_aggregation() {
+        let a = ClusterMetrics { nmi: 0.9, rand_index: 0.9, f_measure: 0.9, accuracy: 0.9 };
+        let b = ClusterMetrics { nmi: 0.5, rand_index: 0.5, f_measure: 0.5, accuracy: 0.5 };
+        let c = ClusterMetrics { nmi: 0.5, rand_index: 0.5, f_measure: 0.5, accuracy: 0.5 };
+        let ranks = average_rank_scores(&[a, b, c]);
+        assert_eq!(ranks[0], 1.0);
+        assert_eq!(ranks[1], 2.5); // tie between b and c
+        assert_eq!(ranks[2], 2.5);
+    }
+
+    #[test]
+    fn rank_nan_last() {
+        let ranks = rank_descending(&[0.5, f64::NAN, 0.9]);
+        assert_eq!(ranks, vec![2.0, 3.0, 1.0]);
+    }
+}

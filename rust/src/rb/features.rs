@@ -1,0 +1,257 @@
+//! Random Binning feature-matrix generation (Algorithm 1, lines 3–5).
+//!
+//! Produces the large sparse binary matrix Z ∈ R^{N×D}: row i has exactly
+//! one non-zero per grid (the bin x_i falls in), value 1/√R. D is the total
+//! number of *non-empty* bins across all R grids — data-dependent, as in
+//! the paper (D grows with both R and 1/σ).
+//!
+//! Generation parallelizes over grids (the paper §5.4 uses 4 threads the
+//! same way): each grid hashes every point's bin tuple to a local bin id;
+//! a prefix sum over per-grid bin counts then gives disjoint global column
+//! ranges, so the final CSR assembles with *no* sorting — within a row,
+//! grid order is column order.
+
+use super::grid::{sample_grids, Grid};
+use crate::linalg::Mat;
+use crate::sparse::Csr;
+use crate::util::threads::parallel_chunks_mut;
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Identity hasher for keys that are already well-mixed 64-bit hashes
+/// (`Grid::bin_hash` output). Skips SipHash in the phase-1 bin dictionary —
+/// measured ~1.35× on RB generation (EXPERIMENTS.md §Perf iteration 2).
+#[derive(Default)]
+pub struct IdentityHasher(u64);
+
+impl Hasher for IdentityHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        // only u64 keys are ever hashed here
+        let mut buf = [0u8; 8];
+        buf[..bytes.len().min(8)].copy_from_slice(&bytes[..bytes.len().min(8)]);
+        self.0 = u64::from_le_bytes(buf);
+    }
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.0 = v;
+    }
+}
+
+type BinDict = HashMap<u64, u32, BuildHasherDefault<IdentityHasher>>;
+
+/// Output of RB generation.
+pub struct RbFeatures {
+    /// Sparse feature matrix Z, N×D, nnz = N·R, all values 1/√R.
+    pub z: Csr,
+    /// Number of grids R.
+    pub r: usize,
+    /// Per-grid number of non-empty bins.
+    pub bins_per_grid: Vec<usize>,
+    /// κ estimate (Definition 1): E_grid[1 / max_b ν_b], the expected
+    /// lower bound on non-empty bins per grid; drives the Theorem 1 rate.
+    pub kappa: f64,
+}
+
+impl RbFeatures {
+    /// Total feature dimension D.
+    pub fn dim(&self) -> usize {
+        self.z.cols
+    }
+}
+
+/// Per-grid binning result (phase 1).
+struct GridBins {
+    /// Local bin id for every point, in [0, n_bins).
+    local: Vec<u32>,
+    n_bins: usize,
+    /// Largest collision count max_b |{i : bin(x_i)=b}|.
+    max_count: usize,
+}
+
+fn bin_one_grid(x: &Mat, grid: &Grid) -> GridBins {
+    let n = x.rows;
+    let mut dict: BinDict = BinDict::with_capacity_and_hasher(n / 2, Default::default());
+    let mut counts: Vec<usize> = Vec::new();
+    let mut local = Vec::with_capacity(n);
+    for i in 0..n {
+        let h = grid.bin_hash(x.row(i));
+        let next = dict.len() as u32;
+        let id = *dict.entry(h).or_insert(next);
+        if id as usize == counts.len() {
+            counts.push(0);
+        }
+        counts[id as usize] += 1;
+        local.push(id);
+    }
+    GridBins {
+        local,
+        n_bins: dict.len(),
+        max_count: counts.iter().copied().max().unwrap_or(0),
+    }
+}
+
+/// Generate RB features for data `x` with `r` grids and Laplacian-kernel
+/// bandwidth `sigma`. Deterministic in `seed`.
+pub fn rb_features(x: &Mat, r: usize, sigma: f64, seed: u64) -> RbFeatures {
+    assert!(r >= 1, "need at least one grid");
+    let n = x.rows;
+    let grids = sample_grids(r, x.cols, sigma, seed);
+
+    // Phase 1 (parallel over grids): hash every point to its per-grid bin.
+    let mut per_grid: Vec<Option<GridBins>> = (0..r).map(|_| None).collect();
+    parallel_chunks_mut(&mut per_grid, crate::util::threads::num_threads(), |start, slot| {
+        for (k, s) in slot.iter_mut().enumerate() {
+            *s = Some(bin_one_grid(x, &grids[start + k]));
+        }
+    });
+    let per_grid: Vec<GridBins> = per_grid.into_iter().map(|o| o.unwrap()).collect();
+
+    // Global column offsets: grid j owns columns [off_j, off_j + n_bins_j).
+    let mut offsets = Vec::with_capacity(r + 1);
+    offsets.push(0usize);
+    for g in &per_grid {
+        offsets.push(offsets.last().unwrap() + g.n_bins);
+    }
+    let d_total = *offsets.last().unwrap();
+    assert!(d_total < u32::MAX as usize, "feature dimension overflows u32");
+
+    // κ (Definition 1): κ_δ = 1/ν_δ with ν_δ = max_b count_b / N.
+    let kappa = per_grid
+        .iter()
+        .map(|g| if g.max_count > 0 { n as f64 / g.max_count as f64 } else { 1.0 })
+        .sum::<f64>()
+        / r as f64;
+
+    // Phase 2 (parallel over rows): assemble CSR directly. Row i's entries
+    // are (offsets[j] + local[j][i]) for j = 0..R — ascending in j, hence
+    // already column-sorted.
+    let val = 1.0 / (r as f64).sqrt();
+    let mut indices: Vec<u32> = vec![0; n * r];
+    parallel_chunks_mut(&mut indices, crate::util::threads::num_threads(), |start, chunk| {
+        // chunk covers flat positions [start, start+len); position p = i*r + j
+        for (k, slot) in chunk.iter_mut().enumerate() {
+            let p = start + k;
+            let i = p / r;
+            let j = p % r;
+            *slot = (offsets[j] + per_grid[j].local[i] as usize) as u32;
+        }
+    });
+    let indptr: Vec<usize> = (0..=n).map(|i| i * r).collect();
+    let data = vec![val; n * r];
+    let z = Csr { rows: n, cols: d_total, indptr, indices, data };
+
+    RbFeatures { z, r, bins_per_grid: per_grid.iter().map(|g| g.n_bins).collect(), kappa }
+}
+
+/// Exact (dense) Laplacian-kernel Gram matrix for comparison in tests and
+/// the convergence-theory driver: K_ij = exp(−‖x_i − x_j‖₁ / σ).
+pub fn exact_laplacian_gram(x: &Mat, sigma: f64) -> Mat {
+    let n = x.rows;
+    let mut k = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let v = (-crate::linalg::l1dist(x.row(i), x.row(j)) / sigma).exp();
+            k.set(i, j, v);
+            k.set(j, i, v);
+        }
+    }
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn rand_data(rng: &mut Pcg, n: usize, d: usize) -> Mat {
+        Mat::from_vec(n, d, (0..n * d).map(|_| rng.f64()).collect())
+    }
+
+    #[test]
+    fn shape_and_sparsity_invariants() {
+        let mut rng = Pcg::seed(91);
+        let x = rand_data(&mut rng, 200, 5);
+        let r = 32;
+        let rb = rb_features(&x, r, 0.5, 7);
+        assert_eq!(rb.z.rows, 200);
+        assert_eq!(rb.z.nnz(), 200 * r); // exactly R non-zeros per row
+        for i in 0..200 {
+            assert_eq!(rb.z.row_range(i).len(), r);
+        }
+        // all values 1/sqrt(R)
+        let v = 1.0 / (r as f64).sqrt();
+        assert!(rb.z.data.iter().all(|&x| (x - v).abs() < 1e-15));
+        // column indices strictly increasing within each row (grid blocks)
+        for i in 0..200 {
+            let rng_ = rb.z.row_range(i);
+            let idx = &rb.z.indices[rng_];
+            for w in idx.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+        // D = sum of per-grid bins
+        assert_eq!(rb.dim(), rb.bins_per_grid.iter().sum::<usize>());
+        assert!(rb.kappa >= 1.0);
+    }
+
+    #[test]
+    fn gram_approximates_kernel() {
+        // E[Z Zᵀ]_ij = k(x_i, x_j); check Frobenius-relative error shrinks.
+        let mut rng = Pcg::seed(92);
+        let x = rand_data(&mut rng, 60, 3);
+        let sigma = 1.0;
+        let exact = exact_laplacian_gram(&x, sigma);
+        let mut errs = Vec::new();
+        for &r in &[16usize, 256] {
+            let rb = rb_features(&x, r, sigma, 11);
+            let approx = rb.z.gram_dense();
+            errs.push(approx.sub(&exact).frob_norm() / exact.frob_norm());
+        }
+        assert!(errs[1] < errs[0] * 0.5, "R=16 err {} vs R=256 err {}", errs[0], errs[1]);
+        assert!(errs[1] < 0.12, "R=256 err too large: {}", errs[1]);
+    }
+
+    #[test]
+    fn diag_is_one() {
+        // Each row of Z has R entries of 1/√R ⇒ (ZZᵀ)_ii = 1 = k(x,x).
+        let mut rng = Pcg::seed(93);
+        let x = rand_data(&mut rng, 30, 4);
+        let rb = rb_features(&x, 64, 2.0, 3);
+        let g = rb.z.gram_dense();
+        for i in 0..30 {
+            assert!((g.at(i, i) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let mut rng = Pcg::seed(94);
+        let x = rand_data(&mut rng, 50, 3);
+        let a = rb_features(&x, 16, 1.0, 5);
+        let b = rb_features(&x, 16, 1.0, 5);
+        assert_eq!(a.z, b.z);
+        let c = rb_features(&x, 16, 1.0, 6);
+        assert_ne!(a.z, c.z);
+    }
+
+    #[test]
+    fn kappa_grows_with_smaller_sigma() {
+        // Smaller σ → narrower bins → more non-empty bins per grid → larger κ.
+        let mut rng = Pcg::seed(95);
+        let x = rand_data(&mut rng, 300, 4);
+        let wide = rb_features(&x, 32, 4.0, 9);
+        let narrow = rb_features(&x, 32, 0.2, 9);
+        assert!(
+            narrow.kappa > wide.kappa,
+            "narrow κ {} should exceed wide κ {}",
+            narrow.kappa,
+            wide.kappa
+        );
+        assert!(narrow.dim() > wide.dim());
+    }
+}

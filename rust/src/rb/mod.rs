@@ -1,0 +1,9 @@
+//! Random Binning features (the paper's Algorithm 1): random-grid sampling
+//! and sparse feature-matrix generation, plus the κ estimator of
+//! Definition 1 that drives the Theorem 1 convergence rate.
+
+pub mod features;
+pub mod grid;
+
+pub use features::{exact_laplacian_gram, rb_features, RbFeatures};
+pub use grid::{sample_grids, Grid};

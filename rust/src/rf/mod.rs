@@ -1,0 +1,120 @@
+//! Random Fourier features (Rahimi–Recht) — the baseline random-feature
+//! family the paper compares RB against (SC_RF / SV_RF / KK_RF).
+//!
+//! z(x) = √(2/R)·cos(Wx + b), with the rows of W drawn from the kernel's
+//! spectral density: Normal(0, 1/σ²) for the Gaussian kernel, Cauchy(0, 1/σ)
+//! for the Laplacian kernel — so RB and RF approximate the *same* kernel in
+//! the Fig. 2 convergence comparison.
+
+use crate::config::Kernel;
+use crate::linalg::Mat;
+use crate::util::rng::Pcg;
+use crate::util::threads::parallel_rows_mut;
+
+/// Spectral sample: projection matrix W (d×R) and phases b (R).
+pub struct RfMap {
+    pub w: Mat,
+    pub b: Vec<f64>,
+    pub kernel: Kernel,
+}
+
+impl RfMap {
+    /// Draw an RF map with `r` features for the given kernel.
+    pub fn sample(kernel: Kernel, d: usize, r: usize, seed: u64) -> RfMap {
+        let mut rng = Pcg::new(seed, 0x0f0f);
+        let mut w = Mat::zeros(d, r);
+        match kernel {
+            Kernel::Gaussian { sigma } => {
+                for v in w.data.iter_mut() {
+                    *v = rng.normal() / sigma;
+                }
+            }
+            Kernel::Laplacian { sigma } => {
+                for v in w.data.iter_mut() {
+                    *v = rng.cauchy() / sigma;
+                }
+            }
+        }
+        let b: Vec<f64> = (0..r).map(|_| rng.range_f64(0.0, 2.0 * std::f64::consts::PI)).collect();
+        RfMap { w, b, kernel }
+    }
+
+    /// Number of features R.
+    pub fn r(&self) -> usize {
+        self.b.len()
+    }
+
+    /// Apply the map: Z = √(2/R)·cos(X·W + b), N×R dense.
+    pub fn features(&self, x: &Mat) -> Mat {
+        let mut z = x.matmul(&self.w);
+        let r = self.r();
+        let scale = (2.0 / r as f64).sqrt();
+        let b = &self.b;
+        parallel_rows_mut(&mut z.data, r, |_row0, chunk| {
+            for row in chunk.chunks_mut(r) {
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v = scale * (*v + b[j]).cos();
+                }
+            }
+        });
+        z
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::kernel_matrix;
+
+    fn rand_data(rng: &mut Pcg, n: usize, d: usize) -> Mat {
+        Mat::from_vec(n, d, (0..n * d).map(|_| rng.f64()).collect())
+    }
+
+    #[test]
+    fn gram_approximates_gaussian_kernel() {
+        let mut rng = Pcg::seed(111);
+        let x = rand_data(&mut rng, 50, 3);
+        let kernel = Kernel::Gaussian { sigma: 0.8 };
+        let exact = kernel_matrix(kernel, &x);
+        let mut errs = Vec::new();
+        for &r in &[32usize, 1024] {
+            let map = RfMap::sample(kernel, 3, r, 5);
+            let z = map.features(&x);
+            let approx = z.matmul_t(&z);
+            errs.push(approx.sub(&exact).frob_norm() / exact.frob_norm());
+        }
+        assert!(errs[1] < errs[0], "more features must reduce error: {errs:?}");
+        assert!(errs[1] < 0.1, "R=1024 err {}", errs[1]);
+    }
+
+    #[test]
+    fn gram_approximates_laplacian_kernel() {
+        let mut rng = Pcg::seed(112);
+        let x = rand_data(&mut rng, 40, 2);
+        let kernel = Kernel::Laplacian { sigma: 1.2 };
+        let exact = kernel_matrix(kernel, &x);
+        let map = RfMap::sample(kernel, 2, 4096, 7);
+        let z = map.features(&x);
+        let approx = z.matmul_t(&z);
+        let err = approx.sub(&exact).frob_norm() / exact.frob_norm();
+        assert!(err < 0.12, "Laplacian RF err {err}");
+    }
+
+    #[test]
+    fn feature_scale_bounded() {
+        let mut rng = Pcg::seed(113);
+        let x = rand_data(&mut rng, 20, 4);
+        let map = RfMap::sample(Kernel::Gaussian { sigma: 1.0 }, 4, 64, 3);
+        let z = map.features(&x);
+        let bound = (2.0f64 / 64.0).sqrt() + 1e-12;
+        assert!(z.data.iter().all(|v| v.abs() <= bound));
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let map1 = RfMap::sample(Kernel::Gaussian { sigma: 1.0 }, 3, 16, 9);
+        let map2 = RfMap::sample(Kernel::Gaussian { sigma: 1.0 }, 3, 16, 9);
+        assert_eq!(map1.w, map2.w);
+        assert_eq!(map1.b, map2.b);
+    }
+}

@@ -1,0 +1,144 @@
+//! Artifact manifest: `python/compile/aot.py` lowers each L2 graph for a
+//! roster of fixed (padded) shapes and records them in
+//! `artifacts/manifest.json`; the runtime picks the smallest variant that
+//! fits a request and zero-pads inputs up to it.
+
+use crate::util::json::Json;
+
+/// Kind of compute graph an artifact implements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// dist²(x_tile, centroids) → [tile, kp]
+    KmeansAssign,
+    /// exp(−γ·dist(x_tile, y_tile)) → [tile, tile]; Laplacian or Gaussian.
+    KernelBlockLaplacian,
+    KernelBlockGaussian,
+    /// cos(x_tile·W + b) → [tile, r]
+    RfFeatures,
+}
+
+impl ArtifactKind {
+    pub fn parse(s: &str) -> Result<ArtifactKind, String> {
+        match s {
+            "kmeans_assign" => Ok(ArtifactKind::KmeansAssign),
+            "kernel_block_laplacian" => Ok(ArtifactKind::KernelBlockLaplacian),
+            "kernel_block_gaussian" => Ok(ArtifactKind::KernelBlockGaussian),
+            "rf_features" => Ok(ArtifactKind::RfFeatures),
+            other => Err(format!("unknown artifact kind '{other}'")),
+        }
+    }
+}
+
+/// One AOT-compiled artifact (an HLO text file plus its fixed shapes).
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub file: String,
+    /// Row-tile size T.
+    pub tile: usize,
+    /// Padded feature dimension Dp.
+    pub dim: usize,
+    /// Padded centroid count (kmeans_assign) — 0 otherwise.
+    pub kp: usize,
+    /// Padded RF feature count (rf_features) — 0 otherwise.
+    pub r: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest, String> {
+        let root = Json::parse(text)?;
+        let entries = root
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .ok_or("manifest: missing 'entries' array")?;
+        let mut out = Vec::with_capacity(entries.len());
+        for (i, e) in entries.iter().enumerate() {
+            let get_str = |k: &str| {
+                e.get(k)
+                    .and_then(|v| v.as_str())
+                    .map(|s| s.to_string())
+                    .ok_or(format!("manifest entry {i}: missing '{k}'"))
+            };
+            let get_num =
+                |k: &str, default: usize| e.get(k).and_then(|v| v.as_usize()).unwrap_or(default);
+            out.push(ArtifactEntry {
+                name: get_str("name")?,
+                kind: ArtifactKind::parse(&get_str("kind")?)?,
+                file: get_str("file")?,
+                tile: get_num("tile", 0),
+                dim: get_num("dim", 0),
+                kp: get_num("kp", 0),
+                r: get_num("r", 0),
+            });
+        }
+        Ok(Manifest { entries: out })
+    }
+
+    pub fn load(dir: &str) -> Result<Manifest, String> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read manifest '{path}': {e}"))?;
+        Self::parse(&text)
+    }
+
+    /// Smallest variant of `kind` whose padded shapes fit (d ≤ dim, and for
+    /// kmeans k ≤ kp, for RF r_req ≤ r).
+    pub fn select(&self, kind: ArtifactKind, d: usize, k: usize, r: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == kind && e.dim >= d)
+            .filter(|e| match kind {
+                ArtifactKind::KmeansAssign => e.kp >= k,
+                ArtifactKind::RfFeatures => e.r >= r,
+                _ => true,
+            })
+            .min_by_key(|e| (e.dim, e.kp.max(e.r)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "format": 1,
+        "entries": [
+            {"name": "ka32", "kind": "kmeans_assign", "file": "ka32.hlo.txt", "tile": 2048, "dim": 32, "kp": 32},
+            {"name": "ka128", "kind": "kmeans_assign", "file": "ka128.hlo.txt", "tile": 2048, "dim": 128, "kp": 32},
+            {"name": "kb32", "kind": "kernel_block_laplacian", "file": "kb32.hlo.txt", "tile": 512, "dim": 32},
+            {"name": "rf128", "kind": "rf_features", "file": "rf128.hlo.txt", "tile": 2048, "dim": 128, "r": 1024}
+        ]
+    }"#;
+
+    #[test]
+    fn parse_and_select() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 4);
+        // d=20 fits the 32-dim variant
+        let e = m.select(ArtifactKind::KmeansAssign, 20, 10, 0).unwrap();
+        assert_eq!(e.name, "ka32");
+        // d=64 needs the 128-dim variant
+        let e = m.select(ArtifactKind::KmeansAssign, 64, 10, 0).unwrap();
+        assert_eq!(e.name, "ka128");
+        // k too large for kp=32
+        assert!(m.select(ArtifactKind::KmeansAssign, 20, 64, 0).is_none());
+        // d too large entirely
+        assert!(m.select(ArtifactKind::KmeansAssign, 1000, 10, 0).is_none());
+        // rf respects r
+        assert!(m.select(ArtifactKind::RfFeatures, 64, 0, 4096).is_none());
+        assert!(m.select(ArtifactKind::RfFeatures, 64, 0, 512).is_some());
+    }
+
+    #[test]
+    fn rejects_bad_kind() {
+        let bad = r#"{"entries": [{"name":"x","kind":"nope","file":"f"}]}"#;
+        assert!(Manifest::parse(bad).is_err());
+    }
+}

@@ -1,0 +1,340 @@
+//! Compressed Sparse Row matrix — the substrate under the RB feature matrix
+//! `Z ∈ R^{N×D}` (exactly R non-zeros per row, one per grid) and all
+//! eigensolver matvecs.
+//!
+//! Column indices are u32: D is bounded by the total number of non-empty
+//! bins (≤ N·R in the worst case, tens of millions in the paper's runs).
+
+use crate::linalg::Mat;
+use crate::util::threads::{num_threads, parallel_rows_mut};
+
+/// CSR sparse matrix with f64 values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row pointers, length rows+1.
+    pub indptr: Vec<usize>,
+    /// Column indices, length nnz, sorted within each row.
+    pub indices: Vec<u32>,
+    /// Values, length nnz.
+    pub data: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from per-row (col, val) lists. Entries within a row are sorted
+    /// by column; duplicate columns within a row are summed.
+    pub fn from_rows(rows: usize, cols: usize, row_entries: Vec<Vec<(u32, f64)>>) -> Csr {
+        assert_eq!(row_entries.len(), rows);
+        let mut indptr = Vec::with_capacity(rows + 1);
+        indptr.push(0usize);
+        let nnz_upper: usize = row_entries.iter().map(|r| r.len()).sum();
+        let mut indices = Vec::with_capacity(nnz_upper);
+        let mut data = Vec::with_capacity(nnz_upper);
+        for mut entries in row_entries {
+            entries.sort_unstable_by_key(|e| e.0);
+            let mut i = 0;
+            while i < entries.len() {
+                let (c, mut v) = entries[i];
+                debug_assert!((c as usize) < cols, "column {c} out of bounds {cols}");
+                let mut j = i + 1;
+                while j < entries.len() && entries[j].0 == c {
+                    v += entries[j].1;
+                    j += 1;
+                }
+                indices.push(c);
+                data.push(v);
+                i = j;
+            }
+            indptr.push(indices.len());
+        }
+        Csr { rows, cols, indptr, indices, data }
+    }
+
+    /// Build from COO triplets (row, col, val); duplicates summed.
+    pub fn from_triplets(rows: usize, cols: usize, trips: &[(usize, u32, f64)]) -> Csr {
+        let mut per_row: Vec<Vec<(u32, f64)>> = vec![Vec::new(); rows];
+        for &(r, c, v) in trips {
+            per_row[r].push((c, v));
+        }
+        Csr::from_rows(rows, cols, per_row)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn row_range(&self, i: usize) -> std::ops::Range<usize> {
+        self.indptr[i]..self.indptr[i + 1]
+    }
+
+    /// y = A·x (parallel over row panels).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        let (indptr, indices, data) = (&self.indptr, &self.indices, &self.data);
+        parallel_rows_mut(&mut y, 1, |row0, chunk| {
+            for (k, yi) in chunk.iter_mut().enumerate() {
+                let i = row0 + k;
+                let mut s = 0.0;
+                for p in indptr[i]..indptr[i + 1] {
+                    s += data[p] * x[indices[p] as usize];
+                }
+                *yi = s;
+            }
+        });
+        y
+    }
+
+    /// y = Aᵀ·x (parallel over row panels with per-thread accumulators).
+    pub fn t_matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows);
+        let nt = num_threads();
+        let chunk = self.rows.div_ceil(nt).max(1);
+        let partials: Vec<Vec<f64>> = std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for t in 0..nt {
+                let lo = t * chunk;
+                let hi = ((t + 1) * chunk).min(self.rows);
+                if lo >= hi {
+                    break;
+                }
+                let (indptr, indices, data) = (&self.indptr, &self.indices, &self.data);
+                let cols = self.cols;
+                handles.push(s.spawn(move || {
+                    let mut y = vec![0.0; cols];
+                    for i in lo..hi {
+                        let xi = x[i];
+                        if xi == 0.0 {
+                            continue;
+                        }
+                        for p in indptr[i]..indptr[i + 1] {
+                            y[indices[p] as usize] += data[p] * xi;
+                        }
+                    }
+                    y
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let mut y = vec![0.0; self.cols];
+        for p in partials {
+            for (yi, pi) in y.iter_mut().zip(p.iter()) {
+                *yi += *pi;
+            }
+        }
+        y
+    }
+
+    /// C = A · B where B is dense cols×k → dense rows×k (the solver's block
+    /// matvec; parallel over rows).
+    pub fn matmat(&self, b: &Mat) -> Mat {
+        assert_eq!(b.rows, self.cols, "matmat shape mismatch");
+        let k = b.cols;
+        let mut c = Mat::zeros(self.rows, k);
+        let (indptr, indices, data) = (&self.indptr, &self.indices, &self.data);
+        parallel_rows_mut(&mut c.data, k, |row0, chunk| {
+            for (r, crow) in chunk.chunks_mut(k).enumerate() {
+                let i = row0 + r;
+                for p in indptr[i]..indptr[i + 1] {
+                    let v = data[p];
+                    let brow = b.row(indices[p] as usize);
+                    for (cj, bj) in crow.iter_mut().zip(brow.iter()) {
+                        *cj += v * *bj;
+                    }
+                }
+            }
+        });
+        c
+    }
+
+    /// C = Aᵀ · B where B is dense rows×k → dense cols×k (parallel with
+    /// per-thread accumulation; cols×k can be large, so threads accumulate
+    /// into disjoint column strips only when beneficial).
+    pub fn t_matmat(&self, b: &Mat) -> Mat {
+        assert_eq!(b.rows, self.rows, "t_matmat shape mismatch");
+        let k = b.cols;
+        let nt = num_threads();
+        let chunk = self.rows.div_ceil(nt).max(1);
+        let partials: Vec<Mat> = std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for t in 0..nt {
+                let lo = t * chunk;
+                let hi = ((t + 1) * chunk).min(self.rows);
+                if lo >= hi {
+                    break;
+                }
+                let (indptr, indices, data) = (&self.indptr, &self.indices, &self.data);
+                let cols = self.cols;
+                handles.push(s.spawn(move || {
+                    let mut c = Mat::zeros(cols, k);
+                    for i in lo..hi {
+                        let brow = b.row(i);
+                        for p in indptr[i]..indptr[i + 1] {
+                            let v = data[p];
+                            let crow = c.row_mut(indices[p] as usize);
+                            for (cj, bj) in crow.iter_mut().zip(brow.iter()) {
+                                *cj += v * *bj;
+                            }
+                        }
+                    }
+                    c
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let mut c = Mat::zeros(self.cols, k);
+        for p in partials {
+            c.add_assign(&p);
+        }
+        c
+    }
+
+    /// Row sums (A·1), parallel over row panels.
+    pub fn row_sums(&self) -> Vec<f64> {
+        let mut y = vec![0.0; self.rows];
+        let (indptr, data) = (&self.indptr, &self.data);
+        parallel_rows_mut(&mut y, 1, |row0, chunk| {
+            for (k, yi) in chunk.iter_mut().enumerate() {
+                let i = row0 + k;
+                *yi = data[indptr[i]..indptr[i + 1]].iter().sum();
+            }
+        });
+        y
+    }
+
+    /// Column sums (Aᵀ·1).
+    pub fn col_sums(&self) -> Vec<f64> {
+        self.t_matvec(&vec![1.0; self.rows])
+    }
+
+    /// Scale row i by s[i] in place (the D^{-1/2} Z normalization).
+    pub fn scale_rows(&mut self, s: &[f64]) {
+        assert_eq!(s.len(), self.rows);
+        for i in 0..self.rows {
+            let si = s[i];
+            for p in self.indptr[i]..self.indptr[i + 1] {
+                self.data[p] *= si;
+            }
+        }
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Materialize as dense (tests / tiny problems only).
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for p in self.row_range(i) {
+                m.set(i, self.indices[p] as usize, self.data[p]);
+            }
+        }
+        m
+    }
+
+    /// Gram product G = A·Aᵀ materialized densely (tests / analysis only —
+    /// this is exactly the N×N matrix the paper avoids forming).
+    pub fn gram_dense(&self) -> Mat {
+        let dense = self.to_dense();
+        dense.matmul_t(&dense)
+    }
+
+    /// Memory footprint in bytes (indices + data + indptr).
+    pub fn bytes(&self) -> usize {
+        self.indices.len() * 4 + self.data.len() * 8 + self.indptr.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn random_csr(rng: &mut Pcg, rows: usize, cols: usize, per_row: usize) -> Csr {
+        let mut entries = Vec::with_capacity(rows);
+        for _ in 0..rows {
+            let mut r = Vec::with_capacity(per_row);
+            for _ in 0..per_row {
+                r.push((rng.below(cols) as u32, rng.range_f64(-1.0, 1.0)));
+            }
+            entries.push(r);
+        }
+        Csr::from_rows(rows, cols, entries)
+    }
+
+    #[test]
+    fn from_rows_sorts_and_dedups() {
+        let a = Csr::from_rows(2, 5, vec![vec![(3, 1.0), (1, 2.0), (3, 0.5)], vec![]]);
+        assert_eq!(a.indices, vec![1, 3]);
+        assert_eq!(a.data, vec![2.0, 1.5]);
+        assert_eq!(a.indptr, vec![0, 2, 2]);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let mut rng = Pcg::seed(41);
+        let a = random_csr(&mut rng, 50, 30, 4);
+        let d = a.to_dense();
+        let x: Vec<f64> = (0..30).map(|_| rng.f64()).collect();
+        let y = a.matvec(&x);
+        let y0 = d.matvec(&x);
+        for (u, v) in y.iter().zip(y0.iter()) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn t_matvec_matches_dense() {
+        let mut rng = Pcg::seed(42);
+        let a = random_csr(&mut rng, 50, 30, 4);
+        let d = a.to_dense();
+        let x: Vec<f64> = (0..50).map(|_| rng.f64()).collect();
+        let y = a.t_matvec(&x);
+        let y0 = d.t_matvec(&x);
+        for (u, v) in y.iter().zip(y0.iter()) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matmat_and_t_matmat_match_dense() {
+        let mut rng = Pcg::seed(43);
+        let a = random_csr(&mut rng, 40, 25, 3);
+        let d = a.to_dense();
+        let b = Mat::from_vec(25, 6, (0..150).map(|_| rng.f64()).collect());
+        let c = a.matmat(&b);
+        let c0 = d.matmul(&b);
+        assert!(c.sub(&c0).frob_norm() < 1e-12);
+
+        let b2 = Mat::from_vec(40, 5, (0..200).map(|_| rng.f64()).collect());
+        let c2 = a.t_matmat(&b2);
+        let c20 = d.t_matmul(&b2);
+        assert!(c2.sub(&c20).frob_norm() < 1e-12);
+    }
+
+    #[test]
+    fn sums_and_scaling() {
+        let a = Csr::from_rows(2, 3, vec![vec![(0, 1.0), (2, 2.0)], vec![(1, 3.0)]]);
+        assert_eq!(a.row_sums(), vec![3.0, 3.0]);
+        assert_eq!(a.col_sums(), vec![1.0, 3.0, 2.0]);
+        let mut b = a.clone();
+        b.scale_rows(&[2.0, 0.5]);
+        assert_eq!(b.row_sums(), vec![6.0, 1.5]);
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd_diag() {
+        let mut rng = Pcg::seed(44);
+        let a = random_csr(&mut rng, 15, 10, 2);
+        let g = a.gram_dense();
+        for i in 0..15 {
+            assert!(g.at(i, i) >= -1e-12);
+            for j in 0..15 {
+                assert!((g.at(i, j) - g.at(j, i)).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Sparse-matrix substrate (CSR) and the implicit graph-Laplacian algebra
+//! of §3.1: degrees, normalization, and Ẑ·Ẑᵀ block application — all
+//! without materializing the N×N similarity matrix.
+
+pub mod csr;
+pub mod ops;
+
+pub use csr::Csr;
+pub use ops::{
+    apply_normalized_similarity, implicit_degrees, normalize_by_degree,
+    normalized_laplacian_dense,
+};

@@ -1,0 +1,124 @@
+//! Graph-Laplacian operations on the implicit similarity matrix Ŵ = Z·Zᵀ
+//! — the paper's §3.1 trick: everything is expressed through Z without
+//! ever materializing the N×N matrix.
+
+use super::csr::Csr;
+use crate::linalg::Mat;
+
+/// Degree vector of the implicit similarity graph:
+/// d = Ŵ·1 = Z·(Zᵀ·1)  (Equation 6 — two sparse matvecs).
+pub fn implicit_degrees(z: &Csr) -> Vec<f64> {
+    let col_sums = z.col_sums();
+    z.matvec(&col_sums)
+}
+
+/// Build Ẑ = D^{-1/2}·Z from Z (consumes a copy of Z). Rows with zero or
+/// negative degree (possible only if Z had no entries, or numerically ~0)
+/// are left unscaled.
+pub fn normalize_by_degree(mut z: Csr, degrees: &[f64]) -> Csr {
+    let scale: Vec<f64> =
+        degrees.iter().map(|&d| if d > 1e-300 { 1.0 / d.sqrt() } else { 0.0 }).collect();
+    z.scale_rows(&scale);
+    z
+}
+
+/// Apply the implicit normalized similarity S = Ẑ·Ẑᵀ to a block:
+/// Y = Ẑ·(Ẑᵀ·B). The smallest eigenvectors of L̂ = I − S are the largest
+/// of S, i.e. the largest left singular vectors of Ẑ.
+pub fn apply_normalized_similarity(zhat: &Csr, b: &Mat) -> Mat {
+    let t = zhat.t_matmat(b); // D×k
+    zhat.matmat(&t) // N×k
+}
+
+/// Materialize the exact normalized Laplacian L = I − D^{-1/2} W D^{-1/2}
+/// from a *dense* similarity matrix (exact-SC baseline; small N only).
+pub fn normalized_laplacian_dense(w: &Mat) -> Mat {
+    let n = w.rows;
+    assert_eq!(w.rows, w.cols);
+    let mut deg = vec![0.0; n];
+    for i in 0..n {
+        deg[i] = w.row(i).iter().sum();
+    }
+    let scale: Vec<f64> =
+        deg.iter().map(|&d| if d > 1e-300 { 1.0 / d.sqrt() } else { 0.0 }).collect();
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let v = -scale[i] * w.at(i, j) * scale[j];
+            l.set(i, j, if i == j { 1.0 + v } else { v });
+        }
+    }
+    l
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn random_csr(rng: &mut Pcg, rows: usize, cols: usize, per_row: usize) -> Csr {
+        let mut entries = Vec::with_capacity(rows);
+        for _ in 0..rows {
+            let mut r = Vec::with_capacity(per_row);
+            for _ in 0..per_row {
+                r.push((rng.below(cols) as u32, rng.f64() + 0.1));
+            }
+            entries.push(r);
+        }
+        Csr::from_rows(rows, cols, entries)
+    }
+
+    #[test]
+    fn implicit_degrees_match_explicit_gram() {
+        let mut rng = Pcg::seed(51);
+        let z = random_csr(&mut rng, 30, 20, 3);
+        let d = implicit_degrees(&z);
+        let w = z.gram_dense();
+        for i in 0..30 {
+            let expl: f64 = w.row(i).iter().sum();
+            assert!((d[i] - expl).abs() < 1e-10, "row {i}: {} vs {expl}", d[i]);
+        }
+    }
+
+    #[test]
+    fn normalized_similarity_matches_dense() {
+        let mut rng = Pcg::seed(52);
+        let z = random_csr(&mut rng, 25, 15, 3);
+        let d = implicit_degrees(&z);
+        let zhat = normalize_by_degree(z.clone(), &d);
+        let b = Mat::from_vec(25, 4, (0..100).map(|_| rng.f64()).collect());
+        let y = apply_normalized_similarity(&zhat, &b);
+        // dense reference: D^{-1/2} W D^{-1/2} B
+        let w = z.gram_dense();
+        let mut s = Mat::zeros(25, 25);
+        for i in 0..25 {
+            for j in 0..25 {
+                s.set(i, j, w.at(i, j) / (d[i].sqrt() * d[j].sqrt()));
+            }
+        }
+        let y0 = s.matmul(&b);
+        assert!(y.sub(&y0).frob_norm() < 1e-10);
+    }
+
+    #[test]
+    fn laplacian_dense_psd_and_zero_mode() {
+        // L is PSD and L·(D^{1/2}·1) = 0 for a connected graph.
+        let mut rng = Pcg::seed(53);
+        let z = random_csr(&mut rng, 12, 6, 3);
+        let w = z.gram_dense();
+        let l = normalized_laplacian_dense(&w);
+        let deg: Vec<f64> = (0..12).map(|i| w.row(i).iter().sum::<f64>()).collect();
+        let v: Vec<f64> = deg.iter().map(|d| d.sqrt()).collect();
+        let lv = l.matvec(&v);
+        let vnorm = crate::linalg::nrm2(&v);
+        for x in lv {
+            assert!(x.abs() < 1e-9 * vnorm, "kernel vector residual {x}");
+        }
+        // symmetry
+        for i in 0..12 {
+            for j in 0..12 {
+                assert!((l.at(i, j) - l.at(j, i)).abs() < 1e-12);
+            }
+        }
+    }
+}

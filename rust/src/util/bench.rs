@@ -1,0 +1,188 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Adaptive-iteration timing with warmup, reporting min/median/mean like
+//! criterion's summary line. Used by everything under `rust/benches/`.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>10} {:>12} {:>12}  ({} iters)",
+            self.name,
+            fmt_dur(self.min),
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with a global time budget per case.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub max_iters: usize,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(100),
+            budget: Duration::from_secs(2),
+            max_iters: 1000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick-mode bencher honouring `SCRB_BENCH_BUDGET_MS`.
+    pub fn from_env() -> Self {
+        let mut b = Self::default();
+        if let Ok(v) = std::env::var("SCRB_BENCH_BUDGET_MS") {
+            if let Ok(ms) = v.parse::<u64>() {
+                b.budget = Duration::from_millis(ms);
+                b.warmup = Duration::from_millis((ms / 10).max(1));
+            }
+        }
+        b
+    }
+
+    /// Time `f` (which should include only the work of interest) adaptively.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchStats {
+        // Warmup / calibration.
+        let t0 = Instant::now();
+        let mut one = Duration::ZERO;
+        let mut warm_iters = 0usize;
+        while t0.elapsed() < self.warmup || warm_iters == 0 {
+            let s = Instant::now();
+            std::hint::black_box(f());
+            one = s.elapsed();
+            warm_iters += 1;
+            if warm_iters >= 3 && one > self.warmup {
+                break;
+            }
+        }
+        let per = one.max(Duration::from_nanos(1));
+        let n = ((self.budget.as_nanos() / per.as_nanos().max(1)) as usize)
+            .clamp(3, self.max_iters);
+        let mut samples = Vec::with_capacity(n);
+        for _ in 0..n {
+            let s = Instant::now();
+            std::hint::black_box(f());
+            samples.push(s.elapsed());
+        }
+        samples.sort();
+        let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters: n,
+            min: samples[0],
+            median: samples[samples.len() / 2],
+            mean,
+            max: *samples.last().unwrap(),
+        };
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Record a single pre-measured duration (for long end-to-end cases that
+    /// should run exactly once).
+    pub fn record_once(&mut self, name: &str, d: Duration) -> &BenchStats {
+        self.results.push(BenchStats {
+            name: name.to_string(),
+            iters: 1,
+            min: d,
+            median: d,
+            mean: d,
+            max: d,
+        });
+        self.results.last().unwrap()
+    }
+
+    pub fn header() -> String {
+        format!(
+            "{:<44} {:>10} {:>12} {:>12}",
+            "benchmark", "min", "median", "mean"
+        )
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = Self::header();
+        s.push('\n');
+        s.push_str(&"-".repeat(84));
+        s.push('\n');
+        for r in &self.results {
+            s.push_str(&r.line());
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(5),
+            budget: Duration::from_millis(20),
+            max_iters: 50,
+            results: vec![],
+        };
+        let stats = b.bench("spin", || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(stats.min > Duration::ZERO);
+        assert!(stats.min <= stats.median && stats.median <= stats.max);
+        assert!(b.report().contains("spin"));
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert!(fmt_dur(Duration::from_nanos(500)).ends_with("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_millis(50)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).ends_with(" s"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Utility substrates built in-tree because the offline vendor set has no
+//! rand / rayon / serde / clap / criterion / proptest.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod table;
+pub mod threads;
+pub mod timer;

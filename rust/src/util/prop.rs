@@ -1,0 +1,82 @@
+//! Tiny property-based testing harness (proptest is not in the offline
+//! vendor set). A property is a closure over a seeded RNG; we run many
+//! cases and on failure report the reproducing seed.
+
+use super::rng::Pcg;
+
+/// Number of cases per property (override with SCRB_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("SCRB_PROP_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(64)
+}
+
+/// Run `prop(rng, case_index)` for `cases` seeds; panic with the seed on the
+/// first failure (re-run with `check_seeded` to debug).
+pub fn check_named(name: &str, cases: usize, prop: impl Fn(&mut Pcg, usize)) {
+    for case in 0..cases {
+        let seed = 0x5eed_0000u64 + case as u64;
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Pcg::seed(seed);
+            prop(&mut rng, case);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Run with the default number of cases.
+pub fn check(name: &str, prop: impl Fn(&mut Pcg, usize)) {
+    check_named(name, default_cases(), prop);
+}
+
+/// Helpers for building random test inputs.
+pub mod gen {
+    use super::Pcg;
+
+    /// Random length in [lo, hi].
+    pub fn len(rng: &mut Pcg, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    /// Vector of uniform values in [lo, hi).
+    pub fn vec_f64(rng: &mut Pcg, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| rng.range_f64(lo, hi)).collect()
+    }
+
+    /// Random label assignment over k classes.
+    pub fn labels(rng: &mut Pcg, n: usize, k: usize) -> Vec<usize> {
+        (0..n).map(|_| rng.below(k)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_named("sum-commutes", 16, |rng, _| {
+            let a = rng.f64();
+            let b = rng.f64();
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check_named("always-fails", 4, |_, _| panic!("boom"));
+        });
+        let msg = match r {
+            Err(e) => e.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(_) => panic!("should have failed"),
+        };
+        assert!(msg.contains("seed"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+}

@@ -1,0 +1,265 @@
+//! Deterministic pseudo-random number generation and the samplers the paper
+//! needs (uniform, Normal for RF/Gaussian, Cauchy for RF/Laplacian,
+//! Gamma(2, σ) for Random Binning grid widths).
+//!
+//! Offline build: no `rand` crate in the vendor set, so we carry our own
+//! PCG-XSH-RR 64/32 generator (O'Neill 2014). It is deterministic across
+//! platforms, which the experiment protocol relies on ("all methods use the
+//! same random seeds").
+
+/// PCG-XSH-RR 64/32: 64-bit LCG state, 32-bit xorshift-rotated output.
+#[derive(Clone, Debug)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg {
+    /// Create a generator from a seed and a stream id (distinct streams are
+    /// statistically independent).
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Single-arg constructor with the default stream.
+    pub fn seed(seed: u64) -> Self {
+        Self::new(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    /// Derive an independent child generator (for per-thread / per-grid use).
+    pub fn split(&mut self, tag: u64) -> Pcg {
+        let s = self.next_u64();
+        Pcg::new(s ^ tag.wrapping_mul(0x9e37_79b9_7f4a_7c15), tag.wrapping_add(1))
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n). Unbiased via rejection (Lemire-style).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        // 64-bit multiply-shift with rejection on the low word.
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n.wrapping_neg() % n || n.is_power_of_two() {
+                return (m >> 64) as usize;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (cached second value dropped for
+    /// simplicity; throughput is not RNG-bound anywhere in the pipeline).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 > 1e-300 {
+                let u2 = self.f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Standard Cauchy: the ω distribution for RF approximation of the
+    /// Laplacian kernel k(δ)=exp(-|δ|/σ) (Fourier transform pairs).
+    pub fn cauchy(&mut self) -> f64 {
+        let u = self.f64();
+        (std::f64::consts::PI * (u - 0.5)).tan()
+    }
+
+    /// Exponential(1).
+    #[inline]
+    pub fn exponential(&mut self) -> f64 {
+        let mut u = self.f64();
+        if u <= 0.0 {
+            u = f64::MIN_POSITIVE;
+        }
+        -(1.0 - u).ln()
+    }
+
+    /// Gamma(shape=2, scale): the RB width distribution for the Laplacian
+    /// kernel. p(ω) ∝ ω·k″(ω) with k(δ)=e^{−δ/σ} gives p(ω) = ω/σ² e^{−ω/σ},
+    /// i.e. Gamma(2, σ) = σ·(E₁+E₂), sum of two unit exponentials.
+    pub fn gamma2(&mut self, scale: f64) -> f64 {
+        scale * (self.exponential() + self.exponential())
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher–Yates on an
+    /// index map; O(k) memory when k ≪ n via hash map).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} from {n}");
+        use std::collections::HashMap;
+        let mut swaps: HashMap<usize, usize> = HashMap::new();
+        let mut out = Vec::with_capacity(k);
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            let vj = *swaps.get(&j).unwrap_or(&j);
+            let vi = *swaps.get(&i).unwrap_or(&i);
+            out.push(vj);
+            swaps.insert(j, vi);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg::seed(42);
+        let mut b = Pcg::seed(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn distinct_seeds_distinct_streams() {
+        let mut a = Pcg::seed(1);
+        let mut b = Pcg::seed(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut r = Pcg::seed(7);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn below_is_unbiased_small() {
+        let mut r = Pcg::seed(3);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[r.below(7)] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "count {c}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg::seed(11);
+        let n = 200_000;
+        let (mut m1, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            m1 += x;
+            m2 += x * x;
+        }
+        m1 /= n as f64;
+        m2 /= n as f64;
+        assert!(m1.abs() < 0.02, "mean {m1}");
+        assert!((m2 - 1.0).abs() < 0.03, "var {m2}");
+    }
+
+    #[test]
+    fn gamma2_moments() {
+        // Gamma(2, s): mean 2s, var 2s².
+        let mut r = Pcg::seed(13);
+        let s = 0.7;
+        let n = 200_000;
+        let mut m1 = 0.0;
+        let mut m2 = 0.0;
+        for _ in 0..n {
+            let x = r.gamma2(s);
+            assert!(x > 0.0);
+            m1 += x;
+            m2 += x * x;
+        }
+        m1 /= n as f64;
+        m2 = m2 / n as f64 - m1 * m1;
+        assert!((m1 - 2.0 * s).abs() < 0.02, "mean {m1}");
+        assert!((m2 - 2.0 * s * s).abs() < 0.05, "var {m2}");
+    }
+
+    #[test]
+    fn cauchy_median_zero() {
+        let mut r = Pcg::seed(17);
+        let n = 100_000;
+        let below = (0..n).filter(|_| r.cauchy() < 0.0).count();
+        assert!((below as f64 / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Pcg::seed(19);
+        let idx = r.sample_indices(1000, 100);
+        assert_eq!(idx.len(), 100);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 100);
+        assert!(*sorted.last().unwrap() < 1000);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg::seed(23);
+        let mut xs: Vec<usize> = (0..500).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..500).collect::<Vec<_>>());
+        assert_ne!(xs, (0..500).collect::<Vec<_>>());
+    }
+}

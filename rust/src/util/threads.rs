@@ -1,0 +1,223 @@
+//! Scoped-thread data parallelism (no rayon in the offline vendor set).
+//!
+//! The paper parallelizes RB generation over grids and the solver matvecs
+//! over row panels; both map onto `parallel_for_chunks` below. Thread count
+//! comes from `SCRB_THREADS` or `std::thread::available_parallelism`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("SCRB_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(chunk_index, start, end)` over `[0, n)` split into contiguous
+/// chunks, one logical chunk per worker, using scoped threads.
+///
+/// `f` must be `Sync` (shared by reference across workers). For mutable
+/// output, give each chunk its own disjoint slice via `split_at_mut` outside
+/// or use interior indexing with non-overlapping ranges.
+pub fn parallel_for_chunks<F>(n: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    let nt = num_threads().min(n.max(1));
+    if nt <= 1 || n == 0 {
+        f(0, 0, n);
+        return;
+    }
+    let chunk = n.div_ceil(nt);
+    std::thread::scope(|s| {
+        for t in 0..nt {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let fr = &f;
+            s.spawn(move || fr(t, lo, hi));
+        }
+    });
+}
+
+/// Dynamic work-stealing loop over `[0, n)` in blocks of `block`; good when
+/// per-item cost is skewed (e.g. RB grids with different bin counts).
+pub fn parallel_for_dynamic<F>(n: usize, block: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let nt = num_threads().min(n.max(1));
+    if nt <= 1 || n == 0 {
+        f(0, n);
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..nt {
+            let fr = &f;
+            let cur = &cursor;
+            s.spawn(move || loop {
+                let lo = cur.fetch_add(block, Ordering::Relaxed);
+                if lo >= n {
+                    break;
+                }
+                let hi = (lo + block).min(n);
+                fr(lo, hi);
+            });
+        }
+    });
+}
+
+/// Map each index in `[0, n)` to a value, in parallel, preserving order.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    parallel_chunks_mut(&mut out, num_threads(), |start, slice| {
+        for (k, slot) in slice.iter_mut().enumerate() {
+            *slot = f(start + k);
+        }
+    });
+    out
+}
+
+/// Parallel mutable-slice map: split `out` into per-chunk disjoint slices and
+/// call `f(start_index, slice)` on each in parallel.
+pub fn parallel_chunks_mut<T, F>(out: &mut [T], n_chunks: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = out.len();
+    if n == 0 {
+        return;
+    }
+    let nt = n_chunks.clamp(1, n);
+    let chunk = n.div_ceil(nt);
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut start = 0usize;
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            let fr = &f;
+            let st = start;
+            s.spawn(move || fr(st, head));
+            start += take;
+            rest = tail;
+        }
+    });
+}
+
+/// Row-aligned parallel mutable map: split `out` (a row-major buffer with
+/// rows of `row_len` elements) into whole-row chunks and call
+/// `f(first_row_index, rows_slice)` on each in parallel.
+pub fn parallel_rows_mut<T, F>(out: &mut [T], row_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(row_len > 0 && out.len() % row_len == 0, "buffer not row-aligned");
+    let n_rows = out.len() / row_len;
+    if n_rows == 0 {
+        return;
+    }
+    let nt = num_threads().min(n_rows);
+    let rows_per = n_rows.div_ceil(nt);
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut row0 = 0usize;
+        while !rest.is_empty() {
+            let take = (rows_per * row_len).min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            let fr = &f;
+            let r0 = row0;
+            s.spawn(move || fr(r0, head));
+            row0 += take / row_len;
+            rest = tail;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn chunks_cover_everything_once() {
+        let n = 10_007;
+        let acc = AtomicU64::new(0);
+        parallel_for_chunks(n, |_, lo, hi| {
+            let mut s = 0u64;
+            for i in lo..hi {
+                s += i as u64;
+            }
+            acc.fetch_add(s, Ordering::Relaxed);
+        });
+        assert_eq!(acc.load(Ordering::Relaxed), (n as u64 - 1) * n as u64 / 2);
+    }
+
+    #[test]
+    fn dynamic_covers_everything_once() {
+        let n = 5000;
+        let acc = AtomicU64::new(0);
+        parallel_for_dynamic(n, 64, |lo, hi| {
+            acc.fetch_add((hi - lo) as u64, Ordering::Relaxed);
+        });
+        assert_eq!(acc.load(Ordering::Relaxed), n as u64);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let v = parallel_map(1000, |i| i * i);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * i);
+        }
+    }
+
+    #[test]
+    fn chunks_mut_writes_disjoint() {
+        let mut v = vec![0usize; 777];
+        parallel_chunks_mut(&mut v, 8, |start, s| {
+            for (k, x) in s.iter_mut().enumerate() {
+                *x = start + k;
+            }
+        });
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i);
+        }
+    }
+
+    #[test]
+    fn rows_mut_aligned_and_complete() {
+        let mut v = vec![0usize; 35 * 7];
+        parallel_rows_mut(&mut v, 7, |row0, rows| {
+            assert_eq!(rows.len() % 7, 0);
+            for (k, x) in rows.iter_mut().enumerate() {
+                *x = (row0 * 7) + k;
+            }
+        });
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i);
+        }
+    }
+
+    #[test]
+    fn single_item_runs_inline() {
+        let acc = AtomicU64::new(0);
+        parallel_for_chunks(1, |_, lo, hi| {
+            acc.fetch_add((hi - lo) as u64, Ordering::Relaxed);
+        });
+        assert_eq!(acc.load(Ordering::Relaxed), 1);
+    }
+}

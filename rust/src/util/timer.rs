@@ -1,0 +1,94 @@
+//! Per-stage wallclock accounting for the pipeline (the paper reports RB
+//! generation / eigendecomposition / K-means / total, Fig. 4).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Accumulates named stage durations; a stage can run multiple times.
+#[derive(Default, Clone, Debug)]
+pub struct StageTimer {
+    stages: BTreeMap<String, Duration>,
+    order: Vec<String>,
+}
+
+impl StageTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `name`, returning its value.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let v = f();
+        self.add(name, t0.elapsed());
+        v
+    }
+
+    pub fn add(&mut self, name: &str, d: Duration) {
+        if !self.stages.contains_key(name) {
+            self.order.push(name.to_string());
+        }
+        *self.stages.entry(name.to_string()).or_default() += d;
+    }
+
+    pub fn get(&self, name: &str) -> Duration {
+        self.stages.get(name).copied().unwrap_or_default()
+    }
+
+    pub fn secs(&self, name: &str) -> f64 {
+        self.get(name).as_secs_f64()
+    }
+
+    pub fn total(&self) -> Duration {
+        self.stages.values().sum()
+    }
+
+    /// Stage names in first-seen order.
+    pub fn names(&self) -> &[String] {
+        &self.order
+    }
+
+    /// Merge another timer into this one.
+    pub fn merge(&mut self, other: &StageTimer) {
+        for name in other.names() {
+            self.add(name, other.get(name));
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        for name in &self.order {
+            s.push_str(&format!("{name}: {:.3}s  ", self.secs(name)));
+        }
+        s.push_str(&format!("total: {:.3}s", self.total().as_secs_f64()));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_orders() {
+        let mut t = StageTimer::new();
+        t.time("a", || std::thread::sleep(Duration::from_millis(2)));
+        t.time("b", || {});
+        t.time("a", || std::thread::sleep(Duration::from_millis(2)));
+        assert_eq!(t.names(), &["a".to_string(), "b".to_string()]);
+        assert!(t.secs("a") >= 0.004);
+        assert!(t.total() >= t.get("a"));
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = StageTimer::new();
+        a.add("x", Duration::from_millis(5));
+        let mut b = StageTimer::new();
+        b.add("x", Duration::from_millis(7));
+        b.add("y", Duration::from_millis(1));
+        a.merge(&b);
+        assert_eq!(a.get("x"), Duration::from_millis(12));
+        assert_eq!(a.get("y"), Duration::from_millis(1));
+    }
+}

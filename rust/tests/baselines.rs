@@ -1,0 +1,114 @@
+//! Cross-method behavioural tests: the *relationships* between methods the
+//! paper's evaluation hinges on (who wins where), at test-sized scales.
+
+use scrb::cluster::{Env, MethodKind};
+use scrb::config::{Engine, Kernel, PipelineConfig};
+use scrb::data::synth;
+use scrb::metrics::{accuracy, average_rank_scores, nmi};
+
+fn cfg(k: usize, r: usize, sigma: f64) -> PipelineConfig {
+    let mut cfg = PipelineConfig::default();
+    cfg.engine = Engine::Native;
+    cfg.k = k;
+    cfg.r = r;
+    cfg.kernel = Kernel::Laplacian { sigma };
+    cfg.kmeans_replicates = 3;
+    cfg
+}
+
+#[test]
+fn rb_converges_faster_than_rf_at_small_r() {
+    // Theorem 1's practical consequence (and Fig. 2's shape): at a small
+    // feature budget, SC_RB extracts more of the kernel than SC_RF.
+    // Averaged over seeds to avoid flakiness.
+    let mut rb_total = 0.0;
+    let mut rf_total = 0.0;
+    for seed in 0..3u64 {
+        let ds = synth::concentric_rings(400, 2, 2, 0.12, 100 + seed);
+        let mut c = cfg(2, 32, 0.3);
+        c.seed = seed;
+        let rb = MethodKind::ScRb.run(&Env::new(c.clone()), &ds.x);
+        let rf = MethodKind::ScRf.run(&Env::new(c), &ds.x);
+        rb_total += nmi(&rb.labels, &ds.y);
+        rf_total += nmi(&rf.labels, &ds.y);
+    }
+    assert!(
+        rb_total >= rf_total,
+        "SC_RB ({rb_total:.3}) should beat SC_RF ({rf_total:.3}) at R=32"
+    );
+}
+
+#[test]
+fn sc_family_beats_similarity_family_on_manifolds() {
+    // §5.1: "SC type methods … generally achieve better ranking scores
+    // compared to similarity-based methods" — test on ring geometry.
+    let ds = synth::concentric_rings(500, 2, 2, 0.1, 77);
+    let c = cfg(2, 128, 0.3);
+    let sc_rb = MethodKind::ScRb.run(&Env::new(c.clone()), &ds.x);
+    let kk_rf = MethodKind::KkRf.run(&Env::new(c), &ds.x);
+    let a_rb = accuracy(&sc_rb.labels, &ds.y);
+    let a_kk = accuracy(&kk_rf.labels, &ds.y);
+    assert!(
+        a_rb > a_kk + 0.1,
+        "Laplacian-approx SC_RB ({a_rb:.3}) should beat W-approx KK_RF ({a_kk:.3}) on rings"
+    );
+}
+
+#[test]
+fn rank_aggregation_orders_methods_sensibly() {
+    // run four methods on an easy dataset and check the rank machinery
+    let ds = synth::gaussian_blobs(250, 4, 3, 9.0, 55);
+    let c = cfg(3, 128, 0.5);
+    let methods = [MethodKind::ScRb, MethodKind::KMeans, MethodKind::ScNys, MethodKind::KkRs];
+    let scores: Vec<_> = methods
+        .iter()
+        .map(|m| {
+            let out = m.run(&Env::new(c.clone()), &ds.x);
+            scrb::metrics::all_metrics(&out.labels, &ds.y)
+        })
+        .collect();
+    let ranks = average_rank_scores(&scores);
+    assert_eq!(ranks.len(), 4);
+    let sum: f64 = ranks.iter().sum();
+    assert!((sum - (1..=4).sum::<usize>() as f64).abs() < 1e-9, "ranks {ranks:?}");
+}
+
+#[test]
+fn nystrom_and_lsc_track_exact_sc_on_blobs() {
+    let ds = synth::gaussian_blobs(300, 3, 3, 9.0, 61);
+    let c = cfg(3, 64, 0.5);
+    let exact = MethodKind::ScExact.run(&Env::new(c.clone()), &ds.x);
+    let nys = MethodKind::ScNys.run(&Env::new(c.clone()), &ds.x);
+    let lsc = MethodKind::ScLsc.run(&Env::new(c), &ds.x);
+    let a_exact = accuracy(&exact.labels, &ds.y);
+    let a_nys = accuracy(&nys.labels, &ds.y);
+    let a_lsc = accuracy(&lsc.labels, &ds.y);
+    assert!(a_exact > 0.95, "exact {a_exact}");
+    assert!(a_nys > a_exact - 0.1, "nystrom {a_nys} vs exact {a_exact}");
+    assert!(a_lsc > a_exact - 0.1, "lsc {a_lsc} vs exact {a_exact}");
+}
+
+#[test]
+fn gaussian_kernel_path_works_for_rf_family() {
+    // RF methods support both kernels; smoke the Gaussian path end-to-end
+    let ds = synth::gaussian_blobs(250, 4, 2, 8.0, 67);
+    let mut c = cfg(2, 256, 1.0);
+    c.kernel = Kernel::Gaussian { sigma: 1.0 };
+    for m in [MethodKind::ScRf, MethodKind::SvRf, MethodKind::KkRf] {
+        let out = m.run(&Env::new(c.clone()), &ds.x);
+        let acc = accuracy(&out.labels, &ds.y);
+        assert!(acc > 0.85, "{m:?} gaussian acc {acc}");
+    }
+}
+
+#[test]
+fn poker_like_data_flattens_method_differences() {
+    // the paper's poker row: near-structureless data → everyone ties-ish
+    let ds = synth::paper_benchmark("poker", 4096, 5);
+    let c = cfg(ds.k, 64, 0.5);
+    let rb = MethodKind::ScRb.run(&Env::new(c.clone()), &ds.x);
+    let km = MethodKind::KMeans.run(&Env::new(c), &ds.x);
+    let n_rb = nmi(&rb.labels, &ds.y);
+    let n_km = nmi(&km.labels, &ds.y);
+    assert!(n_rb < 0.2 && n_km < 0.2, "poker-like should be near-structureless: {n_rb} {n_km}");
+}

@@ -1,0 +1,146 @@
+//! End-to-end pipeline integration: the full Algorithm 2 stack (data →
+//! RB → degrees → SVD → K-means → metrics) and its agreement with exact
+//! spectral clustering — the paper's central claim, in miniature.
+
+use scrb::cluster::{Env, MethodKind};
+use scrb::config::{Kernel, PipelineConfig, Solver};
+use scrb::coordinator::{experiment, Coordinator};
+use scrb::data::synth;
+use scrb::metrics::{accuracy, all_metrics, nmi};
+
+fn native_cfg() -> PipelineConfig {
+    let mut cfg = PipelineConfig::default();
+    cfg.engine = scrb::config::Engine::Native;
+    cfg.kmeans_replicates = 3;
+    cfg
+}
+
+#[test]
+fn sc_rb_converges_to_exact_sc_in_r() {
+    // Fig. 2 in miniature: as R grows, SC_RB's clustering approaches the
+    // exact SC result on a non-trivial (ring) geometry.
+    let ds = synth::concentric_rings(500, 2, 2, 0.12, 21);
+    let mut cfg = native_cfg();
+    cfg.k = 2;
+    cfg.kernel = Kernel::Laplacian { sigma: 0.2 };
+
+    let exact = MethodKind::ScExact.run(&Env::new(cfg.clone()), &ds.x);
+    let exact_acc = accuracy(&exact.labels, &ds.y);
+    assert!(exact_acc > 0.95, "exact SC should solve rings: {exact_acc}");
+
+    let mut accs = Vec::new();
+    for r in [8usize, 64, 512] {
+        cfg.r = r;
+        let rb = MethodKind::ScRb.run(&Env::new(cfg.clone()), &ds.x);
+        accs.push(accuracy(&rb.labels, &ds.y));
+    }
+    assert!(
+        accs[2] >= exact_acc - 0.03,
+        "R=512 should reach exact SC: rb={accs:?} exact={exact_acc}"
+    );
+    assert!(accs[2] >= accs[0] - 0.02, "accuracy should not degrade with R: {accs:?}");
+}
+
+#[test]
+fn sc_beats_kmeans_on_nonconvex() {
+    // the motivating contrast of the paper's intro
+    let ds = synth::two_moons(800, 0.06, 5);
+    let mut cfg = native_cfg();
+    cfg.k = 2;
+    cfg.r = 256;
+    cfg.kernel = Kernel::Laplacian { sigma: 0.15 };
+    let km = MethodKind::KMeans.run(&Env::new(cfg.clone()), &ds.x);
+    let rb = MethodKind::ScRb.run(&Env::new(cfg), &ds.x);
+    let km_nmi = nmi(&km.labels, &ds.y);
+    let rb_nmi = nmi(&rb.labels, &ds.y);
+    assert!(
+        rb_nmi > km_nmi + 0.2,
+        "SC_RB ({rb_nmi:.3}) should beat K-means ({km_nmi:.3}) on moons"
+    );
+}
+
+#[test]
+fn all_methods_produce_valid_output_on_benchmark() {
+    // every Table-2 method runs end-to-end on a scaled paper benchmark
+    let coord = Coordinator::new(native_cfg(), 2048);
+    let ds = experiment::dataset(&coord, "pendigits");
+    let cfg = coord.cfg_for(&ds, None);
+    for kind in MethodKind::ALL {
+        let run = coord.run_method(kind, &ds, &cfg);
+        assert_eq!(run.method, kind);
+        let m = run.metrics;
+        for v in m.as_array() {
+            assert!((0.0..=1.0).contains(&v), "{kind:?} metric out of range: {m:?}");
+        }
+        // any real method should beat the trivial lower bound by a margin
+        assert!(m.accuracy >= 1.0 / ds.k as f64 * 0.8, "{kind:?} acc {}", m.accuracy);
+    }
+}
+
+#[test]
+fn solver_choice_does_not_change_clusters_when_converged() {
+    let ds = synth::gaussian_blobs(300, 4, 3, 8.0, 31);
+    let mut cfg = native_cfg();
+    cfg.k = 3;
+    cfg.r = 128;
+    cfg.kernel = Kernel::Laplacian { sigma: 0.5 };
+    cfg.svd_tol = 1e-8;
+    cfg.svd_max_iters = 30_000;
+    let mut outs = Vec::new();
+    for solver in [Solver::Davidson, Solver::Lanczos] {
+        cfg.solver = solver;
+        let out = MethodKind::ScRb.run(&Env::new(cfg.clone()), &ds.x);
+        assert!(out.info.svd.as_ref().unwrap().converged, "{solver:?} converged");
+        outs.push(out);
+    }
+    // same partition up to label permutation
+    let m = all_metrics(&outs[0].labels, &outs[1].labels);
+    assert!(m.accuracy > 0.98, "solver disagreement: {m:?}");
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let ds = synth::paper_benchmark("cod_rna", 2048, 3);
+    let coord = Coordinator::new(native_cfg(), 2048);
+    let cfg = coord.cfg_for(&ds, None);
+    let a = coord.run_method(MethodKind::ScRb, &ds, &cfg);
+    let b = coord.run_method(MethodKind::ScRb, &ds, &cfg);
+    assert_eq!(a.metrics, b.metrics, "same seed must give identical metrics");
+}
+
+#[test]
+fn libsvm_file_roundtrip_through_pipeline() {
+    // write a tiny LibSVM file, load it, cluster it
+    let dir = std::env::temp_dir().join("scrb_test_libsvm");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("toy.libsvm");
+    let mut text = String::new();
+    let ds = synth::gaussian_blobs(120, 3, 2, 8.0, 13);
+    for i in 0..ds.n() {
+        text.push_str(&format!("{}", ds.y[i]));
+        for (j, v) in ds.x.row(i).iter().enumerate() {
+            text.push_str(&format!(" {}:{:.6}", j + 1, v));
+        }
+        text.push('\n');
+    }
+    std::fs::write(&path, text).unwrap();
+    let mut loaded = scrb::data::load_libsvm(path.to_str().unwrap()).unwrap();
+    loaded.minmax_normalize();
+    assert_eq!(loaded.n(), 120);
+    assert_eq!(loaded.k, 2);
+    let mut cfg = native_cfg();
+    cfg.k = 2;
+    cfg.r = 64;
+    cfg.kernel = Kernel::Laplacian { sigma: 0.4 };
+    let out = MethodKind::ScRb.run(&Env::new(cfg), &loaded.x);
+    assert!(accuracy(&out.labels, &loaded.y) > 0.9);
+}
+
+#[test]
+fn kappa_rate_improves_over_plain_rf_rate() {
+    // Theorem 1's κ: RB's measured κ should exceed 1 (the plain-RF rate)
+    // by a clear margin on real-ish data.
+    let ds = synth::paper_benchmark("pendigits", 512, 7);
+    let rb = scrb::rb::rb_features(&ds.x, 64, 0.25, 3);
+    assert!(rb.kappa > 2.0, "κ = {} should exceed plain-RF rate 1", rb.kappa);
+}

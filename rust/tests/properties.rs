@@ -1,0 +1,209 @@
+//! Property-based invariants (via the in-tree `util::prop` harness —
+//! proptest is unavailable offline). Each property runs across many
+//! seeded random cases and reports the reproducing seed on failure.
+
+use scrb::linalg::Mat;
+use scrb::metrics;
+use scrb::rb::rb_features;
+use scrb::sparse::{implicit_degrees, normalize_by_degree, Csr};
+use scrb::util::prop::{check, gen};
+use scrb::util::rng::Pcg;
+
+fn rand_mat(rng: &mut Pcg, r: usize, c: usize, lo: f64, hi: f64) -> Mat {
+    Mat::from_vec(r, c, (0..r * c).map(|_| rng.range_f64(lo, hi)).collect())
+}
+
+// --------------------------------------------------------------- RB / graph
+
+#[test]
+fn prop_rb_row_structure() {
+    // ∀ data, R, σ: every row of Z has exactly R nonzeros of value 1/√R,
+    // and the implicit degrees equal the explicit Gram row sums.
+    check("rb-row-structure", |rng, _case| {
+        let n = gen::len(rng, 5, 60);
+        let d = gen::len(rng, 1, 6);
+        let r = gen::len(rng, 1, 24);
+        let sigma = rng.range_f64(0.1, 3.0);
+        let x = rand_mat(rng, n, d, 0.0, 1.0);
+        let rb = rb_features(&x, r, sigma, rng.next_u64());
+        assert_eq!(rb.z.nnz(), n * r);
+        let v = 1.0 / (r as f64).sqrt();
+        assert!(rb.z.data.iter().all(|&x| (x - v).abs() < 1e-14));
+        let deg = implicit_degrees(&rb.z);
+        let w = rb.z.gram_dense();
+        for i in 0..n {
+            let expl: f64 = w.row(i).iter().sum();
+            assert!((deg[i] - expl).abs() < 1e-9 * (1.0 + expl));
+        }
+    });
+}
+
+#[test]
+fn prop_normalized_gram_is_stochastic_like() {
+    // Ẑ Ẑᵀ row sums … D^{-1/2} W D^{-1/2}: its Perron vector is D^{1/2}1;
+    // check all eigen-relevant invariants: symmetry, PSD diag, and row sums
+    // of D^{-1/2}WD^{-1/2}·D^{1/2}1 = D^{1/2}1.
+    check("normalized-gram-perron", |rng, _case| {
+        let n = gen::len(rng, 5, 40);
+        let d = gen::len(rng, 1, 4);
+        let r = gen::len(rng, 2, 16);
+        let x = rand_mat(rng, n, d, 0.0, 1.0);
+        let rb = rb_features(&x, r, 0.5, rng.next_u64());
+        let deg = implicit_degrees(&rb.z);
+        let zhat = normalize_by_degree(rb.z, &deg);
+        let sqrt_d: Vec<f64> = deg.iter().map(|v| v.sqrt()).collect();
+        // S·(D^{1/2}1) = D^{1/2}1
+        let t = zhat.t_matvec(&sqrt_d);
+        let s_sqrt_d = zhat.matvec(&t);
+        for i in 0..n {
+            assert!(
+                (s_sqrt_d[i] - sqrt_d[i]).abs() < 1e-8 * (1.0 + sqrt_d[i]),
+                "Perron violated at {i}: {} vs {}",
+                s_sqrt_d[i],
+                sqrt_d[i]
+            );
+        }
+    });
+}
+
+// ------------------------------------------------------------------ sparse
+
+#[test]
+fn prop_csr_matvec_linearity_and_transpose_adjoint() {
+    // ⟨A x, y⟩ = ⟨x, Aᵀ y⟩ for random sparse A
+    check("csr-adjoint", |rng, _case| {
+        let n = gen::len(rng, 2, 50);
+        let m = gen::len(rng, 2, 50);
+        let per = gen::len(rng, 1, 6).min(m);
+        let mut rows = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut entries = Vec::new();
+            for _ in 0..per {
+                entries.push((rng.below(m) as u32, rng.range_f64(-2.0, 2.0)));
+            }
+            rows.push(entries);
+        }
+        let a = Csr::from_rows(n, m, rows);
+        let x = gen::vec_f64(rng, m, -1.0, 1.0);
+        let y = gen::vec_f64(rng, n, -1.0, 1.0);
+        let ax = a.matvec(&x);
+        let aty = a.t_matvec(&y);
+        let lhs: f64 = ax.iter().zip(&y).map(|(a, b)| a * b).sum();
+        let rhs: f64 = x.iter().zip(&aty).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-9 * (1.0 + lhs.abs()), "{lhs} vs {rhs}");
+    });
+}
+
+// ----------------------------------------------------------------- metrics
+
+#[test]
+fn prop_metrics_bounded_and_permutation_invariant() {
+    check("metrics-invariants", |rng, _case| {
+        let n = gen::len(rng, 2, 120);
+        let k = gen::len(rng, 1, 6);
+        let truth = gen::labels(rng, n, k);
+        let pred = gen::labels(rng, n, k);
+        let m = metrics::all_metrics(&pred, &truth);
+        for v in m.as_array() {
+            assert!((0.0..=1.0 + 1e-12).contains(&v), "{m:?}");
+        }
+        // permuting predicted label names changes nothing
+        let perm: Vec<usize> = {
+            let mut p: Vec<usize> = (0..k.max(1)).collect();
+            rng.shuffle(&mut p);
+            p
+        };
+        let renamed: Vec<usize> = pred.iter().map(|&c| perm[c]).collect();
+        let m2 = metrics::all_metrics(&renamed, &truth);
+        assert!((m.nmi - m2.nmi).abs() < 1e-9);
+        assert!((m.accuracy - m2.accuracy).abs() < 1e-9);
+        assert!((m.rand_index - m2.rand_index).abs() < 1e-9);
+        // symmetry of RI
+        let m3 = metrics::rand_index(&truth, &pred);
+        assert!((m.rand_index - m3).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn prop_accuracy_upper_bounds_and_perfect_case() {
+    check("accuracy-bounds", |rng, _case| {
+        let n = gen::len(rng, 2, 80);
+        let k = gen::len(rng, 1, 5);
+        let truth = gen::labels(rng, n, k);
+        // accuracy(truth, truth) == 1
+        assert!((metrics::accuracy(&truth, &truth) - 1.0).abs() < 1e-12);
+        // accuracy ≥ share of the largest true class (map-all-to-one bound)
+        let pred = vec![0usize; n];
+        let mut sizes = vec![0usize; k];
+        for &c in &truth {
+            sizes[c] += 1;
+        }
+        let maxshare = *sizes.iter().max().unwrap() as f64 / n as f64;
+        let acc = metrics::accuracy(&pred, &truth);
+        assert!(acc >= maxshare - 1e-12, "acc {acc} < max share {maxshare}");
+    });
+}
+
+// ------------------------------------------------------------------ kmeans
+
+#[test]
+fn prop_kmeans_labels_in_range_and_inertia_optimal_vs_random() {
+    check("kmeans-validity", |rng, case| {
+        let n = gen::len(rng, 10, 120);
+        let d = gen::len(rng, 1, 4);
+        let k = gen::len(rng, 1, 5).min(n);
+        let x = rand_mat(rng, n, d, -2.0, 2.0);
+        let opts = scrb::kmeans::KmeansOpts {
+            replicates: 2,
+            seed: case as u64,
+            ..scrb::kmeans::KmeansOpts::new(k)
+        };
+        let res = scrb::kmeans::kmeans(&x, &opts, &scrb::kmeans::NativeAssign);
+        assert_eq!(res.labels.len(), n);
+        assert!(res.labels.iter().all(|&l| (l as usize) < k));
+        assert!(res.inertia.is_finite() && res.inertia >= 0.0);
+        // inertia is no worse than assigning everything to the mean
+        let mut mean = vec![0.0; d];
+        for i in 0..n {
+            for (j, v) in x.row(i).iter().enumerate() {
+                mean[j] += v / n as f64;
+            }
+        }
+        let single: f64 = (0..n).map(|i| scrb::linalg::sqdist(x.row(i), &mean)).sum();
+        assert!(res.inertia <= single + 1e-9, "{} > {}", res.inertia, single);
+    });
+}
+
+// ----------------------------------------------------------------- eigen
+
+#[test]
+fn prop_svd_values_match_dense_on_random_sparse() {
+    check("svds-vs-dense", |rng, _case| {
+        let n = gen::len(rng, 10, 50);
+        let m = gen::len(rng, 5, 25);
+        let per = gen::len(rng, 1, 4).min(m);
+        let mut rows = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut entries = Vec::new();
+            for _ in 0..per {
+                entries.push((rng.below(m) as u32, rng.range_f64(0.05, 1.0)));
+            }
+            rows.push(entries);
+        }
+        let a = Csr::from_rows(n, m, rows);
+        let dense = scrb::linalg::svd_thin(&a.to_dense());
+        let k = 2.min(m);
+        let mut opts = scrb::eigen::SvdsOpts::new(k, scrb::config::Solver::Davidson);
+        opts.tol = 1e-8;
+        opts.max_matvecs = 40_000;
+        let r = scrb::eigen::svds(&a, &opts, rng.next_u64());
+        for j in 0..k {
+            assert!(
+                (r.s[j] - dense.s[j]).abs() < 1e-5 * (1.0 + dense.s[0]),
+                "σ_{j}: {} vs {}",
+                r.s[j],
+                dense.s[j]
+            );
+        }
+    });
+}

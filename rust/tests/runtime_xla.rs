@@ -1,0 +1,150 @@
+//! Integration: the AOT artifacts (built by `make artifacts`) loaded and
+//! executed through the PJRT runtime, validated against the native Rust
+//! implementations of the same math (which are themselves validated
+//! against the jnp oracles on the python side — closing the three-layer
+//! loop).
+//!
+//! Tests skip (pass trivially) when `artifacts/` is absent so plain
+//! `cargo test` works before `make artifacts`; `make test` runs both.
+
+use scrb::config::Kernel;
+use scrb::kernels::kernel_block;
+use scrb::kmeans::{AssignEngine, NativeAssign};
+use scrb::linalg::Mat;
+use scrb::rf::RfMap;
+use scrb::runtime::{ArtifactKind, XlaAssign, XlaRuntime};
+use scrb::util::rng::Pcg;
+
+fn runtime() -> Option<XlaRuntime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("[skip] artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(XlaRuntime::load("artifacts").expect("runtime should load when artifacts exist"))
+}
+
+fn rand_mat(rng: &mut Pcg, r: usize, c: usize) -> Mat {
+    Mat::from_vec(r, c, (0..r * c).map(|_| rng.range_f64(-1.0, 1.0)).collect())
+}
+
+#[test]
+fn kmeans_assign_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg::seed(1);
+    // n not a tile multiple, d not a variant dim, k < kp — exercises padding
+    for (n, d, k) in [(500usize, 7usize, 3usize), (2048, 32, 10), (3000, 60, 26)] {
+        let x = rand_mat(&mut rng, n, d);
+        let c = rand_mat(&mut rng, k, d);
+        let (labels, dists) = rt.kmeans_assign(&x, &c).expect("variant should fit");
+        let (nlabels, ndists) = NativeAssign.assign(&x, &c);
+        let mut mismatches = 0;
+        for i in 0..n {
+            // f32 vs f64 can flip ties; tolerate only near-tie flips
+            if labels[i] != nlabels[i] {
+                let diff = (dists[i] - ndists[i]).abs();
+                assert!(diff < 1e-3 * (1.0 + ndists[i]), "row {i}: {} vs {}", dists[i], ndists[i]);
+                mismatches += 1;
+            } else {
+                assert!(
+                    (dists[i] - ndists[i]).abs() < 1e-3 * (1.0 + ndists[i]),
+                    "row {i} dist {} vs {}",
+                    dists[i],
+                    ndists[i]
+                );
+            }
+        }
+        assert!(mismatches < n / 100 + 2, "too many label mismatches: {mismatches}");
+    }
+}
+
+#[test]
+fn kmeans_assign_rejects_oversize() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg::seed(2);
+    let x = rand_mat(&mut rng, 64, 900); // d > 800: no variant
+    let c = rand_mat(&mut rng, 3, 900);
+    assert!(rt.kmeans_assign(&x, &c).is_none());
+    let x2 = rand_mat(&mut rng, 64, 8);
+    let c2 = rand_mat(&mut rng, 40, 8); // k > kp=32
+    assert!(rt.kmeans_assign(&x2, &c2).is_none());
+}
+
+#[test]
+fn kernel_blocks_match_native() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg::seed(3);
+    let x = rand_mat(&mut rng, 300, 20);
+    let y = rand_mat(&mut rng, 700, 20); // forces multiple y tiles
+    let sigma = 0.8;
+
+    let lap = rt
+        .kernel_block(ArtifactKind::KernelBlockLaplacian, &x, &y, 1.0 / sigma)
+        .expect("laplacian variant");
+    let lap_native = kernel_block(Kernel::Laplacian { sigma }, &x, &y);
+    assert!(
+        lap.sub(&lap_native).frob_norm() < 1e-4 * lap_native.frob_norm(),
+        "laplacian mismatch"
+    );
+
+    let gau = rt
+        .kernel_block(ArtifactKind::KernelBlockGaussian, &x, &y, 1.0 / (2.0 * sigma * sigma))
+        .expect("gaussian variant");
+    let gau_native = kernel_block(Kernel::Gaussian { sigma }, &x, &y);
+    assert!(
+        gau.sub(&gau_native).frob_norm() < 1e-4 * gau_native.frob_norm(),
+        "gaussian mismatch"
+    );
+}
+
+#[test]
+fn rf_features_match_native() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg::seed(4);
+    let x = rand_mat(&mut rng, 2500, 10); // two tiles
+    let kernel = Kernel::Gaussian { sigma: 1.0 };
+    let map = RfMap::sample(kernel, 10, 300, 7);
+    let mut z = rt.rf_features(&x, &map.w, &map.b).expect("rf variant");
+    z.scale((2.0 / 300f64).sqrt());
+    let zn = map.features(&x);
+    assert_eq!(z.rows, zn.rows);
+    assert_eq!(z.cols, zn.cols);
+    assert!(
+        z.sub(&zn).frob_norm() < 1e-4 * zn.frob_norm().max(1.0),
+        "rf mismatch {} vs {}",
+        z.frob_norm(),
+        zn.frob_norm()
+    );
+}
+
+#[test]
+fn xla_assign_engine_runs_kmeans() {
+    let Some(rt) = runtime() else { return };
+    let ds = scrb::data::gaussian_blobs(600, 4, 3, 9.0, 5);
+    let engine = XlaAssign { runtime: &rt, force: true };
+    let opts = scrb::kmeans::KmeansOpts { replicates: 3, ..scrb::kmeans::KmeansOpts::new(3) };
+    let result = scrb::kmeans::kmeans(&ds.x, &opts, &engine);
+    let labels: Vec<usize> = result.labels.iter().map(|&l| l as usize).collect();
+    let acc = scrb::metrics::accuracy(&labels, &ds.y);
+    assert!(acc > 0.95, "XLA-assign kmeans accuracy {acc}");
+}
+
+#[test]
+fn full_pipeline_with_xla_engine_matches_native() {
+    let Some(rt) = runtime() else { return };
+    use scrb::cluster::{Env, MethodKind};
+    use scrb::config::PipelineConfig;
+
+    let ds = scrb::data::two_moons(500, 0.05, 9);
+    let mut cfg = PipelineConfig::default();
+    cfg.k = 2;
+    cfg.r = 128;
+    cfg.kernel = Kernel::Laplacian { sigma: 0.15 };
+    cfg.kmeans_replicates = 3;
+
+    let native = MethodKind::ScRb.run(&Env::with_xla(cfg.clone(), None), &ds.x);
+    let xla = MethodKind::ScRb.run(&Env::with_xla(cfg, Some(&rt)), &ds.x);
+    let acc_native = scrb::metrics::accuracy(&native.labels, &ds.y);
+    let acc_xla = scrb::metrics::accuracy(&xla.labels, &ds.y);
+    assert!(acc_native > 0.9, "native {acc_native}");
+    assert!(acc_xla > 0.9, "xla {acc_xla}");
+}
