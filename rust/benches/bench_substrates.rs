@@ -1,9 +1,14 @@
 //! Substrate micro-benchmarks (the profile targets of the §Perf pass):
-//! RB generation throughput, sparse matvec/matmat, dense gemm, K-means
-//! assignment (native vs XLA ablation), kernel blocks (native vs XLA).
+//! RB generation throughput, sparse matvec/matmat on both substrates
+//! (Csr vs EllRb side-by-side, the eigensolver hot path), dense gemm,
+//! K-means assignment (native vs XLA ablation), kernel blocks (native vs
+//! XLA).
 //!
 //!     cargo bench --bench bench_substrates
 //!     SCRB_BENCH_BUDGET_MS=200 cargo bench   # quick mode
+//!
+//! Results are also written machine-readably to `BENCH_substrates.json`
+//! (override with SCRB_BENCH_JSON) — the cross-PR perf trajectory.
 
 use scrb::config::Kernel;
 use scrb::data::synth;
@@ -32,25 +37,50 @@ fn main() {
         println!("    -> {:.2e} point-grids/s", pts_per_s);
     }
 
-    // ---- sparse ops on a realistic Z
+    // ---- sparse substrates side-by-side on a realistic Z (the pendigits-
+    // scale hot path: N≈11k, R=256): EllRb (fixed-stride, strip-parallel
+    // transpose) vs the general Csr it bridges to.
     let rb = rb_features(x, 256, 0.25, 7);
-    let z = &rb.z;
+    let ell = &rb.z;
+    let csr = ell.to_csr();
+    let (n, d, nnz) = (ell.rows, ell.cols, ell.nnz());
     println!(
-        "    Z: {}x{} nnz={} ({} MB)",
-        z.rows,
-        z.cols,
-        z.nnz(),
-        z.bytes() / (1 << 20)
+        "    Z: {}x{} nnz={}  footprint: Csr {:.1} MB vs EllRb {:.1} MB",
+        n,
+        d,
+        nnz,
+        csr.bytes() as f64 / (1 << 20) as f64,
+        ell.bytes() as f64 / (1 << 20) as f64,
     );
-    let dense_v: Vec<f64> = (0..z.cols).map(|i| (i % 13) as f64).collect();
-    b.bench("csr_matvec (N x D)", || z.matvec(&dense_v));
-    let dense_u: Vec<f64> = (0..z.rows).map(|i| (i % 7) as f64).collect();
-    b.bench("csr_t_matvec (D x N)", || z.t_matvec(&dense_u));
-    let block = Mat::from_vec(z.cols, 10, (0..z.cols * 10).map(|i| (i % 5) as f64).collect());
-    b.bench("csr_matmat k=10", || z.matmat(&block));
-    let blockn = Mat::from_vec(z.rows, 10, (0..z.rows * 10).map(|i| (i % 5) as f64).collect());
-    b.bench("csr_t_matmat k=10", || z.t_matmat(&blockn));
-    b.bench("implicit_degrees", || implicit_degrees(z));
+    let dense_v: Vec<f64> = (0..d).map(|i| (i % 13) as f64).collect();
+    b.bench("csr_matvec (N x D)", || csr.matvec(&dense_v));
+    b.bench("ell_matvec (N x D)", || ell.matvec(&dense_v));
+    let dense_u: Vec<f64> = (0..n).map(|i| (i % 7) as f64).collect();
+    b.bench("csr_t_matvec (D x N)", || csr.t_matvec(&dense_u));
+    b.bench("ell_t_matvec (D x N)", || ell.t_matvec(&dense_u));
+    for k in [8usize, 32] {
+        let block = Mat::from_vec(d, k, (0..d * k).map(|i| (i % 5) as f64).collect());
+        b.bench(&format!("csr_matmat k={k}"), || csr.matmat(&block));
+        b.bench(&format!("ell_matmat k={k}"), || ell.matmat(&block));
+        let blockn = Mat::from_vec(n, k, (0..n * k).map(|i| (i % 5) as f64).collect());
+        b.bench(&format!("csr_t_matmat k={k}"), || csr.t_matmat(&blockn));
+        b.bench(&format!("ell_t_matmat k={k}"), || ell.t_matmat(&blockn));
+        // substrate traffic per t_matmat call: what each layout must stream
+        // (indices + values + B read + C write), plus the per-thread D×k
+        // accumulators the Csr path allocates, zeroes, and reduces.
+        let nt = scrb::util::threads::num_threads();
+        let csr_stream = 4 * nnz + 8 * nnz + 8 * (n + 1) + 8 * n * k + 8 * d * k;
+        let csr_scratch = 8 * d * k * nt * 2; // zero-fill + reduction traffic
+        let ell_stream = 4 * nnz + 8 * n + 8 * n * k + 8 * d * k;
+        println!(
+            "    t_matmat k={k} bytes/iter: Csr {:.1} MB (+{:.1} MB thread scratch) vs EllRb {:.1} MB",
+            csr_stream as f64 / (1 << 20) as f64,
+            csr_scratch as f64 / (1 << 20) as f64,
+            ell_stream as f64 / (1 << 20) as f64,
+        );
+    }
+    b.bench("implicit_degrees csr", || implicit_degrees(&csr));
+    b.bench("implicit_degrees ell", || ell.implicit_degrees());
 
     // ---- dense gemm (Rayleigh–Ritz shapes)
     let mut rng = Pcg::seed(3);
@@ -95,4 +125,12 @@ fn main() {
     }
 
     println!("\n{}", b.report());
+
+    // machine-readable trajectory (BENCH_*.json, one file per bench target)
+    let json_path =
+        std::env::var("SCRB_BENCH_JSON").unwrap_or_else(|_| "BENCH_substrates.json".into());
+    match b.write_json(&json_path) {
+        Ok(()) => println!("wrote {json_path}"),
+        Err(e) => eprintln!("[bench json not written: {e}]"),
+    }
 }

@@ -1,10 +1,13 @@
 //! **SC_RB — the paper's method (Algorithm 2).**
 //!
 //! 1. Build the sparse RB feature matrix Z (Algorithm 1) — the similarity
-//!    graph Ŵ = Z·Zᵀ is never materialized.
-//! 2. Degrees d = Z(Zᵀ1) (Eq. 6), Ẑ = D^{−1/2}Z.
+//!    graph Ŵ = Z·Zᵀ is never materialized. Z lands on the fixed-stride
+//!    [`crate::sparse::EllRb`] substrate, transpose layout included.
+//! 2. Degrees d = Z(Zᵀ1) (Eq. 6); Ẑ = D^{−1/2}Z folds into the per-row
+//!    scale vector — O(N), no pass over the non-zeros.
 //! 3. Top-K left singular vectors of Ẑ via the PRIMME-style solver
-//!    (equivalently: smallest eigenvectors of L̂ = I − ẐẐᵀ).
+//!    (equivalently: smallest eigenvectors of L̂ = I − ẐẐᵀ); every solver
+//!    iteration is one EllRb `matmat` plus one strip-parallel `t_matmat`.
 //! 4. Row-normalize U.
 //! 5. K-means on the rows of U.
 
@@ -13,7 +16,6 @@ use crate::config::PipelineConfig;
 use crate::eigen::{svds, SvdsOpts};
 use crate::linalg::Mat;
 use crate::rb::rb_features;
-use crate::sparse::{implicit_degrees, normalize_by_degree};
 use crate::util::timer::StageTimer;
 
 /// Run Algorithm 2 on data `x`.
@@ -28,10 +30,13 @@ pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
     let feature_dim = rb.dim();
     let kappa = rb.kappa;
 
-    // Step 2: implicit degrees + normalization (Eq. 6).
+    // Step 2: implicit degrees + normalization (Eq. 6). On EllRb the
+    // normalization rescales N row values instead of mutating N·R entries.
     let zhat = timer.time("degrees", || {
-        let d = implicit_degrees(&rb.z);
-        normalize_by_degree(rb.z, &d)
+        let mut z = rb.z;
+        let d = z.implicit_degrees();
+        z.normalize_by_degree(&d);
+        z
     });
 
     // Step 3: top-K left singular vectors of Ẑ (PRIMME role).

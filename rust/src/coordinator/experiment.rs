@@ -10,7 +10,6 @@ use crate::eigen::{svds, SvdsOpts};
 use crate::linalg::Mat;
 use crate::metrics::average_rank_scores;
 use crate::rb::{exact_laplacian_gram, rb_features};
-use crate::sparse::{implicit_degrees, normalize_by_degree};
 use std::time::Instant;
 
 /// Datasets of Table 1, in paper order.
@@ -294,8 +293,9 @@ pub fn theory_convergence(coord: &Coordinator, n: usize, rs: &[usize]) -> Vec<Th
     for &r in rs {
         let rb = rb_features(&ds.x, r, sigma, coord.base_cfg.seed ^ 0x7e0);
         let kappa = rb.kappa;
-        let d = implicit_degrees(&rb.z);
-        let zhat = normalize_by_degree(rb.z, &d);
+        let mut zhat = rb.z;
+        let d = zhat.implicit_degrees();
+        zhat.normalize_by_degree(&d);
         let mut o = SvdsOpts::new(k, Solver::Davidson);
         o.tol = 1e-8;
         o.max_matvecs = 50_000;

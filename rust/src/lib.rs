@@ -17,6 +17,19 @@
 //! Python never runs on the request path: `scrb` is self-contained once
 //! `artifacts/` is built, and every XLA path has a native fallback.
 //!
+//! ## Sparse substrates
+//!
+//! Two sparse layouts back the implicit-Laplacian algebra:
+//! - [`sparse::EllRb`] — fixed-stride RB substrate: flat n×R u32 indices,
+//!   one f64 scale per row (the `D^{-1/2}/√R` weight), and a precomputed
+//!   column-strip transpose layout. This is what [`rb::rb_features`] emits
+//!   and what every `Ẑ·B` / `Ẑᵀ·B` in the eigensolver hot path runs on —
+//!   transpose products write disjoint output strips per thread with no
+//!   per-thread D×k accumulators and no reduction.
+//! - [`sparse::Csr`] — general CSR for baselines and irregular sparsity;
+//!   [`sparse::EllRb::to_csr`] bridges between them, and property tests
+//!   pin the two substrates to agree on every solver-visible operation.
+//!
 //! ## Quickstart
 //!
 //! ```no_run

@@ -8,12 +8,18 @@
 //! Generation parallelizes over grids (the paper §5.4 uses 4 threads the
 //! same way): each grid hashes every point's bin tuple to a local bin id;
 //! a prefix sum over per-grid bin counts then gives disjoint global column
-//! ranges, so the final CSR assembles with *no* sorting — within a row,
-//! grid order is column order.
+//! ranges, so assembly needs *no* sorting — within a row, grid order is
+//! column order.
+//!
+//! The output substrate is [`EllRb`]: phase 2 already produces the flat
+//! n×R index layout EllRb stores verbatim (zero-copy), the shared value
+//! 1/√R becomes the per-row scale vector, and construction precomputes the
+//! transpose layout the eigensolver's Ẑᵀ·B products run on. Baselines that
+//! need general CSR go through [`EllRb::to_csr`].
 
 use super::grid::{sample_grids, Grid};
 use crate::linalg::Mat;
-use crate::sparse::Csr;
+use crate::sparse::EllRb;
 use crate::util::threads::parallel_chunks_mut;
 use std::collections::HashMap;
 use std::hash::{BuildHasherDefault, Hasher};
@@ -46,8 +52,9 @@ type BinDict = HashMap<u64, u32, BuildHasherDefault<IdentityHasher>>;
 
 /// Output of RB generation.
 pub struct RbFeatures {
-    /// Sparse feature matrix Z, N×D, nnz = N·R, all values 1/√R.
-    pub z: Csr,
+    /// Sparse feature matrix Z, N×D, nnz = N·R, all values 1/√R — on the
+    /// fixed-stride [`EllRb`] substrate the solver hot path consumes.
+    pub z: EllRb,
     /// Number of grids R.
     pub r: usize,
     /// Per-grid number of non-empty bins.
@@ -127,9 +134,9 @@ pub fn rb_features(x: &Mat, r: usize, sigma: f64, seed: u64) -> RbFeatures {
         .sum::<f64>()
         / r as f64;
 
-    // Phase 2 (parallel over rows): assemble CSR directly. Row i's entries
-    // are (offsets[j] + local[j][i]) for j = 0..R — ascending in j, hence
-    // already column-sorted.
+    // Phase 2 (parallel over rows): assemble the flat n×R EllRb index
+    // layout directly. Row i's entries are (offsets[j] + local[j][i]) for
+    // j = 0..R — ascending in j, hence already column-sorted.
     let val = 1.0 / (r as f64).sqrt();
     let mut indices: Vec<u32> = vec![0; n * r];
     parallel_chunks_mut(&mut indices, crate::util::threads::num_threads(), |start, chunk| {
@@ -141,9 +148,7 @@ pub fn rb_features(x: &Mat, r: usize, sigma: f64, seed: u64) -> RbFeatures {
             *slot = (offsets[j] + per_grid[j].local[i] as usize) as u32;
         }
     });
-    let indptr: Vec<usize> = (0..=n).map(|i| i * r).collect();
-    let data = vec![val; n * r];
-    let z = Csr { rows: n, cols: d_total, indptr, indices, data };
+    let z = EllRb::new(n, d_total, r, indices, vec![val; n]);
 
     RbFeatures { z, r, bins_per_grid: per_grid.iter().map(|g| g.n_bins).collect(), kappa }
 }
@@ -181,15 +186,14 @@ mod tests {
         assert_eq!(rb.z.rows, 200);
         assert_eq!(rb.z.nnz(), 200 * r); // exactly R non-zeros per row
         for i in 0..200 {
-            assert_eq!(rb.z.row_range(i).len(), r);
+            assert_eq!(rb.z.row_indices(i).len(), r);
         }
-        // all values 1/sqrt(R)
+        // all values 1/sqrt(R) — one shared scale per row on EllRb
         let v = 1.0 / (r as f64).sqrt();
-        assert!(rb.z.data.iter().all(|&x| (x - v).abs() < 1e-15));
+        assert!(rb.z.scale.iter().all(|&x| (x - v).abs() < 1e-15));
         // column indices strictly increasing within each row (grid blocks)
         for i in 0..200 {
-            let rng_ = rb.z.row_range(i);
-            let idx = &rb.z.indices[rng_];
+            let idx = rb.z.row_indices(i);
             for w in idx.windows(2) {
                 assert!(w[0] < w[1]);
             }

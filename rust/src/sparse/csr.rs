@@ -204,20 +204,62 @@ impl Csr {
         y
     }
 
-    /// Column sums (Aᵀ·1).
+    /// Column sums (Aᵀ·1) — direct parallel kernel: each worker scatters
+    /// its row panel's values into a private accumulator (no ones-vector
+    /// allocation, no multiplies), then partials merge.
     pub fn col_sums(&self) -> Vec<f64> {
-        self.t_matvec(&vec![1.0; self.rows])
+        let nt = num_threads();
+        let chunk = self.rows.div_ceil(nt.max(1)).max(1);
+        let partials: Vec<Vec<f64>> = std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for t in 0..nt {
+                let lo = t * chunk;
+                let hi = ((t + 1) * chunk).min(self.rows);
+                if lo >= hi {
+                    break;
+                }
+                let (indptr, indices, data) = (&self.indptr, &self.indices, &self.data);
+                let cols = self.cols;
+                handles.push(s.spawn(move || {
+                    let mut y = vec![0.0; cols];
+                    for p in indptr[lo]..indptr[hi] {
+                        y[indices[p] as usize] += data[p];
+                    }
+                    y
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let mut y = vec![0.0; self.cols];
+        for p in partials {
+            for (yi, pi) in y.iter_mut().zip(p.iter()) {
+                *yi += *pi;
+            }
+        }
+        y
     }
 
     /// Scale row i by s[i] in place (the D^{-1/2} Z normalization).
+    /// Parallel over contiguous nnz chunks; each worker locates its first
+    /// row with one binary search and then walks `indptr` forward.
     pub fn scale_rows(&mut self, s: &[f64]) {
         assert_eq!(s.len(), self.rows);
-        for i in 0..self.rows {
-            let si = s[i];
-            for p in self.indptr[i]..self.indptr[i + 1] {
-                self.data[p] *= si;
+        let indptr = &self.indptr;
+        crate::util::threads::parallel_chunks_mut(&mut self.data, num_threads(), |start, chunk| {
+            // last row whose range starts at or before flat position `start`
+            let mut i = indptr.partition_point(|&p| p <= start) - 1;
+            let mut p = start;
+            let end = start + chunk.len();
+            while p < end {
+                let hi = indptr[i + 1].min(end);
+                let si = s[i];
+                for v in &mut chunk[p - start..hi - start] {
+                    *v *= si;
+                }
+                p = hi.max(p);
+                i += 1;
             }
-        }
+        });
     }
 
     pub fn frob_norm(&self) -> f64 {

@@ -1,0 +1,539 @@
+//! Fixed-stride RB sparse substrate (`EllRb`) — the eigensolver hot path.
+//!
+//! The RB feature matrix Z ∈ R^{N×D} is *structurally* ELLPACK with stride
+//! R: every row has exactly R non-zeros (one bin per grid) and all of them
+//! share one value, `d_i^{-1/2}/√R` after degree normalization. A general
+//! CSR layout pays for that structure three times over on every solver
+//! iteration: an 8-byte value per nnz that is redundant with the row, an
+//! `indptr` array that is redundant with the stride, and — worst — a dense
+//! D×k accumulator **per thread** in `t_matmat` plus a serial reduction.
+//!
+//! `EllRb` stores only what the structure requires:
+//! - `indices`: flat `n×R` u32 column ids, row-major (zero-copy from the
+//!   phase-2 assembly in [`crate::rb::rb_features`]);
+//! - `scale`: one f64 per row — the shared value. The `D^{-1/2}`
+//!   normalization folds into it, so normalizing costs O(N), not O(nnz),
+//!   and never touches the index arrays;
+//! - a precomputed transpose layout (`col_ptr`/`row_idx`, a CSC without
+//!   values) built once at construction. `t_matmat`/`t_matvec` walk it in
+//!   nnz-balanced *column strips*: each worker owns a contiguous strip of
+//!   output rows, so there are **zero** per-thread D×k allocations and no
+//!   reduction step, and results are deterministic regardless of thread
+//!   count.
+//!
+//! Per-nnz memory traffic for a transpose product drops from 12 B
+//! (4 B index + 8 B value) + per-thread D×k zeroing under CSR to 4 B
+//! (CSC row id) here; the forward product drops from 12 B to 4 B as well.
+//!
+//! [`EllRb::to_csr`] bridges to the general substrate for baselines, dense
+//! materialization, and tests.
+
+use super::csr::Csr;
+use crate::linalg::Mat;
+use crate::util::threads::{num_threads, parallel_row_ranges_mut, parallel_rows_mut};
+
+/// Column-block width for the k-wide inner loops: keeps the output block in
+/// registers/L1 while streaming rows of B, without hurting the small-k case
+/// (k ≤ 64 is a single block).
+const K_BLOCK: usize = 64;
+
+/// Fixed-stride sparse RB matrix: exactly `r` non-zeros per row, all equal
+/// to `scale[row]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EllRb {
+    pub rows: usize,
+    pub cols: usize,
+    /// Non-zeros per row (the paper's R, one bin per grid).
+    pub r: usize,
+    /// Flat n×R column indices, row-major; strictly increasing within each
+    /// row (grid blocks own disjoint ascending column ranges).
+    pub indices: Vec<u32>,
+    /// Per-row value: 1/√R at construction, ×d_i^{-1/2} after
+    /// [`EllRb::normalize_by_degree`].
+    pub scale: Vec<f64>,
+    /// Transpose layout, column-major: `col_ptr` has length cols+1 and
+    /// `row_idx[col_ptr[c]..col_ptr[c+1]]` lists the rows with a non-zero in
+    /// column c, ascending. Values are implicit (`scale[row]`), so row
+    /// scaling never invalidates this layout.
+    pub col_ptr: Vec<usize>,
+    pub row_idx: Vec<u32>,
+}
+
+/// nnz-balanced column-strip boundaries for `nt` workers: `bounds[t]` is the
+/// first column of strip t, `bounds` spans `[0, cols]`.
+fn balanced_strips(col_ptr: &[usize], nt: usize) -> Vec<usize> {
+    let cols = col_ptr.len() - 1;
+    let nnz = *col_ptr.last().unwrap();
+    let nt = nt.clamp(1, cols.max(1));
+    let mut bounds = Vec::with_capacity(nt + 1);
+    bounds.push(0usize);
+    for t in 1..nt {
+        let target = nnz * t / nt;
+        let c = col_ptr.partition_point(|&x| x < target);
+        bounds.push(c.clamp(*bounds.last().unwrap(), cols));
+    }
+    bounds.push(cols);
+    bounds
+}
+
+/// Build the valueless CSC layout with a counting sort. The scatter runs in
+/// parallel over balanced column strips: strip t owns the contiguous
+/// `row_idx` range `[col_ptr[bounds[t]], col_ptr[bounds[t+1]])`, so each
+/// worker re-scans `indices` but writes only its own slice.
+///
+/// Deliberate trade: each worker re-streams the whole index array
+/// (sequential, prefetch-friendly — O(nnz·threads) reads) in exchange for
+/// confining its *random writes* — the expensive half of a counting sort —
+/// to one contiguous strip, with zero scratch memory. The alternative, a
+/// row-partitioned scatter, needs a D-sized per-worker histogram to compute
+/// write offsets: exactly the per-thread D-proportional allocation pattern
+/// `EllRb` exists to eliminate. This is one-time construction cost,
+/// amortized over every solver iteration.
+fn build_transpose(rows: usize, cols: usize, r: usize, indices: &[u32]) -> (Vec<usize>, Vec<u32>) {
+    let nnz = indices.len();
+    let mut col_ptr = vec![0usize; cols + 1];
+    for &c in indices {
+        col_ptr[c as usize + 1] += 1;
+    }
+    for c in 0..cols {
+        col_ptr[c + 1] += col_ptr[c];
+    }
+    let mut row_idx = vec![0u32; nnz];
+    let bounds = balanced_strips(&col_ptr, num_threads());
+    std::thread::scope(|s| {
+        let mut rest: &mut [u32] = &mut row_idx;
+        for w in bounds.windows(2) {
+            let (clo, chi) = (w[0], w[1]);
+            let base = col_ptr[clo];
+            let take = col_ptr[chi] - base;
+            let (head, tail) = rest.split_at_mut(take);
+            rest = tail;
+            if take == 0 {
+                continue;
+            }
+            let col_ptr = &col_ptr;
+            s.spawn(move || {
+                // per-column write cursors, local to this strip
+                let mut cursor: Vec<usize> =
+                    col_ptr[clo..chi].iter().map(|&p| p - base).collect();
+                for i in 0..rows {
+                    for &c in &indices[i * r..(i + 1) * r] {
+                        let c = c as usize;
+                        if c < clo || c >= chi {
+                            continue;
+                        }
+                        let slot = &mut cursor[c - clo];
+                        head[*slot] = i as u32;
+                        *slot += 1;
+                    }
+                }
+            });
+        }
+    });
+    (col_ptr, row_idx)
+}
+
+impl EllRb {
+    /// Build from the flat n×R index layout (exactly what phase 2 of RB
+    /// generation produces) and a per-row scale. Precomputes the transpose
+    /// layout — one O(nnz) pass, amortized over every solver iteration that
+    /// follows.
+    pub fn new(rows: usize, cols: usize, r: usize, indices: Vec<u32>, scale: Vec<f64>) -> EllRb {
+        assert!(r >= 1, "need at least one non-zero per row");
+        assert_eq!(indices.len(), rows * r, "indices must be flat n x R");
+        assert_eq!(scale.len(), rows, "one scale per row");
+        assert!(rows <= u32::MAX as usize, "row count overflows u32");
+        debug_assert!(indices.iter().all(|&c| (c as usize) < cols), "column out of bounds");
+        let (col_ptr, row_idx) = build_transpose(rows, cols, r, &indices);
+        EllRb { rows, cols, r, indices, scale, col_ptr, row_idx }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.rows * self.r
+    }
+
+    /// Column indices of row i (length R, strictly increasing).
+    #[inline]
+    pub fn row_indices(&self, i: usize) -> &[u32] {
+        &self.indices[i * self.r..(i + 1) * self.r]
+    }
+
+    /// y = Z·x (parallel over row panels; one multiply per row).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        let (indices, scale, r) = (&self.indices, &self.scale, self.r);
+        parallel_rows_mut(&mut y, 1, |row0, chunk| {
+            for (k, yi) in chunk.iter_mut().enumerate() {
+                let i = row0 + k;
+                let mut s = 0.0;
+                for &c in &indices[i * r..(i + 1) * r] {
+                    s += x[c as usize];
+                }
+                *yi = s * scale[i];
+            }
+        });
+        y
+    }
+
+    /// y = Zᵀ·x via the transpose layout (parallel over column strips; no
+    /// per-thread D-length accumulators, no reduction).
+    pub fn t_matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows);
+        let mut y = vec![0.0; self.cols];
+        if self.cols == 0 {
+            return y;
+        }
+        let bounds = balanced_strips(&self.col_ptr, num_threads());
+        let (col_ptr, row_idx, scale) = (&self.col_ptr, &self.row_idx, &self.scale);
+        parallel_row_ranges_mut(&mut y, 1, &bounds, |_si, c0, chunk| {
+            for (dc, yc) in chunk.iter_mut().enumerate() {
+                let col = c0 + dc;
+                let mut s = 0.0;
+                for p in col_ptr[col]..col_ptr[col + 1] {
+                    let i = row_idx[p] as usize;
+                    s += scale[i] * x[i];
+                }
+                *yc = s;
+            }
+        });
+        y
+    }
+
+    /// C = Z · B, B dense cols×k → rows×k (the solver's forward block
+    /// matvec; parallel over rows, k-wide loops cache-blocked).
+    pub fn matmat(&self, b: &Mat) -> Mat {
+        assert_eq!(b.rows, self.cols, "matmat shape mismatch");
+        let k = b.cols;
+        let mut c = Mat::zeros(self.rows, k);
+        let (indices, scale, r) = (&self.indices, &self.scale, self.r);
+        parallel_rows_mut(&mut c.data, k, |row0, chunk| {
+            for (dr, crow) in chunk.chunks_mut(k).enumerate() {
+                let i = row0 + dr;
+                let row = &indices[i * r..(i + 1) * r];
+                let mut kb = 0;
+                while kb < k {
+                    let ke = (kb + K_BLOCK).min(k);
+                    let cblk = &mut crow[kb..ke];
+                    for &col in row {
+                        let brow = &b.row(col as usize)[kb..ke];
+                        for (cj, bj) in cblk.iter_mut().zip(brow.iter()) {
+                            *cj += *bj;
+                        }
+                    }
+                    kb = ke;
+                }
+                // all R values in the row are equal: one deferred multiply
+                let si = scale[i];
+                for v in crow.iter_mut() {
+                    *v *= si;
+                }
+            }
+        });
+        c
+    }
+
+    /// C = Zᵀ · B, B dense rows×k → cols×k. Each worker walks a contiguous,
+    /// nnz-balanced column strip of the precomputed transpose layout and
+    /// writes its disjoint strip of C directly — zero per-thread D×k
+    /// allocations and no reduction step, the CSR path's dominant cost.
+    pub fn t_matmat(&self, b: &Mat) -> Mat {
+        assert_eq!(b.rows, self.rows, "t_matmat shape mismatch");
+        let k = b.cols;
+        let mut c = Mat::zeros(self.cols, k);
+        if self.cols == 0 {
+            return c;
+        }
+        let bounds = balanced_strips(&self.col_ptr, num_threads());
+        let (col_ptr, row_idx, scale) = (&self.col_ptr, &self.row_idx, &self.scale);
+        parallel_row_ranges_mut(&mut c.data, k, &bounds, |_si, c0, chunk| {
+            for (dc, crow) in chunk.chunks_mut(k).enumerate() {
+                let col = c0 + dc;
+                let (lo, hi) = (col_ptr[col], col_ptr[col + 1]);
+                let mut kb = 0;
+                while kb < k {
+                    let ke = (kb + K_BLOCK).min(k);
+                    let cblk = &mut crow[kb..ke];
+                    for p in lo..hi {
+                        let i = row_idx[p] as usize;
+                        let si = scale[i];
+                        let brow = &b.row(i)[kb..ke];
+                        for (cj, bj) in cblk.iter_mut().zip(brow.iter()) {
+                            *cj += si * *bj;
+                        }
+                    }
+                    kb = ke;
+                }
+            }
+        });
+        c
+    }
+
+    /// Row sums Z·1 = R·scale[i] — closed form, no memory traffic.
+    pub fn row_sums(&self) -> Vec<f64> {
+        let r = self.r as f64;
+        self.scale.iter().map(|&s| s * r).collect()
+    }
+
+    /// Column sums Zᵀ·1 (direct parallel kernel over column strips).
+    pub fn col_sums(&self) -> Vec<f64> {
+        let mut y = vec![0.0; self.cols];
+        if self.cols == 0 {
+            return y;
+        }
+        let bounds = balanced_strips(&self.col_ptr, num_threads());
+        let (col_ptr, row_idx, scale) = (&self.col_ptr, &self.row_idx, &self.scale);
+        parallel_row_ranges_mut(&mut y, 1, &bounds, |_si, c0, chunk| {
+            for (dc, yc) in chunk.iter_mut().enumerate() {
+                let col = c0 + dc;
+                let mut s = 0.0;
+                for p in col_ptr[col]..col_ptr[col + 1] {
+                    s += scale[row_idx[p] as usize];
+                }
+                *yc = s;
+            }
+        });
+        y
+    }
+
+    /// Degree vector of the implicit similarity graph, d = Z·(Zᵀ·1)
+    /// (Equation 6): one O(nnz) column-sum sweep over the transpose layout,
+    /// then one forward matvec.
+    pub fn implicit_degrees(&self) -> Vec<f64> {
+        let cs = self.col_sums();
+        self.matvec(&cs)
+    }
+
+    /// Fold Ẑ = D^{-1/2}·Z into the scale vector: O(N), touches no index
+    /// arrays, keeps the transpose layout valid. Rows with ~zero degree are
+    /// zeroed (matching [`super::ops::normalize_by_degree`]).
+    pub fn normalize_by_degree(&mut self, degrees: &[f64]) {
+        assert_eq!(degrees.len(), self.rows);
+        for (s, &d) in self.scale.iter_mut().zip(degrees.iter()) {
+            if d > 1e-300 {
+                *s /= d.sqrt();
+            } else {
+                *s = 0.0;
+            }
+        }
+    }
+
+    /// Multiply row i's (single, shared) value by s[i] — the EllRb analogue
+    /// of [`Csr::scale_rows`], at O(N) instead of O(nnz).
+    pub fn scale_rows(&mut self, s: &[f64]) {
+        assert_eq!(s.len(), self.rows);
+        for (sc, &si) in self.scale.iter_mut().zip(s.iter()) {
+            *sc *= si;
+        }
+    }
+
+    /// Diagonal of Z·Zᵀ: row i has R equal entries, so the squared row norm
+    /// is R·scale[i]² — closed form, used by the Davidson preconditioner.
+    pub fn gram_diag(&self) -> Vec<f64> {
+        let r = self.r as f64;
+        self.scale.iter().map(|&s| r * s * s).collect()
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        let r = self.r as f64;
+        self.scale.iter().map(|&s| r * s * s).sum::<f64>().sqrt()
+    }
+
+    /// Bridge to the general CSR substrate (baselines, dense
+    /// materialization, equivalence tests). Row indices are already sorted,
+    /// so this is a direct layout expansion.
+    pub fn to_csr(&self) -> Csr {
+        let indptr: Vec<usize> = (0..=self.rows).map(|i| i * self.r).collect();
+        let mut data = Vec::with_capacity(self.nnz());
+        for &s in &self.scale {
+            data.extend(std::iter::repeat(s).take(self.r));
+        }
+        Csr {
+            rows: self.rows,
+            cols: self.cols,
+            indptr,
+            indices: self.indices.clone(),
+            data,
+        }
+    }
+
+    /// Materialize as dense (tests / tiny problems only).
+    pub fn to_dense(&self) -> Mat {
+        self.to_csr().to_dense()
+    }
+
+    /// Gram product G = Z·Zᵀ materialized densely (tests / analysis only).
+    pub fn gram_dense(&self) -> Mat {
+        self.to_csr().gram_dense()
+    }
+
+    /// Memory footprint in bytes (indices + transpose layout + scale).
+    pub fn bytes(&self) -> usize {
+        self.indices.len() * 4
+            + self.row_idx.len() * 4
+            + self.col_ptr.len() * 8
+            + self.scale.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    /// Random EllRb with RB structure: r disjoint ascending "grid" column
+    /// blocks, one hit per block per row.
+    fn random_ell(rng: &mut Pcg, rows: usize, r: usize, bins_per_grid: usize) -> EllRb {
+        let cols = r * bins_per_grid;
+        let mut indices = Vec::with_capacity(rows * r);
+        for _ in 0..rows {
+            for j in 0..r {
+                indices.push((j * bins_per_grid + rng.below(bins_per_grid)) as u32);
+            }
+        }
+        let scale: Vec<f64> = (0..rows).map(|_| rng.range_f64(0.1, 2.0)).collect();
+        EllRb::new(rows, cols, r, indices, scale)
+    }
+
+    #[test]
+    fn transpose_layout_is_consistent() {
+        let mut rng = Pcg::seed(71);
+        let a = random_ell(&mut rng, 50, 8, 5);
+        assert_eq!(*a.col_ptr.last().unwrap(), a.nnz());
+        // every (row, col) pair appears exactly once in the CSC view
+        let mut seen = vec![0usize; a.rows * a.cols];
+        for c in 0..a.cols {
+            let mut prev_row = None;
+            for p in a.col_ptr[c]..a.col_ptr[c + 1] {
+                let i = a.row_idx[p] as usize;
+                // ascending rows within a column
+                if let Some(pr) = prev_row {
+                    assert!(i > pr, "rows not ascending in column {c}");
+                }
+                prev_row = Some(i);
+                seen[i * a.cols + c] += 1;
+            }
+        }
+        for i in 0..a.rows {
+            for &c in a.row_indices(i) {
+                assert_eq!(seen[i * a.cols + c as usize], 1);
+            }
+        }
+    }
+
+    #[test]
+    fn products_match_dense() {
+        let mut rng = Pcg::seed(72);
+        let a = random_ell(&mut rng, 40, 6, 4);
+        let d = a.to_dense();
+        let x: Vec<f64> = (0..a.cols).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let y = a.matvec(&x);
+        let y0 = d.matvec(&x);
+        for (u, v) in y.iter().zip(y0.iter()) {
+            assert!((u - v).abs() < 1e-12);
+        }
+        let u: Vec<f64> = (0..a.rows).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let t = a.t_matvec(&u);
+        let t0 = d.t_matvec(&u);
+        for (u, v) in t.iter().zip(t0.iter()) {
+            assert!((u - v).abs() < 1e-12);
+        }
+        let b = Mat::from_vec(a.cols, 5, (0..a.cols * 5).map(|_| rng.f64()).collect());
+        assert!(a.matmat(&b).sub(&d.matmul(&b)).frob_norm() < 1e-12);
+        let b2 = Mat::from_vec(a.rows, 7, (0..a.rows * 7).map(|_| rng.f64()).collect());
+        assert!(a.t_matmat(&b2).sub(&d.t_matmul(&b2)).frob_norm() < 1e-12);
+    }
+
+    #[test]
+    fn wide_blocks_exercise_cache_blocking() {
+        // k > K_BLOCK forces the multi-block path in matmat / t_matmat
+        let mut rng = Pcg::seed(73);
+        let a = random_ell(&mut rng, 20, 4, 3);
+        let d = a.to_dense();
+        let k = K_BLOCK + 9;
+        let b = Mat::from_vec(a.cols, k, (0..a.cols * k).map(|_| rng.f64()).collect());
+        assert!(a.matmat(&b).sub(&d.matmul(&b)).frob_norm() < 1e-11);
+        let b2 = Mat::from_vec(a.rows, k, (0..a.rows * k).map(|_| rng.f64()).collect());
+        assert!(a.t_matmat(&b2).sub(&d.t_matmul(&b2)).frob_norm() < 1e-11);
+    }
+
+    #[test]
+    fn closed_form_sums_and_diag() {
+        let mut rng = Pcg::seed(74);
+        let a = random_ell(&mut rng, 30, 5, 4);
+        let csr = a.to_csr();
+        let rs = a.row_sums();
+        let rs0 = csr.row_sums();
+        for (u, v) in rs.iter().zip(rs0.iter()) {
+            assert!((u - v).abs() < 1e-12);
+        }
+        let cs = a.col_sums();
+        let cs0 = csr.col_sums();
+        for (u, v) in cs.iter().zip(cs0.iter()) {
+            assert!((u - v).abs() < 1e-12);
+        }
+        let g = a.gram_diag();
+        for i in 0..a.rows {
+            let expect = a.r as f64 * a.scale[i] * a.scale[i];
+            assert!((g[i] - expect).abs() < 1e-14);
+        }
+        assert!((a.frob_norm() - csr.frob_norm()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn degree_normalization_is_scale_only() {
+        let mut rng = Pcg::seed(75);
+        let mut a = random_ell(&mut rng, 25, 4, 3);
+        let indices_before = a.indices.clone();
+        let col_ptr_before = a.col_ptr.clone();
+        let d = a.implicit_degrees();
+        a.normalize_by_degree(&d);
+        // index arrays untouched: normalization folded into scale
+        assert_eq!(a.indices, indices_before);
+        assert_eq!(a.col_ptr, col_ptr_before);
+        // Perron check: Ẑ(Ẑᵀ·D^{1/2}1) = D^{1/2}1
+        let sqrt_d: Vec<f64> = d.iter().map(|v| v.sqrt()).collect();
+        let t = a.t_matvec(&sqrt_d);
+        let s = a.matvec(&t);
+        for i in 0..a.rows {
+            assert!((s[i] - sqrt_d[i]).abs() < 1e-8 * (1.0 + sqrt_d[i]));
+        }
+    }
+
+    #[test]
+    fn zero_degree_rows_are_zeroed() {
+        let mut rng = Pcg::seed(76);
+        let mut a = random_ell(&mut rng, 5, 2, 2);
+        let mut deg = vec![1.0; 5];
+        deg[2] = 0.0;
+        a.normalize_by_degree(&deg);
+        assert_eq!(a.scale[2], 0.0);
+        assert!(a.scale.iter().enumerate().all(|(i, &s)| i == 2 || s > 0.0));
+    }
+
+    #[test]
+    fn single_row_single_grid() {
+        let a = EllRb::new(1, 1, 1, vec![0], vec![0.5]);
+        assert_eq!(a.matvec(&[2.0]), vec![1.0]);
+        assert_eq!(a.t_matvec(&[2.0]), vec![1.0]);
+        assert_eq!(a.row_sums(), vec![0.5]);
+        assert_eq!(a.col_sums(), vec![0.5]);
+        let c = a.to_csr();
+        assert_eq!(c.indptr, vec![0, 1]);
+        assert_eq!(c.data, vec![0.5]);
+    }
+
+    #[test]
+    fn to_csr_roundtrips_products() {
+        let mut rng = Pcg::seed(77);
+        let a = random_ell(&mut rng, 35, 7, 6);
+        let csr = a.to_csr();
+        assert_eq!(csr.nnz(), a.nnz());
+        let x: Vec<f64> = (0..a.cols).map(|_| rng.f64()).collect();
+        let ya = a.matvec(&x);
+        let yc = csr.matvec(&x);
+        for (u, v) in ya.iter().zip(yc.iter()) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+}

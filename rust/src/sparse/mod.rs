@@ -1,11 +1,26 @@
-//! Sparse-matrix substrate (CSR) and the implicit graph-Laplacian algebra
-//! of §3.1: degrees, normalization, and Ẑ·Ẑᵀ block application — all
-//! without materializing the N×N similarity matrix.
+//! Sparse substrates and the implicit graph-Laplacian algebra of §3.1:
+//! degrees, normalization, and Ẑ·Ẑᵀ block application — all without
+//! materializing the N×N similarity matrix.
+//!
+//! Two substrates, one job each:
+//! - [`EllRb`] — the fixed-stride RB substrate the solver hot path runs on.
+//!   Exploits RB structure (exactly R non-zeros per row, all equal to one
+//!   per-row value) to drop the value array and `indptr`, fold the
+//!   `D^{-1/2}` normalization into a per-row scale, and drive transpose
+//!   products through a precomputed column-strip layout with zero
+//!   per-thread allocations. Produced natively by
+//!   [`crate::rb::rb_features`].
+//! - [`Csr`] — the general compressed-sparse-row substrate, used by
+//!   baselines, irregular matrices (Nyström / LSC anchors), and as the
+//!   reference implementation `EllRb` is property-tested against via
+//!   [`EllRb::to_csr`].
 
 pub mod csr;
+pub mod ell;
 pub mod ops;
 
 pub use csr::Csr;
+pub use ell::EllRb;
 pub use ops::{
     apply_normalized_similarity, implicit_degrees, normalize_by_degree,
     normalized_laplacian_dense,

@@ -1,6 +1,11 @@
 //! Graph-Laplacian operations on the implicit similarity matrix Ŵ = Z·Zᵀ
 //! — the paper's §3.1 trick: everything is expressed through Z without
 //! ever materializing the N×N matrix.
+//!
+//! These free functions operate on the general [`Csr`] substrate. The RB
+//! pipeline itself runs on [`super::EllRb`], whose inherent
+//! `implicit_degrees` / `normalize_by_degree` are the fixed-stride
+//! equivalents (property-tested to agree in `tests/properties.rs`).
 
 use super::csr::Csr;
 use crate::linalg::Mat;

@@ -2,7 +2,10 @@
 //!
 //! Adaptive-iteration timing with warmup, reporting min/median/mean like
 //! criterion's summary line. Used by everything under `rust/benches/`.
+//! [`Bencher::write_json`] emits the same results machine-readably (the
+//! `BENCH_*.json` perf trajectory tracked across PRs).
 
+use crate::util::json::Json;
 use std::time::{Duration, Instant};
 
 /// Result of one benchmark case.
@@ -152,6 +155,33 @@ impl Bencher {
     pub fn results(&self) -> &[BenchStats] {
         &self.results
     }
+
+    /// Machine-readable view of the results (nanosecond durations).
+    pub fn to_json(&self) -> Json {
+        let cases: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("name", Json::Str(r.name.clone()))
+                    .set("iters", Json::Num(r.iters as f64))
+                    .set("min_ns", Json::Num(r.min.as_nanos() as f64))
+                    .set("median_ns", Json::Num(r.median.as_nanos() as f64))
+                    .set("mean_ns", Json::Num(r.mean.as_nanos() as f64))
+                    .set("max_ns", Json::Num(r.max.as_nanos() as f64));
+                o
+            })
+            .collect();
+        let mut root = Json::obj();
+        root.set("threads", Json::Num(crate::util::threads::num_threads() as f64))
+            .set("results", Json::Arr(cases));
+        root
+    }
+
+    /// Write the JSON results to `path` (the `BENCH_*.json` trajectory).
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
 }
 
 #[cfg(test)]
@@ -176,6 +206,24 @@ mod tests {
         assert!(stats.min > Duration::ZERO);
         assert!(stats.min <= stats.median && stats.median <= stats.max);
         assert!(b.report().contains("spin"));
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(5),
+            max_iters: 10,
+            results: vec![],
+        };
+        b.record_once("case_a", Duration::from_micros(123));
+        let j = b.to_json();
+        let back = Json::parse(&j.to_string()).unwrap();
+        let arr = back.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("name").unwrap().as_str().unwrap(), "case_a");
+        assert_eq!(arr[0].get("median_ns").unwrap().as_f64().unwrap(), 123_000.0);
+        assert!(back.get("threads").unwrap().as_f64().unwrap() >= 1.0);
     }
 
     #[test]

@@ -148,6 +148,47 @@ where
     });
 }
 
+/// Parallel mutable map over *irregular* row strips: split `out` (a
+/// row-major buffer with rows of `row_len` elements) at the given ascending
+/// row `boundaries` (`boundaries[0] == 0`, `boundaries.last() == n_rows`)
+/// and call `f(strip_index, first_row, rows_slice)` on each non-empty strip
+/// in parallel.
+///
+/// This is the write-side of the transpose-aware SpMM: the `EllRb` CSC
+/// layout hands each worker a contiguous, nnz-balanced column strip, so the
+/// output rows it owns form one contiguous slice — no per-thread
+/// accumulators and no reduction step.
+pub fn parallel_row_ranges_mut<T, F>(out: &mut [T], row_len: usize, boundaries: &[usize], f: F)
+where
+    T: Send,
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    assert!(row_len > 0 && out.len() % row_len == 0, "buffer not row-aligned");
+    let n_rows = out.len() / row_len;
+    assert!(
+        boundaries.len() >= 2
+            && boundaries[0] == 0
+            && *boundaries.last().unwrap() == n_rows,
+        "boundaries must span [0, n_rows]"
+    );
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut prev = 0usize;
+        for (si, &b) in boundaries[1..].iter().enumerate() {
+            assert!(b >= prev && b <= n_rows, "boundaries must be ascending");
+            let take = (b - prev) * row_len;
+            let (head, tail) = rest.split_at_mut(take);
+            rest = tail;
+            if !head.is_empty() {
+                let fr = &f;
+                let first_row = prev;
+                s.spawn(move || fr(si, first_row, head));
+            }
+            prev = b;
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -205,6 +246,20 @@ mod tests {
             assert_eq!(rows.len() % 7, 0);
             for (k, x) in rows.iter_mut().enumerate() {
                 *x = (row0 * 7) + k;
+            }
+        });
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i);
+        }
+    }
+
+    #[test]
+    fn row_ranges_mut_irregular_strips() {
+        let mut v = vec![0usize; 20 * 3];
+        // strips of 0, 7, 5, 8 rows — including an empty strip
+        parallel_row_ranges_mut(&mut v, 3, &[0, 0, 7, 12, 20], |_si, row0, rows| {
+            for (k, x) in rows.iter_mut().enumerate() {
+                *x = row0 * 3 + k;
             }
         });
         for (i, x) in v.iter().enumerate() {

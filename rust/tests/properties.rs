@@ -2,15 +2,33 @@
 //! proptest is unavailable offline). Each property runs across many
 //! seeded random cases and reports the reproducing seed on failure.
 
+use scrb::eigen::SvdOp;
 use scrb::linalg::Mat;
 use scrb::metrics;
 use scrb::rb::rb_features;
-use scrb::sparse::{implicit_degrees, normalize_by_degree, Csr};
-use scrb::util::prop::{check, gen};
+use scrb::sparse::{implicit_degrees, Csr};
+use scrb::util::prop::{check, check_named, gen};
 use scrb::util::rng::Pcg;
 
 fn rand_mat(rng: &mut Pcg, r: usize, c: usize, lo: f64, hi: f64) -> Mat {
     Mat::from_vec(r, c, (0..r * c).map(|_| rng.range_f64(lo, hi)).collect())
+}
+
+/// Elementwise agreement with the ISSUE's 1e-12 bar, scaled by magnitude so
+/// legitimately-reordered summations over hundreds of terms still qualify.
+fn assert_vec_close(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (u, v)) in a.iter().zip(b.iter()).enumerate() {
+        assert!(
+            (u - v).abs() <= 1e-12 * (1.0 + v.abs()),
+            "{what}[{i}]: {u} vs {v}"
+        );
+    }
+}
+
+fn assert_mat_close(a: &Mat, b: &Mat, what: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{what}: shape mismatch");
+    assert_vec_close(&a.data, &b.data, what);
 }
 
 // --------------------------------------------------------------- RB / graph
@@ -28,8 +46,8 @@ fn prop_rb_row_structure() {
         let rb = rb_features(&x, r, sigma, rng.next_u64());
         assert_eq!(rb.z.nnz(), n * r);
         let v = 1.0 / (r as f64).sqrt();
-        assert!(rb.z.data.iter().all(|&x| (x - v).abs() < 1e-14));
-        let deg = implicit_degrees(&rb.z);
+        assert!(rb.z.scale.iter().all(|&x| (x - v).abs() < 1e-14));
+        let deg = rb.z.implicit_degrees();
         let w = rb.z.gram_dense();
         for i in 0..n {
             let expl: f64 = w.row(i).iter().sum();
@@ -49,8 +67,9 @@ fn prop_normalized_gram_is_stochastic_like() {
         let r = gen::len(rng, 2, 16);
         let x = rand_mat(rng, n, d, 0.0, 1.0);
         let rb = rb_features(&x, r, 0.5, rng.next_u64());
-        let deg = implicit_degrees(&rb.z);
-        let zhat = normalize_by_degree(rb.z, &deg);
+        let mut zhat = rb.z;
+        let deg = zhat.implicit_degrees();
+        zhat.normalize_by_degree(&deg);
         let sqrt_d: Vec<f64> = deg.iter().map(|v| v.sqrt()).collect();
         // S·(D^{1/2}1) = D^{1/2}1
         let t = zhat.t_matvec(&sqrt_d);
@@ -67,6 +86,68 @@ fn prop_normalized_gram_is_stochastic_like() {
 }
 
 // ------------------------------------------------------------------ sparse
+
+/// Run the full substrate-equivalence battery on one RB output: `EllRb` and
+/// its `to_csr()` bridge must agree on every operator the solver touches.
+fn check_substrate_equivalence(rng: &mut Pcg, mut ell: scrb::sparse::EllRb, normalized: bool) {
+    if normalized {
+        let deg = ell.implicit_degrees();
+        ell.normalize_by_degree(&deg);
+    }
+    let csr = ell.to_csr();
+    assert_eq!(ell.nnz(), csr.nnz());
+
+    // matvec / t_matvec
+    let xv = gen::vec_f64(rng, ell.cols, -1.0, 1.0);
+    assert_vec_close(&ell.matvec(&xv), &csr.matvec(&xv), "matvec");
+    let xu = gen::vec_f64(rng, ell.rows, -1.0, 1.0);
+    assert_vec_close(&ell.t_matvec(&xu), &csr.t_matvec(&xu), "t_matvec");
+
+    // matmat / t_matmat (the solver's block applies)
+    let k = gen::len(rng, 1, 6);
+    let bf = rand_mat(rng, ell.cols, k, -1.0, 1.0);
+    assert_mat_close(&ell.matmat(&bf), &csr.matmat(&bf), "matmat");
+    let bt = rand_mat(rng, ell.rows, k, -1.0, 1.0);
+    assert_mat_close(&ell.t_matmat(&bt), &csr.t_matmat(&bt), "t_matmat");
+
+    // gram_diag (Davidson preconditioner)
+    let gd_ell = SvdOp::gram_diag(&ell).expect("EllRb exposes gram_diag");
+    let gd_csr = SvdOp::gram_diag(&csr).expect("Csr exposes gram_diag");
+    assert_vec_close(&gd_ell, &gd_csr, "gram_diag");
+
+    // implicit degrees (Eq. 6) and the aggregate sums behind them
+    assert_vec_close(&ell.implicit_degrees(), &implicit_degrees(&csr), "implicit_degrees");
+    assert_vec_close(&ell.row_sums(), &csr.row_sums(), "row_sums");
+    assert_vec_close(&ell.col_sums(), &csr.col_sums(), "col_sums");
+}
+
+#[test]
+fn prop_ell_csr_equivalence_across_r() {
+    // ∀ data and R ∈ {1, 16, 256}: EllRb and Csr agree on matvec, t_matvec,
+    // matmat, t_matmat, gram_diag, and implicit_degrees — both with the raw
+    // 1/√R scale and after degree normalization.
+    check_named("ell-csr-equivalence", 24, |rng, case| {
+        let r = [1usize, 16, 256][case % 3];
+        let n = gen::len(rng, 2, 40);
+        let d = gen::len(rng, 1, 4);
+        let x = rand_mat(rng, n, d, 0.0, 1.0);
+        let sigma = rng.range_f64(0.15, 2.0);
+        let rb = rb_features(&x, r, sigma, rng.next_u64());
+        check_substrate_equivalence(rng, rb.z, case % 2 == 1);
+    });
+}
+
+#[test]
+fn prop_ell_csr_equivalence_degenerate() {
+    // degenerate shapes: a single row (N=1) and a single grid (R=1)
+    check_named("ell-csr-degenerate", 8, |rng, case| {
+        let (n, r) = if case % 2 == 0 { (1, [1usize, 16, 256][case % 3]) } else { (gen::len(rng, 1, 20), 1) };
+        let d = gen::len(rng, 1, 3);
+        let x = rand_mat(rng, n, d, 0.0, 1.0);
+        let rb = rb_features(&x, r, 0.5, rng.next_u64());
+        check_substrate_equivalence(rng, rb.z, case >= 4);
+    });
+}
 
 #[test]
 fn prop_csr_matvec_linearity_and_transpose_adjoint() {
