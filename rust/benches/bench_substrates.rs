@@ -1,14 +1,19 @@
 //! Substrate micro-benchmarks (the profile targets of the §Perf pass):
 //! RB generation throughput, sparse matvec/matmat on both substrates
-//! (Csr vs EllRb side-by-side, the eigensolver hot path), dense gemm,
+//! (Csr vs EllRb side-by-side, the eigensolver hot path), the fused
+//! strip-tiled gram operator S·B vs its two-pass reference, dense gemm,
 //! K-means assignment (native vs XLA ablation), kernel blocks (native vs
 //! XLA).
 //!
 //!     cargo bench --bench bench_substrates
 //!     SCRB_BENCH_BUDGET_MS=200 cargo bench   # quick mode
+//!     SCRB_BENCH_SMOKE=1 cargo bench         # tiny-N CI smoke mode
 //!
 //! Results are also written machine-readably to `BENCH_substrates.json`
-//! (override with SCRB_BENCH_JSON) — the cross-PR perf trajectory.
+//! (override with SCRB_BENCH_JSON) — the cross-PR perf trajectory. The
+//! gram section also records allocation counts per call (the binary runs
+//! under the counting allocator) and the scratch/intermediate memory
+//! accounting of the fused vs two-pass paths.
 
 use scrb::config::Kernel;
 use scrb::data::synth;
@@ -18,19 +23,32 @@ use scrb::linalg::Mat;
 use scrb::rb::rb_features;
 use scrb::rf::RfMap;
 use scrb::runtime::{ArtifactKind, XlaRuntime};
-use scrb::sparse::implicit_degrees;
+use scrb::sparse::{implicit_degrees, GramScratch};
+use scrb::util::alloc_count::{allocations, CountingAlloc};
 use scrb::util::bench::Bencher;
 use scrb::util::rng::Pcg;
 
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
 fn main() {
     let mut b = Bencher::from_env();
-    println!("== substrate micro-benchmarks (threads={}) ==", scrb::util::threads::num_threads());
+    // CI smoke mode: shrink the dataset so every kernel (including the
+    // fused gram path) is exercised on each push within seconds.
+    let smoke = std::env::var("SCRB_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let scale = if smoke { 16 } else { 1 };
+    println!(
+        "== substrate micro-benchmarks (threads={}{}) ==",
+        scrb::util::threads::num_threads(),
+        if smoke { ", SMOKE" } else { "" }
+    );
 
     // ---- RB generation (the O(NRd) stage)
-    let ds = synth::paper_benchmark("pendigits", 1, 42); // n=10992, d=16
+    let ds = synth::paper_benchmark("pendigits", scale, 42); // n=10992/scale, d=16
     let x = &ds.x;
+    let n_pts = x.rows;
     for r in [64usize, 256] {
-        let stats = b.bench(&format!("rb_features n=10992 d=16 R={r}"), || {
+        let stats = b.bench(&format!("rb_features n={n_pts} d=16 R={r}"), || {
             rb_features(x, r, 0.25, 7)
         });
         let pts_per_s = (x.rows * r) as f64 / stats.median.as_secs_f64();
@@ -81,6 +99,70 @@ fn main() {
     }
     b.bench("implicit_degrees csr", || implicit_degrees(&csr));
     b.bench("implicit_degrees ell", || ell.implicit_degrees());
+
+    // ---- fused gram operator S·B = Ẑ·(ẐᵀB) vs the two-pass reference —
+    // the per-iteration product of the Davidson/Lanczos hot loop (one call
+    // here = the solver's S-apply for one iteration), on the degree-
+    // normalized Ẑ the solvers actually see.
+    let mut zhat = ell.clone();
+    let zdeg = zhat.implicit_degrees();
+    zhat.normalize_by_degree(&zdeg);
+    let gk = 8usize;
+    let bn8 = Mat::from_vec(n, gk, (0..n * gk).map(|i| (i % 5) as f64 - 2.0).collect());
+    let two_pass_med = b
+        .bench(&format!("gram two-pass S·B k={gk} (apply∘apply_t)"), || {
+            zhat.matmat(&zhat.t_matmat(&bn8))
+        })
+        .median;
+    let mut gs = GramScratch::new();
+    let mut gout = Mat::zeros(0, 0);
+    zhat.gram_matmat_into(&bn8, &mut gout, &mut gs); // warm the scratch
+    let fused_med = b
+        .bench(&format!("gram fused    S·B k={gk} (strip-tiled)"), || {
+            zhat.gram_matmat_into(&bn8, &mut gout, &mut gs)
+        })
+        .median;
+    // correctness spot-check so the bench can't silently drift
+    {
+        let reference = zhat.matmat(&zhat.t_matmat(&bn8));
+        let err = gout.sub(&reference).frob_norm() / (1.0 + reference.frob_norm());
+        assert!(err < 1e-12, "fused gram drifted from two-pass: {err}");
+    }
+    // allocation accounting (this binary runs under the counting allocator)
+    let reps = 5usize;
+    let a0 = allocations();
+    for _ in 0..reps {
+        std::hint::black_box(zhat.matmat(&zhat.t_matmat(&bn8)));
+    }
+    let two_pass_allocs = (allocations() - a0) / reps;
+    let a1 = allocations();
+    for _ in 0..reps {
+        zhat.gram_matmat_into(&bn8, &mut gout, &mut gs);
+    }
+    let fused_allocs = (allocations() - a1) / reps;
+    // memory accounting: the D×k intermediate the two-pass path
+    // materializes (plus its zero-fill) vs the fused kernel's cache-sized
+    // tiles — the per-thread peak scratch bound of the acceptance bar.
+    let intermediate_bytes = 8 * d * gk;
+    let speedup = two_pass_med.as_secs_f64() / fused_med.as_secs_f64().max(1e-12);
+    println!(
+        "    gram S·B k={gk}: two-pass {:.3} ms vs fused {:.3} ms  ({speedup:.2}x)",
+        two_pass_med.as_secs_f64() * 1e3,
+        fused_med.as_secs_f64() * 1e3,
+    );
+    println!(
+        "    intermediate: two-pass D×k = {:.2} MB materialized/iter vs fused scratch {:.1} KB total ({:.1} KB tile/thread); allocs/call {two_pass_allocs} vs {fused_allocs}",
+        intermediate_bytes as f64 / (1 << 20) as f64,
+        gs.scratch_bytes() as f64 / 1024.0,
+        gs.tile_bytes() as f64 / 1024.0,
+    );
+    b.metric("gram_k", gk as f64);
+    b.metric("gram_twopass_intermediate_bytes", intermediate_bytes as f64);
+    b.metric("gram_fused_scratch_bytes", gs.scratch_bytes() as f64);
+    b.metric("gram_fused_tile_bytes_per_thread", gs.tile_bytes() as f64);
+    b.metric("gram_fused_speedup", speedup);
+    b.metric("gram_twopass_allocs_per_call", two_pass_allocs as f64);
+    b.metric("gram_fused_allocs_per_call", fused_allocs as f64);
 
     // ---- dense gemm (Rayleigh–Ritz shapes)
     let mut rng = Pcg::seed(3);

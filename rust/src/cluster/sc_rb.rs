@@ -13,7 +13,7 @@
 
 use super::method::{embed_and_cluster, ClusterOutput, Env, MethodInfo};
 use crate::config::PipelineConfig;
-use crate::eigen::{svds, SvdsOpts};
+use crate::eigen::{svds_ws, SolverWorkspace, SvdsOpts};
 use crate::linalg::Mat;
 use crate::rb::rb_features;
 use crate::util::timer::StageTimer;
@@ -39,11 +39,15 @@ pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
         z
     });
 
-    // Step 3: top-K left singular vectors of Ẑ (PRIMME role).
+    // Step 3: top-K left singular vectors of Ẑ (PRIMME role). Every
+    // iteration's S·B runs through the fused strip-tiled gram kernel and a
+    // preallocated SolverWorkspace — the steady-state hot loop does not
+    // touch the heap.
     let mut opts = SvdsOpts::new(cfg.k, cfg.solver);
     opts.tol = cfg.svd_tol;
     opts.max_matvecs = cfg.svd_max_iters;
-    let svd = timer.time("svd", || svds(&zhat, &opts, cfg.seed ^ 0x5bd5));
+    let mut solver_ws = SolverWorkspace::new();
+    let svd = timer.time("svd", || svds_ws(&zhat, &opts, cfg.seed ^ 0x5bd5, &mut solver_ws));
 
     // Steps 4–5: row-normalize + K-means.
     let (labels, km) = embed_and_cluster(svd.u, env, &mut timer, true);

@@ -6,7 +6,7 @@ use super::{Coordinator, MethodRun};
 use crate::cluster::{Env, MethodKind};
 use crate::config::Solver;
 use crate::data::{synth, Dataset};
-use crate::eigen::{svds, SvdsOpts};
+use crate::eigen::{svds_ws, SolverWorkspace, SvdsOpts};
 use crate::linalg::Mat;
 use crate::metrics::average_rank_scores;
 use crate::rb::{exact_laplacian_gram, rb_features};
@@ -282,11 +282,15 @@ pub fn theory_convergence(coord: &Coordinator, n: usize, rs: &[usize]) -> Vec<Th
         let m = u.t_matmul(&su);
         (0..u.cols).map(|j| 1.0 - m.at(j, j)).sum()
     };
+    // One SolverWorkspace amortized over the exact solve and the whole R
+    // sweep: the gram scratch re-provisions itself when the operator
+    // changes, and all solver buffers are reused across solves.
+    let mut solver_ws = SolverWorkspace::new();
     let exact_op = crate::cluster::sc_exact::SymOp(&s);
     let mut opts = SvdsOpts::new(k, Solver::Davidson);
     opts.tol = 1e-9;
     opts.max_matvecs = 50_000;
-    let exact_u = svds(&exact_op, &opts, 7).u;
+    let exact_u = svds_ws(&exact_op, &opts, 7, &mut solver_ws).u;
     let f_star = objective(&exact_u);
 
     let mut out = Vec::new();
@@ -299,7 +303,7 @@ pub fn theory_convergence(coord: &Coordinator, n: usize, rs: &[usize]) -> Vec<Th
         let mut o = SvdsOpts::new(k, Solver::Davidson);
         o.tol = 1e-8;
         o.max_matvecs = 50_000;
-        let u = svds(&zhat, &o, 9).u;
+        let u = svds_ws(&zhat, &o, 9, &mut solver_ws).u;
         let gap = (objective(&u) - f_star).max(0.0);
         out.push(TheoryPoint { r, kappa, gap, predicted_slope: 1.0 / (kappa * r as f64) });
     }

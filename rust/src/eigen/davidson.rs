@@ -7,10 +7,21 @@
 //! near-optimally for a few extreme eigenpairs under limited memory, where
 //! plain (restarted) Lanczos struggles on clustered spectra — exactly the
 //! covtype-mult regime of Fig. 3.
+//!
+//! Every S·B product goes through [`SvdOp::gram_matmat_into`] — the fused
+//! strip-tiled kernel on `EllRb`, which never materializes the D×k
+//! intermediate — and every per-iteration buffer (basis, S·V cache, Ritz
+//! block, residuals, projected problem) lives in a caller-reusable
+//! [`SolverWorkspace`], so steady-state iterations are allocation-free
+//! (see `tests/alloc.rs`).
 
 use super::op::SvdOp;
+use super::workspace::{
+    append_orthonormalized, combine_into, fill_normal, gather_cols_to_mat, gram_pairs_into,
+    symmetrize_in_place, SolverWorkspace,
+};
 use super::{SvdResult, SvdStats};
-use crate::linalg::{nrm2, orthonormalize_against, sym_eig, Mat};
+use crate::linalg::{nrm2, sym_eig_into, Mat};
 
 /// Options for the Davidson solver.
 #[derive(Clone, Debug)]
@@ -43,68 +54,84 @@ impl DavidsonOpts {
     }
 }
 
-/// Compute the top-k left singular triplets of `a` (descending).
+/// Compute the top-k left singular triplets of `a` (descending), using a
+/// fresh private workspace. Callers running many solves should use
+/// [`davidson_svd_ws`] with a reused [`SolverWorkspace`].
 pub fn davidson_svd<O: SvdOp + ?Sized>(a: &O, opts: &DavidsonOpts, seed: u64) -> SvdResult {
+    let mut ws = SolverWorkspace::new();
+    davidson_svd_ws(a, opts, seed, &mut ws)
+}
+
+/// [`davidson_svd`] with an explicit workspace: after the `ensure` pass at
+/// entry (which allocates only what the workspace has not seen before),
+/// iterations perform zero heap allocations.
+pub fn davidson_svd_ws<O: SvdOp + ?Sized>(
+    a: &O,
+    opts: &DavidsonOpts,
+    seed: u64,
+    ws: &mut SolverWorkspace,
+) -> SvdResult {
     let n = a.nrows();
     let k = opts.k.min(n);
     assert!(k >= 1, "k must be >= 1");
     let max_basis = opts.max_basis.clamp(2 * k + 2, n.max(2 * k + 2));
     let mut rng = crate::util::rng::Pcg::new(seed, 0x0da71d);
+    ws.ensure_davidson(n, k, max_basis);
+    a.prepare_gram(&mut ws.gram, max_basis.min(n));
 
-    // Random orthonormal initial block.
-    let mut init = Mat::zeros(n, k);
-    for v in init.data.iter_mut() {
-        *v = rng.normal();
+    // Random orthonormal initial block of k columns.
+    ws.basis.clear_cols();
+    ws.s_basis.clear_cols();
+    ws.prev.clear_cols();
+    for _ in 0..k {
+        fill_normal(&mut ws.tmp_col, n, &mut rng);
+        append_orthonormalized(&mut ws.basis, &mut ws.tmp_col, &mut ws.coeff);
     }
-    let mut basis = orthonormalize_against(&init, None); // V: n×m
-    // SV cache: S·V columns, kept in lockstep with `basis`.
-    let mut s_basis = apply_gram(a, &basis);
-    let mut matvecs = 2 * basis.cols;
+    let mut matvecs = refresh_s_block(a, ws);
 
     let diag = if opts.precondition { a.gram_diag() } else { None };
 
-    let mut prev_ritz: Option<Mat> = None;
     let mut iters = 0usize;
     let mut converged = false;
-    let (mut ritz_vals, mut ritz_vecs);
 
     loop {
         iters += 1;
-        // Rayleigh–Ritz on span(V): H = Vᵀ S V (m×m).
-        let h = basis.t_matmul(&s_basis);
-        let h = symmetrize(h);
-        let eig = sym_eig(&h);
-        let m = basis.cols;
+        let m = ws.basis.ncols();
+        // Rayleigh–Ritz on span(V): H = Vᵀ S V (m×m) via the S·V cache.
+        ws.h.reset(m, m);
+        gram_pairs_into(&ws.basis, &ws.s_basis, &mut ws.h.data, m);
+        symmetrize_in_place(&mut ws.h.data, m);
+        sym_eig_into(&ws.h, &mut ws.eig);
         // top-k Ritz pairs (descending eigenvalues of S).
         let take = k.min(m);
-        let mut q = Mat::zeros(m, take);
-        let mut vals = Vec::with_capacity(take);
+        ws.q.reset(m, take);
+        ws.vals.clear();
         for j in 0..take {
             let src = m - 1 - j;
-            vals.push(eig.w[src].max(0.0));
-            let col = eig.v.col(src);
-            q.set_col(j, &col);
+            ws.vals.push(ws.eig.w[src].max(0.0));
+            for i in 0..m {
+                ws.q.set(i, j, ws.eig.vecs.at(i, src));
+            }
         }
-        let x = basis.matmul(&q); // n×k Ritz vectors
-        let sx = s_basis.matmul(&q); // S·X without new matvecs
+        combine_into(&ws.basis, &ws.q, take, &mut ws.x); // n×take Ritz vectors
+        combine_into(&ws.s_basis, &ws.q, take, &mut ws.sx); // S·X, no new matvecs
 
         // Residuals r_j = S x_j − λ_j x_j.
-        let mut resid = Mat::zeros(n, take);
+        let scale = ws.vals.first().copied().unwrap_or(1.0).max(1e-300);
         let mut worst = 0.0f64;
-        let scale = vals.first().copied().unwrap_or(1.0).max(1e-300);
-        for j in 0..take {
-            let mut rcol = sx.col(j);
-            let xcol = x.col(j);
-            for (rv, xv) in rcol.iter_mut().zip(xcol.iter()) {
-                *rv -= vals[j] * *xv;
+        {
+            let (resid, x, sx, vals) = (&mut ws.resid, &ws.x, &ws.sx, &ws.vals);
+            resid.clear_cols();
+            for j in 0..take {
+                let rc = resid.push_zero_col();
+                let (xc, sc) = (x.col(j), sx.col(j));
+                let lam = vals[j];
+                for i in 0..n {
+                    rc[i] = sc[i] - lam * xc[i];
+                }
+                worst = worst.max(nrm2(rc) / scale);
             }
-            let rn = nrm2(&rcol) / scale;
-            worst = worst.max(rn);
-            resid.set_col(j, &rcol);
         }
-
-        ritz_vals = vals.clone();
-        ritz_vecs = x.clone();
 
         if worst <= opts.tol {
             converged = true;
@@ -114,89 +141,93 @@ pub fn davidson_svd<O: SvdOp + ?Sized>(a: &O, opts: &DavidsonOpts, seed: u64) ->
             break;
         }
 
-        // Davidson correction: precondition residuals with (diag(S) − λ)⁻¹.
-        let mut corr = resid;
+        // Davidson correction: precondition residuals with (diag(S) − λ)⁻¹,
+        // in place (resid becomes the correction block).
         if let Some(d) = &diag {
-            for j in 0..corr.cols {
-                let lam = ritz_vals[j];
-                let floor = 1e-3 * scale;
-                for i in 0..n {
-                    let mut denom = d[i] - lam;
+            let floor = 1e-3 * scale;
+            for j in 0..take {
+                let lam = ws.vals[j];
+                let rc = ws.resid.col_mut(j);
+                for (rv, di) in rc.iter_mut().zip(d.iter()) {
+                    let mut denom = di - lam;
                     if denom.abs() < floor {
                         denom = if denom < 0.0 { -floor } else { floor };
                     }
-                    corr.set(i, j, corr.at(i, j) / denom);
+                    *rv /= denom;
                 }
             }
         }
 
-        // Thick restart when the basis would overflow.
-        if basis.cols + corr.cols > max_basis {
-            // Restart basis: [Ritz X | retained previous Ritz] (GD+k).
-            let mut restart = x.clone();
-            if let Some(prev) = &prev_ritz {
-                let extra = orthonormalize_against(prev, Some(&restart));
-                let keep = extra.first_cols(extra.cols.min(opts.retained));
-                restart = hcat(&restart, &keep);
+        // Thick restart when the basis would overflow: rebuild from
+        // [Ritz X | retained previous Ritz] (GD+k).
+        if m + take > max_basis {
+            ws.basis.clear_cols();
+            ws.s_basis.clear_cols();
+            for j in 0..take {
+                copy_col(&ws.x, j, &mut ws.tmp_col);
+                append_orthonormalized(&mut ws.basis, &mut ws.tmp_col, &mut ws.coeff);
             }
-            basis = orthonormalize_against(&restart, None);
-            s_basis = apply_gram(a, &basis);
-            matvecs += 2 * basis.cols;
+            let mut kept_prev = 0usize;
+            for j in 0..ws.prev.ncols() {
+                if kept_prev >= opts.retained {
+                    break;
+                }
+                copy_col(&ws.prev, j, &mut ws.tmp_col);
+                if append_orthonormalized(&mut ws.basis, &mut ws.tmp_col, &mut ws.coeff) {
+                    kept_prev += 1;
+                }
+            }
         }
 
         // Expand basis with the (orthonormalized) corrections.
-        let add = orthonormalize_against(&corr, Some(&basis));
-        if add.cols == 0 {
+        let m0 = ws.basis.ncols();
+        for j in 0..take {
+            copy_col(&ws.resid, j, &mut ws.tmp_col);
+            append_orthonormalized(&mut ws.basis, &mut ws.tmp_col, &mut ws.coeff);
+        }
+        if ws.basis.ncols() == m0 {
             // Corrections fully dependent — random refresh to escape.
-            let mut fresh = Mat::zeros(n, 1);
-            for v in fresh.data.iter_mut() {
-                *v = rng.normal();
-            }
-            let add2 = orthonormalize_against(&fresh, Some(&basis));
-            if add2.cols == 0 {
+            fill_normal(&mut ws.tmp_col, n, &mut rng);
+            append_orthonormalized(&mut ws.basis, &mut ws.tmp_col, &mut ws.coeff);
+            if ws.basis.ncols() == m0 {
                 break;
             }
-            let s_add = apply_gram(a, &add2);
-            matvecs += 2 * add2.cols;
-            basis = hcat(&basis, &add2);
-            s_basis = hcat(&s_basis, &s_add);
-        } else {
-            let s_add = apply_gram(a, &add);
-            matvecs += 2 * add.cols;
-            basis = hcat(&basis, &add);
-            s_basis = hcat(&s_basis, &s_add);
         }
-        prev_ritz = Some(x);
+        matvecs += refresh_s_block(a, ws);
+        ws.prev.copy_from(&ws.x);
     }
 
-    finalize(a, ritz_vecs, &ritz_vals, matvecs, iters, converged)
-}
-
-/// S·B = A·(Aᵀ·B).
-fn apply_gram<O: SvdOp + ?Sized>(a: &O, b: &Mat) -> Mat {
-    a.apply(&a.apply_t(b))
-}
-
-fn symmetrize(mut h: Mat) -> Mat {
-    let n = h.rows;
-    for i in 0..n {
-        for j in 0..i {
-            let avg = 0.5 * (h.at(i, j) + h.at(j, i));
-            h.set(i, j, avg);
-            h.set(j, i, avg);
-        }
+    // Materialize the answer (the only allocations of the epilogue).
+    let take_final = ws.x.ncols();
+    let mut u = Mat::zeros(n, take_final);
+    for j in 0..take_final {
+        ws.x.store_col_to_mat(j, &mut u, j);
     }
-    h
+    finalize(a, u, &ws.vals, matvecs, iters, converged)
 }
 
-fn hcat(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.rows, b.rows);
-    let mut out = Mat::zeros(a.rows, a.cols + b.cols);
-    for i in 0..a.rows {
-        out.row_mut(i)[..a.cols].copy_from_slice(a.row(i));
-        out.row_mut(i)[a.cols..].copy_from_slice(b.row(i));
+/// Copy column `j` of `src` into the scratch vector.
+fn copy_col(src: &super::workspace::ColBasis, j: usize, out: &mut Vec<f64>) {
+    out.clear();
+    out.extend_from_slice(src.col(j));
+}
+
+/// Extend the S·V cache to cover every basis column it is missing:
+/// gather the new columns into the row-major bridge block, run one fused
+/// gram product, and append the results. Returns the matvecs spent.
+fn refresh_s_block<O: SvdOp + ?Sized>(a: &O, ws: &mut SolverWorkspace) -> usize {
+    let from = ws.s_basis.ncols();
+    let m = ws.basis.ncols();
+    let add = m - from;
+    if add == 0 {
+        return 0;
     }
-    out
+    gather_cols_to_mat(&ws.basis, from, &mut ws.blk);
+    a.gram_matmat_into(&ws.blk, &mut ws.s_blk, &mut ws.gram);
+    for t in 0..add {
+        ws.s_basis.push_col_from_mat(&ws.s_blk, t);
+    }
+    2 * add
 }
 
 /// Shared epilogue: eigenvalues of S → singular values of A, right vectors
@@ -299,6 +330,29 @@ mod tests {
             for i in 0..50 {
                 assert!((av.at(i, j) - r.s[j] * r.u.at(i, j)).abs() < 1e-6);
             }
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_matches_fresh() {
+        // A workspace carried across problems of different shapes must not
+        // leak state into later solves.
+        let mut rng = Pcg::seed(64);
+        let a = randmat(&mut rng, 70, 22);
+        let b = randmat(&mut rng, 45, 10);
+        let opts_a = DavidsonOpts { tol: 1e-9, max_matvecs: 20_000, ..DavidsonOpts::new(4) };
+        let opts_b = DavidsonOpts { tol: 1e-9, max_matvecs: 20_000, ..DavidsonOpts::new(3) };
+        let mut ws = SolverWorkspace::new();
+        let _warm = davidson_svd_ws(&b, &opts_b, 11, &mut ws);
+        let reused = davidson_svd_ws(&a, &opts_a, 7, &mut ws);
+        let fresh = davidson_svd(&a, &opts_a, 7);
+        for j in 0..4 {
+            assert!(
+                (reused.s[j] - fresh.s[j]).abs() < 1e-9 * (1.0 + fresh.s[j]),
+                "σ_{j}: {} vs {}",
+                reused.s[j],
+                fresh.s[j]
+            );
         }
     }
 }

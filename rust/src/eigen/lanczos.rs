@@ -5,10 +5,24 @@
 //! PRIMME against (§3.2, §5.3): on well-separated spectra it is fine, but on
 //! clustered singular values its simple restart discards subspace
 //! information and convergence stalls — reproducing the Fig. 3 gap.
+//!
+//! The mechanics are nonetheless production-shaped: the Krylov bases live
+//! in preallocated column-major [`super::workspace::ColBasis`] storage, the
+//! full reorthogonalization runs as a *blocked* two-pass CGS (coefficient
+//! gemv + update gemv, both streaming) instead of vector-at-a-time
+//! dot/axpy interleave, single-vector operator products go through the
+//! allocation-free `apply_vec_into`/`apply_t_vec_into` trait hooks, the
+//! per-cycle Ritz residuals use the fused `gram_matmat_into` kernel, and
+//! the small bidiagonal SVD reuses a [`crate::linalg::SmallSvdWs`] — so
+//! steady-state restart cycles perform zero heap allocations (see
+//! `tests/alloc.rs`).
 
 use super::op::SvdOp;
+use super::workspace::{
+    combine_into, fill_normal, gather_cols_to_mat, reorth_blocked, SolverWorkspace,
+};
 use super::{davidson::finalize, SvdResult};
-use crate::linalg::{axpy, dot, nrm2, svd_thin, Mat};
+use crate::linalg::{axpy, nrm2, svd_thin_into, Mat};
 
 /// Options for the Lanczos-bidiagonalization solver.
 #[derive(Clone, Debug)]
@@ -26,17 +40,33 @@ impl LanczosOpts {
     }
 }
 
-/// Top-k left singular triplets of `a` via restarted GKL bidiagonalization.
+/// Top-k left singular triplets of `a` via restarted GKL bidiagonalization,
+/// using a fresh private workspace. Callers running many solves should use
+/// [`lanczos_svd_ws`] with a reused [`SolverWorkspace`].
 pub fn lanczos_svd<O: SvdOp + ?Sized>(a: &O, opts: &LanczosOpts, seed: u64) -> SvdResult {
+    let mut ws = SolverWorkspace::new();
+    lanczos_svd_ws(a, opts, seed, &mut ws)
+}
+
+/// [`lanczos_svd`] with an explicit workspace: after the `ensure` pass at
+/// entry, restart cycles perform zero heap allocations.
+pub fn lanczos_svd_ws<O: SvdOp + ?Sized>(
+    a: &O,
+    opts: &LanczosOpts,
+    seed: u64,
+    ws: &mut SolverWorkspace,
+) -> SvdResult {
     let n = a.nrows();
     let d = a.ncols();
     let k = opts.k.min(n.min(d));
     let m = opts.subspace.clamp(k + 2, n.min(d).max(k + 2));
     let mut rng = crate::util::rng::Pcg::new(seed, 0x1a2c05);
+    ws.ensure_lanczos(n, d, m, k);
+    a.prepare_gram(&mut ws.gram, (k + 1).min(n));
 
     // Starting vector (restart cycles replace this with the best Ritz u₁..u_k
     // combination — naive restart keeps only u₁'s direction).
-    let mut start: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    fill_normal(&mut ws.start, n, &mut rng);
     let mut matvecs = 0usize;
     let mut iters = 0usize;
 
@@ -47,187 +77,169 @@ pub fn lanczos_svd<O: SvdOp + ?Sized>(a: &O, opts: &LanczosOpts, seed: u64) -> S
     // what production svds implementations do; the weakness that remains —
     // and that Fig. 3 exercises — is the naive single-vector restart, which
     // discards the unconverged subspace every cycle.
-    let mut locked_u: Vec<Vec<f64>> = Vec::new();
-    let mut locked_vals: Vec<f64> = Vec::new();
-    // best unconverged Ritz data from the last cycle (to fill the answer if
-    // we hit the matvec budget before locking k pairs)
-    let mut last_ritz: Vec<(f64, Vec<f64>)> = Vec::new();
-
-    while matvecs < opts.max_matvecs && locked_u.len() < k {
+    while matvecs < opts.max_matvecs && ws.locked.ncols() < k {
         iters += 1;
         // GKL: A Vb = Ub B, Aᵀ Ub = Vb Bᵀ (+ residual), B lower-bidiagonal,
         // run in the complement of the locked subspace.
-        let mut us: Vec<Vec<f64>> = Vec::with_capacity(m);
-        let mut vs: Vec<Vec<f64>> = Vec::with_capacity(m);
-        let mut alphas = Vec::with_capacity(m);
-        let mut betas = Vec::with_capacity(m);
+        ws.us.clear_cols();
+        ws.vs.clear_cols();
+        ws.alphas.clear();
+        ws.betas.clear();
 
-        reorth(&locked_u, &mut start);
-        let nrm = nrm2(&start);
-        if nrm <= 1e-14 {
-            start = (0..n).map(|_| rng.normal()).collect();
-            reorth(&locked_u, &mut start);
+        reorth_blocked(&ws.locked, &mut ws.start, &mut ws.coeff);
+        if nrm2(&ws.start) <= 1e-14 {
+            fill_normal(&mut ws.start, n, &mut rng);
+            reorth_blocked(&ws.locked, &mut ws.start, &mut ws.coeff);
         }
-        let nrm = nrm2(&start).max(1e-300);
-        let mut u: Vec<f64> = start.iter().map(|x| x / nrm).collect();
-        us.push(u.clone());
+        let nrm = nrm2(&ws.start).max(1e-300);
+        {
+            let u0 = ws.us.push_zero_col();
+            for (ui, si) in u0.iter_mut().zip(ws.start.iter()) {
+                *ui = si / nrm;
+            }
+        }
 
         for j in 0..m {
-            // v_j = Aᵀ u_j − β_{j−1} v_{j−1}, reorthogonalized
-            let mut v = apply_t_vec(a, &u);
+            // v_j = Aᵀ u_j − β_{j−1} v_{j−1}, blocked-reorthogonalized
+            resize_zeroed(&mut ws.vtmp, d);
+            a.apply_t_vec_into(ws.us.col(j), &mut ws.vtmp);
             matvecs += 1;
             if j > 0 {
-                let beta_prev: f64 = betas[j - 1];
-                axpy(-beta_prev, &vs[j - 1], &mut v);
+                let beta_prev = ws.betas[j - 1];
+                axpy(-beta_prev, ws.vs.col(j - 1), &mut ws.vtmp);
             }
-            reorth(&vs, &mut v);
-            let alpha = nrm2(&v);
-            alphas.push(alpha);
+            reorth_blocked(&ws.vs, &mut ws.vtmp, &mut ws.coeff);
+            let alpha = nrm2(&ws.vtmp);
+            ws.alphas.push(alpha);
             if alpha <= 1e-14 {
-                vs.push(vec![0.0; d]);
-                betas.push(0.0);
+                ws.vs.push_zero_col();
+                ws.betas.push(0.0);
                 break;
             }
-            v.iter_mut().for_each(|x| *x /= alpha);
-            vs.push(v.clone());
+            for x in ws.vtmp.iter_mut() {
+                *x /= alpha;
+            }
+            ws.vs.push_col(&ws.vtmp);
 
             // u_{j+1} = A v_j − α_j u_j, reorthogonalized (incl. locked)
-            let mut unew = apply_vec(a, &v);
+            resize_zeroed(&mut ws.utmp, n);
+            a.apply_vec_into(ws.vs.col(j), &mut ws.utmp);
             matvecs += 1;
-            axpy(-alpha, &us[j], &mut unew);
-            reorth(&locked_u, &mut unew);
-            reorth(&us, &mut unew);
-            let beta = nrm2(&unew);
-            betas.push(beta);
+            axpy(-alpha, ws.us.col(j), &mut ws.utmp);
+            reorth_blocked(&ws.locked, &mut ws.utmp, &mut ws.coeff);
+            reorth_blocked(&ws.us, &mut ws.utmp, &mut ws.coeff);
+            let beta = nrm2(&ws.utmp);
+            ws.betas.push(beta);
             if beta <= 1e-14 || j + 1 == m {
                 break;
             }
-            unew.iter_mut().for_each(|x| *x /= beta);
-            us.push(unew.clone());
-            u = unew;
+            for x in ws.utmp.iter_mut() {
+                *x /= beta;
+            }
+            ws.us.push_col(&ws.utmp);
         }
 
         // SVD of the small bidiagonal projection: B is p×q with diag
-        // alphas and subdiag betas.
-        let p = us.len();
-        let q = vs.len();
-        let mut b = Mat::zeros(p, q);
-        for j in 0..q.min(alphas.len()).min(p) {
-            b.set(j, j, alphas[j]);
+        // alphas and subdiag betas (p = q by construction of the loop).
+        let p = ws.us.ncols();
+        let q = ws.vs.ncols();
+        ws.bmat.reset(p, q);
+        for j in 0..q.min(ws.alphas.len()).min(p) {
+            ws.bmat.set(j, j, ws.alphas[j]);
         }
-        for j in 0..q.min(betas.len()) {
+        for j in 0..q.min(ws.betas.len()) {
             if j + 1 < p {
-                b.set(j + 1, j, betas[j]);
+                ws.bmat.set(j + 1, j, ws.betas[j]);
             }
         }
-        let bs = svd_thin(&b);
+        svd_thin_into(&ws.bmat, &mut ws.svd);
 
         // Ritz left vectors for the unconverged slots.
-        let want = k - locked_u.len();
-        let take = (want + 1).min(bs.s.len()).min(p);
-        let mut uritz = Mat::zeros(n, take);
-        for jj in 0..take {
-            let mut col = vec![0.0; n];
-            for (row, uvec) in us.iter().enumerate() {
-                let w = bs.u.at(row, jj);
-                if w != 0.0 {
-                    axpy(w, uvec, &mut col);
-                }
-            }
-            uritz.set_col(jj, &col);
-        }
+        let want = k - ws.locked.ncols();
+        let take = (want + 1).min(ws.svd.s.len()).min(p);
+        combine_into(&ws.us, &ws.svd.u, take, &mut ws.uritz);
 
-        // Residuals of the Gram problem ‖S u − λ u‖ per Ritz pair.
-        let su = a.apply(&a.apply_t(&uritz));
-        matvecs += 2 * uritz.cols;
-        let scale = locked_vals
+        // Residuals of the Gram problem ‖S u − λ u‖ per Ritz pair, via one
+        // fused S·U block product (bridged through the row-major block).
+        gather_cols_to_mat(&ws.uritz, 0, &mut ws.blk);
+        a.gram_matmat_into(&ws.blk, &mut ws.s_blk, &mut ws.gram);
+        matvecs += 2 * take;
+        let scale = ws
+            .locked_vals
             .first()
             .copied()
-            .unwrap_or(bs.s.first().map(|s| s * s).unwrap_or(1.0))
+            .unwrap_or_else(|| ws.svd.s.first().map(|s| s * s).unwrap_or(1.0))
             .max(1e-300);
-        last_ritz.clear();
-        let mut newly_locked = false;
+        ws.last.clear_cols();
+        ws.last_vals.clear();
         for j in 0..take {
-            let lam = bs.s[j] * bs.s[j];
-            let mut rcol = su.col(j);
-            let uc = uritz.col(j);
-            for (rv, uv) in rcol.iter_mut().zip(uc.iter()) {
-                *rv -= lam * *uv;
+            let lam = ws.svd.s[j] * ws.svd.s[j];
+            let uc = ws.uritz.col(j);
+            let mut rsq = 0.0;
+            for (i, &ui) in uc.iter().enumerate() {
+                let rv = ws.s_blk.at(i, j) - lam * ui;
+                rsq += rv * rv;
             }
-            let res = nrm2(&rcol) / scale;
-            if res <= opts.tol && locked_u.len() < k && !newly_locked_breaks_order(&locked_vals) {
+            let res = rsq.sqrt() / scale;
+            if res <= opts.tol && ws.locked.ncols() < k {
                 // lock in descending discovery order
-                locked_vals.push(lam);
-                locked_u.push(uc);
-                newly_locked = true;
-            } else {
-                last_ritz.push((lam, uc));
+                ws.locked_vals.push(lam);
+                let (locked, uritz) = (&mut ws.locked, &ws.uritz);
+                locked.push_col(uritz.col(j));
+            } else if ws.last.ncols() < k {
+                ws.last_vals.push(lam);
+                let (last, uritz) = (&mut ws.last, &ws.uritz);
+                last.push_col(uritz.col(j));
             }
         }
 
         // Restart direction: the best unconverged Ritz vector (naive
         // restart — no thick subspace retained), plus a small random
         // component so degenerate directions are eventually reachable.
-        start = match last_ritz.first() {
-            Some((_, u0)) => u0.clone(),
-            None => (0..n).map(|_| rng.normal()).collect(),
-        };
-        let snrm = nrm2(&start).max(1e-300);
-        for v in start.iter_mut() {
+        ws.start.clear();
+        if ws.last.ncols() > 0 {
+            let (start, last) = (&mut ws.start, &ws.last);
+            start.extend_from_slice(last.col(0));
+        } else {
+            fill_normal(&mut ws.start, n, &mut rng);
+        }
+        let snrm = nrm2(&ws.start).max(1e-300);
+        for v in ws.start.iter_mut() {
             *v += 1e-6 * snrm * rng.normal();
         }
-        let _ = newly_locked;
     }
 
-    let converged = locked_u.len() >= k;
+    let converged = ws.locked.ncols() >= k;
     // Assemble the answer: locked pairs first, then the best remaining
-    // Ritz pairs; sort everything descending by value.
-    let mut pairs: Vec<(f64, Vec<f64>)> =
-        locked_vals.iter().cloned().zip(locked_u.iter().cloned()).collect();
-    for (lam, u) in last_ritz {
-        if pairs.len() < k {
-            pairs.push((lam, u));
+    // Ritz pairs; sort everything descending by value. (Epilogue — the
+    // only allocations of the call besides the returned triplets.)
+    let mut order: Vec<(f64, bool, usize)> = Vec::with_capacity(k);
+    for j in 0..ws.locked.ncols() {
+        order.push((ws.locked_vals[j], true, j));
+    }
+    for j in 0..ws.last.ncols() {
+        if order.len() < k {
+            order.push((ws.last_vals[j], false, j));
         }
     }
-    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-    pairs.truncate(k);
+    order.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    order.truncate(k);
     let mut best_u = Mat::zeros(n, k);
     let mut best_vals = vec![0.0; k];
-    for (j, (lam, u)) in pairs.into_iter().enumerate() {
+    for (j, &(lam, from_locked, src)) in order.iter().enumerate() {
         best_vals[j] = lam;
-        best_u.set_col(j, &u);
+        let col = if from_locked { ws.locked.col(src) } else { ws.last.col(src) };
+        for (i, &v) in col.iter().enumerate() {
+            best_u.set(i, j, v);
+        }
     }
 
     finalize(a, best_u, &best_vals, matvecs, iters, converged)
 }
 
-/// Placeholder hook kept for clarity: locking is greedy in discovery
-/// order, which for GKL means descending Ritz values; no reorder needed.
-#[inline]
-fn newly_locked_breaks_order(_locked: &[f64]) -> bool {
-    false
-}
-
-fn apply_vec<O: SvdOp + ?Sized>(a: &O, x: &[f64]) -> Vec<f64> {
-    let b = Mat::from_vec(x.len(), 1, x.to_vec());
-    a.apply(&b).col(0)
-}
-
-fn apply_t_vec<O: SvdOp + ?Sized>(a: &O, x: &[f64]) -> Vec<f64> {
-    let b = Mat::from_vec(x.len(), 1, x.to_vec());
-    a.apply_t(&b).col(0)
-}
-
-/// One full reorthogonalization pass (classical Gram–Schmidt, twice).
-fn reorth(basis: &[Vec<f64>], v: &mut Vec<f64>) {
-    for _ in 0..2 {
-        for b in basis {
-            let c = dot(b, v);
-            if c != 0.0 {
-                axpy(-c, b, v);
-            }
-        }
-    }
+fn resize_zeroed(v: &mut Vec<f64>, n: usize) {
+    v.clear();
+    v.resize(n, 0.0);
 }
 
 #[cfg(test)]
@@ -279,5 +291,26 @@ mod tests {
         assert!((r.s[0] - n as f64).abs() < 1e-6);
         assert!((r.s[1] - (n - 1) as f64).abs() < 1e-6);
         assert!((r.s[2] - (n - 2) as f64).abs() < 1e-6);
+    }
+
+    #[test]
+    fn workspace_reuse_matches_fresh() {
+        let mut rng = Pcg::seed(73);
+        let a = randmat(&mut rng, 55, 18);
+        let b = randmat(&mut rng, 33, 9);
+        let opts_a = LanczosOpts { tol: 1e-9, max_matvecs: 20_000, ..LanczosOpts::new(3) };
+        let opts_b = LanczosOpts { tol: 1e-9, max_matvecs: 20_000, ..LanczosOpts::new(2) };
+        let mut ws = SolverWorkspace::new();
+        let _warm = lanczos_svd_ws(&b, &opts_b, 3, &mut ws);
+        let reused = lanczos_svd_ws(&a, &opts_a, 5, &mut ws);
+        let fresh = lanczos_svd(&a, &opts_a, 5);
+        for j in 0..3 {
+            assert!(
+                (reused.s[j] - fresh.s[j]).abs() < 1e-9 * (1.0 + fresh.s[j]),
+                "σ_{j}: {} vs {}",
+                reused.s[j],
+                fresh.s[j]
+            );
+        }
     }
 }

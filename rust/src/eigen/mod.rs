@@ -7,15 +7,20 @@
 //!   restart: the Matlab `svds` analogue used as the Fig. 3 comparator.
 //!
 //! Both touch the matrix only through [`op::SvdOp`] block products, so the
-//! sparse Ẑ never needs an explicit Laplacian.
+//! sparse Ẑ never needs an explicit Laplacian. Every S·B = A·(Aᵀ·B)
+//! product goes through the fused [`op::SvdOp::gram_matmat_into`] fast
+//! path, and both solvers thread a reusable [`SolverWorkspace`] so
+//! steady-state iterations are allocation-free — see [`workspace`].
 
 pub mod davidson;
 pub mod lanczos;
 pub mod op;
+pub mod workspace;
 
-pub use davidson::{davidson_svd, DavidsonOpts};
-pub use lanczos::{lanczos_svd, LanczosOpts};
+pub use davidson::{davidson_svd, davidson_svd_ws, DavidsonOpts};
+pub use lanczos::{lanczos_svd, lanczos_svd_ws, LanczosOpts};
 pub use op::{CountingOp, SvdOp};
+pub use workspace::SolverWorkspace;
 
 use crate::config::Solver;
 use crate::linalg::Mat;
@@ -55,20 +60,34 @@ impl SvdsOpts {
     }
 }
 
-/// Compute the top-k left singular triplets of `a` with the selected solver.
+/// Compute the top-k left singular triplets of `a` with the selected
+/// solver, using a fresh private workspace.
 pub fn svds<O: SvdOp + ?Sized>(a: &O, opts: &SvdsOpts, seed: u64) -> SvdResult {
+    let mut ws = SolverWorkspace::new();
+    svds_ws(a, opts, seed, &mut ws)
+}
+
+/// [`svds`] with an explicit, reusable [`SolverWorkspace`]: callers running
+/// sweeps (the coordinator drivers, SC_RB pipelines) amortize one
+/// workspace's buffers over every solve.
+pub fn svds_ws<O: SvdOp + ?Sized>(
+    a: &O,
+    opts: &SvdsOpts,
+    seed: u64,
+    ws: &mut SolverWorkspace,
+) -> SvdResult {
     match opts.solver {
         Solver::Davidson => {
             let mut o = DavidsonOpts::new(opts.k);
             o.tol = opts.tol;
             o.max_matvecs = opts.max_matvecs;
-            davidson_svd(a, &o, seed)
+            davidson_svd_ws(a, &o, seed, ws)
         }
         Solver::Lanczos => {
             let mut o = LanczosOpts::new(opts.k);
             o.tol = opts.tol;
             o.max_matvecs = opts.max_matvecs;
-            lanczos_svd(a, &o, seed)
+            lanczos_svd_ws(a, &o, seed, ws)
         }
     }
 }

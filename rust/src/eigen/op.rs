@@ -1,12 +1,28 @@
 //! Operator abstraction for the iterative SVD solvers.
 //!
 //! The solvers only ever touch the matrix through block products `A·B` and
-//! `Aᵀ·B`, so the weighted RB feature matrix Ẑ (sparse CSR), dense matrices,
-//! and test operators all plug in through this trait — the paper's point
-//! that PRIMME needs no explicit form of L̂.
+//! `Aᵀ·B`, so the weighted RB feature matrix Ẑ (natively the fixed-stride
+//! [`EllRb`] substrate since PR 1), general [`Csr`] matrices, dense
+//! matrices, and test operators all plug in through this trait — the
+//! paper's point that PRIMME needs no explicit form of L̂.
+//!
+//! # The `gram_matmat` contract
+//!
+//! Every solver iteration is one application of the symmetric PSD operator
+//! S = A·Aᵀ to a block. [`SvdOp::gram_matmat`] computes exactly
+//! `apply(apply_t(b))` — same result, same matvec accounting (2·k per
+//! block of width k) — but operators may fuse the two passes.
+//! [`EllRb`] does: its strip-tiled kernel never materializes the D×k
+//! intermediate, streaming substrate bytes once per pass end-to-end with
+//! only cache-sized per-thread tiles (see [`EllRb::gram_matmat_into`]).
+//! The `_into` variant additionally writes into a caller-owned output and
+//! reuses a [`GramScratch`], so the solver hot loop performs zero heap
+//! allocations in steady state. Default implementations fall back to the
+//! two-pass product, so `Mat`, `Csr`, and custom test operators keep
+//! working unchanged.
 
 use crate::linalg::Mat;
-use crate::sparse::{Csr, EllRb};
+use crate::sparse::{Csr, EllRb, GramScratch};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// A (possibly implicit) m×n linear operator with block apply.
@@ -17,6 +33,43 @@ pub trait SvdOp: Sync {
     fn apply(&self, b: &Mat) -> Mat;
     /// Y = Aᵀ · B, with B of shape nrows×k.
     fn apply_t(&self, b: &Mat) -> Mat;
+    /// Y = A·(Aᵀ·B), the gram (S = A·Aᵀ) block product, B of shape
+    /// nrows×k. Semantically identical to `apply(apply_t(b))`; operators
+    /// with structure (notably [`EllRb`]) fuse the two passes.
+    fn gram_matmat(&self, b: &Mat) -> Mat {
+        self.apply(&self.apply_t(b))
+    }
+    /// Allocation-aware gram product: write A·(Aᵀ·B) into `out`
+    /// (reshaped as needed), reusing `scratch` across calls. The default
+    /// falls back to the allocating two-pass product; [`EllRb`] overrides
+    /// with the fused strip-tiled kernel, which is allocation-free once
+    /// `scratch` is warm.
+    fn gram_matmat_into(&self, b: &Mat, out: &mut Mat, scratch: &mut GramScratch) {
+        let _ = scratch;
+        *out = self.gram_matmat(b);
+    }
+    /// Pre-provision `scratch` for gram products up to block width
+    /// `k_max` (called once at solver entry so steady-state iterations
+    /// never re-provision). Default: nothing to provision.
+    fn prepare_gram(&self, scratch: &mut GramScratch, k_max: usize) {
+        let _ = (scratch, k_max);
+    }
+    /// y = A·x into a caller-owned buffer (single-vector hot path of the
+    /// Lanczos bidiagonalization). Default allocates via the block apply.
+    fn apply_vec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.ncols());
+        assert_eq!(y.len(), self.nrows());
+        let b = Mat::from_vec(x.len(), 1, x.to_vec());
+        y.copy_from_slice(&self.apply(&b).data);
+    }
+    /// y = Aᵀ·x into a caller-owned buffer. Default allocates via the
+    /// block apply.
+    fn apply_t_vec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.nrows());
+        assert_eq!(y.len(), self.ncols());
+        let b = Mat::from_vec(x.len(), 1, x.to_vec());
+        y.copy_from_slice(&self.apply_t(&b).data);
+    }
     /// Diagonal of A·Aᵀ (row squared norms) if cheaply available — used by
     /// the Davidson diagonal preconditioner.
     fn gram_diag(&self) -> Option<Vec<f64>> {
@@ -58,6 +111,22 @@ impl SvdOp for EllRb {
     }
     fn apply_t(&self, b: &Mat) -> Mat {
         self.t_matmat(b)
+    }
+    /// Fused strip-tiled S·B — no D×k intermediate.
+    fn gram_matmat(&self, b: &Mat) -> Mat {
+        EllRb::gram_matmat(self, b)
+    }
+    fn gram_matmat_into(&self, b: &Mat, out: &mut Mat, scratch: &mut GramScratch) {
+        EllRb::gram_matmat_into(self, b, out, scratch)
+    }
+    fn prepare_gram(&self, scratch: &mut GramScratch, k_max: usize) {
+        scratch.prepare(self, k_max);
+    }
+    fn apply_vec_into(&self, x: &[f64], y: &mut [f64]) {
+        self.matvec_into(x, y);
+    }
+    fn apply_t_vec_into(&self, x: &[f64], y: &mut [f64]) {
+        self.t_matvec_into(x, y);
     }
     /// Closed form R·scale[i]² — no pass over the matrix at all.
     fn gram_diag(&self) -> Option<Vec<f64>> {
@@ -115,6 +184,27 @@ impl<'a, O: SvdOp + ?Sized> SvdOp for CountingOp<'a, O> {
         self.matvecs.fetch_add(b.cols, Ordering::Relaxed);
         self.inner.apply_t(b)
     }
+    /// A fused gram product is still 2k matvecs — one A and one Aᵀ pass
+    /// per column — matching the two-pass accounting exactly.
+    fn gram_matmat(&self, b: &Mat) -> Mat {
+        self.matvecs.fetch_add(2 * b.cols, Ordering::Relaxed);
+        self.inner.gram_matmat(b)
+    }
+    fn gram_matmat_into(&self, b: &Mat, out: &mut Mat, scratch: &mut GramScratch) {
+        self.matvecs.fetch_add(2 * b.cols, Ordering::Relaxed);
+        self.inner.gram_matmat_into(b, out, scratch);
+    }
+    fn prepare_gram(&self, scratch: &mut GramScratch, k_max: usize) {
+        self.inner.prepare_gram(scratch, k_max);
+    }
+    fn apply_vec_into(&self, x: &[f64], y: &mut [f64]) {
+        self.matvecs.fetch_add(1, Ordering::Relaxed);
+        self.inner.apply_vec_into(x, y);
+    }
+    fn apply_t_vec_into(&self, x: &[f64], y: &mut [f64]) {
+        self.matvecs.fetch_add(1, Ordering::Relaxed);
+        self.inner.apply_t_vec_into(x, y);
+    }
     fn gram_diag(&self) -> Option<Vec<f64>> {
         self.inner.gram_diag()
     }
@@ -141,6 +231,37 @@ mod tests {
         assert_eq!(a.gram_diag().unwrap(), vec![9.0, 25.0]);
         let z = Csr::from_rows(2, 3, vec![vec![(0, 1.0), (1, 2.0), (2, 2.0)], vec![(1, 3.0), (2, 4.0)]]);
         assert_eq!(z.gram_diag().unwrap(), vec![9.0, 25.0]);
+    }
+
+    #[test]
+    fn gram_matmat_default_and_fused_agree() {
+        // default (two-pass) on Csr vs fused override on EllRb, same matrix
+        let e = EllRb::new(4, 6, 2, vec![0, 3, 1, 4, 2, 5, 0, 5], vec![0.5, 1.0, 2.0, 0.25]);
+        let c = e.to_csr();
+        let b = Mat::from_vec(4, 3, (0..12).map(|i| (i as f64) * 0.5 - 2.0).collect());
+        let fused = SvdOp::gram_matmat(&e, &b);
+        let two_pass = c.gram_matmat(&b);
+        assert!(fused.sub(&two_pass).frob_norm() < 1e-13);
+        // _into with a reused scratch matches too
+        let mut out = Mat::zeros(0, 0);
+        let mut ws = GramScratch::new();
+        SvdOp::gram_matmat_into(&e, &b, &mut out, &mut ws);
+        assert!(out.sub(&two_pass).frob_norm() < 1e-13);
+    }
+
+    #[test]
+    fn counting_wrapper_counts_gram_and_vec_applies() {
+        let a = Mat::from_vec(3, 2, vec![1., 0., 0., 1., 1., 1.]);
+        let c = CountingOp::new(&a);
+        let b = Mat::from_vec(3, 4, vec![0.25; 12]);
+        let _ = c.gram_matmat(&b); // 2·4 matvecs
+        let mut y = vec![0.0; 3];
+        c.apply_vec_into(&[1.0, 2.0], &mut y); // +1
+        assert_eq!(y, vec![1.0, 2.0, 3.0]);
+        let mut t = vec![0.0; 2];
+        c.apply_t_vec_into(&[1.0, 1.0, 1.0], &mut t); // +1
+        assert_eq!(t, vec![2.0, 2.0]);
+        assert_eq!(c.matvecs(), 10);
     }
 
     #[test]

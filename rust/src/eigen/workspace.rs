@@ -1,0 +1,615 @@
+//! Reusable solver workspaces — the zero-allocation substrate under
+//! Davidson and Lanczos.
+//!
+//! Both solvers are restructured around two ideas:
+//!
+//! 1. **Column-major bases with reserved capacity** ([`ColBasis`]): basis
+//!    growth, thick restarts, re-orthogonalization, and Ritz extraction are
+//!    all column operations; storing columns contiguously makes each of
+//!    them a streaming pass and makes "append a column" a plain
+//!    `extend_from_slice` into reserved capacity instead of the
+//!    re-layout + re-allocation of a row-major `hcat`.
+//! 2. **One [`SolverWorkspace`] threaded through the solver** holding every
+//!    buffer an iteration touches — bases, S·V cache, Ritz/residual blocks,
+//!    projected-problem scratch ([`SymEigWs`] / [`SmallSvdWs`]), the fused
+//!    gram kernel's [`GramScratch`], and the row-major bridge blocks the
+//!    sparse kernels consume. After `ensure_*` provisions capacities at
+//!    solver entry, steady-state iterations perform **zero heap
+//!    allocations** (verified by the counting-allocator test in
+//!    `tests/alloc.rs`; in multi-threaded runs the scoped-thread fork/join
+//!    bookkeeping is the only remaining per-call allocation, O(threads) and
+//!    data-size independent).
+//!
+//! The workspace is reusable across solves — `svds_ws` callers (e.g. the
+//! R-sweep in `coordinator::experiment::theory_convergence`) amortize one
+//! workspace over a whole experiment grid.
+
+use crate::linalg::{dot, nrm2, Mat, SmallSvdWs, SymEigWs};
+use crate::sparse::GramScratch;
+use crate::util::threads::{num_threads, parallel_chunks_mut, parallel_rows_mut};
+
+/// Column-major tall matrix with reserved column capacity: column j lives
+/// at `data[j·rows .. (j+1)·rows]`. The basis/block container of the
+/// solver hot path — all appends and column reads are contiguous.
+pub struct ColBasis {
+    rows: usize,
+    ncols: usize,
+    data: Vec<f64>,
+}
+
+impl Default for ColBasis {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ColBasis {
+    pub fn new() -> ColBasis {
+        ColBasis { rows: 0, ncols: 0, data: Vec::new() }
+    }
+
+    /// Empty the basis and (re)provision capacity for `cap_cols` columns of
+    /// `rows` entries. Allocates only when capacity grows.
+    pub fn reset(&mut self, rows: usize, cap_cols: usize) {
+        self.rows = rows;
+        self.ncols = 0;
+        self.data.clear();
+        let want = rows * cap_cols;
+        if self.data.capacity() < want {
+            self.data.reserve(want);
+        }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Drop all columns, keep shape and capacity.
+    pub fn clear_cols(&mut self) {
+        self.ncols = 0;
+        self.data.clear();
+    }
+
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        debug_assert!(j < self.ncols);
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        debug_assert!(j < self.ncols);
+        &mut self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Append a column (no allocation when within reserved capacity).
+    pub fn push_col(&mut self, src: &[f64]) {
+        debug_assert_eq!(src.len(), self.rows);
+        self.data.extend_from_slice(src);
+        self.ncols += 1;
+    }
+
+    /// Append a zeroed column and return it for in-place filling.
+    pub fn push_zero_col(&mut self) -> &mut [f64] {
+        let rows = self.rows;
+        self.data.resize(self.data.len() + rows, 0.0);
+        self.ncols += 1;
+        self.col_mut(self.ncols - 1)
+    }
+
+    /// Append column `j` of a row-major `Mat` (strided gather).
+    pub fn push_col_from_mat(&mut self, m: &Mat, j: usize) {
+        debug_assert_eq!(m.rows, self.rows);
+        let rows = self.rows;
+        self.data.reserve(rows); // no-op within reserved capacity
+        for i in 0..rows {
+            self.data.push(m.at(i, j));
+        }
+        self.ncols += 1;
+    }
+
+    /// Scatter column `j` into column `jm` of a row-major `Mat`.
+    pub fn store_col_to_mat(&self, j: usize, m: &mut Mat, jm: usize) {
+        debug_assert_eq!(m.rows, self.rows);
+        let col = self.col(j);
+        for (i, &v) in col.iter().enumerate() {
+            m.set(i, jm, v);
+        }
+    }
+
+    /// Become a copy of `other` (no allocation when capacity suffices).
+    pub fn copy_from(&mut self, other: &ColBasis) {
+        self.rows = other.rows;
+        self.ncols = other.ncols;
+        self.data.clear();
+        self.data.extend_from_slice(&other.data);
+    }
+}
+
+/// Fill `v` with `n` standard normals (resized in place; allocation-free
+/// within reserved capacity). Shared by both solvers' start/refresh paths.
+pub(crate) fn fill_normal(v: &mut Vec<f64>, n: usize, rng: &mut crate::util::rng::Pcg) {
+    v.clear();
+    v.resize(n, 0.0);
+    for x in v.iter_mut() {
+        *x = rng.normal();
+    }
+}
+
+/// Gather basis columns `[from, ncols)` into a row-major `Mat` — the
+/// bridge shape the sparse gram kernels consume — parallel over rows.
+pub(crate) fn gather_cols_to_mat(src: &ColBasis, from: usize, out: &mut Mat) {
+    let rows = src.rows();
+    let cols = src.ncols() - from;
+    out.reset(rows, cols);
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    if !worth_forking(rows * cols) {
+        for (i, row) in out.data.chunks_mut(cols).enumerate() {
+            for (t, slot) in row.iter_mut().enumerate() {
+                *slot = src.col(from + t)[i];
+            }
+        }
+        return;
+    }
+    parallel_rows_mut(&mut out.data, cols, |i0, chunk| {
+        for (di, row) in chunk.chunks_mut(cols).enumerate() {
+            let i = i0 + di;
+            for (t, slot) in row.iter_mut().enumerate() {
+                *slot = src.col(from + t)[i];
+            }
+        }
+    });
+}
+
+/// Below roughly this many flops, a scoped-thread fork/join costs more
+/// than the work it parallelizes (spawn/join is tens of µs; 64k mul-adds
+/// are single-digit µs) — the helpers below run inline under it.
+const PAR_WORK_THRESHOLD: usize = 1 << 16;
+
+#[inline]
+fn worth_forking(work: usize) -> bool {
+    work >= PAR_WORK_THRESHOLD && num_threads() > 1
+}
+
+/// coeff\[j\] = basisⱼ · v for all current columns — the coefficient pass
+/// of blocked classical Gram–Schmidt, parallel over columns when the
+/// total work justifies the fork.
+pub fn dots_into(basis: &ColBasis, v: &[f64], coeff: &mut [f64]) {
+    let m = basis.ncols();
+    debug_assert_eq!(coeff.len(), m);
+    if m == 0 {
+        return;
+    }
+    if !worth_forking(m * v.len()) {
+        for (j, c) in coeff.iter_mut().enumerate() {
+            *c = dot(basis.col(j), v);
+        }
+        return;
+    }
+    parallel_chunks_mut(coeff, num_threads(), |j0, cc| {
+        for (t, c) in cc.iter_mut().enumerate() {
+            *c = dot(basis.col(j0 + t), v);
+        }
+    });
+}
+
+/// v −= Σⱼ coeffⱼ · basisⱼ — the update pass of blocked CGS, parallel over
+/// row chunks (each worker streams the same basis columns over its slice).
+pub fn subtract_combo(basis: &ColBasis, coeff: &[f64], v: &mut [f64]) {
+    let m = basis.ncols();
+    debug_assert_eq!(coeff.len(), m);
+    if m == 0 {
+        return;
+    }
+    if !worth_forking(m * v.len()) {
+        for (j, &cj) in coeff.iter().enumerate() {
+            if cj != 0.0 {
+                crate::linalg::axpy(-cj, basis.col(j), v);
+            }
+        }
+        return;
+    }
+    parallel_chunks_mut(v, num_threads(), |lo, chunk| {
+        for j in 0..m {
+            let cj = coeff[j];
+            if cj == 0.0 {
+                continue;
+            }
+            let col = &basis.col(j)[lo..lo + chunk.len()];
+            for (y, x) in chunk.iter_mut().zip(col.iter()) {
+                *y -= cj * *x;
+            }
+        }
+    });
+}
+
+/// Two-round blocked CGS of `v` against the columns of `basis` — replaces
+/// the vector-at-a-time dot/axpy interleave with two streaming passes per
+/// round (`coeff` is caller-owned scratch, resized in place within its
+/// reserved capacity).
+pub fn reorth_blocked(basis: &ColBasis, v: &mut [f64], coeff: &mut Vec<f64>) {
+    let m = basis.ncols();
+    if m == 0 {
+        return;
+    }
+    coeff.clear();
+    coeff.resize(m, 0.0);
+    for _round in 0..2 {
+        dots_into(basis, v, &mut coeff[..m]);
+        subtract_combo(basis, &coeff[..m], v);
+    }
+}
+
+/// Orthonormalize `v` against `basis` (blocked CGS2) and append it if it
+/// stays independent (relative tolerance against its incoming norm, as in
+/// `orthonormalize_against`). Returns whether the column was kept.
+pub fn append_orthonormalized(
+    basis: &mut ColBasis,
+    v: &mut [f64],
+    coeff: &mut Vec<f64>,
+) -> bool {
+    let nrm0 = nrm2(v);
+    if nrm0 <= 1e-300 {
+        return false;
+    }
+    reorth_blocked(basis, v, coeff);
+    let nrm = nrm2(v);
+    if nrm <= 1e-10 * nrm0 {
+        return false;
+    }
+    let inv = 1.0 / nrm;
+    for x in v.iter_mut() {
+        *x *= inv;
+    }
+    basis.push_col(v);
+    true
+}
+
+/// H = AᵀB over two column bases with the same row count: h (row-major
+/// m×m slice) gets h\[i·m+j\] = aᵢ · bⱼ. Parallel over rows of H.
+pub fn gram_pairs_into(a: &ColBasis, b: &ColBasis, h: &mut [f64], m: usize) {
+    debug_assert_eq!(a.ncols(), m);
+    debug_assert_eq!(b.ncols(), m);
+    debug_assert_eq!(h.len(), m * m);
+    if m == 0 {
+        return;
+    }
+    if !worth_forking(m * m * a.rows()) {
+        for (i, hrow) in h.chunks_mut(m).enumerate() {
+            let ai = a.col(i);
+            for (j, hj) in hrow.iter_mut().enumerate() {
+                *hj = dot(ai, b.col(j));
+            }
+        }
+        return;
+    }
+    parallel_rows_mut(h, m, |i0, rows| {
+        for (di, hrow) in rows.chunks_mut(m).enumerate() {
+            let ai = a.col(i0 + di);
+            for (j, hj) in hrow.iter_mut().enumerate() {
+                *hj = dot(ai, b.col(j));
+            }
+        }
+    });
+}
+
+/// Symmetrize a row-major m×m slice in place by averaging mirrored pairs.
+pub fn symmetrize_in_place(h: &mut [f64], m: usize) {
+    for i in 0..m {
+        for j in 0..i {
+            let avg = 0.5 * (h[i * m + j] + h[j * m + i]);
+            h[i * m + j] = avg;
+            h[j * m + i] = avg;
+        }
+    }
+}
+
+/// out = basis · Q\[:, ..take\]: out column j = Σₗ q\[l,j\]·basisₗ.
+/// Parallel over output columns (each is a contiguous slice).
+pub fn combine_into(basis: &ColBasis, q: &Mat, take: usize, out: &mut ColBasis) {
+    let rows = basis.rows();
+    let m = basis.ncols();
+    debug_assert_eq!(q.rows, m);
+    debug_assert!(take <= q.cols);
+    out.rows = rows;
+    out.ncols = take;
+    out.data.clear();
+    out.data.resize(rows * take, 0.0);
+    if take == 0 || rows == 0 {
+        return;
+    }
+    if !worth_forking(take * m * rows) {
+        for (j, ocol) in out.data.chunks_mut(rows).enumerate() {
+            for l in 0..m {
+                let w = q.at(l, j);
+                if w == 0.0 {
+                    continue;
+                }
+                for (o, x) in ocol.iter_mut().zip(basis.col(l).iter()) {
+                    *o += w * *x;
+                }
+            }
+        }
+        return;
+    }
+    parallel_rows_mut(&mut out.data, rows, |c0, cols| {
+        for (dc, ocol) in cols.chunks_mut(rows).enumerate() {
+            let j = c0 + dc;
+            for l in 0..m {
+                let w = q.at(l, j);
+                if w == 0.0 {
+                    continue;
+                }
+                for (o, x) in ocol.iter_mut().zip(basis.col(l).iter()) {
+                    *o += w * *x;
+                }
+            }
+        }
+    });
+}
+
+/// Everything a Davidson or Lanczos run touches per iteration, preallocated
+/// once and reused. See the module docs for the zero-allocation contract.
+pub struct SolverWorkspace {
+    /// Fused gram kernel scratch (strip schedule + per-thread tiles).
+    pub gram: GramScratch,
+    // ---- row-major bridge blocks (input/output of the sparse kernels)
+    pub(crate) blk: Mat,
+    pub(crate) s_blk: Mat,
+    // ---- Davidson
+    pub(crate) basis: ColBasis,
+    pub(crate) s_basis: ColBasis,
+    pub(crate) prev: ColBasis,
+    pub(crate) x: ColBasis,
+    pub(crate) sx: ColBasis,
+    pub(crate) resid: ColBasis,
+    pub(crate) h: Mat,
+    pub(crate) q: Mat,
+    pub(crate) vals: Vec<f64>,
+    pub(crate) eig: SymEigWs,
+    pub(crate) coeff: Vec<f64>,
+    pub(crate) tmp_col: Vec<f64>,
+    // ---- Lanczos
+    pub(crate) us: ColBasis,
+    pub(crate) vs: ColBasis,
+    pub(crate) locked: ColBasis,
+    pub(crate) last: ColBasis,
+    pub(crate) uritz: ColBasis,
+    pub(crate) alphas: Vec<f64>,
+    pub(crate) betas: Vec<f64>,
+    pub(crate) start: Vec<f64>,
+    pub(crate) vtmp: Vec<f64>,
+    pub(crate) utmp: Vec<f64>,
+    pub(crate) locked_vals: Vec<f64>,
+    pub(crate) last_vals: Vec<f64>,
+    pub(crate) bmat: Mat,
+    pub(crate) svd: SmallSvdWs,
+}
+
+impl Default for SolverWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SolverWorkspace {
+    pub fn new() -> SolverWorkspace {
+        SolverWorkspace {
+            gram: GramScratch::new(),
+            blk: Mat::zeros(0, 0),
+            s_blk: Mat::zeros(0, 0),
+            basis: ColBasis::new(),
+            s_basis: ColBasis::new(),
+            prev: ColBasis::new(),
+            x: ColBasis::new(),
+            sx: ColBasis::new(),
+            resid: ColBasis::new(),
+            h: Mat::zeros(0, 0),
+            q: Mat::zeros(0, 0),
+            vals: Vec::new(),
+            eig: SymEigWs::new(),
+            coeff: Vec::new(),
+            tmp_col: Vec::new(),
+            us: ColBasis::new(),
+            vs: ColBasis::new(),
+            locked: ColBasis::new(),
+            last: ColBasis::new(),
+            uritz: ColBasis::new(),
+            alphas: Vec::new(),
+            betas: Vec::new(),
+            start: Vec::new(),
+            vtmp: Vec::new(),
+            utmp: Vec::new(),
+            locked_vals: Vec::new(),
+            last_vals: Vec::new(),
+            bmat: Mat::zeros(0, 0),
+            svd: SmallSvdWs::new(),
+        }
+    }
+
+    /// Provision every buffer a Davidson run of (n, k, max_basis) touches.
+    pub(crate) fn ensure_davidson(&mut self, n: usize, k: usize, max_basis: usize) {
+        self.basis.reset(n, max_basis);
+        self.s_basis.reset(n, max_basis);
+        self.prev.reset(n, k);
+        self.x.reset(n, k);
+        self.sx.reset(n, k);
+        self.resid.reset(n, k);
+        self.blk.reserve_for(n, max_basis);
+        self.s_blk.reserve_for(n, max_basis);
+        self.h.reserve_for(max_basis, max_basis);
+        self.q.reserve_for(max_basis, k);
+        self.eig.reserve(max_basis);
+        reserve_vec(&mut self.vals, k);
+        reserve_vec(&mut self.coeff, max_basis);
+        reserve_vec(&mut self.tmp_col, n);
+    }
+
+    /// Provision every buffer a Lanczos run of (n, d, subspace m, k)
+    /// touches.
+    pub(crate) fn ensure_lanczos(&mut self, n: usize, d: usize, m: usize, k: usize) {
+        self.us.reset(n, m + 1);
+        self.vs.reset(d, m + 1);
+        self.locked.reset(n, k);
+        self.last.reset(n, k + 1);
+        self.uritz.reset(n, k + 1);
+        self.blk.reserve_for(n, k + 1);
+        self.s_blk.reserve_for(n, k + 1);
+        self.bmat.reserve_for(m + 1, m + 1);
+        self.svd.reserve(m + 1, m + 1);
+        reserve_vec(&mut self.alphas, m + 1);
+        reserve_vec(&mut self.betas, m + 1);
+        reserve_vec(&mut self.start, n);
+        reserve_vec(&mut self.vtmp, d);
+        reserve_vec(&mut self.utmp, n);
+        reserve_vec(&mut self.locked_vals, k);
+        reserve_vec(&mut self.last_vals, k + 1);
+        reserve_vec(&mut self.coeff, m + 1);
+        self.locked.clear_cols();
+        self.locked_vals.clear();
+        self.last.clear_cols();
+        self.last_vals.clear();
+    }
+}
+
+fn reserve_vec(v: &mut Vec<f64>, cap: usize) {
+    if v.capacity() < cap {
+        v.reserve(cap - v.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn rand_basis(rng: &mut Pcg, rows: usize, cols: usize) -> ColBasis {
+        let mut b = ColBasis::new();
+        b.reset(rows, cols + 2);
+        let mut coeff = Vec::new();
+        let mut v = vec![0.0; rows];
+        for _ in 0..cols {
+            for x in v.iter_mut() {
+                *x = rng.normal();
+            }
+            assert!(append_orthonormalized(&mut b, &mut v, &mut coeff));
+        }
+        b
+    }
+
+    #[test]
+    fn append_builds_orthonormal_basis() {
+        let mut rng = Pcg::seed(41);
+        let b = rand_basis(&mut rng, 60, 6);
+        assert_eq!(b.ncols(), 6);
+        for i in 0..6 {
+            for j in 0..6 {
+                let d = dot(b.col(i), b.col(j));
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((d - want).abs() < 1e-10, "({i},{j}): {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn append_rejects_dependent_columns() {
+        let mut rng = Pcg::seed(42);
+        let mut b = rand_basis(&mut rng, 30, 4);
+        let mut coeff = Vec::new();
+        // a vector inside span(b) must be rejected
+        let mut v = vec![0.0; 30];
+        for j in 0..4 {
+            let w = rng.range_f64(-1.0, 1.0);
+            for (x, c) in v.iter_mut().zip(b.col(j).iter()) {
+                *x += w * c;
+            }
+        }
+        assert!(!append_orthonormalized(&mut b, &mut v, &mut coeff));
+        assert_eq!(b.ncols(), 4);
+    }
+
+    #[test]
+    fn gram_pairs_matches_dense() {
+        let mut rng = Pcg::seed(43);
+        let (rows, m) = (25, 5);
+        let mut a = ColBasis::new();
+        a.reset(rows, m);
+        let mut b = ColBasis::new();
+        b.reset(rows, m);
+        for _ in 0..m {
+            let ca: Vec<f64> = (0..rows).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let cb: Vec<f64> = (0..rows).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            a.push_col(&ca);
+            b.push_col(&cb);
+        }
+        let mut h = vec![0.0; m * m];
+        gram_pairs_into(&a, &b, &mut h, m);
+        for i in 0..m {
+            for j in 0..m {
+                let want = dot(a.col(i), b.col(j));
+                assert!((h[i * m + j] - want).abs() < 1e-12);
+            }
+        }
+        symmetrize_in_place(&mut h, m);
+        for i in 0..m {
+            for j in 0..m {
+                assert_eq!(h[i * m + j], h[j * m + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn combine_matches_explicit_sum() {
+        let mut rng = Pcg::seed(44);
+        let (rows, m, take) = (40, 6, 3);
+        let basis = rand_basis(&mut rng, rows, m);
+        let q = Mat::from_vec(m, take, (0..m * take).map(|_| rng.range_f64(-1.0, 1.0)).collect());
+        let mut out = ColBasis::new();
+        out.reset(rows, take);
+        combine_into(&basis, &q, take, &mut out);
+        for j in 0..take {
+            for i in 0..rows {
+                let mut want = 0.0;
+                for l in 0..m {
+                    want += q.at(l, j) * basis.col(l)[i];
+                }
+                assert!((out.col(j)[i] - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn reorth_blocked_removes_components() {
+        let mut rng = Pcg::seed(45);
+        let basis = rand_basis(&mut rng, 50, 5);
+        let mut v: Vec<f64> = (0..50).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let mut coeff = Vec::new();
+        reorth_blocked(&basis, &mut v, &mut coeff);
+        for j in 0..5 {
+            let d = dot(basis.col(j), &v);
+            assert!(d.abs() < 1e-11, "residual projection on {j}: {d}");
+        }
+    }
+
+    #[test]
+    fn col_mat_bridges_roundtrip() {
+        let mut b = ColBasis::new();
+        b.reset(3, 2);
+        b.push_col(&[1.0, 2.0, 3.0]);
+        let mut m = Mat::zeros(3, 2);
+        b.store_col_to_mat(0, &mut m, 1);
+        assert_eq!(m.col(1), vec![1.0, 2.0, 3.0]);
+        let mut b2 = ColBasis::new();
+        b2.reset(3, 1);
+        b2.push_col_from_mat(&m, 1);
+        assert_eq!(b2.col(0), &[1.0, 2.0, 3.0][..]);
+    }
+}

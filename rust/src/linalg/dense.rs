@@ -42,6 +42,26 @@ impl Mat {
         Mat { rows, cols, data }
     }
 
+    /// Reshape in place to a zero-filled rows×cols, reusing the existing
+    /// allocation whenever capacity allows. This is the workspace-reuse
+    /// primitive of the zero-allocation solver path: after a first sizing
+    /// pass, steady-state `reset` calls never touch the heap.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Reserve capacity for a later [`Mat::reset`] up to rows×cols without
+    /// changing the current shape.
+    pub fn reserve_for(&mut self, rows: usize, cols: usize) {
+        let want = rows * cols;
+        if self.data.capacity() < want {
+            self.data.reserve(want - self.data.len());
+        }
+    }
+
     pub fn eye(n: usize) -> Mat {
         let mut m = Mat::zeros(n, n);
         for i in 0..n {

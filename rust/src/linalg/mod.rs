@@ -11,5 +11,5 @@ pub mod symeig;
 pub use chol::{cholesky_jittered, whiten_rows};
 pub use dense::{axpy, dot, l1dist, nrm2, sqdist, Mat};
 pub use qr::{orthonormalize_against, thin_qr, ThinQr};
-pub use svd_small::{svd_thin, sym_inv_sqrt, top_left_singular, Svd};
-pub use symeig::{sym_eig, SymEig};
+pub use svd_small::{svd_thin, svd_thin_into, sym_inv_sqrt, top_left_singular, SmallSvdWs, Svd};
+pub use symeig::{sym_eig, sym_eig_into, SymEig, SymEigWs};

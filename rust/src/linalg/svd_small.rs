@@ -4,13 +4,102 @@
 //! problems in tests.
 
 use super::dense::Mat;
-use super::symeig::sym_eig;
+use super::symeig::{sym_eig, sym_eig_into, SymEigWs};
 
 /// Thin SVD result; singular values descending.
 pub struct Svd {
     pub u: Mat,
     pub s: Vec<f64>,
     pub v: Mat,
+}
+
+/// Reusable buffers for [`svd_thin_into`] — the per-restart-cycle small
+/// SVD of the Lanczos bidiagonal projection runs on one of these with zero
+/// steady-state allocations.
+pub struct SmallSvdWs {
+    g: Mat,
+    eig: SymEigWs,
+    /// Left singular vectors, m×n (valid after `svd_thin_into`).
+    pub u: Mat,
+    /// Singular values, descending (valid after `svd_thin_into`).
+    pub s: Vec<f64>,
+    /// Right singular vectors, n×n (valid after `svd_thin_into`).
+    pub v: Mat,
+}
+
+impl Default for SmallSvdWs {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SmallSvdWs {
+    pub fn new() -> SmallSvdWs {
+        SmallSvdWs {
+            g: Mat::zeros(0, 0),
+            eig: SymEigWs::new(),
+            u: Mat::zeros(0, 0),
+            s: Vec::new(),
+            v: Mat::zeros(0, 0),
+        }
+    }
+
+    /// Pre-provision for matrices up to m×n (m ≥ n).
+    pub fn reserve(&mut self, m: usize, n: usize) {
+        self.g.reserve_for(n, n);
+        self.eig.reserve(n);
+        self.u.reserve_for(m, n);
+        self.v.reserve_for(n, n);
+        self.s.reserve(n.saturating_sub(self.s.len()));
+    }
+}
+
+/// Thin SVD of a *tall* `a` (m×n, m ≥ n) into reusable buffers: results
+/// land in `ws.u` (m×n), `ws.s` (descending), `ws.v` (n×n). Same
+/// Gram-matrix route as [`svd_thin`], with the small gemms hand-rolled so
+/// nothing allocates once `ws` has seen the size.
+pub fn svd_thin_into(a: &Mat, ws: &mut SmallSvdWs) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "svd_thin_into expects a tall matrix, got {m}x{n}");
+    // G = AᵀA (n×n, symmetric): tiny shapes — plain triple loop
+    ws.g.reset(n, n);
+    for i in 0..n {
+        for j in i..n {
+            let mut s = 0.0;
+            for r in 0..m {
+                s += a.at(r, i) * a.at(r, j);
+            }
+            ws.g.set(i, j, s);
+            ws.g.set(j, i, s);
+        }
+    }
+    sym_eig_into(&ws.g, &mut ws.eig);
+    // descending σ and V
+    ws.s.clear();
+    ws.v.reset(n, n);
+    for j in 0..n {
+        let src = n - 1 - j;
+        let lam = ws.eig.w[src].max(0.0);
+        ws.s.push(lam.sqrt());
+        for i in 0..n {
+            ws.v.set(i, j, ws.eig.vecs.at(i, src));
+        }
+    }
+    // U = A·V·Σ⁻¹ (zero columns for σ ≈ 0, matching svd_thin)
+    ws.u.reset(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        for j in 0..n {
+            let sj = ws.s[j];
+            if sj > 1e-300 {
+                let mut s = 0.0;
+                for l in 0..n {
+                    s += arow[l] * ws.v.at(l, j);
+                }
+                ws.u.set(i, j, s / sj);
+            }
+        }
+    }
 }
 
 /// Thin SVD of `a` (m×n). Computes eig of the smaller Gram matrix, so cost
@@ -101,6 +190,30 @@ mod tests {
             // descending
             for j in 1..k {
                 assert!(s[j] <= s[j - 1] + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn into_variant_matches_allocating() {
+        let mut rng = Pcg::seed(34);
+        let mut ws = SmallSvdWs::new();
+        for &(m, n) in &[(20usize, 5usize), (12, 12), (7, 1)] {
+            let a = randmat(&mut rng, m, n);
+            let full = svd_thin(&a);
+            svd_thin_into(&a, &mut ws);
+            for j in 0..n {
+                assert!((ws.s[j] - full.s[j]).abs() < 1e-10, "({m},{n}) σ_{j}");
+            }
+            // same subspaces: |u_into · u_full| ≈ 1 columnwise (sign-free)
+            for j in 0..n {
+                if full.s[j] > 1e-8 {
+                    let mut d = 0.0;
+                    for i in 0..m {
+                        d += ws.u.at(i, j) * full.u.at(i, j);
+                    }
+                    assert!(d.abs() > 1.0 - 1e-8, "({m},{n}) u_{j} align {d}");
+                }
             }
         }
     }

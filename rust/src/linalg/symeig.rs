@@ -11,14 +11,72 @@ pub struct SymEig {
     pub v: Mat,
 }
 
+/// Reusable buffers for [`sym_eig_into`]: the Jacobi working copy, the
+/// rotation accumulator, and the sorted outputs. After a `reserve` (or a
+/// first call at the largest size), repeated calls are allocation-free —
+/// the Rayleigh–Ritz step inside every Davidson iteration runs on one of
+/// these.
+pub struct SymEigWs {
+    m: Mat,
+    v: Mat,
+    idx: Vec<usize>,
+    /// Eigenvalues, ascending (valid after `sym_eig_into`).
+    pub w: Vec<f64>,
+    /// Eigenvectors, column j ↔ w\[j\] (valid after `sym_eig_into`).
+    pub vecs: Mat,
+}
+
+impl Default for SymEigWs {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SymEigWs {
+    pub fn new() -> SymEigWs {
+        SymEigWs {
+            m: Mat::zeros(0, 0),
+            v: Mat::zeros(0, 0),
+            idx: Vec::new(),
+            w: Vec::new(),
+            vecs: Mat::zeros(0, 0),
+        }
+    }
+
+    /// Pre-provision for problems up to n×n.
+    pub fn reserve(&mut self, n: usize) {
+        self.m.reserve_for(n, n);
+        self.v.reserve_for(n, n);
+        self.vecs.reserve_for(n, n);
+        self.idx.reserve(n.saturating_sub(self.idx.len()));
+        self.w.reserve(n.saturating_sub(self.w.len()));
+    }
+}
+
 /// Cyclic Jacobi with threshold sweeps. `a` must be symmetric.
+/// Allocating wrapper over [`sym_eig_into`].
 pub fn sym_eig(a: &Mat) -> SymEig {
+    let mut ws = SymEigWs::new();
+    sym_eig_into(a, &mut ws);
+    SymEig {
+        w: std::mem::take(&mut ws.w),
+        v: std::mem::replace(&mut ws.vecs, Mat::zeros(0, 0)),
+    }
+}
+
+/// Cyclic Jacobi into reusable workspace buffers: results land in `ws.w`
+/// (ascending) and `ws.vecs`. Allocation-free once `ws` has seen the size.
+pub fn sym_eig_into(a: &Mat, ws: &mut SymEigWs) {
     let n = a.rows;
     assert_eq!(a.rows, a.cols, "sym_eig expects square matrix");
     if n == 0 {
-        return SymEig { w: vec![], v: Mat::zeros(0, 0) };
+        ws.w.clear();
+        ws.vecs.reset(0, 0);
+        return;
     }
-    let mut m = a.clone();
+    let m = &mut ws.m;
+    m.reset(n, n);
+    m.data.copy_from_slice(&a.data);
     // symmetry check (debug builds only)
     debug_assert!({
         let mut ok = true;
@@ -30,7 +88,11 @@ pub fn sym_eig(a: &Mat) -> SymEig {
         }
         ok
     });
-    let mut v = Mat::eye(n);
+    let v = &mut ws.v;
+    v.reset(n, n);
+    for i in 0..n {
+        v.set(i, i, 1.0);
+    }
     let max_sweeps = 64;
     for _sweep in 0..max_sweeps {
         // off-diagonal Frobenius norm
@@ -83,16 +145,25 @@ pub fn sym_eig(a: &Mat) -> SymEig {
             }
         }
     }
-    // extract, sort ascending
-    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m.at(i, i), i)).collect();
-    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-    let w: Vec<f64> = pairs.iter().map(|p| p.0).collect();
-    let mut vs = Mat::zeros(n, n);
-    for (newj, (_, oldj)) in pairs.iter().enumerate() {
-        let cj = v.col(*oldj);
-        vs.set_col(newj, &cj);
+    // extract, sort ascending — via the reusable index permutation, so no
+    // per-call pair vector and no column clones
+    ws.idx.clear();
+    ws.idx.extend(0..n);
+    {
+        let diag: &Mat = &*m; // shared reborrow; `m` stays usable below
+        ws.idx
+            .sort_unstable_by(|&x, &y| diag.at(x, x).partial_cmp(&diag.at(y, y)).unwrap());
     }
-    SymEig { w, v: vs }
+    ws.w.clear();
+    for &src in &ws.idx {
+        ws.w.push(m.at(src, src));
+    }
+    ws.vecs.reset(n, n);
+    for (newj, &src) in ws.idx.iter().enumerate() {
+        for i in 0..n {
+            ws.vecs.set(i, newj, v.at(i, src));
+        }
+    }
 }
 
 #[cfg(test)]

@@ -11,6 +11,9 @@
 //! --scale DIV (dataset size divisor; --full = paper sizes) --verbose
 //! --data path.libsvm (real data instead of the synthetic stand-in)
 
+// Same clippy posture as the library crate root (CI: -D warnings).
+#![allow(clippy::needless_range_loop, clippy::field_reassign_with_default)]
+
 use scrb::cli::Args;
 use scrb::cluster::MethodKind;
 use scrb::config::PipelineConfig;

@@ -140,12 +140,18 @@ pub fn rb_features(x: &Mat, r: usize, sigma: f64, seed: u64) -> RbFeatures {
     let val = 1.0 / (r as f64).sqrt();
     let mut indices: Vec<u32> = vec![0; n * r];
     parallel_chunks_mut(&mut indices, crate::util::threads::num_threads(), |start, chunk| {
-        // chunk covers flat positions [start, start+len); position p = i*r + j
-        for (k, slot) in chunk.iter_mut().enumerate() {
-            let p = start + k;
-            let i = p / r;
-            let j = p % r;
+        // chunk covers flat positions [start, start+len); position p = i*r + j.
+        // One div/mod per chunk to seed the (i, j) cursors, then row-major
+        // running offsets — the inner loop is div-free.
+        let mut i = start / r;
+        let mut j = start % r;
+        for slot in chunk.iter_mut() {
             *slot = (offsets[j] + per_grid[j].local[i] as usize) as u32;
+            j += 1;
+            if j == r {
+                j = 0;
+                i += 1;
+            }
         }
     });
     let z = EllRb::new(n, d_total, r, indices, vec![val; n]);

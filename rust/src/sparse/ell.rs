@@ -31,11 +31,152 @@
 use super::csr::Csr;
 use crate::linalg::Mat;
 use crate::util::threads::{num_threads, parallel_row_ranges_mut, parallel_rows_mut};
+use std::sync::Barrier;
 
 /// Column-block width for the k-wide inner loops: keeps the output block in
 /// registers/L1 while streaming rows of B, without hurting the small-k case
 /// (k ≤ 64 is a single block).
 const K_BLOCK: usize = 64;
+
+/// Per-thread tile budget for the fused gram kernel, in f64 elements
+/// (256 KB — L2-resident on every target we care about). A strip's scratch
+/// tile is `strip_cols × k ≤ TILE_F64_BUDGET` elements, so the fused
+/// product's peak per-thread scratch is `strip_len × k × 8` bytes — the
+/// D×k intermediate of the two-pass path never exists.
+const TILE_F64_BUDGET: usize = 32_768;
+
+/// Reusable scratch for [`EllRb::gram_matmat_into`]: the column-strip
+/// schedule plus one cache-resident tile per worker. Create once (e.g. via
+/// `GramScratch::new()` inside a solver workspace) and pass to every call;
+/// `prepare` rebuilds lazily only when the operator shape, the thread
+/// count, or the block width outgrows what was provisioned, so steady-state
+/// calls perform **zero** heap allocations.
+pub struct GramScratch {
+    /// Strip boundaries over columns, ascending, spanning `[0, cols]`.
+    strips: Vec<usize>,
+    /// Per-worker tiles, `nt × (max_strip_cols × k_cap)` f64, flat.
+    tiles: Vec<f64>,
+    /// Widest strip in columns (tile row count).
+    max_strip_cols: usize,
+    /// Block width the tiles were provisioned for (k ≤ k_cap reuses them).
+    k_cap: usize,
+    /// Worker count the schedule was built for.
+    nt: usize,
+    /// Operator identity the schedule was built for: (rows, cols, nnz)
+    /// plus a sampled fingerprint of `col_ptr`, so two operators with the
+    /// same shape but different column occupancy don't silently reuse a
+    /// schedule nnz-balanced for the other one.
+    sig: (usize, usize, usize, u64),
+}
+
+impl Default for GramScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl GramScratch {
+    pub fn new() -> GramScratch {
+        GramScratch {
+            strips: Vec::new(),
+            tiles: Vec::new(),
+            max_strip_cols: 0,
+            k_cap: 0,
+            nt: 0,
+            sig: (0, 0, 0, 0),
+        }
+    }
+
+    /// (Re)build the strip schedule and tiles for `a` and block width `k`.
+    /// No-op (and allocation-free) when the existing provisioning covers it.
+    pub fn prepare(&mut self, a: &EllRb, k: usize) {
+        let sig = (a.rows, a.cols, a.nnz(), col_ptr_fingerprint(&a.col_ptr));
+        let nt = num_threads();
+        if sig == self.sig && nt == self.nt && k <= self.k_cap {
+            return;
+        }
+        let k_cap = k.max(self.k_cap).max(1);
+        let (strips, widest) = build_gram_strips(&a.col_ptr, k_cap, nt);
+        self.strips = strips;
+        self.max_strip_cols = widest;
+        self.k_cap = k_cap;
+        self.nt = nt;
+        self.sig = sig;
+        let stride = self.max_strip_cols * k_cap;
+        self.tiles.clear();
+        self.tiles.resize(nt * stride, 0.0);
+    }
+
+    /// Total scratch footprint in bytes (all workers' tiles + the schedule)
+    /// — the fused kernel's replacement for the two-pass D×k intermediate.
+    pub fn scratch_bytes(&self) -> usize {
+        self.tiles.len() * 8 + self.strips.len() * 8
+    }
+
+    /// Per-thread peak scratch in bytes: one strip tile.
+    pub fn tile_bytes(&self) -> usize {
+        self.max_strip_cols * self.k_cap * 8
+    }
+}
+
+/// FNV-1a over 16 evenly-spaced `col_ptr` samples — a cheap distribution
+/// fingerprint for [`GramScratch`] staleness detection (O(1), not O(D)).
+fn col_ptr_fingerprint(col_ptr: &[usize]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let n = col_ptr.len(); // always >= 1
+    let samples = 16usize.min(n);
+    let denom = (samples - 1).max(1);
+    for s in 0..samples {
+        let v = col_ptr[s * (n - 1) / denom];
+        h = (h ^ v as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Partition `[0, cols)` into contiguous strips that are (a) narrow enough
+/// that a `strip_cols × k` tile fits the per-thread budget and (b) roughly
+/// nnz-balanced so the workers of one round finish together. Returns the
+/// boundaries (ascending, spanning `[0, cols]`) and the widest strip.
+fn build_gram_strips(col_ptr: &[usize], k: usize, nt: usize) -> (Vec<usize>, usize) {
+    let cols = col_ptr.len() - 1;
+    if cols == 0 {
+        return (vec![0], 0);
+    }
+    let nnz = *col_ptr.last().unwrap();
+    let col_cap = (TILE_F64_BUDGET / k.max(1)).max(1);
+    let min_strips = nt.max(cols.div_ceil(col_cap)).max(1);
+    let nnz_target = nnz.div_ceil(min_strips).max(1);
+    let mut strips = Vec::with_capacity(min_strips + 2);
+    strips.push(0usize);
+    let mut widest = 0usize;
+    let mut c = 0usize;
+    while c < cols {
+        let start = c;
+        let start_nnz = col_ptr[c];
+        while c < cols && c - start < col_cap && col_ptr[c + 1] - start_nnz < nnz_target {
+            c += 1;
+        }
+        if c == start {
+            // single column heavier than the nnz target still advances
+            c += 1;
+        }
+        strips.push(c);
+        widest = widest.max(c - start);
+    }
+    (strips, widest)
+}
+
+/// Raw base pointer to the shared tile arena, passed to every worker.
+///
+/// Safety protocol (upheld by `gram_matmat_into`): in phase A of a round,
+/// worker t writes only its own `[t·stride, (t+1)·stride)` region; in
+/// phase B all workers only *read* tiles; the two phases are separated by
+/// barriers, and the next round's phase A (which overwrites tiles) is again
+/// barrier-separated from the previous phase B.
+#[derive(Clone, Copy)]
+struct TileArena(*mut f64);
+unsafe impl Send for TileArena {}
+unsafe impl Sync for TileArena {}
 
 /// Fixed-stride sparse RB matrix: exactly `r` non-zeros per row, all equal
 /// to `scale[row]`.
@@ -57,6 +198,12 @@ pub struct EllRb {
     /// scaling never invalidates this layout.
     pub col_ptr: Vec<usize>,
     pub row_idx: Vec<u32>,
+    /// nnz-balanced column-strip boundaries for the transpose kernels
+    /// (`t_matvec_into` / `t_matmat` / `col_sums`), precomputed once at
+    /// construction so per-call paths stay allocation-free. Thread count is
+    /// process-stable (see `util::threads::num_threads`), so these never go
+    /// stale.
+    pub t_bounds: Vec<usize>,
 }
 
 /// nnz-balanced column-strip boundaries for `nt` workers: `bounds[t]` is the
@@ -144,8 +291,17 @@ impl EllRb {
         assert_eq!(scale.len(), rows, "one scale per row");
         assert!(rows <= u32::MAX as usize, "row count overflows u32");
         debug_assert!(indices.iter().all(|&c| (c as usize) < cols), "column out of bounds");
+        // The fused gram kernel binary-searches each row's indices and
+        // advances its strip cursor monotonically — both rely on the
+        // documented strictly-increasing-within-row invariant, so catch any
+        // producer that violates it at construction.
+        debug_assert!(
+            (0..rows).all(|i| indices[i * r..(i + 1) * r].windows(2).all(|w| w[0] < w[1])),
+            "row indices must be strictly increasing"
+        );
         let (col_ptr, row_idx) = build_transpose(rows, cols, r, &indices);
-        EllRb { rows, cols, r, indices, scale, col_ptr, row_idx }
+        let t_bounds = balanced_strips(&col_ptr, num_threads());
+        EllRb { rows, cols, r, indices, scale, col_ptr, row_idx, t_bounds }
     }
 
     pub fn nnz(&self) -> usize {
@@ -160,10 +316,18 @@ impl EllRb {
 
     /// y = Z·x (parallel over row panels; one multiply per row).
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.cols);
         let mut y = vec![0.0; self.rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// y = Z·x written into a caller-provided buffer (no allocation — the
+    /// solver inner loops reuse one buffer across iterations).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
         let (indices, scale, r) = (&self.indices, &self.scale, self.r);
-        parallel_rows_mut(&mut y, 1, |row0, chunk| {
+        parallel_rows_mut(y, 1, |row0, chunk| {
             for (k, yi) in chunk.iter_mut().enumerate() {
                 let i = row0 + k;
                 let mut s = 0.0;
@@ -173,20 +337,26 @@ impl EllRb {
                 *yi = s * scale[i];
             }
         });
-        y
     }
 
     /// y = Zᵀ·x via the transpose layout (parallel over column strips; no
     /// per-thread D-length accumulators, no reduction).
     pub fn t_matvec(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.rows);
         let mut y = vec![0.0; self.cols];
+        self.t_matvec_into(x, &mut y);
+        y
+    }
+
+    /// y = Zᵀ·x written into a caller-provided buffer (no allocation —
+    /// the strip schedule is precomputed at construction).
+    pub fn t_matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
         if self.cols == 0 {
-            return y;
+            return;
         }
-        let bounds = balanced_strips(&self.col_ptr, num_threads());
         let (col_ptr, row_idx, scale) = (&self.col_ptr, &self.row_idx, &self.scale);
-        parallel_row_ranges_mut(&mut y, 1, &bounds, |_si, c0, chunk| {
+        parallel_row_ranges_mut(y, 1, &self.t_bounds, |_si, c0, chunk| {
             for (dc, yc) in chunk.iter_mut().enumerate() {
                 let col = c0 + dc;
                 let mut s = 0.0;
@@ -197,7 +367,6 @@ impl EllRb {
                 *yc = s;
             }
         });
-        y
     }
 
     /// C = Z · B, B dense cols×k → rows×k (the solver's forward block
@@ -244,9 +413,8 @@ impl EllRb {
         if self.cols == 0 {
             return c;
         }
-        let bounds = balanced_strips(&self.col_ptr, num_threads());
         let (col_ptr, row_idx, scale) = (&self.col_ptr, &self.row_idx, &self.scale);
-        parallel_row_ranges_mut(&mut c.data, k, &bounds, |_si, c0, chunk| {
+        parallel_row_ranges_mut(&mut c.data, k, &self.t_bounds, |_si, c0, chunk| {
             for (dc, crow) in chunk.chunks_mut(k).enumerate() {
                 let col = c0 + dc;
                 let (lo, hi) = (col_ptr[col], col_ptr[col + 1]);
@@ -269,6 +437,205 @@ impl EllRb {
         c
     }
 
+    /// Fused gram product C = Ẑ·(Ẑᵀ·B) (allocating convenience wrapper;
+    /// the solver hot path uses [`EllRb::gram_matmat_into`] with a reused
+    /// [`GramScratch`]).
+    pub fn gram_matmat(&self, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(0, 0);
+        let mut ws = GramScratch::new();
+        self.gram_matmat_into(b, &mut out, &mut ws);
+        out
+    }
+
+    /// Fused strip-tiled gram product C = Ẑ·(Ẑᵀ·B), B and C both n×k —
+    /// the eigensolver's S·B without the D×k intermediate of the two-pass
+    /// `matmat(t_matmat(b))` path.
+    ///
+    /// Columns are partitioned into cache-sized strips (see
+    /// [`GramScratch`]). Workers proceed in barrier-synchronized rounds of
+    /// `nt` strips:
+    /// - **phase A** — worker t computes its strip's slice of ẐᵀB into its
+    ///   own tile (`strip_cols × k`, L2-resident), walking the precomputed
+    ///   CSC layout;
+    /// - **phase B** — worker t owns a fixed partition of *output rows* and
+    ///   scatters `Ẑ·tile` contributions from all of the round's tiles into
+    ///   them, locating each row's columns in the round with one binary
+    ///   search into its sorted index row.
+    ///
+    /// Substrate bytes stream once per phase (CSC row ids in A, ELL column
+    /// ids in B); the D×k product of the two-pass path is replaced by
+    /// `nt` tiles of ≤ `strip_len × k × 8` bytes each, and output writes
+    /// are disjoint per worker — no reduction, deterministic result.
+    /// The per-row scale (shared by all R entries of a row) is applied
+    /// once on read (phase A) and once in a final O(N·k) pass (phase B
+    /// output), exactly mirroring `t_matmat` then `matmat`.
+    pub fn gram_matmat_into(&self, b: &Mat, out: &mut Mat, ws: &mut GramScratch) {
+        assert_eq!(b.rows, self.rows, "gram_matmat shape mismatch");
+        let k = b.cols;
+        let n = self.rows;
+        // Reshape without a serial zero-fill when the shape is unchanged
+        // (the steady-state case): every element of `out` is written below
+        // — zeroed per-worker in the parallel path, explicitly in the
+        // sequential path — so pre-zeroing the whole N×k buffer here would
+        // just add a redundant serial memset to the hot path.
+        if out.rows != n || out.cols != k {
+            out.reset(n, k);
+        }
+        if n == 0 || k == 0 {
+            return;
+        }
+        if self.cols == 0 {
+            out.data.fill(0.0); // Zᵀ·B is empty ⇒ C = 0
+            return;
+        }
+        ws.prepare(self, k);
+        let strips: &[usize] = &ws.strips;
+        let n_strips = strips.len() - 1;
+        let tile_stride = ws.max_strip_cols * ws.k_cap;
+        let nt = ws.nt.min(n_strips.max(1)).max(1);
+        let (indices, col_ptr, row_idx, scale, r) =
+            (&self.indices, &self.col_ptr, &self.row_idx, &self.scale, self.r);
+
+        if nt == 1 {
+            // Sequential path: one tile, one strip at a time, no barriers.
+            out.data.fill(0.0);
+            let tiles = &mut ws.tiles;
+            for s in 0..n_strips {
+                let (clo, chi) = (strips[s], strips[s + 1]);
+                let tile = &mut tiles[..(chi - clo) * k];
+                tile.fill(0.0);
+                for c in clo..chi {
+                    let trow = &mut tile[(c - clo) * k..(c - clo + 1) * k];
+                    for p in col_ptr[c]..col_ptr[c + 1] {
+                        let i = row_idx[p] as usize;
+                        let si = scale[i];
+                        for (tj, bj) in trow.iter_mut().zip(b.row(i).iter()) {
+                            *tj += si * *bj;
+                        }
+                    }
+                }
+                for i in 0..n {
+                    let rowidx = &indices[i * r..(i + 1) * r];
+                    let start = rowidx.partition_point(|&c| (c as usize) < clo);
+                    let orow = out.row_mut(i);
+                    for &c in &rowidx[start..] {
+                        let c = c as usize;
+                        if c >= chi {
+                            break;
+                        }
+                        let trow = &tile[(c - clo) * k..(c - clo + 1) * k];
+                        for (oj, tj) in orow.iter_mut().zip(trow.iter()) {
+                            *oj += *tj;
+                        }
+                    }
+                }
+            }
+            for i in 0..n {
+                let si = scale[i];
+                for v in out.row_mut(i).iter_mut() {
+                    *v *= si;
+                }
+            }
+            return;
+        }
+
+        let n_rounds = n_strips.div_ceil(nt);
+        let barrier = Barrier::new(nt);
+        let arena = TileArena(ws.tiles.as_mut_ptr());
+        std::thread::scope(|sc| {
+            let mut rest: &mut [f64] = &mut out.data;
+            let mut row_lo = 0usize;
+            for t in 0..nt {
+                // even row partition: worker t owns rows [row_lo, row_hi)
+                let row_hi = (t + 1) * n / nt;
+                let take = (row_hi - row_lo) * k;
+                let (my_out, tail) = rest.split_at_mut(take);
+                rest = tail;
+                let barrier = &barrier;
+                let my_row_lo = row_lo;
+                row_lo = row_hi;
+                sc.spawn(move || {
+                    my_out.fill(0.0);
+                    for round in 0..n_rounds {
+                        let s0 = round * nt;
+                        // phase A: fill my tile for strip s0 + t (if any)
+                        let my_strip = s0 + t;
+                        if my_strip < n_strips {
+                            let (clo, chi) = (strips[my_strip], strips[my_strip + 1]);
+                            // SAFETY: worker t is the only writer of its
+                            // region of the arena during phase A; phase B
+                            // readers are barrier-separated below.
+                            let tile = unsafe {
+                                std::slice::from_raw_parts_mut(
+                                    arena.0.add(t * tile_stride),
+                                    (chi - clo) * k,
+                                )
+                            };
+                            tile.fill(0.0);
+                            for c in clo..chi {
+                                let trow = &mut tile[(c - clo) * k..(c - clo + 1) * k];
+                                for p in col_ptr[c]..col_ptr[c + 1] {
+                                    let i = row_idx[p] as usize;
+                                    let si = scale[i];
+                                    for (tj, bj) in trow.iter_mut().zip(b.row(i).iter()) {
+                                        *tj += si * *bj;
+                                    }
+                                }
+                            }
+                        }
+                        barrier.wait();
+                        // phase B: scatter this round's tiles into my rows
+                        let s_end = (s0 + nt).min(n_strips);
+                        let round_lo = strips[s0];
+                        let round_hi = strips[s_end];
+                        if round_hi > round_lo {
+                            for (di, orow) in my_out.chunks_mut(k).enumerate() {
+                                let i = my_row_lo + di;
+                                let rowidx = &indices[i * r..(i + 1) * r];
+                                let start =
+                                    rowidx.partition_point(|&c| (c as usize) < round_lo);
+                                let mut sidx = s0;
+                                for &c in &rowidx[start..] {
+                                    let c = c as usize;
+                                    if c >= round_hi {
+                                        break;
+                                    }
+                                    while strips[sidx + 1] <= c {
+                                        sidx += 1;
+                                    }
+                                    // SAFETY: tiles are read-only in phase B
+                                    // (barrier above orders them after the
+                                    // writes; barrier below orders them
+                                    // before the next round's writes).
+                                    let trow = unsafe {
+                                        std::slice::from_raw_parts(
+                                            arena
+                                                .0
+                                                .add((sidx - s0) * tile_stride
+                                                    + (c - strips[sidx]) * k),
+                                            k,
+                                        )
+                                    };
+                                    for (oj, tj) in orow.iter_mut().zip(trow.iter()) {
+                                        *oj += *tj;
+                                    }
+                                }
+                            }
+                        }
+                        barrier.wait();
+                    }
+                    // deferred per-row scale on my (exclusively owned) rows
+                    for (di, orow) in my_out.chunks_mut(k).enumerate() {
+                        let si = scale[my_row_lo + di];
+                        for v in orow.iter_mut() {
+                            *v *= si;
+                        }
+                    }
+                });
+            }
+        });
+    }
+
     /// Row sums Z·1 = R·scale[i] — closed form, no memory traffic.
     pub fn row_sums(&self) -> Vec<f64> {
         let r = self.r as f64;
@@ -281,9 +648,8 @@ impl EllRb {
         if self.cols == 0 {
             return y;
         }
-        let bounds = balanced_strips(&self.col_ptr, num_threads());
         let (col_ptr, row_idx, scale) = (&self.col_ptr, &self.row_idx, &self.scale);
-        parallel_row_ranges_mut(&mut y, 1, &bounds, |_si, c0, chunk| {
+        parallel_row_ranges_mut(&mut y, 1, &self.t_bounds, |_si, c0, chunk| {
             for (dc, yc) in chunk.iter_mut().enumerate() {
                 let col = c0 + dc;
                 let mut s = 0.0;
@@ -373,6 +739,7 @@ impl EllRb {
             + self.row_idx.len() * 4
             + self.col_ptr.len() * 8
             + self.scale.len() * 8
+            + self.t_bounds.len() * 8
     }
 }
 
@@ -521,6 +888,73 @@ mod tests {
         let c = a.to_csr();
         assert_eq!(c.indptr, vec![0, 1]);
         assert_eq!(c.data, vec![0.5]);
+    }
+
+    #[test]
+    fn fused_gram_matches_two_pass() {
+        let mut rng = Pcg::seed(78);
+        for &(rows, r, bpg) in &[(40usize, 6usize, 4usize), (1, 3, 5), (13, 1, 7), (64, 8, 2)] {
+            let a = random_ell(&mut rng, rows, r, bpg);
+            for &k in &[1usize, 3, 8] {
+                let b = Mat::from_vec(
+                    a.rows,
+                    k,
+                    (0..a.rows * k).map(|_| rng.range_f64(-1.0, 1.0)).collect(),
+                );
+                let two_pass = a.matmat(&a.t_matmat(&b));
+                let fused = a.gram_matmat(&b);
+                assert_eq!((fused.rows, fused.cols), (a.rows, k));
+                let err = fused.sub(&two_pass).frob_norm();
+                assert!(
+                    err < 1e-12 * (1.0 + two_pass.frob_norm()),
+                    "fused vs two-pass ({rows},{r},{bpg}) k={k}: {err}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_gram_scratch_reuse_across_shapes() {
+        // one GramScratch re-provisioned across operators and block widths
+        let mut rng = Pcg::seed(79);
+        let mut ws = GramScratch::new();
+        let mut out = Mat::zeros(0, 0);
+        for &(rows, r, bpg, k) in
+            &[(30usize, 4usize, 3usize, 5usize), (50, 7, 6, 2), (30, 4, 3, 9), (8, 2, 2, 1)]
+        {
+            let a = random_ell(&mut rng, rows, r, bpg);
+            let b = Mat::from_vec(
+                a.rows,
+                k,
+                (0..a.rows * k).map(|_| rng.range_f64(-1.0, 1.0)).collect(),
+            );
+            a.gram_matmat_into(&b, &mut out, &mut ws);
+            let reference = a.matmat(&a.t_matmat(&b));
+            let err = out.sub(&reference).frob_norm();
+            assert!(err < 1e-12 * (1.0 + reference.frob_norm()), "reuse err {err}");
+            // steady state: same shape, dirty out — must fully overwrite,
+            // not accumulate (the reshape skips the serial pre-zero)
+            a.gram_matmat_into(&b, &mut out, &mut ws);
+            let err2 = out.sub(&reference).frob_norm();
+            assert!(err2 < 1e-12 * (1.0 + reference.frob_norm()), "dirty-out err {err2}");
+        }
+    }
+
+    #[test]
+    fn fused_gram_degenerate_shapes() {
+        // empty-column-heavy operator: most columns never referenced
+        let a = EllRb::new(3, 50, 2, vec![0, 40, 5, 49, 0, 40], vec![0.7, 1.3, 0.2]);
+        let b = Mat::from_vec(3, 4, (0..12).map(|i| i as f64 - 5.0).collect());
+        let reference = a.matmat(&a.t_matmat(&b));
+        let fused = a.gram_matmat(&b);
+        assert!(fused.sub(&reference).frob_norm() < 1e-12 * (1.0 + reference.frob_norm()));
+        // single row, single entry
+        let s = EllRb::new(1, 1, 1, vec![0], vec![0.5]);
+        let b1 = Mat::from_vec(1, 2, vec![2.0, -4.0]);
+        let g = s.gram_matmat(&b1);
+        // S = 0.25 ⇒ C = 0.25·B
+        assert!((g.at(0, 0) - 0.5).abs() < 1e-15);
+        assert!((g.at(0, 1) + 1.0).abs() < 1e-15);
     }
 
     #[test]

@@ -8,8 +8,10 @@
 //!   per-row value) to drop the value array and `indptr`, fold the
 //!   `D^{-1/2}` normalization into a per-row scale, and drive transpose
 //!   products through a precomputed column-strip layout with zero
-//!   per-thread allocations. Produced natively by
-//!   [`crate::rb::rb_features`].
+//!   per-thread allocations, and fuses the solver's gram product
+//!   Ẑ·(Ẑᵀ·B) into one strip-tiled pass ([`EllRb::gram_matmat_into`] with
+//!   a reusable [`GramScratch`]) so the D×k intermediate never exists.
+//!   Produced natively by [`crate::rb::rb_features`].
 //! - [`Csr`] — the general compressed-sparse-row substrate, used by
 //!   baselines, irregular matrices (Nyström / LSC anchors), and as the
 //!   reference implementation `EllRb` is property-tested against via
@@ -20,7 +22,7 @@ pub mod ell;
 pub mod ops;
 
 pub use csr::Csr;
-pub use ell::EllRb;
+pub use ell::{EllRb, GramScratch};
 pub use ops::{
     apply_normalized_similarity, implicit_degrees, normalize_by_degree,
     normalized_laplacian_dense,

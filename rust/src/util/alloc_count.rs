@@ -1,0 +1,60 @@
+//! Counting global allocator — the measurement side of the
+//! zero-allocation solver contract.
+//!
+//! The library only defines the allocator type and its counters; binaries
+//! that want the accounting (the allocation test in `tests/alloc.rs`, the
+//! substrate bench) opt in with
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: scrb::util::alloc_count::CountingAlloc =
+//!     scrb::util::alloc_count::CountingAlloc;
+//! ```
+//!
+//! Counters are process-global and include every thread, so measurements
+//! of "allocations per solver iteration" capture worker-side allocations
+//! too. Two relaxed atomic adds per malloc — noise next to the malloc
+//! itself.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+static BYTES: AtomicUsize = AtomicUsize::new(0);
+
+/// Pass-through `System` allocator that counts calls and bytes.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size(), Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size(), Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Total allocation calls (alloc + alloc_zeroed + realloc) so far.
+pub fn allocations() -> usize {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Total bytes requested so far.
+pub fn allocated_bytes() -> usize {
+    BYTES.load(Ordering::Relaxed)
+}

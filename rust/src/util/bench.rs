@@ -51,6 +51,10 @@ pub struct Bencher {
     pub budget: Duration,
     pub max_iters: usize,
     results: Vec<BenchStats>,
+    /// Named scalar side-metrics (bytes of scratch, allocations per call,
+    /// speedup ratios …) emitted alongside the timings in the JSON
+    /// trajectory.
+    metrics: Vec<(String, f64)>,
 }
 
 impl Default for Bencher {
@@ -60,6 +64,7 @@ impl Default for Bencher {
             budget: Duration::from_secs(2),
             max_iters: 1000,
             results: Vec::new(),
+            metrics: Vec::new(),
         }
     }
 }
@@ -156,6 +161,17 @@ impl Bencher {
         &self.results
     }
 
+    /// Record a named scalar side-metric (memory accounting, allocation
+    /// counts, derived ratios). Lands in the JSON `metrics` object.
+    pub fn metric(&mut self, name: &str, value: f64) {
+        self.metrics.push((name.to_string(), value));
+    }
+
+    /// Look up a result by exact case name.
+    pub fn stats(&self, name: &str) -> Option<&BenchStats> {
+        self.results.iter().find(|r| r.name == name)
+    }
+
     /// Machine-readable view of the results (nanosecond durations).
     pub fn to_json(&self) -> Json {
         let cases: Vec<Json> = self
@@ -175,6 +191,13 @@ impl Bencher {
         let mut root = Json::obj();
         root.set("threads", Json::Num(crate::util::threads::num_threads() as f64))
             .set("results", Json::Arr(cases));
+        if !self.metrics.is_empty() {
+            let mut m = Json::obj();
+            for (name, value) in &self.metrics {
+                m.set(name, Json::Num(*value));
+            }
+            root.set("metrics", m);
+        }
         root
     }
 
@@ -194,7 +217,7 @@ mod tests {
             warmup: Duration::from_millis(5),
             budget: Duration::from_millis(20),
             max_iters: 50,
-            results: vec![],
+            ..Bencher::default()
         };
         let stats = b.bench("spin", || {
             let mut x = 0u64;
@@ -214,9 +237,10 @@ mod tests {
             warmup: Duration::from_millis(1),
             budget: Duration::from_millis(5),
             max_iters: 10,
-            results: vec![],
+            ..Bencher::default()
         };
         b.record_once("case_a", Duration::from_micros(123));
+        b.metric("scratch_bytes", 4096.0);
         let j = b.to_json();
         let back = Json::parse(&j.to_string()).unwrap();
         let arr = back.get("results").unwrap().as_arr().unwrap();
@@ -224,6 +248,9 @@ mod tests {
         assert_eq!(arr[0].get("name").unwrap().as_str().unwrap(), "case_a");
         assert_eq!(arr[0].get("median_ns").unwrap().as_f64().unwrap(), 123_000.0);
         assert!(back.get("threads").unwrap().as_f64().unwrap() >= 1.0);
+        let metrics = back.get("metrics").unwrap();
+        assert_eq!(metrics.get("scratch_bytes").unwrap().as_f64().unwrap(), 4096.0);
+        assert_eq!(b.stats("case_a").unwrap().iters, 1);
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Utility substrates built in-tree because the offline vendor set has no
 //! rand / rayon / serde / clap / criterion / proptest.
 
+pub mod alloc_count;
 pub mod bench;
 pub mod json;
 pub mod prop;

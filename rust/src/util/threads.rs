@@ -5,17 +5,27 @@
 //! comes from `SCRB_THREADS` or `std::thread::available_parallelism`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
-/// Number of worker threads to use.
+static NUM_THREADS: OnceLock<usize> = OnceLock::new();
+
+/// Number of worker threads to use. Resolved once per process (first
+/// call wins): `std::env::var` copies the value into a fresh `OsString`
+/// on every read, which would put a heap allocation — and an env-lock
+/// acquisition — inside every parallel section of the solver hot loop,
+/// breaking the zero-allocation steady-state contract. Set `SCRB_THREADS`
+/// before first use.
 pub fn num_threads() -> usize {
-    if let Ok(v) = std::env::var("SCRB_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            if n >= 1 {
-                return n;
+    *NUM_THREADS.get_or_init(|| {
+        if let Ok(v) = std::env::var("SCRB_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                if n >= 1 {
+                    return n;
+                }
             }
         }
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
 }
 
 /// Run `f(chunk_index, start, end)` over `[0, n)` split into contiguous
@@ -102,6 +112,12 @@ where
         return;
     }
     let nt = n_chunks.clamp(1, n);
+    if nt <= 1 {
+        // inline fast path: no scoped-thread fork/join (and no spawn
+        // allocations — the zero-allocation solver contract relies on it)
+        f(0, out);
+        return;
+    }
     let chunk = n.div_ceil(nt);
     std::thread::scope(|s| {
         let mut rest = out;
@@ -132,6 +148,11 @@ where
         return;
     }
     let nt = num_threads().min(n_rows);
+    if nt <= 1 {
+        // inline fast path: no fork/join, no spawn allocations
+        f(0, out);
+        return;
+    }
     let rows_per = n_rows.div_ceil(nt);
     std::thread::scope(|s| {
         let mut rest = out;
@@ -171,6 +192,13 @@ where
             && *boundaries.last().unwrap() == n_rows,
         "boundaries must span [0, n_rows]"
     );
+    if boundaries.len() == 2 {
+        // single strip: run inline, no fork/join, no spawn allocations
+        if !out.is_empty() {
+            f(0, 0, out);
+        }
+        return;
+    }
     std::thread::scope(|s| {
         let mut rest = out;
         let mut prev = 0usize;

@@ -1,0 +1,103 @@
+//! Counting-allocator verification of the zero-allocation solver contract
+//! (ISSUE 2 acceptance): once a `GramScratch` / `SolverWorkspace` is warm,
+//! the fused gram product allocates nothing, and Davidson/Lanczos
+//! steady-state iterations allocate nothing — runs with different matvec
+//! budgets (hence different iteration counts) perform *identical* numbers
+//! of allocations, because only entry provisioning and the returned
+//! triplets ever touch the heap.
+//!
+//! Measured single-threaded (`SCRB_THREADS=1`): with worker threads the
+//! scoped fork/join bookkeeping allocates O(threads) per parallel section —
+//! data-size independent — which is the documented residual. Everything is
+//! in one #[test] because the allocator counters are process-global.
+
+use scrb::eigen::{
+    davidson_svd_ws, lanczos_svd_ws, DavidsonOpts, LanczosOpts, SolverWorkspace,
+};
+use scrb::linalg::Mat;
+use scrb::rb::rb_features;
+use scrb::util::alloc_count::{allocations, CountingAlloc};
+use scrb::util::rng::Pcg;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+#[test]
+fn fused_gram_and_solver_steady_state_are_allocation_free() {
+    // counters are process-global: single-threaded mode for the whole test
+    std::env::set_var("SCRB_THREADS", "1");
+
+    // -- a realistic small Ẑ on the EllRb substrate
+    let mut rng = Pcg::seed(17);
+    let n = 300;
+    let x = Mat::from_vec(n, 3, (0..n * 3).map(|_| rng.f64()).collect());
+    let mut zhat = rb_features(&x, 32, 0.4, 5).z;
+    let deg = zhat.implicit_degrees();
+    zhat.normalize_by_degree(&deg);
+
+    // -- fused gram product: zero allocations once the scratch is warm
+    let k = 6;
+    let b = Mat::from_vec(n, k, (0..n * k).map(|_| rng.range_f64(-1.0, 1.0)).collect());
+    let mut gs = scrb::sparse::GramScratch::new();
+    let mut out = Mat::zeros(0, 0);
+    zhat.gram_matmat_into(&b, &mut out, &mut gs); // warm: provisions scratch + out
+    let before = allocations();
+    for _ in 0..5 {
+        zhat.gram_matmat_into(&b, &mut out, &mut gs);
+    }
+    assert_eq!(
+        allocations() - before,
+        0,
+        "fused gram_matmat_into allocated in steady state"
+    );
+
+    // -- Davidson: allocations must not depend on the iteration count.
+    // tol < 0 can never be met, so both runs exhaust their budgets; the
+    // warm-up run provisions the workspace for this shape.
+    let mut ws = SolverWorkspace::new();
+    let opts = |budget: usize| DavidsonOpts {
+        tol: -1.0,
+        max_matvecs: budget,
+        ..DavidsonOpts::new(4)
+    };
+    let _warm = davidson_svd_ws(&zhat, &opts(60), 9, &mut ws);
+    let a0 = allocations();
+    let short = davidson_svd_ws(&zhat, &opts(60), 9, &mut ws);
+    let short_allocs = allocations() - a0;
+    let a1 = allocations();
+    let long = davidson_svd_ws(&zhat, &opts(600), 9, &mut ws);
+    let long_allocs = allocations() - a1;
+    assert!(
+        long.stats.matvecs > 2 * short.stats.matvecs,
+        "budget did not scale iterations: {:?} vs {:?}",
+        short.stats,
+        long.stats
+    );
+    assert_eq!(
+        short_allocs, long_allocs,
+        "Davidson iterations allocate: {short_allocs} vs {long_allocs} \
+         ({} vs {} matvecs)",
+        short.stats.matvecs, long.stats.matvecs
+    );
+
+    // -- Lanczos: same invariant across budgets.
+    let lopts = |budget: usize| LanczosOpts {
+        tol: -1.0,
+        max_matvecs: budget,
+        ..LanczosOpts::new(3)
+    };
+    let _warm = lanczos_svd_ws(&zhat, &lopts(80), 4, &mut ws);
+    let a2 = allocations();
+    let short = lanczos_svd_ws(&zhat, &lopts(80), 4, &mut ws);
+    let short_allocs = allocations() - a2;
+    let a3 = allocations();
+    let long = lanczos_svd_ws(&zhat, &lopts(800), 4, &mut ws);
+    let long_allocs = allocations() - a3;
+    assert!(long.stats.iterations > short.stats.iterations, "budget did not add cycles");
+    assert_eq!(
+        short_allocs, long_allocs,
+        "Lanczos restart cycles allocate: {short_allocs} vs {long_allocs} \
+         ({} vs {} cycles)",
+        short.stats.iterations, long.stats.iterations
+    );
+}

@@ -6,7 +6,7 @@ use scrb::eigen::SvdOp;
 use scrb::linalg::Mat;
 use scrb::metrics;
 use scrb::rb::rb_features;
-use scrb::sparse::{implicit_degrees, Csr};
+use scrb::sparse::{implicit_degrees, Csr, EllRb, GramScratch};
 use scrb::util::prop::{check, check_named, gen};
 use scrb::util::rng::Pcg;
 
@@ -146,6 +146,76 @@ fn prop_ell_csr_equivalence_degenerate() {
         let x = rand_mat(rng, n, d, 0.0, 1.0);
         let rb = rb_features(&x, r, 0.5, rng.next_u64());
         check_substrate_equivalence(rng, rb.z, case >= 4);
+    });
+}
+
+#[test]
+fn prop_fused_gram_equals_two_pass() {
+    // ∀ RB-structured Z, R ∈ {1, 16, 256}, k ∈ {1, 8, 33}: the fused
+    // strip-tiled gram product Ẑ·(ẐᵀB) equals the two-pass
+    // apply(apply_t(b)) reference to the 1e-12 bar, raw and normalized.
+    check_named("fused-gram-vs-two-pass", 18, |rng, case| {
+        let r = [1usize, 16, 256][case % 3];
+        let k = [1usize, 8, 33][(case / 3) % 3];
+        let n = gen::len(rng, 2, 40);
+        let d = gen::len(rng, 1, 4);
+        let x = rand_mat(rng, n, d, 0.0, 1.0);
+        let mut z = rb_features(&x, r, rng.range_f64(0.15, 1.5), rng.next_u64()).z;
+        if case % 2 == 1 {
+            let deg = z.implicit_degrees();
+            z.normalize_by_degree(&deg);
+        }
+        let b = rand_mat(rng, n, k, -1.0, 1.0);
+        let reference = z.matmat(&z.t_matmat(&b));
+        // inherent fused kernel and the SvdOp fast path must both agree
+        assert_mat_close(&z.gram_matmat(&b), &reference, "gram_matmat");
+        assert_mat_close(&SvdOp::gram_matmat(&z, &b), &reference, "SvdOp::gram_matmat");
+    });
+}
+
+#[test]
+fn prop_fused_gram_degenerate_and_scratch_reuse() {
+    // Degenerate shapes — single row, empty-column-heavy operators — and a
+    // single GramScratch reused across differently-shaped operators and
+    // block widths (the solver workspace pattern).
+    check_named("fused-gram-degenerate", 18, |rng, case| {
+        let mut ws = GramScratch::new();
+        let mut out = Mat::zeros(0, 0);
+        // full (R, k) grid: indices decoupled so off-diagonal pairs
+        // (e.g. R=256 with k=1, R=1 with k=33) are all exercised
+        let r = [1usize, 16, 256][case % 3];
+        let k = [1usize, 8, 33][(case / 3) % 3];
+        // single row
+        let bpg = gen::len(rng, 1, 5);
+        let cols = r * bpg;
+        let idx: Vec<u32> =
+            (0..r).map(|j| (j * bpg + rng.below(bpg)) as u32).collect();
+        let single = EllRb::new(1, cols, r, idx, vec![rng.range_f64(0.1, 2.0)]);
+        let b1 = rand_mat(rng, 1, k, -1.0, 1.0);
+        single.gram_matmat_into(&b1, &mut out, &mut ws);
+        assert_mat_close(&out, &single.matmat(&single.t_matmat(&b1)), "single-row gram");
+
+        // empty-column-heavy: most of the column space never referenced
+        // (every row hits bin 0 of its grid, bins_per_grid = 7)
+        let n = gen::len(rng, 2, 25);
+        let r2 = gen::len(rng, 1, 9);
+        let cols2 = r2 * 7;
+        let mut idx2 = Vec::with_capacity(n * r2);
+        for _ in 0..n {
+            for j in 0..r2 {
+                idx2.push((j * 7) as u32);
+            }
+        }
+        let scale2: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 2.0)).collect();
+        let sparse_cols = EllRb::new(n, cols2, r2, idx2, scale2);
+        let b2 = rand_mat(rng, n, k, -1.0, 1.0);
+        // same scratch, different operator shape: must re-provision itself
+        sparse_cols.gram_matmat_into(&b2, &mut out, &mut ws);
+        assert_mat_close(
+            &out,
+            &sparse_cols.matmat(&sparse_cols.t_matmat(&b2)),
+            "empty-column gram",
+        );
     });
 }
 
