@@ -13,10 +13,9 @@ fn main() {
     let n = args.get_usize("n", 300).unwrap();
     let rs = args.get_usize_list("rs", &[4, 8, 16, 32, 64, 128, 256]).unwrap();
 
-    let mut cfg = PipelineConfig::default();
-    cfg.engine = Engine::Native;
+    let cfg = PipelineConfig::builder().engine(Engine::Native).build();
     let coord = Coordinator::new(cfg, 1);
-    let points = experiment::theory_convergence(&coord, n, &rs);
+    let points = experiment::theory_convergence(&coord, n, &rs).expect("theory driver failed");
     println!("{}", report::render_theory(&points));
 
     // quantify the fit: gap·κ·R should stay bounded while R spans ~2 decades

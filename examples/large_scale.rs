@@ -22,18 +22,19 @@ fn main() {
     ds.truncate(n);
     println!("dataset: poker-like n={} d={} k={}", ds.n(), ds.d(), ds.k);
 
-    let mut cfg = PipelineConfig::default();
-    cfg.k = ds.k;
-    cfg.r = r;
-    cfg.engine = Engine::Auto;
     let sigma = median_heuristic_sigma("laplacian", &ds.x, 1);
-    cfg.kernel = cfg.kernel.with_sigma(sigma);
+    let cfg = PipelineConfig::builder()
+        .k(ds.k)
+        .r(r)
+        .engine(Engine::Auto)
+        .sigma(sigma)
+        .build();
     println!("config: {cfg}");
 
     let xla = scrb::runtime::XlaRuntime::load(&cfg.artifacts_dir).ok();
     let env = Env::with_xla(cfg, xla.as_ref());
     let t0 = std::time::Instant::now();
-    let out = MethodKind::ScRb.run(&env, &ds.x);
+    let out = MethodKind::ScRb.run(&env, &ds.x).expect("SC_RB failed");
     let total = t0.elapsed().as_secs_f64();
     let m = all_metrics(&out.labels, &ds.y);
     println!("SC_RB: acc={:.3} nmi={:.3}", m.accuracy, m.nmi);

@@ -5,12 +5,14 @@
 //!
 //! This is the E2E driver required by the repro spec: it exercises all
 //! three layers (Rust coordinator → AOT XLA artifacts → Pallas-lowered
-//! HLO) on a real small workload and prints the paper's metrics.
+//! HLO) on a real small workload and prints the paper's metrics. See
+//! `examples/serve.rs` for the fit-once/predict-many serving shape.
 
 use scrb::cluster::{Env, MethodKind};
 use scrb::config::{Engine, Kernel, PipelineConfig};
 use scrb::data::synth;
 use scrb::metrics::all_metrics;
+use scrb::model::FittedModel;
 use scrb::runtime::XlaRuntime;
 
 fn main() {
@@ -19,11 +21,12 @@ fn main() {
     println!("dataset: two moons, n={} d={} k={}", ds.n(), ds.d(), ds.k);
 
     // 2. configuration (Algorithm 2 inputs: K, R, kernel σ)
-    let mut cfg = PipelineConfig::default();
-    cfg.k = 2;
-    cfg.r = 256;
-    cfg.kernel = Kernel::Laplacian { sigma: 0.15 };
-    cfg.engine = Engine::Auto;
+    let cfg = PipelineConfig::builder()
+        .k(2)
+        .r(256)
+        .kernel(Kernel::Laplacian { sigma: 0.15 })
+        .engine(Engine::Auto)
+        .build();
 
     // 3. optional XLA runtime (AOT Pallas kernels; falls back to native)
     let xla = XlaRuntime::load(&cfg.artifacts_dir).ok();
@@ -33,9 +36,10 @@ fn main() {
     );
     let env = Env::with_xla(cfg, xla.as_ref());
 
-    // 4. run SC_RB and the K-means baseline
+    // 4. fit SC_RB and the K-means baseline through the model API
     for kind in [MethodKind::ScRb, MethodKind::KMeans] {
-        let out = kind.run(&env, &ds.x);
+        let fitted = kind.fit(&env, &ds.x).expect("fit failed");
+        let out = &fitted.output;
         let m = all_metrics(&out.labels, &ds.y);
         println!(
             "{:<8} acc={:.3} nmi={:.3} ri={:.3} fm={:.3}   [{}]",
@@ -49,6 +53,12 @@ fn main() {
         if let Some(kappa) = out.info.kappa {
             println!("         κ = {kappa:.1} non-empty bins/grid (Definition 1)");
         }
+        // the fit also yields a serving model: out-of-sample points
+        // reuse the learned embedding without re-running the solver
+        let fresh = synth::two_moons(200, 0.06, 99);
+        let labels = fitted.model.predict(&fresh.x).expect("predict failed");
+        let acc = scrb::metrics::accuracy(&labels, &fresh.y);
+        println!("         out-of-sample predict on 200 fresh points: acc={acc:.3}");
     }
     println!("\nSC_RB separates the moons; K-means cannot — the paper's motivating contrast.");
 }

@@ -21,7 +21,7 @@ fn main() {
 
     let rs = args.get_usize_list("rs", &[16, 64, 256, 1024, 4096]).unwrap();
     let rb_max = args.get_usize("rb-max-r", 1024).unwrap();
-    let fig = experiment::fig2(&coord, &rs, rb_max);
+    let fig = experiment::fig2(&coord, &rs, rb_max).expect("fig2 driver failed");
     println!("{}", report::render_fig2(&fig));
 
     // CSV for plotting

@@ -21,7 +21,7 @@ fn main() {
     let coord = Coordinator::new(cfg, scale);
 
     let rs = args.get_usize_list("rs", &[16, 32, 64, 128]).unwrap();
-    let series = experiment::fig3(&coord, &rs);
+    let series = experiment::fig3(&coord, &rs).expect("fig3 driver failed");
     println!(
         "{}",
         report::render_series(

@@ -27,13 +27,13 @@ fn main() {
     let ns = args.get_usize_list("ns", default_ns).unwrap();
 
     for dataset in ["poker", "susy"] {
-        let points = experiment::fig4(&coord, dataset, &ns, r);
+        let points = experiment::fig4(&coord, dataset, &ns, r).expect("fig4 driver failed");
         println!("{}", report::render_fig4(dataset, &points));
-        let mut csv = String::from("n,rb_secs,svd_secs,kmeans_secs,total_secs,acc\n");
+        let mut csv = String::from("n,rb_secs,svd_secs,embed_secs,kmeans_secs,total_secs,acc\n");
         for p in &points {
             csv.push_str(&format!(
-                "{},{},{},{},{},{}\n",
-                p.n, p.rb_secs, p.svd_secs, p.kmeans_secs, p.total_secs, p.accuracy
+                "{},{},{},{},{},{},{}\n",
+                p.n, p.rb_secs, p.svd_secs, p.embed_secs, p.kmeans_secs, p.total_secs, p.accuracy
             ));
         }
         let _ = report::save(&format!("fig4_{dataset}.csv"), &csv);

@@ -24,7 +24,7 @@ fn main() {
     let names = args.get_str_list("datasets", &["pendigits", "letter", "mnist", "acoustic"]);
     let mut csv = String::from("dataset,method,r,acc,secs\n");
     for name in names {
-        let series = experiment::fig5(&coord, &name, &rs);
+        let series = experiment::fig5(&coord, &name, &rs).expect("fig5 driver failed");
         println!(
             "{}",
             report::render_series(&format!("Fig. 5: runtime vs R ({name})"), &series, "R")

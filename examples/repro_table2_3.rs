@@ -26,7 +26,7 @@ fn main() {
 
     let coord = Coordinator::new(cfg, scale);
     let names: Vec<String> = args.get_str_list("datasets", &experiment::TABLE_DATASETS);
-    let grid = experiment::table2_3(&coord, &names);
+    let grid = experiment::table2_3(&coord, &names).expect("table driver failed");
 
     println!("\nTable 2: average rank scores (lower = better), R={}", coord.base_cfg.r);
     println!("{}", report::render_table2(&grid));

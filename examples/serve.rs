@@ -1,0 +1,76 @@
+//! Fit-once / predict-many: the serving shape of the model API.
+//!
+//!     cargo run --release --example serve
+//!
+//! 1. Fit SC_RB (Algorithm 2) on a training set.
+//! 2. Persist the model (`.scrb`, versioned binary: RB grids, bin→column
+//!    tables, Σ/V projection, K-means centroids).
+//! 3. Reload it — as a serving process would — and label held-out points
+//!    with `predict_batch`: R table lookups + R·K flops per point, no
+//!    solver, no refit.
+
+use scrb::cluster::ScRb;
+use scrb::config::{Kernel, PipelineConfig};
+use scrb::data::synth;
+use scrb::metrics::accuracy;
+use scrb::model::{FittedModel, ScRbModel, ServeWorkspace};
+use scrb::util::rng::Pcg;
+use std::time::Instant;
+
+fn main() {
+    // -- training and held-out data from the same two-moons distribution
+    let mut ds = synth::two_moons(4_000, 0.06, 7);
+    ds.shuffle(&mut Pcg::seed(1));
+    let train_idx: Vec<usize> = (0..3_000).collect();
+    let test_idx: Vec<usize> = (3_000..ds.n()).collect();
+    let train_x = ds.x.select_rows(&train_idx);
+    let test_x = ds.x.select_rows(&test_idx);
+    let test_y: Vec<usize> = test_idx.iter().map(|&i| ds.y[i]).collect();
+
+    // -- fit once
+    let cfg = PipelineConfig::builder()
+        .k(2)
+        .r(256)
+        .kernel(Kernel::Laplacian { sigma: 0.15 })
+        .build();
+    let t0 = Instant::now();
+    let fitted = ScRb::new(cfg).fit(&train_x).expect("fit failed");
+    println!(
+        "fit on n={} in {:.2}s  (this cost is paid once)",
+        train_x.rows,
+        t0.elapsed().as_secs_f64()
+    );
+
+    // -- persist + reload, as a separate serving process would
+    let path = std::env::temp_dir().join("serve_example.scrb");
+    let path = path.to_str().unwrap();
+    fitted.model.save(path).expect("save failed");
+    let model = ScRbModel::load(path).expect("load failed");
+    println!(
+        "model: {} clusters, R={} grids, D={} bins, {} KB on disk",
+        model.n_clusters(),
+        model.codebook.r,
+        model.codebook.dim,
+        std::fs::metadata(path).map(|m| m.len() / 1024).unwrap_or(0)
+    );
+
+    // -- predict many: the serving hot loop reuses one workspace
+    let mut ws = ServeWorkspace::new();
+    let mut labels: Vec<usize> = Vec::new();
+    model.predict_batch(&test_x, &mut ws, &mut labels).expect("predict failed"); // warm
+    let rounds = 50;
+    let t1 = Instant::now();
+    for _ in 0..rounds {
+        model.predict_batch(&test_x, &mut ws, &mut labels).expect("predict failed");
+    }
+    let secs = t1.elapsed().as_secs_f64();
+    let pts = (rounds * test_x.rows) as f64;
+    println!(
+        "served {:.0} predictions in {:.2}s ({:.2e} points/s, {:.2} µs/point)",
+        pts,
+        secs,
+        pts / secs,
+        1e6 * secs / pts
+    );
+    println!("held-out accuracy: {:.3}", accuracy(&labels, &test_y));
+}

@@ -19,13 +19,14 @@ fn main() {
         println!("== {name} (n={} k={}) ==", ds.n(), ds.k);
         let mut t = Table::new(vec!["Method", "Acc", "NMI", "Time(s)"]);
         for kind in MethodKind::ALL {
-            let mut cfg = PipelineConfig::default();
-            cfg.k = ds.k;
-            cfg.r = 256;
-            cfg.kernel = Kernel::Laplacian { sigma };
-            cfg.kmeans_replicates = 5;
+            let cfg = PipelineConfig::builder()
+                .k(ds.k)
+                .r(256)
+                .kernel(Kernel::Laplacian { sigma })
+                .kmeans_replicates(5)
+                .build();
             let t0 = std::time::Instant::now();
-            let out = kind.run(&Env::new(cfg), &ds.x);
+            let out = kind.run(&Env::new(cfg), &ds.x).expect("clustering failed");
             let secs = t0.elapsed().as_secs_f64();
             let m = all_metrics(&out.labels, &ds.y);
             t.row(vec![

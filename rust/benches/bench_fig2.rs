@@ -12,12 +12,11 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(256);
-    let mut cfg = PipelineConfig::default();
-    cfg.kmeans_replicates = 3;
+    let cfg = PipelineConfig::builder().kmeans_replicates(3).build();
     let coord = Coordinator::new(cfg, scale);
 
     let rs = [16usize, 64, 256, 1024];
-    let fig = experiment::fig2(&coord, &rs, 1024);
+    let fig = experiment::fig2(&coord, &rs, 1024).expect("fig2 driver failed");
     println!("{}", report::render_fig2(&fig));
 
     let mut b = Bencher::from_env();

@@ -11,12 +11,11 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(256);
-    let mut cfg = PipelineConfig::default();
-    cfg.kmeans_replicates = 3;
+    let cfg = PipelineConfig::builder().kmeans_replicates(3).build();
     let coord = Coordinator::new(cfg, scale);
 
     let rs = [16usize, 32, 64, 128];
-    let series = experiment::fig3(&coord, &rs);
+    let series = experiment::fig3(&coord, &rs).expect("fig3 driver failed");
     println!(
         "{}",
         report::render_series("Fig. 3: SVD solver comparison (covtype-like)", &series, "R")

@@ -7,8 +7,7 @@ use scrb::util::bench::Bencher;
 use std::time::Duration;
 
 fn main() {
-    let mut cfg = PipelineConfig::default();
-    cfg.kmeans_replicates = 3;
+    let cfg = PipelineConfig::builder().kmeans_replicates(3).build();
     let coord = Coordinator::new(cfg, 1);
 
     let ns: Vec<usize> = std::env::var("SCRB_BENCH_NS")
@@ -19,7 +18,7 @@ fn main() {
 
     let mut b = Bencher::from_env();
     for dataset in ["poker", "susy"] {
-        let points = experiment::fig4(&coord, dataset, &ns, r);
+        let points = experiment::fig4(&coord, dataset, &ns, r).expect("fig4 driver failed");
         println!("{}", report::render_fig4(dataset, &points));
         for p in &points {
             b.record_once(

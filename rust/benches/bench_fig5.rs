@@ -11,14 +11,13 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(256);
-    let mut cfg = PipelineConfig::default();
-    cfg.kmeans_replicates = 3;
+    let cfg = PipelineConfig::builder().kmeans_replicates(3).build();
     let coord = Coordinator::new(cfg, scale);
 
     let rs = [16usize, 64, 256];
     let mut b = Bencher::from_env();
     for dataset in ["pendigits", "letter", "mnist", "acoustic"] {
-        let series = experiment::fig5(&coord, dataset, &rs);
+        let series = experiment::fig5(&coord, dataset, &rs).expect("fig5 driver failed");
         println!(
             "{}",
             report::render_series(&format!("Fig. 5: runtime vs R ({dataset})"), &series, "R")

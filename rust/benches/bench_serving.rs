@@ -1,0 +1,107 @@
+//! Serving-throughput benchmark: fit SC_RB once on the pendigits-scale
+//! benchmark (N=10992, R=256, k=10), then measure the `predict_batch`
+//! hot path — points/sec, single-point latency, and steady-state
+//! allocations per call (the binary runs under the counting allocator).
+//!
+//!     cargo bench --bench bench_serving
+//!     SCRB_BENCH_BUDGET_MS=200 cargo bench --bench bench_serving  # quick
+//!     SCRB_BENCH_SMOKE=1 cargo bench --bench bench_serving        # CI smoke
+//!
+//! Results land in `BENCH_serving.json` (override with SCRB_BENCH_JSON):
+//! `metrics.serving_points_per_sec` is the acceptance number (target
+//! ≥ 1e6 points/sec at R=256, k=10 on a full-size run), and
+//! `metrics.predict_batch_allocs_per_call` pins the zero-allocation
+//! steady state that `tests/alloc.rs` enforces single-threaded.
+
+use scrb::cluster::{Env, MethodKind};
+use scrb::config::{Engine, Kernel, PipelineConfig};
+use scrb::data::synth;
+use scrb::model::{FittedModel, ServeWorkspace};
+use scrb::util::alloc_count::{allocations, CountingAlloc};
+use scrb::util::bench::Bencher;
+use std::time::Instant;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let smoke = std::env::var("SCRB_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let scale = if smoke { 16 } else { 1 };
+
+    // pendigits-scale workload: n = 10992/scale, d = 16, k = 10
+    let ds = synth::paper_benchmark("pendigits", scale, 42);
+    let n = ds.n();
+    println!(
+        "== serving bench (threads={}, n={n}, R=256, k=10{}) ==",
+        scrb::util::threads::num_threads(),
+        if smoke { ", SMOKE" } else { "" }
+    );
+
+    let cfg = PipelineConfig::builder()
+        .k(10)
+        .r(256)
+        .kernel(Kernel::Laplacian { sigma: 0.25 })
+        .engine(Engine::Native)
+        .kmeans_replicates(3)
+        .seed(42)
+        .build();
+
+    // fit once (recorded, not iterated — it is the amortized cost)
+    let t0 = Instant::now();
+    let fitted = MethodKind::ScRb.fit(&Env::new(cfg), &ds.x).expect("SC_RB fit failed");
+    let fit_time = t0.elapsed();
+    b.record_once(&format!("fit n={n} R=256 k=10"), fit_time);
+    println!("    fit: {:?} (amortized once per model)", fit_time);
+
+    let model = fitted.model;
+    let mut ws = ServeWorkspace::new();
+    let mut labels: Vec<usize> = Vec::new();
+
+    // warm the workspace + sanity-check the serving contract
+    model.predict_batch(&ds.x, &mut ws, &mut labels).expect("predict_batch failed");
+    let agree = labels.iter().zip(fitted.output.labels.iter()).filter(|(a, b)| a == b).count();
+    println!("    train-set agreement: {agree}/{n}");
+
+    // steady-state allocation accounting (threaded runs add only
+    // O(threads) fork/join bookkeeping; single-threaded this is 0)
+    let a0 = allocations();
+    model.predict_batch(&ds.x, &mut ws, &mut labels).unwrap();
+    let allocs_per_call = allocations() - a0;
+
+    // the serving hot path: full-batch predict, points/sec
+    let median = b
+        .bench(&format!("predict_batch n={n} R=256 k=10"), || {
+            model.predict_batch(&ds.x, &mut ws, &mut labels).unwrap();
+        })
+        .median;
+    let pts_per_sec = n as f64 / median.as_secs_f64().max(1e-12);
+    println!("    -> {pts_per_sec:.3e} points/s");
+
+    // single-point latency (the interactive-request shape)
+    let one = ds.x.row_block(0, 1);
+    let mut ws_one = ServeWorkspace::new();
+    let mut label_one: Vec<usize> = Vec::new();
+    model.predict_batch(&one, &mut ws_one, &mut label_one).unwrap();
+    let median_one = b
+        .bench("predict single point", || {
+            model.predict_batch(&one, &mut ws_one, &mut label_one).unwrap();
+        })
+        .median;
+    println!("    -> {:.2} µs/point single", median_one.as_nanos() as f64 / 1e3);
+
+    b.metric("serving_n", n as f64);
+    b.metric("serving_points_per_sec", pts_per_sec);
+    b.metric("predict_point_us", median_one.as_nanos() as f64 / 1e3);
+    b.metric("predict_batch_allocs_per_call", allocs_per_call as f64);
+    b.metric("train_agreement", agree as f64 / n as f64);
+    b.metric("fit_secs", fit_time.as_secs_f64());
+
+    println!("\n{}", b.report());
+    let json_path =
+        std::env::var("SCRB_BENCH_JSON").unwrap_or_else(|_| "BENCH_serving.json".into());
+    match b.write_json(&json_path) {
+        Ok(()) => println!("[saved {json_path}]"),
+        Err(e) => eprintln!("[failed to save {json_path}: {e}]"),
+    }
+}

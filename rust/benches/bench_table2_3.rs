@@ -16,14 +16,12 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(256);
-    let mut cfg = PipelineConfig::default();
-    cfg.r = 256;
-    cfg.kmeans_replicates = 3;
+    let cfg = PipelineConfig::builder().r(256).kmeans_replicates(3).build();
     let coord = Coordinator::new(cfg, scale);
 
     println!("== Table 2/3 bench (scale=1/{scale}, R={}) ==", coord.base_cfg.r);
     let names: Vec<String> = experiment::TABLE_DATASETS.iter().map(|s| s.to_string()).collect();
-    let grid = experiment::table2_3(&coord, &names);
+    let grid = experiment::table2_3(&coord, &names).expect("table driver failed");
 
     println!("\nTable 2: average rank scores (lower = better)");
     println!("{}", report::render_table2(&grid));

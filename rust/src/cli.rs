@@ -2,6 +2,7 @@
 //!
 //! Grammar: `scrb <command> [positional...] [--key value | --flag]...`
 
+use crate::error::ScrbError;
 use std::collections::BTreeMap;
 
 /// Parsed command line.
@@ -15,7 +16,7 @@ pub struct Args {
 
 impl Args {
     /// Parse from an iterator of raw arguments (excluding argv[0]).
-    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, String> {
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, ScrbError> {
         let mut args = Args::default();
         let mut it = raw.into_iter().peekable();
         if let Some(first) = it.peek() {
@@ -26,7 +27,7 @@ impl Args {
         while let Some(tok) = it.next() {
             if let Some(name) = tok.strip_prefix("--") {
                 if name.is_empty() {
-                    return Err("bare '--' not supported".into());
+                    return Err(ScrbError::config("bare '--' not supported"));
                 }
                 if let Some((k, v)) = name.split_once('=') {
                     args.options.insert(k.to_string(), v.to_string());
@@ -42,7 +43,7 @@ impl Args {
         Ok(args)
     }
 
-    pub fn from_env() -> Result<Args, String> {
+    pub fn from_env() -> Result<Args, ScrbError> {
         Self::parse(std::env::args().skip(1))
     }
 
@@ -58,34 +59,44 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
-    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, ScrbError> {
         match self.get(name) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ScrbError::config(format!("--{name} expects an integer, got '{v}'"))),
         }
     }
 
-    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, ScrbError> {
         match self.get(name) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| format!("--{name} expects a number, got '{v}'")),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ScrbError::config(format!("--{name} expects a number, got '{v}'"))),
         }
     }
 
-    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, ScrbError> {
         match self.get(name) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ScrbError::config(format!("--{name} expects an integer, got '{v}'"))),
         }
     }
 
     /// Parse a comma-separated list of usizes, e.g. `--rs 16,64,256`.
-    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, ScrbError> {
         match self.get(name) {
             None => Ok(default.to_vec()),
             Some(v) => v
                 .split(',')
-                .map(|s| s.trim().parse().map_err(|_| format!("--{name}: bad entry '{s}'")))
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| ScrbError::config(format!("--{name}: bad entry '{s}'")))
+                })
                 .collect(),
         }
     }

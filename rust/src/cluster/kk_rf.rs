@@ -1,22 +1,29 @@
 //! **KK_RF** [11] — approximate kernel K-means run *directly* on the dense
 //! N×R RF feature matrix. No SVD; the K-means itself costs O(NRKt), which
 //! is why the paper finds this method blows up at large R (Fig. 5).
+//!
+//! Serving: transductive — the fitted model is the input-space class-mean
+//! fallback ([`crate::model::CentroidModel`]).
 
 use super::method::{embed_and_cluster, ClusterOutput, Env, MethodInfo};
 use super::sc_rf::rf_matrix;
+use crate::error::ScrbError;
 use crate::linalg::Mat;
+use crate::model::{CentroidModel, FitResult};
 use crate::util::timer::StageTimer;
 
-pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
+pub fn fit(env: &Env, x: &Mat) -> Result<FitResult, ScrbError> {
     let mut timer = StageTimer::new();
     let z = timer.time("rf_features", || rf_matrix(env, x));
     let feature_dim = z.cols;
     let (labels, km) = embed_and_cluster(z, env, &mut timer, false);
-    ClusterOutput {
+    let model = CentroidModel::from_labels(x, &labels, env.cfg.k);
+    let output = ClusterOutput {
         labels,
         timer,
         info: MethodInfo { feature_dim, svd: None, kappa: None, inertia: km.inertia },
-    }
+    };
+    Ok(FitResult { model: Box::new(model), output })
 }
 
 #[cfg(test)]
@@ -29,12 +36,13 @@ mod tests {
     #[test]
     fn clusters_blobs() {
         let ds = synth::gaussian_blobs(250, 4, 3, 9.0, 23);
-        let mut cfg = PipelineConfig::default();
-        cfg.k = 3;
-        cfg.r = 128;
-        cfg.kernel = Kernel::Gaussian { sigma: 0.6 };
-        cfg.kmeans_replicates = 3;
-        let out = run(&Env::new(cfg), &ds.x);
+        let cfg = PipelineConfig::builder()
+            .k(3)
+            .r(128)
+            .kernel(Kernel::Gaussian { sigma: 0.6 })
+            .kmeans_replicates(3)
+            .build();
+        let out = fit(&Env::new(cfg), &ds.x).unwrap().output;
         let acc = accuracy(&out.labels, &ds.y);
         assert!(acc > 0.85, "KK_RF on blobs: {acc}");
     }

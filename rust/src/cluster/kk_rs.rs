@@ -2,14 +2,19 @@
 //! the cluster centers to the span of R sampled points. Equivalent to
 //! K-means in the Nyström feature space K(X,L)·K(L,L)^{−1/2} *without* the
 //! Laplacian normalization or SVD (the contrast with SC_Nys the paper draws).
+//!
+//! Serving: transductive — the fitted model is the input-space class-mean
+//! fallback ([`crate::model::CentroidModel`]).
 
 use super::method::{embed_and_cluster, ClusterOutput, Env, MethodInfo};
 use super::sc_nys::kernel_block_env;
+use crate::error::ScrbError;
 use crate::linalg::{cholesky_jittered, whiten_rows, Mat};
+use crate::model::{CentroidModel, FitResult};
 use crate::util::rng::Pcg;
 use crate::util::timer::StageTimer;
 
-pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
+pub fn fit(env: &Env, x: &Mat) -> Result<FitResult, ScrbError> {
     let cfg = &env.cfg;
     let m = cfg.r.min(x.rows);
     let mut timer = StageTimer::new();
@@ -28,11 +33,13 @@ pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
     });
 
     let (labels, km) = embed_and_cluster(z, env, &mut timer, false);
-    ClusterOutput {
+    let model = CentroidModel::from_labels(x, &labels, cfg.k);
+    let output = ClusterOutput {
         labels,
         timer,
         info: MethodInfo { feature_dim: m, svd: None, kappa: None, inertia: km.inertia },
-    }
+    };
+    Ok(FitResult { model: Box::new(model), output })
 }
 
 #[cfg(test)]
@@ -45,12 +52,13 @@ mod tests {
     #[test]
     fn clusters_blobs() {
         let ds = synth::gaussian_blobs(250, 4, 3, 9.0, 37);
-        let mut cfg = PipelineConfig::default();
-        cfg.k = 3;
-        cfg.r = 48;
-        cfg.kernel = Kernel::Gaussian { sigma: 0.6 };
-        cfg.kmeans_replicates = 3;
-        let out = run(&Env::new(cfg), &ds.x);
+        let cfg = PipelineConfig::builder()
+            .k(3)
+            .r(48)
+            .kernel(Kernel::Gaussian { sigma: 0.6 })
+            .kmeans_replicates(3)
+            .build();
+        let out = fit(&Env::new(cfg), &ds.x).unwrap().output;
         let acc = accuracy(&out.labels, &ds.y);
         assert!(acc > 0.85, "KK_RS on blobs: {acc}");
     }

@@ -1,19 +1,32 @@
 //! **K-means baseline** [15]: plain Lloyd on the raw data (the paper's
 //! geometry-limited reference point — strong on convex blobs, weak on
 //! non-convex structure).
+//!
+//! Serving: the fitted centroids *are* the model, so the
+//! [`CentroidModel`] this fit returns predicts exactly — training points
+//! reproduce their fit labels, new points get the true K-means
+//! assignment.
 
 use super::method::{ClusterOutput, Env, MethodInfo};
+use crate::error::ScrbError;
 use crate::kmeans::kmeans;
 use crate::linalg::Mat;
+use crate::model::{CentroidModel, FitResult, FittedModel};
 use crate::util::timer::StageTimer;
 
-pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
+pub fn fit(env: &Env, x: &Mat) -> Result<FitResult, ScrbError> {
     let mut timer = StageTimer::new();
     let engine = env.assign_engine();
     let opts = env.kmeans_opts(env.cfg.k);
     let result = timer.time("kmeans", || kmeans(x, &opts, engine.as_ref()));
-    ClusterOutput {
-        labels: result.labels.iter().map(|&l| l as usize).collect(),
+    let model = CentroidModel::new(result.centroids);
+    // Final labels via the model's own (native f64) assignment — on the
+    // native engine these are bit-identical to the K-means assignment;
+    // under the f32 XLA assign engine this overrides borderline rounding
+    // so training-set `predict` reproduces fit labels on every engine.
+    let labels = model.predict(x)?;
+    let output = ClusterOutput {
+        labels,
         timer,
         info: MethodInfo {
             feature_dim: x.cols,
@@ -21,7 +34,8 @@ pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
             kappa: None,
             inertia: result.inertia,
         },
-    }
+    };
+    Ok(FitResult { model: Box::new(model), output })
 }
 
 #[cfg(test)]
@@ -34,17 +48,24 @@ mod tests {
     #[test]
     fn blobs_ok_moons_poor() {
         let blobs = synth::gaussian_blobs(300, 3, 3, 9.0, 3);
-        let mut cfg = PipelineConfig::default();
-        cfg.k = 3;
-        cfg.kmeans_replicates = 5;
-        let out = run(&Env::new(cfg.clone()), &blobs.x);
+        let cfg = PipelineConfig::builder().k(3).kmeans_replicates(5).build();
+        let out = fit(&Env::new(cfg), &blobs.x).unwrap().output;
         assert!(accuracy(&out.labels, &blobs.y) > 0.95);
 
         // non-convex: K-means should clearly fail where SC succeeds
         let moons = synth::two_moons(600, 0.05, 3);
-        cfg.k = 2;
-        let out = run(&Env::new(cfg), &moons.x);
+        let cfg = PipelineConfig::builder().k(2).kmeans_replicates(5).build();
+        let out = fit(&Env::new(cfg), &moons.x).unwrap().output;
         let acc = accuracy(&out.labels, &moons.y);
         assert!(acc < 0.95, "K-means should not solve two moons: {acc}");
+    }
+
+    #[test]
+    fn fitted_model_reproduces_training_labels() {
+        let blobs = synth::gaussian_blobs(200, 3, 3, 9.0, 5);
+        let cfg = PipelineConfig::builder().k(3).kmeans_replicates(3).build();
+        let fitted = fit(&Env::new(cfg), &blobs.x).unwrap();
+        let predicted = fitted.model.predict(&blobs.x).unwrap();
+        assert_eq!(predicted, fitted.output.labels);
     }
 }

@@ -1,11 +1,17 @@
 //! Common method interface: every clustering algorithm in the comparison
-//! grid (Table 2/3) runs through [`MethodKind::run`] and produces a
-//! [`ClusterOutput`] with labels, per-stage timings, and solver telemetry.
+//! grid (Table 2/3) runs through [`MethodKind::fit`] — the
+//! [`crate::model::ClusterModel`] entry point — producing a
+//! [`crate::model::FitResult`]: the training-set [`ClusterOutput`]
+//! (labels, per-stage timings, solver telemetry) plus a serving
+//! [`crate::model::FittedModel`]. [`MethodKind::run`] is the batch
+//! convenience wrapper (fit, keep only the training output).
 
 use crate::config::{Engine, PipelineConfig};
 use crate::eigen::SvdStats;
+use crate::error::ScrbError;
 use crate::kmeans::{kmeans, AssignEngine, KmeansOpts, KmeansResult, NativeAssign};
 use crate::linalg::Mat;
+use crate::model::{ClusterModel, FitResult};
 use crate::runtime::{XlaAssign, XlaRuntime};
 use crate::util::timer::StageTimer;
 
@@ -63,7 +69,8 @@ pub struct MethodInfo {
     pub inertia: f64,
 }
 
-/// The result of one clustering run.
+/// The result of one clustering run (training-set labels plus telemetry).
+#[derive(Clone)]
 pub struct ClusterOutput {
     pub labels: Vec<usize>,
     pub timer: StageTimer,
@@ -120,7 +127,7 @@ impl MethodKind {
         }
     }
 
-    pub fn parse(s: &str) -> Result<MethodKind, String> {
+    pub fn parse(s: &str) -> Result<MethodKind, ScrbError> {
         let canon = s.to_lowercase().replace(['-', '_'], "");
         match canon.as_str() {
             "kmeans" => Ok(MethodKind::KMeans),
@@ -132,23 +139,37 @@ impl MethodKind {
             "scnys" | "nystrom" | "nys" => Ok(MethodKind::ScNys),
             "scrf" => Ok(MethodKind::ScRf),
             "scrb" | "rb" => Ok(MethodKind::ScRb),
-            other => Err(format!("unknown method '{other}'")),
+            other => Err(ScrbError::config(format!("unknown method '{other}'"))),
         }
     }
 
-    /// Dispatch to the implementation.
-    pub fn run(&self, env: &Env, x: &Mat) -> ClusterOutput {
+    /// Fit this method on `x`: the training-set clustering plus a serving
+    /// model (SC_RB's spectral out-of-sample extension; input-space
+    /// nearest-centroid for K-means and the transductive baselines).
+    pub fn fit(&self, env: &Env, x: &Mat) -> Result<FitResult, ScrbError> {
         match self {
-            MethodKind::KMeans => super::kmeans_base::run(env, x),
-            MethodKind::ScExact => super::sc_exact::run(env, x),
-            MethodKind::KkRs => super::kk_rs::run(env, x),
-            MethodKind::KkRf => super::kk_rf::run(env, x),
-            MethodKind::SvRf => super::sv_rf::run(env, x),
-            MethodKind::ScLsc => super::sc_lsc::run(env, x),
-            MethodKind::ScNys => super::sc_nys::run(env, x),
-            MethodKind::ScRf => super::sc_rf::run(env, x),
-            MethodKind::ScRb => super::sc_rb::run(env, x),
+            MethodKind::KMeans => super::kmeans_base::fit(env, x),
+            MethodKind::ScExact => super::sc_exact::fit(env, x),
+            MethodKind::KkRs => super::kk_rs::fit(env, x),
+            MethodKind::KkRf => super::kk_rf::fit(env, x),
+            MethodKind::SvRf => super::sv_rf::fit(env, x),
+            MethodKind::ScLsc => super::sc_lsc::fit(env, x),
+            MethodKind::ScNys => super::sc_nys::fit(env, x),
+            MethodKind::ScRf => super::sc_rf::fit(env, x),
+            MethodKind::ScRb => super::sc_rb::fit(env, x),
         }
+    }
+
+    /// Batch convenience: fit and return only the training-set output
+    /// (the pre-model-API shape).
+    pub fn run(&self, env: &Env, x: &Mat) -> Result<ClusterOutput, ScrbError> {
+        Ok(self.fit(env, x)?.output)
+    }
+}
+
+impl ClusterModel for MethodKind {
+    fn fit(&self, env: &Env, x: &Mat) -> Result<FitResult, ScrbError> {
+        MethodKind::fit(self, env, x)
     }
 }
 
@@ -163,9 +184,20 @@ pub fn embed_and_cluster(
     if row_normalize {
         u.normalize_rows();
     }
+    cluster_embedding(&u, env, timer)
+}
+
+/// K-means over already-prepared embedding rows, by reference — callers
+/// that keep the embedding afterwards (the SC_RB fit labels its rows
+/// through the serving model) avoid copying it.
+pub fn cluster_embedding(
+    u: &Mat,
+    env: &Env,
+    timer: &mut StageTimer,
+) -> (Vec<usize>, KmeansResult) {
     let engine = env.assign_engine();
     let opts = env.kmeans_opts(env.cfg.k);
-    let result = timer.time("kmeans", || kmeans(&u, &opts, engine.as_ref()));
+    let result = timer.time("kmeans", || kmeans(u, &opts, engine.as_ref()));
     (result.labels.iter().map(|&l| l as usize).collect(), result)
 }
 

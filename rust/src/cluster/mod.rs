@@ -1,6 +1,13 @@
 //! Clustering methods: the paper's SC_RB (Algorithm 2) and the eight
 //! baselines of the Table 2/3 comparison grid, all behind one
 //! [`MethodKind`] dispatch.
+//!
+//! Every method is a [`crate::model::ClusterModel`]: `fit` produces the
+//! training-set [`ClusterOutput`] plus a serving
+//! [`crate::model::FittedModel`] (SC_RB's spectral out-of-sample
+//! projection, the K-means centroids, or the class-mean fallback for the
+//! transductive baselines). [`MethodKind::run`] keeps the old batch shape
+//! as a thin wrapper over `fit`.
 
 pub mod kk_rf;
 pub mod kk_rs;
@@ -13,7 +20,7 @@ pub mod sc_rb;
 pub mod sc_rf;
 pub mod sv_rf;
 
-pub use method::{embed_and_cluster, ClusterOutput, Env, MethodInfo, MethodKind};
+pub use method::{cluster_embedding, embed_and_cluster, ClusterOutput, Env, MethodInfo, MethodKind};
 pub use sc_rb::ScRb;
 
 /// Re-export used by doc examples.

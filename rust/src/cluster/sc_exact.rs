@@ -3,12 +3,18 @@
 //! (optionally through the XLA kernel-block artifact), normalizes it, and
 //! extracts the top-K eigenvectors of S = D^{−1/2} W D^{−1/2} with the
 //! iterative solver applied to the symmetric operator.
+//!
+//! Serving: exact SC is transductive (the embedding exists only for the
+//! points the eigenproblem was solved over), so the fitted model is the
+//! input-space class-mean fallback ([`crate::model::CentroidModel`]).
 
 use super::method::{embed_and_cluster, ClusterOutput, Env, MethodInfo};
 use crate::config::Kernel;
 use crate::eigen::{svds, SvdOp, SvdsOpts};
+use crate::error::ScrbError;
 use crate::kernels::kernel_matrix;
 use crate::linalg::Mat;
+use crate::model::{CentroidModel, FitResult};
 use crate::runtime::ArtifactKind;
 use crate::util::timer::StageTimer;
 
@@ -40,13 +46,14 @@ impl<'m> SvdOp for SymOp<'m> {
     }
 }
 
-pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
+pub fn fit(env: &Env, x: &Mat) -> Result<FitResult, ScrbError> {
     let cfg = &env.cfg;
-    assert!(
-        x.rows <= MAX_EXACT_N,
-        "exact SC is O(N²); refusing N={} > {MAX_EXACT_N} (the paper reports '-' here too)",
-        x.rows
-    );
+    if x.rows > MAX_EXACT_N {
+        return Err(ScrbError::invalid_input(format!(
+            "exact SC is O(N²); refusing N={} > {MAX_EXACT_N} (the paper reports '-' here too)",
+            x.rows
+        )));
+    }
     let mut timer = StageTimer::new();
 
     // Full similarity matrix W (XLA kernel-block path when available).
@@ -77,7 +84,8 @@ pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
     let svd = timer.time("svd", || svds(&op, &opts, cfg.seed ^ 0xe8ac7));
 
     let (labels, km) = embed_and_cluster(svd.u, env, &mut timer, true);
-    ClusterOutput {
+    let model = CentroidModel::from_labels(x, &labels, cfg.k);
+    let output = ClusterOutput {
         labels,
         timer,
         info: MethodInfo {
@@ -86,7 +94,8 @@ pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
             kappa: None,
             inertia: km.inertia,
         },
-    }
+    };
+    Ok(FitResult { model: Box::new(model), output })
 }
 
 fn build_w(env: &Env, x: &Mat) -> Mat {
@@ -119,11 +128,12 @@ mod tests {
     #[test]
     fn solves_two_moons() {
         let ds = synth::two_moons(400, 0.05, 11);
-        let mut cfg = PipelineConfig::default();
-        cfg.k = 2;
-        cfg.kernel = Kernel::Gaussian { sigma: 0.12 };
-        cfg.kmeans_replicates = 5;
-        let out = run(&Env::new(cfg), &ds.x);
+        let cfg = PipelineConfig::builder()
+            .k(2)
+            .kernel(Kernel::Gaussian { sigma: 0.12 })
+            .kmeans_replicates(5)
+            .build();
+        let out = fit(&Env::new(cfg), &ds.x).unwrap().output;
         let acc = accuracy(&out.labels, &ds.y);
         assert!(acc > 0.95, "exact SC on two moons: {acc}");
     }
@@ -131,23 +141,26 @@ mod tests {
     #[test]
     fn agrees_with_rb_on_blobs() {
         let ds = synth::gaussian_blobs(250, 3, 3, 9.0, 13);
-        let mut cfg = PipelineConfig::default();
-        cfg.k = 3;
-        cfg.kernel = Kernel::Laplacian { sigma: 0.6 };
-        cfg.kmeans_replicates = 5;
-        let exact = run(&Env::new(cfg.clone()), &ds.x);
-        cfg.r = 512;
-        let rb = super::super::sc_rb::run(&Env::new(cfg), &ds.x);
+        let cfg = PipelineConfig::builder()
+            .k(3)
+            .kernel(Kernel::Laplacian { sigma: 0.6 })
+            .kmeans_replicates(5)
+            .build();
+        let exact = fit(&Env::new(cfg.clone()), &ds.x).unwrap().output;
+        let mut rb_cfg = cfg;
+        rb_cfg.r = 512;
+        let rb = super::super::sc_rb::fit(&Env::new(rb_cfg), &ds.x).unwrap().output;
         let a_exact = accuracy(&exact.labels, &ds.y);
         let a_rb = accuracy(&rb.labels, &ds.y);
         assert!(a_exact > 0.95 && a_rb > 0.95, "exact {a_exact} rb {a_rb}");
     }
 
     #[test]
-    #[should_panic(expected = "refusing")]
-    fn refuses_large_n() {
+    fn refuses_large_n_with_typed_error() {
         let x = Mat::zeros(MAX_EXACT_N + 1, 2);
         let cfg = PipelineConfig::default();
-        let _ = run(&Env::new(cfg), &x);
+        let err = fit(&Env::new(cfg), &x).unwrap_err();
+        assert!(matches!(err, ScrbError::InvalidInput(_)));
+        assert!(err.to_string().contains("refusing"), "{err}");
     }
 }

@@ -6,11 +6,16 @@
 //! Note (paper §5.1): this is a KNN-style graph, *not* the fully connected
 //! graph the other SC methods use — which is exactly why its behaviour
 //! diverges (better on manifold-ish digits, worse elsewhere).
+//!
+//! Serving: transductive — the fitted model is the input-space class-mean
+//! fallback ([`crate::model::CentroidModel`]).
 
 use super::method::{embed_and_cluster, ClusterOutput, Env, MethodInfo};
 use crate::eigen::{svds, SvdsOpts};
+use crate::error::ScrbError;
 use crate::kmeans::{kmeans, KmeansOpts, NativeAssign};
 use crate::linalg::Mat;
+use crate::model::{CentroidModel, FitResult};
 use crate::sparse::Csr;
 use crate::util::rng::Pcg;
 use crate::util::timer::StageTimer;
@@ -18,7 +23,7 @@ use crate::util::timer::StageTimer;
 /// Nearest landmarks kept per point (Chen & Cai use ~5).
 pub const S_NEAREST: usize = 5;
 
-pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
+pub fn fit(env: &Env, x: &Mat) -> Result<FitResult, ScrbError> {
     let cfg = &env.cfg;
     let p = cfg.r.min(x.rows); // number of landmarks
     let s = S_NEAREST.min(p);
@@ -80,7 +85,8 @@ pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
     let svd = timer.time("svd", || svds(&ahat, &opts, cfg.seed ^ 0x15ce));
 
     let (labels, km) = embed_and_cluster(svd.u, env, &mut timer, true);
-    ClusterOutput {
+    let model = CentroidModel::from_labels(x, &labels, cfg.k);
+    let output = ClusterOutput {
         labels,
         timer,
         info: MethodInfo {
@@ -89,7 +95,8 @@ pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
             kappa: None,
             inertia: km.inertia,
         },
-    }
+    };
+    Ok(FitResult { model: Box::new(model), output })
 }
 
 #[cfg(test)]
@@ -102,12 +109,13 @@ mod tests {
     #[test]
     fn clusters_blobs() {
         let ds = synth::gaussian_blobs(300, 4, 3, 9.0, 41);
-        let mut cfg = PipelineConfig::default();
-        cfg.k = 3;
-        cfg.r = 50;
-        cfg.kernel = Kernel::Gaussian { sigma: 0.6 };
-        cfg.kmeans_replicates = 5;
-        let out = run(&Env::new(cfg), &ds.x);
+        let cfg = PipelineConfig::builder()
+            .k(3)
+            .r(50)
+            .kernel(Kernel::Gaussian { sigma: 0.6 })
+            .kmeans_replicates(5)
+            .build();
+        let out = fit(&Env::new(cfg), &ds.x).unwrap().output;
         let acc = accuracy(&out.labels, &ds.y);
         assert!(acc > 0.9, "SC_LSC on blobs: {acc}");
     }
@@ -115,12 +123,13 @@ mod tests {
     #[test]
     fn affinity_rows_are_sparse() {
         let ds = synth::gaussian_blobs(150, 3, 2, 6.0, 43);
-        let mut cfg = PipelineConfig::default();
-        cfg.k = 2;
-        cfg.r = 30;
-        cfg.kernel = Kernel::Gaussian { sigma: 0.5 };
-        cfg.kmeans_replicates = 2;
-        let out = run(&Env::new(cfg), &ds.x);
+        let cfg = PipelineConfig::builder()
+            .k(2)
+            .r(30)
+            .kernel(Kernel::Gaussian { sigma: 0.5 })
+            .kmeans_replicates(2)
+            .build();
+        let out = fit(&Env::new(cfg), &ds.x).unwrap().output;
         assert_eq!(out.info.feature_dim, 30);
         assert_eq!(out.labels.len(), 150);
     }

@@ -2,12 +2,18 @@
 //! approximate W ≈ C·W₁₁⁻¹·Cᵀ with C = K(X, landmarks), W₁₁ = K(landmarks,
 //! landmarks), and run the spectral pipeline on the implicit low-rank form
 //! Ẑ = D^{−1/2}·C·W₁₁^{−1/2}.
+//!
+//! Serving: transductive here (the degree normalization couples every
+//! point), so the fitted model is the input-space class-mean fallback
+//! ([`crate::model::CentroidModel`]).
 
 use super::method::{embed_and_cluster, ClusterOutput, Env, MethodInfo};
 use crate::config::Kernel;
 use crate::eigen::{svds, SvdsOpts};
+use crate::error::ScrbError;
 use crate::kernels::kernel_block;
 use crate::linalg::{cholesky_jittered, whiten_rows, Mat};
+use crate::model::{CentroidModel, FitResult};
 use crate::runtime::ArtifactKind;
 use crate::util::rng::Pcg;
 use crate::util::timer::StageTimer;
@@ -34,7 +40,7 @@ pub(super) fn kernel_block_env(env: &Env, x: &Mat, y: &Mat) -> Mat {
     kernel_block(env.cfg.kernel, x, y)
 }
 
-pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
+pub fn fit(env: &Env, x: &Mat) -> Result<FitResult, ScrbError> {
     let cfg = &env.cfg;
     let m = cfg.r.min(x.rows);
     let mut timer = StageTimer::new();
@@ -73,7 +79,8 @@ pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
     let svd = timer.time("svd", || svds(&zny, &opts, cfg.seed ^ 0x4ce5));
 
     let (labels, km) = embed_and_cluster(svd.u, env, &mut timer, true);
-    ClusterOutput {
+    let model = CentroidModel::from_labels(x, &labels, cfg.k);
+    let output = ClusterOutput {
         labels,
         timer,
         info: MethodInfo {
@@ -82,7 +89,8 @@ pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
             kappa: None,
             inertia: km.inertia,
         },
-    }
+    };
+    Ok(FitResult { model: Box::new(model), output })
 }
 
 #[cfg(test)]
@@ -95,12 +103,13 @@ mod tests {
     #[test]
     fn clusters_blobs() {
         let ds = synth::gaussian_blobs(300, 4, 3, 9.0, 29);
-        let mut cfg = PipelineConfig::default();
-        cfg.k = 3;
-        cfg.r = 64;
-        cfg.kernel = Kernel::Gaussian { sigma: 0.6 };
-        cfg.kmeans_replicates = 5;
-        let out = run(&Env::new(cfg), &ds.x);
+        let cfg = PipelineConfig::builder()
+            .k(3)
+            .r(64)
+            .kernel(Kernel::Gaussian { sigma: 0.6 })
+            .kmeans_replicates(5)
+            .build();
+        let out = fit(&Env::new(cfg), &ds.x).unwrap().output;
         let acc = accuracy(&out.labels, &ds.y);
         assert!(acc > 0.9, "SC_Nys on blobs: {acc}");
     }
@@ -108,12 +117,13 @@ mod tests {
     #[test]
     fn solves_two_moons_with_enough_landmarks() {
         let ds = synth::two_moons(500, 0.05, 31);
-        let mut cfg = PipelineConfig::default();
-        cfg.k = 2;
-        cfg.r = 200;
-        cfg.kernel = Kernel::Gaussian { sigma: 0.12 };
-        cfg.kmeans_replicates = 5;
-        let out = run(&Env::new(cfg), &ds.x);
+        let cfg = PipelineConfig::builder()
+            .k(2)
+            .r(200)
+            .kernel(Kernel::Gaussian { sigma: 0.12 })
+            .kmeans_replicates(5)
+            .build();
+        let out = fit(&Env::new(cfg), &ds.x).unwrap().output;
         let acc = accuracy(&out.labels, &ds.y);
         assert!(acc > 0.85, "SC_Nys on moons: {acc}");
     }

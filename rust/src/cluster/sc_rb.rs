@@ -2,30 +2,53 @@
 //!
 //! 1. Build the sparse RB feature matrix Z (Algorithm 1) — the similarity
 //!    graph Ŵ = Z·Zᵀ is never materialized. Z lands on the fixed-stride
-//!    [`crate::sparse::EllRb`] substrate, transpose layout included.
+//!    [`crate::sparse::EllRb`] substrate, transpose layout included; the
+//!    fit additionally keeps the [`crate::rb::RbCodebook`] (grids +
+//!    bin→column tables) for out-of-sample serving.
 //! 2. Degrees d = Z(Zᵀ1) (Eq. 6); Ẑ = D^{−1/2}Z folds into the per-row
 //!    scale vector — O(N), no pass over the non-zeros.
-//! 3. Top-K left singular vectors of Ẑ via the PRIMME-style solver
+//! 3. Top-K singular triplets of Ẑ via the PRIMME-style solver
 //!    (equivalently: smallest eigenvectors of L̂ = I − ẐẐᵀ); every solver
-//!    iteration is one EllRb `matmat` plus one strip-parallel `t_matmat`.
-//! 4. Row-normalize U.
-//! 5. K-means on the rows of U.
+//!    iteration is one fused strip-tiled gram product.
+//! 4. Row-normalize the embedding.
+//! 5. K-means on the embedding rows.
+//!
+//! The fit returns a [`crate::model::ScRbModel`]: Σ and V fold into the
+//! projection `P = V·Σ⁻¹/√R`, so a new point embeds as the sum of the P
+//! rows of its occupied bins (then row-normalized — which cancels the
+//! unknown degree scalar) and labels as the nearest K-means centroid.
+//!
+//! One deliberate twist versus the batch-only pipeline: steps 4–5 run on
+//! the **serving embedding** `normalize(z·V·Σ⁻¹)` computed through the
+//! model's own gather path, not on the solver's U directly. The two agree
+//! up to solver tolerance (U ≈ Ẑ·V·Σ⁻¹ at convergence, and the per-row
+//! degree scalar cancels under normalization), but routing fit through
+//! the identical code path makes training-set `predict` reproduce fit
+//! labels **bit-exactly**, not just within tolerance.
 
-use super::method::{embed_and_cluster, ClusterOutput, Env, MethodInfo};
+use super::method::{cluster_embedding, ClusterOutput, Env, MethodInfo};
 use crate::config::PipelineConfig;
-use crate::eigen::{svds_ws, SolverWorkspace, SvdsOpts};
+use crate::eigen::{svds_ws, SolverWorkspace, SvdResult, SvdsOpts};
+use crate::error::ScrbError;
+use crate::kmeans::{AssignEngine, NativeAssign};
 use crate::linalg::Mat;
-use crate::rb::rb_features;
+use crate::model::{FitResult, FittedModel, ScRbModel};
+use crate::rb::rb_features_with_codebook;
 use crate::util::timer::StageTimer;
 
-/// Run Algorithm 2 on data `x`.
-pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
+/// Fit Algorithm 2 on data `x`, producing the training clustering and the
+/// serving model.
+pub fn fit(env: &Env, x: &Mat) -> Result<FitResult, ScrbError> {
     let cfg = &env.cfg;
+    if x.rows == 0 {
+        return Err(ScrbError::invalid_input("cannot fit on an empty dataset"));
+    }
     let mut timer = StageTimer::new();
 
-    // Step 1: RB feature generation (Algorithm 1).
-    let rb = timer.time("rb_features", || {
-        rb_features(x, cfg.r, cfg.kernel.sigma(), cfg.seed)
+    // Step 1: RB feature generation (Algorithm 1), keeping the codebook
+    // (grids + bin→column maps) the serving path needs.
+    let (rb, codebook) = timer.time("rb_features", || {
+        rb_features_with_codebook(x, cfg.r, cfg.kernel.sigma(), cfg.seed)
     });
     let feature_dim = rb.dim();
     let kappa = rb.kappa;
@@ -39,7 +62,7 @@ pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
         z
     });
 
-    // Step 3: top-K left singular vectors of Ẑ (PRIMME role). Every
+    // Step 3: top-K singular triplets of Ẑ (PRIMME role). Every
     // iteration's S·B runs through the fused strip-tiled gram kernel and a
     // preallocated SolverWorkspace — the steady-state hot loop does not
     // touch the heap.
@@ -48,20 +71,64 @@ pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
     opts.max_matvecs = cfg.svd_max_iters;
     let mut solver_ws = SolverWorkspace::new();
     let svd = timer.time("svd", || svds_ws(&zhat, &opts, cfg.seed ^ 0x5bd5, &mut solver_ws));
+    let SvdResult { s, v, stats, .. } = svd;
 
-    // Steps 4–5: row-normalize + K-means.
-    let (labels, km) = embed_and_cluster(svd.u, env, &mut timer, true);
+    // Serving projection P = V·Σ⁻¹/√R: folds the right singular vectors,
+    // the inverse spectrum, and the shared RB value 1/√R into one D×K
+    // matrix, so embedding a point is a plain gather-sum over its bins.
+    // Near-zero σ directions are dropped (scale 0) rather than amplified.
+    let proj = timer.time("projection", || {
+        let mut p = v;
+        let s0 = s.first().copied().unwrap_or(0.0).max(1e-300);
+        let rsqrt = 1.0 / (cfg.r as f64).sqrt();
+        let col_scale: Vec<f64> = s
+            .iter()
+            .map(|&sj| if sj > 1e-12 * s0 { rsqrt / sj } else { 0.0 })
+            .collect();
+        for i in 0..p.rows {
+            for (pv, cs) in p.row_mut(i).iter_mut().zip(col_scale.iter()) {
+                *pv *= *cs;
+            }
+        }
+        p
+    });
 
-    ClusterOutput {
+    // Steps 4–5 on the serving embedding: rows of normalize(z·V·Σ⁻¹),
+    // computed through the model's own gather path so that training-set
+    // predictions reproduce the fit labels bit-exactly (`transform`
+    // already unit-normalizes the rows, so no further normalization).
+    let mut model = ScRbModel {
+        codebook,
+        kernel: cfg.kernel,
+        s,
+        proj,
+        centroids: Mat::zeros(0, 0),
+        norm: None,
+    };
+    let emb = timer.time("embed", || model.transform(x))?;
+    let (_, km) = cluster_embedding(&emb, env, &mut timer);
+    model.centroids = km.centroids;
+    // Final labels via the same f64 argmin the serving path uses (the
+    // NativeAssign engine and model predict share one nearest-centroid
+    // scan) — identical bits to `predict` on the training rows. On the
+    // native engine this equals the K-means assignment; under the f32
+    // XLA assign engine it overrides borderline rounding so the
+    // train-predict == fit-labels contract holds for every engine.
+    let labels: Vec<usize> = timer.time("embed", || {
+        let (lab, _) = NativeAssign.assign(&emb, &model.centroids);
+        lab.into_iter().map(|l| l as usize).collect()
+    });
+    let output = ClusterOutput {
         labels,
         timer,
         info: MethodInfo {
             feature_dim,
-            svd: Some(svd.stats),
+            svd: Some(stats),
             kappa: Some(kappa),
             inertia: km.inertia,
         },
-    }
+    };
+    Ok(FitResult { model: Box::new(model), output })
 }
 
 /// Convenience wrapper used by the quickstart/docs: owns a config and runs
@@ -75,9 +142,15 @@ impl ScRb {
         ScRb { cfg }
     }
 
-    pub fn run(&self, x: &Mat) -> ClusterOutput {
+    /// Fit on `x`: training clustering + serving model.
+    pub fn fit(&self, x: &Mat) -> Result<FitResult, ScrbError> {
         let env = Env::new(self.cfg.clone());
-        run(&env, x)
+        fit(&env, x)
+    }
+
+    /// Batch convenience: fit and return only the training output.
+    pub fn run(&self, x: &Mat) -> Result<ClusterOutput, ScrbError> {
+        Ok(self.fit(x)?.output)
     }
 }
 
@@ -91,12 +164,13 @@ mod tests {
     fn separates_two_moons() {
         // the signature SC-beats-KMeans case
         let ds = synth::two_moons(600, 0.05, 3);
-        let mut cfg = PipelineConfig::default();
-        cfg.k = 2;
-        cfg.r = 256;
-        cfg.kernel = crate::config::Kernel::Laplacian { sigma: 0.15 };
-        cfg.kmeans_replicates = 5;
-        let out = ScRb::new(cfg).run(&ds.x);
+        let cfg = PipelineConfig::builder()
+            .k(2)
+            .r(256)
+            .kernel(crate::config::Kernel::Laplacian { sigma: 0.15 })
+            .kmeans_replicates(5)
+            .build();
+        let out = ScRb::new(cfg).run(&ds.x).unwrap();
         let acc = accuracy(&out.labels, &ds.y);
         assert!(acc > 0.9, "SC_RB accuracy on two moons: {acc}");
         assert!(out.info.kappa.unwrap() >= 1.0);
@@ -107,12 +181,13 @@ mod tests {
     #[test]
     fn recovers_blobs_with_high_accuracy() {
         let ds = synth::gaussian_blobs(400, 4, 3, 8.0, 5);
-        let mut cfg = PipelineConfig::default();
-        cfg.k = 3;
-        cfg.r = 128;
-        cfg.kernel = crate::config::Kernel::Laplacian { sigma: 0.8 };
-        cfg.kmeans_replicates = 5;
-        let out = ScRb::new(cfg).run(&ds.x);
+        let cfg = PipelineConfig::builder()
+            .k(3)
+            .r(128)
+            .kernel(crate::config::Kernel::Laplacian { sigma: 0.8 })
+            .kmeans_replicates(5)
+            .build();
+        let out = ScRb::new(cfg).run(&ds.x).unwrap();
         let acc = accuracy(&out.labels, &ds.y);
         assert!(acc > 0.95, "SC_RB accuracy on blobs: {acc}");
     }
@@ -121,15 +196,45 @@ mod tests {
     fn works_with_both_solvers() {
         let ds = synth::gaussian_blobs(200, 3, 2, 8.0, 7);
         for solver in [crate::config::Solver::Davidson, crate::config::Solver::Lanczos] {
-            let mut cfg = PipelineConfig::default();
-            cfg.k = 2;
-            cfg.r = 64;
-            cfg.solver = solver;
-            cfg.kernel = crate::config::Kernel::Laplacian { sigma: 0.5 };
-            cfg.kmeans_replicates = 3;
-            let out = ScRb::new(cfg).run(&ds.x);
+            let cfg = PipelineConfig::builder()
+                .k(2)
+                .r(64)
+                .solver(solver)
+                .kernel(crate::config::Kernel::Laplacian { sigma: 0.5 })
+                .kmeans_replicates(3)
+                .build();
+            let out = ScRb::new(cfg).run(&ds.x).unwrap();
             let acc = accuracy(&out.labels, &ds.y);
             assert!(acc > 0.9, "{solver:?} accuracy {acc}");
         }
+    }
+
+    #[test]
+    fn fit_exposes_consistent_model_shape() {
+        let ds = synth::gaussian_blobs(150, 3, 3, 8.0, 9);
+        let cfg = PipelineConfig::builder()
+            .k(3)
+            .r(32)
+            .kernel(crate::config::Kernel::Laplacian { sigma: 0.6 })
+            .kmeans_replicates(2)
+            .build();
+        let fitted = ScRb::new(cfg).fit(&ds.x).unwrap();
+        use crate::model::FittedModel;
+        assert_eq!(fitted.model.n_clusters(), 3);
+        assert_eq!(fitted.model.input_dim(), 3);
+        assert_eq!(fitted.output.labels.len(), 150);
+        let emb = fitted.model.transform(&ds.x).unwrap();
+        assert_eq!((emb.rows, emb.cols), (150, 3));
+        // embedding rows are unit-normalized (or zero)
+        for i in 0..emb.rows {
+            let n2: f64 = emb.row(i).iter().map(|v| v * v).sum();
+            assert!((n2 - 1.0).abs() < 1e-9 || n2 == 0.0, "row {i} norm² {n2}");
+        }
+    }
+
+    #[test]
+    fn empty_input_is_an_error() {
+        let cfg = PipelineConfig::builder().k(2).r(8).build();
+        assert!(ScRb::new(cfg).fit(&Mat::zeros(0, 3)).is_err());
     }
 }

@@ -2,10 +2,17 @@
 //! approximate the *normalized Laplacian* with RF features (degree
 //! normalization + top-K left singular vectors of Ẑ), then K-means.
 //! The direct convergence-rate competitor to SC_RB in Fig. 2.
+//!
+//! Serving: transductive — the fitted model is the input-space class-mean
+//! fallback ([`crate::model::CentroidModel`]). (Unlike RB, the RF degree
+//! normalization does not cancel under row normalization per point, so an
+//! exact projection-based extension is not available here.)
 
 use super::method::{embed_and_cluster, ClusterOutput, Env, MethodInfo};
 use crate::eigen::{svds, SvdsOpts};
+use crate::error::ScrbError;
 use crate::linalg::Mat;
+use crate::model::{CentroidModel, FitResult};
 use crate::rf::RfMap;
 use crate::util::timer::StageTimer;
 
@@ -46,7 +53,7 @@ pub(super) fn normalize_dense_by_degree(z: &mut Mat) {
     }
 }
 
-pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
+pub fn fit(env: &Env, x: &Mat) -> Result<FitResult, ScrbError> {
     let cfg = &env.cfg;
     let mut timer = StageTimer::new();
     let mut z = timer.time("rf_features", || rf_matrix(env, x));
@@ -59,7 +66,8 @@ pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
     let svd = timer.time("svd", || svds(&z, &opts, cfg.seed ^ 0x5cf5));
 
     let (labels, km) = embed_and_cluster(svd.u, env, &mut timer, true);
-    ClusterOutput {
+    let model = CentroidModel::from_labels(x, &labels, cfg.k);
+    let output = ClusterOutput {
         labels,
         timer,
         info: MethodInfo {
@@ -68,7 +76,8 @@ pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
             kappa: None,
             inertia: km.inertia,
         },
-    }
+    };
+    Ok(FitResult { model: Box::new(model), output })
 }
 
 #[cfg(test)]
@@ -81,14 +90,15 @@ mod tests {
     #[test]
     fn clusters_blobs() {
         let ds = synth::gaussian_blobs(300, 4, 3, 9.0, 17);
-        let mut cfg = PipelineConfig::default();
-        cfg.k = 3;
         // R large enough that RF noise (~1/√R) sits well under the
         // within-cluster kernel value — the regime Fig. 2 converges in.
-        cfg.r = 512;
-        cfg.kernel = Kernel::Gaussian { sigma: 1.2 };
-        cfg.kmeans_replicates = 5;
-        let out = run(&Env::new(cfg), &ds.x);
+        let cfg = PipelineConfig::builder()
+            .k(3)
+            .r(512)
+            .kernel(Kernel::Gaussian { sigma: 1.2 })
+            .kmeans_replicates(5)
+            .build();
+        let out = fit(&Env::new(cfg), &ds.x).unwrap().output;
         let acc = accuracy(&out.labels, &ds.y);
         assert!(acc > 0.85, "SC_RF on blobs: {acc}");
     }

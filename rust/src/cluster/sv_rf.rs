@@ -1,14 +1,19 @@
 //! **SV_RF** [11] — fast kernel K-means on the top singular vectors of the
 //! RF feature matrix Z (approximating the similarity matrix W = ZZᵀ, *not*
 //! the normalized Laplacian — the distinction §5.2 highlights).
+//!
+//! Serving: transductive — the fitted model is the input-space class-mean
+//! fallback ([`crate::model::CentroidModel`]).
 
 use super::method::{embed_and_cluster, ClusterOutput, Env, MethodInfo};
 use super::sc_rf::rf_matrix;
 use crate::eigen::{svds, SvdsOpts};
+use crate::error::ScrbError;
 use crate::linalg::Mat;
+use crate::model::{CentroidModel, FitResult};
 use crate::util::timer::StageTimer;
 
-pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
+pub fn fit(env: &Env, x: &Mat) -> Result<FitResult, ScrbError> {
     let cfg = &env.cfg;
     let mut timer = StageTimer::new();
     let z = timer.time("rf_features", || rf_matrix(env, x));
@@ -28,7 +33,8 @@ pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
         }
     }
     let (labels, km) = embed_and_cluster(scores, env, &mut timer, false);
-    ClusterOutput {
+    let model = CentroidModel::from_labels(x, &labels, cfg.k);
+    let output = ClusterOutput {
         labels,
         timer,
         info: MethodInfo {
@@ -37,7 +43,8 @@ pub fn run(env: &Env, x: &Mat) -> ClusterOutput {
             kappa: None,
             inertia: km.inertia,
         },
-    }
+    };
+    Ok(FitResult { model: Box::new(model), output })
 }
 
 #[cfg(test)]
@@ -50,12 +57,13 @@ mod tests {
     #[test]
     fn clusters_blobs() {
         let ds = synth::gaussian_blobs(300, 4, 3, 9.0, 19);
-        let mut cfg = PipelineConfig::default();
-        cfg.k = 3;
-        cfg.r = 512;
-        cfg.kernel = Kernel::Gaussian { sigma: 1.2 };
-        cfg.kmeans_replicates = 5;
-        let out = run(&Env::new(cfg), &ds.x);
+        let cfg = PipelineConfig::builder()
+            .k(3)
+            .r(512)
+            .kernel(Kernel::Gaussian { sigma: 1.2 })
+            .kmeans_replicates(5)
+            .build();
+        let out = fit(&Env::new(cfg), &ds.x).unwrap().output;
         let acc = accuracy(&out.labels, &ds.y);
         assert!(acc > 0.85, "SV_RF on blobs: {acc}");
     }

@@ -2,8 +2,20 @@
 //!
 //! Configs come from (lowest to highest precedence): built-in defaults, an
 //! optional `key = value` config file (`--config path`), then CLI options.
+//! Programmatic callers use the fluent [`PipelineConfig::builder`]:
+//!
+//! ```
+//! use scrb::config::{Kernel, PipelineConfig};
+//! let cfg = PipelineConfig::builder()
+//!     .k(2)
+//!     .r(256)
+//!     .kernel(Kernel::Laplacian { sigma: 0.15 })
+//!     .build();
+//! assert_eq!(cfg.k, 2);
+//! ```
 
 use crate::cli::Args;
+use crate::error::ScrbError;
 use std::collections::BTreeMap;
 use std::fmt;
 
@@ -38,11 +50,11 @@ impl Kernel {
         }
     }
 
-    pub fn parse(name: &str, sigma: f64) -> Result<Kernel, String> {
+    pub fn parse(name: &str, sigma: f64) -> Result<Kernel, ScrbError> {
         match name {
             "laplacian" | "lap" | "l1" => Ok(Kernel::Laplacian { sigma }),
             "gaussian" | "rbf" | "l2" => Ok(Kernel::Gaussian { sigma }),
-            other => Err(format!("unknown kernel '{other}' (laplacian|gaussian)")),
+            other => Err(ScrbError::config(format!("unknown kernel '{other}' (laplacian|gaussian)"))),
         }
     }
 }
@@ -57,11 +69,11 @@ pub enum Solver {
 }
 
 impl Solver {
-    pub fn parse(s: &str) -> Result<Solver, String> {
+    pub fn parse(s: &str) -> Result<Solver, ScrbError> {
         match s {
             "davidson" | "primme" | "gd+k" => Ok(Solver::Davidson),
             "lanczos" | "svds" | "lbd" => Ok(Solver::Lanczos),
-            other => Err(format!("unknown solver '{other}' (davidson|lanczos)")),
+            other => Err(ScrbError::config(format!("unknown solver '{other}' (davidson|lanczos)"))),
         }
     }
 
@@ -83,12 +95,12 @@ pub enum Engine {
 }
 
 impl Engine {
-    pub fn parse(s: &str) -> Result<Engine, String> {
+    pub fn parse(s: &str) -> Result<Engine, ScrbError> {
         match s {
             "native" => Ok(Engine::Native),
             "xla" => Ok(Engine::Xla),
             "auto" => Ok(Engine::Auto),
-            other => Err(format!("unknown engine '{other}' (native|xla|auto)")),
+            other => Err(ScrbError::config(format!("unknown engine '{other}' (native|xla|auto)"))),
         }
     }
 
@@ -143,16 +155,22 @@ impl Default for PipelineConfig {
 }
 
 impl PipelineConfig {
+    /// Start a fluent builder seeded with the defaults:
+    /// `PipelineConfig::builder().k(2).r(256).build()`.
+    pub fn builder() -> PipelineConfigBuilder {
+        PipelineConfigBuilder::default()
+    }
+
     /// Apply a parsed `key = value` map (config file layer).
-    pub fn apply_map(&mut self, map: &BTreeMap<String, String>) -> Result<(), String> {
+    pub fn apply_map(&mut self, map: &BTreeMap<String, String>) -> Result<(), ScrbError> {
         for (k, v) in map {
             self.apply_kv(k, v)?;
         }
         Ok(())
     }
 
-    fn apply_kv(&mut self, key: &str, val: &str) -> Result<(), String> {
-        let bad = |k: &str, v: &str| format!("config: bad value '{v}' for '{k}'");
+    fn apply_kv(&mut self, key: &str, val: &str) -> Result<(), ScrbError> {
+        let bad = |k: &str, v: &str| ScrbError::config(format!("config: bad value '{v}' for '{k}'"));
         match key {
             "k" => self.k = val.parse().map_err(|_| bad(key, val))?,
             "r" => self.r = val.parse().map_err(|_| bad(key, val))?,
@@ -172,16 +190,15 @@ impl PipelineConfig {
             "svd_max_iters" => self.svd_max_iters = val.parse().map_err(|_| bad(key, val))?,
             "artifacts_dir" => self.artifacts_dir = val.to_string(),
             "verbose" => self.verbose = val.parse().map_err(|_| bad(key, val))?,
-            other => return Err(format!("config: unknown key '{other}'")),
+            other => return Err(ScrbError::config(format!("config: unknown key '{other}'"))),
         }
         Ok(())
     }
 
     /// Apply CLI options (highest precedence).
-    pub fn apply_args(&mut self, args: &Args) -> Result<(), String> {
+    pub fn apply_args(&mut self, args: &Args) -> Result<(), ScrbError> {
         if let Some(path) = args.get("config") {
-            let text = std::fs::read_to_string(path)
-                .map_err(|e| format!("cannot read config '{path}': {e}"))?;
+            let text = std::fs::read_to_string(path).map_err(|e| ScrbError::io(path, e))?;
             self.apply_map(&parse_kv_file(&text)?)?;
         }
         for key in [
@@ -225,18 +242,101 @@ impl fmt::Display for PipelineConfig {
     }
 }
 
+/// Fluent builder for [`PipelineConfig`], seeded with the defaults. Each
+/// setter consumes and returns the builder, so configs assemble in one
+/// expression instead of the mutate-a-default pattern.
+#[derive(Clone, Debug, Default)]
+pub struct PipelineConfigBuilder {
+    cfg: PipelineConfig,
+}
+
+impl PipelineConfigBuilder {
+    /// Number of clusters K.
+    pub fn k(mut self, k: usize) -> Self {
+        self.cfg.k = k;
+        self
+    }
+
+    /// Number of RB grids / RF features / landmarks R.
+    pub fn r(mut self, r: usize) -> Self {
+        self.cfg.r = r;
+        self
+    }
+
+    /// Similarity kernel (kind + bandwidth).
+    pub fn kernel(mut self, kernel: Kernel) -> Self {
+        self.cfg.kernel = kernel;
+        self
+    }
+
+    /// Kernel bandwidth, keeping the current kernel kind.
+    pub fn sigma(mut self, sigma: f64) -> Self {
+        self.cfg.kernel = self.cfg.kernel.with_sigma(sigma);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    pub fn solver(mut self, solver: Solver) -> Self {
+        self.cfg.solver = solver;
+        self
+    }
+
+    pub fn engine(mut self, engine: Engine) -> Self {
+        self.cfg.engine = engine;
+        self
+    }
+
+    pub fn kmeans_replicates(mut self, n: usize) -> Self {
+        self.cfg.kmeans_replicates = n;
+        self
+    }
+
+    pub fn kmeans_max_iters(mut self, n: usize) -> Self {
+        self.cfg.kmeans_max_iters = n;
+        self
+    }
+
+    pub fn svd_tol(mut self, tol: f64) -> Self {
+        self.cfg.svd_tol = tol;
+        self
+    }
+
+    pub fn svd_max_iters(mut self, n: usize) -> Self {
+        self.cfg.svd_max_iters = n;
+        self
+    }
+
+    pub fn artifacts_dir(mut self, dir: impl Into<String>) -> Self {
+        self.cfg.artifacts_dir = dir.into();
+        self
+    }
+
+    pub fn verbose(mut self, verbose: bool) -> Self {
+        self.cfg.verbose = verbose;
+        self
+    }
+
+    pub fn build(self) -> PipelineConfig {
+        self.cfg
+    }
+}
+
 /// Parse a `key = value` config file (TOML-subset: comments with '#',
 /// blank lines ignored, no sections).
-pub fn parse_kv_file(text: &str) -> Result<BTreeMap<String, String>, String> {
+pub fn parse_kv_file(text: &str) -> Result<BTreeMap<String, String>, ScrbError> {
     let mut map = BTreeMap::new();
     for (lineno, raw) in text.lines().enumerate() {
         let line = raw.split('#').next().unwrap_or("").trim();
         if line.is_empty() {
             continue;
         }
-        let (k, v) = line
-            .split_once('=')
-            .ok_or_else(|| format!("config line {}: expected key = value", lineno + 1))?;
+        let (k, v) = line.split_once('=').ok_or_else(|| {
+            ScrbError::parse(format!("config line {}: expected key = value", lineno + 1))
+        })?;
         let v = v.trim().trim_matches('"').trim_matches('\'');
         map.insert(k.trim().to_string(), v.to_string());
     }
@@ -266,6 +366,41 @@ mod tests {
         assert!(cfg.verbose);
         // untouched key keeps file value
         assert_eq!(cfg.kernel.sigma(), 2.0);
+    }
+
+    #[test]
+    fn builder_sets_every_field() {
+        let cfg = PipelineConfig::builder()
+            .k(7)
+            .r(512)
+            .kernel(Kernel::Gaussian { sigma: 2.0 })
+            .sigma(3.0)
+            .seed(9)
+            .solver(Solver::Lanczos)
+            .engine(Engine::Native)
+            .kmeans_replicates(4)
+            .kmeans_max_iters(55)
+            .svd_tol(1e-7)
+            .svd_max_iters(123)
+            .artifacts_dir("arts")
+            .verbose(true)
+            .build();
+        assert_eq!(cfg.k, 7);
+        assert_eq!(cfg.r, 512);
+        assert_eq!(cfg.kernel, Kernel::Gaussian { sigma: 3.0 });
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.solver, Solver::Lanczos);
+        assert_eq!(cfg.engine, Engine::Native);
+        assert_eq!(cfg.kmeans_replicates, 4);
+        assert_eq!(cfg.kmeans_max_iters, 55);
+        assert_eq!(cfg.svd_tol, 1e-7);
+        assert_eq!(cfg.svd_max_iters, 123);
+        assert_eq!(cfg.artifacts_dir, "arts");
+        assert!(cfg.verbose);
+        // untouched fields keep their defaults
+        let d = PipelineConfig::builder().build();
+        assert_eq!(d.k, PipelineConfig::default().k);
+        assert_eq!(d.r, PipelineConfig::default().r);
     }
 
     #[test]

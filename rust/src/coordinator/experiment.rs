@@ -4,6 +4,7 @@
 
 use super::{Coordinator, MethodRun};
 use crate::cluster::{Env, MethodKind};
+use crate::error::ScrbError;
 use crate::config::Solver;
 use crate::data::{synth, Dataset};
 use crate::eigen::{svds_ws, SolverWorkspace, SvdsOpts};
@@ -47,7 +48,7 @@ pub struct GridRow {
     pub ranks: Vec<f64>,
 }
 
-pub fn table2_3(coord: &Coordinator, datasets: &[String]) -> GridResult {
+pub fn table2_3(coord: &Coordinator, datasets: &[String]) -> Result<GridResult, ScrbError> {
     let mut rows = Vec::new();
     for name in datasets {
         let ds = dataset(coord, name);
@@ -61,7 +62,7 @@ pub fn table2_3(coord: &Coordinator, datasets: &[String]) -> GridResult {
                 runs.push(None);
                 continue;
             }
-            runs.push(Some(coord.run_method(kind, &ds, &cfg)));
+            runs.push(Some(coord.run_method(kind, &ds, &cfg)?));
         }
         // rank over the methods that ran; NaN keeps non-runners last
         let scores: Vec<crate::metrics::ClusterMetrics> = runs
@@ -83,7 +84,7 @@ pub fn table2_3(coord: &Coordinator, datasets: &[String]) -> GridResult {
         }
         rows.push(GridRow { name: ds.name.clone(), n: ds.n(), runs, ranks });
     }
-    GridResult { datasets: rows }
+    Ok(GridResult { datasets: rows })
 }
 
 // ------------------------------------------------------------------- Fig. 2
@@ -110,7 +111,11 @@ pub struct Fig2Result {
     pub exact_ref: Option<(usize, f64, f64)>,
 }
 
-pub fn fig2(coord: &Coordinator, rs: &[usize], rb_max_r: usize) -> Fig2Result {
+pub fn fig2(
+    coord: &Coordinator,
+    rs: &[usize],
+    rb_max_r: usize,
+) -> Result<Fig2Result, ScrbError> {
     let ds = dataset(coord, "mnist");
     let cfg0 = coord.cfg_for(&ds, None);
     let methods = [MethodKind::ScRb, MethodKind::ScRf, MethodKind::SvRf, MethodKind::KkRf];
@@ -124,30 +129,30 @@ pub fn fig2(coord: &Coordinator, rs: &[usize], rb_max_r: usize) -> Fig2Result {
             }
             let mut cfg = cfg0.clone();
             cfg.r = r;
-            let run = coord.run_method(kind, &ds, &cfg);
+            let run = coord.run_method(kind, &ds, &cfg)?;
             points.push(SeriesPoint { x: r as f64, acc: run.metrics.accuracy, secs: run.secs });
         }
         series.push(Series { label: kind.name().to_string(), points });
     }
     // exact SC reference on a feasible subset
     let exact_ref = if coord.exact_sc_feasible(ds.n()) {
-        let run = coord.run_method(MethodKind::ScExact, &ds, &cfg0);
+        let run = coord.run_method(MethodKind::ScExact, &ds, &cfg0)?;
         Some((ds.n(), run.metrics.accuracy, run.secs))
     } else {
         let mut small = ds.clone();
         small.truncate(8_000.min(ds.n()));
         let cfg = coord.cfg_for(&small, Some(cfg0.kernel.sigma()));
-        let run = coord.run_method(MethodKind::ScExact, &small, &cfg);
+        let run = coord.run_method(MethodKind::ScExact, &small, &cfg)?;
         Some((small.n(), run.metrics.accuracy, run.secs))
     };
-    Fig2Result { series, exact_ref }
+    Ok(Fig2Result { series, exact_ref })
 }
 
 // ------------------------------------------------------------------- Fig. 3
 
 /// Fig. 3: SC_RB accuracy + runtime vs R on covtype-like under the two SVD
 /// solvers (PRIMME-analogue Davidson vs Matlab-svds-analogue Lanczos).
-pub fn fig3(coord: &Coordinator, rs: &[usize]) -> Vec<Series> {
+pub fn fig3(coord: &Coordinator, rs: &[usize]) -> Result<Vec<Series>, ScrbError> {
     let ds = dataset(coord, "covtype-mult");
     let cfg0 = coord.cfg_for(&ds, None);
     let mut out = Vec::new();
@@ -159,12 +164,12 @@ pub fn fig3(coord: &Coordinator, rs: &[usize]) -> Vec<Series> {
             let mut cfg = cfg0.clone();
             cfg.r = r;
             cfg.solver = solver;
-            let run = coord.run_method(MethodKind::ScRb, &ds, &cfg);
+            let run = coord.run_method(MethodKind::ScRb, &ds, &cfg)?;
             points.push(SeriesPoint { x: r as f64, acc: run.metrics.accuracy, secs: run.secs });
         }
         out.push(Series { label: label.to_string(), points });
     }
-    out
+    Ok(out)
 }
 
 // ------------------------------------------------------------------- Fig. 4
@@ -175,6 +180,9 @@ pub struct ScalePoint {
     pub n: usize,
     pub rb_secs: f64,
     pub svd_secs: f64,
+    /// Serving-model preparation: Σ/V projection fold + the training-set
+    /// embedding/label pass (the fit-side half of the model API).
+    pub embed_secs: f64,
     pub kmeans_secs: f64,
     pub total_secs: f64,
     pub accuracy: f64,
@@ -182,7 +190,12 @@ pub struct ScalePoint {
 
 /// Fig. 4: SC_RB runtime decomposition while N sweeps (poker-like and
 /// susy-like), fixed R.
-pub fn fig4(coord: &Coordinator, dataset_name: &str, ns: &[usize], r: usize) -> Vec<ScalePoint> {
+pub fn fig4(
+    coord: &Coordinator,
+    dataset_name: &str,
+    ns: &[usize],
+    r: usize,
+) -> Result<Vec<ScalePoint>, ScrbError> {
     let spec = synth::spec_by_name(dataset_name).expect("unknown dataset");
     let mut out = Vec::new();
     for &n in ns {
@@ -191,7 +204,7 @@ pub fn fig4(coord: &Coordinator, dataset_name: &str, ns: &[usize], r: usize) -> 
         ds.truncate(n.min(ds.n()));
         let mut cfg = coord.cfg_for(&ds, None);
         cfg.r = r;
-        let run = coord.run_method(MethodKind::ScRb, &ds, &cfg);
+        let run = coord.run_method(MethodKind::ScRb, &ds, &cfg)?;
         let stage = |name: &str| {
             run.stages.iter().find(|(s, _)| s == name).map(|(_, t)| *t).unwrap_or(0.0)
         };
@@ -199,19 +212,24 @@ pub fn fig4(coord: &Coordinator, dataset_name: &str, ns: &[usize], r: usize) -> 
             n: ds.n(),
             rb_secs: stage("rb_features"),
             svd_secs: stage("svd") + stage("degrees"),
+            embed_secs: stage("projection") + stage("embed"),
             kmeans_secs: stage("kmeans"),
             total_secs: run.secs,
             accuracy: run.metrics.accuracy,
         });
     }
-    out
+    Ok(out)
 }
 
 // ------------------------------------------------------------------- Fig. 5
 
 /// Fig. 5: runtime vs R for all methods on one dataset (4 panels in the
 /// paper: pendigits, letter, mnist, acoustic).
-pub fn fig5(coord: &Coordinator, dataset_name: &str, rs: &[usize]) -> Vec<Series> {
+pub fn fig5(
+    coord: &Coordinator,
+    dataset_name: &str,
+    rs: &[usize],
+) -> Result<Vec<Series>, ScrbError> {
     let ds = dataset(coord, dataset_name);
     let cfg0 = coord.cfg_for(&ds, None);
     let mut out = Vec::new();
@@ -219,7 +237,7 @@ pub fn fig5(coord: &Coordinator, dataset_name: &str, rs: &[usize]) -> Vec<Series
         if kind == MethodKind::ScExact {
             // quadratic reference: run once (R-independent) if feasible
             if coord.exact_sc_feasible(ds.n()) {
-                let run = coord.run_method(kind, &ds, &cfg0);
+                let run = coord.run_method(kind, &ds, &cfg0)?;
                 let points = rs
                     .iter()
                     .map(|&r| SeriesPoint { x: r as f64, acc: run.metrics.accuracy, secs: run.secs })
@@ -232,12 +250,12 @@ pub fn fig5(coord: &Coordinator, dataset_name: &str, rs: &[usize]) -> Vec<Series
         for &r in rs {
             let mut cfg = cfg0.clone();
             cfg.r = r;
-            let run = coord.run_method(kind, &ds, &cfg);
+            let run = coord.run_method(kind, &ds, &cfg)?;
             points.push(SeriesPoint { x: r as f64, acc: run.metrics.accuracy, secs: run.secs });
         }
         out.push(Series { label: kind.name().to_string(), points });
     }
-    out
+    Ok(out)
 }
 
 // ----------------------------------------------------- Theorem 1/2 empirics
@@ -253,7 +271,11 @@ pub struct TheoryPoint {
     pub predicted_slope: f64,
 }
 
-pub fn theory_convergence(coord: &Coordinator, n: usize, rs: &[usize]) -> Vec<TheoryPoint> {
+pub fn theory_convergence(
+    coord: &Coordinator,
+    n: usize,
+    rs: &[usize],
+) -> Result<Vec<TheoryPoint>, ScrbError> {
     let mut ds = synth::gaussian_blobs(n, 4, 3, 6.0, coord.base_cfg.seed);
     ds.minmax_normalize();
     let cfg = coord.cfg_for(&ds, None);
@@ -307,7 +329,7 @@ pub fn theory_convergence(coord: &Coordinator, n: usize, rs: &[usize]) -> Vec<Th
         let gap = (objective(&u) - f_star).max(0.0);
         out.push(TheoryPoint { r, kappa, gap, predicted_slope: 1.0 / (kappa * r as f64) });
     }
-    out
+    Ok(out)
 }
 
 // -------------------------------------------------------------- single runs
@@ -318,7 +340,7 @@ pub fn single_run(
     method: MethodKind,
     ds: &Dataset,
     sigma_override: Option<f64>,
-) -> MethodRun {
+) -> Result<MethodRun, ScrbError> {
     let cfg = coord.cfg_for(ds, sigma_override);
     coord.run_method(method, ds, &cfg)
 }
@@ -327,14 +349,15 @@ pub fn single_run(
 /// a bare Env (no coordinator).
 pub fn smoke_run() -> f64 {
     let ds = synth::two_moons(400, 0.06, 3);
-    let mut cfg = crate::config::PipelineConfig::default();
-    cfg.k = 2;
-    cfg.r = 128;
-    cfg.kernel = crate::config::Kernel::Laplacian { sigma: 0.15 };
-    cfg.kmeans_replicates = 3;
+    let cfg = crate::config::PipelineConfig::builder()
+        .k(2)
+        .r(128)
+        .kernel(crate::config::Kernel::Laplacian { sigma: 0.15 })
+        .kmeans_replicates(3)
+        .build();
     let env = Env::new(cfg);
     let t0 = Instant::now();
-    let out = MethodKind::ScRb.run(&env, &ds.x);
+    let out = MethodKind::ScRb.run(&env, &ds.x).expect("SC_RB smoke run failed");
     let _ = t0.elapsed();
     crate::metrics::accuracy(&out.labels, &ds.y)
 }
@@ -345,18 +368,19 @@ mod tests {
     use crate::config::{Engine, PipelineConfig};
 
     fn quick_coord() -> Coordinator {
-        let mut cfg = PipelineConfig::default();
-        cfg.engine = Engine::Native;
-        cfg.r = 32;
-        cfg.kmeans_replicates = 2;
-        cfg.svd_max_iters = 2000;
+        let cfg = PipelineConfig::builder()
+            .engine(Engine::Native)
+            .r(32)
+            .kmeans_replicates(2)
+            .svd_max_iters(2000)
+            .build();
         Coordinator::new(cfg, 2048)
     }
 
     #[test]
     fn grid_runs_tiny() {
         let coord = quick_coord();
-        let grid = table2_3(&coord, &["pendigits".to_string()]);
+        let grid = table2_3(&coord, &["pendigits".to_string()]).unwrap();
         assert_eq!(grid.datasets.len(), 1);
         let row = &grid.datasets[0];
         assert_eq!(row.runs.len(), MethodKind::ALL.len());
@@ -371,7 +395,7 @@ mod tests {
     #[test]
     fn theory_gap_shrinks() {
         let coord = quick_coord();
-        let pts = theory_convergence(&coord, 150, &[8, 128]);
+        let pts = theory_convergence(&coord, 150, &[8, 128]).unwrap();
         assert_eq!(pts.len(), 2);
         assert!(
             pts[1].gap <= pts[0].gap + 1e-9,

@@ -10,6 +10,7 @@ pub mod report;
 use crate::cluster::{ClusterOutput, Env, MethodKind};
 use crate::config::{Engine, PipelineConfig};
 use crate::data::Dataset;
+use crate::error::ScrbError;
 use crate::kernels::median_heuristic_sigma;
 use crate::metrics::{all_metrics, ClusterMetrics};
 use crate::runtime::XlaRuntime;
@@ -75,10 +76,15 @@ impl Coordinator {
     }
 
     /// Run one method on one dataset and score it.
-    pub fn run_method(&self, kind: MethodKind, ds: &Dataset, cfg: &PipelineConfig) -> MethodRun {
+    pub fn run_method(
+        &self,
+        kind: MethodKind,
+        ds: &Dataset,
+        cfg: &PipelineConfig,
+    ) -> Result<MethodRun, ScrbError> {
         let env = Env::with_xla(cfg.clone(), self.xla.as_ref());
         let t0 = Instant::now();
-        let out: ClusterOutput = kind.run(&env, &ds.x);
+        let out: ClusterOutput = kind.run(&env, &ds.x)?;
         let secs = t0.elapsed().as_secs_f64();
         let metrics = all_metrics(&out.labels, &ds.y);
         if self.verbose {
@@ -94,7 +100,7 @@ impl Coordinator {
                 out.timer.summary()
             );
         }
-        MethodRun {
+        Ok(MethodRun {
             method: kind,
             dataset: ds.name.clone(),
             n: ds.n(),
@@ -111,7 +117,7 @@ impl Coordinator {
             svd_matvecs: out.info.svd.as_ref().map(|s| s.matvecs).unwrap_or(0),
             svd_converged: out.info.svd.as_ref().map(|s| s.converged).unwrap_or(true),
             kappa: out.info.kappa,
-        }
+        })
     }
 
     /// Whether exact SC is feasible for this size (paper reports "−" above
@@ -170,16 +176,17 @@ mod tests {
 
     #[test]
     fn coordinator_runs_a_method() {
-        let mut cfg = PipelineConfig::default();
-        cfg.engine = Engine::Native;
-        cfg.r = 64;
-        cfg.kmeans_replicates = 2;
+        let cfg = PipelineConfig::builder()
+            .engine(Engine::Native)
+            .r(64)
+            .kmeans_replicates(2)
+            .build();
         let coord = Coordinator::new(cfg, 1);
         let ds = synth::gaussian_blobs(200, 3, 3, 8.0, 3);
         let dcfg = coord.cfg_for(&ds, None);
         assert_eq!(dcfg.k, 3);
         assert!(dcfg.kernel.sigma() > 0.0);
-        let run = coord.run_method(MethodKind::ScRb, &ds, &dcfg);
+        let run = coord.run_method(MethodKind::ScRb, &ds, &dcfg).unwrap();
         assert_eq!(run.n, 200);
         assert!(run.metrics.accuracy > 0.5);
         assert!(run.secs > 0.0);

@@ -123,12 +123,13 @@ pub fn render_fig2(fig: &Fig2Result) -> String {
 
 pub fn render_fig4(dataset: &str, points: &[ScalePoint]) -> String {
     let mut out = format!("== Fig. 4: SC_RB scalability in N ({dataset}) ==\n");
-    let mut t = Table::new(vec!["N", "RB(s)", "SVD(s)", "KMeans(s)", "Total(s)", "Acc"]);
+    let mut t = Table::new(vec!["N", "RB(s)", "SVD(s)", "Embed(s)", "KMeans(s)", "Total(s)", "Acc"]);
     for p in points {
         t.row(vec![
             p.n.to_string(),
             fnum(p.rb_secs),
             fnum(p.svd_secs),
+            fnum(p.embed_secs),
             fnum(p.kmeans_secs),
             fnum(p.total_secs),
             format!("{:.3}", p.accuracy),

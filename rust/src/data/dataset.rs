@@ -30,14 +30,13 @@ impl Dataset {
         self.x.cols
     }
 
-    /// Min-max scale every dimension to [0, 1] (constant dims collapse to
-    /// 0). Standard preprocessing before kernel methods — bin widths and
-    /// bandwidths then live on a comparable scale across datasets.
-    pub fn minmax_normalize(&mut self) {
+    /// Per-dimension min-max parameters of the current rows: `(min, span)`
+    /// with span 1.0 for constant dimensions — exactly what
+    /// [`Dataset::minmax_normalize`] applies. Callers that fit a serving
+    /// model keep these (the fitted frame) so out-of-sample batches can be
+    /// normalized **by the training statistics**, not their own.
+    pub fn minmax_params(&self) -> (Vec<f64>, Vec<f64>) {
         let (n, d) = (self.x.rows, self.x.cols);
-        if n == 0 {
-            return;
-        }
         let mut lo = vec![f64::INFINITY; d];
         let mut hi = vec![f64::NEG_INFINITY; d];
         for i in 0..n {
@@ -48,12 +47,31 @@ impl Dataset {
         }
         let span: Vec<f64> =
             lo.iter().zip(hi.iter()).map(|(&l, &h)| if h > l { h - l } else { 1.0 }).collect();
+        (lo, span)
+    }
+
+    /// Apply an explicit min-max frame: `x[i][j] ← (x[i][j] − lo[j]) / span[j]`.
+    pub fn apply_minmax(&mut self, lo: &[f64], span: &[f64]) {
+        let (n, d) = (self.x.rows, self.x.cols);
+        assert_eq!(lo.len(), d, "one min per dimension");
+        assert_eq!(span.len(), d, "one span per dimension");
         for i in 0..n {
             let row = self.x.row_mut(i);
             for j in 0..d {
                 row[j] = (row[j] - lo[j]) / span[j];
             }
         }
+    }
+
+    /// Min-max scale every dimension to [0, 1] (constant dims collapse to
+    /// 0). Standard preprocessing before kernel methods — bin widths and
+    /// bandwidths then live on a comparable scale across datasets.
+    pub fn minmax_normalize(&mut self) {
+        if self.x.rows == 0 {
+            return;
+        }
+        let (lo, span) = self.minmax_params();
+        self.apply_minmax(&lo, &span);
     }
 
     /// Shuffle rows (and labels) in place.

@@ -1,46 +1,56 @@
 //! LibSVM-format dataset parser, so the real Table 1 benchmarks drop in
-//! when their files are available (`scrb run --data path.libsvm`).
+//! when their files are available (`scrb run --data path.libsvm`, and the
+//! `fit`/`predict` serving commands). Malformed lines surface as typed
+//! [`ScrbError::Parse`] values — one clean line at the CLI, never an
+//! abort.
 //!
 //! Format per line: `<label> <index>:<value> <index>:<value> ...`
 //! Indices are 1-based and may be sparse; labels may be arbitrary
 //! integers/floats (compacted to 0..K−1 in first-seen sorted order).
 
 use super::dataset::Dataset;
+use crate::error::ScrbError;
 use crate::linalg::Mat;
 use std::collections::BTreeMap;
 use std::io::BufRead;
 
 /// Parse a LibSVM text stream.
-pub fn parse_libsvm<R: BufRead>(reader: R, name: &str) -> Result<Dataset, String> {
+pub fn parse_libsvm<R: BufRead>(reader: R, name: &str) -> Result<Dataset, ScrbError> {
     let mut raw_rows: Vec<Vec<(usize, f64)>> = Vec::new();
     let mut raw_labels: Vec<i64> = Vec::new();
     let mut max_dim = 0usize;
     for (lineno, line) in reader.lines().enumerate() {
-        let line = line.map_err(|e| format!("read error at line {}: {e}", lineno + 1))?;
+        let line =
+            line.map_err(|e| ScrbError::parse(format!("read error at line {}: {e}", lineno + 1)))?;
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
         let mut parts = line.split_whitespace();
-        let label_tok = parts.next().ok_or_else(|| format!("line {}: empty", lineno + 1))?;
+        let label_tok = parts
+            .next()
+            .ok_or_else(|| ScrbError::parse(format!("line {}: empty", lineno + 1)))?;
         let label = label_tok
             .parse::<f64>()
-            .map_err(|_| format!("line {}: bad label '{label_tok}'", lineno + 1))?
+            .map_err(|_| ScrbError::parse(format!("line {}: bad label '{label_tok}'", lineno + 1)))?
             as i64;
         let mut feats = Vec::new();
         for tok in parts {
             let (is, vs) = tok
                 .split_once(':')
-                .ok_or_else(|| format!("line {}: bad feature '{tok}'", lineno + 1))?;
+                .ok_or_else(|| ScrbError::parse(format!("line {}: bad feature '{tok}'", lineno + 1)))?;
             let idx: usize = is
                 .parse()
-                .map_err(|_| format!("line {}: bad index '{is}'", lineno + 1))?;
+                .map_err(|_| ScrbError::parse(format!("line {}: bad index '{is}'", lineno + 1)))?;
             if idx == 0 {
-                return Err(format!("line {}: LibSVM indices are 1-based", lineno + 1));
+                return Err(ScrbError::parse(format!(
+                    "line {}: LibSVM indices are 1-based",
+                    lineno + 1
+                )));
             }
             let val: f64 = vs
                 .parse()
-                .map_err(|_| format!("line {}: bad value '{vs}'", lineno + 1))?;
+                .map_err(|_| ScrbError::parse(format!("line {}: bad value '{vs}'", lineno + 1)))?;
             max_dim = max_dim.max(idx);
             feats.push((idx - 1, val));
         }
@@ -48,7 +58,7 @@ pub fn parse_libsvm<R: BufRead>(reader: R, name: &str) -> Result<Dataset, String
         raw_labels.push(label);
     }
     if raw_rows.is_empty() {
-        return Err("empty dataset".to_string());
+        return Err(ScrbError::invalid_input("empty dataset"));
     }
     // compact labels
     let uniq: BTreeMap<i64, usize> = {
@@ -69,8 +79,8 @@ pub fn parse_libsvm<R: BufRead>(reader: R, name: &str) -> Result<Dataset, String
 }
 
 /// Load a LibSVM file from disk.
-pub fn load_libsvm(path: &str) -> Result<Dataset, String> {
-    let file = std::fs::File::open(path).map_err(|e| format!("cannot open '{path}': {e}"))?;
+pub fn load_libsvm(path: &str) -> Result<Dataset, ScrbError> {
+    let file = std::fs::File::open(path).map_err(|e| ScrbError::io(path, e))?;
     let name = std::path::Path::new(path)
         .file_stem()
         .map(|s| s.to_string_lossy().to_string())

@@ -1,0 +1,125 @@
+//! Crate-wide error type: every fallible API surface (model fit/predict,
+//! persistence, dataset loading, configuration, CLI dispatch) reports a
+//! [`ScrbError`] instead of panicking or returning bare `String`s, so a
+//! malformed LibSVM line or a missing model file is a clean one-line error
+//! at the CLI and a typed, matchable value in library callers.
+
+use std::fmt;
+
+/// The error type of the `scrb` crate.
+#[derive(Debug)]
+pub enum ScrbError {
+    /// Filesystem access failed; carries the offending path.
+    Io { path: String, source: std::io::Error },
+    /// Malformed input data (LibSVM lines, numeric fields, …).
+    Parse(String),
+    /// Bad configuration, CLI usage, or unknown names.
+    Config(String),
+    /// Model persistence failure: bad magic, unsupported version,
+    /// truncated or corrupt payload.
+    Model(String),
+    /// An API input violates a shape/domain precondition (dimension
+    /// mismatch, size cap, empty data).
+    InvalidInput(String),
+    /// The operation is not supported by this method/model (e.g. a
+    /// spectral embedding for a transductive baseline).
+    Unsupported(String),
+}
+
+impl ScrbError {
+    pub fn io(path: impl Into<String>, source: std::io::Error) -> ScrbError {
+        ScrbError::Io { path: path.into(), source }
+    }
+
+    pub fn parse(msg: impl Into<String>) -> ScrbError {
+        ScrbError::Parse(msg.into())
+    }
+
+    pub fn config(msg: impl Into<String>) -> ScrbError {
+        ScrbError::Config(msg.into())
+    }
+
+    pub fn model(msg: impl Into<String>) -> ScrbError {
+        ScrbError::Model(msg.into())
+    }
+
+    pub fn invalid_input(msg: impl Into<String>) -> ScrbError {
+        ScrbError::InvalidInput(msg.into())
+    }
+
+    pub fn unsupported(msg: impl Into<String>) -> ScrbError {
+        ScrbError::Unsupported(msg.into())
+    }
+}
+
+impl fmt::Display for ScrbError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ScrbError::Io { path, source } => write!(f, "cannot access '{path}': {source}"),
+            ScrbError::Parse(m) => write!(f, "parse error: {m}"),
+            ScrbError::Config(m) => write!(f, "{m}"),
+            ScrbError::Model(m) => write!(f, "model error: {m}"),
+            ScrbError::InvalidInput(m) => write!(f, "invalid input: {m}"),
+            ScrbError::Unsupported(m) => write!(f, "unsupported: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ScrbError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ScrbError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+/// Bridge for the crate's older `Result<_, String>` helpers (config file
+/// parsing, enum `parse` functions): a bare message is a config error.
+impl From<String> for ScrbError {
+    fn from(msg: String) -> ScrbError {
+        ScrbError::Config(msg)
+    }
+}
+
+impl From<&str> for ScrbError {
+    fn from(msg: &str) -> ScrbError {
+        ScrbError::Config(msg.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_one_line() {
+        let cases: Vec<ScrbError> = vec![
+            ScrbError::io("/no/such", std::io::Error::new(std::io::ErrorKind::NotFound, "gone")),
+            ScrbError::parse("line 3: bad label 'x'"),
+            ScrbError::config("unknown key 'nope'"),
+            ScrbError::model("bad magic"),
+            ScrbError::invalid_input("expected 16 features, got 3"),
+            ScrbError::unsupported("no spectral embedding"),
+        ];
+        for e in cases {
+            let s = e.to_string();
+            assert!(!s.is_empty() && !s.contains('\n'), "{s:?}");
+        }
+    }
+
+    #[test]
+    fn string_bridge_maps_to_config() {
+        let e: ScrbError = String::from("bad value").into();
+        assert!(matches!(e, ScrbError::Config(_)));
+        let e: ScrbError = "bad value".into();
+        assert!(matches!(e, ScrbError::Config(_)));
+    }
+
+    #[test]
+    fn io_source_is_chained() {
+        use std::error::Error;
+        let e = ScrbError::io("p", std::io::Error::other("x"));
+        assert!(e.source().is_some());
+    }
+}

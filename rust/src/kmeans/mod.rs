@@ -19,30 +19,38 @@ pub trait AssignEngine {
     }
 }
 
+/// Nearest centroid of `xi`: (index, squared distance). Ties go to the
+/// lowest index. This is **the** argmin: the native assignment engine and
+/// the serving models (`model::FittedModel::predict*`) both route through
+/// it, so fit-time assignment and serve-time prediction cannot drift
+/// apart behaviorally.
+#[inline]
+pub fn nearest_centroid(xi: &[f64], centroids: &Mat) -> (u32, f64) {
+    let mut best = 0u32;
+    let mut bd = f64::INFINITY;
+    for c in 0..centroids.rows {
+        let d = sqdist(xi, centroids.row(c));
+        if d < bd {
+            bd = d;
+            best = c as u32;
+        }
+    }
+    (best, bd)
+}
+
 /// Threaded pure-Rust assignment.
 pub struct NativeAssign;
 
 impl AssignEngine for NativeAssign {
     fn assign(&self, x: &Mat, centroids: &Mat) -> (Vec<u32>, Vec<f64>) {
         let n = x.rows;
-        let k = centroids.rows;
         let mut labels = vec![0u32; n];
         let mut dists = vec![0.0f64; n];
         // process rows in parallel; labels+dists written via zipped panels
         let mut fused: Vec<(u32, f64)> = vec![(0, 0.0); n];
         parallel_rows_mut(&mut fused, 1, |row0, chunk| {
             for (t, slot) in chunk.iter_mut().enumerate() {
-                let xi = x.row(row0 + t);
-                let mut best = 0u32;
-                let mut bd = f64::INFINITY;
-                for c in 0..k {
-                    let d = sqdist(xi, centroids.row(c));
-                    if d < bd {
-                        bd = d;
-                        best = c as u32;
-                    }
-                }
-                *slot = (best, bd);
+                *slot = nearest_centroid(x.row(row0 + t), centroids);
             }
         });
         for (i, (l, d)) in fused.into_iter().enumerate() {

@@ -6,9 +6,10 @@
 //! The crate is the Layer-3 Rust coordinator of a three-layer stack:
 //! - **L3 (this crate)**: the full clustering framework — RB feature
 //!   generation, implicit-Laplacian sparse algebra, PRIMME-style iterative
-//!   SVD, K-means, eight baseline methods, metrics, datasets, and the
+//!   SVD, K-means, eight baseline methods, metrics, datasets, the
 //!   experiment coordinator that regenerates every table and figure of the
-//!   paper.
+//!   paper, and the [`model`] layer (fit / transform / predict with model
+//!   persistence) that turns the batch pipeline into a serving system.
 //! - **L2 (python/compile/model.py)**: JAX compute graphs for the dense hot
 //!   spots (K-means assignment, exact kernel blocks, RF feature maps).
 //! - **L1 (python/compile/kernels/)**: Pallas kernels implementing those
@@ -33,33 +34,51 @@
 //! ## Quickstart
 //!
 //! ```no_run
-//! use scrb::cluster::{ScRb, Method};
+//! use scrb::cluster::ScRb;
 //! use scrb::config::PipelineConfig;
 //! use scrb::data::synth;
 //!
 //! let ds = synth::two_moons(2000, 0.06, 7);
-//! let mut cfg = PipelineConfig::default();
-//! cfg.k = 2;
-//! cfg.r = 128;
-//! let out = ScRb::new(cfg).run(&ds.x);
+//! let cfg = PipelineConfig::builder().k(2).r(128).build();
+//! let out = ScRb::new(cfg).run(&ds.x).expect("clustering failed");
 //! println!("labels: {:?}", &out.labels[..10]);
+//! ```
+//!
+//! ## Fit once, predict many (serving)
+//!
+//! ```no_run
+//! use scrb::cluster::ScRb;
+//! use scrb::config::PipelineConfig;
+//! use scrb::data::synth;
+//! use scrb::model::{FittedModel, ScRbModel, ServeWorkspace};
+//!
+//! let train = synth::two_moons(2000, 0.06, 7);
+//! let cfg = PipelineConfig::builder().k(2).r(128).build();
+//! let fitted = ScRb::new(cfg).fit(&train.x).expect("fit failed");
+//! fitted.model.save("moons.scrb").expect("save failed");
+//!
+//! // later / elsewhere: load and serve — no solver, no refit
+//! let model = ScRbModel::load("moons.scrb").expect("load failed");
+//! let fresh = synth::two_moons(100, 0.06, 99);
+//! let mut ws = ServeWorkspace::new();
+//! let mut labels = Vec::new();
+//! model.predict_batch(&fresh.x, &mut ws, &mut labels).expect("predict failed");
 //! ```
 
 // CI runs `cargo clippy --release -- -D warnings`. These idiom lints are
 // deliberately allowed: the numeric kernels use explicit-index loops where
-// the index IS the math (row/column/bin ids), config structs are built by
-// mutating a default (mirroring the CLI layering), and constructors with
+// the index IS the math (row/column/bin ids), and constructors with
 // domain-named zero-arg builders keep call sites self-documenting.
 #![allow(
     clippy::needless_range_loop,
     clippy::too_many_arguments,
     clippy::manual_memcpy,
-    clippy::field_reassign_with_default,
     clippy::type_complexity
 )]
 
 pub mod cli;
 pub mod config;
+pub mod error;
 pub mod linalg;
 pub mod sparse;
 pub mod util;
@@ -72,6 +91,7 @@ pub mod eigen;
 pub mod kernels;
 pub mod kmeans;
 pub mod metrics;
+pub mod model;
 pub mod rb;
 pub mod rf;
 pub mod runtime;

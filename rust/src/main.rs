@@ -2,7 +2,9 @@
 //!
 //! Commands:
 //!   scrb info                         environment + artifact status
-//!   scrb run <dataset> [opts]         one method on one benchmark
+//!   scrb run <dataset> [opts]         one method on one benchmark (batch)
+//!   scrb fit [dataset] --save m.scrb  fit SC_RB once, persist the model
+//!   scrb predict --model m.scrb ...   label new points with a saved model
 //!   scrb table <1|2|3> [opts]         regenerate a paper table
 //!   scrb fig <2|3|4|5|theory> [opts]  regenerate a paper figure's data
 //!
@@ -12,14 +14,18 @@
 //! --data path.libsvm (real data instead of the synthetic stand-in)
 
 // Same clippy posture as the library crate root (CI: -D warnings).
-#![allow(clippy::needless_range_loop, clippy::field_reassign_with_default)]
+#![allow(clippy::needless_range_loop)]
 
 use scrb::cli::Args;
-use scrb::cluster::MethodKind;
+use scrb::cluster::{Env, MethodKind};
 use scrb::config::PipelineConfig;
 use scrb::coordinator::{experiment, report, Coordinator};
 use scrb::data;
+use scrb::error::ScrbError;
+use scrb::metrics::all_metrics;
+use scrb::model::{FittedModel, ScRbModel, ServeWorkspace};
 use scrb::util::table::fnum;
+use std::time::Instant;
 
 fn main() {
     let args = match Args::from_env() {
@@ -35,7 +41,7 @@ fn main() {
     }
 }
 
-fn dispatch(args: &Args) -> Result<(), String> {
+fn dispatch(args: &Args) -> Result<(), ScrbError> {
     match args.command.as_str() {
         "" | "help" => {
             print_help();
@@ -43,9 +49,11 @@ fn dispatch(args: &Args) -> Result<(), String> {
         }
         "info" => cmd_info(args),
         "run" => cmd_run(args),
+        "fit" => cmd_fit(args),
+        "predict" => cmd_predict(args),
         "table" => cmd_table(args),
         "fig" => cmd_fig(args),
-        other => Err(format!("unknown command '{other}' (try: scrb help)")),
+        other => Err(ScrbError::config(format!("unknown command '{other}' (try: scrb help)"))),
     }
 }
 
@@ -56,6 +64,11 @@ fn print_help() {
          commands:\n\
          \x20 info                        environment + artifacts status\n\
          \x20 run <dataset>               run one method (default SC_RB) on a benchmark\n\
+         \x20 fit [dataset]               fit SC_RB once and persist the model\n\
+         \x20   --save PATH                 model artifact to write (required)\n\
+         \x20 predict                     label points with a saved model\n\
+         \x20   --model PATH                model artifact from `scrb fit --save`\n\
+         \x20   --out PATH                  write one label per line (optional)\n\
          \x20 table <1|2|3>               regenerate a paper table\n\
          \x20 fig <2|3|4|5|theory>        regenerate a paper figure's series\n\n\
          common options:\n\
@@ -67,19 +80,21 @@ fn print_help() {
          \x20 --engine NAME   native | xla | auto (default auto)\n\
          \x20 --scale DIV     dataset size divisor (default 64); --full = paper sizes\n\
          \x20 --data PATH     load a real LibSVM file instead of synthetic data\n\
-         \x20 --seed N --verbose",
+         \x20 --seed N --verbose\n\n\
+         serving example:\n\
+         \x20 scrb fit pendigits --save m.scrb && scrb predict --model m.scrb pendigits",
         scrb::VERSION,
         MethodKind::ALL.map(|m| m.name()).join(", ")
     );
 }
 
-fn base_config(args: &Args) -> Result<PipelineConfig, String> {
+fn base_config(args: &Args) -> Result<PipelineConfig, ScrbError> {
     let mut cfg = PipelineConfig::default();
     cfg.apply_args(args)?;
     Ok(cfg)
 }
 
-fn scale_of(args: &Args) -> Result<usize, String> {
+fn scale_of(args: &Args) -> Result<usize, ScrbError> {
     if args.flag("full") {
         Ok(1)
     } else {
@@ -87,7 +102,7 @@ fn scale_of(args: &Args) -> Result<usize, String> {
     }
 }
 
-fn cmd_info(args: &Args) -> Result<(), String> {
+fn cmd_info(args: &Args) -> Result<(), ScrbError> {
     let cfg = base_config(args)?;
     println!("scrb {}", scrb::VERSION);
     println!("threads: {}", scrb::util::threads::num_threads());
@@ -112,28 +127,56 @@ fn cmd_info(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn load_dataset(args: &Args, coord: &Coordinator) -> Result<data::Dataset, String> {
+/// Load the requested dataset **without** normalizing it; the bool says
+/// whether it came from a `--data` file (synthetic benchmarks are already
+/// in their generated frame).
+fn load_dataset_raw(args: &Args, coord: &Coordinator) -> Result<(data::Dataset, bool), ScrbError> {
     if let Some(path) = args.get("data") {
-        let mut ds = data::load_libsvm(path)?;
-        ds.minmax_normalize();
-        return Ok(ds);
+        return Ok((data::load_libsvm(path)?, true));
     }
     let name = args
         .positional
         .first()
         .cloned()
         .unwrap_or_else(|| "pendigits".to_string());
-    Ok(experiment::dataset(coord, &name))
+    Ok((experiment::dataset(coord, &name), false))
 }
 
-fn cmd_run(args: &Args) -> Result<(), String> {
+/// Batch-local loading for the one-shot commands (`run`): `--data` files
+/// are min-max normalized by their own statistics.
+fn load_dataset(args: &Args, coord: &Coordinator) -> Result<data::Dataset, ScrbError> {
+    let (mut ds, from_file) = load_dataset_raw(args, coord)?;
+    if from_file {
+        ds.minmax_normalize();
+    }
+    Ok(ds)
+}
+
+/// `--sigma` if present: absence is None, a malformed or non-positive
+/// value is a hard error (a bad bandwidth must never be silently ignored
+/// or end up in a persisted model — NaN/0 widths degenerate the binning).
+fn sigma_override(args: &Args) -> Result<Option<f64>, ScrbError> {
+    match args.get("sigma") {
+        None => Ok(None),
+        Some(_) => {
+            let s = args.get_f64("sigma", f64::NAN)?;
+            if !s.is_finite() || s <= 0.0 {
+                return Err(ScrbError::config(format!(
+                    "--sigma must be a positive finite number, got '{s}'"
+                )));
+            }
+            Ok(Some(s))
+        }
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<(), ScrbError> {
     let cfg = base_config(args)?;
     let method = MethodKind::parse(args.get_or("method", "sc_rb"))?;
     let coord = Coordinator::new(cfg, scale_of(args)?);
     let ds = load_dataset(args, &coord)?;
     println!("dataset {} n={} d={} k={}", ds.name, ds.n(), ds.d(), ds.k);
-    let sigma = args.get_f64("sigma", f64::NAN).ok().filter(|s| s.is_finite());
-    let run = experiment::single_run(&coord, method, &ds, sigma);
+    let run = experiment::single_run(&coord, method, &ds, sigma_override(args)?)?;
     println!(
         "{}: acc={:.3} nmi={:.3} ri={:.3} fm={:.3} time={}s",
         run.method.name(),
@@ -155,7 +198,115 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_table(args: &Args) -> Result<(), String> {
+/// `scrb fit [dataset] --save model.scrb`: run Algorithm 2 once and
+/// persist the serving artifact (grids, bin→column maps, Σ/V projection,
+/// centroids).
+fn cmd_fit(args: &Args) -> Result<(), ScrbError> {
+    let method = MethodKind::parse(args.get_or("method", "sc_rb"))?;
+    if method != MethodKind::ScRb {
+        return Err(ScrbError::config(format!(
+            "`scrb fit` serves SC_RB models; {} has no persistable out-of-sample artifact \
+             (use `scrb run --method {}` for batch clustering)",
+            method.name(),
+            method.name()
+        )));
+    }
+    let save = args
+        .get("save")
+        .ok_or_else(|| ScrbError::config("fit: missing --save PATH for the model artifact"))?;
+    let cfg = base_config(args)?;
+    let coord = Coordinator::new(cfg, scale_of(args)?);
+    let (mut ds, from_file) = load_dataset_raw(args, &coord)?;
+    // File data is min-max normalized for the fit; the frame (per-feature
+    // min/span) is stored in the model so `scrb predict` can bring new
+    // batches into the *same* frame instead of their own statistics.
+    let norm = if from_file {
+        let (lo, span) = ds.minmax_params();
+        ds.apply_minmax(&lo, &span);
+        Some((lo, span))
+    } else {
+        None
+    };
+    println!("dataset {} n={} d={} k={}", ds.name, ds.n(), ds.d(), ds.k);
+    let cfg = coord.cfg_for(&ds, sigma_override(args)?);
+    let env = Env::with_xla(cfg.clone(), coord.xla.as_ref());
+    let t0 = Instant::now();
+    let mut fitted = MethodKind::ScRb.fit(&env, &ds.x)?;
+    if let Some((lo, span)) = norm {
+        fitted.model.set_input_norm(lo, span);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let m = all_metrics(&fitted.output.labels, &ds.y);
+    println!(
+        "fit SC_RB ({cfg}): acc={:.3} nmi={:.3} time={}s",
+        m.accuracy,
+        m.nmi,
+        fnum(secs)
+    );
+    fitted.model.save(save)?;
+    let bytes = std::fs::metadata(save).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "model saved to {save} ({} clusters, {} KB)",
+        fitted.model.n_clusters(),
+        bytes / 1024
+    );
+    Ok(())
+}
+
+/// `scrb predict --model model.scrb [--data new.libsvm | dataset]`: label
+/// points with a previously fitted model — no solver, no refit.
+fn cmd_predict(args: &Args) -> Result<(), ScrbError> {
+    let model_path = args
+        .get("model")
+        .ok_or_else(|| ScrbError::config("predict: missing --model PATH (from `scrb fit --save`)"))?;
+    let model = ScRbModel::load(model_path)?;
+    let cfg = base_config(args)?;
+    let coord = Coordinator::new(cfg, scale_of(args)?);
+    let (mut ds, from_file) = load_dataset_raw(args, &coord)?;
+    if from_file {
+        // bring the batch into the frame the model was *fitted* in —
+        // normalizing by the batch's own min/max would shift every bin
+        if model.input_norm().is_none() {
+            eprintln!(
+                "warning: model stores no input normalization; \
+                 serving the file's raw feature values"
+            );
+        }
+        model.apply_input_norm(&mut ds.x);
+    }
+    println!(
+        "model {model_path}: {} clusters, {} input dims, R={} grids, D={} bins",
+        model.n_clusters(),
+        model.input_dim(),
+        model.codebook.r,
+        model.codebook.dim
+    );
+    let mut ws = ServeWorkspace::new();
+    let mut labels: Vec<usize> = Vec::new();
+    let t0 = Instant::now();
+    model.predict_batch(&ds.x, &mut ws, &mut labels)?;
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "predicted {} points in {}s ({:.3e} points/s)",
+        labels.len(),
+        fnum(secs),
+        labels.len() as f64 / secs.max(1e-12)
+    );
+    let m = all_metrics(&labels, &ds.y);
+    println!("vs file labels: acc={:.3} nmi={:.3}", m.accuracy, m.nmi);
+    if let Some(out_path) = args.get("out") {
+        let mut text = String::with_capacity(labels.len() * 3);
+        for l in &labels {
+            text.push_str(&l.to_string());
+            text.push('\n');
+        }
+        std::fs::write(out_path, text).map_err(|e| ScrbError::io(out_path, e))?;
+        println!("labels written to {out_path}");
+    }
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> Result<(), ScrbError> {
     let which = args.positional.first().map(|s| s.as_str()).unwrap_or("2");
     let scale = scale_of(args)?;
     match which {
@@ -167,7 +318,7 @@ fn cmd_table(args: &Args) -> Result<(), String> {
             let cfg = base_config(args)?;
             let coord = Coordinator::new(cfg, scale);
             let names: Vec<String> = args.get_str_list("datasets", &experiment::TABLE_DATASETS);
-            let grid = experiment::table2_3(&coord, &names);
+            let grid = experiment::table2_3(&coord, &names)?;
             println!("Table 2: average rank scores (lower = better), R={}", coord.base_cfg.r);
             println!("{}", report::render_table2(&grid));
             println!("Table 3: computational time (seconds)");
@@ -176,15 +327,16 @@ fn cmd_table(args: &Args) -> Result<(), String> {
                 println!("{}", report::render_detail(&grid));
             }
             let json = report::grid_to_json(&grid).to_string();
-            let path = report::save("table2_3.json", &json).map_err(|e| e.to_string())?;
+            let path = report::save("table2_3.json", &json)
+                .map_err(|e| ScrbError::io("table2_3.json", e))?;
             eprintln!("[saved {path}]");
             Ok(())
         }
-        other => Err(format!("unknown table '{other}' (1|2|3)")),
+        other => Err(ScrbError::config(format!("unknown table '{other}' (1|2|3)"))),
     }
 }
 
-fn cmd_fig(args: &Args) -> Result<(), String> {
+fn cmd_fig(args: &Args) -> Result<(), ScrbError> {
     let which = args.positional.first().map(|s| s.as_str()).unwrap_or("2");
     let cfg = base_config(args)?;
     let coord = Coordinator::new(cfg, scale_of(args)?);
@@ -192,12 +344,12 @@ fn cmd_fig(args: &Args) -> Result<(), String> {
         "2" => {
             let rs = args.get_usize_list("rs", &[16, 64, 256, 1024, 4096])?;
             let rb_max = args.get_usize("rb-max-r", 1024)?;
-            let fig = experiment::fig2(&coord, &rs, rb_max);
+            let fig = experiment::fig2(&coord, &rs, rb_max)?;
             println!("{}", report::render_fig2(&fig));
         }
         "3" => {
             let rs = args.get_usize_list("rs", &[16, 32, 64, 128])?;
-            let series = experiment::fig3(&coord, &rs);
+            let series = experiment::fig3(&coord, &rs)?;
             println!(
                 "{}",
                 report::render_series("Fig. 3: SVD solver comparison (covtype-like)", &series, "R")
@@ -207,14 +359,14 @@ fn cmd_fig(args: &Args) -> Result<(), String> {
             let name = args.get_or("dataset", "poker").to_string();
             let ns = args.get_usize_list("ns", &[1_000, 4_000, 16_000, 64_000, 256_000])?;
             let r = args.get_usize("r", 256)?;
-            let points = experiment::fig4(&coord, &name, &ns, r);
+            let points = experiment::fig4(&coord, &name, &ns, r)?;
             println!("{}", report::render_fig4(&name, &points));
         }
         "5" => {
             let rs = args.get_usize_list("rs", &[16, 64, 256, 1024])?;
             let names = args.get_str_list("datasets", &["pendigits", "letter", "mnist", "acoustic"]);
             for name in names {
-                let series = experiment::fig5(&coord, &name, &rs);
+                let series = experiment::fig5(&coord, &name, &rs)?;
                 println!(
                     "{}",
                     report::render_series(
@@ -228,10 +380,10 @@ fn cmd_fig(args: &Args) -> Result<(), String> {
         "theory" => {
             let n = args.get_usize("n", 300)?;
             let rs = args.get_usize_list("rs", &[4, 8, 16, 32, 64, 128, 256])?;
-            let points = experiment::theory_convergence(&coord, n, &rs);
+            let points = experiment::theory_convergence(&coord, n, &rs)?;
             println!("{}", report::render_theory(&points));
         }
-        other => return Err(format!("unknown figure '{other}' (2|3|4|5|theory)")),
+        other => return Err(ScrbError::config(format!("unknown figure '{other}' (2|3|4|5|theory)"))),
     }
     Ok(())
 }

@@ -1,0 +1,380 @@
+//! Fit / transform / predict model layer — the serving face of the crate.
+//!
+//! The paper's pipeline (Algorithm 2) is a one-shot batch computation;
+//! production serving needs the opposite shape: **fit once, assign new
+//! points many times**. Random Binning makes that natural — the feature
+//! map is data-independent (grids are drawn from the kernel, Algorithm 1),
+//! so a new point's R-sparse feature vector projects into the learned
+//! spectral embedding the same way Nyström-style out-of-sample extension
+//! works for landmark methods:
+//!
+//! ```text
+//!   fit:      Ẑ = D^{-1/2} Z,  Ẑ ≈ U Σ Vᵀ,  centroids = kmeans(rows of U)
+//!   predict:  e(x) = z(x) · V · Σ⁻¹      (R·K flops — microseconds)
+//!             label = argmin_c ‖ e(x)/‖e(x)‖ − centroid_c ‖²
+//! ```
+//!
+//! The degree normalization cancels under row normalization (it is a
+//! per-row scalar), so training points predict to exactly their fit
+//! labels, and held-out points land in the cluster whose spectral
+//! neighbourhood they bin into.
+//!
+//! Three pieces:
+//! - [`ClusterModel`] — anything that can `fit(&Env, &Mat)` into a
+//!   [`FitResult`]: the training-set [`ClusterOutput`] (labels, timings,
+//!   solver telemetry — exactly what the old batch `run` returned) plus a
+//!   boxed [`FittedModel`]. Every [`crate::cluster::MethodKind`]
+//!   implements it; the batch `run` API is now a thin wrapper.
+//! - [`FittedModel`] — the serving trait: `transform` (embedding rows),
+//!   `predict` (allocating convenience) and `predict_batch` (the hot
+//!   path: workspace-reusing, thread-parallel, and allocation-free in
+//!   steady state beyond the output vector — enforced by
+//!   `tests/alloc.rs`). [`FittedModel::save`] persists models that
+//!   support it ([`ScRbModel`]'s versioned binary format).
+//! - [`ScRbModel`] — the paper method's fitted artifact: RB codebook
+//!   (grid widths/biases, seed, bin→column tables), singular triplets
+//!   (Σ, V folded into a projection), and K-means centroids.
+//!
+//! Baselines without a native out-of-sample extension (exact SC, LSC,
+//! Nyström, the RF family, sampled kernel K-means) serve through
+//! [`CentroidModel`] — nearest class-mean in input space. For plain
+//! K-means that is *exact* (the centroids are the model); for the
+//! transductive spectral baselines it is a documented approximation.
+
+pub mod persist;
+pub mod scrb;
+
+pub use self::scrb::ScRbModel;
+
+use crate::cluster::{ClusterOutput, Env};
+use crate::error::ScrbError;
+use crate::linalg::Mat;
+use crate::util::threads::num_threads;
+
+/// Anything that can be fitted to a training matrix under an [`Env`].
+pub trait ClusterModel {
+    /// Fit on `x` (N×d), producing the training-set clustering output and
+    /// a serving model.
+    fn fit(&self, env: &Env, x: &Mat) -> Result<FitResult, ScrbError>;
+}
+
+/// What a fit produces: the batch output on the training set (labels in
+/// row order, per-stage timings, solver telemetry) and the fitted model.
+pub struct FitResult {
+    /// Serving artifact — keep it to assign new points.
+    pub model: Box<dyn FittedModel>,
+    /// Training-set clustering, identical to what the old batch `run`
+    /// returned.
+    pub output: ClusterOutput,
+}
+
+/// A fitted model: embeds and labels points that were never seen at fit
+/// time.
+pub trait FittedModel: Send + Sync {
+    /// Number of clusters K.
+    fn n_clusters(&self) -> usize;
+
+    /// Input dimensionality d expected by `transform`/`predict`.
+    fn input_dim(&self) -> usize;
+
+    /// Serving embedding of each row of `x` (the space `predict` measures
+    /// centroid distances in). For [`ScRbModel`] these are row-normalized
+    /// spectral embedding rows `z·V·Σ⁻¹`; for [`CentroidModel`] the
+    /// serving space is the input space itself (identity).
+    fn transform(&self, x: &Mat) -> Result<Mat, ScrbError>;
+
+    /// Cluster labels for the rows of `x` (allocating convenience
+    /// wrapper; serving loops should hold a [`ServeWorkspace`] and call
+    /// [`FittedModel::predict_batch`]).
+    fn predict(&self, x: &Mat) -> Result<Vec<usize>, ScrbError> {
+        let mut ws = ServeWorkspace::new();
+        let mut out = Vec::new();
+        self.predict_batch(x, &mut ws, &mut out)?;
+        Ok(out)
+    }
+
+    /// Serving hot path: labels for a batch of points, written into
+    /// `out` (resized to N), parallel over row strips, reusing `ws`
+    /// across calls. Steady state (same batch shape, warm workspace)
+    /// performs zero heap allocations beyond the output vector.
+    fn predict_batch(
+        &self,
+        x: &Mat,
+        ws: &mut ServeWorkspace,
+        out: &mut Vec<usize>,
+    ) -> Result<(), ScrbError>;
+
+    /// Attach the input-preprocessing frame (per-feature min and span)
+    /// that the caller normalized the *training* data with. Models that
+    /// support persistence carry it, so a serving batch can be brought
+    /// into the fitted frame — normalizing new data by its **own** batch
+    /// statistics would shift every bin coordinate and silently corrupt
+    /// predictions. Default: no-op (model serves in the caller's raw
+    /// feature frame).
+    fn set_input_norm(&mut self, min: Vec<f64>, span: Vec<f64>) {
+        let _ = (min, span);
+    }
+
+    /// The stored input normalization, if any: `(min, span)` per feature.
+    fn input_norm(&self) -> Option<(&[f64], &[f64])> {
+        None
+    }
+
+    /// Bring a raw batch into the fitted frame (no-op when no
+    /// normalization is stored): `x[i][j] ← (x[i][j] − min[j]) / span[j]`.
+    fn apply_input_norm(&self, x: &mut Mat) {
+        if let Some((min, span)) = self.input_norm() {
+            for i in 0..x.rows {
+                // zip: a dimension mismatch surfaces as a typed error at
+                // the subsequent predict/transform, not a panic here
+                for (v, (&m, &s)) in x.row_mut(i).iter_mut().zip(min.iter().zip(span.iter())) {
+                    *v = (*v - m) / s;
+                }
+            }
+        }
+    }
+
+    /// Persist the model to `path`. Default: not supported by this model
+    /// kind ([`ScRbModel`] overrides with its versioned binary format).
+    fn save(&self, path: &str) -> Result<(), ScrbError> {
+        let _ = path;
+        Err(ScrbError::unsupported(
+            "this model kind has no persistence format (only SC_RB models can be saved)",
+        ))
+    }
+}
+
+/// Reusable serving scratch: per-worker row-strip boundaries plus one
+/// embedding buffer per worker. Provisioned lazily on first use and
+/// re-provisioned only when the batch size, embedding width, or thread
+/// count outgrows what is held — steady-state `predict_batch` calls
+/// perform no heap allocation.
+pub struct ServeWorkspace {
+    /// Ascending row boundaries spanning `[0, n]`, one strip per worker.
+    bounds: Vec<usize>,
+    /// Flat per-worker embedding scratch, `nt × k_cap`.
+    scratch: Vec<f64>,
+    /// Worker count the strips were built for.
+    nt: usize,
+    /// Embedding width the scratch was provisioned for.
+    k_cap: usize,
+    /// Batch size the strips were built for.
+    n_rows: usize,
+}
+
+impl Default for ServeWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServeWorkspace {
+    pub fn new() -> ServeWorkspace {
+        ServeWorkspace { bounds: Vec::new(), scratch: Vec::new(), nt: 0, k_cap: 0, n_rows: 0 }
+    }
+
+    /// (Re)provision for an `n`-row batch with `k`-wide embedding
+    /// scratch. No-op (and allocation-free) when nothing changed; a
+    /// smaller batch reuses the existing capacity.
+    pub(crate) fn prepare(&mut self, n: usize, k: usize) {
+        let nt = num_threads().clamp(1, n.max(1));
+        if nt != self.nt || n != self.n_rows {
+            self.bounds.clear();
+            self.bounds.reserve(nt + 1);
+            for t in 0..=nt {
+                self.bounds.push(t * n / nt);
+            }
+            self.nt = nt;
+            self.n_rows = n;
+        }
+        if k > self.k_cap || self.scratch.len() < self.nt * self.k_cap.max(k) {
+            self.k_cap = self.k_cap.max(k);
+            self.scratch.resize(self.nt * self.k_cap, 0.0);
+        }
+    }
+
+    pub(crate) fn bounds(&self) -> &[usize] {
+        &self.bounds
+    }
+
+    /// Per-worker scratch stride in f64 elements.
+    pub(crate) fn stride(&self) -> usize {
+        self.k_cap
+    }
+
+    pub(crate) fn scratch_ptr(&mut self) -> *mut f64 {
+        self.scratch.as_mut_ptr()
+    }
+}
+
+/// Index of the centroid row nearest to `e` — a thin delegate to the one
+/// argmin in [`crate::kmeans::nearest_centroid`], so serve-time
+/// prediction and fit-time assignment share the same scan (same
+/// arithmetic, same lowest-index tie-break).
+pub(crate) fn nearest_centroid(centroids: &Mat, e: &[f64]) -> usize {
+    crate::kmeans::nearest_centroid(e, centroids).0 as usize
+}
+
+/// Per-cluster means of `x` rows under `labels` (K×d). Clusters with no
+/// members keep a zero row.
+pub fn class_means(x: &Mat, labels: &[usize], k: usize) -> Mat {
+    assert_eq!(labels.len(), x.rows, "one label per row");
+    let mut m = Mat::zeros(k, x.cols);
+    let mut counts = vec![0usize; k];
+    for (i, &l) in labels.iter().enumerate() {
+        assert!(l < k, "label {l} out of range for k={k}");
+        counts[l] += 1;
+        let row = x.row(i);
+        let mrow = m.row_mut(l);
+        for (mv, xv) in mrow.iter_mut().zip(row.iter()) {
+            *mv += *xv;
+        }
+    }
+    for c in 0..k {
+        if counts[c] > 0 {
+            let inv = 1.0 / counts[c] as f64;
+            for v in m.row_mut(c) {
+                *v *= inv;
+            }
+        }
+    }
+    m
+}
+
+/// Nearest-centroid serving model in **input space**.
+///
+/// Two uses:
+/// - plain K-means: `centroids` are the fitted K-means centroids, so
+///   `predict` on the training set reproduces fit labels exactly (the fit
+///   itself ends with the same assignment);
+/// - the transductive spectral baselines (exact SC, LSC, Nyström, RF
+///   family, sampled kernel K-means): `centroids` are the per-cluster
+///   input-space class means of the training partition — an
+///   *approximation* used as the serving fallback, since those methods
+///   have no native out-of-sample embedding.
+pub struct CentroidModel {
+    /// K×d centroids in input space.
+    pub centroids: Mat,
+}
+
+impl CentroidModel {
+    pub fn new(centroids: Mat) -> CentroidModel {
+        CentroidModel { centroids }
+    }
+
+    /// Build the transductive fallback from a fitted partition.
+    pub fn from_labels(x: &Mat, labels: &[usize], k: usize) -> CentroidModel {
+        CentroidModel { centroids: class_means(x, labels, k) }
+    }
+
+    fn check_dim(&self, x: &Mat) -> Result<(), ScrbError> {
+        if x.cols != self.centroids.cols {
+            return Err(ScrbError::invalid_input(format!(
+                "expected {} input features, got {}",
+                self.centroids.cols, x.cols
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl FittedModel for CentroidModel {
+    fn n_clusters(&self) -> usize {
+        self.centroids.rows
+    }
+
+    fn input_dim(&self) -> usize {
+        self.centroids.cols
+    }
+
+    /// The serving embedding of a centroid model *is* the input space.
+    fn transform(&self, x: &Mat) -> Result<Mat, ScrbError> {
+        self.check_dim(x)?;
+        Ok(x.clone())
+    }
+
+    fn predict_batch(
+        &self,
+        x: &Mat,
+        ws: &mut ServeWorkspace,
+        out: &mut Vec<usize>,
+    ) -> Result<(), ScrbError> {
+        self.check_dim(x)?;
+        out.resize(x.rows, 0);
+        if x.rows == 0 {
+            return Ok(());
+        }
+        ws.prepare(x.rows, 0);
+        let centroids = &self.centroids;
+        crate::util::threads::parallel_row_ranges_mut(
+            &mut out[..],
+            1,
+            ws.bounds(),
+            |_si, row0, chunk| {
+                for (d, slot) in chunk.iter_mut().enumerate() {
+                    *slot = nearest_centroid(centroids, x.row(row0 + d));
+                }
+            },
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_means_average_members() {
+        let x = Mat::from_vec(4, 2, vec![0.0, 0.0, 2.0, 2.0, 4.0, 0.0, 0.0, 4.0]);
+        let m = class_means(&x, &[0, 0, 1, 2], 4);
+        assert_eq!(m.row(0), &[1.0, 1.0]);
+        assert_eq!(m.row(1), &[4.0, 0.0]);
+        assert_eq!(m.row(2), &[0.0, 4.0]);
+        assert_eq!(m.row(3), &[0.0, 0.0]); // empty cluster stays zero
+    }
+
+    #[test]
+    fn centroid_model_assigns_nearest() {
+        let centroids = Mat::from_vec(3, 2, vec![0.0, 0.0, 10.0, 0.0, 0.0, 10.0]);
+        let model = CentroidModel::new(centroids);
+        let x = Mat::from_vec(3, 2, vec![1.0, 1.0, 9.0, -1.0, 2.0, 8.0]);
+        let labels = model.predict(&x).unwrap();
+        assert_eq!(labels, vec![0, 1, 2]);
+        assert_eq!(model.n_clusters(), 3);
+        assert_eq!(model.input_dim(), 2);
+        // identity embedding
+        let t = model.transform(&x).unwrap();
+        assert_eq!(t.data, x.data);
+        // dimension mismatch is a typed error
+        let bad = Mat::zeros(2, 5);
+        assert!(model.predict(&bad).is_err());
+        assert!(model.transform(&bad).is_err());
+        // no persistence for this kind
+        assert!(model.save("/tmp/never.scrb").is_err());
+    }
+
+    #[test]
+    fn ties_break_to_lowest_index() {
+        let centroids = Mat::from_vec(2, 1, vec![-1.0, 1.0]);
+        // 0.0 is equidistant: must go to centroid 0
+        assert_eq!(nearest_centroid(&centroids, &[0.0]), 0);
+    }
+
+    #[test]
+    fn workspace_reprovisions_lazily() {
+        let mut ws = ServeWorkspace::new();
+        ws.prepare(100, 4);
+        let b1 = ws.bounds().to_vec();
+        assert_eq!(*b1.first().unwrap(), 0);
+        assert_eq!(*b1.last().unwrap(), 100);
+        assert!(ws.stride() >= 4);
+        // same shape: unchanged
+        ws.prepare(100, 4);
+        assert_eq!(ws.bounds(), &b1[..]);
+        // wider embedding grows the stride, smaller batch shrinks bounds
+        ws.prepare(10, 9);
+        assert_eq!(*ws.bounds().last().unwrap(), 10);
+        assert!(ws.stride() >= 9);
+    }
+}

@@ -1,0 +1,148 @@
+//! Little-endian byte (de)serialization for the versioned model format.
+//!
+//! The offline vendor set has no serde, so the model file is a hand-rolled
+//! layout: fixed-width little-endian scalars and length-prefixed arrays,
+//! written through [`ByteWriter`] and read back through the bounds-checked
+//! [`ByteReader`] (truncation or garbage becomes a clean
+//! [`ScrbError::Model`], never a panic or an out-of-bounds read).
+
+use crate::error::ScrbError;
+
+/// Append-only little-endian buffer writer.
+pub(crate) struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> ByteWriter {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64_slice(&mut self, vs: &[f64]) {
+        self.buf.reserve(vs.len() * 8);
+        for &v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Bounds-checked little-endian reader over a model payload.
+pub(crate) struct ByteReader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(b: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { b, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ScrbError> {
+        if self.i + n > self.b.len() {
+            return Err(ScrbError::model(format!(
+                "truncated model file: wanted {n} bytes at offset {}, have {}",
+                self.i,
+                self.b.len() - self.i
+            )));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8], ScrbError> {
+        self.take(n)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, ScrbError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, ScrbError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, ScrbError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, ScrbError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read `n` f64 values. `n` has already been validated against a
+    /// sanity cap by the caller, but the read itself is still
+    /// bounds-checked, so a lying length prefix fails cleanly.
+    pub fn f64_vec(&mut self, n: usize) -> Result<Vec<f64>, ScrbError> {
+        let raw = self.take(n.checked_mul(8).ok_or_else(|| {
+            ScrbError::model(format!("array length {n} overflows"))
+        })?)?;
+        Ok(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars_and_slices() {
+        let mut w = ByteWriter::new();
+        w.bytes(b"MAGIC");
+        w.u8(7);
+        w.u32(123_456);
+        w.u64(0xdead_beef_cafe_f00d);
+        w.f64(-1.5e300);
+        w.f64_slice(&[0.0, 1.0, -2.25]);
+        let buf = w.finish();
+
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.bytes(5).unwrap(), b"MAGIC");
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 123_456);
+        assert_eq!(r.u64().unwrap(), 0xdead_beef_cafe_f00d);
+        assert_eq!(r.f64().unwrap(), -1.5e300);
+        assert_eq!(r.f64_vec(3).unwrap(), vec![0.0, 1.0, -2.25]);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn truncation_is_a_clean_error() {
+        let mut w = ByteWriter::new();
+        w.u64(1);
+        let buf = w.finish();
+        let mut r = ByteReader::new(&buf[..5]);
+        assert!(r.u64().is_err());
+        let mut r2 = ByteReader::new(&buf);
+        assert!(r2.f64_vec(100).is_err());
+    }
+}

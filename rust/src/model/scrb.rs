@@ -1,0 +1,463 @@
+//! `ScRbModel` — the fitted SC_RB artifact and its serving/persistence
+//! paths.
+//!
+//! Fit (Algorithm 2) leaves behind three things:
+//! - the **RB codebook** (grid widths/biases, seed, and the per-grid
+//!   bin→column tables) — the data-independent feature map;
+//! - the **singular triplets** of Ẑ, held as Σ plus the pre-folded
+//!   projection `P = V·Σ⁻¹/√R` (D×K), so a point's embedding is the sum
+//!   of the P rows of its occupied bins;
+//! - the **K-means centroids** in the row-normalized embedding space.
+//!
+//! Out-of-sample prediction is then `R` table lookups + `R·K` adds + one
+//! nearest-centroid scan — microseconds per point, no solver involved.
+//! Because the training embedding differs from the serving one only by
+//! the per-row scalar `d_i^{-1/2}` (which cancels under row
+//! normalization), predicting the training set reproduces fit labels.
+//!
+//! # Persistence
+//!
+//! [`ScRbModel::save`]/[`ScRbModel::load`] use a versioned little-endian
+//! binary format (magic `SCRBMODL`, version 1) with bounds-checked reads:
+//! truncation, bad magic, or an unsupported version is a clean
+//! [`ScrbError::Model`]. Grid parameters are stored explicitly (widths +
+//! biases), not re-derived from the seed, so a saved model does not
+//! depend on RNG stream stability across versions.
+
+use super::persist::{ByteReader, ByteWriter};
+use super::{nearest_centroid, FittedModel, ServeWorkspace};
+use crate::config::Kernel;
+use crate::error::ScrbError;
+use crate::linalg::Mat;
+use crate::rb::{BinTable, Grid, RbCodebook};
+use crate::util::threads::{parallel_row_ranges_mut, parallel_rows_mut};
+
+const MAGIC: &[u8; 8] = b"SCRBMODL";
+const VERSION: u32 = 1;
+
+/// Raw base pointer to the per-worker embedding scratch; workers index
+/// disjoint `stride`-sized regions by strip id (see `predict_batch`).
+#[derive(Clone, Copy)]
+struct ScratchPtr(*mut f64);
+unsafe impl Send for ScratchPtr {}
+unsafe impl Sync for ScratchPtr {}
+
+/// Fitted SC_RB model: everything needed to embed and label points that
+/// were never seen at fit time.
+pub struct ScRbModel {
+    /// RB feature map: grids + bin→column tables (Algorithm 1 state).
+    pub codebook: RbCodebook,
+    /// Kernel the pipeline was configured with (metadata).
+    pub kernel: Kernel,
+    /// Top-K singular values of Ẑ, descending.
+    pub s: Vec<f64>,
+    /// Projection `P = V·Σ⁻¹/√R` (D×K): a point's raw embedding is the
+    /// sum of the rows of `P` indexed by its occupied bins.
+    pub proj: Mat,
+    /// K-means centroids in the row-normalized embedding space (K×K).
+    pub centroids: Mat,
+    /// Input-preprocessing frame the training data was normalized with
+    /// (per-feature `(min, span)`), if any — serving batches must be
+    /// brought into this frame, not normalized by their own statistics.
+    pub norm: Option<(Vec<f64>, Vec<f64>)>,
+}
+
+impl ScRbModel {
+    /// Embedding dimensionality K (columns of U the fit kept).
+    pub fn embed_dim(&self) -> usize {
+        self.proj.cols
+    }
+
+    /// Serving embedding of one point, written into `e` (length
+    /// [`ScRbModel::embed_dim`]): sum of projection rows of the point's
+    /// occupied bins, L2-normalized. Allocation-free.
+    pub fn embed_into(&self, row: &[f64], e: &mut [f64]) {
+        debug_assert_eq!(row.len(), self.codebook.d_in);
+        debug_assert_eq!(e.len(), self.embed_dim());
+        e.fill(0.0);
+        for (grid, table) in self.codebook.grids.iter().zip(self.codebook.tables.iter()) {
+            if let Some(c) = table.get(grid.bin_hash(row)) {
+                let p = self.proj.row(c as usize);
+                for (ej, pj) in e.iter_mut().zip(p.iter()) {
+                    *ej += *pj;
+                }
+            }
+        }
+        let norm = e.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if norm > 1e-300 {
+            let inv = 1.0 / norm;
+            for v in e.iter_mut() {
+                *v *= inv;
+            }
+        }
+    }
+
+    /// Label for an already-embedded point (nearest centroid).
+    pub fn assign(&self, e: &[f64]) -> usize {
+        nearest_centroid(&self.centroids, e)
+    }
+
+    fn check_dim(&self, x: &Mat) -> Result<(), ScrbError> {
+        if x.cols != self.codebook.d_in {
+            return Err(ScrbError::invalid_input(format!(
+                "model expects {} input features, got {}",
+                self.codebook.d_in, x.cols
+            )));
+        }
+        Ok(())
+    }
+
+    /// Serialize to the versioned binary format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let cb = &self.codebook;
+        debug_assert_eq!(self.s.len(), self.embed_dim(), "one σ per embedding column");
+        debug_assert_eq!(self.centroids.cols, self.embed_dim(), "centroids live in embed space");
+        debug_assert_eq!(self.proj.rows, cb.dim, "one projection row per bin");
+        let mut w = ByteWriter::new();
+        w.bytes(MAGIC);
+        w.u32(VERSION);
+        let (ktag, ksigma) = match self.kernel {
+            Kernel::Laplacian { sigma } => (0u8, sigma),
+            Kernel::Gaussian { sigma } => (1u8, sigma),
+        };
+        w.u8(ktag);
+        w.f64(ksigma);
+        w.u64(cb.seed);
+        w.u32(cb.r as u32);
+        w.u32(cb.d_in as u32);
+        w.u64(cb.dim as u64);
+        w.u32(self.embed_dim() as u32);
+        w.u32(self.centroids.rows as u32);
+        w.f64(cb.sigma);
+        match &self.norm {
+            None => w.u8(0),
+            Some((min, span)) => {
+                debug_assert_eq!(min.len(), cb.d_in);
+                debug_assert_eq!(span.len(), cb.d_in);
+                w.u8(1);
+                w.f64_slice(min);
+                w.f64_slice(span);
+            }
+        }
+        w.f64_slice(&self.s);
+        for g in &cb.grids {
+            w.f64_slice(&g.widths);
+            w.f64_slice(&g.biases);
+        }
+        for t in &cb.tables {
+            w.u32(t.len() as u32);
+            for (hash, col) in t.iter() {
+                w.u64(hash);
+                w.u32(col);
+            }
+        }
+        w.f64_slice(&self.proj.data);
+        w.f64_slice(&self.centroids.data);
+        w.finish()
+    }
+
+    /// Deserialize from the versioned binary format.
+    pub fn from_bytes(bytes: &[u8]) -> Result<ScRbModel, ScrbError> {
+        let mut r = ByteReader::new(bytes);
+        if r.bytes(8)? != &MAGIC[..] {
+            return Err(ScrbError::model("not an scrb model file (bad magic)"));
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            return Err(ScrbError::model(format!(
+                "unsupported model version {version} (this build reads version {VERSION})"
+            )));
+        }
+        let ktag = r.u8()?;
+        let ksigma = r.f64()?;
+        let kernel = match ktag {
+            0 => Kernel::Laplacian { sigma: ksigma },
+            1 => Kernel::Gaussian { sigma: ksigma },
+            other => return Err(ScrbError::model(format!("unknown kernel tag {other}"))),
+        };
+        let seed = r.u64()?;
+        let nr = r.u32()? as usize;
+        let d_in = r.u32()? as usize;
+        let dim = r.u64()? as usize;
+        let k_embed = r.u32()? as usize;
+        let k_clusters = r.u32()? as usize;
+        let sigma = r.f64()?;
+        // Sanity caps: a corrupt header must not drive huge allocations.
+        if nr == 0 || nr > 1 << 24 || d_in == 0 || d_in > 1 << 24 {
+            return Err(ScrbError::model(format!("implausible header: r={nr} d_in={d_in}")));
+        }
+        if k_embed == 0 || k_embed > 1 << 16 || k_clusters == 0 || k_clusters > 1 << 16 {
+            return Err(ScrbError::model(format!(
+                "implausible header: k_embed={k_embed} k_clusters={k_clusters}"
+            )));
+        }
+        if dim >= u32::MAX as usize || dim > (1usize << 40) / k_embed.max(1) {
+            return Err(ScrbError::model(format!("implausible feature dimension D={dim}")));
+        }
+        let norm = match r.u8()? {
+            0 => None,
+            1 => {
+                let min = r.f64_vec(d_in)?;
+                let span = r.f64_vec(d_in)?;
+                if min.iter().chain(span.iter()).any(|v| !v.is_finite())
+                    || span.iter().any(|&v| v == 0.0)
+                {
+                    return Err(ScrbError::model(
+                        "normalization parameters must be finite with non-zero spans",
+                    ));
+                }
+                Some((min, span))
+            }
+            other => return Err(ScrbError::model(format!("unknown normalization tag {other}"))),
+        };
+        let s = r.f64_vec(k_embed)?;
+        let mut grids = Vec::with_capacity(nr);
+        for _ in 0..nr {
+            let widths = r.f64_vec(d_in)?;
+            let biases = r.f64_vec(d_in)?;
+            if widths.iter().any(|&w| w <= 0.0 || !w.is_finite()) {
+                return Err(ScrbError::model("grid widths must be positive and finite"));
+            }
+            if biases.iter().any(|&b| !b.is_finite()) {
+                return Err(ScrbError::model("grid biases must be finite"));
+            }
+            grids.push(Grid::from_params(widths, biases));
+        }
+        let mut tables = Vec::with_capacity(nr);
+        let mut total_bins = 0usize;
+        for _ in 0..nr {
+            let n = r.u32()? as usize;
+            total_bins += n;
+            if total_bins > dim {
+                return Err(ScrbError::model(format!(
+                    "bin tables hold more than D={dim} entries"
+                )));
+            }
+            let mut t = BinTable::with_capacity(n);
+            for _ in 0..n {
+                let hash = r.u64()?;
+                let col = r.u32()?;
+                if col as usize >= dim {
+                    return Err(ScrbError::model(format!(
+                        "bin column {col} out of range for D={dim}"
+                    )));
+                }
+                t.insert(hash, col);
+            }
+            tables.push(t);
+        }
+        if total_bins != dim {
+            return Err(ScrbError::model(format!(
+                "bin tables hold {total_bins} entries, header says D={dim}"
+            )));
+        }
+        let proj = Mat::from_vec(dim, k_embed, r.f64_vec(dim * k_embed)?);
+        let centroids = Mat::from_vec(k_clusters, k_embed, r.f64_vec(k_clusters * k_embed)?);
+        if r.remaining() != 0 {
+            return Err(ScrbError::model(format!(
+                "{} trailing bytes after model payload",
+                r.remaining()
+            )));
+        }
+        let codebook = RbCodebook { r: nr, d_in, sigma, seed, dim, grids, tables };
+        Ok(ScRbModel { codebook, kernel, s, proj, centroids, norm })
+    }
+
+    /// Load a model saved by [`ScRbModel::save`].
+    pub fn load(path: &str) -> Result<ScRbModel, ScrbError> {
+        let bytes = std::fs::read(path).map_err(|e| ScrbError::io(path, e))?;
+        ScRbModel::from_bytes(&bytes)
+    }
+}
+
+impl FittedModel for ScRbModel {
+    fn n_clusters(&self) -> usize {
+        self.centroids.rows
+    }
+
+    fn input_dim(&self) -> usize {
+        self.codebook.d_in
+    }
+
+    fn set_input_norm(&mut self, min: Vec<f64>, span: Vec<f64>) {
+        assert_eq!(min.len(), self.codebook.d_in, "one min per input feature");
+        assert_eq!(span.len(), self.codebook.d_in, "one span per input feature");
+        assert!(
+            span.iter().all(|&s| s.is_finite() && s != 0.0),
+            "spans must be finite and non-zero"
+        );
+        self.norm = Some((min, span));
+    }
+
+    fn input_norm(&self) -> Option<(&[f64], &[f64])> {
+        self.norm.as_ref().map(|(m, s)| (m.as_slice(), s.as_slice()))
+    }
+
+    /// Row-normalized spectral embedding rows `z·V·Σ⁻¹/‖·‖` (N×K) — the
+    /// space the fit's K-means ran in (the fit itself calls this, so
+    /// training rows and serving rows go through the identical path).
+    fn transform(&self, x: &Mat) -> Result<Mat, ScrbError> {
+        self.check_dim(x)?;
+        let k = self.embed_dim();
+        let mut m = Mat::zeros(x.rows, k);
+        if x.rows == 0 || k == 0 {
+            return Ok(m);
+        }
+        // each output row doubles as the scratch buffer embed_into fills
+        parallel_rows_mut(&mut m.data, k, |row0, chunk| {
+            for (d, row) in chunk.chunks_mut(k).enumerate() {
+                self.embed_into(x.row(row0 + d), row);
+            }
+        });
+        Ok(m)
+    }
+
+    fn predict_batch(
+        &self,
+        x: &Mat,
+        ws: &mut ServeWorkspace,
+        out: &mut Vec<usize>,
+    ) -> Result<(), ScrbError> {
+        self.check_dim(x)?;
+        let n = x.rows;
+        out.resize(n, 0);
+        if n == 0 {
+            return Ok(());
+        }
+        let k = self.embed_dim();
+        ws.prepare(n, k);
+        let stride = ws.stride();
+        let scratch = ScratchPtr(ws.scratch_ptr());
+        parallel_row_ranges_mut(&mut out[..], 1, ws.bounds(), |si, row0, chunk| {
+            // SAFETY: strip `si` is the only worker using the scratch
+            // region [si·stride, si·stride + k); strips are disjoint and
+            // the workspace outlives the scoped-thread join.
+            let e = unsafe { std::slice::from_raw_parts_mut(scratch.0.add(si * stride), k) };
+            for (d, slot) in chunk.iter_mut().enumerate() {
+                self.embed_into(x.row(row0 + d), e);
+                *slot = nearest_centroid(&self.centroids, e);
+            }
+        });
+        Ok(())
+    }
+
+    fn save(&self, path: &str) -> Result<(), ScrbError> {
+        std::fs::write(path, self.to_bytes()).map_err(|e| ScrbError::io(path, e))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rb::rb_features_with_codebook;
+    use crate::util::rng::Pcg;
+
+    /// Tiny hand-rolled model over random RB features (no solver): the
+    /// projection is an arbitrary D×k matrix, centroids arbitrary — enough
+    /// to pin serialization and the serving plumbing.
+    fn toy_model(n: usize, r: usize, k: usize, seed: u64) -> (ScRbModel, Mat) {
+        let mut rng = Pcg::seed(seed);
+        let d_in = 3;
+        let x = Mat::from_vec(n, d_in, (0..n * d_in).map(|_| rng.f64()).collect());
+        let (rb, codebook) = rb_features_with_codebook(&x, r, 0.5, seed ^ 0xab);
+        let dim = rb.dim();
+        let proj = Mat::from_vec(dim, k, (0..dim * k).map(|_| rng.range_f64(-1.0, 1.0)).collect());
+        let centroids =
+            Mat::from_vec(2, k, (0..2 * k).map(|_| rng.range_f64(-1.0, 1.0)).collect());
+        let model = ScRbModel {
+            codebook,
+            kernel: Kernel::Laplacian { sigma: 0.5 },
+            s: (0..k).map(|j| 1.0 / (j + 1) as f64).collect(),
+            proj,
+            centroids,
+            norm: None,
+        };
+        (model, x)
+    }
+
+    #[test]
+    fn bytes_roundtrip_exactly() {
+        let (model, x) = toy_model(60, 8, 4, 7);
+        let bytes = model.to_bytes();
+        let back = ScRbModel::from_bytes(&bytes).unwrap();
+        assert_eq!(back.s, model.s);
+        assert_eq!(back.proj.data, model.proj.data);
+        assert_eq!(back.centroids.data, model.centroids.data);
+        assert_eq!(back.codebook.dim, model.codebook.dim);
+        assert_eq!(back.codebook.seed, model.codebook.seed);
+        assert_eq!(back.kernel, model.kernel);
+        // identical serving behaviour, bit for bit
+        let a = model.transform(&x).unwrap();
+        let b = back.transform(&x).unwrap();
+        assert_eq!(a.data, b.data);
+        assert_eq!(model.predict(&x).unwrap(), back.predict(&x).unwrap());
+
+        // a stored normalization frame round-trips and is applied
+        let mut with_norm = ScRbModel::from_bytes(&bytes).unwrap();
+        with_norm.set_input_norm(vec![0.5; 3], vec![2.0; 3]);
+        let back2 = ScRbModel::from_bytes(&with_norm.to_bytes()).unwrap();
+        assert_eq!(back2.norm, with_norm.norm);
+        let mut batch = Mat::from_vec(1, 3, vec![0.5, 2.5, -1.5]);
+        back2.apply_input_norm(&mut batch);
+        assert_eq!(batch.data, vec![0.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn corrupt_and_truncated_files_fail_cleanly() {
+        let (model, _) = toy_model(40, 4, 3, 9);
+        let bytes = model.to_bytes();
+        // truncations at every interesting boundary
+        for cut in [0usize, 4, 8, 12, 40, bytes.len() / 2, bytes.len() - 1] {
+            assert!(ScRbModel::from_bytes(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+        // bad magic
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xff;
+        assert!(ScRbModel::from_bytes(&bad).is_err());
+        // unsupported version
+        let mut bad = bytes.clone();
+        bad[8] = 0xee;
+        assert!(ScRbModel::from_bytes(&bad).is_err());
+        // trailing garbage
+        let mut bad = bytes.clone();
+        bad.push(0);
+        assert!(ScRbModel::from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn predict_batch_matches_predict_and_transform() {
+        let (model, x) = toy_model(80, 6, 3, 11);
+        let one_by_one = model.predict(&x).unwrap();
+        let mut ws = ServeWorkspace::new();
+        let mut batch = Vec::new();
+        model.predict_batch(&x, &mut ws, &mut batch).unwrap();
+        assert_eq!(one_by_one, batch);
+        // labels agree with an explicit transform + assign
+        let t = model.transform(&x).unwrap();
+        for i in 0..x.rows {
+            assert_eq!(batch[i], model.assign(t.row(i)));
+        }
+        // workspace reuse across batch sizes
+        let small = x.row_block(0, 5);
+        model.predict_batch(&small, &mut ws, &mut batch).unwrap();
+        assert_eq!(batch.len(), 5);
+        assert_eq!(&batch[..], &one_by_one[..5]);
+    }
+
+    #[test]
+    fn dimension_mismatch_is_an_error() {
+        let (model, _) = toy_model(30, 4, 3, 13);
+        let bad = Mat::zeros(5, 7);
+        assert!(model.predict(&bad).is_err());
+        assert!(model.transform(&bad).is_err());
+        let mut ws = ServeWorkspace::new();
+        let mut out = Vec::new();
+        assert!(model.predict_batch(&bad, &mut ws, &mut out).is_err());
+    }
+
+    #[test]
+    fn load_missing_file_is_io_error() {
+        let e = ScRbModel::load("/no/such/model.scrb").unwrap_err();
+        assert!(matches!(e, ScrbError::Io { .. }));
+    }
+}

@@ -1,0 +1,213 @@
+//! RB codebook: the data-independent part of the fitted SC_RB model.
+//!
+//! Algorithm 1's feature map is defined entirely by (a) the R random grids
+//! (widths ω and biases u, drawn from the kernel) and (b) the mapping from
+//! *occupied* bins to global feature columns discovered on the training
+//! set. Both are captured here so a fitted model can bin a never-seen
+//! point and land it in exactly the columns the training matrix Z used —
+//! the out-of-sample extension the serving path (`model::ScRbModel`)
+//! builds on. Bins that were empty during fit have no column: a new point
+//! falling in one simply contributes a zero feature, mirroring how the
+//! training Z only materializes non-empty bins.
+//!
+//! The bin→column map is a flat open-addressing hash table ([`BinTable`]):
+//! keys are the already well-mixed 64-bit `Grid::bin_hash` values, the
+//! load factor is kept ≤ 0.5, and lookups are allocation-free — the
+//! serving hot path does R probes per point.
+
+use super::grid::Grid;
+
+/// Sentinel marking an empty slot (column ids are capped below `u32::MAX`
+/// at RB construction).
+const EMPTY: u32 = u32::MAX;
+
+/// Flat open-addressing map from a grid's bin hash to its global feature
+/// column. Power-of-two capacity, linear probing, ≤ 0.5 load factor when
+/// sized with [`BinTable::with_capacity`]; `insert` refuses to fill the
+/// table completely (at least one empty slot always remains), so `get`
+/// probes are guaranteed to terminate.
+#[derive(Clone, Debug)]
+pub struct BinTable {
+    mask: usize,
+    len: usize,
+    keys: Vec<u64>,
+    cols: Vec<u32>,
+}
+
+impl BinTable {
+    /// Table sized for `n` occupied bins (capacity = next power of two
+    /// ≥ 2n, so probe chains stay short).
+    pub fn with_capacity(n: usize) -> BinTable {
+        let cap = (n.max(1) * 2).next_power_of_two();
+        BinTable { mask: cap - 1, len: 0, keys: vec![0; cap], cols: vec![EMPTY; cap] }
+    }
+
+    /// Insert (or overwrite) a bin-hash → column entry. Panics rather
+    /// than hangs if the fixed-capacity table would become completely
+    /// full — size it with `with_capacity(n)` for `n` distinct keys.
+    pub fn insert(&mut self, key: u64, col: u32) {
+        debug_assert!(col != EMPTY, "column id collides with the empty sentinel");
+        let mut i = (key as usize) & self.mask;
+        loop {
+            if self.cols[i] == EMPTY {
+                self.keys[i] = key;
+                self.cols[i] = col;
+                self.len += 1;
+                assert!(
+                    self.len < self.cols.len(),
+                    "BinTable over capacity ({} entries in {} slots); \
+                     build with with_capacity(n) for n distinct keys",
+                    self.len,
+                    self.cols.len()
+                );
+                return;
+            }
+            if self.keys[i] == key {
+                self.cols[i] = col;
+                return;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    /// Column of the bin hashed to `key`, if that bin was occupied at fit
+    /// time. Allocation-free.
+    #[inline]
+    pub fn get(&self, key: u64) -> Option<u32> {
+        let mut i = (key as usize) & self.mask;
+        loop {
+            let c = self.cols[i];
+            if c == EMPTY {
+                return None;
+            }
+            if self.keys[i] == key {
+                return Some(c);
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    /// Number of occupied entries.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Iterate the occupied (bin hash, column) pairs in slot order.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, u32)> + '_ {
+        self.keys
+            .iter()
+            .zip(self.cols.iter())
+            .filter(|(_, &c)| c != EMPTY)
+            .map(|(&k, &c)| (k, c))
+    }
+}
+
+/// The complete, serializable description of a fitted RB feature map:
+/// grid parameters plus the per-grid bin→column tables. Applying it to a
+/// point yields the point's (at most R) feature columns in the training
+/// matrix's column space.
+#[derive(Clone, Debug)]
+pub struct RbCodebook {
+    /// Number of grids R.
+    pub r: usize,
+    /// Input dimensionality d the grids were drawn over.
+    pub d_in: usize,
+    /// Kernel bandwidth σ the widths were sampled for (metadata; the
+    /// widths themselves are stored explicitly).
+    pub sigma: f64,
+    /// Seed the grids were sampled from (metadata / provenance).
+    pub seed: u64,
+    /// Total feature dimension D (number of occupied bins across grids).
+    pub dim: usize,
+    /// The R random grids (widths + biases per dimension).
+    pub grids: Vec<Grid>,
+    /// Per-grid bin-hash → global-column tables.
+    pub tables: Vec<BinTable>,
+}
+
+impl RbCodebook {
+    /// Global feature column of `row`'s bin in grid `j`, if that bin was
+    /// occupied on the training set. Allocation-free.
+    #[inline]
+    pub fn lookup(&self, j: usize, row: &[f64]) -> Option<u32> {
+        self.tables[j].get(self.grids[j].bin_hash(row))
+    }
+
+    /// Fraction of `row`'s R bins that map to fit-time columns — a serving
+    /// diagnostic: low coverage means the point is far from the training
+    /// distribution and its embedding is mostly extrapolated.
+    pub fn coverage(&self, row: &[f64]) -> f64 {
+        let hits = (0..self.r).filter(|&j| self.lookup(j, row).is_some()).count();
+        hits as f64 / self.r.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn table_roundtrips_entries() {
+        let mut t = BinTable::with_capacity(100);
+        let mut rng = Pcg::seed(3);
+        let entries: Vec<(u64, u32)> = (0..100).map(|i| (rng.next_u64(), i as u32)).collect();
+        for &(k, c) in &entries {
+            t.insert(k, c);
+        }
+        assert_eq!(t.len(), 100);
+        assert!(!t.is_empty());
+        for &(k, c) in &entries {
+            assert_eq!(t.get(k), Some(c), "key {k:#x}");
+        }
+        // absent keys miss
+        for _ in 0..100 {
+            let k = rng.next_u64();
+            if !entries.iter().any(|&(e, _)| e == k) {
+                assert_eq!(t.get(k), None);
+            }
+        }
+    }
+
+    #[test]
+    fn table_handles_clustered_keys() {
+        // adversarial: keys that all collide into the same initial slot
+        let mut t = BinTable::with_capacity(8);
+        let base = 0x42u64;
+        let cap = 16u64; // with_capacity(8) -> 16 slots
+        for i in 0..8u32 {
+            t.insert(base + i as u64 * cap * 4, i);
+        }
+        for i in 0..8u32 {
+            assert_eq!(t.get(base + i as u64 * cap * 4), Some(i));
+        }
+        assert_eq!(t.len(), 8);
+        // overwrite keeps a single entry
+        t.insert(base, 99);
+        assert_eq!(t.get(base), Some(99));
+        assert_eq!(t.len(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "over capacity")]
+    fn insert_beyond_capacity_panics_instead_of_hanging() {
+        let mut t = BinTable::with_capacity(1); // 2 slots
+        t.insert(1, 0);
+        t.insert(2, 1); // would leave no empty slot — probes could spin
+    }
+
+    #[test]
+    fn iter_yields_all_pairs() {
+        let mut t = BinTable::with_capacity(4);
+        t.insert(10, 0);
+        t.insert(20, 1);
+        t.insert(30, 2);
+        let mut got: Vec<(u64, u32)> = t.iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![(10, 0), (20, 1), (30, 2)]);
+    }
+}

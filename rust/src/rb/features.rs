@@ -17,6 +17,7 @@
 //! transpose layout the eigensolver's Ẑᵀ·B products run on. Baselines that
 //! need general CSR go through [`EllRb::to_csr`].
 
+use super::codebook::{BinTable, RbCodebook};
 use super::grid::{sample_grids, Grid};
 use crate::linalg::Mat;
 use crate::sparse::EllRb;
@@ -78,6 +79,9 @@ struct GridBins {
     n_bins: usize,
     /// Largest collision count max_b |{i : bin(x_i)=b}|.
     max_count: usize,
+    /// Bin-hash → local-id dictionary (retained so a fit can build the
+    /// out-of-sample [`RbCodebook`]; dropped on the plain batch path).
+    dict: BinDict,
 }
 
 fn bin_one_grid(x: &Mat, grid: &Grid) -> GridBins {
@@ -99,12 +103,37 @@ fn bin_one_grid(x: &Mat, grid: &Grid) -> GridBins {
         local,
         n_bins: dict.len(),
         max_count: counts.iter().copied().max().unwrap_or(0),
+        dict,
     }
 }
 
 /// Generate RB features for data `x` with `r` grids and Laplacian-kernel
 /// bandwidth `sigma`. Deterministic in `seed`.
 pub fn rb_features(x: &Mat, r: usize, sigma: f64, seed: u64) -> RbFeatures {
+    rb_features_impl(x, r, sigma, seed, false).0
+}
+
+/// [`rb_features`] that additionally returns the [`RbCodebook`] — the
+/// grids plus the bin→global-column maps — so a fitted model can project
+/// out-of-sample points into the same feature columns (the serving path).
+/// The feature matrix is identical to the plain call.
+pub fn rb_features_with_codebook(
+    x: &Mat,
+    r: usize,
+    sigma: f64,
+    seed: u64,
+) -> (RbFeatures, RbCodebook) {
+    let (features, codebook) = rb_features_impl(x, r, sigma, seed, true);
+    (features, codebook.expect("codebook requested"))
+}
+
+fn rb_features_impl(
+    x: &Mat,
+    r: usize,
+    sigma: f64,
+    seed: u64,
+    keep_codebook: bool,
+) -> (RbFeatures, Option<RbCodebook>) {
     assert!(r >= 1, "need at least one grid");
     let n = x.rows;
     let grids = sample_grids(r, x.cols, sigma, seed);
@@ -156,7 +185,27 @@ pub fn rb_features(x: &Mat, r: usize, sigma: f64, seed: u64) -> RbFeatures {
     });
     let z = EllRb::new(n, d_total, r, indices, vec![val; n]);
 
-    RbFeatures { z, r, bins_per_grid: per_grid.iter().map(|g| g.n_bins).collect(), kappa }
+    // The codebook rehomes each grid's bin dictionary into a flat probe
+    // table keyed by the raw bin hash, with values shifted to *global*
+    // columns — exactly the lookup a new point's features need.
+    let codebook = keep_codebook.then(|| {
+        let tables: Vec<BinTable> = per_grid
+            .iter()
+            .enumerate()
+            .map(|(j, g)| {
+                let mut table = BinTable::with_capacity(g.n_bins);
+                for (&h, &local) in &g.dict {
+                    table.insert(h, (offsets[j] + local as usize) as u32);
+                }
+                table
+            })
+            .collect();
+        RbCodebook { r, d_in: x.cols, sigma, seed, dim: d_total, grids, tables }
+    });
+
+    let features =
+        RbFeatures { z, r, bins_per_grid: per_grid.iter().map(|g| g.n_bins).collect(), kappa };
+    (features, codebook)
 }
 
 /// Exact (dense) Laplacian-kernel Gram matrix for comparison in tests and
@@ -247,6 +296,34 @@ mod tests {
         assert_eq!(a.z, b.z);
         let c = rb_features(&x, 16, 1.0, 6);
         assert_ne!(a.z, c.z);
+    }
+
+    #[test]
+    fn codebook_reproduces_training_columns() {
+        // For every training point and every grid, the codebook lookup
+        // must return exactly the column the feature matrix assigned.
+        let mut rng = Pcg::seed(96);
+        let x = rand_data(&mut rng, 150, 4);
+        let r = 24;
+        let (rb, cb) = rb_features_with_codebook(&x, r, 0.6, 13);
+        assert_eq!(cb.r, r);
+        assert_eq!(cb.d_in, 4);
+        assert_eq!(cb.dim, rb.dim());
+        assert_eq!(cb.tables.iter().map(|t| t.len()).sum::<usize>(), rb.dim());
+        for i in 0..150 {
+            let row = x.row(i);
+            let cols = rb.z.row_indices(i);
+            for j in 0..r {
+                assert_eq!(cb.lookup(j, row), Some(cols[j]), "point {i} grid {j}");
+            }
+            assert_eq!(cb.coverage(row), 1.0);
+        }
+        // a far-away point misses bins that were never occupied
+        let far = vec![1e6; 4];
+        assert!(cb.coverage(&far) < 1.0);
+        // and the with-codebook path emits the identical feature matrix
+        let plain = rb_features(&x, r, 0.6, 13);
+        assert_eq!(plain.z, rb.z);
     }
 
     #[test]

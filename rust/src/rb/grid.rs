@@ -21,6 +21,16 @@ pub struct Grid {
 }
 
 impl Grid {
+    /// Rebuild a grid from explicit per-dimension widths and biases (the
+    /// serialized form a fitted model persists — grids must be
+    /// reconstructible without replaying the sampling RNG).
+    pub fn from_params(widths: Vec<f64>, biases: Vec<f64>) -> Grid {
+        assert_eq!(widths.len(), biases.len(), "one bias per width");
+        assert!(widths.iter().all(|&w| w > 0.0), "widths must be positive");
+        let inv_widths = widths.iter().map(|w| 1.0 / w).collect();
+        Grid { widths, biases, inv_widths }
+    }
+
     /// Draw a grid for the Laplacian kernel with bandwidth `sigma` over
     /// `d` dimensions.
     pub fn sample_laplacian(d: usize, sigma: f64, rng: &mut Pcg) -> Grid {
@@ -125,6 +135,18 @@ mod tests {
             (p - expect).abs() < 0.01,
             "collision prob {p:.4} vs kernel {expect:.4}"
         );
+    }
+
+    #[test]
+    fn from_params_reproduces_binning() {
+        let mut rng = Pcg::seed(8);
+        let g = Grid::sample_laplacian(4, 1.3, &mut rng);
+        let rebuilt = Grid::from_params(g.widths.clone(), g.biases.clone());
+        let x = [0.7, -1.2, 3.4, 0.02];
+        assert_eq!(g.bin_hash(&x), rebuilt.bin_hash(&x));
+        for l in 0..4 {
+            assert_eq!(g.bin_coord(l, x[l]), rebuilt.bin_coord(l, x[l]));
+        }
     }
 
     #[test]

@@ -1,9 +1,20 @@
 //! Random Binning features (the paper's Algorithm 1): random-grid sampling
 //! and sparse feature-matrix generation, plus the κ estimator of
 //! Definition 1 that drives the Theorem 1 convergence rate.
+//!
+//! The [`codebook`] submodule captures the *fitted* feature map — grid
+//! parameters plus the bin→column tables discovered on the training set —
+//! which is what makes RB's out-of-sample extension (`model::ScRbModel`)
+//! a pure lookup: the map itself is data-independent (Algorithm 1 draws
+//! grids from the kernel, not the data), so a new point bins into the
+//! learned column space without refitting anything.
 
+pub mod codebook;
 pub mod features;
 pub mod grid;
 
-pub use features::{exact_laplacian_gram, rb_features, RbFeatures};
+pub use codebook::{BinTable, RbCodebook};
+pub use features::{
+    exact_laplacian_gram, rb_features, rb_features_with_codebook, RbFeatures,
+};
 pub use grid::{sample_grids, Grid};

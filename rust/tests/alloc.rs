@@ -6,15 +6,22 @@
 //! of allocations, because only entry provisioning and the returned
 //! triplets ever touch the heap.
 //!
+//! The serving contract (ISSUE 3 acceptance) is verified the same way:
+//! once a `ServeWorkspace` is warm and the output vector is sized,
+//! steady-state `predict_batch` calls perform **zero** heap allocations.
+//!
 //! Measured single-threaded (`SCRB_THREADS=1`): with worker threads the
 //! scoped fork/join bookkeeping allocates O(threads) per parallel section —
 //! data-size independent — which is the documented residual. Everything is
 //! in one #[test] because the allocator counters are process-global.
 
+use scrb::cluster::{Env, MethodKind};
+use scrb::config::{Engine, Kernel, PipelineConfig};
 use scrb::eigen::{
     davidson_svd_ws, lanczos_svd_ws, DavidsonOpts, LanczosOpts, SolverWorkspace,
 };
 use scrb::linalg::Mat;
+use scrb::model::{FittedModel, ServeWorkspace};
 use scrb::rb::rb_features;
 use scrb::util::alloc_count::{allocations, CountingAlloc};
 use scrb::util::rng::Pcg;
@@ -99,5 +106,29 @@ fn fused_gram_and_solver_steady_state_are_allocation_free() {
         "Lanczos restart cycles allocate: {short_allocs} vs {long_allocs} \
          ({} vs {} cycles)",
         short.stats.iterations, long.stats.iterations
+    );
+
+    // -- serving hot path: once the workspace is warm and the output
+    // vector is sized, predict_batch allocates nothing per batch.
+    let cfg = PipelineConfig::builder()
+        .k(3)
+        .r(32)
+        .kernel(Kernel::Laplacian { sigma: 0.4 })
+        .engine(Engine::Native)
+        .kmeans_replicates(2)
+        .build();
+    let fitted = MethodKind::ScRb.fit(&Env::new(cfg), &x).expect("SC_RB fit");
+    let mut serve_ws = ServeWorkspace::new();
+    let mut labels: Vec<usize> = Vec::new();
+    fitted.model.predict_batch(&x, &mut serve_ws, &mut labels).unwrap(); // warm
+    assert_eq!(labels, fitted.output.labels, "train predictions must match fit");
+    let before = allocations();
+    for _ in 0..5 {
+        fitted.model.predict_batch(&x, &mut serve_ws, &mut labels).unwrap();
+    }
+    assert_eq!(
+        allocations() - before,
+        0,
+        "predict_batch allocated in steady state"
     );
 }

@@ -7,13 +7,13 @@ use scrb::data::synth;
 use scrb::metrics::{accuracy, average_rank_scores, nmi};
 
 fn cfg(k: usize, r: usize, sigma: f64) -> PipelineConfig {
-    let mut cfg = PipelineConfig::default();
-    cfg.engine = Engine::Native;
-    cfg.k = k;
-    cfg.r = r;
-    cfg.kernel = Kernel::Laplacian { sigma };
-    cfg.kmeans_replicates = 3;
-    cfg
+    PipelineConfig::builder()
+        .engine(Engine::Native)
+        .k(k)
+        .r(r)
+        .kernel(Kernel::Laplacian { sigma })
+        .kmeans_replicates(3)
+        .build()
 }
 
 #[test]
@@ -27,8 +27,8 @@ fn rb_converges_faster_than_rf_at_small_r() {
         let ds = synth::concentric_rings(400, 2, 2, 0.12, 100 + seed);
         let mut c = cfg(2, 32, 0.3);
         c.seed = seed;
-        let rb = MethodKind::ScRb.run(&Env::new(c.clone()), &ds.x);
-        let rf = MethodKind::ScRf.run(&Env::new(c), &ds.x);
+        let rb = MethodKind::ScRb.run(&Env::new(c.clone()), &ds.x).unwrap();
+        let rf = MethodKind::ScRf.run(&Env::new(c), &ds.x).unwrap();
         rb_total += nmi(&rb.labels, &ds.y);
         rf_total += nmi(&rf.labels, &ds.y);
     }
@@ -44,8 +44,8 @@ fn sc_family_beats_similarity_family_on_manifolds() {
     // compared to similarity-based methods" — test on ring geometry.
     let ds = synth::concentric_rings(500, 2, 2, 0.1, 77);
     let c = cfg(2, 128, 0.3);
-    let sc_rb = MethodKind::ScRb.run(&Env::new(c.clone()), &ds.x);
-    let kk_rf = MethodKind::KkRf.run(&Env::new(c), &ds.x);
+    let sc_rb = MethodKind::ScRb.run(&Env::new(c.clone()), &ds.x).unwrap();
+    let kk_rf = MethodKind::KkRf.run(&Env::new(c), &ds.x).unwrap();
     let a_rb = accuracy(&sc_rb.labels, &ds.y);
     let a_kk = accuracy(&kk_rf.labels, &ds.y);
     assert!(
@@ -63,7 +63,7 @@ fn rank_aggregation_orders_methods_sensibly() {
     let scores: Vec<_> = methods
         .iter()
         .map(|m| {
-            let out = m.run(&Env::new(c.clone()), &ds.x);
+            let out = m.run(&Env::new(c.clone()), &ds.x).unwrap();
             scrb::metrics::all_metrics(&out.labels, &ds.y)
         })
         .collect();
@@ -77,9 +77,9 @@ fn rank_aggregation_orders_methods_sensibly() {
 fn nystrom_and_lsc_track_exact_sc_on_blobs() {
     let ds = synth::gaussian_blobs(300, 3, 3, 9.0, 61);
     let c = cfg(3, 64, 0.5);
-    let exact = MethodKind::ScExact.run(&Env::new(c.clone()), &ds.x);
-    let nys = MethodKind::ScNys.run(&Env::new(c.clone()), &ds.x);
-    let lsc = MethodKind::ScLsc.run(&Env::new(c), &ds.x);
+    let exact = MethodKind::ScExact.run(&Env::new(c.clone()), &ds.x).unwrap();
+    let nys = MethodKind::ScNys.run(&Env::new(c.clone()), &ds.x).unwrap();
+    let lsc = MethodKind::ScLsc.run(&Env::new(c), &ds.x).unwrap();
     let a_exact = accuracy(&exact.labels, &ds.y);
     let a_nys = accuracy(&nys.labels, &ds.y);
     let a_lsc = accuracy(&lsc.labels, &ds.y);
@@ -95,7 +95,7 @@ fn gaussian_kernel_path_works_for_rf_family() {
     let mut c = cfg(2, 256, 1.0);
     c.kernel = Kernel::Gaussian { sigma: 1.0 };
     for m in [MethodKind::ScRf, MethodKind::SvRf, MethodKind::KkRf] {
-        let out = m.run(&Env::new(c.clone()), &ds.x);
+        let out = m.run(&Env::new(c.clone()), &ds.x).unwrap();
         let acc = accuracy(&out.labels, &ds.y);
         assert!(acc > 0.85, "{m:?} gaussian acc {acc}");
     }
@@ -106,8 +106,8 @@ fn poker_like_data_flattens_method_differences() {
     // the paper's poker row: near-structureless data → everyone ties-ish
     let ds = synth::paper_benchmark("poker", 4096, 5);
     let c = cfg(ds.k, 64, 0.5);
-    let rb = MethodKind::ScRb.run(&Env::new(c.clone()), &ds.x);
-    let km = MethodKind::KMeans.run(&Env::new(c), &ds.x);
+    let rb = MethodKind::ScRb.run(&Env::new(c.clone()), &ds.x).unwrap();
+    let km = MethodKind::KMeans.run(&Env::new(c), &ds.x).unwrap();
     let n_rb = nmi(&rb.labels, &ds.y);
     let n_km = nmi(&km.labels, &ds.y);
     assert!(n_rb < 0.2 && n_km < 0.2, "poker-like should be near-structureless: {n_rb} {n_km}");

@@ -1,0 +1,243 @@
+//! Out-of-sample serving correctness (ISSUE 3 acceptance):
+//! - `predict` on the training set reproduces `fit` labels exactly;
+//! - held-out points from two_moons / gaussian_blobs land in the correct
+//!   cluster with accuracy ≥ 0.9;
+//! - save → load → predict round-trips bit-identically;
+//! - error paths (dimension mismatch, missing/corrupt model files) are
+//!   typed `ScrbError`s, never panics.
+
+use scrb::cluster::{Env, MethodKind};
+use scrb::config::{Engine, Kernel, PipelineConfig};
+use scrb::data::{synth, Dataset};
+use scrb::error::ScrbError;
+use scrb::linalg::Mat;
+use scrb::metrics::accuracy;
+use scrb::model::{ClusterModel, FitResult, FittedModel, ScRbModel, ServeWorkspace};
+use scrb::util::rng::Pcg;
+
+fn rb_cfg(k: usize, r: usize, sigma: f64, seed: u64) -> PipelineConfig {
+    PipelineConfig::builder()
+        .engine(Engine::Native)
+        .k(k)
+        .r(r)
+        .kernel(Kernel::Laplacian { sigma })
+        .kmeans_replicates(3)
+        .seed(seed)
+        .build()
+}
+
+fn fit_scrb(cfg: PipelineConfig, x: &Mat) -> FitResult {
+    MethodKind::ScRb.fit(&Env::new(cfg), x).expect("SC_RB fit")
+}
+
+/// Split a shuffled dataset into (train, test) at `n_train`.
+fn split(ds: &Dataset, n_train: usize) -> (Mat, Vec<usize>, Mat, Vec<usize>) {
+    let train_idx: Vec<usize> = (0..n_train).collect();
+    let test_idx: Vec<usize> = (n_train..ds.n()).collect();
+    (
+        ds.x.select_rows(&train_idx),
+        train_idx.iter().map(|&i| ds.y[i]).collect(),
+        ds.x.select_rows(&test_idx),
+        test_idx.iter().map(|&i| ds.y[i]).collect(),
+    )
+}
+
+#[test]
+fn predict_reproduces_fit_labels_on_training_set() {
+    // moons: the non-convex geometry the paper leads with
+    for seed in [3u64, 11, 29] {
+        let ds = synth::two_moons(400, 0.05, seed);
+        let fitted = fit_scrb(rb_cfg(2, 128, 0.15, seed), &ds.x);
+        let predicted = fitted.model.predict(&ds.x).unwrap();
+        assert_eq!(predicted, fitted.output.labels, "moons seed {seed}");
+    }
+    // blobs across K
+    for (seed, k) in [(5u64, 3usize), (17, 4)] {
+        let ds = synth::gaussian_blobs(300, 4, k, 8.0, seed);
+        let fitted = fit_scrb(rb_cfg(k, 64, 0.6, seed), &ds.x);
+        let predicted = fitted.model.predict(&ds.x).unwrap();
+        assert_eq!(predicted, fitted.output.labels, "blobs seed {seed} k {k}");
+    }
+}
+
+#[test]
+fn prop_training_predictions_match_fit() {
+    // property over random shapes: predict == fit labels on the training
+    // set for every sampled (n, k, r)
+    scrb::util::prop::check_named("predict==fit on train", 6, |rng, case| {
+        let k = 2 + rng.below(2);
+        let n = 150 + rng.below(150);
+        let r: usize = 32 << rng.below(2);
+        let ds = synth::gaussian_blobs(n, 3, k, 8.0, 1000 + case as u64);
+        let fitted = fit_scrb(rb_cfg(k, r, 0.7, case as u64), &ds.x);
+        let predicted = fitted.model.predict(&ds.x).unwrap();
+        assert_eq!(predicted, fitted.output.labels, "n={n} k={k} r={r}");
+    });
+}
+
+#[test]
+fn held_out_moons_predicted_correctly() {
+    let mut ds = synth::two_moons(800, 0.05, 7);
+    ds.shuffle(&mut Pcg::seed(1));
+    let (train_x, train_y, test_x, test_y) = split(&ds, 600);
+    let fitted = fit_scrb(rb_cfg(2, 256, 0.15, 7), &train_x);
+    let train_acc = accuracy(&fitted.output.labels, &train_y);
+    assert!(train_acc > 0.9, "train accuracy {train_acc}");
+    let predicted = fitted.model.predict(&test_x).unwrap();
+    let test_acc = accuracy(&predicted, &test_y);
+    assert!(test_acc >= 0.9, "held-out moons accuracy {test_acc}");
+}
+
+#[test]
+fn held_out_blobs_predicted_correctly() {
+    let mut ds = synth::gaussian_blobs(500, 4, 3, 8.0, 13);
+    ds.shuffle(&mut Pcg::seed(2));
+    let (train_x, train_y, test_x, test_y) = split(&ds, 350);
+    let fitted = fit_scrb(rb_cfg(3, 128, 0.7, 13), &train_x);
+    let train_acc = accuracy(&fitted.output.labels, &train_y);
+    assert!(train_acc > 0.9, "train accuracy {train_acc}");
+    let predicted = fitted.model.predict(&test_x).unwrap();
+    let test_acc = accuracy(&predicted, &test_y);
+    assert!(test_acc >= 0.9, "held-out blobs accuracy {test_acc}");
+}
+
+#[test]
+fn save_load_predict_roundtrip_is_exact() {
+    let ds = synth::gaussian_blobs(300, 4, 3, 8.0, 21);
+    let fitted = fit_scrb(rb_cfg(3, 64, 0.7, 21), &ds.x);
+
+    let dir = std::env::temp_dir().join("scrb_test_model");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("roundtrip.scrb");
+    let path = path.to_str().unwrap();
+    fitted.model.save(path).unwrap();
+
+    let loaded = ScRbModel::load(path).unwrap();
+    // identical predictions on the training set and on fresh points
+    assert_eq!(
+        fitted.model.predict(&ds.x).unwrap(),
+        loaded.predict(&ds.x).unwrap()
+    );
+    let fresh = synth::gaussian_blobs(120, 4, 3, 8.0, 99).x;
+    assert_eq!(
+        fitted.model.predict(&fresh).unwrap(),
+        loaded.predict(&fresh).unwrap()
+    );
+    // transform agrees bit for bit (f64 round-trips exactly)
+    let a = fitted.model.transform(&fresh).unwrap();
+    let b = loaded.transform(&fresh).unwrap();
+    assert_eq!(a.data, b.data);
+    // and predict on training data still equals fit labels after reload
+    assert_eq!(loaded.predict(&ds.x).unwrap(), fitted.output.labels);
+}
+
+#[test]
+fn predict_batch_matches_predict_across_batch_sizes() {
+    let ds = synth::gaussian_blobs(240, 3, 3, 8.0, 31);
+    let fitted = fit_scrb(rb_cfg(3, 64, 0.7, 31), &ds.x);
+    let reference = fitted.model.predict(&ds.x).unwrap();
+    let mut ws = ServeWorkspace::new();
+    let mut out = Vec::new();
+    // full batch, then shrinking batches reusing the same workspace
+    for take in [240usize, 240, 17, 1] {
+        let block = ds.x.row_block(0, take);
+        fitted.model.predict_batch(&block, &mut ws, &mut out).unwrap();
+        assert_eq!(&out[..], &reference[..take], "batch size {take}");
+    }
+}
+
+#[test]
+fn kmeans_fitted_model_is_exact_on_training_set() {
+    let ds = synth::gaussian_blobs(300, 4, 3, 9.0, 41);
+    let cfg = PipelineConfig::builder()
+        .engine(Engine::Native)
+        .k(3)
+        .kmeans_replicates(3)
+        .build();
+    let fitted = MethodKind::KMeans.fit(&Env::new(cfg), &ds.x).unwrap();
+    assert_eq!(fitted.model.predict(&ds.x).unwrap(), fitted.output.labels);
+}
+
+#[test]
+fn transductive_fallback_serves_baselines() {
+    // SC_Nys has no native out-of-sample path; its class-mean fallback
+    // should still place held-out blob points well.
+    let mut ds = synth::gaussian_blobs(400, 4, 3, 9.0, 51);
+    ds.shuffle(&mut Pcg::seed(4));
+    let (train_x, _train_y, test_x, test_y) = split(&ds, 300);
+    let cfg = PipelineConfig::builder()
+        .engine(Engine::Native)
+        .k(3)
+        .r(64)
+        .kernel(Kernel::Gaussian { sigma: 0.6 })
+        .kmeans_replicates(3)
+        .build();
+    let fitted = MethodKind::ScNys.fit(&Env::new(cfg), &train_x).unwrap();
+    let predicted = fitted.model.predict(&test_x).unwrap();
+    let acc = accuracy(&predicted, &test_y);
+    assert!(acc > 0.85, "class-mean fallback accuracy {acc}");
+}
+
+#[test]
+fn every_method_fits_through_the_model_trait() {
+    // the ClusterModel routing covers all nine methods
+    let ds = synth::gaussian_blobs(180, 3, 2, 9.0, 61);
+    let cfg = PipelineConfig::builder()
+        .engine(Engine::Native)
+        .k(2)
+        .r(32)
+        .kernel(Kernel::Gaussian { sigma: 0.6 })
+        .kmeans_replicates(2)
+        .build();
+    for kind in MethodKind::ALL {
+        let model: &dyn ClusterModel = &kind;
+        let fitted = model.fit(&Env::new(cfg.clone()), &ds.x).unwrap();
+        assert_eq!(fitted.output.labels.len(), 180, "{kind:?}");
+        assert_eq!(fitted.model.n_clusters(), 2, "{kind:?}");
+        assert_eq!(fitted.model.input_dim(), 3, "{kind:?}");
+        let predicted = fitted.model.predict(&ds.x).unwrap();
+        assert_eq!(predicted.len(), 180, "{kind:?}");
+        assert!(predicted.iter().all(|&l| l < 2), "{kind:?}");
+    }
+}
+
+#[test]
+fn model_error_paths_are_typed() {
+    let ds = synth::gaussian_blobs(150, 3, 2, 8.0, 71);
+    let fitted = fit_scrb(rb_cfg(2, 32, 0.7, 71), &ds.x);
+
+    // dimension mismatch
+    let bad = Mat::zeros(4, 9);
+    assert!(matches!(
+        fitted.model.predict(&bad).unwrap_err(),
+        ScrbError::InvalidInput(_)
+    ));
+
+    // missing model file
+    assert!(matches!(
+        ScRbModel::load("/no/such/dir/model.scrb").unwrap_err(),
+        ScrbError::Io { .. }
+    ));
+
+    // corrupt model file
+    let dir = std::env::temp_dir().join("scrb_test_model");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("corrupt.scrb");
+    std::fs::write(&path, b"definitely not a model").unwrap();
+    assert!(matches!(
+        ScRbModel::load(path.to_str().unwrap()).unwrap_err(),
+        ScrbError::Model(_)
+    ));
+
+    // truncated model file
+    let good = dir.join("truncated.scrb");
+    fitted.model.save(good.to_str().unwrap()).unwrap();
+    let bytes = std::fs::read(&good).unwrap();
+    std::fs::write(&good, &bytes[..bytes.len() / 2]).unwrap();
+    assert!(ScRbModel::load(good.to_str().unwrap()).is_err());
+
+    // exact SC refuses oversized input through the trait, as an Err
+    let huge = Mat::zeros(scrb::cluster::sc_exact::MAX_EXACT_N + 1, 2);
+    let cfg = PipelineConfig::builder().engine(Engine::Native).k(2).build();
+    assert!(MethodKind::ScExact.fit(&Env::new(cfg), &huge).is_err());
+}

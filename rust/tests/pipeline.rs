@@ -9,10 +9,10 @@ use scrb::data::synth;
 use scrb::metrics::{accuracy, all_metrics, nmi};
 
 fn native_cfg() -> PipelineConfig {
-    let mut cfg = PipelineConfig::default();
-    cfg.engine = scrb::config::Engine::Native;
-    cfg.kmeans_replicates = 3;
-    cfg
+    PipelineConfig::builder()
+        .engine(scrb::config::Engine::Native)
+        .kmeans_replicates(3)
+        .build()
 }
 
 #[test]
@@ -24,14 +24,14 @@ fn sc_rb_converges_to_exact_sc_in_r() {
     cfg.k = 2;
     cfg.kernel = Kernel::Laplacian { sigma: 0.2 };
 
-    let exact = MethodKind::ScExact.run(&Env::new(cfg.clone()), &ds.x);
+    let exact = MethodKind::ScExact.run(&Env::new(cfg.clone()), &ds.x).unwrap();
     let exact_acc = accuracy(&exact.labels, &ds.y);
     assert!(exact_acc > 0.95, "exact SC should solve rings: {exact_acc}");
 
     let mut accs = Vec::new();
     for r in [8usize, 64, 512] {
         cfg.r = r;
-        let rb = MethodKind::ScRb.run(&Env::new(cfg.clone()), &ds.x);
+        let rb = MethodKind::ScRb.run(&Env::new(cfg.clone()), &ds.x).unwrap();
         accs.push(accuracy(&rb.labels, &ds.y));
     }
     assert!(
@@ -49,8 +49,8 @@ fn sc_beats_kmeans_on_nonconvex() {
     cfg.k = 2;
     cfg.r = 256;
     cfg.kernel = Kernel::Laplacian { sigma: 0.15 };
-    let km = MethodKind::KMeans.run(&Env::new(cfg.clone()), &ds.x);
-    let rb = MethodKind::ScRb.run(&Env::new(cfg), &ds.x);
+    let km = MethodKind::KMeans.run(&Env::new(cfg.clone()), &ds.x).unwrap();
+    let rb = MethodKind::ScRb.run(&Env::new(cfg), &ds.x).unwrap();
     let km_nmi = nmi(&km.labels, &ds.y);
     let rb_nmi = nmi(&rb.labels, &ds.y);
     assert!(
@@ -66,7 +66,7 @@ fn all_methods_produce_valid_output_on_benchmark() {
     let ds = experiment::dataset(&coord, "pendigits");
     let cfg = coord.cfg_for(&ds, None);
     for kind in MethodKind::ALL {
-        let run = coord.run_method(kind, &ds, &cfg);
+        let run = coord.run_method(kind, &ds, &cfg).unwrap();
         assert_eq!(run.method, kind);
         let m = run.metrics;
         for v in m.as_array() {
@@ -89,7 +89,7 @@ fn solver_choice_does_not_change_clusters_when_converged() {
     let mut outs = Vec::new();
     for solver in [Solver::Davidson, Solver::Lanczos] {
         cfg.solver = solver;
-        let out = MethodKind::ScRb.run(&Env::new(cfg.clone()), &ds.x);
+        let out = MethodKind::ScRb.run(&Env::new(cfg.clone()), &ds.x).unwrap();
         assert!(out.info.svd.as_ref().unwrap().converged, "{solver:?} converged");
         outs.push(out);
     }
@@ -103,8 +103,8 @@ fn deterministic_across_runs() {
     let ds = synth::paper_benchmark("cod_rna", 2048, 3);
     let coord = Coordinator::new(native_cfg(), 2048);
     let cfg = coord.cfg_for(&ds, None);
-    let a = coord.run_method(MethodKind::ScRb, &ds, &cfg);
-    let b = coord.run_method(MethodKind::ScRb, &ds, &cfg);
+    let a = coord.run_method(MethodKind::ScRb, &ds, &cfg).unwrap();
+    let b = coord.run_method(MethodKind::ScRb, &ds, &cfg).unwrap();
     assert_eq!(a.metrics, b.metrics, "same seed must give identical metrics");
 }
 
@@ -132,7 +132,7 @@ fn libsvm_file_roundtrip_through_pipeline() {
     cfg.k = 2;
     cfg.r = 64;
     cfg.kernel = Kernel::Laplacian { sigma: 0.4 };
-    let out = MethodKind::ScRb.run(&Env::new(cfg), &loaded.x);
+    let out = MethodKind::ScRb.run(&Env::new(cfg), &loaded.x).unwrap();
     assert!(accuracy(&out.labels, &loaded.y) > 0.9);
 }
 

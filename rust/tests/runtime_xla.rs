@@ -135,14 +135,15 @@ fn full_pipeline_with_xla_engine_matches_native() {
     use scrb::config::PipelineConfig;
 
     let ds = scrb::data::two_moons(500, 0.05, 9);
-    let mut cfg = PipelineConfig::default();
-    cfg.k = 2;
-    cfg.r = 128;
-    cfg.kernel = Kernel::Laplacian { sigma: 0.15 };
-    cfg.kmeans_replicates = 3;
+    let cfg = PipelineConfig::builder()
+        .k(2)
+        .r(128)
+        .kernel(Kernel::Laplacian { sigma: 0.15 })
+        .kmeans_replicates(3)
+        .build();
 
-    let native = MethodKind::ScRb.run(&Env::with_xla(cfg.clone(), None), &ds.x);
-    let xla = MethodKind::ScRb.run(&Env::with_xla(cfg, Some(&rt)), &ds.x);
+    let native = MethodKind::ScRb.run(&Env::with_xla(cfg.clone(), None), &ds.x).unwrap();
+    let xla = MethodKind::ScRb.run(&Env::with_xla(cfg, Some(&rt)), &ds.x).unwrap();
     let acc_native = scrb::metrics::accuracy(&native.labels, &ds.y);
     let acc_xla = scrb::metrics::accuracy(&xla.labels, &ds.y);
     assert!(acc_native > 0.9, "native {acc_native}");
