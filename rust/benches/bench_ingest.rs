@@ -1,0 +1,148 @@
+//! Streaming-ingestion benchmark: generate a synthetic LibSVM file, then
+//! time the three chunked stages — raw chunk reading, the stats pass, and
+//! the block-wise featurize pass — reporting rows/sec per stage and the
+//! streaming memory-bound accounting (dense chunk scratch bytes, peak
+//! substrate block bytes).
+//!
+//!     cargo bench --bench bench_ingest
+//!     SCRB_BENCH_SMOKE=1 cargo bench --bench bench_ingest   # CI smoke
+//!
+//! Full mode streams a 1,000,000-row file (the ISSUE 4 acceptance scale:
+//! resident input is one `chunk_rows × d` scratch, never the file);
+//! smoke mode shrinks to 20k rows. Results land in `BENCH_ingest.json`
+//! (override with SCRB_BENCH_JSON): `metrics.featurize_rows_per_sec` is
+//! the headline number, `metrics.peak_block_bytes` the memory bound.
+
+use scrb::stream::{stats_pass, ChunkReader, LibsvmChunks, SparseChunk, StreamFeaturizer};
+use scrb::util::bench::Bencher;
+use scrb::util::rng::Pcg;
+use std::io::Write as _;
+use std::time::Instant;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let smoke = std::env::var("SCRB_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let n: usize = if smoke { 20_000 } else { 1_000_000 };
+    let d: usize = 20;
+    let nnz_per_row: usize = 6;
+    let r: usize = 32;
+    let chunk_rows: usize = 4096;
+    let block_rows: usize = 65_536;
+    println!(
+        "== ingest bench (threads={}, n={n}, d={d}, r={r}, chunk_rows={chunk_rows}{}) ==",
+        scrb::util::threads::num_threads(),
+        if smoke { ", SMOKE" } else { "" }
+    );
+
+    // synthetic sparse LibSVM file (deterministic)
+    let path = std::env::temp_dir()
+        .join(format!("scrb_bench_ingest_{}.libsvm", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string();
+    let t0 = Instant::now();
+    {
+        use std::fmt::Write as _;
+        let file = std::fs::File::create(&path).expect("create bench file");
+        let mut w = std::io::BufWriter::new(file);
+        let mut rng = Pcg::seed(42);
+        let mut line = String::new();
+        let mut cols: Vec<usize> = Vec::with_capacity(nnz_per_row);
+        for _ in 0..n {
+            line.clear();
+            write!(line, "{}", rng.below(3) + 1).unwrap();
+            // LibSVM requires strictly ascending indices per row
+            cols.clear();
+            cols.extend((0..nnz_per_row).map(|_| rng.below(d) + 1));
+            cols.sort_unstable();
+            cols.dedup();
+            for &col in &cols {
+                let val = (rng.f64() * 1000.0).round() / 1000.0;
+                write!(line, " {col}:{val}").unwrap();
+            }
+            line.push('\n');
+            w.write_all(line.as_bytes()).unwrap();
+        }
+        w.flush().unwrap();
+    }
+    let file_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    println!("    generated {} MB in {:?}", file_bytes / (1 << 20), t0.elapsed());
+
+    let mut reader = LibsvmChunks::from_path(&path, chunk_rows).expect("open bench file");
+    let mut chunk = SparseChunk::new();
+
+    // stage 1: raw chunked reading (parse only)
+    let t0 = Instant::now();
+    let mut rows = 0usize;
+    while reader.next_chunk(&mut chunk).expect("read chunk") {
+        rows += chunk.rows();
+    }
+    let read_time = t0.elapsed();
+    assert_eq!(rows, n);
+    b.record_once(&format!("chunk read n={n}"), read_time);
+    let read_rps = n as f64 / read_time.as_secs_f64().max(1e-12);
+    println!("    read:      {read_rps:.3e} rows/s");
+
+    // stage 2: the stats pass (read + min/span/census accumulation)
+    reader.reset().expect("rewind");
+    let t0 = Instant::now();
+    let stats = stats_pass(&mut reader, &mut chunk).expect("stats pass");
+    let stats_time = t0.elapsed();
+    assert_eq!(stats.n, n);
+    b.record_once(&format!("stats pass n={n}"), stats_time);
+    let stats_rps = n as f64 / stats_time.as_secs_f64().max(1e-12);
+    println!("    stats:     {stats_rps:.3e} rows/s");
+    let dim = reader.dim();
+    let (lo, span) = stats.finalize(dim);
+
+    // stage 3: the featurize pass (read + densify + bin + block assembly)
+    reader.reset().expect("rewind");
+    let mut fz =
+        StreamFeaturizer::new(r, dim, 0.5, 7, lo, span, block_rows, n);
+    let t0 = Instant::now();
+    while reader.next_chunk(&mut chunk).expect("read chunk") {
+        fz.push_chunk(&chunk);
+    }
+    let feats = fz.finish().expect("featurize");
+    let feat_time = t0.elapsed();
+    b.record_once(&format!("featurize pass n={n} r={r}"), feat_time);
+    let feat_rps = n as f64 / feat_time.as_secs_f64().max(1e-12);
+    println!(
+        "    featurize: {feat_rps:.3e} rows/s (D={}, kappa={:.2}, {} blocks)",
+        feats.codebook.dim,
+        feats.kappa,
+        feats.z.n_blocks()
+    );
+
+    // memory-bound accounting: resident input scratch vs substrate blocks
+    let scratch_bytes = chunk_rows * dim * 8;
+    let peak_block = feats.z.peak_block_bytes();
+    let substrate = feats.z.bytes();
+    println!(
+        "    memory: chunk scratch {} KB, peak block {} KB, substrate total {} MB",
+        scratch_bytes / 1024,
+        peak_block / 1024,
+        substrate / (1 << 20)
+    );
+
+    b.metric("ingest_n", n as f64);
+    b.metric("ingest_dim", dim as f64);
+    b.metric("ingest_file_bytes", file_bytes as f64);
+    b.metric("read_rows_per_sec", read_rps);
+    b.metric("stats_rows_per_sec", stats_rps);
+    b.metric("featurize_rows_per_sec", feat_rps);
+    b.metric("chunk_scratch_bytes", scratch_bytes as f64);
+    b.metric("peak_block_bytes", peak_block as f64);
+    b.metric("substrate_bytes", substrate as f64);
+    b.metric("feature_dim", feats.codebook.dim as f64);
+
+    std::fs::remove_file(&path).ok();
+
+    println!("\n{}", b.report());
+    let json_path =
+        std::env::var("SCRB_BENCH_JSON").unwrap_or_else(|_| "BENCH_ingest.json".into());
+    match b.write_json(&json_path) {
+        Ok(()) => println!("[saved {json_path}]"),
+        Err(e) => eprintln!("[failed to save {json_path}: {e}]"),
+    }
+}

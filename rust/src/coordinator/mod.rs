@@ -125,6 +125,42 @@ impl Coordinator {
     pub fn exact_sc_feasible(&self, n: usize) -> bool {
         n <= crate::cluster::sc_exact::MAX_EXACT_N.min(20_000)
     }
+
+    /// Fit SC_RB out-of-core from a LibSVM file: the coordinator's
+    /// streaming entry point (`scrb fit --stream`). Unlike the in-memory
+    /// drivers there is no data matrix to select σ on, so the bandwidth
+    /// must be pinned (`sigma` here, `--sigma` at the CLI); K defaults to
+    /// the stream's label census when not given, mirroring
+    /// [`Coordinator::cfg_for`].
+    pub fn fit_streaming(
+        &self,
+        path: &str,
+        chunk_rows: usize,
+        sigma: f64,
+        k: Option<usize>,
+        block_rows: usize,
+    ) -> Result<crate::stream::StreamFit, ScrbError> {
+        if chunk_rows == 0 || block_rows == 0 {
+            return Err(ScrbError::config(
+                "streaming fit needs chunk_rows >= 1 and block_rows >= 1",
+            ));
+        }
+        if !sigma.is_finite() || sigma <= 0.0 {
+            return Err(ScrbError::config(format!(
+                "streaming fit needs a positive finite sigma, got {sigma}"
+            )));
+        }
+        let mut cfg = self.base_cfg.clone();
+        cfg.kernel = cfg.kernel.with_sigma(sigma);
+        if let Some(k) = k {
+            cfg.k = k;
+        }
+        let env = Env::with_xla(cfg, self.xla.as_ref());
+        let mut reader = crate::stream::LibsvmChunks::from_path(path, chunk_rows)?;
+        let opts =
+            crate::stream::StreamOpts { block_rows, k, ..crate::stream::StreamOpts::default() };
+        crate::stream::fit_streaming(&env, &mut reader, &opts)
+    }
 }
 
 /// Unsupervised bandwidth selection: evaluate candidate σ = median·f on a

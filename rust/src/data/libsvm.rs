@@ -5,87 +5,98 @@
 //! abort.
 //!
 //! Format per line: `<label> <index>:<value> <index>:<value> ...`
-//! Indices are 1-based and may be sparse; labels may be arbitrary
+//! Indices are 1-based, strictly ascending within a row (the LibSVM
+//! convention — also what keeps streamed statistics exactly equivalent to
+//! the densified scan), and may be sparse; labels may be arbitrary
 //! integers/floats (compacted to 0..K−1 in first-seen sorted order).
+//!
+//! The in-memory loader is a thin drain over the *chunked* reader
+//! ([`crate::stream::LibsvmChunks`]): one pass discovers rows, features,
+//! and dimension together in flat buffers (no per-row `Vec`s, no second
+//! scan), and the streaming fit parses through the identical code path —
+//! the two loaders cannot drift.
 
 use super::dataset::Dataset;
 use crate::error::ScrbError;
 use crate::linalg::Mat;
+use crate::stream::{ChunkReader, LibsvmChunks, SparseChunk};
 use std::collections::BTreeMap;
 use std::io::BufRead;
 
-/// Parse a LibSVM text stream.
-pub fn parse_libsvm<R: BufRead>(reader: R, name: &str) -> Result<Dataset, ScrbError> {
-    let mut raw_rows: Vec<Vec<(usize, f64)>> = Vec::new();
-    let mut raw_labels: Vec<i64> = Vec::new();
-    let mut max_dim = 0usize;
-    for (lineno, line) in reader.lines().enumerate() {
-        let line =
-            line.map_err(|e| ScrbError::parse(format!("read error at line {}: {e}", lineno + 1)))?;
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
-            continue;
-        }
-        let mut parts = line.split_whitespace();
-        let label_tok = parts
-            .next()
-            .ok_or_else(|| ScrbError::parse(format!("line {}: empty", lineno + 1)))?;
-        let label = label_tok
-            .parse::<f64>()
-            .map_err(|_| ScrbError::parse(format!("line {}: bad label '{label_tok}'", lineno + 1)))?
-            as i64;
-        let mut feats = Vec::new();
-        for tok in parts {
-            let (is, vs) = tok
-                .split_once(':')
-                .ok_or_else(|| ScrbError::parse(format!("line {}: bad feature '{tok}'", lineno + 1)))?;
-            let idx: usize = is
-                .parse()
-                .map_err(|_| ScrbError::parse(format!("line {}: bad index '{is}'", lineno + 1)))?;
-            if idx == 0 {
-                return Err(ScrbError::parse(format!(
-                    "line {}: LibSVM indices are 1-based",
-                    lineno + 1
-                )));
-            }
-            let val: f64 = vs
-                .parse()
-                .map_err(|_| ScrbError::parse(format!("line {}: bad value '{vs}'", lineno + 1)))?;
-            max_dim = max_dim.max(idx);
-            feats.push((idx - 1, val));
-        }
-        raw_rows.push(feats);
-        raw_labels.push(label);
-    }
-    if raw_rows.is_empty() {
-        return Err(ScrbError::invalid_input("empty dataset"));
-    }
-    // compact labels
+/// Compact arbitrary integer labels to `0..K` in sorted raw-value order
+/// (the paper benchmarks use ad-hoc label alphabets). Returns the
+/// compacted labels and K.
+pub fn compact_labels(raw: &[i64]) -> (Vec<usize>, usize) {
     let uniq: BTreeMap<i64, usize> = {
-        let mut set: Vec<i64> = raw_labels.clone();
+        let mut set: Vec<i64> = raw.to_vec();
         set.sort_unstable();
         set.dedup();
         set.into_iter().enumerate().map(|(i, l)| (l, i)).collect()
     };
-    let n = raw_rows.len();
-    let mut x = Mat::zeros(n, max_dim);
-    for (i, feats) in raw_rows.into_iter().enumerate() {
-        for (j, v) in feats {
-            x.set(i, j, v);
+    (raw.iter().map(|l| uniq[l]).collect(), uniq.len())
+}
+
+/// Drain a chunked reader into an in-memory [`Dataset`]: rows accumulate
+/// sparse in flat buffers during the single pass, densification happens
+/// once at the end when the final dimension is known.
+pub fn dataset_from_chunks(
+    reader: &mut dyn ChunkReader,
+    name: &str,
+) -> Result<Dataset, ScrbError> {
+    let mut chunk = SparseChunk::new();
+    let mut indptr: Vec<usize> = vec![0];
+    let mut indices: Vec<u32> = Vec::new();
+    let mut values: Vec<f64> = Vec::new();
+    let mut labels: Vec<i64> = Vec::new();
+    while reader.next_chunk(&mut chunk)? {
+        for i in 0..chunk.rows() {
+            let (cols, vals) = chunk.row(i);
+            indices.extend_from_slice(cols);
+            values.extend_from_slice(vals);
+            indptr.push(indices.len());
+        }
+        labels.extend_from_slice(&chunk.labels);
+    }
+    if labels.is_empty() {
+        return Err(ScrbError::invalid_input("empty dataset"));
+    }
+    let n = labels.len();
+    let d = reader.dim();
+    let mut x = Mat::zeros(n, d);
+    for i in 0..n {
+        let row = x.row_mut(i);
+        for p in indptr[i]..indptr[i + 1] {
+            row[indices[p] as usize] = values[p];
         }
     }
-    let y: Vec<usize> = raw_labels.iter().map(|l| uniq[l]).collect();
+    let (y, _k) = compact_labels(&labels);
     Ok(Dataset::new(name, x, y))
 }
 
-/// Load a LibSVM file from disk.
+/// Rows per chunk for the in-memory loaders (IO granularity only — the
+/// whole dataset is materialized anyway).
+const LOAD_CHUNK_ROWS: usize = 8192;
+
+/// Parse a LibSVM text stream (fully in memory).
+pub fn parse_libsvm<R: BufRead>(mut reader: R, name: &str) -> Result<Dataset, ScrbError> {
+    let mut bytes = Vec::new();
+    reader
+        .read_to_end(&mut bytes)
+        .map_err(|e| ScrbError::parse(format!("read error: {e}")))?;
+    let mut chunks = LibsvmChunks::from_bytes(bytes, LOAD_CHUNK_ROWS);
+    dataset_from_chunks(&mut chunks, name)
+}
+
+/// Load a LibSVM file from disk — one buffered pass through the chunked
+/// reader, never holding more than a chunk of parsed rows plus the flat
+/// accumulation buffers.
 pub fn load_libsvm(path: &str) -> Result<Dataset, ScrbError> {
-    let file = std::fs::File::open(path).map_err(|e| ScrbError::io(path, e))?;
     let name = std::path::Path::new(path)
         .file_stem()
         .map(|s| s.to_string_lossy().to_string())
         .unwrap_or_else(|| "libsvm".to_string());
-    parse_libsvm(std::io::BufReader::new(file), &name)
+    let mut chunks = LibsvmChunks::from_path(path, LOAD_CHUNK_ROWS)?;
+    dataset_from_chunks(&mut chunks, &name)
 }
 
 #[cfg(test)]
@@ -131,5 +142,38 @@ mod tests {
         let ds = parse_libsvm(std::io::Cursor::new(text), "t").unwrap();
         assert_eq!(ds.k, 3);
         assert_eq!(ds.y, vec![0, 2, 1, 0]);
+    }
+
+    #[test]
+    fn compact_labels_sorted_order() {
+        let (y, k) = compact_labels(&[5, -2, 5, 9, -2]);
+        assert_eq!(y, vec![1, 0, 1, 2, 0]);
+        assert_eq!(k, 3);
+    }
+
+    #[test]
+    fn chunk_size_does_not_change_the_dataset() {
+        // the in-memory loader is a drain over the chunked reader; any
+        // chunk size must assemble the identical dataset
+        let text = "1 1:0.5 3:1.5\n-1 2:2.0\n1 1:1.0 2:1.0 3:1.0\n2 5:0.25\n";
+        let reference = parse_libsvm(std::io::Cursor::new(text), "t").unwrap();
+        for chunk_rows in [1usize, 2, 3, 100] {
+            let mut r = LibsvmChunks::from_bytes(text.as_bytes().to_vec(), chunk_rows);
+            let ds = dataset_from_chunks(&mut r, "t").unwrap();
+            assert_eq!(ds.x.data, reference.x.data, "chunk_rows={chunk_rows}");
+            assert_eq!(ds.y, reference.y);
+            assert_eq!(ds.k, reference.k);
+        }
+    }
+
+    #[test]
+    fn csv_chunks_assemble_a_dataset_too() {
+        let text = "1,0.5,0.0,1.5\n2,0.0,2.0,0.0\n";
+        let mut r = crate::stream::CsvChunks::from_bytes(text.as_bytes().to_vec(), 8);
+        let ds = dataset_from_chunks(&mut r, "csv").unwrap();
+        assert_eq!((ds.n(), ds.d()), (2, 3));
+        assert_eq!(ds.x.row(0), &[0.5, 0.0, 1.5]);
+        assert_eq!(ds.x.row(1), &[0.0, 2.0, 0.0]);
+        assert_eq!(ds.y, vec![0, 1]);
     }
 }

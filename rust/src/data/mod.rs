@@ -6,7 +6,7 @@ pub mod libsvm;
 pub mod synth;
 
 pub use dataset::Dataset;
-pub use libsvm::{load_libsvm, parse_libsvm};
+pub use libsvm::{compact_labels, dataset_from_chunks, load_libsvm, parse_libsvm};
 pub use synth::{
     concentric_rings, gaussian_blobs, latent_blobs, paper_benchmark, spec_by_name, two_moons,
     BenchSpec, PAPER_BENCHMARKS, SUSY,

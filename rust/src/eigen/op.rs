@@ -22,7 +22,7 @@
 //! working unchanged.
 
 use crate::linalg::Mat;
-use crate::sparse::{Csr, EllRb, GramScratch};
+use crate::sparse::{BlockEllRb, Csr, EllRb, GramScratch};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// A (possibly implicit) m×n linear operator with block apply.
@@ -131,6 +131,43 @@ impl SvdOp for EllRb {
     /// Closed form R·scale[i]² — no pass over the matrix at all.
     fn gram_diag(&self) -> Option<Vec<f64>> {
         Some(EllRb::gram_diag(self))
+    }
+}
+
+impl SvdOp for BlockEllRb {
+    fn nrows(&self) -> usize {
+        self.rows
+    }
+    fn ncols(&self) -> usize {
+        self.cols
+    }
+    fn apply(&self, b: &Mat) -> Mat {
+        self.matmat(b)
+    }
+    fn apply_t(&self, b: &Mat) -> Mat {
+        self.t_matmat(b)
+    }
+    /// Transpose-then-forward through the scratch-resident intermediate —
+    /// bit-identical to the monolithic fused kernel (see
+    /// [`BlockEllRb::gram_matmat_into`]), so the solver trajectory on a
+    /// streamed Ẑ matches the in-memory one exactly.
+    fn gram_matmat(&self, b: &Mat) -> Mat {
+        BlockEllRb::gram_matmat(self, b)
+    }
+    fn gram_matmat_into(&self, b: &Mat, out: &mut Mat, scratch: &mut GramScratch) {
+        BlockEllRb::gram_matmat_into(self, b, out, scratch)
+    }
+    fn prepare_gram(&self, scratch: &mut GramScratch, k_max: usize) {
+        BlockEllRb::prepare_gram(self, scratch, k_max);
+    }
+    fn apply_vec_into(&self, x: &[f64], y: &mut [f64]) {
+        self.matvec_into(x, y);
+    }
+    fn apply_t_vec_into(&self, x: &[f64], y: &mut [f64]) {
+        self.t_matvec_into(x, y);
+    }
+    fn gram_diag(&self) -> Option<Vec<f64>> {
+        Some(BlockEllRb::gram_diag(self))
     }
 }
 

@@ -64,6 +64,27 @@
 //! let mut labels = Vec::new();
 //! model.predict_batch(&fresh.x, &mut ws, &mut labels).expect("predict failed");
 //! ```
+//!
+//! ## Out-of-core fit (streaming)
+//!
+//! Datasets too big to densify fit through the [`stream`] subsystem: two
+//! chunked passes over a [`stream::ChunkReader`] (stats, then
+//! featurization into the [`sparse::BlockEllRb`] substrate) with resident
+//! input memory bounded by `chunk_rows × d` — and a model byte-identical
+//! to the in-memory fit on the same data and seed:
+//!
+//! ```no_run
+//! use scrb::cluster::Env;
+//! use scrb::config::PipelineConfig;
+//! use scrb::model::FittedModel;
+//! use scrb::stream::{fit_streaming, LibsvmChunks, StreamOpts};
+//!
+//! let cfg = PipelineConfig::builder().r(256).sigma(0.25).build();
+//! let mut reader = LibsvmChunks::from_path("big.libsvm", 4096).expect("open failed");
+//! let fitted = fit_streaming(&Env::new(cfg), &mut reader, &StreamOpts::default())
+//!     .expect("streaming fit failed");
+//! fitted.model.save("big.scrb").expect("save failed");
+//! ```
 
 // CI runs `cargo clippy --release -- -D warnings`. These idiom lints are
 // deliberately allowed: the numeric kernels use explicit-index loops where
@@ -95,6 +116,7 @@ pub mod model;
 pub mod rb;
 pub mod rf;
 pub mod runtime;
+pub mod stream;
 
 /// Crate version string.
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -4,6 +4,8 @@
 //!   scrb info                         environment + artifact status
 //!   scrb run <dataset> [opts]         one method on one benchmark (batch)
 //!   scrb fit [dataset] --save m.scrb  fit SC_RB once, persist the model
+//!   scrb fit --stream --data f.libsvm --chunk-rows M --sigma S --save m.scrb
+//!                                     out-of-core fit (bounded input memory)
 //!   scrb predict --model m.scrb ...   label new points with a saved model
 //!   scrb table <1|2|3> [opts]         regenerate a paper table
 //!   scrb fig <2|3|4|5|theory> [opts]  regenerate a paper figure's data
@@ -66,6 +68,10 @@ fn print_help() {
          \x20 run <dataset>               run one method (default SC_RB) on a benchmark\n\
          \x20 fit [dataset]               fit SC_RB once and persist the model\n\
          \x20   --save PATH                 model artifact to write (required)\n\
+         \x20   --stream                    out-of-core fit from --data (two chunked passes;\n\
+         \x20                               requires --sigma; input memory ~ chunk_rows x d)\n\
+         \x20   --chunk-rows M              rows per streamed chunk (default 4096)\n\
+         \x20   --block-rows M              substrate block granularity (default 65536)\n\
          \x20 predict                     label points with a saved model\n\
          \x20   --model PATH                model artifact from `scrb fit --save`\n\
          \x20   --out PATH                  write one label per line (optional)\n\
@@ -216,6 +222,9 @@ fn cmd_fit(args: &Args) -> Result<(), ScrbError> {
         .ok_or_else(|| ScrbError::config("fit: missing --save PATH for the model artifact"))?;
     let cfg = base_config(args)?;
     let coord = Coordinator::new(cfg, scale_of(args)?);
+    if args.flag("stream") {
+        return cmd_fit_stream(args, &coord, save);
+    }
     let (mut ds, from_file) = load_dataset_raw(args, &coord)?;
     // File data is min-max normalized for the fit; the frame (per-feature
     // min/span) is stored in the model so `scrb predict` can bring new
@@ -248,6 +257,61 @@ fn cmd_fit(args: &Args) -> Result<(), ScrbError> {
     println!(
         "model saved to {save} ({} clusters, {} KB)",
         fitted.model.n_clusters(),
+        bytes / 1024
+    );
+    Ok(())
+}
+
+/// `scrb fit --stream --data big.libsvm --chunk-rows M --sigma S --save
+/// model.scrb`: the out-of-core fit — two chunked passes over the file
+/// (stats, then block-wise RB featurization), resident input memory
+/// bounded by `chunk_rows × d`, and a model byte-identical to the
+/// in-memory fit on the same data and seed.
+fn cmd_fit_stream(args: &Args, coord: &Coordinator, save: &str) -> Result<(), ScrbError> {
+    let path = args
+        .get("data")
+        .ok_or_else(|| ScrbError::config("fit --stream reads from a file; pass --data path.libsvm"))?;
+    // No data matrix exists to run the eigengap bandwidth selection on, so
+    // a streamed fit must pin σ explicitly — silently falling back to the
+    // config default would bake a wrong bandwidth into a persisted model.
+    let sigma = sigma_override(args)?.ok_or_else(|| {
+        ScrbError::config(
+            "fit --stream cannot run the in-memory bandwidth selection; pass --sigma S",
+        )
+    })?;
+    let chunk_rows = args.get_usize("chunk-rows", 4096)?;
+    let block_rows = args.get_usize("block-rows", 65_536)?;
+    if chunk_rows == 0 || block_rows == 0 {
+        return Err(ScrbError::config("--chunk-rows and --block-rows must be at least 1"));
+    }
+    // K: explicit --k wins; otherwise the stream's label census decides.
+    let k_override = args.get("k").is_some().then_some(coord.base_cfg.k);
+    let t0 = Instant::now();
+    let fit = coord.fit_streaming(path, chunk_rows, sigma, k_override, block_rows)?;
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "dataset {path} (streamed) n={} d={} classes={} chunk_rows={chunk_rows}",
+        fit.n, fit.d, fit.k_true
+    );
+    let m = all_metrics(&fit.output.labels, &fit.y);
+    println!(
+        "fit SC_RB --stream (r={} sigma={sigma}): acc={:.3} nmi={:.3} time={}s",
+        coord.base_cfg.r,
+        m.accuracy,
+        m.nmi,
+        fnum(secs)
+    );
+    for stage in fit.output.timer.names() {
+        println!("  {stage}: {}s", fnum(fit.output.timer.secs(stage)));
+    }
+    if let Some(kappa) = fit.output.info.kappa {
+        println!("  kappa: {kappa:.2} (Definition 1)");
+    }
+    fit.model.save(save)?;
+    let bytes = std::fs::metadata(save).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "model saved to {save} ({} clusters, {} KB)",
+        fit.model.n_clusters(),
         bytes / 1024
     );
     Ok(())

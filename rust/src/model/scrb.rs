@@ -146,7 +146,15 @@ impl ScRbModel {
         }
         for t in &cb.tables {
             w.u32(t.len() as u32);
-            for (hash, col) in t.iter() {
+            // canonical entry order: ascending column = the first-seen
+            // order the tables were built in. Re-inserting in this order
+            // at the same capacity reproduces the exact probe layout, so
+            // save → load → save is byte-stable — which is what lets the
+            // streamed-fit bit-exactness contract be checked on the
+            // serialized artifact.
+            let mut entries: Vec<(u64, u32)> = t.iter().collect();
+            entries.sort_unstable_by_key(|&(_, col)| col);
+            for (hash, col) in entries {
                 w.u64(hash);
                 w.u32(col);
             }
@@ -268,6 +276,19 @@ impl ScRbModel {
         let bytes = std::fs::read(path).map_err(|e| ScrbError::io(path, e))?;
         ScRbModel::from_bytes(&bytes)
     }
+
+    /// Fit SC_RB out-of-core: two chunked passes over `reader` (stats,
+    /// then block-wise featurization) with resident input memory bounded
+    /// by the reader's `chunk_rows`. On the same data and seed the
+    /// returned model is **byte-identical** to the in-memory fit's — see
+    /// [`crate::stream`] for the pipeline and its memory bound.
+    pub fn fit_streaming(
+        env: &crate::cluster::Env,
+        reader: &mut dyn crate::stream::ChunkReader,
+        opts: &crate::stream::StreamOpts,
+    ) -> Result<crate::stream::StreamFit, ScrbError> {
+        crate::stream::fit_streaming(env, reader, opts)
+    }
 }
 
 impl FittedModel for ScRbModel {
@@ -380,6 +401,8 @@ mod tests {
         let (model, x) = toy_model(60, 8, 4, 7);
         let bytes = model.to_bytes();
         let back = ScRbModel::from_bytes(&bytes).unwrap();
+        // canonical serialization: load → save reproduces the bytes
+        assert_eq!(back.to_bytes(), bytes);
         assert_eq!(back.s, model.s);
         assert_eq!(back.proj.data, model.proj.data);
         assert_eq!(back.centroids.data, model.centroids.data);

@@ -25,7 +25,10 @@ const EMPTY: u32 = u32::MAX;
 /// column. Power-of-two capacity, linear probing, ≤ 0.5 load factor when
 /// sized with [`BinTable::with_capacity`]; `insert` refuses to fill the
 /// table completely (at least one empty slot always remains), so `get`
-/// probes are guaranteed to terminate.
+/// probes are guaranteed to terminate. [`BinTable::get_or_assign`] turns
+/// the same table into a *growable* first-seen dictionary — the streaming
+/// ingestion path uses it as the incrementally-grown phase-1 bin
+/// dictionary (one per grid) that later chunks keep extending.
 #[derive(Clone, Debug)]
 pub struct BinTable {
     mask: usize,
@@ -34,12 +37,85 @@ pub struct BinTable {
     cols: Vec<u32>,
 }
 
+impl Default for BinTable {
+    fn default() -> Self {
+        BinTable::new()
+    }
+}
+
 impl BinTable {
     /// Table sized for `n` occupied bins (capacity = next power of two
     /// ≥ 2n, so probe chains stay short).
     pub fn with_capacity(n: usize) -> BinTable {
         let cap = (n.max(1) * 2).next_power_of_two();
         BinTable { mask: cap - 1, len: 0, keys: vec![0; cap], cols: vec![EMPTY; cap] }
+    }
+
+    /// Empty growable table (see [`BinTable::get_or_assign`]); starts small
+    /// and rehashes as bins accumulate, so the streaming phase-1
+    /// dictionaries need no up-front bin count.
+    pub fn new() -> BinTable {
+        BinTable::with_capacity(8)
+    }
+
+    /// Look up `key`, assigning it the next dense id (`self.len()`) if it
+    /// is absent — the streaming phase-1 dictionary operation: bin hashes
+    /// map to first-seen local bin ids exactly like the batch path's
+    /// `HashMap::entry(..).or_insert(len)`. Only an *insert* can grow the
+    /// table (rehash to double capacity when the ≤ 0.5 load factor would
+    /// be exceeded), so re-binning known bins — the streaming steady
+    /// state — is strictly allocation-free.
+    pub fn get_or_assign(&mut self, key: u64) -> u32 {
+        let mut i = (key as usize) & self.mask;
+        loop {
+            let c = self.cols[i];
+            if c == EMPTY {
+                break;
+            }
+            if self.keys[i] == key {
+                return c;
+            }
+            i = (i + 1) & self.mask;
+        }
+        // absent: make room if this insert would exceed the load factor,
+        // then claim the slot
+        if 2 * (self.len + 1) > self.cols.len() {
+            self.grow();
+            i = (key as usize) & self.mask;
+            while self.cols[i] != EMPTY {
+                i = (i + 1) & self.mask;
+            }
+        }
+        let id = self.len as u32;
+        debug_assert!(id != EMPTY, "bin id collides with the empty sentinel");
+        self.keys[i] = key;
+        self.cols[i] = id;
+        self.len += 1;
+        id
+    }
+
+    /// Double the slot count and rehash every occupied entry. Final slot
+    /// layout depends only on the key set and the capacity (entries are
+    /// reinserted in slot order), but growable tables are phase-1
+    /// *dictionaries* — the serialized codebook tables are always rebuilt
+    /// at a deterministic capacity in first-seen order, so growth history
+    /// never leaks into a persisted model.
+    fn grow(&mut self) {
+        let new_cap = (self.cols.len() * 2).max(8);
+        let old_keys = std::mem::replace(&mut self.keys, vec![0; new_cap]);
+        let old_cols = std::mem::replace(&mut self.cols, vec![EMPTY; new_cap]);
+        self.mask = new_cap - 1;
+        for (k, c) in old_keys.into_iter().zip(old_cols.into_iter()) {
+            if c == EMPTY {
+                continue;
+            }
+            let mut i = (k as usize) & self.mask;
+            while self.cols[i] != EMPTY {
+                i = (i + 1) & self.mask;
+            }
+            self.keys[i] = k;
+            self.cols[i] = c;
+        }
     }
 
     /// Insert (or overwrite) a bin-hash → column entry. Panics rather
@@ -198,6 +274,42 @@ mod tests {
         let mut t = BinTable::with_capacity(1); // 2 slots
         t.insert(1, 0);
         t.insert(2, 1); // would leave no empty slot — probes could spin
+    }
+
+    #[test]
+    fn get_or_assign_is_first_seen_order_and_grows() {
+        let mut t = BinTable::new();
+        let mut rng = Pcg::seed(9);
+        let keys: Vec<u64> = (0..500).map(|_| rng.next_u64()).collect();
+        // first pass assigns dense ids in first-seen order, growing freely
+        for (i, &k) in keys.iter().enumerate() {
+            assert_eq!(t.get_or_assign(k), i as u32);
+        }
+        assert_eq!(t.len(), 500);
+        // second pass (later chunks re-hitting known bins) returns the
+        // same ids and changes nothing
+        for (i, &k) in keys.iter().enumerate() {
+            assert_eq!(t.get_or_assign(k), i as u32);
+            assert_eq!(t.get(k), Some(i as u32));
+        }
+        assert_eq!(t.len(), 500);
+    }
+
+    #[test]
+    fn get_or_assign_matches_hashmap_dictionary() {
+        // the growable table must assign exactly the ids the batch path's
+        // HashMap first-seen dictionary would
+        use std::collections::HashMap;
+        let mut t = BinTable::new();
+        let mut h: HashMap<u64, u32> = HashMap::new();
+        let mut rng = Pcg::seed(11);
+        for _ in 0..2000 {
+            let k = rng.below(300) as u64 * 0x9e37_79b9; // many repeats
+            let next = h.len() as u32;
+            let want = *h.entry(k).or_insert(next);
+            assert_eq!(t.get_or_assign(k), want);
+        }
+        assert_eq!(t.len(), h.len());
     }
 
     #[test]

@@ -79,15 +79,19 @@ struct GridBins {
     n_bins: usize,
     /// Largest collision count max_b |{i : bin(x_i)=b}|.
     max_count: usize,
-    /// Bin-hash → local-id dictionary (retained so a fit can build the
-    /// out-of-sample [`RbCodebook`]; dropped on the plain batch path).
-    dict: BinDict,
+    /// Bin hash of each local id, in first-seen (= id) order — retained so
+    /// a fit can build the out-of-sample [`RbCodebook`] tables in a
+    /// *deterministic* insertion order. The streaming ingestion path
+    /// (`crate::stream`) rebuilds its codebook the same way, which is what
+    /// makes a streamed fit serialize bit-identically to a batch fit.
+    hashes: Vec<u64>,
 }
 
 fn bin_one_grid(x: &Mat, grid: &Grid) -> GridBins {
     let n = x.rows;
     let mut dict: BinDict = BinDict::with_capacity_and_hasher(n / 2, Default::default());
     let mut counts: Vec<usize> = Vec::new();
+    let mut hashes: Vec<u64> = Vec::new();
     let mut local = Vec::with_capacity(n);
     for i in 0..n {
         let h = grid.bin_hash(x.row(i));
@@ -95,6 +99,7 @@ fn bin_one_grid(x: &Mat, grid: &Grid) -> GridBins {
         let id = *dict.entry(h).or_insert(next);
         if id as usize == counts.len() {
             counts.push(0);
+            hashes.push(h);
         }
         counts[id as usize] += 1;
         local.push(id);
@@ -103,7 +108,7 @@ fn bin_one_grid(x: &Mat, grid: &Grid) -> GridBins {
         local,
         n_bins: dict.len(),
         max_count: counts.iter().copied().max().unwrap_or(0),
-        dict,
+        hashes,
     }
 }
 
@@ -187,18 +192,16 @@ fn rb_features_impl(
 
     // The codebook rehomes each grid's bin dictionary into a flat probe
     // table keyed by the raw bin hash, with values shifted to *global*
-    // columns — exactly the lookup a new point's features need.
+    // columns — exactly the lookup a new point's features need. Entries
+    // are inserted in first-seen (= local id) order at a capacity fixed by
+    // the final bin count, so the slot layout — and hence the serialized
+    // model — is a pure function of the binning, not of dictionary
+    // internals (the streaming path reproduces it exactly).
     let codebook = keep_codebook.then(|| {
         let tables: Vec<BinTable> = per_grid
             .iter()
             .enumerate()
-            .map(|(j, g)| {
-                let mut table = BinTable::with_capacity(g.n_bins);
-                for (&h, &local) in &g.dict {
-                    table.insert(h, (offsets[j] + local as usize) as u32);
-                }
-                table
-            })
+            .map(|(j, g)| codebook_table(&g.hashes, offsets[j]))
             .collect();
         RbCodebook { r, d_in: x.cols, sigma, seed, dim: d_total, grids, tables }
     });
@@ -206,6 +209,19 @@ fn rb_features_impl(
     let features =
         RbFeatures { z, r, bins_per_grid: per_grid.iter().map(|g| g.n_bins).collect(), kappa };
     (features, codebook)
+}
+
+/// Build one grid's serving [`BinTable`] from its first-seen bin hashes:
+/// capacity sized for the final bin count, entries inserted in local-id
+/// order with columns shifted by the grid's global offset. Shared by the
+/// batch path above and the streaming featurizer (`crate::stream`) — both
+/// must produce byte-identical codebooks for the same binning.
+pub(crate) fn codebook_table(hashes: &[u64], offset: usize) -> BinTable {
+    let mut table = BinTable::with_capacity(hashes.len());
+    for (local, &h) in hashes.iter().enumerate() {
+        table.insert(h, (offset + local) as u32);
+    }
+    table
 }
 
 /// Exact (dense) Laplacian-kernel Gram matrix for comparison in tests and

@@ -1,0 +1,547 @@
+//! Row-concatenated RB substrate (`BlockEllRb`) — the streaming twin of
+//! [`EllRb`].
+//!
+//! The out-of-core ingestion path (`crate::stream`) featurizes the dataset
+//! in fixed-row-count chunks and assembles each group of chunks into its
+//! own [`EllRb`] block over the *full* column space D. `BlockEllRb` stacks
+//! those blocks row-wise and implements every solver-visible operation —
+//! including the [`crate::eigen::SvdOp`] `gram_matmat` contract — by
+//! iterating blocks, so Davidson/Lanczos run on a streamed Ẑ completely
+//! unchanged.
+//!
+//! # Bit-exactness contract
+//!
+//! Every kernel here reproduces the monolithic [`EllRb`] result **bit for
+//! bit**, not just within tolerance: forward products are row-independent
+//! (identical per-row loops), and transpose products accumulate each
+//! output column across blocks *in block order* with a single running
+//! accumulator — exactly the ascending-global-row order the monolithic
+//! CSC walk uses, so every float is added in the same sequence. The fused
+//! gram product is realized as transpose-then-forward through a reusable
+//! dense D×k intermediate held in [`GramScratch`]; since the monolithic
+//! fused kernel's tiles hold exactly the same partial sums in the same
+//! order, the results agree bitwise (pinned by tests below). This is what
+//! lets a streamed fit produce a model byte-identical to the in-memory
+//! fit.
+//!
+//! The price of row-wise blocking is that the gram product cannot fuse
+//! away the D×k intermediate (S = Ẑ·Ẑᵀ couples all row blocks), so the
+//! streaming path trades the monolithic path's cache-sized tiles for one
+//! reusable D×k scratch — the same traffic the pre-fusion two-pass
+//! product paid, and still allocation-free in steady state.
+
+use super::csr::Csr;
+use super::ell::{balanced_strips, EllRb, GramScratch, K_BLOCK};
+use crate::linalg::Mat;
+use crate::util::threads::{num_threads, parallel_row_ranges_mut};
+
+/// Row-wise concatenation of [`EllRb`] blocks sharing one column space and
+/// stride R. Produced by the streaming featurizer; consumed by the
+/// eigensolvers through [`crate::eigen::SvdOp`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockEllRb {
+    pub rows: usize,
+    pub cols: usize,
+    /// Non-zeros per row (the paper's R), shared by all blocks.
+    pub r: usize,
+    /// Block b covers global rows `[row_offsets[b], row_offsets[b+1])`.
+    pub row_offsets: Vec<usize>,
+    pub blocks: Vec<EllRb>,
+    /// nnz-balanced column-strip boundaries over the *combined* column
+    /// occupancy, for the transpose kernels (same scheme as
+    /// [`EllRb::t_bounds`]).
+    t_bounds: Vec<usize>,
+}
+
+impl BlockEllRb {
+    /// Stack `blocks` row-wise. All blocks must share `cols` and `r`;
+    /// empty (zero-row) blocks are legal and contribute nothing.
+    pub fn from_blocks(blocks: Vec<EllRb>) -> BlockEllRb {
+        assert!(!blocks.is_empty(), "need at least one block");
+        let cols = blocks[0].cols;
+        let r = blocks[0].r;
+        let mut row_offsets = Vec::with_capacity(blocks.len() + 1);
+        row_offsets.push(0usize);
+        for b in &blocks {
+            assert_eq!(b.cols, cols, "blocks must share the column space");
+            assert_eq!(b.r, r, "blocks must share the stride R");
+            row_offsets.push(row_offsets.last().unwrap() + b.rows);
+        }
+        let rows = *row_offsets.last().unwrap();
+        // Combined per-column nnz (sum of the blocks' CSC counts) drives
+        // the strip balance; the cumulative form is only needed here.
+        let mut col_ptr = vec![0usize; cols + 1];
+        for b in &blocks {
+            for c in 0..cols {
+                col_ptr[c + 1] += b.col_ptr[c + 1] - b.col_ptr[c];
+            }
+        }
+        for c in 0..cols {
+            col_ptr[c + 1] += col_ptr[c];
+        }
+        let t_bounds = balanced_strips(&col_ptr, num_threads());
+        BlockEllRb { rows, cols, r, row_offsets, blocks, t_bounds }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.rows * self.r
+    }
+
+    /// y = Z·x — row-independent, so each block fills its own row range.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// y = Z·x into a caller-provided buffer (no allocation).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for (b, w) in self.blocks.iter().zip(self.row_offsets.windows(2)) {
+            b.matvec_into(x, &mut y[w[0]..w[1]]);
+        }
+    }
+
+    /// y = Zᵀ·x — each output entry is one running sum over the column's
+    /// rows, walked block by block in ascending global row order (the
+    /// exact accumulation order of the monolithic CSC kernel).
+    pub fn t_matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.cols];
+        self.t_matvec_into(x, &mut y);
+        y
+    }
+
+    /// y = Zᵀ·x into a caller-provided buffer (no allocation).
+    pub fn t_matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        if self.cols == 0 {
+            return;
+        }
+        let (blocks, row_offsets) = (&self.blocks, &self.row_offsets);
+        parallel_row_ranges_mut(y, 1, &self.t_bounds, |_si, c0, chunk| {
+            for (dc, yc) in chunk.iter_mut().enumerate() {
+                let col = c0 + dc;
+                let mut s = 0.0;
+                for (b, off) in blocks.iter().zip(row_offsets.iter()) {
+                    for p in b.col_ptr[col]..b.col_ptr[col + 1] {
+                        let i = b.row_idx[p] as usize;
+                        s += b.scale[i] * x[off + i];
+                    }
+                }
+                *yc = s;
+            }
+        });
+    }
+
+    /// C = Z·B (rows×k): each block writes its own row range.
+    pub fn matmat(&self, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(self.rows, b.cols);
+        self.matmat_into(b, &mut c);
+        c
+    }
+
+    /// C = Z·B into a caller-owned matrix (reshaped as needed).
+    pub fn matmat_into(&self, b: &Mat, out: &mut Mat) {
+        assert_eq!(b.rows, self.cols, "matmat shape mismatch");
+        let k = b.cols;
+        if out.rows != self.rows || out.cols != k {
+            out.reset(self.rows, k);
+        }
+        if k == 0 {
+            return;
+        }
+        for (blk, w) in self.blocks.iter().zip(self.row_offsets.windows(2)) {
+            blk.matmat_into_rows(b, &mut out.data[w[0] * k..w[1] * k]);
+        }
+    }
+
+    /// C = Zᵀ·B (cols×k): per-column accumulation across blocks in
+    /// ascending global row order — bit-identical to [`EllRb::t_matmat`]
+    /// on the concatenated matrix.
+    pub fn t_matmat(&self, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(self.cols, b.cols);
+        self.t_matmat_into(b, &mut c);
+        c
+    }
+
+    /// C = Zᵀ·B into a caller-owned matrix (reshaped as needed; every
+    /// element is overwritten, so a dirty buffer is fine).
+    pub fn t_matmat_into(&self, b: &Mat, out: &mut Mat) {
+        assert_eq!(b.rows, self.rows, "t_matmat shape mismatch");
+        let k = b.cols;
+        if out.rows != self.cols || out.cols != k {
+            out.reset(self.cols, k);
+        }
+        if self.cols == 0 || k == 0 {
+            return;
+        }
+        let (blocks, row_offsets) = (&self.blocks, &self.row_offsets);
+        parallel_row_ranges_mut(&mut out.data, k, &self.t_bounds, |_si, c0, chunk| {
+            for (dc, crow) in chunk.chunks_mut(k).enumerate() {
+                let col = c0 + dc;
+                crow.fill(0.0);
+                let mut kb = 0;
+                while kb < k {
+                    let ke = (kb + K_BLOCK).min(k);
+                    let cblk = &mut crow[kb..ke];
+                    for (blk, off) in blocks.iter().zip(row_offsets.iter()) {
+                        for p in blk.col_ptr[col]..blk.col_ptr[col + 1] {
+                            let i = blk.row_idx[p] as usize;
+                            let si = blk.scale[i];
+                            let brow = &b.row(off + i)[kb..ke];
+                            for (cj, bj) in cblk.iter_mut().zip(brow.iter()) {
+                                *cj += si * *bj;
+                            }
+                        }
+                    }
+                    kb = ke;
+                }
+            }
+        });
+    }
+
+    /// Gram product C = Ẑ·(Ẑᵀ·B) (allocating convenience wrapper; the
+    /// solver hot path uses [`BlockEllRb::gram_matmat_into`] with a reused
+    /// [`GramScratch`]).
+    pub fn gram_matmat(&self, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(0, 0);
+        let mut ws = GramScratch::new();
+        self.gram_matmat_into(b, &mut out, &mut ws);
+        out
+    }
+
+    /// Gram product through the scratch-resident D×k intermediate:
+    /// `W = Ẑᵀ·B` into `ws.inter`, then `C = Ẑ·W` into `out`. Row-wise
+    /// blocking couples every block through S = Ẑ·Ẑᵀ, so the intermediate
+    /// cannot be tiled away — but it lives in the reusable scratch, so
+    /// steady-state calls are allocation-free, and the result is
+    /// bit-identical to the monolithic fused kernel (same per-element
+    /// accumulation order on both passes).
+    pub fn gram_matmat_into(&self, b: &Mat, out: &mut Mat, ws: &mut GramScratch) {
+        assert_eq!(b.rows, self.rows, "gram_matmat shape mismatch");
+        let k = b.cols;
+        if out.rows != self.rows || out.cols != k {
+            out.reset(self.rows, k);
+        }
+        if self.rows == 0 || k == 0 {
+            return;
+        }
+        if self.cols == 0 {
+            out.data.fill(0.0); // Zᵀ·B is empty ⇒ C = 0
+            return;
+        }
+        // Borrow the intermediate out of the scratch for the duration of
+        // the two passes (disjoint from anything `self` holds).
+        let mut inter = std::mem::replace(&mut ws.inter, Mat::zeros(0, 0));
+        self.t_matmat_into(b, &mut inter);
+        self.matmat_into(&inter, out);
+        ws.inter = inter;
+    }
+
+    /// Pre-provision `ws` for gram products up to block width `k_max`.
+    pub fn prepare_gram(&self, ws: &mut GramScratch, k_max: usize) {
+        ws.inter.reserve_for(self.cols, k_max);
+    }
+
+    /// Row sums Z·1 — closed form per block.
+    pub fn row_sums(&self) -> Vec<f64> {
+        let r = self.r as f64;
+        self.blocks.iter().flat_map(|b| b.scale.iter().map(move |&s| s * r)).collect()
+    }
+
+    /// Column sums Zᵀ·1 (running per-column sum across blocks, ascending
+    /// global row order — bit-identical to [`EllRb::col_sums`]).
+    pub fn col_sums(&self) -> Vec<f64> {
+        let mut y = vec![0.0; self.cols];
+        if self.cols == 0 {
+            return y;
+        }
+        let blocks = &self.blocks;
+        parallel_row_ranges_mut(&mut y, 1, &self.t_bounds, |_si, c0, chunk| {
+            for (dc, yc) in chunk.iter_mut().enumerate() {
+                let col = c0 + dc;
+                let mut s = 0.0;
+                for b in blocks.iter() {
+                    for p in b.col_ptr[col]..b.col_ptr[col + 1] {
+                        s += b.scale[b.row_idx[p] as usize];
+                    }
+                }
+                *yc = s;
+            }
+        });
+        y
+    }
+
+    /// Degree vector d = Z·(Zᵀ·1) (Equation 6), block-iterated.
+    pub fn implicit_degrees(&self) -> Vec<f64> {
+        let cs = self.col_sums();
+        self.matvec(&cs)
+    }
+
+    /// Fold Ẑ = D^{-1/2}·Z into the per-block scale vectors — O(N).
+    pub fn normalize_by_degree(&mut self, degrees: &[f64]) {
+        assert_eq!(degrees.len(), self.rows);
+        let offsets = &self.row_offsets;
+        for (bi, blk) in self.blocks.iter_mut().enumerate() {
+            blk.normalize_by_degree(&degrees[offsets[bi]..offsets[bi + 1]]);
+        }
+    }
+
+    /// Multiply row i's shared value by s[i] — O(N).
+    pub fn scale_rows(&mut self, s: &[f64]) {
+        assert_eq!(s.len(), self.rows);
+        let offsets = &self.row_offsets;
+        for (bi, blk) in self.blocks.iter_mut().enumerate() {
+            blk.scale_rows(&s[offsets[bi]..offsets[bi + 1]]);
+        }
+    }
+
+    /// Diagonal of Z·Zᵀ — closed form R·scale[i]² per block.
+    pub fn gram_diag(&self) -> Vec<f64> {
+        let r = self.r as f64;
+        self.blocks.iter().flat_map(|b| b.scale.iter().map(move |&s| r * s * s)).collect()
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        let r = self.r as f64;
+        self.blocks
+            .iter()
+            .flat_map(|b| b.scale.iter())
+            .map(|&s| r * s * s)
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Concatenate into one monolithic [`EllRb`] (tests, small problems,
+    /// bridging to code that wants the single-block substrate). This
+    /// materializes a second copy of the indices — the streaming path
+    /// never calls it on big data.
+    pub fn to_ell(&self) -> EllRb {
+        let mut indices = Vec::with_capacity(self.rows * self.r);
+        let mut scale = Vec::with_capacity(self.rows);
+        for b in &self.blocks {
+            indices.extend_from_slice(&b.indices);
+            scale.extend_from_slice(&b.scale);
+        }
+        EllRb::new(self.rows, self.cols, self.r, indices, scale)
+    }
+
+    /// Bridge to general CSR (via the monolithic view).
+    pub fn to_csr(&self) -> Csr {
+        self.to_ell().to_csr()
+    }
+
+    /// Memory footprint in bytes (all blocks + the block index).
+    pub fn bytes(&self) -> usize {
+        self.blocks.iter().map(|b| b.bytes()).sum::<usize>()
+            + self.row_offsets.len() * 8
+            + self.t_bounds.len() * 8
+    }
+
+    /// Largest single block's footprint in bytes — the streaming memory
+    /// bound reported by `bench_ingest`.
+    pub fn peak_block_bytes(&self) -> usize {
+        self.blocks.iter().map(|b| b.bytes()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eigen::SvdOp;
+    use crate::util::rng::Pcg;
+
+    /// Random monolithic EllRb with RB structure plus the same data cut
+    /// into row blocks at the given boundaries.
+    fn random_pair(
+        rng: &mut Pcg,
+        rows: usize,
+        r: usize,
+        bins_per_grid: usize,
+        cuts: &[usize],
+    ) -> (EllRb, BlockEllRb) {
+        let cols = r * bins_per_grid;
+        let mut indices = Vec::with_capacity(rows * r);
+        for _ in 0..rows {
+            for j in 0..r {
+                indices.push((j * bins_per_grid + rng.below(bins_per_grid)) as u32);
+            }
+        }
+        let scale: Vec<f64> = (0..rows).map(|_| rng.range_f64(0.1, 2.0)).collect();
+        let mono = EllRb::new(rows, cols, r, indices.clone(), scale.clone());
+        let mut bounds = vec![0usize];
+        bounds.extend_from_slice(cuts);
+        bounds.push(rows);
+        let blocks: Vec<EllRb> = bounds
+            .windows(2)
+            .map(|w| {
+                EllRb::new(
+                    w[1] - w[0],
+                    cols,
+                    r,
+                    indices[w[0] * r..w[1] * r].to_vec(),
+                    scale[w[0]..w[1]].to_vec(),
+                )
+            })
+            .collect();
+        (mono, BlockEllRb::from_blocks(blocks))
+    }
+
+    #[test]
+    fn products_are_bit_identical_to_monolithic() {
+        let mut rng = Pcg::seed(301);
+        for cuts in [&[][..], &[17][..], &[5, 5, 40][..]] {
+            let (mono, blocked) = random_pair(&mut rng, 50, 6, 5, cuts);
+            assert_eq!(blocked.rows, 50);
+            assert_eq!(blocked.nnz(), mono.nnz());
+            let x: Vec<f64> = (0..mono.cols).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            assert_eq!(blocked.matvec(&x), mono.matvec(&x));
+            let u: Vec<f64> = (0..mono.rows).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            assert_eq!(blocked.t_matvec(&u), mono.t_matvec(&u));
+            for &k in &[1usize, 3, 8, K_BLOCK + 5] {
+                let b = Mat::from_vec(
+                    mono.cols,
+                    k,
+                    (0..mono.cols * k).map(|_| rng.range_f64(-1.0, 1.0)).collect(),
+                );
+                assert_eq!(blocked.matmat(&b).data, mono.matmat(&b).data, "matmat k={k}");
+                let b2 = Mat::from_vec(
+                    mono.rows,
+                    k,
+                    (0..mono.rows * k).map(|_| rng.range_f64(-1.0, 1.0)).collect(),
+                );
+                assert_eq!(
+                    blocked.t_matmat(&b2).data,
+                    mono.t_matmat(&b2).data,
+                    "t_matmat k={k}"
+                );
+            }
+            assert_eq!(blocked.col_sums(), mono.col_sums());
+            assert_eq!(blocked.row_sums(), mono.row_sums());
+            assert_eq!(blocked.gram_diag(), mono.gram_diag());
+            assert_eq!(blocked.implicit_degrees(), mono.implicit_degrees());
+            assert_eq!(blocked.frob_norm(), mono.frob_norm());
+            assert_eq!(blocked.to_ell(), mono);
+        }
+    }
+
+    #[test]
+    fn fused_gram_is_bit_identical_to_monolithic_fused() {
+        // The streamed-fit bit-exactness contract hinges on this: the
+        // block substrate's transpose-then-forward gram must equal the
+        // monolithic strip-tiled fused kernel bit for bit.
+        let mut rng = Pcg::seed(302);
+        let (mono, blocked) = random_pair(&mut rng, 64, 8, 4, &[10, 30]);
+        let mut mono_ws = GramScratch::new();
+        let mut blk_ws = GramScratch::new();
+        let mut mono_out = Mat::zeros(0, 0);
+        let mut blk_out = Mat::zeros(0, 0);
+        for &k in &[1usize, 4, 9] {
+            let b = Mat::from_vec(
+                mono.rows,
+                k,
+                (0..mono.rows * k).map(|_| rng.range_f64(-1.0, 1.0)).collect(),
+            );
+            mono.gram_matmat_into(&b, &mut mono_out, &mut mono_ws);
+            blocked.gram_matmat_into(&b, &mut blk_out, &mut blk_ws);
+            assert_eq!(blk_out.data, mono_out.data, "fused gram k={k}");
+            // dirty-out steady state must fully overwrite
+            blocked.gram_matmat_into(&b, &mut blk_out, &mut blk_ws);
+            assert_eq!(blk_out.data, mono_out.data, "dirty-out k={k}");
+        }
+    }
+
+    #[test]
+    fn degree_normalization_matches_monolithic() {
+        let mut rng = Pcg::seed(303);
+        let (mut mono, mut blocked) = random_pair(&mut rng, 40, 5, 3, &[12, 25]);
+        let dm = mono.implicit_degrees();
+        let db = blocked.implicit_degrees();
+        assert_eq!(dm, db);
+        mono.normalize_by_degree(&dm);
+        blocked.normalize_by_degree(&db);
+        assert_eq!(blocked.to_ell(), mono);
+        // scale_rows parity too
+        let s: Vec<f64> = (0..40).map(|_| rng.range_f64(0.5, 1.5)).collect();
+        mono.scale_rows(&s);
+        blocked.scale_rows(&s);
+        assert_eq!(blocked.to_ell(), mono);
+    }
+
+    #[test]
+    fn svd_op_surface_matches_monolithic() {
+        let mut rng = Pcg::seed(304);
+        let (mono, blocked) = random_pair(&mut rng, 30, 4, 6, &[9, 20]);
+        assert_eq!(SvdOp::nrows(&blocked), 30);
+        assert_eq!(SvdOp::ncols(&blocked), mono.cols);
+        let b = Mat::from_vec(mono.cols, 3, (0..mono.cols * 3).map(|_| rng.f64()).collect());
+        assert_eq!(SvdOp::apply(&blocked, &b).data, SvdOp::apply(&mono, &b).data);
+        let b2 = Mat::from_vec(30, 3, (0..90).map(|_| rng.f64()).collect());
+        assert_eq!(SvdOp::apply_t(&blocked, &b2).data, SvdOp::apply_t(&mono, &b2).data);
+        assert_eq!(SvdOp::gram_matmat(&blocked, &b2).data, SvdOp::gram_matmat(&mono, &b2).data);
+        let x: Vec<f64> = (0..mono.cols).map(|_| rng.f64()).collect();
+        let mut ya = vec![0.0; 30];
+        let mut yb = vec![0.0; 30];
+        SvdOp::apply_vec_into(&blocked, &x, &mut ya);
+        SvdOp::apply_vec_into(&mono, &x, &mut yb);
+        assert_eq!(ya, yb);
+        let u: Vec<f64> = (0..30).map(|_| rng.f64()).collect();
+        let mut ta = vec![0.0; mono.cols];
+        let mut tb = vec![0.0; mono.cols];
+        SvdOp::apply_t_vec_into(&blocked, &u, &mut ta);
+        SvdOp::apply_t_vec_into(&mono, &u, &mut tb);
+        assert_eq!(ta, tb);
+        assert_eq!(SvdOp::gram_diag(&blocked), SvdOp::gram_diag(&mono));
+    }
+
+    #[test]
+    fn empty_final_block_and_single_block() {
+        let mut rng = Pcg::seed(305);
+        // single block: the degenerate concatenation
+        let (mono, single) = random_pair(&mut rng, 20, 3, 4, &[]);
+        assert_eq!(single.n_blocks(), 1);
+        assert_eq!(single.to_ell(), mono);
+        // empty final block (a chunk boundary landing exactly on N)
+        let (mono2, with_empty) = random_pair(&mut rng, 20, 3, 4, &[20]);
+        assert_eq!(with_empty.n_blocks(), 2);
+        assert_eq!(with_empty.blocks[1].rows, 0);
+        assert_eq!(with_empty.rows, 20);
+        let x: Vec<f64> = (0..mono2.cols).map(|_| rng.f64()).collect();
+        assert_eq!(with_empty.matvec(&x), mono2.matvec(&x));
+        let u: Vec<f64> = (0..20).map(|_| rng.f64()).collect();
+        assert_eq!(with_empty.t_matvec(&u), mono2.t_matvec(&u));
+        let b = Mat::from_vec(20, 2, (0..40).map(|_| rng.f64()).collect());
+        assert_eq!(with_empty.gram_matmat(&b).data, mono2.gram_matmat(&b).data);
+        assert_eq!(with_empty.to_ell(), mono2);
+        // empty *leading* block as well
+        let (mono3, lead_empty) = random_pair(&mut rng, 15, 2, 5, &[0, 7]);
+        assert_eq!(lead_empty.blocks[0].rows, 0);
+        assert_eq!(lead_empty.to_ell(), mono3);
+    }
+
+    #[test]
+    fn solver_runs_on_block_substrate_identically() {
+        // end-to-end: both solvers on blocked vs monolithic Ẑ agree bitwise
+        use crate::eigen::{svds, SvdsOpts};
+        let mut rng = Pcg::seed(306);
+        let (mut mono, mut blocked) = random_pair(&mut rng, 80, 6, 7, &[33, 60]);
+        let d = mono.implicit_degrees();
+        mono.normalize_by_degree(&d);
+        blocked.normalize_by_degree(&d);
+        for solver in [crate::config::Solver::Davidson, crate::config::Solver::Lanczos] {
+            let opts = SvdsOpts::new(3, solver);
+            let a = svds(&mono, &opts, 7);
+            let b = svds(&blocked, &opts, 7);
+            assert_eq!(a.s, b.s, "{solver:?} singular values");
+            assert_eq!(a.u.data, b.u.data, "{solver:?} U");
+            assert_eq!(a.v.data, b.v.data, "{solver:?} V");
+            assert_eq!(a.stats.matvecs, b.stats.matvecs);
+        }
+    }
+}

@@ -35,8 +35,10 @@ use std::sync::Barrier;
 
 /// Column-block width for the k-wide inner loops: keeps the output block in
 /// registers/L1 while streaming rows of B, without hurting the small-k case
-/// (k ≤ 64 is a single block).
-const K_BLOCK: usize = 64;
+/// (k ≤ 64 is a single block). Shared with the block-concatenated substrate
+/// (`super::block`), whose kernels must mirror these loops exactly to stay
+/// bit-identical.
+pub(crate) const K_BLOCK: usize = 64;
 
 /// Per-thread tile budget for the fused gram kernel, in f64 elements
 /// (256 KB — L2-resident on every target we care about). A strip's scratch
@@ -67,6 +69,13 @@ pub struct GramScratch {
     /// same shape but different column occupancy don't silently reuse a
     /// schedule nnz-balanced for the other one.
     sig: (usize, usize, usize, u64),
+    /// Dense Ẑᵀ·B intermediate for substrates that cannot fuse the gram
+    /// product across row blocks (`super::block::BlockEllRb`): row-wise
+    /// blocking couples all blocks through S = Ẑ·Ẑᵀ, so those operators
+    /// run transpose-then-forward through this reusable D×k buffer
+    /// instead of the strip tiles. Capacity-backed (`Mat::reset`), so
+    /// steady-state block-gram calls stay allocation-free.
+    pub(crate) inter: Mat,
 }
 
 impl Default for GramScratch {
@@ -84,6 +93,7 @@ impl GramScratch {
             k_cap: 0,
             nt: 0,
             sig: (0, 0, 0, 0),
+            inter: Mat::zeros(0, 0),
         }
     }
 
@@ -107,10 +117,11 @@ impl GramScratch {
         self.tiles.resize(nt * stride, 0.0);
     }
 
-    /// Total scratch footprint in bytes (all workers' tiles + the schedule)
-    /// — the fused kernel's replacement for the two-pass D×k intermediate.
+    /// Total scratch footprint in bytes (all workers' tiles + the schedule
+    /// + any block-substrate intermediate) — the fused kernel's
+    /// replacement for the two-pass D×k intermediate.
     pub fn scratch_bytes(&self) -> usize {
-        self.tiles.len() * 8 + self.strips.len() * 8
+        self.tiles.len() * 8 + self.strips.len() * 8 + self.inter.data.len() * 8
     }
 
     /// Per-thread peak scratch in bytes: one strip tile.
@@ -207,8 +218,9 @@ pub struct EllRb {
 }
 
 /// nnz-balanced column-strip boundaries for `nt` workers: `bounds[t]` is the
-/// first column of strip t, `bounds` spans `[0, cols]`.
-fn balanced_strips(col_ptr: &[usize], nt: usize) -> Vec<usize> {
+/// first column of strip t, `bounds` spans `[0, cols]`. Also used by
+/// `super::block::BlockEllRb` over its combined column occupancy.
+pub(crate) fn balanced_strips(col_ptr: &[usize], nt: usize) -> Vec<usize> {
     let cols = col_ptr.len() - 1;
     let nnz = *col_ptr.last().unwrap();
     let nt = nt.clamp(1, cols.max(1));
@@ -372,14 +384,33 @@ impl EllRb {
     /// C = Z · B, B dense cols×k → rows×k (the solver's forward block
     /// matvec; parallel over rows, k-wide loops cache-blocked).
     pub fn matmat(&self, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(self.rows, b.cols);
+        if b.cols > 0 {
+            self.matmat_into_rows(b, &mut c.data);
+        } else {
+            assert_eq!(b.rows, self.cols, "matmat shape mismatch");
+        }
+        c
+    }
+
+    /// Z · B written into a caller-provided row-major slice of length
+    /// rows×k, overwriting it. This is the block-substrate building block
+    /// (`super::block::BlockEllRb`): each block writes its own row range
+    /// of the concatenated product. Rows are independent, so the result is
+    /// bit-identical however the rows are partitioned.
+    pub(crate) fn matmat_into_rows(&self, b: &Mat, out: &mut [f64]) {
         assert_eq!(b.rows, self.cols, "matmat shape mismatch");
         let k = b.cols;
-        let mut c = Mat::zeros(self.rows, k);
+        assert_eq!(out.len(), self.rows * k, "output must be rows x k");
+        if self.rows == 0 || k == 0 {
+            return;
+        }
         let (indices, scale, r) = (&self.indices, &self.scale, self.r);
-        parallel_rows_mut(&mut c.data, k, |row0, chunk| {
+        parallel_rows_mut(out, k, |row0, chunk| {
             for (dr, crow) in chunk.chunks_mut(k).enumerate() {
                 let i = row0 + dr;
                 let row = &indices[i * r..(i + 1) * r];
+                crow.fill(0.0);
                 let mut kb = 0;
                 while kb < k {
                     let ke = (kb + K_BLOCK).min(k);
@@ -399,7 +430,6 @@ impl EllRb {
                 }
             }
         });
-        c
     }
 
     /// C = Zᵀ · B, B dense rows×k → cols×k. Each worker walks a contiguous,

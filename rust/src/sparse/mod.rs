@@ -16,11 +16,19 @@
 //!   baselines, irregular matrices (Nyström / LSC anchors), and as the
 //!   reference implementation `EllRb` is property-tested against via
 //!   [`EllRb::to_csr`].
+//!
+//! The streaming ingestion path (`crate::stream`) adds a third view:
+//! [`BlockEllRb`], a row-wise concatenation of `EllRb` blocks built one
+//! chunk group at a time, whose kernels reproduce the monolithic results
+//! bit for bit so the solvers (and the streamed-fit model bytes) cannot
+//! tell the difference.
 
+pub mod block;
 pub mod csr;
 pub mod ell;
 pub mod ops;
 
+pub use block::BlockEllRb;
 pub use csr::Csr;
 pub use ell::{EllRb, GramScratch};
 pub use ops::{

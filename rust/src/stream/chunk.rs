@@ -1,0 +1,94 @@
+//! The reusable chunk buffer every [`super::ChunkReader`] fills.
+
+/// One chunk of sparse rows in a flat CSR-ish layout. All four buffers
+/// are reused across [`super::ChunkReader::next_chunk`] calls — `clear`
+/// keeps capacity — so a warm chunk loop never touches the heap.
+pub struct SparseChunk {
+    /// Row offsets into `indices`/`values`, length rows+1.
+    pub indptr: Vec<usize>,
+    /// 0-based column ids, concatenated row-major.
+    pub indices: Vec<u32>,
+    pub values: Vec<f64>,
+    /// Raw (uncompacted) labels, one per row.
+    pub labels: Vec<i64>,
+}
+
+impl Default for SparseChunk {
+    fn default() -> Self {
+        SparseChunk::new()
+    }
+}
+
+impl SparseChunk {
+    pub fn new() -> SparseChunk {
+        SparseChunk { indptr: vec![0], indices: Vec::new(), values: Vec::new(), labels: Vec::new() }
+    }
+
+    /// Drop all rows, keeping every buffer's capacity.
+    pub fn clear(&mut self) {
+        self.indptr.clear();
+        self.indptr.push(0);
+        self.indices.clear();
+        self.values.clear();
+        self.labels.clear();
+    }
+
+    pub fn rows(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// The sparse entries of row `i`: `(column ids, values)`.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Start a new row (parsers then [`SparseChunk::push_entry`] its
+    /// features and [`SparseChunk::end_row`] it).
+    #[inline]
+    pub fn begin_row(&mut self, label: i64) {
+        self.labels.push(label);
+    }
+
+    #[inline]
+    pub fn push_entry(&mut self, col: u32, val: f64) {
+        self.indices.push(col);
+        self.values.push(val);
+    }
+
+    #[inline]
+    pub fn end_row(&mut self) {
+        self.indptr.push(self.indices.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_roundtrip_and_clear_keeps_capacity() {
+        let mut c = SparseChunk::new();
+        c.begin_row(7);
+        c.push_entry(2, 0.5);
+        c.push_entry(9, -1.0);
+        c.end_row();
+        c.begin_row(-3);
+        c.end_row();
+        assert_eq!(c.rows(), 2);
+        assert_eq!(c.nnz(), 2);
+        assert_eq!(c.row(0), (&[2u32, 9][..], &[0.5, -1.0][..]));
+        assert_eq!(c.row(1), (&[][..], &[][..]));
+        assert_eq!(c.labels, vec![7, -3]);
+        let cap = c.indices.capacity();
+        c.clear();
+        assert_eq!(c.rows(), 0);
+        assert_eq!(c.indptr, vec![0]);
+        assert_eq!(c.indices.capacity(), cap);
+    }
+}

@@ -1,0 +1,375 @@
+//! Block-wise RB featurization: Algorithm 1 run one chunk at a time.
+//!
+//! Phase 1 (bin discovery) is *incremental*: each grid keeps a growable
+//! open-addressing [`BinTable`] dictionary ([`BinTable::get_or_assign`])
+//! that later chunks keep extending, plus the first-seen hash list and
+//! per-bin collision counts. Local bin ids are therefore assigned in
+//! global first-seen row order — exactly the ids the batch path's
+//! per-grid `HashMap` produces — which makes the featurization invariant
+//! to the chunk size, including the phase-1 column assignment.
+//!
+//! Phase 2 (assembly) cannot finish until the stream ends: a late row can
+//! add new bins to an early grid, shifting every later grid's global
+//! column offset. So the featurizer accumulates each row's R *local* ids
+//! into fixed-row-count substrate blocks (`block_rows`, independent of
+//! the reader's chunk size) and converts local→global in place at
+//! [`StreamFeaturizer::finish`], yielding a [`BlockEllRb`] plus the
+//! serving [`RbCodebook`]. Resident memory: one `chunk_rows × d` dense
+//! scratch (the normalized rows being binned) + the N×R×4 B local-id
+//! blocks — which *are* the final substrate indices, not an extra copy.
+//!
+//! Steady state allocates nothing per chunk beyond the block being built:
+//! the dense scratch, per-grid local-id buffers, and the chunk buffers
+//! are all reused, and dictionary growth happens only when new bins
+//! appear (enforced by `tests/alloc.rs`).
+
+use super::chunk::SparseChunk;
+use crate::error::ScrbError;
+use crate::rb::codebook::BinTable;
+use crate::rb::features::codebook_table;
+use crate::rb::{sample_grids, Grid, RbCodebook};
+use crate::sparse::{BlockEllRb, EllRb};
+use crate::util::threads::{num_threads, parallel_chunks_mut, parallel_rows_mut};
+
+/// Per-grid incremental phase-1 state.
+struct GridState {
+    /// Growable bin-hash → local-id dictionary.
+    dict: BinTable,
+    /// Bin hash of each local id, in first-seen (= id) order.
+    hashes: Vec<u64>,
+    /// Collision count per local id (κ needs the max).
+    counts: Vec<usize>,
+    /// This chunk's local ids, one per chunk row (reused buffer).
+    locals: Vec<u32>,
+}
+
+/// What a completed featurize pass yields.
+pub struct StreamFeatures {
+    /// Sparse feature matrix Z on the block substrate, nnz = N·R, all
+    /// values 1/√R.
+    pub z: BlockEllRb,
+    /// Serving codebook (grids + bin→column tables), byte-identical to
+    /// what a batch [`crate::rb::rb_features_with_codebook`] fit on the
+    /// same (normalized) data produces.
+    pub codebook: RbCodebook,
+    /// Per-grid number of non-empty bins.
+    pub bins_per_grid: Vec<usize>,
+    /// κ estimate (Definition 1), same estimator as the batch path.
+    pub kappa: f64,
+    /// Raw labels in row order (compact with
+    /// [`crate::data::libsvm::compact_labels`]).
+    pub labels: Vec<i64>,
+}
+
+/// Incremental RB featurizer: feed normalized-frame chunks with
+/// [`StreamFeaturizer::push_chunk`], then [`StreamFeaturizer::finish`].
+pub struct StreamFeaturizer {
+    r: usize,
+    d: usize,
+    sigma: f64,
+    seed: u64,
+    /// Input frame applied while densifying (the stats-pass result).
+    lo: Vec<f64>,
+    span: Vec<f64>,
+    /// Normalized value of an implicit zero, per column: `(0 − lo)/span`.
+    zero_row: Vec<f64>,
+    grids: Vec<Grid>,
+    states: Vec<GridState>,
+    /// Densified+normalized chunk scratch, `chunk_rows × d` (sized by the
+    /// largest chunk seen, i.e. once).
+    dense: Vec<f64>,
+    /// Substrate block granularity in rows (independent of chunk size, so
+    /// block boundaries — and everything downstream — don't depend on how
+    /// the stream was chunked).
+    block_rows: usize,
+    /// Completed and in-progress blocks of *local* ids, row-major n×R.
+    blocks: Vec<Vec<u32>>,
+    n_rows: usize,
+    /// Row-count hint (from the stats pass) sizing the label buffer and
+    /// each block exactly.
+    expected_rows: usize,
+    labels: Vec<i64>,
+}
+
+impl StreamFeaturizer {
+    /// Start a featurize pass: `r` grids over `d` input dimensions with
+    /// bandwidth `sigma`, deterministic in `seed` (the same grids the
+    /// batch path samples). `(lo, span)` is the input frame from the
+    /// stats pass; `expected_rows` is the stats-pass row count (0 if
+    /// unknown — only buffer pre-sizing depends on it).
+    pub fn new(
+        r: usize,
+        d: usize,
+        sigma: f64,
+        seed: u64,
+        lo: Vec<f64>,
+        span: Vec<f64>,
+        block_rows: usize,
+        expected_rows: usize,
+    ) -> StreamFeaturizer {
+        assert!(r >= 1, "need at least one grid");
+        assert!(block_rows >= 1, "need at least one row per block");
+        assert_eq!(lo.len(), d, "one min per dimension");
+        assert_eq!(span.len(), d, "one span per dimension");
+        let zero_row: Vec<f64> =
+            lo.iter().zip(span.iter()).map(|(&l, &s)| (0.0 - l) / s).collect();
+        let grids = sample_grids(r, d, sigma, seed);
+        let states = (0..r)
+            .map(|_| GridState {
+                dict: BinTable::new(),
+                hashes: Vec::new(),
+                counts: Vec::new(),
+                locals: Vec::new(),
+            })
+            .collect();
+        StreamFeaturizer {
+            r,
+            d,
+            sigma,
+            seed,
+            lo,
+            span,
+            zero_row,
+            grids,
+            states,
+            dense: Vec::new(),
+            block_rows,
+            blocks: Vec::new(),
+            n_rows: 0,
+            expected_rows,
+            labels: Vec::with_capacity(expected_rows),
+        }
+    }
+
+    /// Rows featurized so far.
+    pub fn rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// Bin one chunk: densify+normalize into the reusable scratch, extend
+    /// every grid's dictionary (parallel over grids, mirroring the batch
+    /// path), and append the rows' local ids to the current block.
+    pub fn push_chunk(&mut self, chunk: &SparseChunk) {
+        let rows = chunk.rows();
+        if rows == 0 {
+            return;
+        }
+        let d = self.d;
+        // 1. densify + normalize (parallel over rows; same arithmetic the
+        //    batch path's apply_minmax performs on the dense matrix)
+        if self.dense.len() < rows * d.max(1) {
+            self.dense.resize(rows * d.max(1), 0.0);
+        }
+        if d > 0 {
+            let (lo, span, zero_row) = (&self.lo, &self.span, &self.zero_row);
+            let scratch = &mut self.dense[..rows * d];
+            parallel_rows_mut(scratch, d, |row0, out| {
+                for (dr, orow) in out.chunks_mut(d).enumerate() {
+                    orow.copy_from_slice(zero_row);
+                    let (cols, vals) = chunk.row(row0 + dr);
+                    for (&c, &v) in cols.iter().zip(vals.iter()) {
+                        let c = c as usize;
+                        orow[c] = (v - lo[c]) / span[c];
+                    }
+                }
+            });
+        }
+        // 2. phase 1, parallel over grids: each worker owns a contiguous
+        //    run of grids and extends their dictionaries independently
+        let dense = &self.dense;
+        let grids = &self.grids;
+        parallel_chunks_mut(&mut self.states, num_threads(), |start, slice| {
+            for (k, st) in slice.iter_mut().enumerate() {
+                let grid = &grids[start + k];
+                st.locals.clear();
+                st.locals.reserve(rows);
+                for i in 0..rows {
+                    let h = grid.bin_hash(&dense[i * d..(i + 1) * d]);
+                    let id = st.dict.get_or_assign(h);
+                    if id as usize == st.counts.len() {
+                        st.counts.push(0);
+                        st.hashes.push(h);
+                    }
+                    st.counts[id as usize] += 1;
+                    st.locals.push(id);
+                }
+            }
+        });
+        // 3. interleave the chunk's local ids into the block being built
+        //    (row-major n×R — already the final substrate layout, pending
+        //    only the local→global column shift at finish)
+        let block_cap = self.block_rows * self.r;
+        for dr in 0..rows {
+            let block_full = match self.blocks.last() {
+                Some(b) => b.len() == block_cap,
+                None => true,
+            };
+            if block_full {
+                let remaining = self.expected_rows.saturating_sub(self.n_rows + dr);
+                let reserve_rows = self.block_rows.min(remaining.max(1));
+                self.blocks.push(Vec::with_capacity(reserve_rows * self.r));
+            }
+            let block = self.blocks.last_mut().unwrap();
+            for st in self.states.iter() {
+                block.push(st.locals[dr]);
+            }
+        }
+        self.labels.extend_from_slice(&chunk.labels);
+        self.n_rows += rows;
+    }
+
+    /// Finish the pass: resolve global column offsets, shift every block
+    /// in place, and assemble the [`BlockEllRb`] + serving codebook.
+    pub fn finish(self) -> Result<StreamFeatures, ScrbError> {
+        let StreamFeaturizer {
+            r,
+            d,
+            sigma,
+            seed,
+            grids,
+            states,
+            blocks,
+            n_rows,
+            labels,
+            ..
+        } = self;
+        if n_rows == 0 {
+            return Err(ScrbError::invalid_input("empty dataset"));
+        }
+        // global column offsets: grid j owns [off_j, off_j + n_bins_j)
+        let mut offsets = Vec::with_capacity(r + 1);
+        offsets.push(0usize);
+        for st in &states {
+            offsets.push(offsets.last().unwrap() + st.dict.len());
+        }
+        let d_total = *offsets.last().unwrap();
+        if d_total >= u32::MAX as usize {
+            return Err(ScrbError::invalid_input("feature dimension overflows u32"));
+        }
+        // κ (Definition 1), same estimator and summation order as the
+        // batch path
+        let kappa = states
+            .iter()
+            .map(|st| {
+                let max_count = st.counts.iter().copied().max().unwrap_or(0);
+                if max_count > 0 {
+                    n_rows as f64 / max_count as f64
+                } else {
+                    1.0
+                }
+            })
+            .sum::<f64>()
+            / r as f64;
+        // local → global in place (div-free running grid cursor), then
+        // each block becomes its own EllRb over the full column space
+        let val = 1.0 / (r as f64).sqrt();
+        let ell_blocks: Vec<EllRb> = blocks
+            .into_iter()
+            .map(|mut block| {
+                parallel_chunks_mut(&mut block, num_threads(), |start, chunk| {
+                    let mut j = start % r;
+                    for slot in chunk.iter_mut() {
+                        *slot = (offsets[j] + *slot as usize) as u32;
+                        j += 1;
+                        if j == r {
+                            j = 0;
+                        }
+                    }
+                });
+                let rows_b = block.len() / r;
+                EllRb::new(rows_b, d_total, r, block, vec![val; rows_b])
+            })
+            .collect();
+        let z = BlockEllRb::from_blocks(ell_blocks);
+        let bins_per_grid: Vec<usize> = states.iter().map(|st| st.dict.len()).collect();
+        // serving codebook, rebuilt in first-seen order at a deterministic
+        // capacity — byte-identical to the batch fit's codebook
+        let tables: Vec<BinTable> = states
+            .iter()
+            .enumerate()
+            .map(|(j, st)| codebook_table(&st.hashes, offsets[j]))
+            .collect();
+        let codebook = RbCodebook { r, d_in: d, sigma, seed, dim: d_total, grids, tables };
+        Ok(StreamFeatures { z, codebook, bins_per_grid, kappa, labels })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rb::rb_features_with_codebook;
+    use crate::util::rng::Pcg;
+
+    /// Push `x` (already in its final frame) through the featurizer in
+    /// `chunk_rows`-sized chunks with an identity min/span frame.
+    fn featurize_chunked(x: &Mat, r: usize, sigma: f64, seed: u64, chunk_rows: usize) -> StreamFeatures {
+        let d = x.cols;
+        let mut fz = StreamFeaturizer::new(
+            r,
+            d,
+            sigma,
+            seed,
+            vec![0.0; d],
+            vec![1.0; d],
+            1 << 20,
+            x.rows,
+        );
+        let mut chunk = SparseChunk::new();
+        let mut i = 0;
+        while i < x.rows {
+            chunk.clear();
+            let hi = (i + chunk_rows).min(x.rows);
+            for row in i..hi {
+                chunk.begin_row(0);
+                for (j, &v) in x.row(row).iter().enumerate() {
+                    chunk.push_entry(j as u32, v);
+                }
+                chunk.end_row();
+            }
+            fz.push_chunk(&chunk);
+            i = hi;
+        }
+        fz.finish().unwrap()
+    }
+
+    #[test]
+    fn matches_batch_featurization_exactly() {
+        let mut rng = Pcg::seed(401);
+        let n = 120;
+        let x = Mat::from_vec(n, 4, (0..n * 4).map(|_| rng.f64()).collect());
+        let (batch, batch_cb) = rb_features_with_codebook(&x, 16, 0.5, 9);
+        let streamed = featurize_chunked(&x, 16, 0.5, 9, 13);
+        assert_eq!(streamed.z.rows, n);
+        assert_eq!(streamed.z.to_ell(), batch.z, "substrate must match bitwise");
+        assert_eq!(streamed.bins_per_grid, batch.bins_per_grid);
+        assert_eq!(streamed.kappa, batch.kappa);
+        // codebooks identical down to the serialized table layout
+        assert_eq!(streamed.codebook.dim, batch_cb.dim);
+        for (a, b) in streamed.codebook.tables.iter().zip(batch_cb.tables.iter()) {
+            let av: Vec<(u64, u32)> = a.iter().collect();
+            let bv: Vec<(u64, u32)> = b.iter().collect();
+            assert_eq!(av, bv);
+        }
+    }
+
+    #[test]
+    fn invariant_to_chunk_size() {
+        let mut rng = Pcg::seed(402);
+        let n = 61;
+        let x = Mat::from_vec(n, 3, (0..n * 3).map(|_| rng.f64()).collect());
+        let reference = featurize_chunked(&x, 8, 0.4, 3, n);
+        for chunk_rows in [1usize, 7, 64] {
+            let f = featurize_chunked(&x, 8, 0.4, 3, chunk_rows);
+            assert_eq!(f.z, reference.z, "chunk_rows={chunk_rows}");
+            assert_eq!(f.bins_per_grid, reference.bins_per_grid);
+            assert_eq!(f.kappa, reference.kappa);
+        }
+    }
+
+    #[test]
+    fn empty_pass_is_an_error() {
+        let fz = StreamFeaturizer::new(4, 2, 1.0, 1, vec![0.0; 2], vec![1.0; 2], 64, 0);
+        assert!(fz.finish().is_err());
+    }
+}

@@ -1,0 +1,75 @@
+//! Streaming out-of-core ingestion: chunked readers, block-wise RB
+//! featurization, and a bounded-memory fit pipeline.
+//!
+//! The paper's headline claim is linear scalability in N, but a pipeline
+//! that begins by densifying the input into an N×d `Mat` caps out long
+//! before "millions of users": for sparse benchmarks (news20: d ≈ 62k)
+//! the densified input dwarfs the RB matrix itself. Landmark and
+//! sampling accelerations dodge this by subsampling and paying
+//! information loss; RB's *data-independent* feature map (Algorithm 1
+//! draws grids from the kernel, not the data) lets us instead stream the
+//! full dataset through the fit in fixed-size chunks — bounded resident
+//! memory, zero approximation beyond RB itself.
+//!
+//! # The two-pass streaming fit
+//!
+//! [`fit_streaming`] makes exactly two chunked passes over a
+//! [`ChunkReader`]:
+//!
+//! 1. **Stats pass** — one scan accumulates the per-column min/span
+//!    input frame (bit-equal to the dense `minmax_params`), the row
+//!    count, the feature dimension, and the label census.
+//! 2. **Featurize pass** — the reader rewinds; each chunk is densified
+//!    into one reusable `chunk_rows × d` scratch, normalized into the
+//!    fitted frame, and binned against incrementally-grown per-grid
+//!    dictionaries ([`crate::rb::BinTable::get_or_assign`]). Local bin
+//!    ids accumulate into fixed-row-count substrate blocks; when the
+//!    stream ends, global column offsets resolve and the blocks become a
+//!    [`crate::sparse::BlockEllRb`].
+//!
+//! Degrees, the iterative SVD, the serving projection, and K-means then
+//! run on the block substrate unchanged — every solver product is
+//! bit-identical to the monolithic path, so **a streamed fit reproduces
+//! the in-memory fit's model byte for byte** on the same data and seed.
+//! For huge N the final K-means switches to the mini-batch path over the
+//! streamed serving embedding (see [`StreamOpts::minibatch_threshold`]).
+//!
+//! # Memory bound
+//!
+//! Peak resident state while featurizing:
+//!
+//! - `chunk_rows × d × 8 B` — the dense chunk scratch (the only place a
+//!   row is ever dense), plus the reusable sparse chunk buffers;
+//! - `N × R × 4 B` — the accumulated bin indices, which *are* the final
+//!   substrate (no separate copy);
+//! - `O(D)` — the per-grid dictionaries and, later, per-block transpose
+//!   layouts.
+//!
+//! The input file itself is never resident. `--chunk-rows` is therefore
+//! the knob trading IO granularity against the dense-scratch footprint.
+//!
+//! # When to prefer `--stream`
+//!
+//! Use the streaming path when the densified N×d input would not fit in
+//! memory (large N, or sparse high-d data), or when fitting straight
+//! from files too big to load. For data that fits comfortably, the
+//! in-memory path avoids the second file scan and the per-block
+//! transpose overhead — the models are identical either way, so the
+//! choice is purely operational:
+//!
+//! ```text
+//! scrb fit --stream --data big.libsvm --chunk-rows 4096 \
+//!          --sigma 0.25 --k 10 --save model.scrb
+//! ```
+
+pub mod chunk;
+pub mod featurize;
+pub mod fit;
+pub mod reader;
+pub mod stats;
+
+pub use chunk::SparseChunk;
+pub use featurize::{StreamFeaturizer, StreamFeatures};
+pub use fit::{fit_streaming, StreamFit, StreamOpts};
+pub use reader::{ChunkReader, CsvChunks, LibsvmChunks};
+pub use stats::{stats_pass, StreamStats};

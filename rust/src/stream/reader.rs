@@ -1,0 +1,444 @@
+//! Chunked dataset readers: fixed-row-count blocks of sparse rows,
+//! yielded through reusable buffers.
+//!
+//! The [`ChunkReader`] trait is the ingestion boundary of the out-of-core
+//! fit: a backend yields [`SparseChunk`]s of at most `chunk_rows` rows —
+//! sparse rows stay sparse, nothing is ever densified into an N×d matrix
+//! — and can [`ChunkReader::reset`] for another pass (the streaming fit
+//! makes two: statistics, then featurization). All per-chunk state lives
+//! in caller-owned buffers whose capacity survives across chunks *and*
+//! across passes, so a warm steady-state chunk loop performs no heap
+//! allocations (enforced by `tests/alloc.rs`).
+//!
+//! Two backends:
+//! - [`LibsvmChunks`] — the LibSVM text format (`label idx:val ...`,
+//!   1-based sparse indices), from a file path (buffered single-pass IO,
+//!   rewound with one `seek`) or from in-memory bytes (tests, adapters).
+//!   The in-memory loader [`crate::data::load_libsvm`] drains this same
+//!   reader, so the streamed and batch parse paths cannot drift.
+//! - [`CsvChunks`] — dense comma-separated rows (`label,v1,...,vd`), d
+//!   fixed by the first data row.
+//!
+//! Feature dimension is discovered as rows stream by ([`ChunkReader::dim`]
+//! is final only after a complete pass) — which is why the fit's first
+//! pass doubles as the dimension scan.
+
+use super::chunk::SparseChunk;
+use crate::error::ScrbError;
+use std::fs::File;
+use std::io::{BufRead, BufReader, Seek, SeekFrom};
+
+/// A rewindable source of fixed-row-count sparse chunks.
+pub trait ChunkReader {
+    /// Fill `chunk` (cleared first) with up to [`ChunkReader::chunk_rows`]
+    /// rows. Returns `Ok(false)` when the stream is exhausted (the chunk
+    /// is then empty); the final non-empty chunk may be short.
+    fn next_chunk(&mut self, chunk: &mut SparseChunk) -> Result<bool, ScrbError>;
+
+    /// Rewind to the first row for another pass. Warm readers rewind
+    /// without allocating.
+    fn reset(&mut self) -> Result<(), ScrbError>;
+
+    /// Feature dimension d observed so far. LibSVM discovers d as rows
+    /// stream by, so this is final only after a complete pass; the CSV
+    /// backend knows it from the first data row.
+    fn dim(&self) -> usize;
+
+    /// Target rows per chunk (the resident-input-memory knob: the
+    /// featurize pass holds one `chunk_rows × d` dense scratch).
+    fn chunk_rows(&self) -> usize;
+}
+
+/// Parse one LibSVM line (`label idx:val ...`, 1-based strictly-ascending
+/// indices) into `chunk`, tracking the running max dimension. Blank lines
+/// and `#` comments are skipped (returns false). Shared by the chunked
+/// reader and the in-memory loader so the two parse paths are one.
+///
+/// Ascending indices are the LibSVM convention; enforcing them here also
+/// rules out duplicate indices within a row — which would make "presence"
+/// ambiguous and break the streamed statistics' exact equivalence with
+/// the densified scan.
+pub(crate) fn parse_libsvm_line(
+    line: &str,
+    lineno: usize,
+    chunk: &mut SparseChunk,
+    max_dim: &mut usize,
+) -> Result<bool, ScrbError> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(false);
+    }
+    let mut parts = line.split_whitespace();
+    let label_tok = parts
+        .next()
+        .ok_or_else(|| ScrbError::parse(format!("line {lineno}: empty")))?;
+    let label = label_tok
+        .parse::<f64>()
+        .map_err(|_| ScrbError::parse(format!("line {lineno}: bad label '{label_tok}'")))?
+        as i64;
+    chunk.begin_row(label);
+    let mut prev_idx = 0usize;
+    for tok in parts {
+        let (is, vs) = tok
+            .split_once(':')
+            .ok_or_else(|| ScrbError::parse(format!("line {lineno}: bad feature '{tok}'")))?;
+        let idx: usize = is
+            .parse()
+            .map_err(|_| ScrbError::parse(format!("line {lineno}: bad index '{is}'")))?;
+        if idx == 0 {
+            return Err(ScrbError::parse(format!("line {lineno}: LibSVM indices are 1-based")));
+        }
+        if idx > u32::MAX as usize {
+            return Err(ScrbError::parse(format!("line {lineno}: index {idx} overflows u32")));
+        }
+        if idx <= prev_idx {
+            return Err(ScrbError::parse(format!(
+                "line {lineno}: indices must be strictly ascending ({prev_idx} then {idx})"
+            )));
+        }
+        prev_idx = idx;
+        let val: f64 = vs
+            .parse()
+            .map_err(|_| ScrbError::parse(format!("line {lineno}: bad value '{vs}'")))?;
+        *max_dim = (*max_dim).max(idx);
+        chunk.push_entry((idx - 1) as u32, val);
+    }
+    chunk.end_row();
+    Ok(true)
+}
+
+/// Where a text reader's bytes come from.
+enum Source {
+    /// Buffered file handle; rewound with one `seek` (no reallocation).
+    File(BufReader<File>),
+    /// In-memory bytes walked by cursor (tests, adapters).
+    Mem(Vec<u8>),
+}
+
+/// Shared line pump for the text backends: owns the byte source, the
+/// reusable line buffer, the chunk loop, and the rewind logic. A backend
+/// is just this plus a per-line parser and its dimension state — so line
+/// handling can never drift between formats.
+struct TextChunks {
+    source: Source,
+    /// Cursor into `Source::Mem` bytes.
+    pos: usize,
+    /// Reusable line buffer for `Source::File`.
+    line_buf: String,
+    lineno: usize,
+    chunk_rows: usize,
+}
+
+impl TextChunks {
+    fn from_path(path: &str, chunk_rows: usize) -> Result<TextChunks, ScrbError> {
+        assert!(chunk_rows >= 1, "chunk_rows must be at least 1");
+        let file = File::open(path).map_err(|e| ScrbError::io(path, e))?;
+        Ok(TextChunks {
+            source: Source::File(BufReader::new(file)),
+            pos: 0,
+            line_buf: String::new(),
+            lineno: 0,
+            chunk_rows,
+        })
+    }
+
+    fn from_bytes(bytes: Vec<u8>, chunk_rows: usize) -> TextChunks {
+        assert!(chunk_rows >= 1, "chunk_rows must be at least 1");
+        TextChunks { source: Source::Mem(bytes), pos: 0, line_buf: String::new(), lineno: 0, chunk_rows }
+    }
+
+    /// Fill `chunk` (cleared first) by feeding lines to `parse` until
+    /// `chunk_rows` rows accumulate or the stream ends.
+    fn next_chunk_with(
+        &mut self,
+        chunk: &mut SparseChunk,
+        mut parse: impl FnMut(&str, usize, &mut SparseChunk) -> Result<bool, ScrbError>,
+    ) -> Result<bool, ScrbError> {
+        chunk.clear();
+        while chunk.rows() < self.chunk_rows {
+            match &mut self.source {
+                Source::Mem(bytes) => {
+                    if self.pos >= bytes.len() {
+                        break;
+                    }
+                    let rest = &bytes[self.pos..];
+                    let take =
+                        rest.iter().position(|&b| b == b'\n').map(|p| p + 1).unwrap_or(rest.len());
+                    self.pos += take;
+                    self.lineno += 1;
+                    let line = std::str::from_utf8(&rest[..take]).map_err(|_| {
+                        ScrbError::parse(format!("line {}: invalid UTF-8", self.lineno))
+                    })?;
+                    parse(line, self.lineno, chunk)?;
+                }
+                Source::File(reader) => {
+                    self.line_buf.clear();
+                    let n = reader.read_line(&mut self.line_buf).map_err(|e| {
+                        ScrbError::parse(format!("read error at line {}: {e}", self.lineno + 1))
+                    })?;
+                    if n == 0 {
+                        break;
+                    }
+                    self.lineno += 1;
+                    parse(&self.line_buf, self.lineno, chunk)?;
+                }
+            }
+        }
+        Ok(chunk.rows() > 0)
+    }
+
+    fn reset(&mut self) -> Result<(), ScrbError> {
+        self.pos = 0;
+        self.lineno = 0;
+        if let Source::File(reader) = &mut self.source {
+            reader
+                .seek(SeekFrom::Start(0))
+                .map_err(|e| ScrbError::parse(format!("rewind failed: {e}")))?;
+        }
+        Ok(())
+    }
+}
+
+/// Chunked LibSVM reader (see module docs for the format).
+pub struct LibsvmChunks {
+    text: TextChunks,
+    max_dim: usize,
+}
+
+impl LibsvmChunks {
+    /// Open `path` for chunked reading.
+    pub fn from_path(path: &str, chunk_rows: usize) -> Result<LibsvmChunks, ScrbError> {
+        Ok(LibsvmChunks { text: TextChunks::from_path(path, chunk_rows)?, max_dim: 0 })
+    }
+
+    /// Read from in-memory LibSVM text.
+    pub fn from_bytes(bytes: Vec<u8>, chunk_rows: usize) -> LibsvmChunks {
+        LibsvmChunks { text: TextChunks::from_bytes(bytes, chunk_rows), max_dim: 0 }
+    }
+}
+
+impl ChunkReader for LibsvmChunks {
+    fn next_chunk(&mut self, chunk: &mut SparseChunk) -> Result<bool, ScrbError> {
+        let max_dim = &mut self.max_dim;
+        self.text
+            .next_chunk_with(chunk, |line, lineno, chunk| {
+                parse_libsvm_line(line, lineno, chunk, max_dim)
+            })
+    }
+
+    fn reset(&mut self) -> Result<(), ScrbError> {
+        self.text.reset()
+    }
+
+    fn dim(&self) -> usize {
+        self.max_dim
+    }
+
+    fn chunk_rows(&self) -> usize {
+        self.text.chunk_rows
+    }
+}
+
+/// Parse one dense CSV line (`label,v1,...,vd`) into `chunk`. `d` is
+/// `None` until the first data row fixes it; later rows must match.
+pub(crate) fn parse_csv_line(
+    line: &str,
+    lineno: usize,
+    chunk: &mut SparseChunk,
+    d: &mut Option<usize>,
+) -> Result<bool, ScrbError> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(false);
+    }
+    let mut parts = line.split(',');
+    let label_tok = parts
+        .next()
+        .ok_or_else(|| ScrbError::parse(format!("line {lineno}: empty")))?
+        .trim();
+    let label = label_tok
+        .parse::<f64>()
+        .map_err(|_| ScrbError::parse(format!("line {lineno}: bad label '{label_tok}'")))?
+        as i64;
+    chunk.begin_row(label);
+    let mut count = 0usize;
+    for tok in parts {
+        let tok = tok.trim();
+        let val: f64 = tok
+            .parse()
+            .map_err(|_| ScrbError::parse(format!("line {lineno}: bad value '{tok}'")))?;
+        chunk.push_entry(count as u32, val);
+        count += 1;
+    }
+    match *d {
+        None => *d = Some(count),
+        Some(expect) if expect != count => {
+            return Err(ScrbError::parse(format!(
+                "line {lineno}: {count} features, expected {expect}"
+            )));
+        }
+        _ => {}
+    }
+    chunk.end_row();
+    Ok(true)
+}
+
+/// Chunked dense-CSV reader: one `label,v1,...,vd` row per line, d fixed
+/// by the first data row. Rows are dense, so every value (zeros included)
+/// is an explicit chunk entry.
+pub struct CsvChunks {
+    text: TextChunks,
+    d: Option<usize>,
+}
+
+impl CsvChunks {
+    /// Open `path` for chunked reading.
+    pub fn from_path(path: &str, chunk_rows: usize) -> Result<CsvChunks, ScrbError> {
+        Ok(CsvChunks { text: TextChunks::from_path(path, chunk_rows)?, d: None })
+    }
+
+    /// Read from in-memory CSV text.
+    pub fn from_bytes(bytes: Vec<u8>, chunk_rows: usize) -> CsvChunks {
+        CsvChunks { text: TextChunks::from_bytes(bytes, chunk_rows), d: None }
+    }
+}
+
+impl ChunkReader for CsvChunks {
+    fn next_chunk(&mut self, chunk: &mut SparseChunk) -> Result<bool, ScrbError> {
+        let d = &mut self.d;
+        self.text
+            .next_chunk_with(chunk, |line, lineno, chunk| parse_csv_line(line, lineno, chunk, d))
+    }
+
+    fn reset(&mut self) -> Result<(), ScrbError> {
+        self.text.reset()
+    }
+
+    fn dim(&self) -> usize {
+        self.d.unwrap_or(0)
+    }
+
+    fn chunk_rows(&self) -> usize {
+        self.text.chunk_rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TEXT: &str = "\
+# comment
++1 1:0.5 3:1.5
+
+-1 2:2.0
++1 1:1.0 2:1.0 3:1.0
+2 4:0.25
+";
+
+    #[test]
+    fn libsvm_chunks_cover_all_rows() {
+        let mut r = LibsvmChunks::from_bytes(TEXT.as_bytes().to_vec(), 2);
+        let mut chunk = SparseChunk::new();
+        let mut rows = 0usize;
+        let mut nnz = 0usize;
+        let mut chunks = 0usize;
+        while r.next_chunk(&mut chunk).unwrap() {
+            assert!(chunk.rows() <= 2);
+            rows += chunk.rows();
+            nnz += chunk.nnz();
+            chunks += 1;
+        }
+        assert_eq!(rows, 4);
+        assert_eq!(nnz, 2 + 1 + 3 + 1);
+        assert_eq!(chunks, 2);
+        assert_eq!(r.dim(), 4);
+        // exhausted reader keeps returning false with an empty chunk
+        assert!(!r.next_chunk(&mut chunk).unwrap());
+        assert_eq!(chunk.rows(), 0);
+    }
+
+    #[test]
+    fn libsvm_reset_replays_identically() {
+        let mut r = LibsvmChunks::from_bytes(TEXT.as_bytes().to_vec(), 3);
+        let mut chunk = SparseChunk::new();
+        let mut first: Vec<(Vec<u32>, Vec<f64>, i64)> = Vec::new();
+        while r.next_chunk(&mut chunk).unwrap() {
+            for i in 0..chunk.rows() {
+                let (c, v) = chunk.row(i);
+                first.push((c.to_vec(), v.to_vec(), chunk.labels[i]));
+            }
+        }
+        r.reset().unwrap();
+        let mut second = Vec::new();
+        while r.next_chunk(&mut chunk).unwrap() {
+            for i in 0..chunk.rows() {
+                let (c, v) = chunk.row(i);
+                second.push((c.to_vec(), v.to_vec(), chunk.labels[i]));
+            }
+        }
+        assert_eq!(first, second);
+        assert_eq!(first.len(), 4);
+        assert_eq!(first[0].0, vec![0, 2]);
+        assert_eq!(first[0].2, 1);
+        assert_eq!(first[1].0, vec![1]);
+    }
+
+    #[test]
+    fn libsvm_rejects_malformed() {
+        for bad in [
+            "1 nocolon\n",
+            "1 0:1.0\n",
+            "abc 1:1\n",
+            "1 9999999999999:1\n",
+            "1 2:1.0 2:2.0\n", // duplicate index
+            "1 3:1.0 2:2.0\n", // out-of-order indices
+        ] {
+            let mut r = LibsvmChunks::from_bytes(bad.as_bytes().to_vec(), 4);
+            let mut chunk = SparseChunk::new();
+            assert!(r.next_chunk(&mut chunk).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn csv_chunks_parse_dense_rows() {
+        let text = "# header\n1, 0.5, 1.5, 0.0\n2, 1.0, -1.0, 3.0\n1, 0.0, 0.0, 0.0\n";
+        let mut r = CsvChunks::from_bytes(text.as_bytes().to_vec(), 2);
+        let mut chunk = SparseChunk::new();
+        assert!(r.next_chunk(&mut chunk).unwrap());
+        assert_eq!(chunk.rows(), 2);
+        assert_eq!(r.dim(), 3);
+        let (c, v) = chunk.row(0);
+        assert_eq!(c, &[0, 1, 2]);
+        assert_eq!(v, &[0.5, 1.5, 0.0]);
+        assert_eq!(chunk.labels, vec![1, 2]);
+        assert!(r.next_chunk(&mut chunk).unwrap());
+        assert_eq!(chunk.rows(), 1);
+        assert!(!r.next_chunk(&mut chunk).unwrap());
+        // ragged rows are an error
+        let mut bad = CsvChunks::from_bytes(b"1,1.0,2.0\n2,1.0\n".to_vec(), 8);
+        assert!(bad.next_chunk(&mut chunk).is_err());
+    }
+
+    #[test]
+    fn file_backend_reads_and_rewinds() {
+        let path = std::env::temp_dir().join("scrb_reader_test.libsvm");
+        let path = path.to_str().unwrap().to_string();
+        std::fs::write(&path, TEXT).unwrap();
+        let mut r = LibsvmChunks::from_path(&path, 3).unwrap();
+        let mut chunk = SparseChunk::new();
+        let mut rows = 0;
+        while r.next_chunk(&mut chunk).unwrap() {
+            rows += chunk.rows();
+        }
+        assert_eq!(rows, 4);
+        assert_eq!(r.dim(), 4);
+        r.reset().unwrap();
+        let mut rows2 = 0;
+        while r.next_chunk(&mut chunk).unwrap() {
+            rows2 += chunk.rows();
+        }
+        assert_eq!(rows2, 4);
+        std::fs::remove_file(&path).ok();
+    }
+}

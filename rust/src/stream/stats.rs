@@ -1,0 +1,162 @@
+//! Streaming input statistics: the min/span frame in one chunked pass.
+//!
+//! The batch pipeline computes its preprocessing frame with
+//! [`crate::data::Dataset::minmax_params`] over the densified N×d matrix.
+//! The streaming fit must produce the **bit-identical** frame without
+//! materializing that matrix: explicit sparse entries update running
+//! per-column min/max directly, and a per-column presence count records
+//! which columns had an implicit zero in at least one row — those fold a
+//! single `0.0` into the extrema at finalization. Min/max over a multiset
+//! is exact (no rounding) and order-independent, so the result equals the
+//! dense scan bit for bit, including the `span = 1.0` collapse for
+//! constant columns.
+
+use super::chunk::SparseChunk;
+use super::reader::ChunkReader;
+use crate::error::ScrbError;
+use std::collections::BTreeSet;
+
+/// Running per-column extrema over a chunked pass.
+pub struct StreamStats {
+    /// Rows seen.
+    pub n: usize,
+    lo: Vec<f64>,
+    hi: Vec<f64>,
+    /// Explicit-entry count per column (columns grow as discovered).
+    counts: Vec<usize>,
+    /// Distinct raw labels seen (the class census the CLI uses when no
+    /// `--k` is given).
+    pub classes: BTreeSet<i64>,
+}
+
+impl Default for StreamStats {
+    fn default() -> Self {
+        StreamStats::new()
+    }
+}
+
+impl StreamStats {
+    pub fn new() -> StreamStats {
+        StreamStats {
+            n: 0,
+            lo: Vec::new(),
+            hi: Vec::new(),
+            counts: Vec::new(),
+            classes: BTreeSet::new(),
+        }
+    }
+
+    /// Fold one chunk into the running statistics.
+    pub fn update(&mut self, chunk: &SparseChunk) {
+        self.n += chunk.rows();
+        for &l in &chunk.labels {
+            self.classes.insert(l);
+        }
+        for (&c, &v) in chunk.indices.iter().zip(chunk.values.iter()) {
+            let c = c as usize;
+            if c >= self.lo.len() {
+                self.lo.resize(c + 1, f64::INFINITY);
+                self.hi.resize(c + 1, f64::NEG_INFINITY);
+                self.counts.resize(c + 1, 0);
+            }
+            self.lo[c] = self.lo[c].min(v);
+            self.hi[c] = self.hi[c].max(v);
+            self.counts[c] += 1;
+        }
+    }
+
+    /// Finish the pass: per-column `(min, span)` over `d` columns,
+    /// bit-equal to [`crate::data::Dataset::minmax_params`] on the
+    /// densified data (columns any row left implicit contribute a 0.0;
+    /// `span = 1.0` for constant columns).
+    pub fn finalize(mut self, d: usize) -> (Vec<f64>, Vec<f64>) {
+        self.lo.resize(d, f64::INFINITY);
+        self.hi.resize(d, f64::NEG_INFINITY);
+        self.counts.resize(d, 0);
+        for j in 0..d {
+            if self.counts[j] < self.n {
+                self.lo[j] = self.lo[j].min(0.0);
+                self.hi[j] = self.hi[j].max(0.0);
+            }
+        }
+        let span: Vec<f64> = self
+            .lo
+            .iter()
+            .zip(self.hi.iter())
+            .map(|(&l, &h)| if h > l { h - l } else { 1.0 })
+            .collect();
+        (self.lo, span)
+    }
+}
+
+/// Run the statistics pass: drain `reader` once through `chunk`,
+/// returning the accumulated [`StreamStats`]. The reader is left at end
+/// of stream (callers `reset` it for the featurize pass).
+pub fn stats_pass(
+    reader: &mut dyn ChunkReader,
+    chunk: &mut SparseChunk,
+) -> Result<StreamStats, ScrbError> {
+    let mut stats = StreamStats::new();
+    while reader.next_chunk(chunk)? {
+        stats.update(chunk);
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::linalg::Mat;
+    use crate::stream::LibsvmChunks;
+
+    #[test]
+    fn matches_dense_minmax_params_bitwise() {
+        // sparse file with implicit zeros, negatives, a constant column,
+        // and a column that only appears late
+        let text = "\
+1 1:2.0 2:-3.0 4:1.0
+2 1:4.0 4:1.0
+1 2:5.0 4:1.0
+3 1:-1.0 2:0.5 3:9.0 4:1.0
+";
+        let mut r = LibsvmChunks::from_bytes(text.as_bytes().to_vec(), 2);
+        let mut chunk = SparseChunk::new();
+        let stats = stats_pass(&mut r, &mut chunk).unwrap();
+        assert_eq!(stats.n, 4);
+        assert_eq!(stats.classes.len(), 3);
+        let d = r.dim();
+        let (lo, span) = stats.finalize(d);
+
+        // dense reference: the batch loader's view of the same file
+        let ds = crate::data::parse_libsvm(std::io::Cursor::new(text), "t").unwrap();
+        let (dlo, dspan) = ds.minmax_params();
+        assert_eq!(lo, dlo);
+        assert_eq!(span, dspan);
+        // column 3 (0-based) is the constant 1.0 column: span collapses
+        assert_eq!(span[3], 1.0);
+    }
+
+    #[test]
+    fn dense_rows_without_implicit_zeros() {
+        // all-explicit chunks (the CSV shape): no zero folding at all
+        let x = Mat::from_vec(3, 2, vec![1.0, 5.0, 3.0, 4.0, 2.0, 6.0]);
+        let ds = Dataset::new("t", x, vec![0, 1, 0]);
+        let mut chunk = SparseChunk::new();
+        let mut stats = StreamStats::new();
+        for i in 0..3 {
+            chunk.clear();
+            chunk.begin_row(ds.y[i] as i64);
+            for (j, &v) in ds.x.row(i).iter().enumerate() {
+                chunk.push_entry(j as u32, v);
+            }
+            chunk.end_row();
+            stats.update(&chunk);
+        }
+        let (lo, span) = stats.finalize(2);
+        let (dlo, dspan) = ds.minmax_params();
+        assert_eq!(lo, dlo);
+        assert_eq!(span, dspan);
+        assert_eq!(lo, vec![1.0, 4.0]);
+    }
+}

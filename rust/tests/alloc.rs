@@ -23,6 +23,7 @@ use scrb::eigen::{
 use scrb::linalg::Mat;
 use scrb::model::{FittedModel, ServeWorkspace};
 use scrb::rb::rb_features;
+use scrb::stream::{ChunkReader, LibsvmChunks, SparseChunk, StreamFeaturizer, StreamStats};
 use scrb::util::alloc_count::{allocations, CountingAlloc};
 use scrb::util::rng::Pcg;
 
@@ -131,4 +132,61 @@ fn fused_gram_and_solver_steady_state_are_allocation_free() {
         0,
         "predict_batch allocated in steady state"
     );
+
+    // -- streaming ingestion (ISSUE 4 acceptance): once the chunk buffers
+    // and per-grid state are warm, the chunk loop allocates nothing. The
+    // file repeats one 8-row block, so every column, class, and bin is
+    // discovered in chunk 1; chunks 2..N are pure steady state.
+    let base = "\
+1 1:0.25 3:0.75
+2 2:0.5
+1 1:0.1 2:0.9 3:0.3
+3 4:1.0
+2 1:0.6 4:0.2
+1 3:0.45
+3 2:0.15 3:0.85 4:0.05
+2 1:0.35 2:0.65
+";
+    let mut text = String::new();
+    let repeats = 20usize;
+    for _ in 0..repeats {
+        text.push_str(base);
+    }
+    let n_stream = 8 * repeats;
+    let mut reader = LibsvmChunks::from_bytes(text.into_bytes(), 8);
+    let mut chunk = SparseChunk::new();
+
+    // stats pass: warm the chunk buffers with chunk 1, then the loop over
+    // the remaining chunks must not touch the heap
+    let mut stats = StreamStats::new();
+    assert!(reader.next_chunk(&mut chunk).unwrap());
+    stats.update(&chunk);
+    let before = allocations();
+    while reader.next_chunk(&mut chunk).unwrap() {
+        stats.update(&chunk);
+    }
+    assert_eq!(allocations() - before, 0, "stats chunk loop allocated in steady state");
+    assert_eq!(stats.n, n_stream);
+    let d = reader.dim();
+    let (lo, span) = stats.finalize(d);
+
+    // featurize pass: chunk 1 provisions the dense scratch, the per-grid
+    // dictionaries, and the (single, exactly-reserved) block; every later
+    // chunk re-bins known bins into reused buffers — zero allocations
+    reader.reset().unwrap();
+    let mut fz = StreamFeaturizer::new(8, d, 0.5, 3, lo, span, n_stream, n_stream);
+    assert!(reader.next_chunk(&mut chunk).unwrap());
+    fz.push_chunk(&chunk);
+    let before = allocations();
+    while reader.next_chunk(&mut chunk).unwrap() {
+        fz.push_chunk(&chunk);
+    }
+    assert_eq!(
+        allocations() - before,
+        0,
+        "featurize chunk loop allocated in steady state beyond the block being built"
+    );
+    let feats = fz.finish().unwrap();
+    assert_eq!(feats.z.rows, n_stream);
+    assert_eq!(feats.labels.len(), n_stream);
 }

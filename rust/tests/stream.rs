@@ -1,0 +1,263 @@
+//! Streaming-ingestion integration tests (ISSUE 4 acceptance):
+//!
+//! - chunk-boundary property: streamed featurization/fit is invariant to
+//!   the reader's chunk size (1, 7, 64, N — identical down to the model
+//!   bytes, hence including the phase-1 column assignment);
+//! - the tentpole contract: a streamed fit on the same data and seed
+//!   reproduces the in-memory fit's model **byte-identically** (save
+//!   bytes equal) and its training labels exactly;
+//! - the streamed model serves: training-set predict reproduces fit
+//!   labels; save → load round-trips;
+//! - the mini-batch K-means path for huge N engages and still clusters;
+//! - the dense-CSV backend fits to the same bytes as the LibSVM backend
+//!   on the same underlying data.
+
+use scrb::cluster::{sc_rb, Env};
+use scrb::config::{Engine, Kernel, PipelineConfig};
+use scrb::coordinator::Coordinator;
+use scrb::data::{parse_libsvm, synth, Dataset};
+use scrb::model::{FittedModel, ScRbModel};
+use scrb::stream::{fit_streaming, CsvChunks, LibsvmChunks, StreamOpts};
+use std::fmt::Write as _;
+
+/// Serialize a dataset as LibSVM text (1-based indices, exact `{}` f64
+/// round-trip formatting, zeros omitted — the sparse shape).
+fn to_libsvm(ds: &Dataset) -> Vec<u8> {
+    let mut s = String::new();
+    for i in 0..ds.n() {
+        write!(s, "{}", ds.y[i] as i64).unwrap();
+        for (j, &v) in ds.x.row(i).iter().enumerate() {
+            if v != 0.0 {
+                write!(s, " {}:{v}", j + 1).unwrap();
+            }
+        }
+        s.push('\n');
+    }
+    s.into_bytes()
+}
+
+/// Serialize a dataset as dense CSV text (`label,v1,...,vd`).
+fn to_csv(ds: &Dataset) -> Vec<u8> {
+    let mut s = String::new();
+    for i in 0..ds.n() {
+        write!(s, "{}", ds.y[i] as i64).unwrap();
+        for &v in ds.x.row(i) {
+            write!(s, ",{v}").unwrap();
+        }
+        s.push('\n');
+    }
+    s.into_bytes()
+}
+
+fn test_cfg(k: usize, r: usize, sigma: f64) -> PipelineConfig {
+    PipelineConfig::builder()
+        .k(k)
+        .r(r)
+        .kernel(Kernel::Laplacian { sigma })
+        .engine(Engine::Native)
+        .kmeans_replicates(3)
+        .seed(42)
+        .build()
+}
+
+/// In-memory reference flow — exactly what `scrb fit --data f.libsvm`
+/// does: parse, normalize by the training stats, fit, store the frame.
+/// Returns the model's serialized bytes (via the same `save` path the CLI
+/// uses) and the training labels.
+fn fit_in_memory(bytes: &[u8], cfg: &PipelineConfig) -> (Vec<u8>, Vec<usize>) {
+    let mut ds = parse_libsvm(std::io::Cursor::new(bytes), "t").unwrap();
+    let (lo, span) = ds.minmax_params();
+    ds.apply_minmax(&lo, &span);
+    let fitted = sc_rb::fit(&Env::new(cfg.clone()), &ds.x).unwrap();
+    let labels = fitted.output.labels;
+    let mut model = fitted.model;
+    model.set_input_norm(lo, span);
+    let path = temp_path("inmem_ref");
+    model.save(&path).unwrap();
+    let model_bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    (model_bytes, labels)
+}
+
+fn temp_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("scrb_stream_test_{tag}_{}.bin", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+#[test]
+fn streamed_fit_is_bit_identical_to_in_memory_fit() {
+    let ds = synth::gaussian_blobs(240, 3, 3, 8.0, 5);
+    let bytes = to_libsvm(&ds);
+    let cfg = test_cfg(3, 32, 0.6);
+    let (ref_bytes, ref_labels) = fit_in_memory(&bytes, &cfg);
+
+    let mut reader = LibsvmChunks::from_bytes(bytes.clone(), 37);
+    let opts = StreamOpts { k: Some(3), block_rows: 64, ..StreamOpts::default() };
+    let fit = fit_streaming(&Env::new(cfg.clone()), &mut reader, &opts).unwrap();
+    assert_eq!(fit.n, 240);
+    assert_eq!(fit.d, 3);
+    assert_eq!(fit.k_true, 3);
+    assert_eq!(fit.output.labels, ref_labels, "training labels must match the batch fit");
+    assert_eq!(fit.y, ds.y, "ground-truth labels must round-trip through the stream");
+    assert_eq!(
+        fit.model.to_bytes(),
+        ref_bytes,
+        "streamed model must serialize byte-identically to the in-memory fit"
+    );
+}
+
+#[test]
+fn streamed_fit_bit_identical_with_lanczos_too() {
+    let ds = synth::gaussian_blobs(150, 2, 2, 8.0, 11);
+    let bytes = to_libsvm(&ds);
+    let cfg = PipelineConfig::builder()
+        .k(2)
+        .r(16)
+        .kernel(Kernel::Laplacian { sigma: 0.5 })
+        .solver(scrb::config::Solver::Lanczos)
+        .engine(Engine::Native)
+        .kmeans_replicates(2)
+        .seed(7)
+        .build();
+    let (ref_bytes, ref_labels) = fit_in_memory(&bytes, &cfg);
+    let mut reader = LibsvmChunks::from_bytes(bytes, 16);
+    let opts = StreamOpts { k: Some(2), block_rows: 50, ..StreamOpts::default() };
+    let fit = fit_streaming(&Env::new(cfg), &mut reader, &opts).unwrap();
+    assert_eq!(fit.output.labels, ref_labels);
+    assert_eq!(fit.model.to_bytes(), ref_bytes);
+}
+
+#[test]
+fn streamed_fit_is_invariant_to_chunk_size() {
+    let ds = synth::gaussian_blobs(130, 3, 2, 8.0, 9);
+    let n = ds.n();
+    let bytes = to_libsvm(&ds);
+    let cfg = test_cfg(2, 16, 0.5);
+    let opts = StreamOpts { k: Some(2), block_rows: 41, ..StreamOpts::default() };
+    let reference = {
+        let mut reader = LibsvmChunks::from_bytes(bytes.clone(), n);
+        fit_streaming(&Env::new(cfg.clone()), &mut reader, &opts).unwrap()
+    };
+    for chunk_rows in [1usize, 7, 64] {
+        let mut reader = LibsvmChunks::from_bytes(bytes.clone(), chunk_rows);
+        let fit = fit_streaming(&Env::new(cfg.clone()), &mut reader, &opts).unwrap();
+        assert_eq!(
+            fit.model.to_bytes(),
+            reference.model.to_bytes(),
+            "model must not depend on chunk_rows={chunk_rows}"
+        );
+        assert_eq!(fit.output.labels, reference.output.labels);
+        assert_eq!(fit.output.info.kappa, reference.output.info.kappa);
+        assert_eq!(fit.output.info.feature_dim, reference.output.info.feature_dim);
+    }
+}
+
+#[test]
+fn streamed_model_serves_and_roundtrips() {
+    let ds = synth::gaussian_blobs(160, 3, 3, 8.0, 13);
+    let bytes = to_libsvm(&ds);
+    let cfg = test_cfg(3, 24, 0.6);
+    let mut reader = LibsvmChunks::from_bytes(bytes.clone(), 50);
+    let fit = fit_streaming(
+        &Env::new(cfg),
+        &mut reader,
+        &StreamOpts { k: Some(3), block_rows: 64, ..StreamOpts::default() },
+    )
+    .unwrap();
+    // training-set predict reproduces fit labels bit-exactly: bring the
+    // raw file back into the fitted frame (what `scrb predict` does)
+    let mut raw = parse_libsvm(std::io::Cursor::new(&bytes[..]), "t").unwrap();
+    fit.model.apply_input_norm(&mut raw.x);
+    let predicted = fit.model.predict(&raw.x).unwrap();
+    assert_eq!(predicted, fit.output.labels);
+    // save → load → identical serving
+    let path = temp_path("roundtrip");
+    fit.model.save(&path).unwrap();
+    let back = ScRbModel::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(back.to_bytes(), fit.model.to_bytes());
+    assert_eq!(back.predict(&raw.x).unwrap(), predicted);
+}
+
+#[test]
+fn coordinator_streams_from_disk() {
+    let ds = synth::gaussian_blobs(120, 2, 2, 8.0, 17);
+    let bytes = to_libsvm(&ds);
+    let path = temp_path("coord");
+    std::fs::write(&path, &bytes).unwrap();
+    let cfg = test_cfg(2, 16, 0.5);
+    let coord = Coordinator::new(cfg.clone(), 1);
+    // file-backed fit (exercises the seek-rewind between passes)
+    let from_disk = coord.fit_streaming(&path, 33, 0.5, Some(2), 64).unwrap();
+    std::fs::remove_file(&path).ok();
+    // must equal the in-memory-bytes streamed fit bit for bit
+    let mut reader = LibsvmChunks::from_bytes(bytes, 33);
+    let opts = StreamOpts { k: Some(2), block_rows: 64, ..StreamOpts::default() };
+    let from_mem = fit_streaming(&Env::new(cfg), &mut reader, &opts).unwrap();
+    assert_eq!(from_disk.model.to_bytes(), from_mem.model.to_bytes());
+    assert_eq!(from_disk.output.labels, from_mem.output.labels);
+}
+
+#[test]
+fn minibatch_path_engages_for_huge_n() {
+    let ds = synth::gaussian_blobs(300, 2, 3, 10.0, 19);
+    let bytes = to_libsvm(&ds);
+    // the streamed fit normalizes into the unit box, so the bandwidth is
+    // chosen for [0,1]-scale coordinates
+    let cfg = test_cfg(3, 16, 0.2);
+    let mut reader = LibsvmChunks::from_bytes(bytes, 64);
+    // threshold 0 ⇒ the mini-batch K-means path runs
+    let fit = fit_streaming(
+        &Env::new(cfg),
+        &mut reader,
+        &StreamOpts {
+            k: Some(3),
+            block_rows: 128,
+            minibatch_threshold: 0,
+            minibatch_size: 100,
+        },
+    )
+    .unwrap();
+    let acc = scrb::metrics::accuracy(&fit.output.labels, &fit.y);
+    assert!(acc > 0.9, "mini-batch streamed SC_RB accuracy: {acc}");
+}
+
+#[test]
+fn csv_backend_matches_libsvm_backend() {
+    let ds = synth::gaussian_blobs(90, 3, 2, 8.0, 23);
+    let cfg = test_cfg(2, 16, 0.5);
+    let opts = StreamOpts { k: Some(2), block_rows: 32, ..StreamOpts::default() };
+    let mut lib = LibsvmChunks::from_bytes(to_libsvm(&ds), 20);
+    let a = fit_streaming(&Env::new(cfg.clone()), &mut lib, &opts).unwrap();
+    let mut csv = CsvChunks::from_bytes(to_csv(&ds), 20);
+    let b = fit_streaming(&Env::new(cfg), &mut csv, &opts).unwrap();
+    assert_eq!(a.model.to_bytes(), b.model.to_bytes());
+    assert_eq!(a.output.labels, b.output.labels);
+    assert_eq!(a.y, b.y);
+}
+
+#[test]
+fn streamed_fit_error_paths() {
+    let cfg = test_cfg(2, 8, 0.5);
+    // empty stream
+    let mut empty = LibsvmChunks::from_bytes(Vec::new(), 8);
+    assert!(fit_streaming(&Env::new(cfg.clone()), &mut empty, &StreamOpts::default()).is_err());
+    // malformed line surfaces as a typed parse error
+    let mut bad = LibsvmChunks::from_bytes(b"1 nocolon\n".to_vec(), 8);
+    assert!(fit_streaming(&Env::new(cfg.clone()), &mut bad, &StreamOpts::default()).is_err());
+    // k = 0 rejected
+    let ds = synth::gaussian_blobs(30, 2, 2, 8.0, 3);
+    let mut r = LibsvmChunks::from_bytes(to_libsvm(&ds), 8);
+    let opts = StreamOpts { k: Some(0), ..StreamOpts::default() };
+    assert!(fit_streaming(&Env::new(cfg), &mut r, &opts).is_err());
+    // missing file is a clean io error
+    assert!(LibsvmChunks::from_path("/no/such/file.libsvm", 8).is_err());
+    // degenerate streaming knobs are typed errors at the coordinator API
+    let coord = Coordinator::new(test_cfg(2, 8, 0.5), 1);
+    assert!(coord.fit_streaming("/no/such.libsvm", 0, 0.5, None, 64).is_err());
+    assert!(coord.fit_streaming("/no/such.libsvm", 8, 0.5, None, 0).is_err());
+    assert!(coord.fit_streaming("/no/such.libsvm", 8, -1.0, None, 64).is_err());
+}
