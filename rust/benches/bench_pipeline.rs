@@ -1,0 +1,126 @@
+//! Pipeline artifact-cache benchmark (ISSUE 5 acceptance): cold vs
+//! artifact-cached wall time for a 5-point σ-sweep and a 5-point k-sweep
+//! of SC_RB at pendigits scale (N=10992, R=256).
+//!
+//!     cargo bench --bench bench_pipeline
+//!     SCRB_BENCH_SMOKE=1 cargo bench --bench bench_pipeline   # CI smoke
+//!
+//! Results land in `BENCH_pipeline.json` (override with SCRB_BENCH_JSON):
+//! `metrics.k_sweep_speedup` is the acceptance number — a cached k-sweep
+//! (embedding width pinned via `embed_dim`, so featurization *and* the
+//! SVD embedding are computed once and reused) must be ≥ 3× faster than
+//! the cold per-point sweep at full size. The σ-sweep is the honest
+//! contrast: σ re-fingerprints the featurization, so only the normalized
+//! input frame is reused and the speedup is necessarily marginal.
+
+use scrb::cluster::{Env, MethodKind};
+use scrb::config::{Engine, Kernel, PipelineConfig};
+use scrb::data::synth;
+use scrb::pipeline::{ArtifactCache, MinMaxNormalize};
+use scrb::util::bench::Bencher;
+use std::time::{Duration, Instant};
+
+/// One SC_RB fit through the pipeline (min-max normalize stage attached,
+/// matching the file-based CLI flow), against the given cache.
+fn fit_point(cfg: &PipelineConfig, x: &scrb::linalg::Mat, cache: &mut ArtifactCache) {
+    let env = Env::new(cfg.clone());
+    MethodKind::ScRb
+        .pipeline(cfg)
+        .with_normalize(Box::new(MinMaxNormalize))
+        .fit_cached(&env, x, cache)
+        .expect("pipeline fit failed");
+}
+
+fn sweep(cfgs: &[PipelineConfig], x: &scrb::linalg::Mat, cached: bool) -> (Duration, usize) {
+    let mut cache = if cached { ArtifactCache::new() } else { ArtifactCache::disabled() };
+    let t0 = Instant::now();
+    for cfg in cfgs {
+        fit_point(cfg, x, &mut cache);
+    }
+    (t0.elapsed(), cache.hits)
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let smoke = std::env::var("SCRB_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let (scale, r) = if smoke { (16, 64) } else { (1, 256) };
+
+    // pendigits-scale workload: n = 10992/scale, d = 16, 10 classes
+    let ds = synth::paper_benchmark("pendigits", scale, 42);
+    let n = ds.n();
+    println!(
+        "== pipeline cache bench (threads={}, n={n}, R={r}{}) ==",
+        scrb::util::threads::num_threads(),
+        if smoke { ", SMOKE" } else { "" }
+    );
+
+    // replicates kept low so the reusable stages (featurize + embed)
+    // dominate a grid point, as they do at production scale
+    let base = PipelineConfig::builder()
+        .k(10)
+        .r(r)
+        .kernel(Kernel::Laplacian { sigma: 0.25 })
+        .engine(Engine::Native)
+        .kmeans_replicates(2)
+        .seed(42)
+        .build();
+
+    // ---- 5-point σ-sweep: featurize/embed/cluster all re-run; the
+    // cached run reuses the normalized input frame
+    let sigmas = [0.15f64, 0.2, 0.25, 0.3, 0.35];
+    let sigma_cfgs: Vec<PipelineConfig> = sigmas
+        .iter()
+        .map(|&s| base.rebuild(|bb| bb.sigma(s)).expect("valid sigma point"))
+        .collect();
+    let (sigma_cold, _) = sweep(&sigma_cfgs, &ds.x, false);
+    b.record_once("sigma-sweep 5pt cold", sigma_cold);
+    let (sigma_cached, sigma_hits) = sweep(&sigma_cfgs, &ds.x, true);
+    b.record_once("sigma-sweep 5pt cached", sigma_cached);
+    let sigma_speedup = sigma_cold.as_secs_f64() / sigma_cached.as_secs_f64().max(1e-12);
+    println!(
+        "    sigma-sweep: cold {:.3}s vs cached {:.3}s ({sigma_speedup:.2}x, {sigma_hits} hits)",
+        sigma_cold.as_secs_f64(),
+        sigma_cached.as_secs_f64()
+    );
+
+    // ---- 5-point k-sweep with the embedding width pinned to the max k:
+    // featurization AND the SVD embedding are computed once; only the
+    // K-means stage runs per point
+    let ks = [4usize, 6, 8, 10, 12];
+    let k_cfgs: Vec<PipelineConfig> = ks
+        .iter()
+        .map(|&k| base.rebuild(|bb| bb.embed_dim(12).k(k)).expect("valid k point"))
+        .collect();
+    let (k_cold, _) = sweep(&k_cfgs, &ds.x, false);
+    b.record_once("k-sweep 5pt cold", k_cold);
+    let (k_cached, k_hits) = sweep(&k_cfgs, &ds.x, true);
+    b.record_once("k-sweep 5pt cached", k_cached);
+    let k_speedup = k_cold.as_secs_f64() / k_cached.as_secs_f64().max(1e-12);
+    println!(
+        "    k-sweep:     cold {:.3}s vs cached {:.3}s ({k_speedup:.2}x, {k_hits} hits)",
+        k_cold.as_secs_f64(),
+        k_cached.as_secs_f64()
+    );
+    if !smoke && k_speedup < 3.0 {
+        println!("    !! below the 3x acceptance bar for the cached k-sweep");
+    }
+
+    b.metric("pipeline_n", n as f64);
+    b.metric("pipeline_r", r as f64);
+    b.metric("sigma_sweep_cold_secs", sigma_cold.as_secs_f64());
+    b.metric("sigma_sweep_cached_secs", sigma_cached.as_secs_f64());
+    b.metric("sigma_sweep_speedup", sigma_speedup);
+    b.metric("sigma_sweep_cache_hits", sigma_hits as f64);
+    b.metric("k_sweep_cold_secs", k_cold.as_secs_f64());
+    b.metric("k_sweep_cached_secs", k_cached.as_secs_f64());
+    b.metric("k_sweep_speedup", k_speedup);
+    b.metric("k_sweep_cache_hits", k_hits as f64);
+
+    println!("\n{}", b.report());
+    let json_path =
+        std::env::var("SCRB_BENCH_JSON").unwrap_or_else(|_| "BENCH_pipeline.json".into());
+    match b.write_json(&json_path) {
+        Ok(()) => println!("[saved {json_path}]"),
+        Err(e) => eprintln!("[failed to save {json_path}: {e}]"),
+    }
+}

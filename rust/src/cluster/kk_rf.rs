@@ -2,28 +2,23 @@
 //! N×R RF feature matrix. No SVD; the K-means itself costs O(NRKt), which
 //! is why the paper finds this method blows up at large R (Fig. 5).
 //!
+//! As a stage composition: the shared
+//! [`RfFeaturize`](crate::cluster::sc_rf::RfFeaturize) (one artifact
+//! serves SC_RF / SV_RF / KK_RF in a method sweep) → pass-through embed →
+//! the shared K-means stage. See
+//! [`crate::cluster::MethodKind::pipeline`].
+//!
 //! Serving: transductive — the fitted model is the input-space class-mean
 //! fallback ([`crate::model::CentroidModel`]).
 
-use super::method::{embed_and_cluster, ClusterOutput, Env, MethodInfo};
-use super::sc_rf::rf_matrix;
+use super::method::Env;
 use crate::error::ScrbError;
 use crate::linalg::Mat;
-use crate::model::{CentroidModel, FitResult};
-use crate::util::timer::StageTimer;
+use crate::model::FitResult;
 
+/// Fit KK_RF through its stage composition.
 pub fn fit(env: &Env, x: &Mat) -> Result<FitResult, ScrbError> {
-    let mut timer = StageTimer::new();
-    let z = timer.time("rf_features", || rf_matrix(env, x));
-    let feature_dim = z.cols;
-    let (labels, km) = embed_and_cluster(z, env, &mut timer, false);
-    let model = CentroidModel::from_labels(x, &labels, env.cfg.k);
-    let output = ClusterOutput {
-        labels,
-        timer,
-        info: MethodInfo { feature_dim, svd: None, kappa: None, inertia: km.inertia },
-    };
-    Ok(FitResult { model: Box::new(model), output })
+    super::method::MethodKind::KkRf.fit(env, x)
 }
 
 #[cfg(test)]

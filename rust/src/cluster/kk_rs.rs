@@ -1,45 +1,26 @@
 //! **KK_RS** [10] — approximate kernel K-means by random sampling: restrict
 //! the cluster centers to the span of R sampled points. Equivalent to
 //! K-means in the Nyström feature space K(X,L)·K(L,L)^{−1/2} *without* the
-//! Laplacian normalization or SVD (the contrast with SC_Nys the paper draws).
+//! Laplacian normalization or SVD (the contrast with SC_Nys the paper
+//! draws).
+//!
+//! As a stage composition: the shared
+//! [`NysFeaturize`](crate::cluster::sc_nys::NysFeaturize) (its own
+//! sampling salt `0x4b72`) → pass-through embed (no SVD, no degrees) →
+//! the shared K-means stage. See
+//! [`crate::cluster::MethodKind::pipeline`].
 //!
 //! Serving: transductive — the fitted model is the input-space class-mean
 //! fallback ([`crate::model::CentroidModel`]).
 
-use super::method::{embed_and_cluster, ClusterOutput, Env, MethodInfo};
-use super::sc_nys::kernel_block_env;
+use super::method::Env;
 use crate::error::ScrbError;
-use crate::linalg::{cholesky_jittered, whiten_rows, Mat};
-use crate::model::{CentroidModel, FitResult};
-use crate::util::rng::Pcg;
-use crate::util::timer::StageTimer;
+use crate::linalg::Mat;
+use crate::model::FitResult;
 
+/// Fit KK_RS through its stage composition.
 pub fn fit(env: &Env, x: &Mat) -> Result<FitResult, ScrbError> {
-    let cfg = &env.cfg;
-    let m = cfg.r.min(x.rows);
-    let mut timer = StageTimer::new();
-
-    let mut rng = Pcg::new(cfg.seed, 0x4b72);
-    let idx = rng.sample_indices(x.rows, m);
-    let landmarks = x.select_rows(&idx);
-
-    let c = timer.time("kernel_blocks", || kernel_block_env(env, x, &landmarks));
-    let w11 = timer.time("kernel_blocks", || kernel_block_env(env, &landmarks, &landmarks));
-    // Cholesky whitening: rows of C·L^{−T} have the same pairwise
-    // distances as C·W₁₁^{−1/2} (see linalg::chol), at O(m³/3).
-    let z = timer.time("embed", || {
-        let l = cholesky_jittered(&w11);
-        whiten_rows(&c, &l)
-    });
-
-    let (labels, km) = embed_and_cluster(z, env, &mut timer, false);
-    let model = CentroidModel::from_labels(x, &labels, cfg.k);
-    let output = ClusterOutput {
-        labels,
-        timer,
-        info: MethodInfo { feature_dim: m, svd: None, kappa: None, inertia: km.inertia },
-    };
-    Ok(FitResult { model: Box::new(model), output })
+    super::method::MethodKind::KkRs.fit(env, x)
 }
 
 #[cfg(test)]

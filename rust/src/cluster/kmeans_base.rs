@@ -2,40 +2,23 @@
 //! geometry-limited reference point — strong on convex blobs, weak on
 //! non-convex structure).
 //!
+//! As a stage composition: identity featurize (the input *is* the feature
+//! matrix) → pass-through embed → the shared K-means stage with the
+//! native relabel pass. See [`crate::cluster::MethodKind::pipeline`].
+//!
 //! Serving: the fitted centroids *are* the model, so the
-//! [`CentroidModel`] this fit returns predicts exactly — training points
-//! reproduce their fit labels, new points get the true K-means
-//! assignment.
+//! [`crate::model::CentroidModel`] this fit returns predicts exactly —
+//! training points reproduce their fit labels, new points get the true
+//! K-means assignment.
 
-use super::method::{ClusterOutput, Env, MethodInfo};
+use super::method::Env;
 use crate::error::ScrbError;
-use crate::kmeans::kmeans;
 use crate::linalg::Mat;
-use crate::model::{CentroidModel, FitResult, FittedModel};
-use crate::util::timer::StageTimer;
+use crate::model::FitResult;
 
+/// Fit the K-means baseline through its stage composition.
 pub fn fit(env: &Env, x: &Mat) -> Result<FitResult, ScrbError> {
-    let mut timer = StageTimer::new();
-    let engine = env.assign_engine();
-    let opts = env.kmeans_opts(env.cfg.k);
-    let result = timer.time("kmeans", || kmeans(x, &opts, engine.as_ref()));
-    let model = CentroidModel::new(result.centroids);
-    // Final labels via the model's own (native f64) assignment — on the
-    // native engine these are bit-identical to the K-means assignment;
-    // under the f32 XLA assign engine this overrides borderline rounding
-    // so training-set `predict` reproduces fit labels on every engine.
-    let labels = model.predict(x)?;
-    let output = ClusterOutput {
-        labels,
-        timer,
-        info: MethodInfo {
-            feature_dim: x.cols,
-            svd: None,
-            kappa: None,
-            inertia: result.inertia,
-        },
-    };
-    Ok(FitResult { model: Box::new(model), output })
+    super::method::MethodKind::KMeans.fit(env, x)
 }
 
 #[cfg(test)]
@@ -62,6 +45,7 @@ mod tests {
 
     #[test]
     fn fitted_model_reproduces_training_labels() {
+        use crate::model::FittedModel;
         let blobs = synth::gaussian_blobs(200, 3, 3, 9.0, 5);
         let cfg = PipelineConfig::builder().k(3).kmeans_replicates(3).build();
         let fitted = fit(&Env::new(cfg), &blobs.x).unwrap();

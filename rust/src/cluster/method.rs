@@ -1,17 +1,22 @@
 //! Common method interface: every clustering algorithm in the comparison
-//! grid (Table 2/3) runs through [`MethodKind::fit`] — the
-//! [`crate::model::ClusterModel`] entry point — producing a
-//! [`crate::model::FitResult`]: the training-set [`ClusterOutput`]
-//! (labels, per-stage timings, solver telemetry) plus a serving
-//! [`crate::model::FittedModel`]. [`MethodKind::run`] is the batch
-//! convenience wrapper (fit, keep only the training output).
+//! grid (Table 2/3) is a composition of pipeline stages
+//! ([`MethodKind::pipeline`] — the table that replaced nine hand-inlined
+//! scaffolds), and [`MethodKind::fit`] — the
+//! [`crate::model::ClusterModel`] entry point — drives that composition,
+//! producing a [`crate::model::FitResult`]: the training-set
+//! [`ClusterOutput`] (labels, per-stage timings, solver telemetry) plus a
+//! serving [`crate::model::FittedModel`]. [`MethodKind::run`] is the
+//! batch convenience wrapper (fit, keep only the training output).
 
 use crate::config::{Engine, PipelineConfig};
 use crate::eigen::SvdStats;
 use crate::error::ScrbError;
-use crate::kmeans::{kmeans, AssignEngine, KmeansOpts, KmeansResult, NativeAssign};
+use crate::kmeans::{AssignEngine, KmeansOpts, NativeAssign};
 use crate::linalg::Mat;
 use crate::model::{ClusterModel, FitResult};
+use crate::pipeline::{
+    Assemble, DegreeMode, IdentityFeaturize, KmeansCluster, PassEmbed, Pipeline, SvdEmbed,
+};
 use crate::runtime::{XlaAssign, XlaRuntime};
 use crate::util::timer::StageTimer;
 
@@ -143,21 +148,130 @@ impl MethodKind {
         }
     }
 
+    /// This method's canonical stage composition under `cfg` — the table
+    /// that unifies the nine methods over the
+    /// [`crate::pipeline`] API. The SC family (SC_RB, SC_RF, SC_Nys,
+    /// SC_LSC, exact SC) shares one spectral embed + K-means tail and
+    /// differs only in featurization (and SC_RB's serving projection);
+    /// the kernel-K-means family (K-means, KK_RS, KK_RF) shares the
+    /// pass-through embed. Compositions built from the *same* `cfg` the
+    /// [`Env`] carries fit identically through [`MethodKind::fit`] or a
+    /// cached [`Pipeline::fit_cached`] sweep.
+    pub fn pipeline(&self, cfg: &PipelineConfig) -> Pipeline {
+        // embedding width: decoupled from K when pinned (k-sweep reuse);
+        // clamped to ≥ K (validation enforces this for built configs, the
+        // clamp additionally covers hand-poked ones)
+        let edim = cfg.embed_dim.unwrap_or(cfg.k).max(cfg.k);
+        let svd_embed = |seed_salt: u64, degree: DegreeMode, row_normalize: bool,
+                         scale_scores: bool, symmetric: bool| {
+            Box::new(SvdEmbed {
+                k: edim,
+                solver: cfg.solver,
+                tol: cfg.svd_tol,
+                max_matvecs: cfg.svd_max_iters,
+                seed: cfg.seed ^ seed_salt,
+                degree,
+                row_normalize,
+                scale_scores,
+                symmetric,
+            })
+        };
+        let kmeans = || Box::new(KmeansCluster::from_cfg(cfg, cfg.k));
+        match self {
+            MethodKind::KMeans => Pipeline::new(
+                Box::new(IdentityFeaturize),
+                Box::new(PassEmbed),
+                Box::new(KmeansCluster::from_cfg(cfg, cfg.k).with_relabel()),
+                Assemble::Centroids,
+            ),
+            MethodKind::ScExact => Pipeline::new(
+                Box::new(super::sc_exact::ExactFeaturize {
+                    kernel: cfg.kernel,
+                    engine: cfg.engine,
+                }),
+                svd_embed(0xe8ac7, DegreeMode::None, true, false, true),
+                kmeans(),
+                Assemble::ClassMeans,
+            ),
+            MethodKind::KkRs => Pipeline::new(
+                Box::new(super::sc_nys::NysFeaturize {
+                    kernel: cfg.kernel,
+                    r: cfg.r,
+                    seed: cfg.seed,
+                    salt: 0x4b72,
+                    whiten_stage: "embed",
+                    engine: cfg.engine,
+                }),
+                Box::new(PassEmbed),
+                kmeans(),
+                Assemble::ClassMeans,
+            ),
+            MethodKind::KkRf => Pipeline::new(
+                Box::new(super::sc_rf::RfFeaturize {
+                    kernel: cfg.kernel,
+                    r: cfg.r,
+                    seed: cfg.seed,
+                    engine: cfg.engine,
+                }),
+                Box::new(PassEmbed),
+                kmeans(),
+                Assemble::ClassMeans,
+            ),
+            MethodKind::SvRf => Pipeline::new(
+                Box::new(super::sc_rf::RfFeaturize {
+                    kernel: cfg.kernel,
+                    r: cfg.r,
+                    seed: cfg.seed,
+                    engine: cfg.engine,
+                }),
+                svd_embed(0x57f5, DegreeMode::None, false, true, false),
+                kmeans(),
+                Assemble::ClassMeans,
+            ),
+            MethodKind::ScLsc => Pipeline::new(
+                Box::new(super::sc_lsc::LscFeaturize {
+                    kernel: cfg.kernel,
+                    r: cfg.r,
+                    seed: cfg.seed,
+                }),
+                svd_embed(0x15ce, DegreeMode::None, true, false, false),
+                kmeans(),
+                Assemble::ClassMeans,
+            ),
+            MethodKind::ScNys => Pipeline::new(
+                Box::new(super::sc_nys::NysFeaturize {
+                    kernel: cfg.kernel,
+                    r: cfg.r,
+                    seed: cfg.seed,
+                    salt: 0x4e79,
+                    whiten_stage: "degrees",
+                    engine: cfg.engine,
+                }),
+                svd_embed(0x4ce5, DegreeMode::DenseClamped, true, false, false),
+                kmeans(),
+                Assemble::ClassMeans,
+            ),
+            MethodKind::ScRf => Pipeline::new(
+                Box::new(super::sc_rf::RfFeaturize {
+                    kernel: cfg.kernel,
+                    r: cfg.r,
+                    seed: cfg.seed,
+                    engine: cfg.engine,
+                }),
+                svd_embed(0x5cf5, DegreeMode::DenseClamped, true, false, false),
+                kmeans(),
+                Assemble::ClassMeans,
+            ),
+            MethodKind::ScRb => super::sc_rb::scrb_stages(cfg, cfg.k, None),
+        }
+    }
+
     /// Fit this method on `x`: the training-set clustering plus a serving
     /// model (SC_RB's spectral out-of-sample extension; input-space
     /// nearest-centroid for K-means and the transductive baselines).
+    /// Drives [`MethodKind::pipeline`] without artifact retention.
     pub fn fit(&self, env: &Env, x: &Mat) -> Result<FitResult, ScrbError> {
-        match self {
-            MethodKind::KMeans => super::kmeans_base::fit(env, x),
-            MethodKind::ScExact => super::sc_exact::fit(env, x),
-            MethodKind::KkRs => super::kk_rs::fit(env, x),
-            MethodKind::KkRf => super::kk_rf::fit(env, x),
-            MethodKind::SvRf => super::sv_rf::fit(env, x),
-            MethodKind::ScLsc => super::sc_lsc::fit(env, x),
-            MethodKind::ScNys => super::sc_nys::fit(env, x),
-            MethodKind::ScRf => super::sc_rf::fit(env, x),
-            MethodKind::ScRb => super::sc_rb::fit(env, x),
-        }
+        self.pipeline(&env.cfg).fit(env, x)
     }
 
     /// Batch convenience: fit and return only the training-set output
@@ -171,34 +285,6 @@ impl ClusterModel for MethodKind {
     fn fit(&self, env: &Env, x: &Mat) -> Result<FitResult, ScrbError> {
         MethodKind::fit(self, env, x)
     }
-}
-
-/// Shared spectral epilogue (Algorithm 2 steps 4–5): optionally row-
-/// normalize the embedding, then K-means it into K clusters.
-pub fn embed_and_cluster(
-    mut u: Mat,
-    env: &Env,
-    timer: &mut StageTimer,
-    row_normalize: bool,
-) -> (Vec<usize>, KmeansResult) {
-    if row_normalize {
-        u.normalize_rows();
-    }
-    cluster_embedding(&u, env, timer)
-}
-
-/// K-means over already-prepared embedding rows, by reference — callers
-/// that keep the embedding afterwards (the SC_RB fit labels its rows
-/// through the serving model) avoid copying it.
-pub fn cluster_embedding(
-    u: &Mat,
-    env: &Env,
-    timer: &mut StageTimer,
-) -> (Vec<usize>, KmeansResult) {
-    let engine = env.assign_engine();
-    let opts = env.kmeans_opts(env.cfg.k);
-    let result = timer.time("kmeans", || kmeans(u, &opts, engine.as_ref()));
-    (result.labels.iter().map(|&l| l as usize).collect(), result)
 }
 
 #[cfg(test)]
@@ -218,5 +304,19 @@ mod tests {
     #[test]
     fn all_covers_table2_columns() {
         assert_eq!(MethodKind::ALL.len(), 9);
+    }
+
+    #[test]
+    fn every_method_has_a_composition() {
+        let cfg = PipelineConfig::builder().k(3).r(16).build();
+        for kind in MethodKind::ALL {
+            let p = kind.pipeline(&cfg);
+            // serving assembly is typed per method
+            match kind {
+                MethodKind::KMeans => assert_eq!(p.assemble, Assemble::Centroids),
+                MethodKind::ScRb => assert_eq!(p.assemble, Assemble::ScRb),
+                _ => assert_eq!(p.assemble, Assemble::ClassMeans),
+            }
+        }
     }
 }

@@ -1,13 +1,16 @@
 //! Clustering methods: the paper's SC_RB (Algorithm 2) and the eight
-//! baselines of the Table 2/3 comparison grid, all behind one
-//! [`MethodKind`] dispatch.
+//! baselines of the Table 2/3 comparison grid, all expressed as
+//! compositions of [`crate::pipeline`] stages behind one [`MethodKind`]
+//! dispatch ([`MethodKind::pipeline`] is the composition table).
 //!
 //! Every method is a [`crate::model::ClusterModel`]: `fit` produces the
 //! training-set [`ClusterOutput`] plus a serving
 //! [`crate::model::FittedModel`] (SC_RB's spectral out-of-sample
 //! projection, the K-means centroids, or the class-mean fallback for the
 //! transductive baselines). [`MethodKind::run`] keeps the old batch shape
-//! as a thin wrapper over `fit`.
+//! as a thin wrapper over `fit`. Method-specific featurize/embed stages
+//! live in their method's module (e.g. [`sc_rb::RbFeaturize`],
+//! [`sc_rb::RbEmbed`], [`sc_rf::RfFeaturize`]).
 
 pub mod kk_rf;
 pub mod kk_rs;
@@ -20,7 +23,7 @@ pub mod sc_rb;
 pub mod sc_rf;
 pub mod sv_rf;
 
-pub use method::{cluster_embedding, embed_and_cluster, ClusterOutput, Env, MethodInfo, MethodKind};
+pub use method::{ClusterOutput, Env, MethodInfo, MethodKind};
 pub use sc_rb::ScRb;
 
 /// Re-export used by doc examples.

@@ -1,20 +1,22 @@
 //! **Exact spectral clustering** [21] — the quadratic reference the paper
-//! dashes out ("−") for N ≥ ~98k. Builds the full N×N similarity matrix
-//! (optionally through the XLA kernel-block artifact), normalizes it, and
-//! extracts the top-K eigenvectors of S = D^{−1/2} W D^{−1/2} with the
-//! iterative solver applied to the symmetric operator.
+//! dashes out ("−") for N ≥ ~98k. As a stage composition:
+//! [`ExactFeaturize`] builds the full N×N normalized similarity
+//! S = D^{−1/2} W D^{−1/2} (optionally through the XLA kernel-block
+//! artifact), then the symmetric [`crate::pipeline::SvdEmbed`] extracts
+//! the top-K eigenvectors with the iterative solver applied to [`SymOp`].
 //!
 //! Serving: exact SC is transductive (the embedding exists only for the
 //! points the eigenproblem was solved over), so the fitted model is the
 //! input-space class-mean fallback ([`crate::model::CentroidModel`]).
 
-use super::method::{embed_and_cluster, ClusterOutput, Env, MethodInfo};
-use crate::config::Kernel;
-use crate::eigen::{svds, SvdOp, SvdsOpts};
+use super::method::Env;
+use crate::config::{Engine, Kernel};
+use crate::eigen::SvdOp;
 use crate::error::ScrbError;
 use crate::kernels::kernel_matrix;
 use crate::linalg::Mat;
-use crate::model::{CentroidModel, FitResult};
+use crate::model::FitResult;
+use crate::pipeline::{DataSource, FeatureArtifact, FeatureMatrix, Featurize, Fingerprint};
 use crate::runtime::ArtifactKind;
 use crate::util::timer::StageTimer;
 
@@ -46,56 +48,77 @@ impl<'m> SvdOp for SymOp<'m> {
     }
 }
 
-pub fn fit(env: &Env, x: &Mat) -> Result<FitResult, ScrbError> {
-    let cfg = &env.cfg;
-    if x.rows > MAX_EXACT_N {
-        return Err(ScrbError::invalid_input(format!(
-            "exact SC is O(N²); refusing N={} > {MAX_EXACT_N} (the paper reports '-' here too)",
-            x.rows
-        )));
+/// Exact-SC featurization stage: the full similarity matrix W (XLA
+/// kernel-block path when available) normalized to
+/// S = D^{−1/2} W D^{−1/2}. Refuses N above [`MAX_EXACT_N`] with a typed
+/// error.
+pub struct ExactFeaturize {
+    /// Similarity kernel (kind + bandwidth).
+    pub kernel: Kernel,
+    /// Engine selector (part of the fingerprint: the XLA kernel-block
+    /// artifact computes in f32).
+    pub engine: Engine,
+}
+
+impl Featurize for ExactFeaturize {
+    fn fingerprint(&self, input_fp: u64) -> u64 {
+        Fingerprint::new("featurize/exact")
+            .u64(input_fp)
+            .str(self.kernel.name())
+            .f64(self.kernel.sigma())
+            .str(self.engine.name())
+            .finish()
     }
-    let mut timer = StageTimer::new();
 
-    // Full similarity matrix W (XLA kernel-block path when available).
-    let w = timer.time("kernel_matrix", || build_w(env, x));
-
-    // Normalized similarity S = D^{-1/2} W D^{-1/2}.
-    let s = timer.time("degrees", || {
-        let n = w.rows;
-        let mut scale = vec![0.0; n];
-        for i in 0..n {
-            let d: f64 = w.row(i).iter().sum();
-            scale[i] = if d > 1e-300 { 1.0 / d.sqrt() } else { 0.0 };
+    fn run(&self, env: &Env, data: DataSource<'_>, fp: u64) -> Result<FeatureArtifact, ScrbError> {
+        let x = data.matrix("exact spectral clustering")?;
+        if x.rows > MAX_EXACT_N {
+            return Err(ScrbError::invalid_input(format!(
+                "exact SC is O(N²); refusing N={} > {MAX_EXACT_N} (the paper reports '-' here too)",
+                x.rows
+            )));
         }
-        let mut s = w;
-        for i in 0..n {
-            let si = scale[i];
-            for j in 0..n {
-                s.set(i, j, si * s.at(i, j) * scale[j]);
+        let mut timer = StageTimer::new();
+
+        // Full similarity matrix W (XLA kernel-block path when available).
+        let w = timer.time("kernel_matrix", || build_w(env, x));
+
+        // Normalized similarity S = D^{-1/2} W D^{-1/2}.
+        let s = timer.time("degrees", || {
+            let n = w.rows;
+            let mut scale = vec![0.0; n];
+            for i in 0..n {
+                let d: f64 = w.row(i).iter().sum();
+                scale[i] = if d > 1e-300 { 1.0 / d.sqrt() } else { 0.0 };
             }
-        }
-        s
-    });
+            let mut s = w;
+            for i in 0..n {
+                let si = scale[i];
+                for j in 0..n {
+                    s.set(i, j, si * s.at(i, j) * scale[j]);
+                }
+            }
+            s
+        });
 
-    let mut opts = SvdsOpts::new(cfg.k, cfg.solver);
-    opts.tol = cfg.svd_tol;
-    opts.max_matvecs = cfg.svd_max_iters;
-    let op = SymOp(&s);
-    let svd = timer.time("svd", || svds(&op, &opts, cfg.seed ^ 0xe8ac7));
-
-    let (labels, km) = embed_and_cluster(svd.u, env, &mut timer, true);
-    let model = CentroidModel::from_labels(x, &labels, cfg.k);
-    let output = ClusterOutput {
-        labels,
-        timer,
-        info: MethodInfo {
+        Ok(FeatureArtifact {
+            fingerprint: fp,
             feature_dim: x.rows,
-            svd: Some(svd.stats),
+            z: FeatureMatrix::Dense(std::sync::Arc::new(s)),
+            codebook: None,
             kappa: None,
-            inertia: km.inertia,
-        },
-    };
-    Ok(FitResult { model: Box::new(model), output })
+            norm: None,
+            stream_labels: None,
+            timer,
+        })
+    }
+
+    /// The N×N similarity is the largest artifact any stage can produce
+    /// and is never shared with another method — retaining it in a sweep
+    /// cache would pin O(N²) memory for no reuse.
+    fn cacheable(&self) -> bool {
+        false
+    }
 }
 
 fn build_w(env: &Env, x: &Mat) -> Mat {
@@ -116,6 +139,11 @@ fn build_w(env: &Env, x: &Mat) -> Mat {
         }
     }
     kernel_matrix(env.cfg.kernel, x)
+}
+
+/// Fit exact SC through its stage composition.
+pub fn fit(env: &Env, x: &Mat) -> Result<FitResult, ScrbError> {
+    super::method::MethodKind::ScExact.fit(env, x)
 }
 
 #[cfg(test)]
@@ -147,8 +175,7 @@ mod tests {
             .kmeans_replicates(5)
             .build();
         let exact = fit(&Env::new(cfg.clone()), &ds.x).unwrap().output;
-        let mut rb_cfg = cfg;
-        rb_cfg.r = 512;
+        let rb_cfg = cfg.rebuild(|b| b.r(512)).unwrap();
         let rb = super::super::sc_rb::fit(&Env::new(rb_cfg), &ds.x).unwrap().output;
         let a_exact = accuracy(&exact.labels, &ds.y);
         let a_rb = accuracy(&rb.labels, &ds.y);

@@ -3,6 +3,11 @@
 //! nearest landmarks with kernel weights, rows normalized to sum 1), then
 //! the spectral embedding from the SVD of Â = A·Λ^{−1/2}.
 //!
+//! As a stage composition: [`LscFeaturize`] (K-means landmarks + sparse
+//! affinity + the Λ^{−1/2} column scaling) → a plain
+//! [`crate::pipeline::SvdEmbed`] (no further degree work) → the shared
+//! K-means stage.
+//!
 //! Note (paper §5.1): this is a KNN-style graph, *not* the fully connected
 //! graph the other SC methods use — which is exactly why its behaviour
 //! diverges (better on manifold-ish digits, worse elsewhere).
@@ -10,12 +15,13 @@
 //! Serving: transductive — the fitted model is the input-space class-mean
 //! fallback ([`crate::model::CentroidModel`]).
 
-use super::method::{embed_and_cluster, ClusterOutput, Env, MethodInfo};
-use crate::eigen::{svds, SvdsOpts};
+use super::method::Env;
+use crate::config::Kernel;
 use crate::error::ScrbError;
 use crate::kmeans::{kmeans, KmeansOpts, NativeAssign};
 use crate::linalg::Mat;
-use crate::model::{CentroidModel, FitResult};
+use crate::model::FitResult;
+use crate::pipeline::{DataSource, FeatureArtifact, FeatureMatrix, Featurize, Fingerprint};
 use crate::sparse::Csr;
 use crate::util::rng::Pcg;
 use crate::util::timer::StageTimer;
@@ -23,80 +29,103 @@ use crate::util::timer::StageTimer;
 /// Nearest landmarks kept per point (Chen & Cai use ~5).
 pub const S_NEAREST: usize = 5;
 
-pub fn fit(env: &Env, x: &Mat) -> Result<FitResult, ScrbError> {
-    let cfg = &env.cfg;
-    let p = cfg.r.min(x.rows); // number of landmarks
-    let s = S_NEAREST.min(p);
-    let mut timer = StageTimer::new();
+/// LSC featurization stage: landmarks via a light K-means on a subsample
+/// (the LSC-K variant), the s-nearest kernel-weighted row-stochastic
+/// affinity A, and the landmark-side normalization Â = A·Λ^{−1/2} with
+/// Λ = diag(Aᵀ1) — everything up to the SVD.
+pub struct LscFeaturize {
+    /// Kernel (kind + bandwidth) weighting the bipartite edges.
+    pub kernel: Kernel,
+    /// Number of landmarks R (capped to N at run time).
+    pub r: usize,
+    /// Method seed.
+    pub seed: u64,
+}
 
-    // Landmarks via a light K-means on a subsample (the LSC-K variant —
-    // better landmarks than uniform sampling, as in the original paper).
-    let landmarks = timer.time("landmarks", || {
-        let mut rng = Pcg::new(cfg.seed, 0x15c0);
-        let sub = (10 * p).min(x.rows);
-        let idx = rng.sample_indices(x.rows, sub);
-        let xs = x.select_rows(&idx);
-        let opts = KmeansOpts { k: p, replicates: 1, max_iters: 10, ..KmeansOpts::new(p) };
-        kmeans(&xs, &opts, &NativeAssign).centroids
-    });
+impl Featurize for LscFeaturize {
+    fn fingerprint(&self, input_fp: u64) -> u64 {
+        Fingerprint::new("featurize/lsc")
+            .u64(input_fp)
+            .str(self.kernel.name())
+            .f64(self.kernel.sigma())
+            .usize(self.r)
+            .u64(self.seed)
+            .usize(S_NEAREST)
+            .finish()
+    }
 
-    // Sparse affinity A: s nearest landmarks per point, kernel-weighted,
-    // row-normalized (row-stochastic).
-    let a = timer.time("affinity", || {
-        let n = x.rows;
-        let mut rows: Vec<Vec<(u32, f64)>> = Vec::with_capacity(n);
-        let kernel = cfg.kernel;
-        for i in 0..n {
-            let xi = x.row(i);
-            // top-s by kernel value (equivalently nearest by distance)
-            let mut vals: Vec<(u32, f64)> = (0..p)
-                .map(|l| (l as u32, kernel.eval(xi, landmarks.row(l))))
-                .collect();
-            vals.sort_by(|u, v| v.1.partial_cmp(&u.1).unwrap());
-            vals.truncate(s);
-            let sum: f64 = vals.iter().map(|(_, w)| w).sum();
-            if sum > 1e-300 {
-                for e in vals.iter_mut() {
-                    e.1 /= sum;
+    fn run(&self, _env: &Env, data: DataSource<'_>, fp: u64) -> Result<FeatureArtifact, ScrbError> {
+        let x = data.matrix("LSC featurization")?;
+        let p = self.r.min(x.rows); // number of landmarks
+        let s = S_NEAREST.min(p);
+        let mut timer = StageTimer::new();
+
+        // Landmarks via a light K-means on a subsample (the LSC-K variant —
+        // better landmarks than uniform sampling, as in the original paper).
+        let landmarks = timer.time("landmarks", || {
+            let mut rng = Pcg::new(self.seed, 0x15c0);
+            let sub = (10 * p).min(x.rows);
+            let idx = rng.sample_indices(x.rows, sub);
+            let xs = x.select_rows(&idx);
+            let opts = KmeansOpts { k: p, replicates: 1, max_iters: 10, ..KmeansOpts::new(p) };
+            kmeans(&xs, &opts, &NativeAssign).centroids
+        });
+
+        // Sparse affinity A: s nearest landmarks per point, kernel-weighted,
+        // row-normalized (row-stochastic).
+        let a = timer.time("affinity", || {
+            let n = x.rows;
+            let mut rows: Vec<Vec<(u32, f64)>> = Vec::with_capacity(n);
+            let kernel = self.kernel;
+            for i in 0..n {
+                let xi = x.row(i);
+                // top-s by kernel value (equivalently nearest by distance)
+                let mut vals: Vec<(u32, f64)> = (0..p)
+                    .map(|l| (l as u32, kernel.eval(xi, landmarks.row(l))))
+                    .collect();
+                vals.sort_by(|u, v| v.1.partial_cmp(&u.1).unwrap());
+                vals.truncate(s);
+                let sum: f64 = vals.iter().map(|(_, w)| w).sum();
+                if sum > 1e-300 {
+                    for e in vals.iter_mut() {
+                        e.1 /= sum;
+                    }
                 }
+                rows.push(vals);
             }
-            rows.push(vals);
-        }
-        Csr::from_rows(n, p, rows)
-    });
+            Csr::from_rows(n, p, rows)
+        });
 
-    // Â = A·Λ^{-1/2} with Λ = diag(Aᵀ1): the landmark-side degree
-    // normalization that makes ÂÂᵀ the bipartite similarity.
-    let ahat = timer.time("degrees", || {
-        let lam = a.col_sums();
-        let mut ahat = a;
-        let scale: Vec<f64> =
-            lam.iter().map(|&l| if l > 1e-300 { 1.0 / l.sqrt() } else { 0.0 }).collect();
-        // column scaling: multiply every entry by scale[col]
-        for p_ in 0..ahat.data.len() {
-            ahat.data[p_] *= scale[ahat.indices[p_] as usize];
-        }
-        ahat
-    });
+        // Â = A·Λ^{-1/2} with Λ = diag(Aᵀ1): the landmark-side degree
+        // normalization that makes ÂÂᵀ the bipartite similarity.
+        let ahat = timer.time("degrees", || {
+            let lam = a.col_sums();
+            let mut ahat = a;
+            let scale: Vec<f64> =
+                lam.iter().map(|&l| if l > 1e-300 { 1.0 / l.sqrt() } else { 0.0 }).collect();
+            // column scaling: multiply every entry by scale[col]
+            for p_ in 0..ahat.data.len() {
+                ahat.data[p_] *= scale[ahat.indices[p_] as usize];
+            }
+            ahat
+        });
 
-    let mut opts = SvdsOpts::new(cfg.k, cfg.solver);
-    opts.tol = cfg.svd_tol;
-    opts.max_matvecs = cfg.svd_max_iters;
-    let svd = timer.time("svd", || svds(&ahat, &opts, cfg.seed ^ 0x15ce));
-
-    let (labels, km) = embed_and_cluster(svd.u, env, &mut timer, true);
-    let model = CentroidModel::from_labels(x, &labels, cfg.k);
-    let output = ClusterOutput {
-        labels,
-        timer,
-        info: MethodInfo {
-            feature_dim: p,
-            svd: Some(svd.stats),
+        Ok(FeatureArtifact {
+            fingerprint: fp,
+            z: FeatureMatrix::Sparse(ahat),
+            codebook: None,
             kappa: None,
-            inertia: km.inertia,
-        },
-    };
-    Ok(FitResult { model: Box::new(model), output })
+            feature_dim: p,
+            norm: None,
+            stream_labels: None,
+            timer,
+        })
+    }
+}
+
+/// Fit SC_LSC through its stage composition.
+pub fn fit(env: &Env, x: &Mat) -> Result<FitResult, ScrbError> {
+    super::method::MethodKind::ScLsc.fit(env, x)
 }
 
 #[cfg(test)]

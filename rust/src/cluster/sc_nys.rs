@@ -3,24 +3,29 @@
 //! landmarks), and run the spectral pipeline on the implicit low-rank form
 //! Ẑ = D^{−1/2}·C·W₁₁^{−1/2}.
 //!
+//! As a stage composition: [`NysFeaturize`] (landmark sampling + kernel
+//! blocks + Cholesky whitening; shared with KK_RS, which differs only in
+//! its sampling salt) → the clamped-degree [`crate::pipeline::SvdEmbed`]
+//! → the shared K-means stage.
+//!
 //! Serving: transductive here (the degree normalization couples every
 //! point), so the fitted model is the input-space class-mean fallback
 //! ([`crate::model::CentroidModel`]).
 
-use super::method::{embed_and_cluster, ClusterOutput, Env, MethodInfo};
-use crate::config::Kernel;
-use crate::eigen::{svds, SvdsOpts};
+use super::method::Env;
+use crate::config::{Engine, Kernel};
 use crate::error::ScrbError;
 use crate::kernels::kernel_block;
 use crate::linalg::{cholesky_jittered, whiten_rows, Mat};
-use crate::model::{CentroidModel, FitResult};
+use crate::model::FitResult;
+use crate::pipeline::{DataSource, FeatureArtifact, FeatureMatrix, Featurize, Fingerprint};
 use crate::runtime::ArtifactKind;
 use crate::util::rng::Pcg;
 use crate::util::timer::StageTimer;
 
 /// Kernel block through the XLA artifact when available (shared with the
 /// landmark methods).
-pub(super) fn kernel_block_env(env: &Env, x: &Mat, y: &Mat) -> Mat {
+pub fn kernel_block_env(env: &Env, x: &Mat, y: &Mat) -> Mat {
     if let Some(rt) = env.xla {
         let force = env.cfg.engine == crate::config::Engine::Xla;
         if env.cfg.engine != crate::config::Engine::Native {
@@ -40,57 +45,76 @@ pub(super) fn kernel_block_env(env: &Env, x: &Mat, y: &Mat) -> Mat {
     kernel_block(env.cfg.kernel, x, y)
 }
 
-pub fn fit(env: &Env, x: &Mat) -> Result<FitResult, ScrbError> {
-    let cfg = &env.cfg;
-    let m = cfg.r.min(x.rows);
-    let mut timer = StageTimer::new();
+/// Nyström featurization stage: uniform landmark sample, kernel blocks
+/// C = K(X, L) and W₁₁ = K(L, L), then Cholesky whitening — rows of
+/// C·L^{−T} span the same similarity as C·W₁₁^{−1/2} (the right rotation
+/// changes neither Ŵ = z·zᵀ nor the left singular subspace). Shared by
+/// SC_Nys (salt `0x4e79`, whitening accounted under "degrees") and KK_RS
+/// (salt `0x4b72`, whitening accounted under "embed").
+pub struct NysFeaturize {
+    /// Kernel (kind + bandwidth) for both blocks.
+    pub kernel: Kernel,
+    /// Number of landmarks R (capped to N at run time).
+    pub r: usize,
+    /// Method seed.
+    pub seed: u64,
+    /// Landmark-sampling salt (SC_Nys and KK_RS draw different samples).
+    pub salt: u64,
+    /// Timer stage the whitening is accounted under (legacy stage names
+    /// differ between the two consumers).
+    pub whiten_stage: &'static str,
+    /// Engine selector (part of the fingerprint: the XLA kernel-block
+    /// artifact computes in f32).
+    pub engine: Engine,
+}
 
-    // landmarks: uniform sample (standard Nyström)
-    let mut rng = Pcg::new(cfg.seed, 0x4e79);
-    let idx = rng.sample_indices(x.rows, m);
-    let landmarks = x.select_rows(&idx);
+impl Featurize for NysFeaturize {
+    fn fingerprint(&self, input_fp: u64) -> u64 {
+        Fingerprint::new("featurize/nystrom")
+            .u64(input_fp)
+            .str(self.kernel.name())
+            .f64(self.kernel.sigma())
+            .usize(self.r)
+            .u64(self.seed)
+            .u64(self.salt)
+            .str(self.engine.name())
+            .finish()
+    }
 
-    // C = K(X, L) (N×m), W11 = K(L, L) (m×m)
-    let c = timer.time("kernel_blocks", || kernel_block_env(env, x, &landmarks));
-    let w11 = timer.time("kernel_blocks", || kernel_block_env(env, &landmarks, &landmarks));
+    fn run(&self, env: &Env, data: DataSource<'_>, fp: u64) -> Result<FeatureArtifact, ScrbError> {
+        let x = data.matrix("Nyström featurization")?;
+        let m = self.r.min(x.rows);
+        let mut timer = StageTimer::new();
 
-    // Ẑ = D^{-1/2} C W11^{-1/2}, degrees d = C·(W11⁻¹·(Cᵀ1)) ≈ Ŵ·1
-    let zny = timer.time("degrees", || {
-        // Cholesky whitening ≡ W₁₁^{−1/2} up to a right rotation, which
-        // changes neither Ŵ = z·zᵀ nor the left singular subspace.
-        let l = cholesky_jittered(&w11);
-        let mut z = whiten_rows(&c, &l); // N×m, Ŵ = z zᵀ
-        let ones = vec![1.0; z.rows];
-        let col = z.t_matvec(&ones);
-        let deg = z.matvec(&col);
-        let floor = 1e-8 * deg.iter().map(|d| d.abs()).fold(0.0, f64::max).max(1e-12);
-        for i in 0..z.rows {
-            let s = 1.0 / deg[i].max(floor).sqrt();
-            for v in z.row_mut(i) {
-                *v *= s;
-            }
-        }
-        z
-    });
+        // landmarks: uniform sample (standard Nyström)
+        let mut rng = Pcg::new(self.seed, self.salt);
+        let idx = rng.sample_indices(x.rows, m);
+        let landmarks = x.select_rows(&idx);
 
-    let mut opts = SvdsOpts::new(cfg.k, cfg.solver);
-    opts.tol = cfg.svd_tol;
-    opts.max_matvecs = cfg.svd_max_iters;
-    let svd = timer.time("svd", || svds(&zny, &opts, cfg.seed ^ 0x4ce5));
+        // C = K(X, L) (N×m), W11 = K(L, L) (m×m)
+        let c = timer.time("kernel_blocks", || kernel_block_env(env, x, &landmarks));
+        let w11 = timer.time("kernel_blocks", || kernel_block_env(env, &landmarks, &landmarks));
 
-    let (labels, km) = embed_and_cluster(svd.u, env, &mut timer, true);
-    let model = CentroidModel::from_labels(x, &labels, cfg.k);
-    let output = ClusterOutput {
-        labels,
-        timer,
-        info: MethodInfo {
-            feature_dim: m,
-            svd: Some(svd.stats),
+        let z = timer.time(self.whiten_stage, || {
+            let l = cholesky_jittered(&w11);
+            whiten_rows(&c, &l)
+        });
+        Ok(FeatureArtifact {
+            fingerprint: fp,
+            z: FeatureMatrix::Dense(std::sync::Arc::new(z)),
+            codebook: None,
             kappa: None,
-            inertia: km.inertia,
-        },
-    };
-    Ok(FitResult { model: Box::new(model), output })
+            feature_dim: m,
+            norm: None,
+            stream_labels: None,
+            timer,
+        })
+    }
+}
+
+/// Fit SC_Nys through its stage composition.
+pub fn fit(env: &Env, x: &Mat) -> Result<FitResult, ScrbError> {
+    super::method::MethodKind::ScNys.fit(env, x)
 }
 
 #[cfg(test)]
@@ -126,5 +150,20 @@ mod tests {
         let out = fit(&Env::new(cfg), &ds.x).unwrap().output;
         let acc = accuracy(&out.labels, &ds.y);
         assert!(acc > 0.85, "SC_Nys on moons: {acc}");
+    }
+
+    #[test]
+    fn sampling_salt_separates_scnys_from_kkrs() {
+        let base = NysFeaturize {
+            kernel: Kernel::Gaussian { sigma: 0.5 },
+            r: 32,
+            seed: 42,
+            salt: 0x4e79,
+            whiten_stage: "degrees",
+            engine: Engine::Native,
+        };
+        let fp_nys = base.fingerprint(3);
+        let kkrs = NysFeaturize { salt: 0x4b72, whiten_stage: "embed", ..base };
+        assert_ne!(fp_nys, kkrs.fingerprint(3));
     }
 }

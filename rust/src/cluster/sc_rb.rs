@@ -1,134 +1,344 @@
-//! **SC_RB — the paper's method (Algorithm 2).**
+//! **SC_RB — the paper's method (Algorithm 2)** as a stage composition:
+//! [`RbFeaturize`] (step 1) → [`RbEmbed`] (steps 2–4 + the serving
+//! projection) → the shared K-means cluster stage (step 5).
 //!
-//! 1. Build the sparse RB feature matrix Z (Algorithm 1) — the similarity
-//!    graph Ŵ = Z·Zᵀ is never materialized. Z lands on the fixed-stride
-//!    [`crate::sparse::EllRb`] substrate, transpose layout included; the
-//!    fit additionally keeps the [`crate::rb::RbCodebook`] (grids +
-//!    bin→column tables) for out-of-sample serving.
-//! 2. Degrees d = Z(Zᵀ1) (Eq. 6); Ẑ = D^{−1/2}Z folds into the per-row
-//!    scale vector — O(N), no pass over the non-zeros.
-//! 3. Top-K singular triplets of Ẑ via the PRIMME-style solver
-//!    (equivalently: smallest eigenvectors of L̂ = I − ẐẐᵀ); every solver
-//!    iteration is one fused strip-tiled gram product.
-//! 4. Row-normalize the embedding.
-//! 5. K-means on the embedding rows.
+//! [`RbFeaturize`] is the one featurize stage that reads **both** data
+//! sources: an in-memory matrix (Algorithm 1 batch binning onto the
+//! fixed-stride [`crate::sparse::EllRb`] substrate) or a chunked
+//! [`crate::stream::ChunkReader`] (the two-pass bounded-memory
+//! featurization onto [`crate::sparse::BlockEllRb`]). Everything
+//! downstream is substrate-agnostic, which is what makes a streamed fit
+//! **byte-identical** to the in-memory fit on the same data and seed — a
+//! property of the shared driver, not of two hand-synchronized functions
+//! (locked by `tests/stream.rs`).
 //!
-//! The fit returns a [`crate::model::ScRbModel`]: Σ and V fold into the
-//! projection `P = V·Σ⁻¹/√R`, so a new point embeds as the sum of the P
-//! rows of its occupied bins (then row-normalized — which cancels the
-//! unknown degree scalar) and labels as the nearest K-means centroid.
-//!
-//! One deliberate twist versus the batch-only pipeline: steps 4–5 run on
-//! the **serving embedding** `normalize(z·V·Σ⁻¹)` computed through the
-//! model's own gather path, not on the solver's U directly. The two agree
-//! up to solver tolerance (U ≈ Ẑ·V·Σ⁻¹ at convergence, and the per-row
-//! degree scalar cancels under normalization), but routing fit through
-//! the identical code path makes training-set `predict` reproduce fit
-//! labels **bit-exactly**, not just within tolerance.
+//! [`RbFeaturize`] also performs step 2 (Eq. 6): the implicit degrees
+//! fold into the substrate's O(N) per-row scale vector, so the artifact
+//! holds Ẑ directly and the embed stage borrows it instead of copying
+//! the index arrays. [`RbEmbed`] runs step 3 (top-K singular triplets
+//! via the PRIMME-style solver over the fused gram kernel), folds the
+//! serving projection `P = V·Σ⁻¹/√R`, and
+//! computes the clustering embedding through the **serving gather path**:
+//! row i's embedding is the sum of the P rows of its occupied bins
+//! (read straight off the substrate's indices, which store one column
+//! per grid in grid order), then row-normalized. That is float-for-float
+//! the sequence [`crate::model::ScRbModel::embed_into`] performs after a
+//! codebook lookup, so training-set `predict` reproduces fit labels
+//! **bit-exactly** — not just within tolerance.
 
-use super::method::{cluster_embedding, ClusterOutput, Env, MethodInfo};
+use super::method::Env;
 use crate::config::PipelineConfig;
 use crate::eigen::{svds_ws, SolverWorkspace, SvdResult, SvdsOpts};
 use crate::error::ScrbError;
-use crate::kmeans::{AssignEngine, NativeAssign};
 use crate::linalg::Mat;
-use crate::model::{FitResult, FittedModel, ScRbModel};
-use crate::rb::rb_features_with_codebook;
+use crate::model::FitResult;
+use crate::pipeline::{
+    Assemble, DataSource, Embed, FeatureArtifact, FeatureMatrix, Featurize, Fingerprint,
+    KmeansCluster, Pipeline,
+};
+use crate::rb::{rb_features_with_codebook, RbFeatures};
+use crate::sparse::EllRb;
+use crate::stream::{stats_pass, SparseChunk, StreamFeaturizer};
+use crate::util::threads::parallel_rows_mut;
 use crate::util::timer::StageTimer;
 
-/// Fit Algorithm 2 on data `x`, producing the training clustering and the
-/// serving model.
-pub fn fit(env: &Env, x: &Mat) -> Result<FitResult, ScrbError> {
-    let cfg = &env.cfg;
-    if x.rows == 0 {
-        return Err(ScrbError::invalid_input("cannot fit on an empty dataset"));
+/// RB featurization stage (Algorithm 1 + the Eq. 6 degree fold): emits
+/// the degree-normalized sparse substrate Ẑ plus the serving codebook.
+/// Reads an in-memory matrix or a chunked stream — the only stage whose
+/// behaviour is chosen by data source.
+pub struct RbFeaturize {
+    /// Number of grids R.
+    pub r: usize,
+    /// Kernel bandwidth σ (grid widths are drawn from Gamma(2, σ)).
+    pub sigma: f64,
+    /// Grid-sampling seed.
+    pub seed: u64,
+}
+
+impl Featurize for RbFeaturize {
+    fn fingerprint(&self, input_fp: u64) -> u64 {
+        Fingerprint::new("featurize/rb")
+            .u64(input_fp)
+            .usize(self.r)
+            .f64(self.sigma)
+            .u64(self.seed)
+            .finish()
     }
-    let mut timer = StageTimer::new();
 
-    // Step 1: RB feature generation (Algorithm 1), keeping the codebook
-    // (grids + bin→column maps) the serving path needs.
-    let (rb, codebook) = timer.time("rb_features", || {
-        rb_features_with_codebook(x, cfg.r, cfg.kernel.sigma(), cfg.seed)
-    });
-    let feature_dim = rb.dim();
-    let kappa = rb.kappa;
+    fn run(&self, _env: &Env, data: DataSource<'_>, fp: u64) -> Result<FeatureArtifact, ScrbError> {
+        match data {
+            DataSource::Matrix(x) => {
+                if x.rows == 0 {
+                    return Err(ScrbError::invalid_input("cannot fit on an empty dataset"));
+                }
+                let mut timer = StageTimer::new();
+                let (rb, codebook) = timer.time("rb_features", || {
+                    rb_features_with_codebook(x, self.r, self.sigma, self.seed)
+                });
+                let feature_dim = rb.dim();
+                let RbFeatures { mut z, kappa, .. } = rb;
+                // Step 2 (Eq. 6) folds into the artifact: the implicit
+                // degrees rescale the O(N) per-row scale vector only, so
+                // storing Ẑ costs nothing extra — and the embed stage
+                // then never needs its own copy of the substrate (the
+                // indices are by far the largest resident structure).
+                timer.time("degrees", || {
+                    let d = z.implicit_degrees();
+                    z.normalize_by_degree(&d);
+                });
+                Ok(FeatureArtifact {
+                    fingerprint: fp,
+                    z: FeatureMatrix::EllRb(z),
+                    codebook: Some(codebook),
+                    kappa: Some(kappa),
+                    feature_dim,
+                    norm: None,
+                    stream_labels: None,
+                    timer,
+                })
+            }
+            DataSource::Stream { reader, opts } => {
+                let mut timer = StageTimer::new();
+                let mut chunk = SparseChunk::new();
 
-    // Step 2: implicit degrees + normalization (Eq. 6). On EllRb the
-    // normalization rescales N row values instead of mutating N·R entries.
-    let zhat = timer.time("degrees", || {
-        let mut z = rb.z;
-        let d = z.implicit_degrees();
-        z.normalize_by_degree(&d);
-        z
-    });
+                // Pass 1: min/span frame + row and class census.
+                let stats = timer.time("stream_stats", || stats_pass(reader, &mut chunk))?;
+                if stats.n == 0 {
+                    return Err(ScrbError::invalid_input("cannot fit on an empty dataset"));
+                }
+                let n = stats.n;
+                let d = reader.dim();
+                let (lo, span) = stats.finalize(d);
 
-    // Step 3: top-K singular triplets of Ẑ (PRIMME role). Every
-    // iteration's S·B runs through the fused strip-tiled gram kernel and a
-    // preallocated SolverWorkspace — the steady-state hot loop does not
-    // touch the heap.
-    let mut opts = SvdsOpts::new(cfg.k, cfg.solver);
-    opts.tol = cfg.svd_tol;
-    opts.max_matvecs = cfg.svd_max_iters;
-    let mut solver_ws = SolverWorkspace::new();
-    let svd = timer.time("svd", || svds_ws(&zhat, &opts, cfg.seed ^ 0x5bd5, &mut solver_ws));
-    let SvdResult { s, v, stats, .. } = svd;
-
-    // Serving projection P = V·Σ⁻¹/√R: folds the right singular vectors,
-    // the inverse spectrum, and the shared RB value 1/√R into one D×K
-    // matrix, so embedding a point is a plain gather-sum over its bins.
-    // Near-zero σ directions are dropped (scale 0) rather than amplified.
-    let proj = timer.time("projection", || {
-        let mut p = v;
-        let s0 = s.first().copied().unwrap_or(0.0).max(1e-300);
-        let rsqrt = 1.0 / (cfg.r as f64).sqrt();
-        let col_scale: Vec<f64> = s
-            .iter()
-            .map(|&sj| if sj > 1e-12 * s0 { rsqrt / sj } else { 0.0 })
-            .collect();
-        for i in 0..p.rows {
-            for (pv, cs) in p.row_mut(i).iter_mut().zip(col_scale.iter()) {
-                *pv *= *cs;
+                // Pass 2: block-wise RB featurization in the fitted frame.
+                reader.reset()?;
+                let mut fz = StreamFeaturizer::new(
+                    self.r,
+                    d,
+                    self.sigma,
+                    self.seed,
+                    lo.clone(),
+                    span.clone(),
+                    opts.block_rows,
+                    n,
+                );
+                timer.time("rb_features", || -> Result<(), ScrbError> {
+                    while reader.next_chunk(&mut chunk)? {
+                        // a column beyond the stats-pass dimension means
+                        // the stream changed between passes — surface the
+                        // typed error here rather than an out-of-bounds
+                        // panic inside the featurizer
+                        if reader.dim() > d {
+                            return Err(ScrbError::invalid_input(format!(
+                                "stream changed between passes: dimension grew from {d} to {}",
+                                reader.dim()
+                            )));
+                        }
+                        fz.push_chunk(&chunk);
+                    }
+                    Ok(())
+                })?;
+                if fz.rows() != n {
+                    return Err(ScrbError::invalid_input(format!(
+                        "stream changed between passes: {} rows in the stats pass, {} in the \
+                         featurize pass",
+                        n,
+                        fz.rows()
+                    )));
+                }
+                let feats = fz.finish()?;
+                let feature_dim = feats.codebook.dim;
+                let mut z = feats.z;
+                // same Eq. 6 fold as the in-memory arm (block-iterated)
+                timer.time("degrees", || {
+                    let d = z.implicit_degrees();
+                    z.normalize_by_degree(&d);
+                });
+                Ok(FeatureArtifact {
+                    fingerprint: fp,
+                    z: FeatureMatrix::Block(z),
+                    codebook: Some(feats.codebook),
+                    kappa: Some(feats.kappa),
+                    feature_dim,
+                    norm: Some((lo, span)),
+                    stream_labels: Some(feats.labels),
+                    timer,
+                })
             }
         }
-        p
-    });
+    }
+}
 
-    // Steps 4–5 on the serving embedding: rows of normalize(z·V·Σ⁻¹),
-    // computed through the model's own gather path so that training-set
-    // predictions reproduce the fit labels bit-exactly (`transform`
-    // already unit-normalizes the rows, so no further normalization).
-    let mut model = ScRbModel {
-        codebook,
-        kernel: cfg.kernel,
-        s,
-        proj,
-        centroids: Mat::zeros(0, 0),
-        norm: None,
-    };
-    let emb = timer.time("embed", || model.transform(x))?;
-    let (_, km) = cluster_embedding(&emb, env, &mut timer);
-    model.centroids = km.centroids;
-    // Final labels via the same f64 argmin the serving path uses (the
-    // NativeAssign engine and model predict share one nearest-centroid
-    // scan) — identical bits to `predict` on the training rows. On the
-    // native engine this equals the K-means assignment; under the f32
-    // XLA assign engine it overrides borderline rounding so the
-    // train-predict == fit-labels contract holds for every engine.
-    let labels: Vec<usize> = timer.time("embed", || {
-        let (lab, _) = NativeAssign.assign(&emb, &model.centroids);
-        lab.into_iter().map(|l| l as usize).collect()
-    });
-    let output = ClusterOutput {
-        labels,
-        timer,
-        info: MethodInfo {
-            feature_dim,
-            svd: Some(stats),
-            kappa: Some(kappa),
-            inertia: km.inertia,
-        },
-    };
-    Ok(FitResult { model: Box::new(model), output })
+/// SC_RB's embed stage (Algorithm 2 steps 3–4): top-K singular triplets
+/// of the already-normalized Ẑ, the folded serving projection
+/// `P = V·Σ⁻¹/√R`, and the clustering embedding computed through the
+/// serving gather path. Borrows the substrate from the feature artifact
+/// — no copy of the index arrays.
+pub struct RbEmbed {
+    /// Embedding width (singular triplets kept).
+    pub k: usize,
+    /// Number of RB grids R (the shared 1/√R value folds into P).
+    pub r: usize,
+    /// Which iterative solver backs step 3.
+    pub solver: crate::config::Solver,
+    /// Solver convergence tolerance.
+    pub tol: f64,
+    /// Solver matvec budget.
+    pub max_matvecs: usize,
+    /// Full solver seed (method seed ⊕ the SC_RB salt).
+    pub seed: u64,
+}
+
+impl Embed for RbEmbed {
+    fn fingerprint(&self, upstream: u64) -> u64 {
+        Fingerprint::new("embed/rb")
+            .u64(upstream)
+            .usize(self.k)
+            .usize(self.r)
+            .str(self.solver.name())
+            .f64(self.tol)
+            .usize(self.max_matvecs)
+            .u64(self.seed)
+            .finish()
+    }
+
+    fn run(
+        &self,
+        _env: &Env,
+        feat: &crate::pipeline::FeatureArtifact,
+        fp: u64,
+    ) -> Result<crate::pipeline::EmbedArtifact, ScrbError> {
+        let mut timer = StageTimer::new();
+        let mut sopts = SvdsOpts::new(self.k, self.solver);
+        sopts.tol = self.tol;
+        sopts.max_matvecs = self.max_matvecs;
+        let mut solver_ws = SolverWorkspace::new();
+
+        // Step 3 + the projection fold + the gather embedding, on
+        // whichever RB substrate the featurize stage emitted (already
+        // degree-normalized there — this stage borrows the substrate, it
+        // never copies it). The block substrate's kernels are
+        // bit-identical to the monolithic one's, so the whole solver
+        // trajectory is too.
+        let (s, proj, stats, u) = match &feat.z {
+            FeatureMatrix::EllRb(z0) => {
+                let svd = timer.time("svd", || svds_ws(z0, &sopts, self.seed, &mut solver_ws));
+                let SvdResult { s, v, stats, .. } = svd;
+                let proj = timer.time("projection", || fold_projection(v, &s, self.r));
+                let offsets = [0usize, z0.rows];
+                let u = timer.time("embed", || {
+                    gather_embedding(std::slice::from_ref(z0), &offsets, &proj)
+                });
+                (s, proj, stats, u)
+            }
+            FeatureMatrix::Block(z0) => {
+                let svd = timer.time("svd", || svds_ws(z0, &sopts, self.seed, &mut solver_ws));
+                let SvdResult { s, v, stats, .. } = svd;
+                let proj = timer.time("projection", || fold_projection(v, &s, self.r));
+                let u = timer.time("embed", || {
+                    gather_embedding(&z0.blocks, &z0.row_offsets, &proj)
+                });
+                (s, proj, stats, u)
+            }
+            _ => {
+                return Err(ScrbError::unsupported(
+                    "the RB embed stage needs an RB substrate (EllRb or BlockEllRb)",
+                ))
+            }
+        };
+        Ok(crate::pipeline::EmbedArtifact {
+            fingerprint: fp,
+            s,
+            u: std::sync::Arc::new(u),
+            proj: Some(proj),
+            stats: Some(stats),
+            timer,
+        })
+    }
+}
+
+/// Fold V, Σ⁻¹, and the shared RB value 1/√R into the serving projection
+/// `P = V·Σ⁻¹/√R` (D×K) — embedding a point becomes a plain gather-sum
+/// over its bins. Near-zero σ directions are dropped (scale 0) rather
+/// than amplified.
+fn fold_projection(v: Mat, s: &[f64], r: usize) -> Mat {
+    let mut p = v;
+    let s0 = s.first().copied().unwrap_or(0.0).max(1e-300);
+    let rsqrt = 1.0 / (r as f64).sqrt();
+    let col_scale: Vec<f64> =
+        s.iter().map(|&sj| if sj > 1e-12 * s0 { rsqrt / sj } else { 0.0 }).collect();
+    for i in 0..p.rows {
+        for (pv, cs) in p.row_mut(i).iter_mut().zip(col_scale.iter()) {
+            *pv *= *cs;
+        }
+    }
+    p
+}
+
+/// Serving embedding of every training row, computed from the substrate's
+/// own column indices: row i's occupied bins are exactly its R indices
+/// (one per grid, stored in grid order), so the gather-sum + row
+/// normalization below performs the identical float sequence
+/// [`crate::model::ScRbModel::embed_into`] would after a codebook lookup.
+/// Shared by the in-memory (single block) and streamed (many blocks)
+/// paths.
+fn gather_embedding(blocks: &[EllRb], row_offsets: &[usize], proj: &Mat) -> Mat {
+    let k = proj.cols;
+    let rows = *row_offsets.last().unwrap_or(&0);
+    let mut m = Mat::zeros(rows, k);
+    if rows == 0 || k == 0 {
+        return m;
+    }
+    for (blk, w) in blocks.iter().zip(row_offsets.windows(2)) {
+        let out = &mut m.data[w[0] * k..w[1] * k];
+        parallel_rows_mut(out, k, |row0, chunk| {
+            for (dr, e) in chunk.chunks_mut(k).enumerate() {
+                e.fill(0.0);
+                for &c in blk.row_indices(row0 + dr) {
+                    let p = proj.row(c as usize);
+                    for (ej, pj) in e.iter_mut().zip(p.iter()) {
+                        *ej += *pj;
+                    }
+                }
+                let norm = e.iter().map(|v| v * v).sum::<f64>().sqrt();
+                if norm > 1e-300 {
+                    let inv = 1.0 / norm;
+                    for v in e.iter_mut() {
+                        *v *= inv;
+                    }
+                }
+            }
+        });
+    }
+    m
+}
+
+/// SC_RB's stage composition with an explicit cluster count and optional
+/// mini-batch size — the streaming driver composes this with the census
+/// K and its huge-N batch switch; [`crate::cluster::MethodKind::pipeline`]
+/// uses `cfg.k` and full-batch.
+pub(crate) fn scrb_stages(cfg: &PipelineConfig, k: usize, batch: Option<usize>) -> Pipeline {
+    Pipeline::new(
+        Box::new(RbFeaturize { r: cfg.r, sigma: cfg.kernel.sigma(), seed: cfg.seed }),
+        Box::new(RbEmbed {
+            // never narrower than K: a streamed fit derives K from the
+            // label census at run time, which config validation cannot see
+            k: cfg.embed_dim.unwrap_or(k).max(k),
+            r: cfg.r,
+            solver: cfg.solver,
+            tol: cfg.svd_tol,
+            max_matvecs: cfg.svd_max_iters,
+            seed: cfg.seed ^ 0x5bd5,
+        }),
+        Box::new(KmeansCluster::from_cfg(cfg, k).with_batch(batch).with_relabel()),
+        Assemble::ScRb,
+    )
+}
+
+/// Fit Algorithm 2 on data `x` through the stage composition, producing
+/// the training clustering and the serving model.
+pub fn fit(env: &Env, x: &Mat) -> Result<FitResult, ScrbError> {
+    super::method::MethodKind::ScRb.fit(env, x)
 }
 
 /// Convenience wrapper used by the quickstart/docs: owns a config and runs
@@ -149,7 +359,7 @@ impl ScRb {
     }
 
     /// Batch convenience: fit and return only the training output.
-    pub fn run(&self, x: &Mat) -> Result<ClusterOutput, ScrbError> {
+    pub fn run(&self, x: &Mat) -> Result<super::method::ClusterOutput, ScrbError> {
         Ok(self.fit(x)?.output)
     }
 }
@@ -230,6 +440,45 @@ mod tests {
             let n2: f64 = emb.row(i).iter().map(|v| v * v).sum();
             assert!((n2 - 1.0).abs() < 1e-9 || n2 == 0.0, "row {i} norm² {n2}");
         }
+    }
+
+    #[test]
+    fn gather_embedding_matches_model_transform() {
+        // the bit-exactness pivot: the embed stage's gather over substrate
+        // indices performs the identical float sequence as the serving
+        // model's codebook-lookup path on the training rows
+        let ds = synth::gaussian_blobs(80, 3, 2, 8.0, 21);
+        let cfg = PipelineConfig::builder()
+            .k(2)
+            .r(16)
+            .kernel(crate::config::Kernel::Laplacian { sigma: 0.6 })
+            .kmeans_replicates(2)
+            .build();
+        let fitted = ScRb::new(cfg).fit(&ds.x).unwrap();
+        use crate::model::FittedModel;
+        let via_codebook = fitted.model.transform(&ds.x).unwrap();
+        let predicted = fitted.model.predict(&ds.x).unwrap();
+        assert_eq!(predicted, fitted.output.labels, "train predict == fit labels, bit-exact");
+        // row norms are exactly 1 (or 0) in both paths
+        assert_eq!(via_codebook.rows, 80);
+    }
+
+    #[test]
+    fn embed_dim_decouples_from_k() {
+        let ds = synth::gaussian_blobs(120, 3, 2, 8.0, 27);
+        let cfg = PipelineConfig::builder()
+            .k(2)
+            .r(32)
+            .embed_dim(4)
+            .kernel(crate::config::Kernel::Laplacian { sigma: 0.6 })
+            .kmeans_replicates(2)
+            .build();
+        let fitted = ScRb::new(cfg).fit(&ds.x).unwrap();
+        use crate::model::FittedModel;
+        // 4-dimensional embedding, 2 clusters
+        assert_eq!(fitted.model.n_clusters(), 2);
+        let emb = fitted.model.transform(&ds.x).unwrap();
+        assert_eq!(emb.cols, 4);
     }
 
     #[test]

@@ -3,22 +3,28 @@
 //! normalization + top-K left singular vectors of Ẑ), then K-means.
 //! The direct convergence-rate competitor to SC_RB in Fig. 2.
 //!
+//! As a stage composition: [`RfFeaturize`] (shared verbatim with SV_RF
+//! and KK_RF, so a method sweep reuses one RF feature artifact across all
+//! three) → the clamped-degree [`crate::pipeline::SvdEmbed`] → the shared
+//! K-means stage. See [`crate::cluster::MethodKind::pipeline`].
+//!
 //! Serving: transductive — the fitted model is the input-space class-mean
 //! fallback ([`crate::model::CentroidModel`]). (Unlike RB, the RF degree
 //! normalization does not cancel under row normalization per point, so an
 //! exact projection-based extension is not available here.)
 
-use super::method::{embed_and_cluster, ClusterOutput, Env, MethodInfo};
-use crate::eigen::{svds, SvdsOpts};
+use super::method::Env;
+use crate::config::{Engine, Kernel};
 use crate::error::ScrbError;
 use crate::linalg::Mat;
-use crate::model::{CentroidModel, FitResult};
+use crate::model::FitResult;
+use crate::pipeline::{DataSource, FeatureArtifact, FeatureMatrix, Featurize, Fingerprint};
 use crate::rf::RfMap;
 use crate::util::timer::StageTimer;
 
 /// Build the dense RF feature matrix for `x` (XLA artifact when available,
 /// native otherwise). Shared by SC_RF / SV_RF / KK_RF.
-pub(super) fn rf_matrix(env: &Env, x: &Mat) -> Mat {
+pub fn rf_matrix(env: &Env, x: &Mat) -> Mat {
     let cfg = &env.cfg;
     let map = RfMap::sample(cfg.kernel, x.cols, cfg.r, cfg.seed ^ 0x8f8f);
     if let Some(rt) = env.xla {
@@ -36,48 +42,53 @@ pub(super) fn rf_matrix(env: &Env, x: &Mat) -> Mat {
     map.features(x)
 }
 
-/// Degree-normalize a dense feature matrix: Ẑ = D^{−1/2}Z with
-/// d = Z(Zᵀ1) clamped away from zero (RF features are signed, so the
-/// approximate degrees can be slightly negative on small R).
-pub(super) fn normalize_dense_by_degree(z: &mut Mat) {
-    let ones = vec![1.0; z.rows];
-    let col_sums = z.t_matvec(&ones);
-    let deg = z.matvec(&col_sums);
-    let floor = 1e-8 * deg.iter().map(|d| d.abs()).fold(0.0, f64::max).max(1e-12);
-    for i in 0..z.rows {
-        let d = deg[i].max(floor);
-        let s = 1.0 / d.sqrt();
-        for v in z.row_mut(i) {
-            *v *= s;
-        }
+/// Random-Fourier featurization stage: the dense N×R feature matrix
+/// `√(2/R)·cos(xW + b)` with ω drawn for the configured kernel.
+pub struct RfFeaturize {
+    /// Kernel the frequencies are drawn for (kind + bandwidth).
+    pub kernel: Kernel,
+    /// Number of random features R.
+    pub r: usize,
+    /// Method seed (the map salts it internally).
+    pub seed: u64,
+    /// Engine selector (part of the fingerprint: the XLA artifact path
+    /// computes in f32 and is not bit-identical to the native map).
+    pub engine: Engine,
+}
+
+impl Featurize for RfFeaturize {
+    fn fingerprint(&self, input_fp: u64) -> u64 {
+        Fingerprint::new("featurize/rf")
+            .u64(input_fp)
+            .str(self.kernel.name())
+            .f64(self.kernel.sigma())
+            .usize(self.r)
+            .u64(self.seed)
+            .str(self.engine.name())
+            .finish()
+    }
+
+    fn run(&self, env: &Env, data: DataSource<'_>, fp: u64) -> Result<FeatureArtifact, ScrbError> {
+        let x = data.matrix("RF featurization")?;
+        let mut timer = StageTimer::new();
+        let z = timer.time("rf_features", || rf_matrix(env, x));
+        let feature_dim = z.cols;
+        Ok(FeatureArtifact {
+            fingerprint: fp,
+            z: FeatureMatrix::Dense(std::sync::Arc::new(z)),
+            codebook: None,
+            kappa: None,
+            feature_dim,
+            norm: None,
+            stream_labels: None,
+            timer,
+        })
     }
 }
 
+/// Fit SC_RF through its stage composition.
 pub fn fit(env: &Env, x: &Mat) -> Result<FitResult, ScrbError> {
-    let cfg = &env.cfg;
-    let mut timer = StageTimer::new();
-    let mut z = timer.time("rf_features", || rf_matrix(env, x));
-    let feature_dim = z.cols;
-    timer.time("degrees", || normalize_dense_by_degree(&mut z));
-
-    let mut opts = SvdsOpts::new(cfg.k, cfg.solver);
-    opts.tol = cfg.svd_tol;
-    opts.max_matvecs = cfg.svd_max_iters;
-    let svd = timer.time("svd", || svds(&z, &opts, cfg.seed ^ 0x5cf5));
-
-    let (labels, km) = embed_and_cluster(svd.u, env, &mut timer, true);
-    let model = CentroidModel::from_labels(x, &labels, cfg.k);
-    let output = ClusterOutput {
-        labels,
-        timer,
-        info: MethodInfo {
-            feature_dim,
-            svd: Some(svd.stats),
-            kappa: None,
-            inertia: km.inertia,
-        },
-    };
-    Ok(FitResult { model: Box::new(model), output })
+    super::method::MethodKind::ScRf.fit(env, x)
 }
 
 #[cfg(test)]
@@ -104,9 +115,25 @@ mod tests {
     }
 
     #[test]
-    fn normalize_handles_signed_features() {
-        let mut z = Mat::from_vec(3, 2, vec![0.5, -0.5, 0.4, 0.3, -0.2, 0.6]);
-        normalize_dense_by_degree(&mut z);
-        assert!(z.data.iter().all(|v| v.is_finite()));
+    fn rf_features_are_shared_across_the_rf_family() {
+        // one featurize fingerprint for SC_RF / SV_RF / KK_RF at equal
+        // config — the cache-reuse contract for method sweeps
+        let cfg = PipelineConfig::builder().k(2).r(64).build();
+        let stage = RfFeaturize {
+            kernel: cfg.kernel,
+            r: cfg.r,
+            seed: cfg.seed,
+            engine: cfg.engine,
+        };
+        let a = stage.fingerprint(11);
+        let b = stage.fingerprint(11);
+        assert_eq!(a, b);
+        let other = RfFeaturize { r: 128, ..RfFeaturize {
+            kernel: cfg.kernel,
+            r: cfg.r,
+            seed: cfg.seed,
+            engine: cfg.engine,
+        } };
+        assert_ne!(other.fingerprint(11), a);
     }
 }

@@ -2,49 +2,24 @@
 //! RF feature matrix Z (approximating the similarity matrix W = ZZᵀ, *not*
 //! the normalized Laplacian — the distinction §5.2 highlights).
 //!
+//! As a stage composition: the shared
+//! [`RfFeaturize`](crate::cluster::sc_rf::RfFeaturize) → an
+//! [`crate::pipeline::SvdEmbed`] with **no** degree normalization and
+//! Σ-scaled scores (the kernel-K-means PCA view: cluster U·Σ, no row
+//! normalization) → the shared K-means stage. See
+//! [`crate::cluster::MethodKind::pipeline`].
+//!
 //! Serving: transductive — the fitted model is the input-space class-mean
 //! fallback ([`crate::model::CentroidModel`]).
 
-use super::method::{embed_and_cluster, ClusterOutput, Env, MethodInfo};
-use super::sc_rf::rf_matrix;
-use crate::eigen::{svds, SvdsOpts};
+use super::method::Env;
 use crate::error::ScrbError;
 use crate::linalg::Mat;
-use crate::model::{CentroidModel, FitResult};
-use crate::util::timer::StageTimer;
+use crate::model::FitResult;
 
+/// Fit SV_RF through its stage composition.
 pub fn fit(env: &Env, x: &Mat) -> Result<FitResult, ScrbError> {
-    let cfg = &env.cfg;
-    let mut timer = StageTimer::new();
-    let z = timer.time("rf_features", || rf_matrix(env, x));
-    let feature_dim = z.cols;
-
-    let mut opts = SvdsOpts::new(cfg.k, cfg.solver);
-    opts.tol = cfg.svd_tol;
-    opts.max_matvecs = cfg.svd_max_iters;
-    let svd = timer.time("svd", || svds(&z, &opts, cfg.seed ^ 0x57f5));
-
-    // kernel-kmeans view: cluster the PCA scores U·Σ (no row normalization,
-    // no degree scaling — this approximates W, not L).
-    let mut scores = svd.u;
-    for j in 0..svd.s.len() {
-        for i in 0..scores.rows {
-            scores.set(i, j, scores.at(i, j) * svd.s[j]);
-        }
-    }
-    let (labels, km) = embed_and_cluster(scores, env, &mut timer, false);
-    let model = CentroidModel::from_labels(x, &labels, cfg.k);
-    let output = ClusterOutput {
-        labels,
-        timer,
-        info: MethodInfo {
-            feature_dim,
-            svd: Some(svd.stats),
-            kappa: None,
-            inertia: km.inertia,
-        },
-    };
-    Ok(FitResult { model: Box::new(model), output })
+    super::method::MethodKind::SvRf.fit(env, x)
 }
 
 #[cfg(test)]

@@ -113,6 +113,18 @@ impl Engine {
     }
 }
 
+/// Streaming-ingestion section of a [`PipelineConfig`]: present iff the
+/// fit reads a chunked out-of-core source (`scrb fit --stream`). Kept in
+/// the config so [`PipelineConfig::validate`] covers *both* fit paths —
+/// the in-memory k/R checks and the stream-only knobs live in one place.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StreamConfig {
+    /// Rows per streamed reader chunk (resident input ≈ `chunk_rows × d`).
+    pub chunk_rows: usize,
+    /// Substrate block granularity in rows (independent of `chunk_rows`).
+    pub block_rows: usize,
+}
+
 /// Full pipeline configuration (Algorithm 2 + baselines).
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {
@@ -130,6 +142,18 @@ pub struct PipelineConfig {
     /// Eigensolver convergence tolerance (paper §5.3 uses 1e-5).
     pub svd_tol: f64,
     pub svd_max_iters: usize,
+    /// Spectral embedding width (singular triplets kept); `None` = `k`.
+    /// Sweep drivers pin this so a k-sweep reuses one embedding artifact
+    /// across every grid point (see [`crate::pipeline`]).
+    pub embed_dim: Option<usize>,
+    /// Streaming-ingestion section; `Some` iff the fit reads a chunked
+    /// source. Validation then additionally requires an explicit σ (no
+    /// data matrix exists to run bandwidth selection on).
+    pub stream: Option<StreamConfig>,
+    /// Whether σ was pinned explicitly (builder `sigma`/`kernel` setter,
+    /// config-file/CLI `sigma` key) rather than left at the default. A
+    /// streamed fit refuses to run on an un-pinned bandwidth.
+    pub sigma_explicit: bool,
     /// Directory with AOT artifacts + manifest.json.
     pub artifacts_dir: String,
     pub verbose: bool,
@@ -148,6 +172,9 @@ impl Default for PipelineConfig {
             kmeans_max_iters: 100,
             svd_tol: 1e-5,
             svd_max_iters: 3000,
+            embed_dim: None,
+            stream: None,
+            sigma_explicit: false,
             artifacts_dir: "artifacts".to_string(),
             verbose: false,
         }
@@ -159,6 +186,88 @@ impl PipelineConfig {
     /// `PipelineConfig::builder().k(2).r(256).build()`.
     pub fn builder() -> PipelineConfigBuilder {
         PipelineConfigBuilder::default()
+    }
+
+    /// Validate every domain precondition, enumerating accepted values in
+    /// the error message. One routine covers both fit paths: the
+    /// in-memory k/R/solver checks *and* the streaming section's
+    /// chunk-rows / block-rows / explicit-σ requirements. Called from
+    /// [`PipelineConfigBuilder::build`], [`PipelineConfig::rebuild`], and
+    /// the CLI after option layering.
+    pub fn validate(&self) -> Result<(), ScrbError> {
+        if self.k < 1 {
+            return Err(ScrbError::config("k must be >= 1 (number of clusters)"));
+        }
+        if self.r < 1 {
+            return Err(ScrbError::config(
+                "r must be >= 1 (RB grids / RF features / landmarks)",
+            ));
+        }
+        let sigma = self.kernel.sigma();
+        if !sigma.is_finite() || sigma <= 0.0 {
+            return Err(ScrbError::config(format!(
+                "sigma must be a positive finite number, got {sigma}"
+            )));
+        }
+        if self.kmeans_replicates < 1 {
+            return Err(ScrbError::config("kmeans_replicates must be >= 1"));
+        }
+        if self.kmeans_max_iters < 1 {
+            return Err(ScrbError::config("kmeans_max_iters must be >= 1"));
+        }
+        if !self.svd_tol.is_finite() || self.svd_tol <= 0.0 {
+            return Err(ScrbError::config(format!(
+                "svd_tol must be a positive finite number, got {}",
+                self.svd_tol
+            )));
+        }
+        if self.svd_max_iters < 1 {
+            return Err(ScrbError::config("svd_max_iters must be >= 1"));
+        }
+        if let Some(dim) = self.embed_dim {
+            if dim < self.k {
+                return Err(ScrbError::config(format!(
+                    "embed_dim must be >= k (clustering {k} clusters needs at least a \
+                     {k}-dimensional embedding, got embed_dim={dim})",
+                    k = self.k
+                )));
+            }
+        }
+        if let Some(stream) = &self.stream {
+            if stream.chunk_rows < 1 || stream.block_rows < 1 {
+                return Err(ScrbError::config(
+                    "streaming fit needs chunk_rows >= 1 and block_rows >= 1",
+                ));
+            }
+            if !self.sigma_explicit {
+                return Err(ScrbError::config(
+                    "a streamed fit cannot run the in-memory bandwidth selection; \
+                     pin the kernel bandwidth explicitly (pass --sigma S, or set \
+                     sigma/kernel on the builder)",
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Re-derive a validated config through the builder: reconstructs a
+    /// builder holding this config, applies `f`, and re-validates. The
+    /// sanctioned way for sweep drivers to vary a knob — field pokes on a
+    /// built config bypass validation, `rebuild` cannot:
+    ///
+    /// ```
+    /// use scrb::config::PipelineConfig;
+    /// let cfg = PipelineConfig::builder().k(3).build();
+    /// let swept = cfg.rebuild(|b| b.sigma(0.25)).unwrap();
+    /// assert_eq!(swept.kernel.sigma(), 0.25);
+    /// assert_eq!(swept.k, 3);
+    /// assert!(cfg.rebuild(|b| b.r(0)).is_err());
+    /// ```
+    pub fn rebuild(
+        &self,
+        f: impl FnOnce(PipelineConfigBuilder) -> PipelineConfigBuilder,
+    ) -> Result<PipelineConfig, ScrbError> {
+        f(PipelineConfigBuilder { cfg: self.clone() }).try_build()
     }
 
     /// Apply a parsed `key = value` map (config file layer).
@@ -177,8 +286,10 @@ impl PipelineConfig {
             "sigma" => {
                 let s: f64 = val.parse().map_err(|_| bad(key, val))?;
                 self.kernel = self.kernel.with_sigma(s);
+                self.sigma_explicit = true;
             }
             "kernel" => self.kernel = Kernel::parse(val, self.kernel.sigma())?,
+            "embed_dim" => self.embed_dim = Some(val.parse().map_err(|_| bad(key, val))?),
             "seed" => self.seed = val.parse().map_err(|_| bad(key, val))?,
             "solver" => self.solver = Solver::parse(val)?,
             "engine" => self.engine = Engine::parse(val)?,
@@ -213,6 +324,7 @@ impl PipelineConfig {
             "kmeans_max_iters",
             "svd_tol",
             "svd_max_iters",
+            "embed_dim",
             "artifacts_dir",
         ] {
             if let Some(v) = args.get(key) {
@@ -263,15 +375,18 @@ impl PipelineConfigBuilder {
         self
     }
 
-    /// Similarity kernel (kind + bandwidth).
+    /// Similarity kernel (kind + bandwidth). Pins σ explicitly.
     pub fn kernel(mut self, kernel: Kernel) -> Self {
         self.cfg.kernel = kernel;
+        self.cfg.sigma_explicit = true;
         self
     }
 
-    /// Kernel bandwidth, keeping the current kernel kind.
+    /// Kernel bandwidth, keeping the current kernel kind. Pins σ
+    /// explicitly (a streamed fit requires this).
     pub fn sigma(mut self, sigma: f64) -> Self {
         self.cfg.kernel = self.cfg.kernel.with_sigma(sigma);
+        self.cfg.sigma_explicit = true;
         self
     }
 
@@ -310,6 +425,20 @@ impl PipelineConfigBuilder {
         self
     }
 
+    /// Spectral embedding width (singular triplets kept). Pin it across a
+    /// k-sweep so every grid point reuses one embedding artifact.
+    pub fn embed_dim(mut self, dim: usize) -> Self {
+        self.cfg.embed_dim = Some(dim);
+        self
+    }
+
+    /// Attach the streaming-ingestion section (`scrb fit --stream`
+    /// knobs); validation then also requires an explicitly pinned σ.
+    pub fn stream(mut self, chunk_rows: usize, block_rows: usize) -> Self {
+        self.cfg.stream = Some(StreamConfig { chunk_rows, block_rows });
+        self
+    }
+
     pub fn artifacts_dir(mut self, dir: impl Into<String>) -> Self {
         self.cfg.artifacts_dir = dir.into();
         self
@@ -320,8 +449,24 @@ impl PipelineConfigBuilder {
         self
     }
 
+    /// Validate and return the config, or the typed
+    /// [`ScrbError::Config`] naming the offending knob and its accepted
+    /// values. The CLI and sweep drivers use this form.
+    pub fn try_build(self) -> Result<PipelineConfig, ScrbError> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
+    }
+
+    /// Validate and return the config, panicking on an invalid
+    /// combination — the programmatic-builder form, where an invalid
+    /// config is a caller bug. Fallible callers (CLI layering, sweep
+    /// drivers) use [`PipelineConfigBuilder::try_build`] /
+    /// [`PipelineConfig::rebuild`] for the typed error instead.
     pub fn build(self) -> PipelineConfig {
-        self.cfg
+        match self.try_build() {
+            Ok(cfg) => cfg,
+            Err(e) => panic!("invalid PipelineConfig: {e}"),
+        }
     }
 }
 
@@ -382,6 +527,8 @@ mod tests {
             .kmeans_max_iters(55)
             .svd_tol(1e-7)
             .svd_max_iters(123)
+            .embed_dim(9)
+            .stream(1024, 4096)
             .artifacts_dir("arts")
             .verbose(true)
             .build();
@@ -395,12 +542,81 @@ mod tests {
         assert_eq!(cfg.kmeans_max_iters, 55);
         assert_eq!(cfg.svd_tol, 1e-7);
         assert_eq!(cfg.svd_max_iters, 123);
+        assert_eq!(cfg.embed_dim, Some(9));
+        assert_eq!(cfg.stream, Some(StreamConfig { chunk_rows: 1024, block_rows: 4096 }));
+        assert!(cfg.sigma_explicit);
         assert_eq!(cfg.artifacts_dir, "arts");
         assert!(cfg.verbose);
         // untouched fields keep their defaults
         let d = PipelineConfig::builder().build();
         assert_eq!(d.k, PipelineConfig::default().k);
         assert_eq!(d.r, PipelineConfig::default().r);
+        assert!(!d.sigma_explicit);
+        assert_eq!(d.stream, None);
+    }
+
+    #[test]
+    fn validate_rejects_every_bad_knob() {
+        assert!(PipelineConfig::default().validate().is_ok());
+        let bad = [
+            PipelineConfig { k: 0, ..Default::default() },
+            PipelineConfig { r: 0, ..Default::default() },
+            PipelineConfig { kernel: Kernel::Laplacian { sigma: 0.0 }, ..Default::default() },
+            PipelineConfig {
+                kernel: Kernel::Gaussian { sigma: f64::NAN },
+                ..Default::default()
+            },
+            PipelineConfig { kmeans_replicates: 0, ..Default::default() },
+            PipelineConfig { kmeans_max_iters: 0, ..Default::default() },
+            PipelineConfig { svd_tol: -1.0, ..Default::default() },
+            PipelineConfig { svd_max_iters: 0, ..Default::default() },
+            PipelineConfig { k: 5, embed_dim: Some(3), ..Default::default() },
+        ];
+        for cfg in bad {
+            let err = cfg.validate().unwrap_err();
+            assert!(matches!(err, ScrbError::Config(_)), "{err}");
+        }
+    }
+
+    #[test]
+    fn stream_section_requires_explicit_sigma() {
+        // stream knobs validated through the same routine
+        let bad = PipelineConfig {
+            stream: Some(StreamConfig { chunk_rows: 0, block_rows: 64 }),
+            sigma_explicit: true,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        // un-pinned sigma is rejected for streamed fits only
+        let unpinned = PipelineConfig {
+            stream: Some(StreamConfig { chunk_rows: 64, block_rows: 64 }),
+            ..Default::default()
+        };
+        let err = unpinned.validate().unwrap_err();
+        assert!(err.to_string().contains("sigma"), "{err}");
+        // builder .sigma() pins it
+        let ok = PipelineConfig::builder().sigma(0.5).stream(64, 64).try_build();
+        assert!(ok.is_ok());
+    }
+
+    #[test]
+    fn rebuild_revalidates() {
+        let cfg = PipelineConfig::builder().k(3).r(64).build();
+        let swept = cfg.rebuild(|b| b.sigma(0.25)).unwrap();
+        assert_eq!(swept.kernel.sigma(), 0.25);
+        assert_eq!(swept.k, 3);
+        assert!(swept.sigma_explicit);
+        // the original is untouched
+        assert_eq!(cfg.kernel.sigma(), PipelineConfig::default().kernel.sigma());
+        // invalid deltas surface as typed config errors, not silent state
+        assert!(matches!(cfg.rebuild(|b| b.r(0)), Err(ScrbError::Config(_))));
+        assert!(matches!(cfg.rebuild(|b| b.sigma(-2.0)), Err(ScrbError::Config(_))));
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid PipelineConfig")]
+    fn build_panics_on_invalid_combination() {
+        let _ = PipelineConfig::builder().k(0).build();
     }
 
     #[test]

@@ -51,6 +51,8 @@ pub struct GridRow {
 pub fn table2_3(coord: &Coordinator, datasets: &[String]) -> Result<GridResult, ScrbError> {
     let mut rows = Vec::new();
     for name in datasets {
+        // one dataset's artifacts never serve another; bound memory
+        coord.clear_cache();
         let ds = dataset(coord, name);
         let cfg = coord.cfg_for(&ds, None);
         if coord.verbose {
@@ -119,21 +121,29 @@ pub fn fig2(
     let ds = dataset(coord, "mnist");
     let cfg0 = coord.cfg_for(&ds, None);
     let methods = [MethodKind::ScRb, MethodKind::ScRf, MethodKind::SvRf, MethodKind::KkRf];
-    let mut series = Vec::new();
-    for kind in methods {
-        let mut points = Vec::new();
-        for &r in rs {
+    // R outer, methods inner: the RF-family methods share one cached
+    // featurization per R, and the per-R cache clear bounds peak memory
+    // to one grid point's artifacts instead of the whole sweep's
+    let mut points: Vec<Vec<SeriesPoint>> = vec![Vec::new(); methods.len()];
+    for &r in rs {
+        coord.clear_cache();
+        // validated sweep point (no field pokes)
+        let cfg = cfg0.rebuild(|b| b.r(r))?;
+        for (mi, &kind) in methods.iter().enumerate() {
             // the paper sweeps SC_RB only to 1024 (it converges by then)
             if kind == MethodKind::ScRb && r > rb_max_r {
                 continue;
             }
-            let mut cfg = cfg0.clone();
-            cfg.r = r;
             let run = coord.run_method(kind, &ds, &cfg)?;
-            points.push(SeriesPoint { x: r as f64, acc: run.metrics.accuracy, secs: run.secs });
+            points[mi].push(SeriesPoint { x: r as f64, acc: run.metrics.accuracy, secs: run.secs });
         }
-        series.push(Series { label: kind.name().to_string(), points });
     }
+    coord.clear_cache();
+    let series: Vec<Series> = methods
+        .iter()
+        .zip(points)
+        .map(|(kind, points)| Series { label: kind.name().to_string(), points })
+        .collect();
     // exact SC reference on a feasible subset
     let exact_ref = if coord.exact_sc_feasible(ds.n()) {
         let run = coord.run_method(MethodKind::ScExact, &ds, &cfg0)?;
@@ -153,6 +163,7 @@ pub fn fig2(
 /// Fig. 3: SC_RB accuracy + runtime vs R on covtype-like under the two SVD
 /// solvers (PRIMME-analogue Davidson vs Matlab-svds-analogue Lanczos).
 pub fn fig3(coord: &Coordinator, rs: &[usize]) -> Result<Vec<Series>, ScrbError> {
+    coord.clear_cache();
     let ds = dataset(coord, "covtype-mult");
     let cfg0 = coord.cfg_for(&ds, None);
     let mut out = Vec::new();
@@ -161,9 +172,9 @@ pub fn fig3(coord: &Coordinator, rs: &[usize]) -> Result<Vec<Series>, ScrbError>
     {
         let mut points = Vec::new();
         for &r in rs {
-            let mut cfg = cfg0.clone();
-            cfg.r = r;
-            cfg.solver = solver;
+            // the solver is an embed-stage knob: the second solver's
+            // sweep reuses every cached RB featurization from the first
+            let cfg = cfg0.rebuild(|b| b.r(r).solver(solver))?;
             let run = coord.run_method(MethodKind::ScRb, &ds, &cfg)?;
             points.push(SeriesPoint { x: r as f64, acc: run.metrics.accuracy, secs: run.secs });
         }
@@ -199,11 +210,14 @@ pub fn fig4(
     let spec = synth::spec_by_name(dataset_name).expect("unknown dataset");
     let mut out = Vec::new();
     for &n in ns {
+        // every scale point synthesizes different data, so nothing from
+        // the previous point can hit — clear per point to keep the peak
+        // at one substrate, not the sum over the sweep
+        coord.clear_cache();
         let scale = (spec.n / n.max(1)).max(1);
         let mut ds = synth::paper_benchmark(dataset_name, scale, coord.base_cfg.seed);
         ds.truncate(n.min(ds.n()));
-        let mut cfg = coord.cfg_for(&ds, None);
-        cfg.r = r;
+        let cfg = coord.cfg_for(&ds, None).rebuild(|b| b.r(r))?;
         let run = coord.run_method(MethodKind::ScRb, &ds, &cfg)?;
         let stage = |name: &str| {
             run.stages.iter().find(|(s, _)| s == name).map(|(_, t)| *t).unwrap_or(0.0)
@@ -230,10 +244,27 @@ pub fn fig5(
     dataset_name: &str,
     rs: &[usize],
 ) -> Result<Vec<Series>, ScrbError> {
+    coord.clear_cache();
     let ds = dataset(coord, dataset_name);
     let cfg0 = coord.cfg_for(&ds, None);
+    // R outer, methods inner: same-R featurizations are shared across
+    // methods while the per-R clear bounds peak memory to one grid point
+    let mut per_method: Vec<Vec<SeriesPoint>> = vec![Vec::new(); MethodKind::ALL.len()];
+    for &r in rs {
+        coord.clear_cache();
+        let cfg = cfg0.rebuild(|b| b.r(r))?;
+        for (mi, &kind) in MethodKind::ALL.iter().enumerate() {
+            if kind == MethodKind::ScExact {
+                continue; // R-independent; handled once below
+            }
+            let run = coord.run_method(kind, &ds, &cfg)?;
+            per_method[mi]
+                .push(SeriesPoint { x: r as f64, acc: run.metrics.accuracy, secs: run.secs });
+        }
+    }
+    coord.clear_cache();
     let mut out = Vec::new();
-    for kind in MethodKind::ALL {
+    for (mi, &kind) in MethodKind::ALL.iter().enumerate() {
         if kind == MethodKind::ScExact {
             // quadratic reference: run once (R-independent) if feasible
             if coord.exact_sc_feasible(ds.n()) {
@@ -246,14 +277,10 @@ pub fn fig5(
             }
             continue;
         }
-        let mut points = Vec::new();
-        for &r in rs {
-            let mut cfg = cfg0.clone();
-            cfg.r = r;
-            let run = coord.run_method(kind, &ds, &cfg)?;
-            points.push(SeriesPoint { x: r as f64, acc: run.metrics.accuracy, secs: run.secs });
-        }
-        out.push(Series { label: kind.name().to_string(), points });
+        out.push(Series {
+            label: kind.name().to_string(),
+            points: std::mem::take(&mut per_method[mi]),
+        });
     }
     Ok(out)
 }

@@ -36,18 +36,7 @@ impl Dataset {
     /// model keep these (the fitted frame) so out-of-sample batches can be
     /// normalized **by the training statistics**, not their own.
     pub fn minmax_params(&self) -> (Vec<f64>, Vec<f64>) {
-        let (n, d) = (self.x.rows, self.x.cols);
-        let mut lo = vec![f64::INFINITY; d];
-        let mut hi = vec![f64::NEG_INFINITY; d];
-        for i in 0..n {
-            for (j, &v) in self.x.row(i).iter().enumerate() {
-                lo[j] = lo[j].min(v);
-                hi[j] = hi[j].max(v);
-            }
-        }
-        let span: Vec<f64> =
-            lo.iter().zip(hi.iter()).map(|(&l, &h)| if h > l { h - l } else { 1.0 }).collect();
-        (lo, span)
+        minmax_params(&self.x)
     }
 
     /// Apply an explicit min-max frame: `x[i][j] ← (x[i][j] − lo[j]) / span[j]`.
@@ -111,6 +100,27 @@ impl Dataset {
         }
         sizes
     }
+}
+
+/// Per-dimension `(min, span)` of a matrix, span 1.0 for constant
+/// dimensions. The **one** definition of the min-max frame: the
+/// [`Dataset`] preprocessing, the pipeline's min-max normalize stage,
+/// and (bit-for-bit, by its own accumulation) the streaming stats pass
+/// all agree on it — the streamed-vs-in-memory byte-identity contract
+/// depends on there being exactly one rule.
+pub fn minmax_params(x: &Mat) -> (Vec<f64>, Vec<f64>) {
+    let (n, d) = (x.rows, x.cols);
+    let mut lo = vec![f64::INFINITY; d];
+    let mut hi = vec![f64::NEG_INFINITY; d];
+    for i in 0..n {
+        for (j, &v) in x.row(i).iter().enumerate() {
+            lo[j] = lo[j].min(v);
+            hi[j] = hi[j].max(v);
+        }
+    }
+    let span: Vec<f64> =
+        lo.iter().zip(hi.iter()).map(|(&l, &h)| if h > l { h - l } else { 1.0 }).collect();
+    (lo, span)
 }
 
 #[cfg(test)]

@@ -8,8 +8,9 @@
 //!   generation, implicit-Laplacian sparse algebra, PRIMME-style iterative
 //!   SVD, K-means, eight baseline methods, metrics, datasets, the
 //!   experiment coordinator that regenerates every table and figure of the
-//!   paper, and the [`model`] layer (fit / transform / predict with model
-//!   persistence) that turns the batch pipeline into a serving system.
+//!   paper, the [`model`] layer (fit / transform / predict with model
+//!   persistence), and the [`pipeline`] layer that expresses every method
+//!   as typed, cacheable stages.
 //! - **L2 (python/compile/model.py)**: JAX compute graphs for the dense hot
 //!   spots (K-means assignment, exact kernel blocks, RF feature maps).
 //! - **L1 (python/compile/kernels/)**: Pallas kernels implementing those
@@ -17,6 +18,42 @@
 //!
 //! Python never runs on the request path: `scrb` is self-contained once
 //! `artifacts/` is built, and every XLA path has a native fallback.
+//!
+//! ## The staged pipeline
+//!
+//! Algorithm 2 is a staged computation — featurize, embed, cluster — and
+//! every method in the paper's comparison grid is a swap of exactly those
+//! stages. The [`pipeline`] module makes that the API: typed stage traits
+//! (`Normalize` → `Featurize` → `Embed` → `Cluster`) joined by a
+//! [`pipeline::Pipeline`] driver, where each stage emits a fingerprinted,
+//! cacheable artifact. [`cluster::MethodKind::pipeline`] is the
+//! composition table for all nine methods, and an
+//! [`pipeline::ArtifactCache`] lets sweeps re-run only the stages a
+//! config change invalidated:
+//!
+//! ```no_run
+//! use scrb::cluster::{Env, MethodKind};
+//! use scrb::config::PipelineConfig;
+//! use scrb::data::synth;
+//! use scrb::pipeline::ArtifactCache;
+//!
+//! let ds = synth::two_moons(2000, 0.06, 7);
+//! let cfg = PipelineConfig::builder().k(2).r(128).sigma(0.15).build();
+//! let mut cache = ArtifactCache::new();
+//! // k-sweep with a pinned embedding width: RB featurization and the
+//! // SVD embedding run once; only K-means re-runs per grid point
+//! for k in [2usize, 3, 4] {
+//!     let cfg_k = cfg.rebuild(|b| b.embed_dim(4).k(k)).unwrap();
+//!     let env = Env::new(cfg_k.clone());
+//!     let fitted = MethodKind::ScRb
+//!         .pipeline(&cfg_k)
+//!         .fit_cached(&env, &ds.x, &mut cache)
+//!         .unwrap();
+//!     // the embedding artifact (Σ, U, the serving projection) is a
+//!     // first-class value — export it standalone, no refit
+//!     println!("k={k}: σ₁={:.4}", fitted.embedding.s[0]);
+//! }
+//! ```
 //!
 //! ## Sparse substrates
 //!
@@ -67,11 +104,13 @@
 //!
 //! ## Out-of-core fit (streaming)
 //!
-//! Datasets too big to densify fit through the [`stream`] subsystem: two
-//! chunked passes over a [`stream::ChunkReader`] (stats, then
-//! featurization into the [`sparse::BlockEllRb`] substrate) with resident
-//! input memory bounded by `chunk_rows × d` — and a model byte-identical
-//! to the in-memory fit on the same data and seed:
+//! Datasets too big to densify fit through the [`stream`] subsystem: the
+//! same SC_RB stage composition, with the featurize stage fed by a
+//! chunked [`stream::ChunkReader`] (two bounded-memory passes into the
+//! [`sparse::BlockEllRb`] substrate) instead of an in-memory matrix. The
+//! embed → cluster → assemble tail is the *identical* driver code the
+//! in-memory fit runs, so the streamed model is **byte-identical** to the
+//! in-memory fit's on the same data and seed:
 //!
 //! ```no_run
 //! use scrb::cluster::Env;
@@ -113,6 +152,7 @@ pub mod kernels;
 pub mod kmeans;
 pub mod metrics;
 pub mod model;
+pub mod pipeline;
 pub mod rb;
 pub mod rf;
 pub mod runtime;

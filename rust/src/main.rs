@@ -83,6 +83,8 @@ fn print_help() {
          \x20 --sigma S       kernel bandwidth (default: median heuristic)\n\
          \x20 --kernel NAME   laplacian (RB-native) | gaussian\n\
          \x20 --solver NAME   davidson (PRIMME-like) | lanczos (svds-like)\n\
+         \x20 --embed_dim N   spectral embedding width (default: K; pin it so a\n\
+         \x20                 k-sweep reuses one cached embedding artifact)\n\
          \x20 --engine NAME   native | xla | auto (default auto)\n\
          \x20 --scale DIV     dataset size divisor (default 64); --full = paper sizes\n\
          \x20 --data PATH     load a real LibSVM file instead of synthetic data\n\
@@ -97,6 +99,9 @@ fn print_help() {
 fn base_config(args: &Args) -> Result<PipelineConfig, ScrbError> {
     let mut cfg = PipelineConfig::default();
     cfg.apply_args(args)?;
+    // one validation routine for every fit path (defaults + file + CLI
+    // layering can combine into invalid states; reject them typed here)
+    cfg.validate()?;
     Ok(cfg)
 }
 
@@ -271,19 +276,15 @@ fn cmd_fit_stream(args: &Args, coord: &Coordinator, save: &str) -> Result<(), Sc
     let path = args
         .get("data")
         .ok_or_else(|| ScrbError::config("fit --stream reads from a file; pass --data path.libsvm"))?;
-    // No data matrix exists to run the eigengap bandwidth selection on, so
-    // a streamed fit must pin σ explicitly — silently falling back to the
-    // config default would bake a wrong bandwidth into a persisted model.
-    let sigma = sigma_override(args)?.ok_or_else(|| {
-        ScrbError::config(
-            "fit --stream cannot run the in-memory bandwidth selection; pass --sigma S",
-        )
-    })?;
     let chunk_rows = args.get_usize("chunk-rows", 4096)?;
     let block_rows = args.get_usize("block-rows", 65_536)?;
-    if chunk_rows == 0 || block_rows == 0 {
-        return Err(ScrbError::config("--chunk-rows and --block-rows must be at least 1"));
-    }
+    // Attach the streaming section and re-validate: the one
+    // `PipelineConfig::validate` routine now enforces chunk/block-rows ≥ 1
+    // *and* an explicitly pinned σ (no data matrix exists to run the
+    // eigengap bandwidth selection on — silently falling back to the
+    // config default would bake a wrong bandwidth into a persisted model).
+    let cfg = coord.base_cfg.rebuild(|b| b.stream(chunk_rows, block_rows))?;
+    let sigma = cfg.kernel.sigma();
     // K: explicit --k wins; otherwise the stream's label census decides.
     let k_override = args.get("k").is_some().then_some(coord.base_cfg.k);
     let t0 = Instant::now();

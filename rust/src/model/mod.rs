@@ -142,6 +142,12 @@ pub trait FittedModel: Send + Sync {
             "this model kind has no persistence format (only SC_RB models can be saved)",
         ))
     }
+
+    /// Recover the concrete model type from a boxed trait object
+    /// (`Box::downcast` via `Any`). The streaming driver extracts its
+    /// owned [`ScRbModel`] this way after the shared pipeline assembly,
+    /// so the model is built exactly once.
+    fn into_any(self: Box<Self>) -> Box<dyn std::any::Any>;
 }
 
 /// Reusable serving scratch: per-worker row-strip boundaries plus one
@@ -317,6 +323,10 @@ impl FittedModel for CentroidModel {
             },
         );
         Ok(())
+    }
+
+    fn into_any(self: Box<Self>) -> Box<dyn std::any::Any> {
+        self
     }
 }
 

@@ -365,6 +365,10 @@ impl FittedModel for ScRbModel {
     fn save(&self, path: &str) -> Result<(), ScrbError> {
         std::fs::write(path, self.to_bytes()).map_err(|e| ScrbError::io(path, e))
     }
+
+    fn into_any(self: Box<Self>) -> Box<dyn std::any::Any> {
+        self
+    }
 }
 
 #[cfg(test)]

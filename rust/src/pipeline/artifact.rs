@@ -1,0 +1,163 @@
+//! Typed intermediate artifacts flowing between pipeline stages.
+//!
+//! Each stage of Algorithm 2 leaves behind a value another run can pick
+//! up: the normalized input frame, the featurization (the RB/RF/landmark
+//! feature matrix plus whatever the serving path needs), the spectral
+//! embedding (Σ, the embedding rows, and SC_RB's folded projection P),
+//! and the clustering (labels + centroids). Artifacts carry their own
+//! [fingerprint](crate::pipeline::Fingerprint) and the wallclock timings
+//! of the stages that produced them, so a cached artifact is
+//! indistinguishable from a freshly computed one — the basis of the
+//! sweep-reuse contract tested in `tests/pipeline_api.rs`.
+
+use crate::eigen::{SvdOp, SvdStats};
+use crate::linalg::Mat;
+use crate::rb::RbCodebook;
+use crate::sparse::{BlockEllRb, Csr, EllRb};
+use crate::util::timer::StageTimer;
+use std::sync::Arc;
+
+/// The feature matrix a featurize stage emits, on whichever substrate the
+/// method natively produces: the fixed-stride RB substrate (in-memory
+/// SC_RB, already degree-normalized — see
+/// [`crate::cluster::sc_rb::RbFeaturize`]), its row-blocked streaming
+/// variant, a dense matrix (RF / Nyström / exact similarity), or general
+/// CSR (the LSC bipartite affinity). Dense features sit behind an `Arc`
+/// so pass-through embeds share them without copying N×R (or N×d) data.
+pub enum FeatureMatrix {
+    /// Fixed-stride RB substrate ([`EllRb`]), degree-normalized Ẑ.
+    EllRb(EllRb),
+    /// Row-blocked RB substrate ([`BlockEllRb`]), degree-normalized Ẑ.
+    Block(BlockEllRb),
+    /// Dense features (RF maps, whitened Nyström features, the exact
+    /// normalized similarity, or the raw input for plain K-means).
+    Dense(Arc<Mat>),
+    /// General sparse features (the LSC bipartite affinity).
+    Sparse(Csr),
+}
+
+impl FeatureMatrix {
+    /// Number of data rows.
+    pub fn nrows(&self) -> usize {
+        match self {
+            FeatureMatrix::EllRb(z) => z.rows,
+            FeatureMatrix::Block(z) => z.rows,
+            FeatureMatrix::Dense(m) => m.rows,
+            FeatureMatrix::Sparse(a) => a.rows,
+        }
+    }
+
+    /// Number of feature columns.
+    pub fn ncols(&self) -> usize {
+        match self {
+            FeatureMatrix::EllRb(z) => z.cols,
+            FeatureMatrix::Block(z) => z.cols,
+            FeatureMatrix::Dense(m) => m.cols,
+            FeatureMatrix::Sparse(a) => a.cols,
+        }
+    }
+
+    /// View as a solver operator (every substrate implements
+    /// [`SvdOp`], so embed stages are substrate-agnostic).
+    pub fn svd_op(&self) -> &dyn SvdOp {
+        match self {
+            FeatureMatrix::EllRb(z) => z,
+            FeatureMatrix::Block(z) => z,
+            FeatureMatrix::Dense(m) => &**m,
+            FeatureMatrix::Sparse(a) => a,
+        }
+    }
+}
+
+/// Output of a [`crate::pipeline::Normalize`] stage: the input brought
+/// into the fitted coordinate frame, plus the frame itself so a serving
+/// model can normalize out-of-sample batches identically.
+pub struct NormArtifact {
+    /// Cache key (normalize config ⊕ data identity).
+    pub fingerprint: u64,
+    /// The normalized input matrix.
+    pub x: Mat,
+    /// Per-feature `(min, span)` frame, when the stage computes one
+    /// (identity normalization stores `None`).
+    pub frame: Option<(Vec<f64>, Vec<f64>)>,
+    /// Wallclock of the stage execution that produced this artifact.
+    pub timer: StageTimer,
+}
+
+/// Output of a [`crate::pipeline::Featurize`] stage.
+pub struct FeatureArtifact {
+    /// Cache key (featurize config ⊕ input identity).
+    pub fingerprint: u64,
+    /// The feature matrix on its native substrate.
+    pub z: FeatureMatrix,
+    /// RB codebook (grids + bin→column tables) when the featurization is
+    /// RB — what the serving model needs to bin out-of-sample points.
+    pub codebook: Option<RbCodebook>,
+    /// RB κ estimate (Definition 1), RB featurizations only.
+    pub kappa: Option<f64>,
+    /// The dimension the method reports as its working size (D for RB, R
+    /// for RF/landmark methods, N for the exact similarity).
+    pub feature_dim: usize,
+    /// Input min/span frame, when the featurization computed one (the
+    /// streaming stats pass); folded into the assembled serving model.
+    pub norm: Option<(Vec<f64>, Vec<f64>)>,
+    /// Raw ground-truth labels collected by a streaming featurization's
+    /// census pass (row order), used by the stream driver for K selection
+    /// and scoring.
+    pub stream_labels: Option<Vec<i64>>,
+    /// Wallclock of the stage execution that produced this artifact.
+    pub timer: StageTimer,
+}
+
+/// Output of an [`crate::pipeline::Embed`] stage: the spectral embedding
+/// the cluster stage consumes, plus Σ and (for SC_RB) the folded serving
+/// projection.
+pub struct EmbedArtifact {
+    /// Cache key (embed config ⊕ feature-artifact fingerprint).
+    pub fingerprint: u64,
+    /// Top singular values, descending (empty for pass-through embeds).
+    pub s: Vec<f64>,
+    /// Embedding rows in the exact space the cluster stage runs K-means
+    /// on (row-normalized / score-scaled per the stage's configuration).
+    /// Behind an `Arc`: pass-through embeds share the upstream dense
+    /// features instead of copying them.
+    pub u: Arc<Mat>,
+    /// SC_RB's pre-folded serving projection `P = V·Σ⁻¹/√R` (D×K).
+    pub proj: Option<Mat>,
+    /// Solver statistics when an iterative SVD ran.
+    pub stats: Option<SvdStats>,
+    /// Wallclock of the stage execution that produced this artifact.
+    pub timer: StageTimer,
+}
+
+/// Output of a [`crate::pipeline::Cluster`] stage.
+pub struct ClusterArtifact {
+    /// Cache key (cluster config ⊕ embed-artifact fingerprint).
+    pub fingerprint: u64,
+    /// Final training-set labels, row order.
+    pub labels: Vec<usize>,
+    /// K-means centroids in the embedding space (K×K_embed).
+    pub centroids: Mat,
+    /// K-means inertia of the winning replicate.
+    pub inertia: f64,
+    /// Wallclock of the stage execution that produced this artifact.
+    pub timer: StageTimer,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feature_matrix_shapes() {
+        let m = Mat::zeros(3, 5);
+        let fm = FeatureMatrix::Dense(Arc::new(m));
+        assert_eq!(fm.nrows(), 3);
+        assert_eq!(fm.ncols(), 5);
+        assert_eq!(fm.svd_op().nrows(), 3);
+        let e = EllRb::new(2, 4, 1, vec![0, 3], vec![1.0, 1.0]);
+        let fe = FeatureMatrix::EllRb(e);
+        assert_eq!((fe.nrows(), fe.ncols()), (2, 4));
+        assert_eq!(fe.svd_op().ncols(), 4);
+    }
+}

@@ -1,0 +1,193 @@
+//! Fingerprint-keyed artifact cache — the sweep-reuse engine.
+//!
+//! A sweep driver holds one [`ArtifactCache`] and runs every grid point's
+//! pipeline through it. Each stage looks its fingerprint up before
+//! executing; a hit returns the shared artifact (`Arc`), a miss runs the
+//! stage and stores the result. Because fingerprints chain (each stage's
+//! key folds its upstream artifact's key), a config change re-runs
+//! exactly the stages downstream of it:
+//!
+//! - a **k-sweep** with a pinned embedding width reuses featurization
+//!   *and* embedding — only K-means re-runs per grid point;
+//! - a **σ-sweep** re-fingerprints the featurization (σ is in its config
+//!   slice), so featurize/embed/cluster re-run but the normalized input
+//!   frame is reused;
+//! - a **solver sweep** reuses featurization and re-runs the embed.
+//!
+//! Correctness is by construction — a stage's fingerprint covers every
+//! input that can change its output (config slice + upstream identity) —
+//! and is pinned by the cache-equivalence tests in
+//! `tests/pipeline_api.rs` (sweep with cache == sweep without).
+
+use super::artifact::{ClusterArtifact, EmbedArtifact, FeatureArtifact, NormArtifact};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Shared store of stage artifacts keyed by fingerprint.
+pub struct ArtifactCache {
+    enabled: bool,
+    norms: HashMap<u64, Arc<NormArtifact>>,
+    features: HashMap<u64, Arc<FeatureArtifact>>,
+    embeds: HashMap<u64, Arc<EmbedArtifact>>,
+    clusters: HashMap<u64, Arc<ClusterArtifact>>,
+    /// Stage lookups that found a reusable artifact.
+    pub hits: usize,
+    /// Stage lookups that fell through to a fresh execution.
+    pub misses: usize,
+}
+
+impl Default for ArtifactCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ArtifactCache {
+    /// An enabled cache (sweep drivers hold one of these).
+    pub fn new() -> ArtifactCache {
+        ArtifactCache {
+            enabled: true,
+            norms: HashMap::new(),
+            features: HashMap::new(),
+            embeds: HashMap::new(),
+            clusters: HashMap::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// A pass-through cache: every lookup misses, nothing is stored.
+    /// One-shot fits use this — no retention, no memory growth.
+    pub fn disabled() -> ArtifactCache {
+        ArtifactCache { enabled: false, ..ArtifactCache::new() }
+    }
+
+    /// Whether lookups can ever hit.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Number of retained artifacts across all stage kinds.
+    pub fn len(&self) -> usize {
+        self.norms.len() + self.features.len() + self.embeds.len() + self.clusters.len()
+    }
+
+    /// True when nothing is retained.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every retained artifact (hit/miss counters are kept). Sweep
+    /// drivers call this between datasets to bound resident memory.
+    pub fn clear(&mut self) {
+        self.norms.clear();
+        self.features.clear();
+        self.embeds.clear();
+        self.clusters.clear();
+    }
+
+    fn count(&mut self, hit: bool) {
+        if hit {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+        }
+    }
+
+    /// Look up a normalize artifact.
+    pub fn norm(&mut self, fp: u64) -> Option<Arc<NormArtifact>> {
+        let got = self.norms.get(&fp).cloned();
+        self.count(got.is_some());
+        got
+    }
+
+    /// Retain a normalize artifact (no-op when disabled).
+    pub fn put_norm(&mut self, a: Arc<NormArtifact>) {
+        if self.enabled {
+            self.norms.insert(a.fingerprint, a);
+        }
+    }
+
+    /// Look up a feature artifact.
+    pub fn feature(&mut self, fp: u64) -> Option<Arc<FeatureArtifact>> {
+        let got = self.features.get(&fp).cloned();
+        self.count(got.is_some());
+        got
+    }
+
+    /// Retain a feature artifact (no-op when disabled).
+    pub fn put_feature(&mut self, a: Arc<FeatureArtifact>) {
+        if self.enabled {
+            self.features.insert(a.fingerprint, a);
+        }
+    }
+
+    /// Look up an embed artifact.
+    pub fn embed(&mut self, fp: u64) -> Option<Arc<EmbedArtifact>> {
+        let got = self.embeds.get(&fp).cloned();
+        self.count(got.is_some());
+        got
+    }
+
+    /// Retain an embed artifact (no-op when disabled).
+    pub fn put_embed(&mut self, a: Arc<EmbedArtifact>) {
+        if self.enabled {
+            self.embeds.insert(a.fingerprint, a);
+        }
+    }
+
+    /// Look up a cluster artifact.
+    pub fn cluster(&mut self, fp: u64) -> Option<Arc<ClusterArtifact>> {
+        let got = self.clusters.get(&fp).cloned();
+        self.count(got.is_some());
+        got
+    }
+
+    /// Retain a cluster artifact (no-op when disabled).
+    pub fn put_cluster(&mut self, a: Arc<ClusterArtifact>) {
+        if self.enabled {
+            self.clusters.insert(a.fingerprint, a);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::util::timer::StageTimer;
+
+    fn dummy_cluster(fp: u64) -> Arc<ClusterArtifact> {
+        Arc::new(ClusterArtifact {
+            fingerprint: fp,
+            labels: vec![0, 1],
+            centroids: Mat::zeros(2, 2),
+            inertia: 0.0,
+            timer: StageTimer::new(),
+        })
+    }
+
+    #[test]
+    fn enabled_cache_stores_and_hits() {
+        let mut c = ArtifactCache::new();
+        assert!(c.cluster(7).is_none());
+        c.put_cluster(dummy_cluster(7));
+        assert_eq!(c.len(), 1);
+        let got = c.cluster(7).expect("hit");
+        assert_eq!(got.labels, vec![0, 1]);
+        assert_eq!((c.hits, c.misses), (1, 1));
+        c.clear();
+        assert!(c.is_empty());
+        assert!(c.cluster(7).is_none());
+    }
+
+    #[test]
+    fn disabled_cache_never_retains() {
+        let mut c = ArtifactCache::disabled();
+        assert!(!c.is_enabled());
+        c.put_cluster(dummy_cluster(7));
+        assert!(c.is_empty());
+        assert!(c.cluster(7).is_none());
+        assert_eq!(c.hits, 0);
+    }
+}

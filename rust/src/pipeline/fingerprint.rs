@@ -1,0 +1,124 @@
+//! Stage and data fingerprints for artifact caching.
+//!
+//! Every pipeline stage hashes its *complete* configuration slice plus the
+//! fingerprint of its upstream artifact into one `u64` — the cache key for
+//! the artifact it produces. Two stage executions share a fingerprint iff
+//! they would compute the same artifact, so a sweep driver can replay a
+//! pipeline under a modified config and only the stages downstream of the
+//! change re-run (see [`crate::pipeline::ArtifactCache`]).
+//!
+//! The hash is FNV-1a over little-endian bytes — not cryptographic, just
+//! fast, deterministic across runs/platforms, and collision-safe enough
+//! for the handful of artifacts a sweep holds (keys additionally embed a
+//! per-stage tag string, so artifacts of different kinds can never
+//! collide on equal payloads).
+
+use crate::linalg::Mat;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Builder-style FNV-1a fingerprint accumulator.
+///
+/// ```
+/// use scrb::pipeline::Fingerprint;
+/// let a = Fingerprint::new("stage/demo").usize(256).f64(0.25).finish();
+/// let b = Fingerprint::new("stage/demo").usize(256).f64(0.25).finish();
+/// assert_eq!(a, b);
+/// assert_ne!(a, Fingerprint::new("stage/demo").usize(257).f64(0.25).finish());
+/// ```
+#[derive(Clone, Copy, Debug)]
+pub struct Fingerprint(u64);
+
+impl Fingerprint {
+    /// Start a fingerprint under a per-stage `tag` (namespaces the key so
+    /// different artifact kinds never collide on equal payloads).
+    pub fn new(tag: &str) -> Fingerprint {
+        Fingerprint(FNV_OFFSET).str(tag)
+    }
+
+    /// Fold a `u64` (little-endian bytes).
+    pub fn u64(mut self, v: u64) -> Fingerprint {
+        for b in v.to_le_bytes() {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+        self
+    }
+
+    /// Fold a `usize`.
+    pub fn usize(self, v: usize) -> Fingerprint {
+        self.u64(v as u64)
+    }
+
+    /// Fold a `bool`.
+    pub fn bool(self, v: bool) -> Fingerprint {
+        self.u64(v as u64)
+    }
+
+    /// Fold an `f64` by its bit pattern (distinguishes `0.0`/`-0.0`,
+    /// which is what cache correctness wants: different bits may mean a
+    /// different computation).
+    pub fn f64(self, v: f64) -> Fingerprint {
+        self.u64(v.to_bits())
+    }
+
+    /// Fold a string (length-prefixed so concatenations can't collide).
+    pub fn str(mut self, s: &str) -> Fingerprint {
+        self = self.usize(s.len());
+        for &b in s.as_bytes() {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+        self
+    }
+
+    /// The accumulated 64-bit fingerprint.
+    pub fn finish(self) -> u64 {
+        self.0
+    }
+}
+
+/// Data-identity fingerprint of a dense matrix: shape plus every element's
+/// bit pattern. O(n·d), one linear pass — negligible next to any fit that
+/// consumes the matrix, and it makes artifact reuse *sound*: a sweep can
+/// only hit the cache when the input bytes are identical.
+pub fn mat_fingerprint(x: &Mat) -> u64 {
+    let mut f = Fingerprint::new("data/mat").usize(x.rows).usize(x.cols);
+    for &v in &x.data {
+        f = f.f64(v);
+    }
+    f.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_sensitive() {
+        let a = Fingerprint::new("t").usize(1).f64(2.0).str("x").finish();
+        let b = Fingerprint::new("t").usize(1).f64(2.0).str("x").finish();
+        assert_eq!(a, b);
+        assert_ne!(a, Fingerprint::new("t").usize(2).f64(2.0).str("x").finish());
+        assert_ne!(a, Fingerprint::new("t").usize(1).f64(2.5).str("x").finish());
+        assert_ne!(a, Fingerprint::new("u").usize(1).f64(2.0).str("x").finish());
+    }
+
+    #[test]
+    fn mat_fingerprint_tracks_bits() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let mut b = a.clone();
+        assert_eq!(mat_fingerprint(&a), mat_fingerprint(&b));
+        b.set(1, 1, 4.0 + 1e-12);
+        assert_ne!(mat_fingerprint(&a), mat_fingerprint(&b));
+        // shape participates even when the data vector is equal
+        let c = Mat::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_ne!(mat_fingerprint(&a), mat_fingerprint(&c));
+    }
+
+    #[test]
+    fn zero_and_negative_zero_differ() {
+        let a = Fingerprint::new("t").f64(0.0).finish();
+        let b = Fingerprint::new("t").f64(-0.0).finish();
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,418 @@
+//! Composable staged pipeline — the paper's Algorithm 2 as typed,
+//! cacheable stages.
+//!
+//! Algorithm 2 is explicitly staged: RB featurization (step 1), the
+//! degree-normalized SVD embedding (steps 2–3), K-means on the embedding
+//! rows (steps 4–5). Every clustering method in the comparison grid is a
+//! swap of exactly these stages (Tremblay & Loukas frame all accelerated
+//! SC variants this way), so the crate expresses them as one composition
+//! surface instead of nine hand-inlined scaffolds:
+//!
+//! - [`Normalize`] → [`NormArtifact`]: bring the input into its fitted
+//!   coordinate frame (identity, or min-max with the stored frame);
+//! - [`Featurize`] → [`FeatureArtifact`]: the method's feature matrix on
+//!   its native substrate ([`FeatureMatrix`]), plus the RB codebook /
+//!   stream census when applicable;
+//! - [`Embed`] → [`EmbedArtifact`]: Σ, the embedding rows U, and (for
+//!   SC_RB) the folded serving projection P;
+//! - [`Cluster`] → [`ClusterArtifact`]: labels + centroids + inertia.
+//!
+//! A [`Pipeline`] joins one stage of each kind; [`Pipeline::fit`] drives
+//! them in order (the typed unfitted state), producing a
+//! [`FittedPipeline`] that exposes the per-stage artifacts alongside the
+//! familiar [`FitResult`] (the fitted state). Stage boundaries are where
+//! reuse happens: every artifact is fingerprinted (config slice ⊕
+//! upstream identity — [`Fingerprint`]), and [`Pipeline::fit_cached`]
+//! consults an [`ArtifactCache`] before executing a stage, so sweep
+//! drivers re-run only what a config change actually invalidates (a
+//! k-sweep with a pinned embedding width reuses featurization *and*
+//! embedding; a σ-sweep reuses the normalized input frame).
+//!
+//! The composition table for the paper's nine methods is
+//! [`crate::cluster::MethodKind::pipeline`]; the streaming fit
+//! ([`crate::stream::fit_streaming`]) drives the *same* embed → cluster →
+//! assemble tail through [`Pipeline::fit_features`], with the featurize
+//! stage fed by [`DataSource::Stream`] instead of an in-memory matrix —
+//! which is what makes the streamed model byte-identical to the
+//! in-memory one by construction rather than by hand-synchronized code.
+//!
+//! ```no_run
+//! use scrb::cluster::{Env, MethodKind};
+//! use scrb::config::PipelineConfig;
+//! use scrb::data::synth;
+//! use scrb::pipeline::ArtifactCache;
+//!
+//! let ds = synth::two_moons(1000, 0.06, 7);
+//! let cfg = PipelineConfig::builder().k(2).r(128).sigma(0.15).build();
+//! let mut cache = ArtifactCache::new();
+//! // a k-sweep with a pinned embedding width: featurize + embed run once
+//! for k in [2usize, 3, 4] {
+//!     let cfg_k = cfg.rebuild(|b| b.embed_dim(4).k(k)).unwrap();
+//!     let env_k = Env::new(cfg_k.clone());
+//!     let fitted = MethodKind::ScRb
+//!         .pipeline(&cfg_k)
+//!         .fit_cached(&env_k, &ds.x, &mut cache)
+//!         .unwrap();
+//!     println!("k={k}: inertia {}", fitted.result.output.info.inertia);
+//! }
+//! ```
+
+pub mod artifact;
+pub mod cache;
+pub mod fingerprint;
+pub mod stages;
+
+pub use artifact::{ClusterArtifact, EmbedArtifact, FeatureArtifact, FeatureMatrix, NormArtifact};
+pub use cache::ArtifactCache;
+pub use fingerprint::{mat_fingerprint, Fingerprint};
+pub use stages::{
+    normalize_dense_by_degree, DegreeMode, IdentityFeaturize, KmeansCluster, MinMaxNormalize,
+    PassEmbed, SvdEmbed,
+};
+
+use crate::cluster::{ClusterOutput, Env, MethodInfo};
+use crate::error::ScrbError;
+use crate::linalg::Mat;
+use crate::model::{CentroidModel, FitResult, FittedModel, ScRbModel};
+use crate::stream::{ChunkReader, StreamOpts};
+use crate::util::timer::StageTimer;
+use std::sync::Arc;
+
+/// What a featurize stage reads: an in-memory matrix, or a chunked
+/// out-of-core reader (SC_RB's two-pass streaming featurization). The
+/// featurize stage is the *only* stage that sees the data source — the
+/// embed/cluster/assemble tail is source-agnostic, which is the
+/// in-memory/streaming unification.
+pub enum DataSource<'a> {
+    /// Rows already resident as a dense matrix.
+    Matrix(&'a Mat),
+    /// A chunked reader driven in bounded-memory passes.
+    Stream {
+        /// The chunk source (rewound between passes).
+        reader: &'a mut dyn ChunkReader,
+        /// Streaming knobs (substrate block granularity etc.).
+        opts: &'a StreamOpts,
+    },
+}
+
+impl<'a> DataSource<'a> {
+    /// The in-memory matrix, or a typed error for stages that cannot
+    /// featurize a stream (`method` names the caller in the message).
+    pub fn matrix(&self, method: &str) -> Result<&Mat, ScrbError> {
+        match self {
+            DataSource::Matrix(x) => Ok(*x),
+            DataSource::Stream { .. } => Err(ScrbError::unsupported(format!(
+                "{method} cannot featurize a chunked stream; only SC_RB fits out-of-core"
+            ))),
+        }
+    }
+}
+
+/// Input-normalization stage: brings the data into the coordinate frame
+/// the rest of the pipeline (and the serving model) will live in.
+pub trait Normalize {
+    /// Cache key of the artifact this stage would produce on input
+    /// `data_fp` (must cover every config knob that changes the output).
+    fn fingerprint(&self, data_fp: u64) -> u64;
+    /// Execute the stage; `fp` is the precomputed [`Normalize::fingerprint`].
+    fn run(&self, x: &Mat, fp: u64) -> Result<NormArtifact, ScrbError>;
+}
+
+/// Featurization stage (Algorithm 2 step 1 and its baselines' analogues).
+pub trait Featurize {
+    /// Cache key of the artifact this stage would produce on input
+    /// `input_fp` (must cover every config knob that changes the output).
+    fn fingerprint(&self, input_fp: u64) -> u64;
+    /// Execute the stage; `fp` is the precomputed [`Featurize::fingerprint`].
+    fn run(&self, env: &Env, data: DataSource<'_>, fp: u64) -> Result<FeatureArtifact, ScrbError>;
+    /// Whether the driver may retain this stage's artifact in a sweep
+    /// cache. Default yes; stages whose artifact is huge and never
+    /// shareable (the exact-SC N×N similarity) opt out.
+    fn cacheable(&self) -> bool {
+        true
+    }
+}
+
+/// Spectral-embedding stage (Algorithm 2 steps 2–4 and the baselines'
+/// analogues, including pass-through for the kernel-K-means family).
+pub trait Embed {
+    /// Cache key given the upstream feature artifact's fingerprint.
+    fn fingerprint(&self, upstream: u64) -> u64;
+    /// Execute the stage; `fp` is the precomputed [`Embed::fingerprint`].
+    fn run(&self, env: &Env, feat: &FeatureArtifact, fp: u64) -> Result<EmbedArtifact, ScrbError>;
+    /// Whether the driver may retain this stage's artifact in a sweep
+    /// cache. Default yes; trivially re-runnable pass-throughs opt out.
+    fn cacheable(&self) -> bool {
+        true
+    }
+}
+
+/// Clustering stage (Algorithm 2 step 5).
+pub trait Cluster {
+    /// Cache key given the upstream embed artifact's fingerprint.
+    fn fingerprint(&self, upstream: u64) -> u64;
+    /// Execute the stage; `fp` is the precomputed [`Cluster::fingerprint`].
+    fn run(&self, env: &Env, emb: &EmbedArtifact, fp: u64) -> Result<ClusterArtifact, ScrbError>;
+}
+
+/// How the fitted pipeline turns its artifacts into a serving
+/// [`FittedModel`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Assemble {
+    /// The K-means centroids *are* the model (plain K-means: exact
+    /// serving).
+    Centroids,
+    /// Input-space class means of the fitted partition (the transductive
+    /// baselines' documented serving approximation).
+    ClassMeans,
+    /// SC_RB's spectral out-of-sample artifact: codebook + Σ + folded
+    /// projection + centroids (+ the input frame when the featurization
+    /// computed one).
+    ScRb,
+}
+
+/// An unfitted pipeline: one stage of each kind plus the model-assembly
+/// rule. Compose by hand, or take a method's canonical composition from
+/// [`crate::cluster::MethodKind::pipeline`].
+pub struct Pipeline {
+    /// Optional input-normalization stage (`None` = the caller's frame).
+    pub normalize: Option<Box<dyn Normalize>>,
+    /// Featurization stage.
+    pub featurize: Box<dyn Featurize>,
+    /// Embedding stage.
+    pub embed: Box<dyn Embed>,
+    /// Clustering stage.
+    pub cluster: Box<dyn Cluster>,
+    /// Serving-model assembly rule.
+    pub assemble: Assemble,
+}
+
+/// A fitted pipeline: the per-stage artifacts (shareable, cacheable) plus
+/// the assembled [`FitResult`]. The artifacts are the redesign's point —
+/// e.g. [`FittedPipeline::embedding`] exports Σ/U standalone for
+/// downstream analysis without re-running anything.
+pub struct FittedPipeline {
+    /// The featurization artifact (substrate + codebook).
+    pub features: Arc<FeatureArtifact>,
+    /// The embedding artifact (Σ, U, projection).
+    pub embedding: Arc<EmbedArtifact>,
+    /// The clustering artifact (labels, centroids, inertia).
+    pub clustering: Arc<ClusterArtifact>,
+    /// The assembled training output + serving model.
+    pub result: FitResult,
+}
+
+impl Pipeline {
+    /// Compose a pipeline from its stages (no input normalization).
+    pub fn new(
+        featurize: Box<dyn Featurize>,
+        embed: Box<dyn Embed>,
+        cluster: Box<dyn Cluster>,
+        assemble: Assemble,
+    ) -> Pipeline {
+        Pipeline { normalize: None, featurize, embed, cluster, assemble }
+    }
+
+    /// Attach an input-normalization stage.
+    pub fn with_normalize(mut self, normalize: Box<dyn Normalize>) -> Pipeline {
+        self.normalize = Some(normalize);
+        self
+    }
+
+    /// Fit on `x` without artifact retention — the one-shot path every
+    /// [`crate::cluster::MethodKind::fit`] call takes.
+    pub fn fit(&self, env: &Env, x: &Mat) -> Result<FitResult, ScrbError> {
+        Ok(self.fit_cached(env, x, &mut ArtifactCache::disabled())?.result)
+    }
+
+    /// Fit on `x`, reusing (and feeding) `cache`: each stage's
+    /// fingerprint is looked up first, so a sweep re-runs only the stages
+    /// a config change invalidated. The stages must have been composed
+    /// from the same config `env` carries (true for
+    /// [`crate::cluster::MethodKind::pipeline`] compositions).
+    pub fn fit_cached(
+        &self,
+        env: &Env,
+        x: &Mat,
+        cache: &mut ArtifactCache,
+    ) -> Result<FittedPipeline, ScrbError> {
+        let mut timer = StageTimer::new();
+        // Input identity is only a cache key — skip the O(n·d) hashing
+        // pass entirely on one-shot (disabled-cache) fits. The XLA
+        // runtime's presence participates: under `Engine::Auto` several
+        // stages compute different (f32-artifact) results when a runtime
+        // is attached, so environments with and without one must never
+        // share artifacts.
+        let data_fp = if cache.is_enabled() {
+            Fingerprint::new("input")
+                .bool(env.xla.is_some())
+                .u64(mat_fingerprint(x))
+                .finish()
+        } else {
+            0
+        };
+
+        // normalize (optional). On a cache hit the artifact's originally
+        // measured timer is merged (here and for every later stage), so
+        // the output timer always reports the full standalone computation
+        // cost of the artifacts the fit is built from — sweeps reusing
+        // artifacts save wall-clock without distorting stage accounting.
+        let norm_art: Option<Arc<NormArtifact>> = match &self.normalize {
+            None => None,
+            Some(nz) => {
+                let fp = nz.fingerprint(data_fp);
+                let art = match cache.norm(fp) {
+                    Some(a) => a,
+                    None => {
+                        let a = Arc::new(nz.run(x, fp)?);
+                        cache.put_norm(a.clone());
+                        a
+                    }
+                };
+                timer.merge(&art.timer);
+                Some(art)
+            }
+        };
+        let (xn, input_fp): (&Mat, u64) = match &norm_art {
+            Some(a) => (&a.x, a.fingerprint),
+            None => (x, data_fp),
+        };
+
+        // featurize (some stages opt out of retention — see
+        // [`Featurize::cacheable`])
+        let f_fp = self.featurize.fingerprint(input_fp);
+        let cached = if self.featurize.cacheable() { cache.feature(f_fp) } else { None };
+        let feat = match cached {
+            Some(a) => a,
+            None => {
+                let a = Arc::new(self.featurize.run(env, DataSource::Matrix(xn), f_fp)?);
+                if self.featurize.cacheable() {
+                    cache.put_feature(a.clone());
+                }
+                a
+            }
+        };
+        timer.merge(&feat.timer);
+
+        let frame = norm_art.as_ref().and_then(|a| a.frame.clone());
+        self.finish(env, Some(xn), feat, frame, cache, timer)
+    }
+
+    /// Drive the embed → cluster → assemble tail over an
+    /// already-featurized artifact — the entry point the streaming fit
+    /// shares with the in-memory path (its featurization came from a
+    /// [`DataSource::Stream`], so there is no input matrix; transductive
+    /// assemblies are rejected with a typed error).
+    pub fn fit_features(
+        &self,
+        env: &Env,
+        feat: Arc<FeatureArtifact>,
+        cache: &mut ArtifactCache,
+    ) -> Result<FittedPipeline, ScrbError> {
+        let mut timer = StageTimer::new();
+        timer.merge(&feat.timer);
+        self.finish(env, None, feat, None, cache, timer)
+    }
+
+    /// Shared tail: embed, cluster, assemble.
+    fn finish(
+        &self,
+        env: &Env,
+        x: Option<&Mat>,
+        feat: Arc<FeatureArtifact>,
+        frame: Option<(Vec<f64>, Vec<f64>)>,
+        cache: &mut ArtifactCache,
+        mut timer: StageTimer,
+    ) -> Result<FittedPipeline, ScrbError> {
+        // embed
+        let e_fp = self.embed.fingerprint(feat.fingerprint);
+        let cached_emb = if self.embed.cacheable() { cache.embed(e_fp) } else { None };
+        let emb = match cached_emb {
+            Some(a) => a,
+            None => {
+                let a = Arc::new(self.embed.run(env, &feat, e_fp)?);
+                if self.embed.cacheable() {
+                    cache.put_embed(a.clone());
+                }
+                a
+            }
+        };
+        timer.merge(&emb.timer);
+
+        // cluster
+        let c_fp = self.cluster.fingerprint(emb.fingerprint);
+        let clu = match cache.cluster(c_fp) {
+            Some(a) => a,
+            None => {
+                let a = Arc::new(self.cluster.run(env, &emb, c_fp)?);
+                cache.put_cluster(a.clone());
+                a
+            }
+        };
+        timer.merge(&clu.timer);
+
+        // assemble the serving model
+        let model: Box<dyn FittedModel> = match self.assemble {
+            Assemble::Centroids => Box::new(CentroidModel::new(clu.centroids.clone())),
+            Assemble::ClassMeans => {
+                let x = x.ok_or_else(|| {
+                    ScrbError::unsupported(
+                        "class-mean model assembly needs the in-memory input matrix",
+                    )
+                })?;
+                Box::new(CentroidModel::from_labels(x, &clu.labels, clu.centroids.rows))
+            }
+            Assemble::ScRb => {
+                let mut m = assemble_scrb(env, &feat, &emb, &clu)?;
+                if m.norm.is_none() {
+                    if let Some((lo, span)) = frame {
+                        m.set_input_norm(lo, span);
+                    }
+                }
+                Box::new(m)
+            }
+        };
+
+        let output = ClusterOutput {
+            labels: clu.labels.clone(),
+            timer,
+            info: MethodInfo {
+                feature_dim: feat.feature_dim,
+                svd: emb.stats.clone(),
+                kappa: feat.kappa,
+                inertia: clu.inertia,
+            },
+        };
+        Ok(FittedPipeline {
+            features: feat,
+            embedding: emb,
+            clustering: clu,
+            result: FitResult { model, output },
+        })
+    }
+}
+
+/// Build the SC_RB serving model from pipeline artifacts — the one
+/// assembly routine shared by the in-memory and streaming drivers (both
+/// produce the same bytes from the same artifacts by construction).
+pub fn assemble_scrb(
+    env: &Env,
+    feat: &FeatureArtifact,
+    emb: &EmbedArtifact,
+    clu: &ClusterArtifact,
+) -> Result<ScRbModel, ScrbError> {
+    let codebook = feat.codebook.clone().ok_or_else(|| {
+        ScrbError::unsupported("SC_RB model assembly needs the featurize stage's RB codebook")
+    })?;
+    let proj = emb.proj.clone().ok_or_else(|| {
+        ScrbError::unsupported("SC_RB model assembly needs the embed stage's serving projection")
+    })?;
+    Ok(ScRbModel {
+        codebook,
+        kernel: env.cfg.kernel,
+        s: emb.s.clone(),
+        proj,
+        centroids: clu.centroids.clone(),
+        norm: feat.norm.clone(),
+    })
+}

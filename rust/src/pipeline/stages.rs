@@ -1,0 +1,421 @@
+//! Shared stage implementations: the normalize stages, the pass-through
+//! pieces, the generic degree-normalized SVD embed, and the K-means
+//! cluster stage.
+//!
+//! Method-specific featurize stages live next to their methods in
+//! `crate::cluster` (`RbFeaturize` in `sc_rb`, `RfFeaturize` in `sc_rf`,
+//! `NysFeaturize` in `sc_nys`, `LscFeaturize` in `sc_lsc`,
+//! `ExactFeaturize` in `sc_exact`); the composition table is
+//! [`crate::cluster::MethodKind::pipeline`].
+
+use super::artifact::{ClusterArtifact, EmbedArtifact, FeatureArtifact, FeatureMatrix, NormArtifact};
+use super::fingerprint::Fingerprint;
+use super::{Cluster, DataSource, Embed, Featurize, Normalize};
+use crate::cluster::sc_exact::SymOp;
+use crate::cluster::Env;
+use crate::config::{Engine, Solver};
+use crate::eigen::{svds, SvdResult, SvdsOpts};
+use crate::error::ScrbError;
+use crate::kmeans::{kmeans, AssignEngine, KmeansOpts, NativeAssign};
+use crate::linalg::Mat;
+use crate::util::timer::StageTimer;
+use std::sync::Arc;
+
+// ------------------------------------------------------------- normalize
+
+/// Min-max normalization into `[0, 1]` per feature, keeping the
+/// `(min, span)` frame — the preprocessing `scrb fit --data` applies, and
+/// the frame a serving model stores so out-of-sample batches are brought
+/// into the *fitted* coordinates rather than their own statistics. (A
+/// pipeline with `normalize: None` runs in the caller's frame — there is
+/// no separate identity stage.) The frame rule is the one definition in
+/// [`crate::data::dataset::minmax_params`].
+pub struct MinMaxNormalize;
+
+impl Normalize for MinMaxNormalize {
+    fn fingerprint(&self, data_fp: u64) -> u64 {
+        Fingerprint::new("normalize/minmax").u64(data_fp).finish()
+    }
+
+    fn run(&self, x: &Mat, fp: u64) -> Result<NormArtifact, ScrbError> {
+        let mut timer = StageTimer::new();
+        let (xn, lo, span) = timer.time("normalize", || {
+            let (lo, span) = crate::data::dataset::minmax_params(x);
+            let mut xn = x.clone();
+            for i in 0..xn.rows {
+                let row = xn.row_mut(i);
+                for j in 0..row.len() {
+                    row[j] = (row[j] - lo[j]) / span[j];
+                }
+            }
+            (xn, lo, span)
+        });
+        Ok(NormArtifact { fingerprint: fp, x: xn, frame: Some((lo, span)), timer })
+    }
+}
+
+// ------------------------------------------------------------- featurize
+
+/// Identity featurization: the input matrix *is* the feature matrix
+/// (plain K-means clusters raw coordinates).
+pub struct IdentityFeaturize;
+
+impl Featurize for IdentityFeaturize {
+    fn fingerprint(&self, input_fp: u64) -> u64 {
+        Fingerprint::new("featurize/identity").u64(input_fp).finish()
+    }
+
+    fn run(&self, _env: &Env, data: DataSource<'_>, fp: u64) -> Result<FeatureArtifact, ScrbError> {
+        let x = data.matrix("K-means")?;
+        Ok(FeatureArtifact {
+            fingerprint: fp,
+            feature_dim: x.cols,
+            z: FeatureMatrix::Dense(Arc::new(x.clone())),
+            codebook: None,
+            kappa: None,
+            norm: None,
+            stream_labels: None,
+            timer: StageTimer::new(),
+        })
+    }
+
+    /// The artifact is a plain copy of the input with no reuse value —
+    /// retaining it in a sweep cache would pin an extra N×d copy.
+    fn cacheable(&self) -> bool {
+        false
+    }
+}
+
+// ----------------------------------------------------------------- embed
+
+/// Pass-through embed: the dense feature rows are clustered as-is (plain
+/// K-means on the input, KK_RF on the RF features, KK_RS on the whitened
+/// Nyström features).
+pub struct PassEmbed;
+
+impl Embed for PassEmbed {
+    fn fingerprint(&self, upstream: u64) -> u64 {
+        Fingerprint::new("embed/pass").u64(upstream).finish()
+    }
+
+    fn run(&self, _env: &Env, feat: &FeatureArtifact, fp: u64) -> Result<EmbedArtifact, ScrbError> {
+        match &feat.z {
+            // shares the upstream dense features (Arc clone — no copy)
+            FeatureMatrix::Dense(m) => Ok(EmbedArtifact {
+                fingerprint: fp,
+                s: Vec::new(),
+                u: m.clone(),
+                proj: None,
+                stats: None,
+                timer: StageTimer::new(),
+            }),
+            _ => Err(ScrbError::unsupported(
+                "pass-through embedding needs dense features (sparse substrates embed spectrally)",
+            )),
+        }
+    }
+
+    /// Re-running a pass-through is an `Arc` clone — retaining its
+    /// artifact buys nothing, and when the upstream featurization opted
+    /// out of caching it would pin the shared matrix in the cache.
+    fn cacheable(&self) -> bool {
+        false
+    }
+}
+
+/// How (and whether) an [`SvdEmbed`] degree-normalizes its features
+/// before the SVD.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DegreeMode {
+    /// No degree normalization (SV_RF approximates W, not L; LSC bakes
+    /// its Λ^{−1/2} into the featurize stage).
+    None,
+    /// Dense Ẑ = D^{−1/2}Z with degrees d = Z(Zᵀ1) clamped away from
+    /// zero (RF features are signed, so approximate degrees can dip
+    /// slightly negative at small R). SC_RF and SC_Nys.
+    DenseClamped,
+}
+
+impl DegreeMode {
+    fn tag(&self) -> &'static str {
+        match self {
+            DegreeMode::None => "none",
+            DegreeMode::DenseClamped => "dense-clamped",
+        }
+    }
+}
+
+/// Degree-normalize a dense feature matrix in place: Ẑ = D^{−1/2}Z with
+/// d = Z(Zᵀ1) clamped away from zero.
+pub fn normalize_dense_by_degree(z: &mut Mat) {
+    let ones = vec![1.0; z.rows];
+    let col_sums = z.t_matvec(&ones);
+    let deg = z.matvec(&col_sums);
+    let floor = 1e-8 * deg.iter().map(|d| d.abs()).fold(0.0, f64::max).max(1e-12);
+    for i in 0..z.rows {
+        let d = deg[i].max(floor);
+        let s = 1.0 / d.sqrt();
+        for v in z.row_mut(i) {
+            *v *= s;
+        }
+    }
+}
+
+/// The generic spectral embed (Algorithm 2 steps 2–3 for the dense/sparse
+/// baselines): optional degree normalization, iterative SVD, then the
+/// configured post-processing (row normalization for the SC family,
+/// Σ-scaled scores for SV_RF). SC_RB's substrate-aware variant with the
+/// serving projection is [`crate::cluster::sc_rb::RbEmbed`].
+pub struct SvdEmbed {
+    /// Number of singular triplets (the embedding width).
+    pub k: usize,
+    /// Which iterative solver backs the SVD.
+    pub solver: Solver,
+    /// Solver convergence tolerance.
+    pub tol: f64,
+    /// Solver matvec budget.
+    pub max_matvecs: usize,
+    /// Full solver seed (method seed ⊕ per-method salt, resolved at
+    /// composition time).
+    pub seed: u64,
+    /// Degree normalization applied before the SVD.
+    pub degree: DegreeMode,
+    /// Row-normalize the embedding (Algorithm 2 step 4).
+    pub row_normalize: bool,
+    /// Scale column j of U by σ_j (kernel-K-means PCA scores, SV_RF).
+    pub scale_scores: bool,
+    /// Treat the dense feature matrix as the symmetric operator S itself
+    /// (exact SC): the solver runs on S with `apply == apply_t`.
+    pub symmetric: bool,
+}
+
+impl Embed for SvdEmbed {
+    fn fingerprint(&self, upstream: u64) -> u64 {
+        Fingerprint::new("embed/svd")
+            .u64(upstream)
+            .usize(self.k)
+            .str(self.solver.name())
+            .f64(self.tol)
+            .usize(self.max_matvecs)
+            .u64(self.seed)
+            .str(self.degree.tag())
+            .bool(self.row_normalize)
+            .bool(self.scale_scores)
+            .bool(self.symmetric)
+            .finish()
+    }
+
+    fn run(&self, _env: &Env, feat: &FeatureArtifact, fp: u64) -> Result<EmbedArtifact, ScrbError> {
+        let mut timer = StageTimer::new();
+        let mut sopts = SvdsOpts::new(self.k, self.solver);
+        sopts.tol = self.tol;
+        sopts.max_matvecs = self.max_matvecs;
+        let svd = match &feat.z {
+            FeatureMatrix::Dense(m) if self.degree == DegreeMode::DenseClamped => {
+                let zhat = timer.time("degrees", || {
+                    let mut z = (**m).clone();
+                    normalize_dense_by_degree(&mut z);
+                    z
+                });
+                timer.time("svd", || svds(&zhat, &sopts, self.seed))
+            }
+            FeatureMatrix::Dense(m) if self.symmetric => {
+                let op = SymOp(&**m);
+                timer.time("svd", || svds(&op, &sopts, self.seed))
+            }
+            FeatureMatrix::Dense(_) | FeatureMatrix::Sparse(_)
+                if self.degree == DegreeMode::None && !self.symmetric =>
+            {
+                // substrate-agnostic: both dense and CSR features plug in
+                // through the solver-operator view
+                timer.time("svd", || svds(feat.z.svd_op(), &sopts, self.seed))
+            }
+            _ => {
+                return Err(ScrbError::unsupported(
+                    "this embed configuration does not apply to the featurized substrate \
+                     (RB substrates embed through the RB embed stage)",
+                ))
+            }
+        };
+        let SvdResult { mut u, s, stats, .. } = svd;
+        if self.scale_scores {
+            for j in 0..s.len() {
+                for i in 0..u.rows {
+                    u.set(i, j, u.at(i, j) * s[j]);
+                }
+            }
+        }
+        if self.row_normalize {
+            u.normalize_rows();
+        }
+        Ok(EmbedArtifact {
+            fingerprint: fp,
+            s,
+            u: Arc::new(u),
+            proj: None,
+            stats: Some(stats),
+            timer,
+        })
+    }
+}
+
+// --------------------------------------------------------------- cluster
+
+/// K-means over the embedding rows (Algorithm 2 step 5) — the one cluster
+/// stage every method shares.
+#[derive(Clone)]
+pub struct KmeansCluster {
+    /// Number of clusters K.
+    pub k: usize,
+    /// Replicates (best inertia wins).
+    pub replicates: usize,
+    /// Lloyd iteration cap per replicate.
+    pub max_iters: usize,
+    /// Relative inertia-improvement stopping tolerance.
+    pub tol: f64,
+    /// RNG seed for initialization.
+    pub seed: u64,
+    /// Mini-batch size; `None` = full-batch Lloyd (the bit-exactness
+    /// regime). The streaming driver engages this above its row
+    /// threshold.
+    pub batch: Option<usize>,
+    /// Re-derive the final labels with the native f64 nearest-centroid
+    /// scan (the serving argmin) instead of keeping the engine's
+    /// assignment — the train-predict == fit-labels contract for methods
+    /// whose serving model predicts in this same space (SC_RB, K-means).
+    pub relabel: bool,
+    /// Assignment engine selector the environment will honour (part of
+    /// the fingerprint: an XLA assignment is not bit-identical to the
+    /// native one).
+    pub engine: Engine,
+}
+
+impl KmeansCluster {
+    /// Stage configured from a pipeline config (full-batch, native
+    /// labels).
+    pub fn from_cfg(cfg: &crate::config::PipelineConfig, k: usize) -> KmeansCluster {
+        KmeansCluster {
+            k,
+            replicates: cfg.kmeans_replicates,
+            max_iters: cfg.kmeans_max_iters,
+            tol: 1e-6,
+            seed: cfg.seed,
+            batch: None,
+            relabel: false,
+            engine: cfg.engine,
+        }
+    }
+
+    /// Enable the native relabel pass (see [`KmeansCluster::relabel`]).
+    pub fn with_relabel(mut self) -> KmeansCluster {
+        self.relabel = true;
+        self
+    }
+
+    /// Set the mini-batch size (streaming huge-N path).
+    pub fn with_batch(mut self, batch: Option<usize>) -> KmeansCluster {
+        self.batch = batch;
+        self
+    }
+}
+
+impl Cluster for KmeansCluster {
+    fn fingerprint(&self, upstream: u64) -> u64 {
+        Fingerprint::new("cluster/kmeans")
+            .u64(upstream)
+            .usize(self.k)
+            .usize(self.replicates)
+            .usize(self.max_iters)
+            .f64(self.tol)
+            .u64(self.seed)
+            .usize(self.batch.map(|b| b + 1).unwrap_or(0))
+            .bool(self.relabel)
+            .str(self.engine.name())
+            .finish()
+    }
+
+    fn run(&self, env: &Env, emb: &EmbedArtifact, fp: u64) -> Result<ClusterArtifact, ScrbError> {
+        let mut timer = StageTimer::new();
+        let engine = env.assign_engine();
+        let opts = KmeansOpts {
+            k: self.k,
+            replicates: self.replicates,
+            max_iters: self.max_iters,
+            tol: self.tol,
+            seed: self.seed,
+            batch: self.batch,
+        };
+        let km = timer.time("kmeans", || kmeans(&emb.u, &opts, engine.as_ref()));
+        let labels: Vec<usize> = if self.relabel {
+            // the serving argmin (native f64 nearest-centroid): identical
+            // bits to `predict` on the training rows, for every engine
+            timer.time("embed", || {
+                let (lab, _) = NativeAssign.assign(&emb.u, &km.centroids);
+                lab.into_iter().map(|l| l as usize).collect()
+            })
+        } else {
+            km.labels.iter().map(|&l| l as usize).collect()
+        };
+        Ok(ClusterArtifact {
+            fingerprint: fp,
+            labels,
+            centroids: km.centroids,
+            inertia: km.inertia,
+            timer,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minmax_stage_scales_to_unit_box() {
+        let x = Mat::from_vec(3, 2, vec![0.0, 10.0, 5.0, 20.0, 10.0, 30.0]);
+        let fp = MinMaxNormalize.fingerprint(1);
+        let art = MinMaxNormalize.run(&x, fp).unwrap();
+        assert_eq!(art.x.row(0), &[0.0, 0.0]);
+        assert_eq!(art.x.row(2), &[1.0, 1.0]);
+        let (lo, span) = art.frame.unwrap();
+        assert_eq!(lo, vec![0.0, 10.0]);
+        assert_eq!(span, vec![10.0, 20.0]);
+        // one frame rule: the stage agrees with the Dataset preprocessing
+        let ds_frame = crate::data::dataset::minmax_params(&x);
+        assert_eq!((lo, span), ds_frame);
+    }
+
+    #[test]
+    fn normalize_handles_signed_features() {
+        let mut z = Mat::from_vec(3, 2, vec![0.5, -0.5, 0.4, 0.3, -0.2, 0.6]);
+        normalize_dense_by_degree(&mut z);
+        assert!(z.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn fingerprints_cover_every_knob() {
+        let base = KmeansCluster {
+            k: 3,
+            replicates: 2,
+            max_iters: 10,
+            tol: 1e-6,
+            seed: 1,
+            batch: None,
+            relabel: false,
+            engine: Engine::Native,
+        };
+        let fp0 = base.fingerprint(9);
+        let variants = [
+            KmeansCluster { k: 4, ..base.clone() },
+            KmeansCluster { replicates: 3, ..base.clone() },
+            KmeansCluster { seed: 2, ..base.clone() },
+            KmeansCluster { batch: Some(0), ..base.clone() },
+            KmeansCluster { relabel: true, ..base.clone() },
+            KmeansCluster { engine: Engine::Xla, ..base.clone() },
+        ];
+        for v in &variants {
+            assert_ne!(v.fingerprint(9), fp0);
+        }
+        assert_ne!(base.fingerprint(10), fp0, "upstream identity participates");
+    }
+}

@@ -1,37 +1,32 @@
-//! The two-pass streaming fit: Algorithm 2 end-to-end without ever
-//! materializing the N×d input.
+//! The streaming fit: Algorithm 2 end-to-end without ever materializing
+//! the N×d input — driven through the **same** pipeline stages as the
+//! in-memory fit.
 //!
-//! Pass 1 (`stream_stats`) scans the chunks once for the min/span input
-//! frame, the row count, and the label census. Pass 2 (`rb_features`)
-//! rewinds and featurizes chunk by chunk into the [`BlockEllRb`]
-//! substrate. Everything after that — implicit degrees, the iterative
-//! SVD, the serving projection, K-means on the serving embedding — runs
-//! on O(N·R·4 B + N·K·8 B) state, never on the input.
+//! The featurize stage ([`crate::cluster::sc_rb::RbFeaturize`]) is fed a
+//! [`crate::pipeline::DataSource::Stream`]: pass 1 accumulates the
+//! min/span frame (bit-equal to the dense `minmax_params`) plus the
+//! row/label census, pass 2 densifies one `chunk_rows×d` scratch at a
+//! time into the [`crate::sparse::BlockEllRb`] substrate. Everything
+//! after that — implicit degrees, the iterative SVD, the serving
+//! projection, K-means on the serving embedding — is the *identical*
+//! embed → cluster → assemble tail the in-memory fit drives
+//! ([`crate::pipeline::Pipeline::fit_features`]), over block kernels
+//! that are bit-identical to the monolithic ones.
 //!
 //! **Bit-exactness:** on the same data and seed, the returned model
 //! serializes byte-identically to the in-memory path (`load_libsvm` →
-//! min-max normalize → [`crate::cluster::sc_rb::fit`] → store the frame),
-//! and the training labels match. Every stage is arranged for it: the
-//! streamed stats equal the dense `minmax_params` exactly, the chunked
-//! phase-1 dictionaries assign the batch path's first-seen bin ids, the
-//! block substrate's kernels are bit-identical to the monolithic
-//! [`crate::sparse::EllRb`], and the embedding/K-means stages reuse the
-//! very same code paths.
+//! min-max normalize → SC_RB fit → store the frame), and the training
+//! labels match — now a property of the shared driver rather than of two
+//! hand-synchronized functions (`tests/stream.rs`).
 
-use super::chunk::SparseChunk;
-use super::featurize::StreamFeaturizer;
 use super::reader::ChunkReader;
-use super::stats::stats_pass;
-use crate::cluster::{ClusterOutput, Env, MethodInfo};
+use crate::cluster::sc_rb::{scrb_stages, RbFeaturize};
+use crate::cluster::{ClusterOutput, Env};
 use crate::data::libsvm::compact_labels;
-use crate::eigen::{svds_ws, SolverWorkspace, SvdResult, SvdsOpts};
 use crate::error::ScrbError;
-use crate::kmeans::{kmeans, AssignEngine, NativeAssign};
-use crate::linalg::Mat;
-use crate::model::ScRbModel;
-use crate::sparse::BlockEllRb;
-use crate::util::threads::parallel_rows_mut;
-use crate::util::timer::StageTimer;
+use crate::model::{FitResult, FittedModel, ScRbModel};
+use crate::pipeline::{ArtifactCache, DataSource, Featurize, Fingerprint};
+use std::sync::Arc;
 
 /// Streaming-fit knobs (the reader's `chunk_rows` is the other one).
 #[derive(Clone, Debug)]
@@ -80,181 +75,66 @@ pub struct StreamFit {
     pub d: usize,
 }
 
-/// Fit SC_RB (Algorithm 2) out-of-core: two chunked passes over `reader`,
-/// bounded resident input memory, bit-identical model to the in-memory
-/// fit on the same data and seed.
+/// Fit SC_RB (Algorithm 2) out-of-core: the two-pass chunked featurize
+/// stage over `reader`, then the shared pipeline tail. Bounded resident
+/// input memory; bit-identical model to the in-memory fit on the same
+/// data and seed.
 pub fn fit_streaming(
     env: &Env,
     reader: &mut dyn ChunkReader,
     opts: &StreamOpts,
 ) -> Result<StreamFit, ScrbError> {
     let cfg = &env.cfg;
-    let mut timer = StageTimer::new();
-    let mut chunk = SparseChunk::new();
-
-    // Pass 1: min/span frame + row and class census.
-    let stats = timer.time("stream_stats", || stats_pass(reader, &mut chunk))?;
-    if stats.n == 0 {
-        return Err(ScrbError::invalid_input("cannot fit on an empty dataset"));
-    }
-    let n = stats.n;
-    let d = reader.dim();
-    let k = opts.k.unwrap_or_else(|| stats.classes.len().max(2));
-    if k == 0 {
+    if let Some(0) = opts.k {
         return Err(ScrbError::config("streaming fit needs k >= 1 clusters"));
     }
-    let (lo, span) = stats.finalize(d);
-
-    // Pass 2: block-wise RB featurization in the fitted frame.
-    reader.reset()?;
-    let mut fz = StreamFeaturizer::new(
-        cfg.r,
-        d,
-        cfg.kernel.sigma(),
-        cfg.seed,
-        lo.clone(),
-        span.clone(),
-        opts.block_rows,
-        n,
-    );
-    timer.time("rb_features", || -> Result<(), ScrbError> {
-        while reader.next_chunk(&mut chunk)? {
-            // a column beyond the stats-pass dimension means the stream
-            // changed between passes — surface the typed error here
-            // rather than an out-of-bounds panic inside the featurizer
-            if reader.dim() > d {
-                return Err(ScrbError::invalid_input(format!(
-                    "stream changed between passes: dimension grew from {d} to {}",
-                    reader.dim()
-                )));
-            }
-            fz.push_chunk(&chunk);
-        }
-        Ok(())
-    })?;
-    if fz.rows() != n {
-        return Err(ScrbError::invalid_input(format!(
-            "stream changed between passes: {} rows in the stats pass, {} in the featurize pass",
-            n,
-            fz.rows()
-        )));
+    // The invariant lives with the driver, not just its CLI wrapper: a
+    // streamed fit has no data matrix to run bandwidth selection on, so
+    // silently using a default σ would bake a wrong bandwidth into a
+    // persisted model (the same rule `PipelineConfig::validate` enforces
+    // for configs carrying a stream section).
+    if !cfg.sigma_explicit {
+        return Err(ScrbError::config(
+            "a streamed fit cannot run the in-memory bandwidth selection; pin the kernel \
+             bandwidth explicitly (builder .sigma()/.kernel(), or --sigma at the CLI)",
+        ));
     }
-    let feats = fz.finish()?;
-    let feature_dim = feats.codebook.dim;
-    let kappa = feats.kappa;
-    let raw_labels = feats.labels;
-    let codebook = feats.codebook;
 
-    // Implicit degrees + normalization (Eq. 6), block-iterated.
-    let zhat = timer.time("degrees", || {
-        let mut z = feats.z;
-        let deg = z.implicit_degrees();
-        z.normalize_by_degree(&deg);
-        z
-    });
+    // Featurize from the stream source (two chunked passes). The stream
+    // has no stable in-memory identity to fingerprint, so streamed
+    // featurizations are never cache-shared; the fingerprint still chains
+    // the config slice for the downstream stages.
+    let featurize = RbFeaturize { r: cfg.r, sigma: cfg.kernel.sigma(), seed: cfg.seed };
+    let fp = featurize.fingerprint(Fingerprint::new("data/stream").finish());
+    // explicit reborrow: the data source borrows the reader only for the
+    // featurize call, so the dimension census below can still read it
+    let feat =
+        Arc::new(featurize.run(env, DataSource::Stream { reader: &mut *reader, opts }, fp)?);
+    let d = reader.dim();
+    let n = feat.z.nrows();
 
-    // Top-K singular triplets — same solver, workspace, and seed
-    // derivation as the batch fit; the block substrate's products are
-    // bit-identical to the monolithic one's, so the whole trajectory is.
-    let mut sopts = SvdsOpts::new(k, cfg.solver);
-    sopts.tol = cfg.svd_tol;
-    sopts.max_matvecs = cfg.svd_max_iters;
-    let mut solver_ws = SolverWorkspace::new();
-    let svd = timer.time("svd", || svds_ws(&zhat, &sopts, cfg.seed ^ 0x5bd5, &mut solver_ws));
-    let SvdResult { s, v, stats: svd_stats, .. } = svd;
-
-    // Serving projection P = V·Σ⁻¹/√R — identical arithmetic to the
-    // batch fit (near-zero σ directions dropped, not amplified).
-    let proj = timer.time("projection", || {
-        let mut p = v;
-        let s0 = s.first().copied().unwrap_or(0.0).max(1e-300);
-        let rsqrt = 1.0 / (cfg.r as f64).sqrt();
-        let col_scale: Vec<f64> = s
-            .iter()
-            .map(|&sj| if sj > 1e-12 * s0 { rsqrt / sj } else { 0.0 })
-            .collect();
-        for i in 0..p.rows {
-            for (pv, cs) in p.row_mut(i).iter_mut().zip(col_scale.iter()) {
-                *pv *= *cs;
-            }
-        }
-        p
-    });
-
-    let mut model = ScRbModel {
-        codebook,
-        kernel: cfg.kernel,
-        s,
-        proj,
-        centroids: Mat::zeros(0, 0),
-        norm: Some((lo, span)),
-    };
-
-    // Training embedding straight from the substrate's bin columns
-    // (training bins always hit the codebook), row-for-row bit-identical
-    // to `model.transform` on the densified input.
-    let emb = timer.time("embed", || embed_blocks(&zhat, &model));
-
-    // K-means on the serving embedding; huge N switches to mini-batch.
-    let engine = env.assign_engine();
-    let mut kopts = env.kmeans_opts(k);
-    if n >= opts.minibatch_threshold {
-        kopts.batch = Some(opts.minibatch_size.min(n));
-    }
-    let km = timer.time("kmeans", || kmeans(&emb, &kopts, engine.as_ref()));
-    model.centroids = km.centroids;
-    // Final labels via the same f64 argmin the serving path uses — the
-    // train-predict == fit-labels contract, exactly as the batch fit.
-    let labels: Vec<usize> = timer.time("embed", || {
-        let (lab, _) = NativeAssign.assign(&emb, &model.centroids);
-        lab.into_iter().map(|l| l as usize).collect()
-    });
-
+    // K: explicit override wins; otherwise the stream's label census.
+    let raw_labels = feat.stream_labels.clone().unwrap_or_default();
     let (y, k_true) = compact_labels(&raw_labels);
-    let output = ClusterOutput {
-        labels,
-        timer,
-        info: MethodInfo {
-            feature_dim,
-            svd: Some(svd_stats),
-            kappa: Some(kappa),
-            inertia: km.inertia,
-        },
-    };
-    Ok(StreamFit { model, output, y, k_true, n, d })
-}
+    let k = opts.k.unwrap_or_else(|| k_true.max(2));
 
-/// Serving embedding of every training row, computed from the substrate's
-/// own column indices: row i's occupied bins are exactly its R indices,
-/// so the gather-sum + row normalization below performs the identical
-/// float sequence [`ScRbModel::embed_into`] would after a codebook
-/// lookup.
-fn embed_blocks(z: &BlockEllRb, model: &ScRbModel) -> Mat {
-    let k = model.embed_dim();
-    let mut m = Mat::zeros(z.rows, k);
-    if z.rows == 0 || k == 0 {
-        return m;
-    }
-    for (blk, w) in z.blocks.iter().zip(z.row_offsets.windows(2)) {
-        let out = &mut m.data[w[0] * k..w[1] * k];
-        parallel_rows_mut(out, k, |row0, chunk| {
-            for (dr, e) in chunk.chunks_mut(k).enumerate() {
-                e.fill(0.0);
-                for &c in blk.row_indices(row0 + dr) {
-                    let p = model.proj.row(c as usize);
-                    for (ej, pj) in e.iter_mut().zip(p.iter()) {
-                        *ej += *pj;
-                    }
-                }
-                let norm = e.iter().map(|v| v * v).sum::<f64>().sqrt();
-                if norm > 1e-300 {
-                    let inv = 1.0 / norm;
-                    for v in e.iter_mut() {
-                        *v *= inv;
-                    }
-                }
-            }
-        });
-    }
-    m
+    // Huge N switches the final K-means to the mini-batch path.
+    let batch =
+        if n >= opts.minibatch_threshold { Some(opts.minibatch_size.min(n)) } else { None };
+
+    // The shared embed → cluster → assemble tail (one driver with the
+    // in-memory fit; the streamed substrate's kernels are bit-identical).
+    let pipeline = scrb_stages(cfg, k, batch);
+    let fitted = pipeline.fit_features(env, feat, &mut ArtifactCache::disabled())?;
+
+    // Recover the concrete model from the shared assembly step (built
+    // exactly once; `Assemble::ScRb` always produces an `ScRbModel`).
+    let FitResult { model, output } = fitted.result;
+    let model = model
+        .into_any()
+        .downcast::<ScRbModel>()
+        .map(|m| *m)
+        .map_err(|_| ScrbError::unsupported("SC_RB pipeline must assemble an ScRbModel"))?;
+
+    Ok(StreamFit { model, output, y, k_true, n, d })
 }

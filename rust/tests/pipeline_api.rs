@@ -1,0 +1,397 @@
+//! Pipeline-API acceptance (ISSUE 5):
+//!
+//! - **pipeline ↔ legacy equivalence**: every `MethodKind` fitted through
+//!   the new stage composition reproduces the pre-redesign inline
+//!   scaffolding bit-exactly on seeded synthetic data — each legacy flow
+//!   is replicated here, step for step, from the deleted per-method
+//!   `fit` bodies (labels equal; for SC_RB, serialized model bytes
+//!   equal);
+//! - **cache correctness**: a sweep through a shared [`ArtifactCache`]
+//!   produces bit-identical results to the same sweep with caching
+//!   disabled, while actually hitting the cache;
+//! - **k-sweep reuse**: with a pinned `embed_dim`, a k-sweep reuses the
+//!   featurize *and* embed artifacts (only K-means re-runs);
+//! - the streaming/in-memory single-driver contract is pinned separately
+//!   in `tests/stream.rs` (model bytes equal).
+
+use scrb::cluster::sc_exact::SymOp;
+use scrb::cluster::sc_nys::kernel_block_env;
+use scrb::cluster::sc_rf::rf_matrix;
+use scrb::cluster::{Env, MethodKind};
+use scrb::config::{Engine, Kernel, PipelineConfig, Solver};
+use scrb::eigen::{svds, svds_ws, SolverWorkspace, SvdsOpts};
+use scrb::kernels::kernel_matrix;
+use scrb::kmeans::{kmeans, AssignEngine, KmeansOpts, NativeAssign};
+use scrb::linalg::{cholesky_jittered, whiten_rows, Mat};
+use scrb::model::{FittedModel, ScRbModel};
+use scrb::pipeline::{normalize_dense_by_degree, ArtifactCache};
+use scrb::rb::rb_features_with_codebook;
+use scrb::util::rng::Pcg;
+
+fn test_cfg() -> PipelineConfig {
+    PipelineConfig::builder()
+        .k(3)
+        .r(24)
+        .kernel(Kernel::Gaussian { sigma: 0.6 })
+        .engine(Engine::Native)
+        .kmeans_replicates(2)
+        .seed(42)
+        .build()
+}
+
+fn test_data() -> Mat {
+    scrb::data::synth::gaussian_blobs(180, 4, 3, 8.0, 11).x
+}
+
+fn kopts(cfg: &PipelineConfig) -> KmeansOpts {
+    KmeansOpts {
+        k: cfg.k,
+        replicates: cfg.kmeans_replicates,
+        max_iters: cfg.kmeans_max_iters,
+        tol: 1e-6,
+        seed: cfg.seed,
+        batch: None,
+    }
+}
+
+fn sopts(cfg: &PipelineConfig) -> SvdsOpts {
+    let mut o = SvdsOpts::new(cfg.k, cfg.solver);
+    o.tol = cfg.svd_tol;
+    o.max_matvecs = cfg.svd_max_iters;
+    o
+}
+
+fn as_usize(labels: Vec<u32>) -> Vec<usize> {
+    labels.into_iter().map(|l| l as usize).collect()
+}
+
+/// The pre-redesign inline flow of each method, replicated from the old
+/// per-method `fit` bodies (native engine, no XLA). Returns the final
+/// training labels.
+fn legacy_labels(kind: MethodKind, cfg: &PipelineConfig, x: &Mat) -> Vec<usize> {
+    let env = Env::new(cfg.clone());
+    match kind {
+        MethodKind::KMeans => {
+            let km = kmeans(x, &kopts(cfg), &NativeAssign);
+            // legacy relabeled through the model's native assignment
+            let (lab, _) = NativeAssign.assign(x, &km.centroids);
+            as_usize(lab)
+        }
+        MethodKind::ScExact => {
+            let w = kernel_matrix(cfg.kernel, x);
+            let n = w.rows;
+            let mut scale = vec![0.0; n];
+            for i in 0..n {
+                let d: f64 = w.row(i).iter().sum();
+                scale[i] = if d > 1e-300 { 1.0 / d.sqrt() } else { 0.0 };
+            }
+            let mut s = w;
+            for i in 0..n {
+                let si = scale[i];
+                for j in 0..n {
+                    s.set(i, j, si * s.at(i, j) * scale[j]);
+                }
+            }
+            let op = SymOp(&s);
+            let svd = svds(&op, &sopts(cfg), cfg.seed ^ 0xe8ac7);
+            let mut u = svd.u;
+            u.normalize_rows();
+            as_usize(kmeans(&u, &kopts(cfg), &NativeAssign).labels)
+        }
+        MethodKind::KkRs => {
+            let m = cfg.r.min(x.rows);
+            let mut rng = Pcg::new(cfg.seed, 0x4b72);
+            let idx = rng.sample_indices(x.rows, m);
+            let landmarks = x.select_rows(&idx);
+            let c = kernel_block_env(&env, x, &landmarks);
+            let w11 = kernel_block_env(&env, &landmarks, &landmarks);
+            let l = cholesky_jittered(&w11);
+            let z = whiten_rows(&c, &l);
+            as_usize(kmeans(&z, &kopts(cfg), &NativeAssign).labels)
+        }
+        MethodKind::KkRf => {
+            let z = rf_matrix(&env, x);
+            as_usize(kmeans(&z, &kopts(cfg), &NativeAssign).labels)
+        }
+        MethodKind::SvRf => {
+            let z = rf_matrix(&env, x);
+            let svd = svds(&z, &sopts(cfg), cfg.seed ^ 0x57f5);
+            let mut scores = svd.u;
+            for j in 0..svd.s.len() {
+                for i in 0..scores.rows {
+                    scores.set(i, j, scores.at(i, j) * svd.s[j]);
+                }
+            }
+            as_usize(kmeans(&scores, &kopts(cfg), &NativeAssign).labels)
+        }
+        MethodKind::ScLsc => {
+            let p = cfg.r.min(x.rows);
+            let s_near = scrb::cluster::sc_lsc::S_NEAREST.min(p);
+            let landmarks = {
+                let mut rng = Pcg::new(cfg.seed, 0x15c0);
+                let sub = (10 * p).min(x.rows);
+                let idx = rng.sample_indices(x.rows, sub);
+                let xs = x.select_rows(&idx);
+                let opts =
+                    KmeansOpts { k: p, replicates: 1, max_iters: 10, ..KmeansOpts::new(p) };
+                kmeans(&xs, &opts, &NativeAssign).centroids
+            };
+            let a = {
+                let n = x.rows;
+                let mut rows: Vec<Vec<(u32, f64)>> = Vec::with_capacity(n);
+                for i in 0..n {
+                    let xi = x.row(i);
+                    let mut vals: Vec<(u32, f64)> = (0..p)
+                        .map(|l| (l as u32, cfg.kernel.eval(xi, landmarks.row(l))))
+                        .collect();
+                    vals.sort_by(|u, v| v.1.partial_cmp(&u.1).unwrap());
+                    vals.truncate(s_near);
+                    let sum: f64 = vals.iter().map(|(_, w)| w).sum();
+                    if sum > 1e-300 {
+                        for e in vals.iter_mut() {
+                            e.1 /= sum;
+                        }
+                    }
+                    rows.push(vals);
+                }
+                scrb::sparse::Csr::from_rows(n, p, rows)
+            };
+            let lam = a.col_sums();
+            let mut ahat = a;
+            let scale: Vec<f64> =
+                lam.iter().map(|&l| if l > 1e-300 { 1.0 / l.sqrt() } else { 0.0 }).collect();
+            for e in 0..ahat.data.len() {
+                ahat.data[e] *= scale[ahat.indices[e] as usize];
+            }
+            let svd = svds(&ahat, &sopts(cfg), cfg.seed ^ 0x15ce);
+            let mut u = svd.u;
+            u.normalize_rows();
+            as_usize(kmeans(&u, &kopts(cfg), &NativeAssign).labels)
+        }
+        MethodKind::ScNys => {
+            let m = cfg.r.min(x.rows);
+            let mut rng = Pcg::new(cfg.seed, 0x4e79);
+            let idx = rng.sample_indices(x.rows, m);
+            let landmarks = x.select_rows(&idx);
+            let c = kernel_block_env(&env, x, &landmarks);
+            let w11 = kernel_block_env(&env, &landmarks, &landmarks);
+            let l = cholesky_jittered(&w11);
+            let mut z = whiten_rows(&c, &l);
+            normalize_dense_by_degree(&mut z);
+            let svd = svds(&z, &sopts(cfg), cfg.seed ^ 0x4ce5);
+            let mut u = svd.u;
+            u.normalize_rows();
+            as_usize(kmeans(&u, &kopts(cfg), &NativeAssign).labels)
+        }
+        MethodKind::ScRf => {
+            let mut z = rf_matrix(&env, x);
+            normalize_dense_by_degree(&mut z);
+            let svd = svds(&z, &sopts(cfg), cfg.seed ^ 0x5cf5);
+            let mut u = svd.u;
+            u.normalize_rows();
+            as_usize(kmeans(&u, &kopts(cfg), &NativeAssign).labels)
+        }
+        MethodKind::ScRb => legacy_scrb(cfg, x).1,
+    }
+}
+
+/// The pre-redesign SC_RB fit (the old `sc_rb::fit` body, batch path):
+/// RB features + codebook, implicit degrees, SVD, projection fold,
+/// embedding through the serving model's own transform, K-means, native
+/// relabel. Returns (serialized model bytes, labels).
+fn legacy_scrb(cfg: &PipelineConfig, x: &Mat) -> (Vec<u8>, Vec<usize>) {
+    let (rb, codebook) = rb_features_with_codebook(x, cfg.r, cfg.kernel.sigma(), cfg.seed);
+    let mut zhat = rb.z;
+    let d = zhat.implicit_degrees();
+    zhat.normalize_by_degree(&d);
+    let mut ws = SolverWorkspace::new();
+    let svd = svds_ws(&zhat, &sopts(cfg), cfg.seed ^ 0x5bd5, &mut ws);
+    let (s, v) = (svd.s, svd.v);
+    let mut proj = v;
+    let s0 = s.first().copied().unwrap_or(0.0).max(1e-300);
+    let rsqrt = 1.0 / (cfg.r as f64).sqrt();
+    let col_scale: Vec<f64> =
+        s.iter().map(|&sj| if sj > 1e-12 * s0 { rsqrt / sj } else { 0.0 }).collect();
+    for i in 0..proj.rows {
+        for (pv, cs) in proj.row_mut(i).iter_mut().zip(col_scale.iter()) {
+            *pv *= *cs;
+        }
+    }
+    let mut model = ScRbModel {
+        codebook,
+        kernel: cfg.kernel,
+        s,
+        proj,
+        centroids: Mat::zeros(0, 0),
+        norm: None,
+    };
+    let emb = model.transform(x).unwrap();
+    let km = kmeans(&emb, &kopts(cfg), &NativeAssign);
+    model.centroids = km.centroids;
+    let (lab, _) = NativeAssign.assign(&emb, &model.centroids);
+    (model.to_bytes(), as_usize(lab))
+}
+
+fn model_bytes(model: &dyn FittedModel, tag: &str) -> Vec<u8> {
+    let path = std::env::temp_dir()
+        .join(format!("scrb_pipeline_api_{tag}_{}.scrb", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string();
+    model.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    bytes
+}
+
+#[test]
+fn every_method_reproduces_the_legacy_flow_bit_exactly() {
+    let x = test_data();
+    let cfg = test_cfg();
+    for kind in MethodKind::ALL {
+        let expected = legacy_labels(kind, &cfg, &x);
+        let fitted = kind.fit(&Env::new(cfg.clone()), &x).unwrap();
+        assert_eq!(
+            fitted.output.labels,
+            expected,
+            "{} through the stage composition diverged from the legacy inline flow",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn scrb_pipeline_model_bytes_match_legacy_fit() {
+    let x = test_data();
+    // Laplacian kernel (RB's native one), both solvers
+    for solver in [Solver::Davidson, Solver::Lanczos] {
+        let cfg = PipelineConfig::builder()
+            .k(3)
+            .r(16)
+            .kernel(Kernel::Laplacian { sigma: 0.5 })
+            .engine(Engine::Native)
+            .solver(solver)
+            .kmeans_replicates(2)
+            .seed(7)
+            .build();
+        let (legacy_bytes, legacy_lab) = legacy_scrb(&cfg, &x);
+        let fitted = MethodKind::ScRb.fit(&Env::new(cfg.clone()), &x).unwrap();
+        assert_eq!(fitted.output.labels, legacy_lab, "{solver:?} labels");
+        assert_eq!(
+            model_bytes(fitted.model.as_ref(), "legacy_eq"),
+            legacy_bytes,
+            "{solver:?}: pipeline-built SC_RB model must serialize byte-identically \
+             to the pre-redesign fit"
+        );
+    }
+}
+
+#[test]
+fn cached_sweep_equals_uncached_sweep() {
+    let x = test_data();
+    let base = test_cfg();
+    let mut cache = ArtifactCache::new();
+
+    // σ-sweep × method subset: cache on vs cache off, bit-equal
+    for &sigma in &[0.4f64, 0.6, 0.8] {
+        let cfg = base.rebuild(|b| b.sigma(sigma)).unwrap();
+        for kind in [MethodKind::ScRb, MethodKind::ScRf, MethodKind::KkRf] {
+            let env = Env::new(cfg.clone());
+            let cached = kind.pipeline(&cfg).fit_cached(&env, &x, &mut cache).unwrap();
+            let cold = kind
+                .pipeline(&cfg)
+                .fit_cached(&env, &x, &mut ArtifactCache::disabled())
+                .unwrap();
+            assert_eq!(
+                cached.result.output.labels, cold.result.output.labels,
+                "{} σ={sigma}: cached sweep diverged",
+                kind.name()
+            );
+            assert_eq!(cached.result.output.info.inertia, cold.result.output.info.inertia);
+        }
+    }
+    // SC_RF and KK_RF share one RF featurization per σ, and the repeat
+    // fits above hit embeds/clusters too
+    assert!(cache.hits > 0, "sweep never reused an artifact");
+
+    // a repeated identical fit is a full-pipeline hit with equal bytes
+    let cfg = base.rebuild(|b| b.sigma(0.4)).unwrap();
+    let env = Env::new(cfg.clone());
+    let a = MethodKind::ScRb.pipeline(&cfg).fit_cached(&env, &x, &mut cache).unwrap();
+    let b = MethodKind::ScRb.pipeline(&cfg).fit_cached(&env, &x, &mut cache).unwrap();
+    assert_eq!(a.result.output.labels, b.result.output.labels);
+    assert_eq!(
+        model_bytes(a.result.model.as_ref(), "rep_a"),
+        model_bytes(b.result.model.as_ref(), "rep_b")
+    );
+}
+
+#[test]
+fn k_sweep_reuses_featurize_and_embed() {
+    let x = test_data();
+    let base = PipelineConfig::builder()
+        .r(24)
+        .kernel(Kernel::Laplacian { sigma: 0.5 })
+        .engine(Engine::Native)
+        .kmeans_replicates(2)
+        .embed_dim(5)
+        .k(2)
+        .build();
+    let mut cache = ArtifactCache::new();
+
+    let mut labels_by_k = Vec::new();
+    for k in [2usize, 3, 4, 5] {
+        let cfg = base.rebuild(|b| b.k(k)).unwrap();
+        let env = Env::new(cfg.clone());
+        let fitted = MethodKind::ScRb.pipeline(&cfg).fit_cached(&env, &x, &mut cache).unwrap();
+        assert_eq!(fitted.embedding.u.cols, 5, "embedding width pinned by embed_dim");
+        labels_by_k.push(fitted.result.output.labels.clone());
+    }
+    // 4 grid points: featurize + embed computed once (2 misses), then 3×2
+    // hits; cluster always misses (k differs)
+    assert!(cache.hits >= 6, "k-sweep should reuse featurize + embed, hits={}", cache.hits);
+
+    // and the cached sweep equals fresh fits point for point
+    for (i, k) in [2usize, 3, 4, 5].into_iter().enumerate() {
+        let cfg = base.rebuild(|b| b.k(k)).unwrap();
+        let env = Env::new(cfg.clone());
+        let cold = MethodKind::ScRb
+            .pipeline(&cfg)
+            .fit_cached(&env, &x, &mut ArtifactCache::disabled())
+            .unwrap();
+        assert_eq!(cold.result.output.labels, labels_by_k[i], "k={k}");
+    }
+}
+
+#[test]
+fn embedding_artifact_exports_standalone() {
+    let x = test_data();
+    let cfg = test_cfg();
+    let env = Env::new(cfg.clone());
+    let fitted = MethodKind::ScRb
+        .pipeline(&cfg)
+        .fit_cached(&env, &x, &mut ArtifactCache::disabled())
+        .unwrap();
+    // Σ descending, embedding row count = N, serving projection present
+    let s = &fitted.embedding.s;
+    assert_eq!(s.len(), cfg.k);
+    assert!(s.windows(2).all(|w| w[0] >= w[1]), "Σ must be descending: {s:?}");
+    assert_eq!(fitted.embedding.u.rows, x.rows);
+    assert!(fitted.embedding.proj.is_some());
+    assert_eq!(fitted.features.feature_dim, fitted.embedding.proj.as_ref().unwrap().rows);
+}
+
+#[test]
+fn transductive_assembly_needs_the_input_matrix() {
+    // fit_features (the stream entry) rejects class-mean assembly typed
+    let x = test_data();
+    let cfg = test_cfg();
+    let env = Env::new(cfg.clone());
+    let mut cache = ArtifactCache::disabled();
+    let fitted = MethodKind::ScNys.pipeline(&cfg).fit_cached(&env, &x, &mut cache).unwrap();
+    let err = MethodKind::ScNys
+        .pipeline(&cfg)
+        .fit_features(&env, fitted.features.clone(), &mut cache)
+        .unwrap_err();
+    assert!(matches!(err, scrb::error::ScrbError::Unsupported(_)), "{err}");
+}
