@@ -16,7 +16,9 @@ use scrb::metrics::all_metrics;
 use scrb::model::FittedModel;
 use scrb::pipeline::ArtifactCache;
 use scrb::runtime::XlaRuntime;
-use scrb::stream::{fit_streaming, LibsvmChunks, StreamOpts};
+use scrb::stream::{
+    corrupt_libsvm_text, fit_streaming, IngestPolicy, LibsvmChunks, OnBadRecord, StreamOpts,
+};
 use std::fmt::Write as _;
 use std::time::Instant;
 
@@ -125,9 +127,10 @@ fn main() {
         .kernel(Kernel::Laplacian { sigma: 0.15 })
         .engine(Engine::Native)
         .build();
-    let mut reader = LibsvmChunks::from_bytes(text.into_bytes(), 256);
+    let clean_bytes = text.into_bytes();
+    let mut reader = LibsvmChunks::from_bytes(clean_bytes.clone(), 256);
     let streamed = fit_streaming(
-        &Env::new(cfg),
+        &Env::new(cfg.clone()),
         &mut reader,
         &StreamOpts { k: Some(2), ..StreamOpts::default() },
     )
@@ -137,5 +140,30 @@ fn main() {
         "streamed SC_RB (chunk_rows=256): acc={:.3} nmi={:.3} — same Algorithm 2, same \
          driver, input never resident",
         m.accuracy, m.nmi
+    );
+
+    // 7. the same fit, fault-tolerant: dirty inputs are the norm at the
+    // scale streaming targets. Under `--on-bad-record quarantine` the fit
+    // skips malformed/non-finite records deterministically in both passes
+    // (exact counts, capped located samples) and equals a fit on the
+    // clean subset byte for byte; transient reader errors retry with
+    // bounded backoff; `--checkpoint DIR` + `--resume` survive a mid-fit
+    // kill bit-identically; v2 model files carry a checksum footer. See
+    // "Failure modes & recovery" in the crate docs and `tests/faults.rs`.
+    let (dirty, replaced) = corrupt_libsvm_text(&clean_bytes, 42, 10);
+    let mut dirty_reader = LibsvmChunks::from_bytes(dirty, 256);
+    let policy =
+        IngestPolicy { on_bad_record: OnBadRecord::Quarantine, ..IngestPolicy::default() };
+    let quarantined = fit_streaming(
+        &Env::new(cfg),
+        &mut dirty_reader,
+        &StreamOpts { k: Some(2), policy, ..StreamOpts::default() },
+    )
+    .expect("quarantined fit failed");
+    assert_eq!(quarantined.quarantine.skipped(), replaced.len(), "counts are exact");
+    println!(
+        "quarantined fit over {} corrupted lines: {}",
+        replaced.len(),
+        quarantined.quarantine.summary()
     );
 }

@@ -1,8 +1,12 @@
 //! Streaming-ingestion benchmark: generate a synthetic LibSVM file, then
-//! time the three chunked stages — raw chunk reading, the stats pass, and
-//! the block-wise featurize pass — reporting rows/sec per stage and the
+//! time the chunked stages — raw chunk reading, the stats pass, and the
+//! block-wise featurize pass — reporting rows/sec per stage and the
 //! streaming memory-bound accounting (dense chunk scratch bytes, peak
-//! substrate block bytes).
+//! substrate block bytes). A fourth stage measures fault tolerance:
+//! featurize with the quarantine policy layer engaged on the clean file
+//! (`metrics.policy_overhead_pct`) and on a copy with ~1% corrupted
+//! records (`metrics.degraded_featurize_rows_per_sec`,
+//! `metrics.quarantined_rows`).
 //!
 //!     cargo bench --bench bench_ingest
 //!     SCRB_BENCH_SMOKE=1 cargo bench --bench bench_ingest   # CI smoke
@@ -13,7 +17,10 @@
 //! (override with SCRB_BENCH_JSON): `metrics.featurize_rows_per_sec` is
 //! the headline number, `metrics.peak_block_bytes` the memory bound.
 
-use scrb::stream::{stats_pass, ChunkReader, LibsvmChunks, SparseChunk, StreamFeaturizer};
+use scrb::stream::{
+    corrupt_libsvm_text, stats_pass, ChunkReader, GuardedReader, IngestPolicy, LibsvmChunks,
+    OnBadRecord, SparseChunk, StreamFeaturizer,
+};
 use scrb::util::bench::Bencher;
 use scrb::util::rng::Pcg;
 use std::io::Write as _;
@@ -114,6 +121,54 @@ fn main() {
         feats.z.n_blocks()
     );
 
+    // stage 4: fault-tolerance cost (ISSUE 6) — the same featurize pass
+    // with the GuardedReader policy layer engaged, first on the clean file
+    // (pure policy overhead) and then on a copy with ~1% of its lines
+    // corrupted (degraded-mode throughput with quarantine skipping).
+    let policy = IngestPolicy {
+        on_bad_record: OnBadRecord::Quarantine,
+        retry_backoff_ms: 0,
+        ..IngestPolicy::default()
+    };
+    let guarded_featurize = |path: &str| {
+        let mut inner = LibsvmChunks::from_path(path, chunk_rows).expect("open bench file");
+        let mut guarded = GuardedReader::new(&mut inner, policy.clone());
+        let mut chunk = SparseChunk::new();
+        let stats = stats_pass(&mut guarded, &mut chunk).expect("stats pass");
+        let dim = guarded.dim();
+        let (lo, span) = stats.finalize(dim);
+        guarded.reset().expect("rewind");
+        let mut fz = StreamFeaturizer::new(r, dim, 0.5, 7, lo, span, block_rows, stats.n);
+        let t0 = Instant::now();
+        while guarded.next_chunk(&mut chunk).expect("read chunk") {
+            fz.push_chunk(&chunk);
+        }
+        let _ = fz.finish().expect("featurize");
+        (t0.elapsed(), stats.n, guarded.report().skipped())
+    };
+
+    let (clean_time, clean_rows, clean_skipped) = guarded_featurize(&path);
+    assert_eq!((clean_rows, clean_skipped), (n, 0));
+    let policy_overhead_pct =
+        (clean_time.as_secs_f64() / feat_time.as_secs_f64().max(1e-12) - 1.0) * 100.0;
+    b.record_once(&format!("featurize+policy n={n} r={r}"), clean_time);
+    println!(
+        "    policy:    {:.3e} rows/s ({policy_overhead_pct:+.1}% vs bare featurize)",
+        n as f64 / clean_time.as_secs_f64().max(1e-12)
+    );
+
+    let dirty_path = format!("{path}.dirty");
+    let (dirty, replaced) =
+        corrupt_libsvm_text(&std::fs::read(&path).expect("reread bench file"), 42, 10);
+    std::fs::write(&dirty_path, &dirty).expect("write dirty bench file");
+    let (deg_time, deg_rows, deg_skipped) = guarded_featurize(&dirty_path);
+    assert_eq!(deg_skipped, replaced.len(), "quarantine counts are exact");
+    assert_eq!(deg_rows + deg_skipped, n);
+    let deg_rps = deg_rows as f64 / deg_time.as_secs_f64().max(1e-12);
+    b.record_once(&format!("featurize degraded 1% bad n={n} r={r}"), deg_time);
+    println!("    degraded:  {deg_rps:.3e} rows/s ({deg_skipped} rows quarantined)");
+    std::fs::remove_file(&dirty_path).ok();
+
     // memory-bound accounting: resident input scratch vs substrate blocks
     let scratch_bytes = chunk_rows * dim * 8;
     let peak_block = feats.z.peak_block_bytes();
@@ -135,6 +190,9 @@ fn main() {
     b.metric("peak_block_bytes", peak_block as f64);
     b.metric("substrate_bytes", substrate as f64);
     b.metric("feature_dim", feats.codebook.dim as f64);
+    b.metric("policy_overhead_pct", policy_overhead_pct);
+    b.metric("degraded_featurize_rows_per_sec", deg_rps);
+    b.metric("quarantined_rows", deg_skipped as f64);
 
     std::fs::remove_file(&path).ok();
 

@@ -38,6 +38,7 @@ use crate::pipeline::{
 };
 use crate::rb::{rb_features_with_codebook, RbFeatures};
 use crate::sparse::EllRb;
+use crate::stream::checkpoint::{ckpt_fingerprint, Checkpointer, StatsCkpt};
 use crate::stream::{stats_pass, SparseChunk, StreamFeaturizer};
 use crate::util::threads::parallel_rows_mut;
 use crate::util::timer::StageTimer;
@@ -100,17 +101,48 @@ impl Featurize for RbFeaturize {
             DataSource::Stream { reader, opts } => {
                 let mut timer = StageTimer::new();
                 let mut chunk = SparseChunk::new();
+                let mut ckpt = match &opts.checkpoint {
+                    Some(cfg) => Some(Checkpointer::new(
+                        cfg,
+                        ckpt_fingerprint(self.r, self.sigma, self.seed, opts.block_rows),
+                    )?),
+                    None => None,
+                };
 
-                // Pass 1: min/span frame + row and class census.
-                let stats = timer.time("stream_stats", || stats_pass(reader, &mut chunk))?;
-                if stats.n == 0 {
-                    return Err(ScrbError::invalid_input("cannot fit on an empty dataset"));
-                }
-                let n = stats.n;
-                let d = reader.dim();
-                let (lo, span) = stats.finalize(d);
+                // Pass 1: min/span frame + row and class census — or its
+                // checkpointed result, which lets a resumed fit skip the
+                // whole scan.
+                let restored_stats = match &ckpt {
+                    Some(c) if c.resume() => c.load_stats()?,
+                    _ => None,
+                };
+                let (n, d, lo, span) = match restored_stats {
+                    Some(s) => (s.n, s.d, s.lo, s.span),
+                    None => {
+                        let stats =
+                            timer.time("stream_stats", || stats_pass(reader, &mut chunk))?;
+                        if stats.n == 0 {
+                            return Err(ScrbError::invalid_input("cannot fit on an empty dataset"));
+                        }
+                        let n = stats.n;
+                        let d = reader.dim();
+                        let (lo, span) = stats.finalize(d);
+                        if let Some(c) = &ckpt {
+                            c.save_stats(&StatsCkpt {
+                                n,
+                                d,
+                                lo: lo.clone(),
+                                span: span.clone(),
+                            })?;
+                        }
+                        (n, d, lo, span)
+                    }
+                };
 
                 // Pass 2: block-wise RB featurization in the fitted frame.
+                // Exactly one reset in both the fresh and the resumed path,
+                // so pass-indexed state (e.g. injected faults) is identical
+                // either way.
                 reader.reset()?;
                 let mut fz = StreamFeaturizer::new(
                     self.r,
@@ -122,6 +154,18 @@ impl Featurize for RbFeaturize {
                     opts.block_rows,
                     n,
                 );
+                // On resume, restore the featurizer mid-pass and fast-skip
+                // the rows it already holds while replaying the stream.
+                let mut skip = 0usize;
+                if let Some(c) = &mut ckpt {
+                    c.bind(d, n);
+                    if c.resume() {
+                        if let Some(st) = c.load_state()? {
+                            skip = st.labels.len();
+                            fz.load_state(st.grids, st.blocks, st.labels)?;
+                        }
+                    }
+                }
                 timer.time("rb_features", || -> Result<(), ScrbError> {
                     while reader.next_chunk(&mut chunk)? {
                         // a column beyond the stats-pass dimension means
@@ -134,10 +178,25 @@ impl Featurize for RbFeaturize {
                                 reader.dim()
                             )));
                         }
-                        fz.push_chunk(&chunk);
+                        let rows = chunk.rows();
+                        if skip >= rows {
+                            skip -= rows;
+                            continue;
+                        }
+                        fz.push_chunk_from(&chunk, skip);
+                        skip = 0;
+                        if let Some(c) = &mut ckpt {
+                            c.maybe_save(&fz)?;
+                        }
                     }
                     Ok(())
                 })?;
+                if skip > 0 {
+                    return Err(ScrbError::checkpoint(format!(
+                        "stream ended {skip} rows before the checkpointed position — the \
+                         input shrank since the checkpoint was written"
+                    )));
+                }
                 if fz.rows() != n {
                     return Err(ScrbError::invalid_input(format!(
                         "stream changed between passes: {} rows in the stats pass, {} in the \

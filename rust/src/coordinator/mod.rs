@@ -180,28 +180,27 @@ impl Coordinator {
     /// streaming entry point (`scrb fit --stream`). Unlike the in-memory
     /// drivers there is no data matrix to select σ on, so the bandwidth
     /// must be pinned (`sigma` here, `--sigma` at the CLI); K defaults to
-    /// the stream's label census when not given, mirroring
+    /// the stream's label census when not given (`opts.k`), mirroring
     /// [`Coordinator::cfg_for`]. All knobs are validated through the one
     /// [`PipelineConfig::validate`] routine (chunk/block rows, σ domain).
+    /// `opts` also carries the fault policy and checkpoint configuration
+    /// (see [`crate::stream::StreamOpts`]).
     pub fn fit_streaming(
         &self,
         path: &str,
         chunk_rows: usize,
         sigma: f64,
-        k: Option<usize>,
-        block_rows: usize,
+        opts: crate::stream::StreamOpts,
     ) -> Result<crate::stream::StreamFit, ScrbError> {
         let cfg = self.base_cfg.rebuild(|b| {
-            let b = b.sigma(sigma).stream(chunk_rows, block_rows);
-            match k {
+            let b = b.sigma(sigma).stream(chunk_rows, opts.block_rows);
+            match opts.k {
                 Some(k) => b.k(k),
                 None => b,
             }
         })?;
         let env = Env::with_xla(cfg, self.xla.as_ref());
         let mut reader = crate::stream::LibsvmChunks::from_path(path, chunk_rows)?;
-        let opts =
-            crate::stream::StreamOpts { block_rows, k, ..crate::stream::StreamOpts::default() };
         crate::stream::fit_streaming(&env, &mut reader, &opts)
     }
 }

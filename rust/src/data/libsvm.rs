@@ -1,8 +1,12 @@
 //! LibSVM-format dataset parser, so the real Table 1 benchmarks drop in
 //! when their files are available (`scrb run --data path.libsvm`, and the
-//! `fit`/`predict` serving commands). Malformed lines surface as typed
-//! [`ScrbError::Parse`] values — one clean line at the CLI, never an
-//! abort.
+//! `fit`/`predict` serving commands). Malformed lines surface as typed,
+//! *located* [`ScrbError::BadRecord`] values carrying the file, 1-based
+//! line, byte offset, and offending token (the same
+//! [`crate::error::RecordError`] context the CSV reader emits) — one
+//! clean line at the CLI, never an abort. Under
+//! [`crate::stream::OnBadRecord::Quarantine`] the same records are
+//! skipped with exact counts instead of failing the run.
 //!
 //! Format per line: `<label> <index>:<value> <index>:<value> ...`
 //! Indices are 1-based, strictly ascending within a row (the LibSVM

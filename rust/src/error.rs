@@ -6,6 +6,48 @@
 
 use std::fmt;
 
+/// Why an input record was rejected: structurally broken text vs a
+/// syntactically fine record carrying NaN/Inf values. Quarantine reports
+/// count the two classes separately because they point at different
+/// upstream problems (corrupted transport vs a broken feature producer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecordKind {
+    /// The record could not be parsed at all (bad token, ragged row,
+    /// invalid UTF-8, out-of-order indices, …).
+    Malformed,
+    /// The record parsed but holds a non-finite label or value.
+    NonFinite,
+}
+
+/// One rejected input record with uniform source context: file name, line
+/// number, byte offset of the line start, and the quoted offending token.
+/// Carried boxed inside [`ScrbError::BadRecord`] and sampled (capped) into
+/// quarantine reports.
+#[derive(Debug, Clone)]
+pub struct RecordError {
+    /// Source name: the file path, or `"<memory>"` for in-memory readers.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Byte offset of the start of the offending line.
+    pub byte: u64,
+    /// The offending token (sanitized, truncated).
+    pub token: String,
+    /// What was wrong with it.
+    pub reason: String,
+    pub kind: RecordKind,
+}
+
+impl fmt::Display for RecordError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{} (byte {}): {} (token '{}')",
+            self.file, self.line, self.byte, self.reason, self.token
+        )
+    }
+}
+
 /// The error type of the `scrb` crate.
 #[derive(Debug)]
 pub enum ScrbError {
@@ -13,6 +55,19 @@ pub enum ScrbError {
     Io { path: String, source: std::io::Error },
     /// Malformed input data (LibSVM lines, numeric fields, …).
     Parse(String),
+    /// One specific input record was rejected, with full source context
+    /// (file, line, byte offset, offending token). The located form of
+    /// `Parse` that ingest policies can match on: strict mode surfaces it,
+    /// quarantine mode skips the row and samples it into the report.
+    BadRecord(Box<RecordError>),
+    /// A retryable I/O failure (interrupted read, injected fault).
+    /// Distinct from permanent parse failures so the bounded-retry layer
+    /// knows what is safe to retry; surfaced only after retries exhaust,
+    /// with the attempt count.
+    Transient { msg: String, attempts: u32 },
+    /// Checkpoint state is missing required pieces, corrupt, or was
+    /// written with incompatible parameters.
+    Checkpoint(String),
     /// Bad configuration, CLI usage, or unknown names.
     Config(String),
     /// Model persistence failure: bad magic, unsupported version,
@@ -33,6 +88,18 @@ impl ScrbError {
 
     pub fn parse(msg: impl Into<String>) -> ScrbError {
         ScrbError::Parse(msg.into())
+    }
+
+    pub fn bad_record(rec: RecordError) -> ScrbError {
+        ScrbError::BadRecord(Box::new(rec))
+    }
+
+    pub fn transient(msg: impl Into<String>) -> ScrbError {
+        ScrbError::Transient { msg: msg.into(), attempts: 1 }
+    }
+
+    pub fn checkpoint(msg: impl Into<String>) -> ScrbError {
+        ScrbError::Checkpoint(msg.into())
     }
 
     pub fn config(msg: impl Into<String>) -> ScrbError {
@@ -57,6 +124,11 @@ impl fmt::Display for ScrbError {
         match self {
             ScrbError::Io { path, source } => write!(f, "cannot access '{path}': {source}"),
             ScrbError::Parse(m) => write!(f, "parse error: {m}"),
+            ScrbError::BadRecord(rec) => write!(f, "parse error: {rec}"),
+            ScrbError::Transient { msg, attempts } => {
+                write!(f, "transient i/o error (after {attempts} attempt(s)): {msg}")
+            }
+            ScrbError::Checkpoint(m) => write!(f, "checkpoint error: {m}"),
             ScrbError::Config(m) => write!(f, "{m}"),
             ScrbError::Model(m) => write!(f, "model error: {m}"),
             ScrbError::InvalidInput(m) => write!(f, "invalid input: {m}"),
@@ -97,6 +169,16 @@ mod tests {
         let cases: Vec<ScrbError> = vec![
             ScrbError::io("/no/such", std::io::Error::new(std::io::ErrorKind::NotFound, "gone")),
             ScrbError::parse("line 3: bad label 'x'"),
+            ScrbError::bad_record(RecordError {
+                file: "data.libsvm".into(),
+                line: 3,
+                byte: 57,
+                token: "x".into(),
+                reason: "bad label".into(),
+                kind: RecordKind::Malformed,
+            }),
+            ScrbError::transient("read interrupted"),
+            ScrbError::checkpoint("state written with different parameters"),
             ScrbError::config("unknown key 'nope'"),
             ScrbError::model("bad magic"),
             ScrbError::invalid_input("expected 16 features, got 3"),
@@ -105,6 +187,22 @@ mod tests {
         for e in cases {
             let s = e.to_string();
             assert!(!s.is_empty() && !s.contains('\n'), "{s:?}");
+        }
+    }
+
+    #[test]
+    fn bad_record_display_carries_full_context() {
+        let e = ScrbError::bad_record(RecordError {
+            file: "f.csv".into(),
+            line: 12,
+            byte: 340,
+            token: "abc".into(),
+            reason: "bad value".into(),
+            kind: RecordKind::NonFinite,
+        });
+        let s = e.to_string();
+        for part in ["f.csv", ":12", "byte 340", "'abc'", "bad value"] {
+            assert!(s.contains(part), "missing {part:?} in {s:?}");
         }
     }
 

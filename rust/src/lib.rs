@@ -124,6 +124,56 @@
 //!     .expect("streaming fit failed");
 //! fitted.model.save("big.scrb").expect("save failed");
 //! ```
+//!
+//! ## Failure modes & recovery
+//!
+//! Streamed fits run against real files on real infrastructure, so every
+//! failure class has a defined treatment (all verified under seeded fault
+//! injection in `tests/faults.rs`):
+//!
+//! - **Malformed / non-finite records** — strict mode (default) fails the
+//!   fit on the first offender with a located [`error::ScrbError::BadRecord`]
+//!   (file, 1-based line, byte offset, quoted token); quarantine mode
+//!   (`--on-bad-record quarantine`, [`stream::OnBadRecord`]) skips the
+//!   row deterministically in *both* passes, keeps exact counts, and
+//!   samples offenders into [`stream::Quarantine`]. A quarantined fit is
+//!   byte-identical to a fit on the clean subset of the data.
+//! - **Transient I/O errors** — retried with bounded exponential backoff
+//!   ([`stream::IngestPolicy::max_retries`]); absorbed retries never
+//!   change a model byte, exhausted retries surface as
+//!   [`error::ScrbError::Transient`] with the attempt count.
+//! - **Process death mid-fit** — with `--checkpoint DIR`
+//!   ([`stream::CheckpointCfg`]) the fit persists its pass-1 stats and
+//!   incremental pass-2 state (atomic tmp-rename writes, checksum
+//!   footers); rerunning with `--resume` continues to the
+//!   **byte-identical** model an uninterrupted fit would have produced.
+//!   Incompatible parameters or torn files are typed
+//!   [`error::ScrbError::Checkpoint`] errors, never silently-wrong models.
+//! - **Model file corruption** — `.scrb` images end with an FNV-1a
+//!   checksum footer (format v2); any truncation or byte flip is a typed
+//!   [`error::ScrbError::Model`] at load, and v1 files still load.
+//! - **Serving drift** — every `transform`/`predict` counts bin lookups
+//!   that miss the fit-time codebook ([`model::ScRbModel::drift_stats`])
+//!   and warns when a call's unseen rate crosses
+//!   [`model::ScRbModel::unseen_warn`] (`--unseen-warn` at the CLI).
+//!
+//! ```no_run
+//! use scrb::cluster::Env;
+//! use scrb::config::PipelineConfig;
+//! use scrb::stream::{
+//!     fit_streaming, CheckpointCfg, IngestPolicy, LibsvmChunks, OnBadRecord, StreamOpts,
+//! };
+//!
+//! let cfg = PipelineConfig::builder().r(256).sigma(0.25).build();
+//! let opts = StreamOpts {
+//!     policy: IngestPolicy { on_bad_record: OnBadRecord::Quarantine, ..IngestPolicy::default() },
+//!     checkpoint: Some(CheckpointCfg { resume: true, ..CheckpointCfg::new("big.ckpt") }),
+//!     ..StreamOpts::default()
+//! };
+//! let mut reader = LibsvmChunks::from_path("big.libsvm", 4096).expect("open failed");
+//! let fitted = fit_streaming(&Env::new(cfg), &mut reader, &opts).expect("fit failed");
+//! eprintln!("{}", fitted.quarantine.summary());
+//! ```
 
 // CI runs `cargo clippy --release -- -D warnings`. These idiom lints are
 // deliberately allowed: the numeric kernels use explicit-index loops where

@@ -72,9 +72,18 @@ fn print_help() {
          \x20                               requires --sigma; input memory ~ chunk_rows x d)\n\
          \x20   --chunk-rows M              rows per streamed chunk (default 4096)\n\
          \x20   --block-rows M              substrate block granularity (default 65536)\n\
+         \x20   --on-bad-record P           strict (fail on first bad line, default) |\n\
+         \x20                               quarantine (skip, count, sample offenders)\n\
+         \x20   --quarantine-sample N       offender samples kept in the report (default 16)\n\
+         \x20   --max-retries N             transient-error retries per read (default 3)\n\
+         \x20   --checkpoint DIR            persist resumable fit state into DIR\n\
+         \x20   --checkpoint-every N        rows between state saves (default 262144)\n\
+         \x20   --resume                    continue from DIR's checkpoint after a kill\n\
          \x20 predict                     label points with a saved model\n\
          \x20   --model PATH                model artifact from `scrb fit --save`\n\
          \x20   --out PATH                  write one label per line (optional)\n\
+         \x20   --unseen-warn T             warn when a call's unseen-bin rate exceeds T\n\
+         \x20                               (default 0.25; rate is printed after predict)\n\
          \x20 table <1|2|3>               regenerate a paper table\n\
          \x20 fig <2|3|4|5|theory>        regenerate a paper figure's series\n\n\
          common options:\n\
@@ -271,7 +280,10 @@ fn cmd_fit(args: &Args) -> Result<(), ScrbError> {
 /// model.scrb`: the out-of-core fit — two chunked passes over the file
 /// (stats, then block-wise RB featurization), resident input memory
 /// bounded by `chunk_rows × d`, and a model byte-identical to the
-/// in-memory fit on the same data and seed.
+/// in-memory fit on the same data and seed. Fault handling rides on
+/// `--on-bad-record strict|quarantine` (plus `--quarantine-sample`,
+/// `--max-retries`); long fits add `--checkpoint DIR [--checkpoint-every
+/// N] [--resume]` to survive kills.
 fn cmd_fit_stream(args: &Args, coord: &Coordinator, save: &str) -> Result<(), ScrbError> {
     let path = args
         .get("data")
@@ -287,9 +299,44 @@ fn cmd_fit_stream(args: &Args, coord: &Coordinator, save: &str) -> Result<(), Sc
     let sigma = cfg.kernel.sigma();
     // K: explicit --k wins; otherwise the stream's label census decides.
     let k_override = args.get("k").is_some().then_some(coord.base_cfg.k);
+    let policy = scrb::stream::IngestPolicy {
+        on_bad_record: scrb::stream::OnBadRecord::parse(args.get_or("on-bad-record", "strict"))?,
+        sample_cap: args.get_usize("quarantine-sample", 16)?,
+        max_retries: args.get_usize("max-retries", 3)? as u32,
+        ..scrb::stream::IngestPolicy::default()
+    };
+    let checkpoint = match args.get("checkpoint") {
+        Some(dir) => Some(scrb::stream::CheckpointCfg {
+            every_rows: args.get_usize("checkpoint-every", 262_144)?,
+            resume: args.flag("resume"),
+            ..scrb::stream::CheckpointCfg::new(dir)
+        }),
+        None => {
+            if args.flag("resume") {
+                return Err(ScrbError::config(
+                    "--resume needs --checkpoint DIR (the directory the interrupted fit \
+                     was checkpointing into)",
+                ));
+            }
+            None
+        }
+    };
+    let opts = scrb::stream::StreamOpts {
+        block_rows,
+        k: k_override,
+        policy,
+        checkpoint,
+        ..scrb::stream::StreamOpts::default()
+    };
     let t0 = Instant::now();
-    let fit = coord.fit_streaming(path, chunk_rows, sigma, k_override, block_rows)?;
+    let fit = coord.fit_streaming(path, chunk_rows, sigma, opts)?;
     let secs = t0.elapsed().as_secs_f64();
+    if fit.quarantine.skipped() > 0 || fit.quarantine.retries > 0 {
+        println!("quarantine: {}", fit.quarantine.summary());
+        for rec in &fit.quarantine.samples {
+            println!("  skipped {rec}");
+        }
+    }
     println!(
         "dataset {path} (streamed) n={} d={} classes={} chunk_rows={chunk_rows}",
         fit.n, fit.d, fit.k_true
@@ -324,7 +371,17 @@ fn cmd_predict(args: &Args) -> Result<(), ScrbError> {
     let model_path = args
         .get("model")
         .ok_or_else(|| ScrbError::config("predict: missing --model PATH (from `scrb fit --save`)"))?;
-    let model = ScRbModel::load(model_path)?;
+    let mut model = ScRbModel::load(model_path)?;
+    // drift sensitivity: warn when a call's unseen-bin rate crosses this
+    if args.get("unseen-warn").is_some() {
+        let t = args.get_f64("unseen-warn", scrb::model::DEFAULT_UNSEEN_WARN)?;
+        if !(0.0..=1.0).contains(&t) {
+            return Err(ScrbError::config(format!(
+                "--unseen-warn must be a rate in [0, 1], got '{t}'"
+            )));
+        }
+        model.unseen_warn = t;
+    }
     let cfg = base_config(args)?;
     let coord = Coordinator::new(cfg, scale_of(args)?);
     let (mut ds, from_file) = load_dataset_raw(args, &coord)?;
@@ -359,6 +416,13 @@ fn cmd_predict(args: &Args) -> Result<(), ScrbError> {
     );
     let m = all_metrics(&labels, &ds.y);
     println!("vs file labels: acc={:.3} nmi={:.3}", m.accuracy, m.nmi);
+    let drift = model.drift_stats();
+    println!(
+        "unseen-bin rate: {:.4} ({} of {} lookups missed the codebook)",
+        drift.rate(),
+        drift.unseen,
+        drift.lookups
+    );
     if let Some(out_path) = args.get("out") {
         let mut text = String::with_capacity(labels.len() * 3);
         for l in &labels {

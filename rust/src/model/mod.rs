@@ -44,7 +44,7 @@
 pub mod persist;
 pub mod scrb;
 
-pub use self::scrb::ScRbModel;
+pub use self::scrb::{DriftMonitor, DriftStats, ScRbModel, DEFAULT_UNSEEN_WARN};
 
 use crate::cluster::{ClusterOutput, Env};
 use crate::error::ScrbError;

@@ -5,8 +5,39 @@
 //! written through [`ByteWriter`] and read back through the bounds-checked
 //! [`ByteReader`] (truncation or garbage becomes a clean
 //! [`ScrbError::Model`], never a panic or an out-of-bounds read).
+//!
+//! Checksummed images: [`ByteWriter::finish_with_checksum`] appends an
+//! FNV-1a 64-bit digest of everything written, and [`split_checksummed`]
+//! verifies-and-strips it on load — so bit-rot or truncation *anywhere*
+//! in a v2 model file is detected up front, not discovered as a garbage
+//! field mid-parse (or worse, not at all).
 
 use crate::error::ScrbError;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a 64-bit digest (same hash family as the pipeline fingerprints;
+/// integrity against accidental corruption, not an adversary).
+pub(crate) fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Verify and strip the 8-byte checksum footer of an image produced by
+/// [`ByteWriter::finish_with_checksum`]. `None` means the image is
+/// corrupt or truncated (including too short to even hold a footer).
+pub(crate) fn split_checksummed(bytes: &[u8]) -> Option<&[u8]> {
+    if bytes.len() < 8 {
+        return None;
+    }
+    let (payload, footer) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(footer.try_into().unwrap());
+    (fnv64(payload) == stored).then_some(payload)
+}
 
 /// Append-only little-endian buffer writer.
 pub(crate) struct ByteWriter {
@@ -46,6 +77,14 @@ impl ByteWriter {
     }
 
     pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Finish the image with an FNV-1a checksum footer over everything
+    /// written (verified by [`split_checksummed`] on load).
+    pub fn finish_with_checksum(mut self) -> Vec<u8> {
+        let sum = fnv64(&self.buf);
+        self.buf.extend_from_slice(&sum.to_le_bytes());
         self.buf
     }
 }
@@ -144,5 +183,28 @@ mod tests {
         assert!(r.u64().is_err());
         let mut r2 = ByteReader::new(&buf);
         assert!(r2.f64_vec(100).is_err());
+    }
+
+    #[test]
+    fn checksum_footer_roundtrips_and_detects_damage() {
+        let mut w = ByteWriter::new();
+        w.bytes(b"payload");
+        w.u64(42);
+        let buf = w.finish_with_checksum();
+        assert_eq!(buf.len(), 7 + 8 + 8);
+        assert_eq!(split_checksummed(&buf).unwrap(), &buf[..15]);
+        // any single-bit flip (payload or footer) is caught
+        for pos in 0..buf.len() {
+            let mut bad = buf.clone();
+            bad[pos] ^= 0x01;
+            assert!(split_checksummed(&bad).is_none(), "flip at {pos} undetected");
+        }
+        // any truncation is caught
+        for cut in 0..buf.len() {
+            assert!(split_checksummed(&buf[..cut]).is_none(), "truncation to {cut} undetected");
+        }
+        // empty payload is still valid when checksummed
+        let empty = ByteWriter::new().finish_with_checksum();
+        assert_eq!(split_checksummed(&empty).unwrap(), b"");
     }
 }

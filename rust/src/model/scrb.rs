@@ -18,22 +18,74 @@
 //! # Persistence
 //!
 //! [`ScRbModel::save`]/[`ScRbModel::load`] use a versioned little-endian
-//! binary format (magic `SCRBMODL`, version 1) with bounds-checked reads:
+//! binary format (magic `SCRBMODL`, version 2) with bounds-checked reads:
 //! truncation, bad magic, or an unsupported version is a clean
-//! [`ScrbError::Model`]. Grid parameters are stored explicitly (widths +
-//! biases), not re-derived from the seed, so a saved model does not
-//! depend on RNG stream stability across versions.
+//! [`ScrbError::Model`]. Version 2 ends with an FNV-1a checksum footer
+//! over the whole image, verified before any field is parsed — so a
+//! truncated or bit-rotted file is *always* a typed error, never a
+//! silently-wrong model; version-1 files (no footer) still load. Grid
+//! parameters are stored explicitly (widths + biases), not re-derived
+//! from the seed, so a saved model does not depend on RNG stream
+//! stability across versions.
+//!
+//! # Drift
+//!
+//! RB serving drops a point's contribution from any grid whose bin was
+//! never seen at fit time. A little of that is normal at the data fringe;
+//! a lot means the serving distribution has drifted off the training
+//! distribution. Instead of dropping bins silently, every
+//! `transform`/`predict`/`predict_batch` call counts its unseen-bin
+//! lookups into a [`DriftMonitor`] ([`ScRbModel::drift_stats`]) and warns
+//! on stderr when a single call's unseen rate exceeds
+//! [`ScRbModel::unseen_warn`].
 
-use super::persist::{ByteReader, ByteWriter};
+use super::persist::{split_checksummed, ByteReader, ByteWriter};
 use super::{nearest_centroid, FittedModel, ServeWorkspace};
 use crate::config::Kernel;
 use crate::error::ScrbError;
 use crate::linalg::Mat;
 use crate::rb::{BinTable, Grid, RbCodebook};
 use crate::util::threads::{parallel_row_ranges_mut, parallel_rows_mut};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 const MAGIC: &[u8; 8] = b"SCRBMODL";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
+
+/// Default per-call unseen-bin-rate threshold above which serving warns.
+pub const DEFAULT_UNSEEN_WARN: f64 = 0.25;
+
+/// Cumulative unseen-bin counters (the drift signal incremental updates
+/// need). Atomic so `&self` serving paths can update them concurrently;
+/// relaxed ordering — these are statistics, not synchronization.
+#[derive(Debug, Default)]
+pub struct DriftMonitor {
+    /// Points served through embed-based paths.
+    points: AtomicU64,
+    /// Bin lookups performed (points × R).
+    lookups: AtomicU64,
+    /// Lookups that missed the codebook (bin unseen at fit time).
+    unseen: AtomicU64,
+}
+
+/// A point-in-time snapshot of a [`DriftMonitor`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DriftStats {
+    pub points: u64,
+    pub lookups: u64,
+    pub unseen: u64,
+}
+
+impl DriftStats {
+    /// Fraction of bin lookups that missed the codebook (0 when nothing
+    /// has been served).
+    pub fn rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.unseen as f64 / self.lookups as f64
+        }
+    }
+}
 
 /// Raw base pointer to the per-worker embedding scratch; workers index
 /// disjoint `stride`-sized regions by strip id (see `predict_batch`).
@@ -60,6 +112,13 @@ pub struct ScRbModel {
     /// (per-feature `(min, span)`), if any — serving batches must be
     /// brought into this frame, not normalized by their own statistics.
     pub norm: Option<(Vec<f64>, Vec<f64>)>,
+    /// Cumulative unseen-bin counters across every serving call (runtime
+    /// state, not persisted).
+    pub drift: DriftMonitor,
+    /// Per-call unseen-bin-rate threshold above which serving warns on
+    /// stderr ([`DEFAULT_UNSEEN_WARN`] unless reconfigured; not
+    /// persisted).
+    pub unseen_warn: f64,
 }
 
 impl ScRbModel {
@@ -72,15 +131,25 @@ impl ScRbModel {
     /// [`ScRbModel::embed_dim`]): sum of projection rows of the point's
     /// occupied bins, L2-normalized. Allocation-free.
     pub fn embed_into(&self, row: &[f64], e: &mut [f64]) {
+        self.embed_into_counting(row, e);
+    }
+
+    /// [`ScRbModel::embed_into`], additionally returning how many of the
+    /// point's R bins were unseen at fit time (and therefore contributed
+    /// nothing) — the raw material of the drift counters.
+    pub fn embed_into_counting(&self, row: &[f64], e: &mut [f64]) -> usize {
         debug_assert_eq!(row.len(), self.codebook.d_in);
         debug_assert_eq!(e.len(), self.embed_dim());
         e.fill(0.0);
+        let mut missed = 0usize;
         for (grid, table) in self.codebook.grids.iter().zip(self.codebook.tables.iter()) {
             if let Some(c) = table.get(grid.bin_hash(row)) {
                 let p = self.proj.row(c as usize);
                 for (ej, pj) in e.iter_mut().zip(p.iter()) {
                     *ej += *pj;
                 }
+            } else {
+                missed += 1;
             }
         }
         let norm = e.iter().map(|v| v * v).sum::<f64>().sqrt();
@@ -89,6 +158,41 @@ impl ScRbModel {
             for v in e.iter_mut() {
                 *v *= inv;
             }
+        }
+        missed
+    }
+
+    /// Snapshot of the cumulative unseen-bin counters.
+    pub fn drift_stats(&self) -> DriftStats {
+        DriftStats {
+            points: self.drift.points.load(Ordering::Relaxed),
+            lookups: self.drift.lookups.load(Ordering::Relaxed),
+            unseen: self.drift.unseen.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Fold one serving call's counts into the drift monitor and warn on
+    /// stderr when this call's unseen rate crosses the threshold. The
+    /// clean-data path (missed == 0) touches only three relaxed atomics —
+    /// no formatting, no allocation.
+    fn note_unseen(&self, points: u64, missed: u64) {
+        let r = self.codebook.r as u64;
+        self.drift.points.fetch_add(points, Ordering::Relaxed);
+        self.drift.lookups.fetch_add(points * r, Ordering::Relaxed);
+        if missed == 0 {
+            return;
+        }
+        self.drift.unseen.fetch_add(missed, Ordering::Relaxed);
+        let rate = missed as f64 / (points * r).max(1) as f64;
+        if rate > self.unseen_warn {
+            eprintln!(
+                "warning: {missed} of {} bin lookups ({:.1}%) hit bins unseen at fit time \
+                 (threshold {:.1}%) — the serving data may have drifted off the training \
+                 distribution",
+                points * r,
+                rate * 100.0,
+                self.unseen_warn * 100.0
+            );
         }
     }
 
@@ -161,21 +265,35 @@ impl ScRbModel {
         }
         w.f64_slice(&self.proj.data);
         w.f64_slice(&self.centroids.data);
-        w.finish()
+        // v2: FNV-1a checksum footer over everything above (magic and
+        // version included)
+        w.finish_with_checksum()
     }
 
-    /// Deserialize from the versioned binary format.
+    /// Deserialize from the versioned binary format (v2 with checksum
+    /// footer, or legacy v1 without).
     pub fn from_bytes(bytes: &[u8]) -> Result<ScRbModel, ScrbError> {
-        let mut r = ByteReader::new(bytes);
-        if r.bytes(8)? != &MAGIC[..] {
+        // magic + version are peeked outside the checksum machinery: the
+        // version decides whether a footer exists at all
+        let mut peek = ByteReader::new(bytes);
+        if peek.bytes(8)? != &MAGIC[..] {
             return Err(ScrbError::model("not an scrb model file (bad magic)"));
         }
-        let version = r.u32()?;
-        if version != VERSION {
-            return Err(ScrbError::model(format!(
-                "unsupported model version {version} (this build reads version {VERSION})"
-            )));
-        }
+        let version = peek.u32()?;
+        let payload = match version {
+            1 => bytes,
+            VERSION => split_checksummed(bytes).ok_or_else(|| {
+                ScrbError::model("checksum mismatch: the model file is corrupt or truncated")
+            })?,
+            other => {
+                return Err(ScrbError::model(format!(
+                    "unsupported model version {other} (this build reads versions 1-{VERSION})"
+                )))
+            }
+        };
+        let mut r = ByteReader::new(payload);
+        r.bytes(8)?;
+        r.u32()?;
         let ktag = r.u8()?;
         let ksigma = r.f64()?;
         let kernel = match ktag {
@@ -268,7 +386,16 @@ impl ScRbModel {
             )));
         }
         let codebook = RbCodebook { r: nr, d_in, sigma, seed, dim, grids, tables };
-        Ok(ScRbModel { codebook, kernel, s, proj, centroids, norm })
+        Ok(ScRbModel {
+            codebook,
+            kernel,
+            s,
+            proj,
+            centroids,
+            norm,
+            drift: DriftMonitor::default(),
+            unseen_warn: DEFAULT_UNSEEN_WARN,
+        })
     }
 
     /// Load a model saved by [`ScRbModel::save`].
@@ -325,11 +452,17 @@ impl FittedModel for ScRbModel {
             return Ok(m);
         }
         // each output row doubles as the scratch buffer embed_into fills
+        let missed = AtomicU64::new(0);
         parallel_rows_mut(&mut m.data, k, |row0, chunk| {
+            let mut local = 0usize;
             for (d, row) in chunk.chunks_mut(k).enumerate() {
-                self.embed_into(x.row(row0 + d), row);
+                local += self.embed_into_counting(x.row(row0 + d), row);
+            }
+            if local > 0 {
+                missed.fetch_add(local as u64, Ordering::Relaxed);
             }
         });
+        self.note_unseen(x.rows as u64, missed.load(Ordering::Relaxed));
         Ok(m)
     }
 
@@ -349,16 +482,22 @@ impl FittedModel for ScRbModel {
         ws.prepare(n, k);
         let stride = ws.stride();
         let scratch = ScratchPtr(ws.scratch_ptr());
+        let missed = AtomicU64::new(0);
         parallel_row_ranges_mut(&mut out[..], 1, ws.bounds(), |si, row0, chunk| {
             // SAFETY: strip `si` is the only worker using the scratch
             // region [si·stride, si·stride + k); strips are disjoint and
             // the workspace outlives the scoped-thread join.
             let e = unsafe { std::slice::from_raw_parts_mut(scratch.0.add(si * stride), k) };
+            let mut local = 0usize;
             for (d, slot) in chunk.iter_mut().enumerate() {
-                self.embed_into(x.row(row0 + d), e);
+                local += self.embed_into_counting(x.row(row0 + d), e);
                 *slot = nearest_centroid(&self.centroids, e);
             }
+            if local > 0 {
+                missed.fetch_add(local as u64, Ordering::Relaxed);
+            }
         });
+        self.note_unseen(n as u64, missed.load(Ordering::Relaxed));
         Ok(())
     }
 
@@ -396,6 +535,8 @@ mod tests {
             proj,
             centroids,
             norm: None,
+            drift: DriftMonitor::default(),
+            unseen_warn: DEFAULT_UNSEEN_WARN,
         };
         (model, x)
     }
@@ -486,5 +627,48 @@ mod tests {
     fn load_missing_file_is_io_error() {
         let e = ScRbModel::load("/no/such/model.scrb").unwrap_err();
         assert!(matches!(e, ScrbError::Io { .. }));
+    }
+
+    #[test]
+    fn v1_files_without_checksum_still_load() {
+        let (model, x) = toy_model(50, 5, 3, 17);
+        let v2 = model.to_bytes();
+        // rewrite as a v1 image: drop the footer, flip the version field
+        let mut v1 = v2[..v2.len() - 8].to_vec();
+        v1[8..12].copy_from_slice(&1u32.to_le_bytes());
+        let back = ScRbModel::from_bytes(&v1).unwrap();
+        assert_eq!(back.transform(&x).unwrap().data, model.transform(&x).unwrap().data);
+        // saving a legacy load re-emits the current (checksummed) format
+        assert_eq!(back.to_bytes(), v2);
+        // a v2 image relabeled v1 leaves the 8-byte footer dangling → typed error
+        let mut relabeled = v2.clone();
+        relabeled[8..12].copy_from_slice(&1u32.to_le_bytes());
+        assert!(matches!(ScRbModel::from_bytes(&relabeled), Err(ScrbError::Model(_))));
+    }
+
+    #[test]
+    fn drift_monitor_counts_unseen_bins() {
+        let (model, x) = toy_model(60, 8, 4, 19);
+        // training rows hit only bins the codebook saw: zero unseen
+        model.transform(&x).unwrap();
+        let s = model.drift_stats();
+        assert_eq!(s.points, 60);
+        assert_eq!(s.lookups, 60 * 8);
+        assert_eq!(s.unseen, 0);
+        assert_eq!(s.rate(), 0.0);
+        // rows far outside the training range land in unseen bins
+        let far = Mat::from_vec(2, 3, vec![1e3; 6]);
+        model.transform(&far).unwrap();
+        let s2 = model.drift_stats();
+        assert_eq!(s2.points, 62);
+        assert!(s2.unseen > 0, "far-out rows must miss the codebook");
+        assert!(s2.rate() > 0.0 && s2.rate() <= 1.0);
+        // predict_batch feeds the same counters
+        let mut ws = ServeWorkspace::new();
+        let mut out = Vec::new();
+        model.predict_batch(&far, &mut ws, &mut out).unwrap();
+        let s3 = model.drift_stats();
+        assert_eq!(s3.points, 64);
+        assert!(s3.unseen > s2.unseen, "misses accumulate across calls");
     }
 }

@@ -414,5 +414,7 @@ pub fn assemble_scrb(
         proj,
         centroids: clu.centroids.clone(),
         norm: feat.norm.clone(),
+        drift: Default::default(),
+        unseen_warn: crate::model::DEFAULT_UNSEEN_WARN,
     })
 }

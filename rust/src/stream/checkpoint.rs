@@ -1,0 +1,499 @@
+//! Checkpoint/resume for the streaming fit: kill the process mid-pass,
+//! rerun with `--resume`, get the **byte-identical** model an
+//! uninterrupted fit would have produced.
+//!
+//! # What is persisted
+//!
+//! The two-pass fit has exactly two pieces of durable state:
+//!
+//! 1. **Stats frame** (`stats.bin`) — the pass-1 result: row count, input
+//!    dimension, and the per-column min/span frame. Written once when the
+//!    stats pass completes; a resumed fit that finds it skips pass 1
+//!    entirely.
+//! 2. **Featurize state** — the incremental pass-2 state of the
+//!    [`super::StreamFeaturizer`]: per-grid first-seen bin hashes and
+//!    collision counts, the accumulated local-id blocks, and the labels.
+//!    The bin *dictionaries* are derived state (replaying the hashes
+//!    through `get_or_assign` in id order rebuilds the identical dense
+//!    mapping) and the grids are resampled from the seed, so nothing else
+//!    is needed for a bit-identical continuation.
+//!
+//! Completed substrate blocks are immutable once full, so each is written
+//! to its own `block_NNNN.bin` exactly once; the frequently-rewritten
+//! `state.bin` carries only the per-grid tables, the labels, and the one
+//! in-progress block. Every file is written tmp-then-rename (atomic on
+//! POSIX) and ends with the same FNV-1a checksum footer the v2 model
+//! format uses — a checkpoint torn by the very crash it exists to survive
+//! is detected on load and reported as a typed [`ScrbError::Checkpoint`],
+//! never replayed into a silently-wrong model.
+//!
+//! # Compatibility fingerprint
+//!
+//! Resuming under different parameters (R, σ, seed, block size — or
+//! different data: n, d) would splice incompatible state; every file
+//! therefore embeds a fingerprint of those parameters and `load_*`
+//! rejects mismatches with a typed error telling the user to delete the
+//! checkpoint directory or rerun with the original flags.
+//!
+//! [`ScrbError::Checkpoint`]: crate::error::ScrbError::Checkpoint
+
+use super::featurize::StreamFeaturizer;
+use crate::error::ScrbError;
+use crate::model::persist::{split_checksummed, ByteReader, ByteWriter};
+use crate::pipeline::Fingerprint;
+use std::path::{Path, PathBuf};
+
+const STATS_MAGIC: &[u8; 8] = b"SCRBCKS1";
+const STATE_MAGIC: &[u8; 8] = b"SCRBCKT1";
+const BLOCK_MAGIC: &[u8; 8] = b"SCRBCKB1";
+
+/// Checkpointing knobs for a streamed fit (`--checkpoint DIR` at the CLI).
+#[derive(Clone, Debug)]
+pub struct CheckpointCfg {
+    /// Directory holding the checkpoint files (created if missing).
+    pub dir: String,
+    /// Featurized-row cadence between state saves.
+    pub every_rows: usize,
+    /// Resume from existing checkpoint files instead of starting fresh
+    /// (`--resume`). Without it an existing checkpoint is overwritten.
+    pub resume: bool,
+}
+
+impl CheckpointCfg {
+    pub fn new(dir: impl Into<String>) -> CheckpointCfg {
+        CheckpointCfg { dir: dir.into(), every_rows: 262_144, resume: false }
+    }
+}
+
+/// The restored pass-1 result.
+pub(crate) struct StatsCkpt {
+    pub n: usize,
+    pub d: usize,
+    pub lo: Vec<f64>,
+    pub span: Vec<f64>,
+}
+
+/// The restored pass-2 featurizer state (see
+/// [`StreamFeaturizer::load_state`]).
+pub(crate) struct StateCkpt {
+    pub grids: Vec<(Vec<u64>, Vec<usize>)>,
+    pub blocks: Vec<Vec<u32>>,
+    pub labels: Vec<i64>,
+}
+
+/// Driver-side checkpoint writer/loader for one streaming fit.
+pub(crate) struct Checkpointer {
+    dir: PathBuf,
+    /// Fingerprint over the fit parameters (R, σ, seed, block_rows).
+    fp_params: u64,
+    /// `fp_params` extended with the stats-pass result (d, n); guards the
+    /// pass-2 state files. Zero until [`Checkpointer::bind`].
+    fp_state: u64,
+    every_rows: usize,
+    resume: bool,
+    /// Rows featurized at the last state save.
+    last_saved_rows: usize,
+    /// Full blocks already persisted to their own files.
+    blocks_written: usize,
+}
+
+/// Fingerprint of the fit parameters a checkpoint is only valid under.
+pub(crate) fn ckpt_fingerprint(r: usize, sigma: f64, seed: u64, block_rows: usize) -> u64 {
+    Fingerprint::new("stream/ckpt")
+        .usize(r)
+        .f64(sigma)
+        .u64(seed)
+        .usize(block_rows)
+        .finish()
+}
+
+fn write_atomic(dir: &Path, name: &str, w: ByteWriter) -> Result<(), ScrbError> {
+    let bytes = w.finish_with_checksum();
+    let tmp = dir.join(format!("{name}.tmp"));
+    let path = dir.join(name);
+    std::fs::write(&tmp, &bytes).map_err(|e| ScrbError::io(tmp.display().to_string(), e))?;
+    std::fs::rename(&tmp, &path).map_err(|e| ScrbError::io(path.display().to_string(), e))
+}
+
+/// Read a checkpoint file if it exists, verifying its checksum footer and
+/// magic. `Ok(None)` = no such file (nothing to resume).
+fn read_verified(dir: &Path, name: &str, magic: &[u8; 8]) -> Result<Option<Vec<u8>>, ScrbError> {
+    let path = dir.join(name);
+    let bytes = match std::fs::read(&path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(ScrbError::io(path.display().to_string(), e)),
+    };
+    let payload = split_checksummed(&bytes).ok_or_else(|| {
+        ScrbError::checkpoint(format!(
+            "'{}' is corrupt or truncated (checksum mismatch); delete the checkpoint \
+             directory and rerun",
+            path.display()
+        ))
+    })?;
+    let mut r = ByteReader::new(payload);
+    if r.bytes(8).map_err(|_| bad_file(&path, "too short"))? != &magic[..] {
+        return Err(bad_file(&path, "wrong file type (bad magic)"));
+    }
+    Ok(Some(payload[8..].to_vec()))
+}
+
+fn bad_file(path: &Path, what: &str) -> ScrbError {
+    ScrbError::checkpoint(format!("'{}': {what}", path.display()))
+}
+
+/// Map a truncated-payload parse error into a checkpoint error carrying
+/// the file name (the payload already passed its checksum, so this only
+/// fires on a format bug — but it must still be typed, not a panic).
+fn in_file<T>(path: &Path, r: Result<T, ScrbError>) -> Result<T, ScrbError> {
+    r.map_err(|e| ScrbError::checkpoint(format!("'{}': {e}", path.display())))
+}
+
+impl Checkpointer {
+    pub fn new(cfg: &CheckpointCfg, fp_params: u64) -> Result<Checkpointer, ScrbError> {
+        if cfg.every_rows == 0 {
+            return Err(ScrbError::config("checkpoint cadence must be at least 1 row"));
+        }
+        let dir = PathBuf::from(&cfg.dir);
+        std::fs::create_dir_all(&dir).map_err(|e| ScrbError::io(cfg.dir.clone(), e))?;
+        Ok(Checkpointer {
+            dir,
+            fp_params,
+            fp_state: 0,
+            every_rows: cfg.every_rows,
+            resume: cfg.resume,
+            last_saved_rows: 0,
+            blocks_written: 0,
+        })
+    }
+
+    pub fn resume(&self) -> bool {
+        self.resume
+    }
+
+    /// Derive the state fingerprint once the stats pass has pinned (d, n).
+    /// Must be called before any state save/load.
+    pub fn bind(&mut self, d: usize, n: usize) {
+        self.fp_state =
+            Fingerprint::new("stream/ckpt/state").u64(self.fp_params).usize(d).usize(n).finish();
+    }
+
+    pub fn save_stats(&self, s: &StatsCkpt) -> Result<(), ScrbError> {
+        let mut w = ByteWriter::new();
+        w.bytes(STATS_MAGIC);
+        w.u64(self.fp_params);
+        w.u64(s.n as u64);
+        w.u64(s.d as u64);
+        w.f64_slice(&s.lo);
+        w.f64_slice(&s.span);
+        write_atomic(&self.dir, "stats.bin", w)
+    }
+
+    pub fn load_stats(&self) -> Result<Option<StatsCkpt>, ScrbError> {
+        let Some(body) = read_verified(&self.dir, "stats.bin", STATS_MAGIC)? else {
+            return Ok(None);
+        };
+        let path = self.dir.join("stats.bin");
+        let mut r = ByteReader::new(&body);
+        let fp = in_file(&path, r.u64())?;
+        if fp != self.fp_params {
+            return Err(bad_file(
+                &path,
+                "written with different fit parameters (r/sigma/seed/block-rows); delete the \
+                 checkpoint directory or rerun with the original flags",
+            ));
+        }
+        let n = in_file(&path, r.u64())? as usize;
+        let d = in_file(&path, r.u64())? as usize;
+        let lo = in_file(&path, r.f64_vec(d))?;
+        let span = in_file(&path, r.f64_vec(d))?;
+        if n == 0 || r.remaining() != 0 {
+            return Err(bad_file(&path, "inconsistent stats payload"));
+        }
+        Ok(Some(StatsCkpt { n, d, lo, span }))
+    }
+
+    /// Save pass-2 state when at least `every_rows` rows were featurized
+    /// since the last save.
+    pub fn maybe_save(&mut self, fz: &StreamFeaturizer) -> Result<(), ScrbError> {
+        if fz.rows() - self.last_saved_rows >= self.every_rows {
+            self.save_state(fz)?;
+        }
+        Ok(())
+    }
+
+    /// Persist the featurizer's pass-2 state: newly-completed blocks to
+    /// their own (write-once) files, everything else into `state.bin`.
+    pub fn save_state(&mut self, fz: &StreamFeaturizer) -> Result<(), ScrbError> {
+        debug_assert_ne!(self.fp_state, 0, "bind() before saving state");
+        let blocks = fz.state_blocks();
+        // all blocks but the last are complete and immutable; the last may
+        // still grow, so it rides along inside state.bin
+        let full = blocks.len().saturating_sub(1);
+        for i in self.blocks_written..full {
+            let mut w = ByteWriter::new();
+            w.bytes(BLOCK_MAGIC);
+            w.u64(self.fp_state);
+            w.u64(i as u64);
+            w.u64(blocks[i].len() as u64);
+            for &id in &blocks[i] {
+                w.u32(id);
+            }
+            write_atomic(&self.dir, &block_name(i), w)?;
+        }
+        self.blocks_written = full;
+
+        let labels = fz.state_labels();
+        let mut w = ByteWriter::new();
+        w.bytes(STATE_MAGIC);
+        w.u64(self.fp_state);
+        w.u64(fz.rows() as u64);
+        w.u64(full as u64);
+        let partial: &[u32] = blocks.last().map(|b| b.as_slice()).unwrap_or(&[]);
+        w.u64(partial.len() as u64);
+        for &id in partial {
+            w.u32(id);
+        }
+        w.u64(fz.grid_count() as u64);
+        for j in 0..fz.grid_count() {
+            let (hashes, counts) = fz.grid_state(j);
+            w.u64(hashes.len() as u64);
+            for &h in hashes {
+                w.u64(h);
+            }
+            for &c in counts {
+                w.u64(c as u64);
+            }
+        }
+        w.u64(labels.len() as u64);
+        for &l in labels {
+            w.u64(l as u64);
+        }
+        write_atomic(&self.dir, "state.bin", w)?;
+        self.last_saved_rows = fz.rows();
+        Ok(())
+    }
+
+    /// Load pass-2 state, if any. On success the checkpointer's own save
+    /// cursors advance to the restored position, so subsequent
+    /// [`Checkpointer::maybe_save`] calls continue the cadence without
+    /// rewriting already-persisted blocks.
+    pub fn load_state(&mut self) -> Result<Option<StateCkpt>, ScrbError> {
+        debug_assert_ne!(self.fp_state, 0, "bind() before loading state");
+        let Some(body) = read_verified(&self.dir, "state.bin", STATE_MAGIC)? else {
+            return Ok(None);
+        };
+        let path = self.dir.join("state.bin");
+        let mut r = ByteReader::new(&body);
+        let fp = in_file(&path, r.u64())?;
+        if fp != self.fp_state {
+            return Err(bad_file(
+                &path,
+                "written with different fit parameters or data; delete the checkpoint \
+                 directory or rerun with the original flags",
+            ));
+        }
+        let rows_done = in_file(&path, r.u64())? as usize;
+        let full = in_file(&path, r.u64())? as usize;
+        let partial_len = in_file(&path, r.u64())? as usize;
+        let mut partial = Vec::with_capacity(partial_len);
+        for _ in 0..partial_len {
+            partial.push(in_file(&path, r.u32())?);
+        }
+        let n_grids = in_file(&path, r.u64())? as usize;
+        let mut grids = Vec::with_capacity(n_grids);
+        for _ in 0..n_grids {
+            let n_bins = in_file(&path, r.u64())? as usize;
+            let mut hashes = Vec::with_capacity(n_bins);
+            for _ in 0..n_bins {
+                hashes.push(in_file(&path, r.u64())?);
+            }
+            let mut counts = Vec::with_capacity(n_bins);
+            for _ in 0..n_bins {
+                counts.push(in_file(&path, r.u64())? as usize);
+            }
+            grids.push((hashes, counts));
+        }
+        let n_labels = in_file(&path, r.u64())? as usize;
+        if n_labels != rows_done {
+            return Err(bad_file(&path, "label count disagrees with the row cursor"));
+        }
+        let mut labels = Vec::with_capacity(n_labels);
+        for _ in 0..n_labels {
+            labels.push(in_file(&path, r.u64())? as i64);
+        }
+        if r.remaining() != 0 {
+            return Err(bad_file(&path, "trailing bytes after state payload"));
+        }
+
+        let mut blocks = Vec::with_capacity(full + 1);
+        for i in 0..full {
+            let bpath = self.dir.join(block_name(i));
+            let Some(bbody) = read_verified(&self.dir, &block_name(i), BLOCK_MAGIC)? else {
+                return Err(bad_file(&bpath, "missing block file referenced by state.bin"));
+            };
+            let mut br = ByteReader::new(&bbody);
+            if in_file(&bpath, br.u64())? != self.fp_state {
+                return Err(bad_file(&bpath, "written with different fit parameters or data"));
+            }
+            if in_file(&bpath, br.u64())? as usize != i {
+                return Err(bad_file(&bpath, "block index disagrees with its file name"));
+            }
+            let len = in_file(&bpath, br.u64())? as usize;
+            let mut ids = Vec::with_capacity(len);
+            for _ in 0..len {
+                ids.push(in_file(&bpath, br.u32())?);
+            }
+            if br.remaining() != 0 {
+                return Err(bad_file(&bpath, "trailing bytes after block payload"));
+            }
+            blocks.push(ids);
+        }
+        if !partial.is_empty() {
+            blocks.push(partial);
+        }
+        self.blocks_written = full;
+        self.last_saved_rows = rows_done;
+        Ok(Some(StateCkpt { grids, blocks, labels }))
+    }
+}
+
+fn block_name(i: usize) -> String {
+    format!("block_{i:04}.bin")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::stream::SparseChunk;
+    use crate::util::rng::Pcg;
+
+    fn tmpdir(tag: &str) -> String {
+        let dir = std::env::temp_dir()
+            .join(format!("scrb_ckpt_{tag}_{}", std::process::id()))
+            .to_str()
+            .unwrap()
+            .to_string();
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn mat_chunk(x: &Mat, lo: usize, hi: usize) -> SparseChunk {
+        let mut chunk = SparseChunk::new();
+        for row in lo..hi {
+            chunk.begin_row((row % 3) as i64);
+            for (j, &v) in x.row(row).iter().enumerate() {
+                chunk.push_entry(j as u32, v);
+            }
+            chunk.end_row();
+        }
+        chunk
+    }
+
+    #[test]
+    fn stats_roundtrip_and_fingerprint_guard() {
+        let dir = tmpdir("stats");
+        let fp = ckpt_fingerprint(8, 0.5, 42, 64);
+        let cfg = CheckpointCfg { resume: true, ..CheckpointCfg::new(dir.clone()) };
+        let ck = Checkpointer::new(&cfg, fp).unwrap();
+        assert!(ck.load_stats().unwrap().is_none(), "empty dir = nothing to resume");
+        let stats =
+            StatsCkpt { n: 100, d: 3, lo: vec![0.0, -1.0, 2.5], span: vec![1.0, 2.0, 3.0] };
+        ck.save_stats(&stats).unwrap();
+        let back = ck.load_stats().unwrap().unwrap();
+        assert_eq!((back.n, back.d), (100, 3));
+        assert_eq!(back.lo, stats.lo);
+        assert_eq!(back.span, stats.span);
+        // different parameters reject the file with a typed error
+        let other = Checkpointer::new(&cfg, ckpt_fingerprint(9, 0.5, 42, 64)).unwrap();
+        assert!(matches!(other.load_stats(), Err(ScrbError::Checkpoint(_))));
+        // corruption is caught by the checksum footer
+        let p = std::path::Path::new(&dir).join("stats.bin");
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[10] ^= 0xff;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(matches!(ck.load_stats(), Err(ScrbError::Checkpoint(_))));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn state_roundtrip_restores_a_bit_identical_featurizer() {
+        let dir = tmpdir("state");
+        let mut rng = Pcg::seed(77);
+        let n = 40;
+        let x = Mat::from_vec(n, 2, (0..n * 2).map(|_| rng.f64()).collect());
+        let mk = || {
+            crate::stream::StreamFeaturizer::new(
+                4,
+                2,
+                0.4,
+                9,
+                vec![0.0; 2],
+                vec![1.0; 2],
+                8,
+                n,
+            )
+        };
+        let mut whole = mk();
+        whole.push_chunk(&mat_chunk(&x, 0, n));
+
+        // featurize 27 rows (3 full 8-row blocks + a partial), checkpoint
+        let fp = ckpt_fingerprint(4, 0.4, 9, 8);
+        let cfg = CheckpointCfg { resume: true, ..CheckpointCfg::new(dir.clone()) };
+        let mut ck = Checkpointer::new(&cfg, fp).unwrap();
+        ck.bind(2, n);
+        let mut part = mk();
+        part.push_chunk(&mat_chunk(&x, 0, 27));
+        ck.save_state(&part).unwrap();
+        assert!(std::path::Path::new(&dir).join("block_0002.bin").exists());
+
+        // a fresh checkpointer (fresh process) restores and continues
+        let mut ck2 = Checkpointer::new(&cfg, fp).unwrap();
+        ck2.bind(2, n);
+        let st = ck2.load_state().unwrap().unwrap();
+        assert_eq!(st.labels.len(), 27);
+        let mut resumed = mk();
+        resumed.load_state(st.grids, st.blocks, st.labels).unwrap();
+        resumed.push_chunk(&mat_chunk(&x, 27, n));
+        let (a, b) = (whole.finish().unwrap(), resumed.finish().unwrap());
+        assert_eq!(a.z, b.z, "resumed featurization must match bit for bit");
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.kappa, b.kappa);
+
+        // a bound fingerprint over different data rejects the state
+        let mut ck3 = Checkpointer::new(&cfg, fp).unwrap();
+        ck3.bind(2, n + 1);
+        assert!(matches!(ck3.load_state(), Err(ScrbError::Checkpoint(_))));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_block_file_is_a_typed_error() {
+        let dir = tmpdir("missing_block");
+        let mut rng = Pcg::seed(5);
+        let n = 20;
+        let x = Mat::from_vec(n, 2, (0..n * 2).map(|_| rng.f64()).collect());
+        let fp = ckpt_fingerprint(3, 0.4, 1, 4);
+        let cfg = CheckpointCfg { resume: true, ..CheckpointCfg::new(dir.clone()) };
+        let mut ck = Checkpointer::new(&cfg, fp).unwrap();
+        ck.bind(2, n);
+        let mut fz = crate::stream::StreamFeaturizer::new(
+            3,
+            2,
+            0.4,
+            1,
+            vec![0.0; 2],
+            vec![1.0; 2],
+            4,
+            n,
+        );
+        fz.push_chunk(&mat_chunk(&x, 0, n));
+        ck.save_state(&fz).unwrap();
+        std::fs::remove_file(std::path::Path::new(&dir).join(block_name(1))).unwrap();
+        let mut ck2 = Checkpointer::new(&cfg, fp).unwrap();
+        ck2.bind(2, n);
+        assert!(matches!(ck2.load_state(), Err(ScrbError::Checkpoint(_))));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,7 +1,19 @@
 //! The reusable chunk buffer every [`super::ChunkReader`] fills.
 
-/// One chunk of sparse rows in a flat CSR-ish layout. All four buffers
-/// are reused across [`super::ChunkReader::next_chunk`] calls — `clear`
+/// Source context of one parsed row: where it came from in the input
+/// text. Text readers fill one entry per row so downstream screening
+/// (e.g. the non-finite check in [`super::GuardedReader`]) can report
+/// file/line/byte context for a row long after the line buffer is gone.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct RowMeta {
+    /// 1-based line number.
+    pub line: usize,
+    /// Byte offset of the start of the line.
+    pub byte: u64,
+}
+
+/// One chunk of sparse rows in a flat CSR-ish layout. All buffers are
+/// reused across [`super::ChunkReader::next_chunk`] calls — `clear`
 /// keeps capacity — so a warm chunk loop never touches the heap.
 pub struct SparseChunk {
     /// Row offsets into `indices`/`values`, length rows+1.
@@ -11,6 +23,10 @@ pub struct SparseChunk {
     pub values: Vec<f64>,
     /// Raw (uncompacted) labels, one per row.
     pub labels: Vec<i64>,
+    /// Per-row source context. Text readers keep this in sync with
+    /// `labels`; hand-built chunks may leave it empty (then no context is
+    /// available, which screening layers must tolerate).
+    pub meta: Vec<RowMeta>,
 }
 
 impl Default for SparseChunk {
@@ -21,7 +37,13 @@ impl Default for SparseChunk {
 
 impl SparseChunk {
     pub fn new() -> SparseChunk {
-        SparseChunk { indptr: vec![0], indices: Vec::new(), values: Vec::new(), labels: Vec::new() }
+        SparseChunk {
+            indptr: vec![0],
+            indices: Vec::new(),
+            values: Vec::new(),
+            labels: Vec::new(),
+            meta: Vec::new(),
+        }
     }
 
     /// Drop all rows, keeping every buffer's capacity.
@@ -31,6 +53,7 @@ impl SparseChunk {
         self.indices.clear();
         self.values.clear();
         self.labels.clear();
+        self.meta.clear();
     }
 
     pub fn rows(&self) -> usize {
@@ -65,6 +88,52 @@ impl SparseChunk {
     pub fn end_row(&mut self) {
         self.indptr.push(self.indices.len());
     }
+
+    /// Roll back to a snapshot taken before a row parse started: a parser
+    /// that fails mid-row leaves a partial row (label pushed, some
+    /// entries, no `end_row`) that quarantine mode must discard before
+    /// continuing with the next line.
+    pub fn truncate_rows(&mut self, rows: usize, nnz: usize) {
+        self.labels.truncate(rows);
+        self.indices.truncate(nnz);
+        self.values.truncate(nnz);
+        self.indptr.truncate(rows + 1);
+        self.meta.truncate(rows);
+    }
+
+    /// Remove every row `keep` rejects, compacting all buffers in place
+    /// (no allocation). Used by quarantine-mode screening to drop rows
+    /// that parsed but carry non-finite values.
+    pub fn retain_rows(&mut self, mut keep: impl FnMut(usize) -> bool) {
+        let rows = self.rows();
+        let has_meta = self.meta.len() == rows;
+        let mut w = 0usize;
+        let mut wnnz = 0usize;
+        for i in 0..rows {
+            let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+            if !keep(i) {
+                continue;
+            }
+            if w != i {
+                self.indices.copy_within(lo..hi, wnnz);
+                self.values.copy_within(lo..hi, wnnz);
+                self.labels[w] = self.labels[i];
+                if has_meta {
+                    self.meta[w] = self.meta[i];
+                }
+            }
+            wnnz += hi - lo;
+            w += 1;
+            self.indptr[w] = wnnz;
+        }
+        self.labels.truncate(w);
+        if has_meta {
+            self.meta.truncate(w);
+        }
+        self.indptr.truncate(w + 1);
+        self.indices.truncate(wnnz);
+        self.values.truncate(wnnz);
+    }
 }
 
 #[cfg(test)]
@@ -90,5 +159,50 @@ mod tests {
         assert_eq!(c.rows(), 0);
         assert_eq!(c.indptr, vec![0]);
         assert_eq!(c.indices.capacity(), cap);
+    }
+
+    #[test]
+    fn truncate_discards_a_partial_row() {
+        let mut c = SparseChunk::new();
+        c.begin_row(1);
+        c.push_entry(0, 1.0);
+        c.end_row();
+        c.meta.push(RowMeta { line: 1, byte: 0 });
+        let (rows, nnz) = (c.rows(), c.nnz());
+        // a failed parse: label + one entry pushed, then abandoned
+        c.begin_row(2);
+        c.push_entry(1, 0.5);
+        c.truncate_rows(rows, nnz);
+        assert_eq!(c.rows(), 1);
+        assert_eq!(c.nnz(), 1);
+        assert_eq!(c.indptr, vec![0, 1]);
+        assert_eq!(c.meta.len(), 1);
+    }
+
+    #[test]
+    fn retain_rows_compacts_in_place() {
+        let mut c = SparseChunk::new();
+        for i in 0..5i64 {
+            c.begin_row(i);
+            c.push_entry(i as u32, i as f64);
+            if i % 2 == 0 {
+                c.push_entry(10 + i as u32, -1.0);
+            }
+            c.end_row();
+            c.meta.push(RowMeta { line: i as usize + 1, byte: 10 * i as u64 });
+        }
+        let caps = (c.indices.capacity(), c.labels.capacity());
+        c.retain_rows(|i| i != 1 && i != 4);
+        assert_eq!(c.rows(), 3);
+        assert_eq!(c.labels, vec![0, 2, 3]);
+        assert_eq!(c.row(0), (&[0u32, 10][..], &[0.0, -1.0][..]));
+        assert_eq!(c.row(1), (&[2u32, 12][..], &[2.0, -1.0][..]));
+        assert_eq!(c.row(2), (&[3u32][..], &[3.0][..]));
+        assert_eq!(c.meta[2], RowMeta { line: 4, byte: 30 });
+        assert_eq!((c.indices.capacity(), c.labels.capacity()), caps, "in place, no realloc");
+        // removing nothing leaves the chunk untouched
+        let before = c.indptr.clone();
+        c.retain_rows(|_| true);
+        assert_eq!(c.indptr, before);
     }
 }

@@ -1,0 +1,343 @@
+//! Deterministic fault injection: the test harness the fault-tolerance
+//! layer is verified against.
+//!
+//! [`FaultyReader`] decorates any [`ChunkReader`] and injects, from a
+//! seeded plan, the three failure classes the ingest stack must survive:
+//!
+//! - **Transient I/O errors** ([`FaultPlan::transient_permille`]) —
+//!   surfaced as [`ScrbError::Transient`] *before* the wrapped reader is
+//!   touched, and fired at most once per (pass, call) site, so a bounded
+//!   retry always succeeds: exactly what a flaky NFS mount or an
+//!   interrupted syscall looks like.
+//! - **Non-finite corruption** ([`FaultPlan::nonfinite_permille`]) —
+//!   NaN/Inf overwrites of parsed values, keyed by the row's absolute
+//!   per-pass index (*not* the pass number), so the same rows are
+//!   corrupted in the stats and featurize passes and quarantine stays
+//!   row-consistent.
+//! - **A mid-pass kill** ([`FaultPlan::fail_at`]) — a permanent failure
+//!   once a row threshold is crossed in a given pass, for exercising
+//!   checkpoint/resume.
+//!
+//! Text- and byte-level corrupters ([`corrupt_libsvm_text`],
+//! [`corrupt_model_bytes`]) complete the harness: garbage/truncated lines
+//! for quarantine tests, and seeded flips/truncations for the model
+//! checksum property test.
+//!
+//! Everything here is a pure function of the seed — reruns and both
+//! passes of a fit see identical faults.
+//!
+//! [`ScrbError::Transient`]: crate::error::ScrbError::Transient
+
+use super::chunk::SparseChunk;
+use super::policy::{IngestPolicy, Quarantine};
+use super::reader::ChunkReader;
+use crate::error::ScrbError;
+use crate::util::rng::Pcg;
+use std::collections::HashSet;
+
+/// Salt separating the row-corruption hash stream from the transient one.
+const ROW_SALT: u64 = 0x5eed_f417_5eed_f417;
+
+/// Stateless position hash (splitmix64 finalizer over three words): fault
+/// decisions must be pure functions of (seed, site), never of draw order,
+/// or retries and second passes would see different faults.
+fn mix(a: u64, b: u64, c: u64) -> u64 {
+    let mut x = a ^ b.wrapping_mul(0x9e37_79b9_7f4a_7c15) ^ c.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 31;
+    x
+}
+
+/// What faults to inject, and how often. Rates are per-mille so a plan is
+/// all-integer (hashable, exactly reproducible).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Per-mille of `next_chunk` calls that fail once with a transient
+    /// error before succeeding on retry.
+    pub transient_permille: u32,
+    /// Per-mille of rows whose first value is overwritten with NaN/Inf
+    /// after parsing.
+    pub nonfinite_permille: u32,
+    /// `(pass, row)`: once at least `row` rows have been yielded in
+    /// 0-based pass `pass`, every subsequent call fails permanently — a
+    /// simulated kill for checkpoint/resume tests.
+    pub fail_at: Option<(usize, usize)>,
+}
+
+/// A [`ChunkReader`] decorator injecting the faults of a [`FaultPlan`].
+/// Passes are counted by [`ChunkReader::reset`] calls (the streaming fit
+/// resets exactly once between stats and featurize).
+pub struct FaultyReader<'a> {
+    inner: &'a mut dyn ChunkReader,
+    plan: FaultPlan,
+    /// 0-based pass index, incremented on reset.
+    pass: usize,
+    /// `next_chunk` calls answered successfully this pass.
+    calls: u64,
+    /// Rows yielded this pass (pre-screening: what the wrapped reader
+    /// produced).
+    rows: usize,
+    /// Transient sites that already fired (fire once, then let the retry
+    /// through).
+    fired: HashSet<(usize, u64)>,
+    injected_transient: usize,
+    corrupted: usize,
+}
+
+impl<'a> FaultyReader<'a> {
+    pub fn new(inner: &'a mut dyn ChunkReader, plan: FaultPlan) -> FaultyReader<'a> {
+        FaultyReader {
+            inner,
+            plan,
+            pass: 0,
+            calls: 0,
+            rows: 0,
+            fired: HashSet::new(),
+            injected_transient: 0,
+            corrupted: 0,
+        }
+    }
+
+    /// Transient errors injected so far (all passes).
+    pub fn injected_transient(&self) -> usize {
+        self.injected_transient
+    }
+
+    /// Rows corrupted with NaN/Inf this pass.
+    pub fn corrupted_rows(&self) -> usize {
+        self.corrupted
+    }
+}
+
+impl ChunkReader for FaultyReader<'_> {
+    fn next_chunk(&mut self, chunk: &mut SparseChunk) -> Result<bool, ScrbError> {
+        if let Some((pass, row)) = self.plan.fail_at {
+            if self.pass == pass && self.rows >= row {
+                return Err(ScrbError::transient("injected permanent failure (simulated kill)"));
+            }
+        }
+        let site = (self.pass, self.calls);
+        if self.plan.transient_permille > 0
+            && mix(self.plan.seed, site.0 as u64, site.1) % 1000
+                < self.plan.transient_permille as u64
+            && self.fired.insert(site)
+        {
+            self.injected_transient += 1;
+            return Err(ScrbError::transient("injected transient i/o error"));
+        }
+        let more = self.inner.next_chunk(chunk)?;
+        if self.plan.nonfinite_permille > 0 {
+            for i in 0..chunk.rows() {
+                // keyed by the absolute per-pass row index only: the same
+                // rows go bad in every pass, keeping quarantine decisions
+                // pass-consistent
+                let h = mix(self.plan.seed ^ ROW_SALT, (self.rows + i) as u64, 0x0bad);
+                if h % 1000 < self.plan.nonfinite_permille as u64 {
+                    let lo = chunk.indptr[i];
+                    let hi = chunk.indptr[i + 1];
+                    if lo < hi {
+                        chunk.values[lo] = if h & (1 << 10) != 0 { f64::NAN } else { f64::INFINITY };
+                        self.corrupted += 1;
+                    }
+                }
+            }
+        }
+        self.rows += chunk.rows();
+        self.calls += 1;
+        Ok(more)
+    }
+
+    fn reset(&mut self) -> Result<(), ScrbError> {
+        self.inner.reset()?;
+        self.pass += 1;
+        self.calls = 0;
+        self.rows = 0;
+        self.corrupted = 0;
+        Ok(())
+    }
+
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn chunk_rows(&self) -> usize {
+        self.inner.chunk_rows()
+    }
+
+    fn source_name(&self) -> &str {
+        self.inner.source_name()
+    }
+
+    fn set_policy(&mut self, policy: &IngestPolicy) {
+        self.inner.set_policy(policy);
+    }
+
+    fn quarantine(&self) -> Option<&Quarantine> {
+        self.inner.quarantine()
+    }
+}
+
+/// Replace roughly `permille`/1000 of the data lines of a LibSVM text
+/// with seeded garbage (unparseable tokens, truncated features,
+/// non-finite labels/values). Returns the corrupted text and the 0-based
+/// indices of the replaced lines, so a test can reconstruct the clean
+/// subset exactly.
+pub fn corrupt_libsvm_text(bytes: &[u8], seed: u64, permille: u32) -> (Vec<u8>, Vec<usize>) {
+    const BAD: [&str; 6] =
+        ["1 nocolon", "1 0:1.0", "garbage ###", "1 3:1.0 2:2.0", "1 1:nan", "nan 1:1.0"];
+    let text = std::str::from_utf8(bytes).expect("corrupt_libsvm_text wants UTF-8 input");
+    let mut out = String::with_capacity(text.len());
+    let mut replaced = Vec::new();
+    for (li, line) in text.lines().enumerate() {
+        let t = line.trim();
+        let is_data = !t.is_empty() && !t.starts_with('#');
+        if is_data && mix(seed, li as u64, 0xc0de) % 1000 < permille as u64 {
+            let h = mix(seed, li as u64, 0xfeed);
+            let choice = (h % (BAD.len() as u64 + 1)) as usize;
+            if choice == BAD.len() {
+                // truncation: cut the line mid-feature if it has one
+                match t.rfind(':') {
+                    Some(cut) => out.push_str(&t[..=cut]),
+                    None => out.push_str(BAD[0]),
+                }
+            } else {
+                out.push_str(BAD[choice]);
+            }
+            replaced.push(li);
+        } else {
+            out.push_str(line);
+        }
+        out.push('\n');
+    }
+    (out.into_bytes(), replaced)
+}
+
+/// One seeded mutation of a model byte image: a single bit flip, a byte
+/// overwrite, or a truncation. Drives the persistence-corruption property
+/// test alongside exhaustive position sweeps.
+pub fn corrupt_model_bytes(bytes: &[u8], seed: u64) -> Vec<u8> {
+    let mut rng = Pcg::seed(seed);
+    let mut out = bytes.to_vec();
+    if out.is_empty() {
+        return out;
+    }
+    match rng.below(3) {
+        0 => {
+            let pos = rng.below(out.len());
+            out[pos] ^= 1 << rng.below(8);
+        }
+        1 => {
+            let pos = rng.below(out.len());
+            out[pos] = out[pos].wrapping_add(1 + rng.below(255) as u8);
+        }
+        _ => {
+            out.truncate(rng.below(out.len()));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::policy::{GuardedReader, OnBadRecord};
+    use crate::stream::LibsvmChunks;
+
+    const TEXT: &str = "\
+1 1:0.5 2:1.5
+2 1:1.0
+1 2:2.0
+2 1:0.25 2:0.75
+1 1:0.1
+2 2:0.9
+";
+
+    fn drain(r: &mut dyn ChunkReader) -> Result<Vec<i64>, ScrbError> {
+        let mut chunk = SparseChunk::new();
+        let mut labels = Vec::new();
+        while r.next_chunk(&mut chunk)? {
+            labels.extend_from_slice(&chunk.labels);
+        }
+        Ok(labels)
+    }
+
+    #[test]
+    fn transient_faults_fire_once_and_retry_succeeds() {
+        let mut inner = LibsvmChunks::from_bytes(TEXT.as_bytes().to_vec(), 2);
+        let plan = FaultPlan { seed: 42, transient_permille: 1000, ..FaultPlan::default() };
+        let mut faulty = FaultyReader::new(&mut inner, plan);
+        let mut chunk = SparseChunk::new();
+        // every call fails exactly once, then the retry reads real data
+        let err = faulty.next_chunk(&mut chunk).unwrap_err();
+        assert!(matches!(err, ScrbError::Transient { .. }));
+        assert!(faulty.next_chunk(&mut chunk).unwrap());
+        assert_eq!(chunk.labels, vec![1, 2]);
+        assert_eq!(faulty.injected_transient(), 1);
+    }
+
+    #[test]
+    fn guarded_reader_absorbs_injected_transients() {
+        let mut inner = LibsvmChunks::from_bytes(TEXT.as_bytes().to_vec(), 2);
+        let plan = FaultPlan { seed: 7, transient_permille: 1000, ..FaultPlan::default() };
+        let mut faulty = FaultyReader::new(&mut inner, plan);
+        let policy = IngestPolicy { retry_backoff_ms: 0, ..IngestPolicy::default() };
+        let mut guarded = GuardedReader::new(&mut faulty, policy);
+        let labels = drain(&mut guarded).unwrap();
+        assert_eq!(labels, vec![1, 2, 1, 2, 1, 2], "faults are invisible after retry");
+        assert!(guarded.report().retries >= 3);
+    }
+
+    #[test]
+    fn nonfinite_corruption_is_pass_consistent() {
+        let plan = FaultPlan { seed: 3, nonfinite_permille: 400, ..FaultPlan::default() };
+        let policy =
+            IngestPolicy { on_bad_record: OnBadRecord::Quarantine, ..IngestPolicy::default() };
+        let run = |chunk_rows: usize| {
+            let mut inner = LibsvmChunks::from_bytes(TEXT.as_bytes().to_vec(), chunk_rows);
+            let mut faulty = FaultyReader::new(&mut inner, plan);
+            let mut guarded = GuardedReader::new(&mut faulty, policy.clone());
+            let first = drain(&mut guarded).unwrap();
+            let skipped = guarded.report().skipped();
+            guarded.reset().unwrap();
+            let second = drain(&mut guarded).unwrap();
+            assert_eq!(first, second, "both passes keep the same rows");
+            assert_eq!(guarded.report().skipped(), skipped);
+            (first, skipped)
+        };
+        let (survivors, skipped) = run(2);
+        assert!(skipped > 0, "plan should corrupt at least one row");
+        assert_eq!(survivors.len() + skipped, 6);
+        // chunking must not change which rows are corrupted
+        assert_eq!(run(5), (survivors, skipped));
+    }
+
+    #[test]
+    fn fail_at_kills_the_requested_pass() {
+        let mut inner = LibsvmChunks::from_bytes(TEXT.as_bytes().to_vec(), 2);
+        let plan = FaultPlan { seed: 1, fail_at: Some((1, 4)), ..FaultPlan::default() };
+        let mut faulty = FaultyReader::new(&mut inner, plan);
+        // pass 0 completes untouched
+        assert_eq!(drain(&mut faulty).unwrap().len(), 6);
+        faulty.reset().unwrap();
+        // pass 1 dies once 4 rows have been yielded
+        let err = drain(&mut faulty).unwrap_err();
+        assert!(matches!(err, ScrbError::Transient { .. }));
+    }
+
+    #[test]
+    fn corrupters_are_deterministic() {
+        let (a, lines_a) = corrupt_libsvm_text(TEXT.as_bytes(), 9, 500);
+        let (b, lines_b) = corrupt_libsvm_text(TEXT.as_bytes(), 9, 500);
+        assert_eq!(a, b);
+        assert_eq!(lines_a, lines_b);
+        assert!(!lines_a.is_empty());
+        assert!(lines_a.len() < 6, "some lines survive at 50%");
+        let m = corrupt_model_bytes(b"0123456789", 4);
+        assert_eq!(m, corrupt_model_bytes(b"0123456789", 4));
+        assert_ne!(m, b"0123456789");
+    }
+}

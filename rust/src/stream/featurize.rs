@@ -150,7 +150,15 @@ impl StreamFeaturizer {
     /// every grid's dictionary (parallel over grids, mirroring the batch
     /// path), and append the rows' local ids to the current block.
     pub fn push_chunk(&mut self, chunk: &SparseChunk) {
-        let rows = chunk.rows();
+        self.push_chunk_from(chunk, 0)
+    }
+
+    /// Bin the rows of `chunk` from row `start` on. This is the resume
+    /// skip-forward entry point: after a checkpoint restore, the replayed
+    /// chunk straddling the `rows_done` boundary is pushed from its first
+    /// unseen row, and every earlier chunk is skipped whole.
+    pub fn push_chunk_from(&mut self, chunk: &SparseChunk, start: usize) {
+        let rows = chunk.rows().saturating_sub(start);
         if rows == 0 {
             return;
         }
@@ -166,7 +174,7 @@ impl StreamFeaturizer {
             parallel_rows_mut(scratch, d, |row0, out| {
                 for (dr, orow) in out.chunks_mut(d).enumerate() {
                     orow.copy_from_slice(zero_row);
-                    let (cols, vals) = chunk.row(row0 + dr);
+                    let (cols, vals) = chunk.row(start + row0 + dr);
                     for (&c, &v) in cols.iter().zip(vals.iter()) {
                         let c = c as usize;
                         orow[c] = (v - lo[c]) / span[c];
@@ -214,8 +222,85 @@ impl StreamFeaturizer {
                 block.push(st.locals[dr]);
             }
         }
-        self.labels.extend_from_slice(&chunk.labels);
+        self.labels.extend_from_slice(&chunk.labels[start..]);
         self.n_rows += rows;
+    }
+
+    // ---- checkpoint plumbing (used by `super::checkpoint`) -------------
+    //
+    // The full pass-2 state is (per-grid first-seen hashes + counts,
+    // local-id blocks, labels): the dictionary is *derived* — replaying
+    // the stored hashes through `get_or_assign` in id order reproduces the
+    // identical dense first-seen mapping — and `finish` resamples grids
+    // deterministically from the seed, so nothing else needs persisting.
+
+    /// Number of grids R (the checkpoint writer iterates `grid_state`).
+    pub(crate) fn grid_count(&self) -> usize {
+        self.r
+    }
+
+    /// Per-grid `(first-seen bin hashes, collision counts)`, id order.
+    pub(crate) fn grid_state(&self, j: usize) -> (&[u64], &[usize]) {
+        (&self.states[j].hashes, &self.states[j].counts)
+    }
+
+    /// Completed and in-progress local-id blocks, row-major n×R.
+    pub(crate) fn state_blocks(&self) -> &[Vec<u32>] {
+        &self.blocks
+    }
+
+    pub(crate) fn state_labels(&self) -> &[i64] {
+        &self.labels
+    }
+
+    /// Overwrite this (fresh) featurizer with checkpointed pass-2 state:
+    /// dictionaries are rebuilt by replaying the stored hashes, so the
+    /// restored featurizer continues bit-identically to one that never
+    /// stopped.
+    pub(crate) fn load_state(
+        &mut self,
+        grids: Vec<(Vec<u64>, Vec<usize>)>,
+        blocks: Vec<Vec<u32>>,
+        labels: Vec<i64>,
+    ) -> Result<(), ScrbError> {
+        if grids.len() != self.r {
+            return Err(ScrbError::checkpoint(format!(
+                "state has {} grids, expected {}",
+                grids.len(),
+                self.r
+            )));
+        }
+        if self.n_rows != 0 {
+            return Err(ScrbError::checkpoint("state can only be loaded into a fresh featurizer"));
+        }
+        let n_rows = labels.len();
+        let block_slots: usize = blocks.iter().map(|b| b.len()).sum();
+        if block_slots != n_rows * self.r {
+            return Err(ScrbError::checkpoint(format!(
+                "block data holds {} ids, expected {} ({} rows × {} grids)",
+                block_slots,
+                n_rows * self.r,
+                n_rows,
+                self.r
+            )));
+        }
+        for (st, (hashes, counts)) in self.states.iter_mut().zip(grids) {
+            if hashes.len() != counts.len() {
+                return Err(ScrbError::checkpoint("per-grid hash/count lengths disagree"));
+            }
+            for &h in &hashes {
+                st.dict.get_or_assign(h);
+            }
+            if st.dict.len() != hashes.len() {
+                return Err(ScrbError::checkpoint("duplicate bin hashes in checkpoint state"));
+            }
+            st.hashes = hashes;
+            st.counts = counts;
+        }
+        self.blocks = blocks;
+        self.labels = labels;
+        self.n_rows = n_rows;
+        Ok(())
     }
 
     /// Finish the pass: resolve global column offsets, shift every block
@@ -371,5 +456,85 @@ mod tests {
     fn empty_pass_is_an_error() {
         let fz = StreamFeaturizer::new(4, 2, 1.0, 1, vec![0.0; 2], vec![1.0; 2], 64, 0);
         assert!(fz.finish().is_err());
+    }
+
+    fn mat_chunk(x: &Mat, lo: usize, hi: usize) -> SparseChunk {
+        let mut chunk = SparseChunk::new();
+        for row in lo..hi {
+            chunk.begin_row(row as i64);
+            for (j, &v) in x.row(row).iter().enumerate() {
+                chunk.push_entry(j as u32, v);
+            }
+            chunk.end_row();
+        }
+        chunk
+    }
+
+    #[test]
+    fn push_chunk_from_skips_the_prefix() {
+        let mut rng = Pcg::seed(403);
+        let n = 40;
+        let x = Mat::from_vec(n, 3, (0..n * 3).map(|_| rng.f64()).collect());
+        let mk = || StreamFeaturizer::new(8, 3, 0.4, 3, vec![0.0; 3], vec![1.0; 3], 16, n);
+        let mut whole = mk();
+        whole.push_chunk(&mat_chunk(&x, 0, n));
+        let mut resumed = mk();
+        resumed.push_chunk(&mat_chunk(&x, 0, 25));
+        // straddling chunk [20, 40): first 5 rows already seen
+        resumed.push_chunk_from(&mat_chunk(&x, 20, n), 5);
+        assert_eq!(resumed.rows(), n);
+        let (a, b) = (whole.finish().unwrap(), resumed.finish().unwrap());
+        assert_eq!(a.z, b.z);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.kappa, b.kappa);
+    }
+
+    #[test]
+    fn state_roundtrip_continues_bit_identically() {
+        let mut rng = Pcg::seed(404);
+        let n = 50;
+        let x = Mat::from_vec(n, 2, (0..n * 2).map(|_| rng.f64()).collect());
+        let mk = || StreamFeaturizer::new(6, 2, 0.3, 11, vec![0.0; 2], vec![1.0; 2], 8, n);
+        // uninterrupted reference
+        let mut whole = mk();
+        whole.push_chunk(&mat_chunk(&x, 0, n));
+        // featurize half, snapshot, restore into a fresh featurizer
+        let mut half = mk();
+        half.push_chunk(&mat_chunk(&x, 0, 23));
+        let grids: Vec<(Vec<u64>, Vec<usize>)> = (0..6)
+            .map(|j| {
+                let (h, c) = half.grid_state(j);
+                (h.to_vec(), c.to_vec())
+            })
+            .collect();
+        let blocks: Vec<Vec<u32>> = half.state_blocks().to_vec();
+        let labels = half.state_labels().to_vec();
+        let mut resumed = mk();
+        resumed.load_state(grids, blocks, labels).unwrap();
+        assert_eq!(resumed.rows(), 23);
+        resumed.push_chunk(&mat_chunk(&x, 23, n));
+        let (a, b) = (whole.finish().unwrap(), resumed.finish().unwrap());
+        assert_eq!(a.z, b.z, "restored pass-2 state must continue bit-identically");
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.bins_per_grid, b.bins_per_grid);
+        assert_eq!(a.kappa, b.kappa);
+    }
+
+    #[test]
+    fn load_state_rejects_inconsistent_state() {
+        let mk = || StreamFeaturizer::new(2, 1, 1.0, 1, vec![0.0], vec![1.0], 8, 0);
+        // wrong grid count
+        let mut fz = mk();
+        assert!(fz.load_state(vec![(vec![1], vec![1])], Vec::new(), Vec::new()).is_err());
+        // block slots disagree with label count
+        let mut fz = mk();
+        assert!(fz
+            .load_state(vec![(vec![1], vec![1]); 2], vec![vec![0, 0]], vec![0, 0])
+            .is_err());
+        // duplicate hashes cannot rebuild a dictionary
+        let mut fz = mk();
+        assert!(fz
+            .load_state(vec![(vec![5, 5], vec![1, 1]); 2], vec![vec![0, 1, 0, 1]], vec![0, 0])
+            .is_err());
     }
 }

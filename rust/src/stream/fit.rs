@@ -19,6 +19,8 @@
 //! labels match — now a property of the shared driver rather than of two
 //! hand-synchronized functions (`tests/stream.rs`).
 
+use super::checkpoint::CheckpointCfg;
+use super::policy::{GuardedReader, IngestPolicy, Quarantine};
 use super::reader::ChunkReader;
 use crate::cluster::sc_rb::{scrb_stages, RbFeaturize};
 use crate::cluster::{ClusterOutput, Env};
@@ -46,6 +48,12 @@ pub struct StreamOpts {
     pub minibatch_threshold: usize,
     /// Mini-batch size when that path engages.
     pub minibatch_size: usize,
+    /// What to do with malformed/non-finite records and transient reader
+    /// errors (see [`IngestPolicy`]). Strict by default: the first bad
+    /// record fails the fit with a located, typed error.
+    pub policy: IngestPolicy,
+    /// Checkpoint/resume configuration; `None` = no checkpointing.
+    pub checkpoint: Option<CheckpointCfg>,
 }
 
 impl Default for StreamOpts {
@@ -55,6 +63,8 @@ impl Default for StreamOpts {
             k: None,
             minibatch_threshold: 200_000,
             minibatch_size: 10_000,
+            policy: IngestPolicy::default(),
+            checkpoint: None,
         }
     }
 }
@@ -73,6 +83,9 @@ pub struct StreamFit {
     pub n: usize,
     /// Input dimensionality discovered from the stream.
     pub d: usize,
+    /// What the ingest policy skipped/absorbed during the fit (empty
+    /// counts under strict mode on clean data).
+    pub quarantine: Quarantine,
 }
 
 /// Fit SC_RB (Algorithm 2) out-of-core: the two-pass chunked featurize
@@ -100,6 +113,12 @@ pub fn fit_streaming(
         ));
     }
 
+    // Every reader is wrapped in the fault-policy enforcement layer:
+    // bounded retry for transient errors plus (in quarantine mode) the
+    // non-finite row screen. The line-level policy is pushed down into
+    // the text readers by the wrapper's constructor.
+    let mut guarded = GuardedReader::new(reader, opts.policy.clone());
+
     // Featurize from the stream source (two chunked passes). The stream
     // has no stable in-memory identity to fingerprint, so streamed
     // featurizations are never cache-shared; the fingerprint still chains
@@ -109,9 +128,10 @@ pub fn fit_streaming(
     // explicit reborrow: the data source borrows the reader only for the
     // featurize call, so the dimension census below can still read it
     let feat =
-        Arc::new(featurize.run(env, DataSource::Stream { reader: &mut *reader, opts }, fp)?);
-    let d = reader.dim();
+        Arc::new(featurize.run(env, DataSource::Stream { reader: &mut guarded, opts }, fp)?);
+    let d = guarded.dim();
     let n = feat.z.nrows();
+    let quarantine = guarded.report();
 
     // K: explicit override wins; otherwise the stream's label census.
     let raw_labels = feat.stream_labels.clone().unwrap_or_default();
@@ -136,5 +156,5 @@ pub fn fit_streaming(
         .map(|m| *m)
         .map_err(|_| ScrbError::unsupported("SC_RB pipeline must assemble an ScRbModel"))?;
 
-    Ok(StreamFit { model, output, y, k_true, n, d })
+    Ok(StreamFit { model, output, y, k_true, n, d, quarantine })
 }

@@ -61,15 +61,34 @@
 //! scrb fit --stream --data big.libsvm --chunk-rows 4096 \
 //!          --sigma 0.25 --k 10 --save model.scrb
 //! ```
+//!
+//! # Fault tolerance
+//!
+//! Streamed fits run where inputs are dirtiest, so the ingest stack is
+//! hardened end to end: the [`policy`] layer retries transient reader
+//! errors with bounded backoff and — under `--on-bad-record quarantine` —
+//! skips malformed/non-finite records deterministically in both passes,
+//! reporting exact counts with file/line/byte context. Long fits persist
+//! pass-1 stats and incremental pass-2 state through [`checkpoint`]
+//! (`--checkpoint DIR`, `--resume`) and continue **bit-identically**
+//! after a kill. The [`fault`] module is the seeded injection harness
+//! (transient errors, NaN/Inf corruption, mid-pass kills, byte-level
+//! model corruption) all of this is verified under in `tests/faults.rs`.
 
+pub mod checkpoint;
 pub mod chunk;
+pub mod fault;
 pub mod featurize;
 pub mod fit;
+pub mod policy;
 pub mod reader;
 pub mod stats;
 
-pub use chunk::SparseChunk;
+pub use checkpoint::CheckpointCfg;
+pub use chunk::{RowMeta, SparseChunk};
+pub use fault::{corrupt_libsvm_text, corrupt_model_bytes, FaultPlan, FaultyReader};
 pub use featurize::{StreamFeaturizer, StreamFeatures};
 pub use fit::{fit_streaming, StreamFit, StreamOpts};
+pub use policy::{GuardedReader, IngestPolicy, OnBadRecord, Quarantine};
 pub use reader::{ChunkReader, CsvChunks, LibsvmChunks};
 pub use stats::{stats_pass, StreamStats};

@@ -1,0 +1,302 @@
+//! Ingest fault policy: what a streamed fit does when the input is dirty
+//! or the reader hiccups.
+//!
+//! Three failure classes get three distinct treatments:
+//!
+//! - **Malformed records** (unparseable lines) and **non-finite records**
+//!   (NaN/Inf labels or values): governed by [`OnBadRecord`]. `Strict`
+//!   (the default) surfaces the first offender as a located
+//!   [`ScrbError::BadRecord`]; `Quarantine` skips the row, counts it, and
+//!   keeps a capped sample of offenders with file/line/byte context in a
+//!   [`Quarantine`] report. Skipping is per *line*, deterministically, so
+//!   a row dropped in the stats pass is dropped again in the featurize
+//!   pass — the min/span frame, row count, and label census stay
+//!   consistent across the two passes.
+//! - **Transient I/O errors** ([`ScrbError::Transient`]): retried with
+//!   bounded exponential backoff by [`GuardedReader`], whatever the
+//!   record policy; only after [`IngestPolicy::max_retries`] consecutive
+//!   failures does the error surface (with its attempt count).
+//!
+//! [`GuardedReader`] is the enforcement point the fit driver wraps every
+//! reader in: retry loop on top, then a non-finite screen over the parsed
+//! chunk (rows can acquire NaN/Inf *after* parsing — e.g. an injected
+//! fault from [`super::FaultyReader`] — so the parser-level checks alone
+//! are not sufficient).
+//!
+//! [`ScrbError::BadRecord`]: crate::error::ScrbError::BadRecord
+//! [`ScrbError::Transient`]: crate::error::ScrbError::Transient
+
+use super::chunk::SparseChunk;
+use super::reader::ChunkReader;
+use crate::error::{RecordError, RecordKind, ScrbError};
+
+/// What to do with a malformed or non-finite input record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum OnBadRecord {
+    /// Fail the fit on the first bad record with a located, typed error.
+    #[default]
+    Strict,
+    /// Skip bad records, count them, and sample offenders into the
+    /// [`Quarantine`] report.
+    Quarantine,
+}
+
+impl OnBadRecord {
+    /// Parse the CLI spelling (`--on-bad-record strict|quarantine`).
+    pub fn parse(s: &str) -> Result<OnBadRecord, ScrbError> {
+        match s {
+            "strict" => Ok(OnBadRecord::Strict),
+            "quarantine" => Ok(OnBadRecord::Quarantine),
+            other => Err(ScrbError::config(format!(
+                "unknown bad-record policy '{other}' (strict|quarantine)"
+            ))),
+        }
+    }
+}
+
+/// Fault-handling knobs for streamed ingestion.
+#[derive(Clone, Debug)]
+pub struct IngestPolicy {
+    pub on_bad_record: OnBadRecord,
+    /// Max offender samples kept in the quarantine report (counts are
+    /// always exact; only the per-record context is capped).
+    pub sample_cap: usize,
+    /// Consecutive transient-failure retries before giving up.
+    pub max_retries: u32,
+    /// Base backoff between retries; doubles per attempt (0 = no sleep,
+    /// what tests use).
+    pub retry_backoff_ms: u64,
+}
+
+impl Default for IngestPolicy {
+    fn default() -> Self {
+        IngestPolicy {
+            on_bad_record: OnBadRecord::Strict,
+            sample_cap: 16,
+            max_retries: 3,
+            retry_backoff_ms: 20,
+        }
+    }
+}
+
+/// What quarantine-mode ingestion skipped (and what the retry layer
+/// absorbed) over one pass. Counts are exact; `samples` is capped at
+/// [`IngestPolicy::sample_cap`].
+#[derive(Clone, Debug, Default)]
+pub struct Quarantine {
+    /// Rows skipped because they could not be parsed.
+    pub malformed: usize,
+    /// Rows skipped because they carried NaN/Inf labels or values.
+    pub non_finite: usize,
+    /// Transient reader errors absorbed by the retry loop.
+    pub retries: usize,
+    /// Capped sample of skipped records with full source context.
+    pub samples: Vec<RecordError>,
+}
+
+impl Quarantine {
+    /// Total rows skipped (malformed + non-finite).
+    pub fn skipped(&self) -> usize {
+        self.malformed + self.non_finite
+    }
+
+    /// One-line report for logs and the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} rows quarantined ({} malformed, {} non-finite), {} transient retries",
+            self.skipped(),
+            self.malformed,
+            self.non_finite,
+            self.retries
+        )
+    }
+
+    pub(crate) fn record(&mut self, rec: RecordError, cap: usize) {
+        match rec.kind {
+            RecordKind::Malformed => self.malformed += 1,
+            RecordKind::NonFinite => self.non_finite += 1,
+        }
+        if self.samples.len() < cap {
+            self.samples.push(rec);
+        }
+    }
+
+    /// Fold another layer's per-pass counts into this report.
+    pub(crate) fn absorb(&mut self, other: &Quarantine) {
+        self.malformed += other.malformed;
+        self.non_finite += other.non_finite;
+        self.retries += other.retries;
+        for s in &other.samples {
+            self.samples.push(s.clone());
+        }
+    }
+
+    pub(crate) fn clear(&mut self) {
+        self.malformed = 0;
+        self.non_finite = 0;
+        self.retries = 0;
+        self.samples.clear();
+    }
+}
+
+/// The fault-policy enforcement decorator the streaming fit wraps every
+/// reader in: bounded retry with backoff for [`ScrbError::Transient`]
+/// failures, plus a non-finite screen over each parsed chunk (values that
+/// went bad *after* parsing — injected faults, adapter bugs — which the
+/// parsers cannot see).
+///
+/// Line-level handling of malformed records happens below this layer,
+/// inside the text readers (only the line pump can skip a bad line and
+/// keep going); `GuardedReader` pushes the policy down via
+/// [`ChunkReader::set_policy`] and merges the reader's per-pass counts
+/// into [`GuardedReader::report`].
+///
+/// [`ScrbError::Transient`]: crate::error::ScrbError::Transient
+pub struct GuardedReader<'a> {
+    inner: &'a mut dyn ChunkReader,
+    policy: IngestPolicy,
+    /// This layer's per-pass skips (non-finite screening) and the
+    /// cumulative retry count.
+    screen: Quarantine,
+}
+
+impl<'a> GuardedReader<'a> {
+    pub fn new(inner: &'a mut dyn ChunkReader, policy: IngestPolicy) -> GuardedReader<'a> {
+        inner.set_policy(&policy);
+        GuardedReader { inner, policy, screen: Quarantine::default() }
+    }
+
+    /// The merged quarantine report for the most recent pass: this
+    /// layer's non-finite skips and retries plus the wrapped reader's
+    /// line-level skips.
+    pub fn report(&self) -> Quarantine {
+        let mut q = self.screen.clone();
+        if let Some(inner_q) = self.inner.quarantine() {
+            q.absorb(inner_q);
+        }
+        q
+    }
+}
+
+impl ChunkReader for GuardedReader<'_> {
+    fn next_chunk(&mut self, chunk: &mut SparseChunk) -> Result<bool, ScrbError> {
+        let mut attempts = 0u32;
+        let more = loop {
+            match self.inner.next_chunk(chunk) {
+                Ok(m) => break m,
+                Err(ScrbError::Transient { msg, .. }) => {
+                    attempts += 1;
+                    if attempts > self.policy.max_retries {
+                        return Err(ScrbError::Transient { msg, attempts });
+                    }
+                    self.screen.retries += 1;
+                    let ms = self
+                        .policy
+                        .retry_backoff_ms
+                        .saturating_mul(1u64 << (attempts - 1).min(6));
+                    if ms > 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(ms));
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        };
+        // fast path: a clean chunk costs one linear scan over the values
+        if chunk.values.iter().all(|v| v.is_finite()) {
+            return Ok(more);
+        }
+        let has_meta = chunk.meta.len() == chunk.rows();
+        let mut bad = vec![false; chunk.rows()];
+        for i in 0..chunk.rows() {
+            let (_, vals) = chunk.row(i);
+            let Some(&v) = vals.iter().find(|v| !v.is_finite()) else { continue };
+            bad[i] = true;
+            let m = if has_meta { chunk.meta[i] } else { Default::default() };
+            let rec = RecordError {
+                file: self.inner.source_name().to_string(),
+                line: m.line,
+                byte: m.byte,
+                token: format!("{v}"),
+                reason: "non-finite value".to_string(),
+                kind: RecordKind::NonFinite,
+            };
+            match self.policy.on_bad_record {
+                OnBadRecord::Strict => return Err(ScrbError::bad_record(rec)),
+                OnBadRecord::Quarantine => self.screen.record(rec, self.policy.sample_cap),
+            }
+        }
+        chunk.retain_rows(|i| !bad[i]);
+        // `more` is the inner reader's verdict: the chunk may now be
+        // empty even mid-stream (every row quarantined) — consumers must
+        // key on the return value, not on emptiness
+        Ok(more)
+    }
+
+    fn reset(&mut self) -> Result<(), ScrbError> {
+        self.inner.reset()?;
+        // per-pass skip counts restart (the same rows are skipped again in
+        // the next pass); the retry count stays cumulative across passes
+        let retries = self.screen.retries;
+        self.screen.clear();
+        self.screen.retries = retries;
+        Ok(())
+    }
+
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn chunk_rows(&self) -> usize {
+        self.inner.chunk_rows()
+    }
+
+    fn source_name(&self) -> &str {
+        self.inner.source_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::LibsvmChunks;
+
+    #[test]
+    fn policy_parses_and_defaults_to_strict() {
+        assert_eq!(OnBadRecord::parse("strict").unwrap(), OnBadRecord::Strict);
+        assert_eq!(OnBadRecord::parse("quarantine").unwrap(), OnBadRecord::Quarantine);
+        assert!(OnBadRecord::parse("lenient").is_err());
+        assert_eq!(IngestPolicy::default().on_bad_record, OnBadRecord::Strict);
+    }
+
+    #[test]
+    fn guarded_reader_passes_clean_chunks_through() {
+        let text = b"1 1:0.5 2:1.5\n2 1:1.0\n".to_vec();
+        let mut inner = LibsvmChunks::from_bytes(text, 8);
+        let mut g = GuardedReader::new(&mut inner, IngestPolicy::default());
+        let mut chunk = SparseChunk::new();
+        assert!(g.next_chunk(&mut chunk).unwrap());
+        assert_eq!(chunk.rows(), 2);
+        assert!(!g.next_chunk(&mut chunk).unwrap());
+        assert_eq!(g.report().skipped(), 0);
+    }
+
+    #[test]
+    fn quarantine_summary_counts_both_kinds() {
+        let mut q = Quarantine::default();
+        let rec = |kind| RecordError {
+            file: "f".into(),
+            line: 1,
+            byte: 0,
+            token: "t".into(),
+            reason: "r".into(),
+            kind,
+        };
+        q.record(rec(RecordKind::Malformed), 1);
+        q.record(rec(RecordKind::NonFinite), 1);
+        q.record(rec(RecordKind::NonFinite), 1);
+        assert_eq!(q.skipped(), 3);
+        assert_eq!(q.samples.len(), 1, "sample cap respected, counts exact");
+        assert!(q.summary().contains("1 malformed"));
+        assert!(q.summary().contains("2 non-finite"));
+    }
+}

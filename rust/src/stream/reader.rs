@@ -22,9 +22,24 @@
 //! Feature dimension is discovered as rows stream by ([`ChunkReader::dim`]
 //! is final only after a complete pass) — which is why the fit's first
 //! pass doubles as the dimension scan.
+//!
+//! Every parse failure is a located [`ScrbError::BadRecord`] carrying the
+//! source name, 1-based line number, byte offset of the line start, and
+//! the quoted offending token — for LibSVM and CSV alike. Under
+//! [`OnBadRecord::Quarantine`] (pushed down via
+//! [`ChunkReader::set_policy`]) a bad line is rolled back, counted, and
+//! sampled into a per-pass [`Quarantine`] report instead of aborting;
+//! skipping is a pure function of the line text, so both passes of a fit
+//! drop exactly the same rows. Raw I/O failures are
+//! [`ScrbError::Transient`] — the retryable class [`super::GuardedReader`]
+//! absorbs — never parse errors.
+//!
+//! [`ScrbError::BadRecord`]: crate::error::ScrbError::BadRecord
+//! [`ScrbError::Transient`]: crate::error::ScrbError::Transient
 
-use super::chunk::SparseChunk;
-use crate::error::ScrbError;
+use super::chunk::{RowMeta, SparseChunk};
+use super::policy::{IngestPolicy, OnBadRecord, Quarantine};
+use crate::error::{RecordError, RecordKind, ScrbError};
 use std::fs::File;
 use std::io::{BufRead, BufReader, Seek, SeekFrom};
 
@@ -47,6 +62,49 @@ pub trait ChunkReader {
     /// Target rows per chunk (the resident-input-memory knob: the
     /// featurize pass holds one `chunk_rows × d` dense scratch).
     fn chunk_rows(&self) -> usize;
+
+    /// Name of the underlying source for error context (file path, or
+    /// `"<memory>"`).
+    fn source_name(&self) -> &str {
+        "<stream>"
+    }
+
+    /// Push the ingest fault policy down to the line level. Readers with
+    /// no line-level failure mode ignore it.
+    fn set_policy(&mut self, _policy: &IngestPolicy) {}
+
+    /// This reader's own per-pass quarantine counts, if it quarantines at
+    /// all (decorators report theirs separately and merge).
+    fn quarantine(&self) -> Option<&Quarantine> {
+        None
+    }
+}
+
+/// Clip a token for error context: bounded length, no control characters
+/// (the offending text may be arbitrary garbage).
+fn clip_token(tok: &str) -> String {
+    let mut out = String::new();
+    for c in tok.chars().take(32) {
+        out.push(if c.is_control() { '?' } else { c });
+    }
+    if tok.chars().nth(32).is_some() {
+        out.push('…');
+    }
+    out
+}
+
+/// A parser-level record rejection. File name and byte offset are blank
+/// here — only the line pump knows them, and it patches them in before
+/// the error escapes (see `process_line`).
+fn rec_err(lineno: usize, token: &str, reason: impl Into<String>, kind: RecordKind) -> ScrbError {
+    ScrbError::bad_record(RecordError {
+        file: String::new(),
+        line: lineno,
+        byte: 0,
+        token: clip_token(token),
+        reason: reason.into(),
+        kind,
+    })
 }
 
 /// Parse one LibSVM line (`label idx:val ...`, 1-based strictly-ascending
@@ -57,7 +115,9 @@ pub trait ChunkReader {
 /// Ascending indices are the LibSVM convention; enforcing them here also
 /// rules out duplicate indices within a row — which would make "presence"
 /// ambiguous and break the streamed statistics' exact equivalence with
-/// the densified scan.
+/// the densified scan. NaN/Inf labels or values are rejected as
+/// [`RecordKind::NonFinite`] (they would silently poison the min/span
+/// frame otherwise).
 pub(crate) fn parse_libsvm_line(
     line: &str,
     lineno: usize,
@@ -69,42 +129,121 @@ pub(crate) fn parse_libsvm_line(
         return Ok(false);
     }
     let mut parts = line.split_whitespace();
-    let label_tok = parts
-        .next()
-        .ok_or_else(|| ScrbError::parse(format!("line {lineno}: empty")))?;
-    let label = label_tok
+    let Some(label_tok) = parts.next() else { return Ok(false) };
+    let labelf = label_tok
         .parse::<f64>()
-        .map_err(|_| ScrbError::parse(format!("line {lineno}: bad label '{label_tok}'")))?
-        as i64;
-    chunk.begin_row(label);
+        .map_err(|_| rec_err(lineno, label_tok, "bad label", RecordKind::Malformed))?;
+    if !labelf.is_finite() {
+        return Err(rec_err(lineno, label_tok, "non-finite label", RecordKind::NonFinite));
+    }
+    chunk.begin_row(labelf as i64);
     let mut prev_idx = 0usize;
+    let mut row_max = 0usize;
     for tok in parts {
-        let (is, vs) = tok
-            .split_once(':')
-            .ok_or_else(|| ScrbError::parse(format!("line {lineno}: bad feature '{tok}'")))?;
-        let idx: usize = is
-            .parse()
-            .map_err(|_| ScrbError::parse(format!("line {lineno}: bad index '{is}'")))?;
+        let (is, vs) = tok.split_once(':').ok_or_else(|| {
+            rec_err(lineno, tok, "bad feature (expected idx:val)", RecordKind::Malformed)
+        })?;
+        let idx: usize =
+            is.parse().map_err(|_| rec_err(lineno, is, "bad index", RecordKind::Malformed))?;
         if idx == 0 {
-            return Err(ScrbError::parse(format!("line {lineno}: LibSVM indices are 1-based")));
+            return Err(rec_err(lineno, is, "LibSVM indices are 1-based", RecordKind::Malformed));
         }
         if idx > u32::MAX as usize {
-            return Err(ScrbError::parse(format!("line {lineno}: index {idx} overflows u32")));
+            return Err(rec_err(
+                lineno,
+                is,
+                format!("index {idx} overflows u32"),
+                RecordKind::Malformed,
+            ));
         }
         if idx <= prev_idx {
-            return Err(ScrbError::parse(format!(
-                "line {lineno}: indices must be strictly ascending ({prev_idx} then {idx})"
-            )));
+            return Err(rec_err(
+                lineno,
+                tok,
+                format!("indices must be strictly ascending ({prev_idx} then {idx})"),
+                RecordKind::Malformed,
+            ));
         }
         prev_idx = idx;
-        let val: f64 = vs
-            .parse()
-            .map_err(|_| ScrbError::parse(format!("line {lineno}: bad value '{vs}'")))?;
-        *max_dim = (*max_dim).max(idx);
+        let val: f64 =
+            vs.parse().map_err(|_| rec_err(lineno, vs, "bad value", RecordKind::Malformed))?;
+        if !val.is_finite() {
+            return Err(rec_err(lineno, vs, "non-finite value", RecordKind::NonFinite));
+        }
+        row_max = row_max.max(idx);
         chunk.push_entry((idx - 1) as u32, val);
     }
+    // commit the dimension only for rows that fully parse: a quarantined
+    // row must not be able to grow d
+    *max_dim = (*max_dim).max(row_max);
     chunk.end_row();
     Ok(true)
+}
+
+/// Feed one line through `parse` under the ingest policy: on success,
+/// record the row's source context; on a bad record, roll the chunk back
+/// to its pre-row state, patch the source name and byte offset into the
+/// error, and either surface it (strict) or quarantine it. A free
+/// function over disjoint `TextChunks` fields so the line pump can hold
+/// its source borrow across the call.
+#[allow(clippy::too_many_arguments)]
+fn process_line(
+    line: &str,
+    lineno: usize,
+    line_start: u64,
+    name: &str,
+    policy: &IngestPolicy,
+    quarantine: &mut Quarantine,
+    chunk: &mut SparseChunk,
+    parse: &mut impl FnMut(&str, usize, &mut SparseChunk) -> Result<bool, ScrbError>,
+) -> Result<(), ScrbError> {
+    let (rows0, nnz0) = (chunk.rows(), chunk.nnz());
+    match parse(line, lineno, chunk) {
+        Ok(true) => {
+            chunk.meta.push(RowMeta { line: lineno, byte: line_start });
+            Ok(())
+        }
+        Ok(false) => Ok(()),
+        Err(e) => {
+            chunk.truncate_rows(rows0, nnz0);
+            let ScrbError::BadRecord(mut rec) = e else { return Err(e) };
+            rec.file = name.to_string();
+            rec.byte = line_start;
+            match policy.on_bad_record {
+                OnBadRecord::Strict => Err(ScrbError::BadRecord(rec)),
+                OnBadRecord::Quarantine => {
+                    quarantine.record(*rec, policy.sample_cap);
+                    Ok(())
+                }
+            }
+        }
+    }
+}
+
+/// Reject a line that is not valid UTF-8 (strict: error out; quarantine:
+/// count and continue).
+fn reject_invalid_utf8(
+    lineno: usize,
+    line_start: u64,
+    name: &str,
+    policy: &IngestPolicy,
+    quarantine: &mut Quarantine,
+) -> Result<(), ScrbError> {
+    let rec = RecordError {
+        file: name.to_string(),
+        line: lineno,
+        byte: line_start,
+        token: "<invalid utf-8>".to_string(),
+        reason: "invalid UTF-8".to_string(),
+        kind: RecordKind::Malformed,
+    };
+    match policy.on_bad_record {
+        OnBadRecord::Strict => Err(ScrbError::bad_record(rec)),
+        OnBadRecord::Quarantine => {
+            quarantine.record(rec, policy.sample_cap);
+            Ok(())
+        }
+    }
 }
 
 /// Where a text reader's bytes come from.
@@ -116,17 +255,27 @@ enum Source {
 }
 
 /// Shared line pump for the text backends: owns the byte source, the
-/// reusable line buffer, the chunk loop, and the rewind logic. A backend
-/// is just this plus a per-line parser and its dimension state — so line
-/// handling can never drift between formats.
+/// reusable line buffer, the chunk loop, the rewind logic, and the
+/// per-line fault policy. A backend is just this plus a per-line parser
+/// and its dimension state — so line handling (and quarantine semantics)
+/// can never drift between formats.
 struct TextChunks {
     source: Source,
+    /// Source name for error context (path or `"<memory>"`).
+    name: String,
     /// Cursor into `Source::Mem` bytes.
     pos: usize,
-    /// Reusable line buffer for `Source::File`.
-    line_buf: String,
+    /// Byte offset of the next unread line's start (both backends).
+    byte: u64,
+    /// Reusable raw line buffer for `Source::File` (bytes, not `String`,
+    /// so invalid UTF-8 is a quarantinable record with an exact byte
+    /// span, not an opaque io error).
+    line_buf: Vec<u8>,
     lineno: usize,
     chunk_rows: usize,
+    policy: IngestPolicy,
+    /// Per-pass line-level quarantine report; cleared on reset.
+    quarantine: Quarantine,
 }
 
 impl TextChunks {
@@ -135,16 +284,30 @@ impl TextChunks {
         let file = File::open(path).map_err(|e| ScrbError::io(path, e))?;
         Ok(TextChunks {
             source: Source::File(BufReader::new(file)),
+            name: path.to_string(),
             pos: 0,
-            line_buf: String::new(),
+            byte: 0,
+            line_buf: Vec::new(),
             lineno: 0,
             chunk_rows,
+            policy: IngestPolicy::default(),
+            quarantine: Quarantine::default(),
         })
     }
 
     fn from_bytes(bytes: Vec<u8>, chunk_rows: usize) -> TextChunks {
         assert!(chunk_rows >= 1, "chunk_rows must be at least 1");
-        TextChunks { source: Source::Mem(bytes), pos: 0, line_buf: String::new(), lineno: 0, chunk_rows }
+        TextChunks {
+            source: Source::Mem(bytes),
+            name: "<memory>".to_string(),
+            pos: 0,
+            byte: 0,
+            line_buf: Vec::new(),
+            lineno: 0,
+            chunk_rows,
+            policy: IngestPolicy::default(),
+            quarantine: Quarantine::default(),
+        }
     }
 
     /// Fill `chunk` (cleared first) by feeding lines to `parse` until
@@ -164,23 +327,63 @@ impl TextChunks {
                     let rest = &bytes[self.pos..];
                     let take =
                         rest.iter().position(|&b| b == b'\n').map(|p| p + 1).unwrap_or(rest.len());
+                    let line_start = self.byte;
                     self.pos += take;
+                    self.byte += take as u64;
                     self.lineno += 1;
-                    let line = std::str::from_utf8(&rest[..take]).map_err(|_| {
-                        ScrbError::parse(format!("line {}: invalid UTF-8", self.lineno))
-                    })?;
-                    parse(line, self.lineno, chunk)?;
+                    match std::str::from_utf8(&rest[..take]) {
+                        Ok(line) => process_line(
+                            line,
+                            self.lineno,
+                            line_start,
+                            &self.name,
+                            &self.policy,
+                            &mut self.quarantine,
+                            chunk,
+                            &mut parse,
+                        )?,
+                        Err(_) => reject_invalid_utf8(
+                            self.lineno,
+                            line_start,
+                            &self.name,
+                            &self.policy,
+                            &mut self.quarantine,
+                        )?,
+                    }
                 }
                 Source::File(reader) => {
                     self.line_buf.clear();
-                    let n = reader.read_line(&mut self.line_buf).map_err(|e| {
-                        ScrbError::parse(format!("read error at line {}: {e}", self.lineno + 1))
+                    let n = reader.read_until(b'\n', &mut self.line_buf).map_err(|e| {
+                        ScrbError::transient(format!(
+                            "read error at line {}: {e}",
+                            self.lineno + 1
+                        ))
                     })?;
                     if n == 0 {
                         break;
                     }
+                    let line_start = self.byte;
+                    self.byte += n as u64;
                     self.lineno += 1;
-                    parse(&self.line_buf, self.lineno, chunk)?;
+                    match std::str::from_utf8(&self.line_buf) {
+                        Ok(line) => process_line(
+                            line,
+                            self.lineno,
+                            line_start,
+                            &self.name,
+                            &self.policy,
+                            &mut self.quarantine,
+                            chunk,
+                            &mut parse,
+                        )?,
+                        Err(_) => reject_invalid_utf8(
+                            self.lineno,
+                            line_start,
+                            &self.name,
+                            &self.policy,
+                            &mut self.quarantine,
+                        )?,
+                    }
                 }
             }
         }
@@ -189,11 +392,11 @@ impl TextChunks {
 
     fn reset(&mut self) -> Result<(), ScrbError> {
         self.pos = 0;
+        self.byte = 0;
         self.lineno = 0;
+        self.quarantine.clear();
         if let Source::File(reader) = &mut self.source {
-            reader
-                .seek(SeekFrom::Start(0))
-                .map_err(|e| ScrbError::parse(format!("rewind failed: {e}")))?;
+            reader.seek(SeekFrom::Start(0)).map_err(|e| ScrbError::io(self.name.clone(), e))?;
         }
         Ok(())
     }
@@ -237,10 +440,24 @@ impl ChunkReader for LibsvmChunks {
     fn chunk_rows(&self) -> usize {
         self.text.chunk_rows
     }
+
+    fn source_name(&self) -> &str {
+        &self.text.name
+    }
+
+    fn set_policy(&mut self, policy: &IngestPolicy) {
+        self.text.policy = policy.clone();
+    }
+
+    fn quarantine(&self) -> Option<&Quarantine> {
+        Some(&self.text.quarantine)
+    }
 }
 
 /// Parse one dense CSV line (`label,v1,...,vd`) into `chunk`. `d` is
-/// `None` until the first data row fixes it; later rows must match.
+/// `None` until the first data row fixes it; later rows must match
+/// (ragged rows are malformed records). NaN/Inf labels or values are
+/// rejected as [`RecordKind::NonFinite`].
 pub(crate) fn parse_csv_line(
     line: &str,
     lineno: usize,
@@ -252,30 +469,35 @@ pub(crate) fn parse_csv_line(
         return Ok(false);
     }
     let mut parts = line.split(',');
-    let label_tok = parts
-        .next()
-        .ok_or_else(|| ScrbError::parse(format!("line {lineno}: empty")))?
-        .trim();
-    let label = label_tok
+    let Some(label_tok) = parts.next() else { return Ok(false) };
+    let label_tok = label_tok.trim();
+    let labelf = label_tok
         .parse::<f64>()
-        .map_err(|_| ScrbError::parse(format!("line {lineno}: bad label '{label_tok}'")))?
-        as i64;
-    chunk.begin_row(label);
+        .map_err(|_| rec_err(lineno, label_tok, "bad label", RecordKind::Malformed))?;
+    if !labelf.is_finite() {
+        return Err(rec_err(lineno, label_tok, "non-finite label", RecordKind::NonFinite));
+    }
+    chunk.begin_row(labelf as i64);
     let mut count = 0usize;
     for tok in parts {
         let tok = tok.trim();
-        let val: f64 = tok
-            .parse()
-            .map_err(|_| ScrbError::parse(format!("line {lineno}: bad value '{tok}'")))?;
+        let val: f64 =
+            tok.parse().map_err(|_| rec_err(lineno, tok, "bad value", RecordKind::Malformed))?;
+        if !val.is_finite() {
+            return Err(rec_err(lineno, tok, "non-finite value", RecordKind::NonFinite));
+        }
         chunk.push_entry(count as u32, val);
         count += 1;
     }
     match *d {
         None => *d = Some(count),
         Some(expect) if expect != count => {
-            return Err(ScrbError::parse(format!(
-                "line {lineno}: {count} features, expected {expect}"
-            )));
+            return Err(rec_err(
+                lineno,
+                line,
+                format!("{count} features, expected {expect}"),
+                RecordKind::Malformed,
+            ));
         }
         _ => {}
     }
@@ -321,6 +543,18 @@ impl ChunkReader for CsvChunks {
     fn chunk_rows(&self) -> usize {
         self.text.chunk_rows
     }
+
+    fn source_name(&self) -> &str {
+        &self.text.name
+    }
+
+    fn set_policy(&mut self, policy: &IngestPolicy) {
+        self.text.policy = policy.clone();
+    }
+
+    fn quarantine(&self) -> Option<&Quarantine> {
+        Some(&self.text.quarantine)
+    }
 }
 
 #[cfg(test)]
@@ -345,6 +579,7 @@ mod tests {
         let mut chunks = 0usize;
         while r.next_chunk(&mut chunk).unwrap() {
             assert!(chunk.rows() <= 2);
+            assert_eq!(chunk.meta.len(), chunk.rows(), "meta stays row-aligned");
             rows += chunk.rows();
             nnz += chunk.nnz();
             chunks += 1;
@@ -393,11 +628,83 @@ mod tests {
             "1 9999999999999:1\n",
             "1 2:1.0 2:2.0\n", // duplicate index
             "1 3:1.0 2:2.0\n", // out-of-order indices
+            "1 1:nan\n",       // non-finite value
+            "inf 1:1.0\n",     // non-finite label
         ] {
             let mut r = LibsvmChunks::from_bytes(bad.as_bytes().to_vec(), 4);
             let mut chunk = SparseChunk::new();
             assert!(r.next_chunk(&mut chunk).is_err(), "{bad:?}");
         }
+    }
+
+    #[test]
+    fn strict_errors_carry_location() {
+        let text = "1 1:0.5\n2 2:oops\n";
+        let mut r = LibsvmChunks::from_bytes(text.as_bytes().to_vec(), 8);
+        let mut chunk = SparseChunk::new();
+        let err = r.next_chunk(&mut chunk).unwrap_err();
+        let ScrbError::BadRecord(rec) = err else { panic!("expected BadRecord, got {err}") };
+        assert_eq!(rec.file, "<memory>");
+        assert_eq!(rec.line, 2);
+        assert_eq!(rec.byte, 8, "byte offset of the offending line's start");
+        assert_eq!(rec.token, "oops");
+        assert_eq!(rec.kind, RecordKind::Malformed);
+    }
+
+    #[test]
+    fn quarantine_skips_bad_lines_with_exact_counts() {
+        let quarantine_policy = IngestPolicy {
+            on_bad_record: OnBadRecord::Quarantine,
+            ..IngestPolicy::default()
+        };
+        let text = "1 1:0.5\n1 nocolon\n2 1:nan\n-1 2:2.0 9:0.1\nnan 1:1.0\n2 1:1.0\n";
+        let mut r = LibsvmChunks::from_bytes(text.as_bytes().to_vec(), 64);
+        r.set_policy(&quarantine_policy);
+        let mut chunk = SparseChunk::new();
+        assert!(r.next_chunk(&mut chunk).unwrap());
+        assert_eq!(chunk.labels, vec![1, -1, 2], "only good rows survive");
+        assert_eq!(chunk.meta[1].line, 4, "meta points at the source line");
+        let q = r.quarantine().unwrap();
+        assert_eq!(q.malformed, 1);
+        assert_eq!(q.non_finite, 2);
+        assert_eq!(q.samples.len(), 3);
+        assert_eq!(q.samples[0].line, 2);
+        assert_eq!(q.samples[1].kind, RecordKind::NonFinite);
+        // d is untouched by quarantined rows; survivors still grow it
+        assert_eq!(r.dim(), 9);
+        // a second pass replays the same decisions from a clean slate
+        r.reset().unwrap();
+        assert_eq!(r.quarantine().unwrap().skipped(), 0);
+        assert!(r.next_chunk(&mut chunk).unwrap());
+        assert_eq!(chunk.labels, vec![1, -1, 2]);
+        assert_eq!(r.quarantine().unwrap().skipped(), 3);
+    }
+
+    #[test]
+    fn quarantine_handles_invalid_utf8_and_partial_rows() {
+        let quarantine_policy = IngestPolicy {
+            on_bad_record: OnBadRecord::Quarantine,
+            ..IngestPolicy::default()
+        };
+        // middle line is invalid UTF-8; last bad line fails mid-row after
+        // two good entries (rollback must discard them)
+        let mut text = b"1 1:0.5\n".to_vec();
+        text.extend_from_slice(&[0xff, 0xfe, b'\n']);
+        text.extend_from_slice(b"2 1:1.0 2:2.0 3:bad\n-1 1:0.25\n");
+        let mut r = LibsvmChunks::from_bytes(text, 64);
+        r.set_policy(&quarantine_policy);
+        let mut chunk = SparseChunk::new();
+        assert!(r.next_chunk(&mut chunk).unwrap());
+        assert_eq!(chunk.labels, vec![1, -1]);
+        assert_eq!(chunk.nnz(), 2, "partial row fully rolled back");
+        let q = r.quarantine().unwrap();
+        assert_eq!(q.malformed, 2);
+        assert_eq!(q.samples[0].token, "<invalid utf-8>");
+        // strict mode refuses the same bytes outright
+        let mut text = b"1 1:0.5\n".to_vec();
+        text.extend_from_slice(&[0xff, 0xfe, b'\n']);
+        let mut strict = LibsvmChunks::from_bytes(text, 64);
+        assert!(strict.next_chunk(&mut chunk).is_err());
     }
 
     #[test]
@@ -415,9 +722,36 @@ mod tests {
         assert!(r.next_chunk(&mut chunk).unwrap());
         assert_eq!(chunk.rows(), 1);
         assert!(!r.next_chunk(&mut chunk).unwrap());
-        // ragged rows are an error
+        // ragged rows are a located error
         let mut bad = CsvChunks::from_bytes(b"1,1.0,2.0\n2,1.0\n".to_vec(), 8);
-        assert!(bad.next_chunk(&mut chunk).is_err());
+        let err = bad.next_chunk(&mut chunk).unwrap_err();
+        let ScrbError::BadRecord(rec) = err else { panic!("expected BadRecord, got {err}") };
+        assert_eq!(rec.line, 2);
+        assert_eq!(rec.byte, 10);
+        // non-finite CSV values are typed NonFinite
+        let mut nf = CsvChunks::from_bytes(b"1,1.0,inf\n".to_vec(), 8);
+        let err = nf.next_chunk(&mut chunk).unwrap_err();
+        let ScrbError::BadRecord(rec) = err else { panic!("expected BadRecord, got {err}") };
+        assert_eq!(rec.kind, RecordKind::NonFinite);
+    }
+
+    #[test]
+    fn csv_quarantine_keeps_passes_consistent() {
+        let quarantine_policy = IngestPolicy {
+            on_bad_record: OnBadRecord::Quarantine,
+            ..IngestPolicy::default()
+        };
+        let text = "1,0.5,1.5\n2,nan,1.0\n3,1.0\n4,2.0,3.0\n";
+        let mut r = CsvChunks::from_bytes(text.as_bytes().to_vec(), 64);
+        r.set_policy(&quarantine_policy);
+        let mut chunk = SparseChunk::new();
+        assert!(r.next_chunk(&mut chunk).unwrap());
+        assert_eq!(chunk.labels, vec![1, 4]);
+        assert_eq!(r.quarantine().unwrap().non_finite, 1);
+        assert_eq!(r.quarantine().unwrap().malformed, 1);
+        r.reset().unwrap();
+        assert!(r.next_chunk(&mut chunk).unwrap());
+        assert_eq!(chunk.labels, vec![1, 4], "same rows skipped on every pass");
     }
 
     #[test]
@@ -433,6 +767,7 @@ mod tests {
         }
         assert_eq!(rows, 4);
         assert_eq!(r.dim(), 4);
+        assert_eq!(r.source_name(), path);
         r.reset().unwrap();
         let mut rows2 = 0;
         while r.next_chunk(&mut chunk).unwrap() {

@@ -1,0 +1,380 @@
+//! Fault-tolerance integration tests (ISSUE 6 acceptance): the ingest
+//! stack under injected faults, end to end through `fit_streaming`.
+//!
+//! - **Quarantine exactness**: a fit over corrupted text with
+//!   `--on-bad-record quarantine` skips exactly the corrupted rows and
+//!   produces the **byte-identical** model of a fit over the clean
+//!   subset; strict mode surfaces the first offender as a located
+//!   `ScrbError::BadRecord`.
+//! - **Transient invisibility**: injected transient I/O errors are
+//!   absorbed by the bounded-retry layer without changing a single model
+//!   byte; exhausted retries surface with the attempt count.
+//! - **Kill and resume**: a fit killed mid-featurize by an injected
+//!   permanent failure resumes from its checkpoint directory and produces
+//!   the byte-identical model of an uninterrupted fit — including under
+//!   simultaneous quarantine + transient faults, and resuming with
+//!   different parameters is a typed `ScrbError::Checkpoint`.
+//! - **Model integrity**: any truncation or byte flip of a saved `.scrb`
+//!   image is a typed `ScrbError::Model`, never a panic or a
+//!   silently-wrong model.
+//!
+//! The injection seed is `SCRB_FAULT_SEED` (default 42); CI sweeps
+//! several values.
+
+use scrb::cluster::{sc_rb, Env};
+use scrb::config::{Engine, Kernel, PipelineConfig};
+use scrb::data::{synth, Dataset};
+use scrb::error::ScrbError;
+use scrb::model::{FittedModel as _, ScRbModel};
+use scrb::stream::{
+    corrupt_libsvm_text, corrupt_model_bytes, fit_streaming, CheckpointCfg, FaultPlan,
+    FaultyReader, IngestPolicy, LibsvmChunks, OnBadRecord, StreamOpts,
+};
+use std::fmt::Write as _;
+
+/// Injection seed: `SCRB_FAULT_SEED` env var, default 42. CI runs the
+/// suite at several values; the properties below must hold for all of
+/// them.
+fn fault_seed() -> u64 {
+    std::env::var("SCRB_FAULT_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(42)
+}
+
+fn to_libsvm(ds: &Dataset) -> Vec<u8> {
+    let mut s = String::new();
+    for i in 0..ds.n() {
+        write!(s, "{}", ds.y[i] as i64).unwrap();
+        for (j, &v) in ds.x.row(i).iter().enumerate() {
+            if v != 0.0 {
+                write!(s, " {}:{v}", j + 1).unwrap();
+            }
+        }
+        s.push('\n');
+    }
+    s.into_bytes()
+}
+
+fn test_cfg(k: usize, r: usize, sigma: f64) -> PipelineConfig {
+    PipelineConfig::builder()
+        .k(k)
+        .r(r)
+        .kernel(Kernel::Laplacian { sigma })
+        .engine(Engine::Native)
+        .kmeans_replicates(2)
+        .seed(42)
+        .build()
+}
+
+/// Streaming-fit knobs shared by the tests: no retry sleeps.
+fn base_opts(k: usize, block_rows: usize) -> StreamOpts {
+    StreamOpts {
+        k: Some(k),
+        block_rows,
+        policy: IngestPolicy { retry_backoff_ms: 0, ..IngestPolicy::default() },
+        ..StreamOpts::default()
+    }
+}
+
+fn quarantine_opts(k: usize, block_rows: usize) -> StreamOpts {
+    let mut opts = base_opts(k, block_rows);
+    opts.policy.on_bad_record = OnBadRecord::Quarantine;
+    opts
+}
+
+fn tmpdir(tag: &str) -> String {
+    let dir = std::env::temp_dir()
+        .join(format!("scrb_faults_{tag}_{}", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string();
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The original text minus the lines `corrupt_libsvm_text` replaced: what
+/// a quarantined fit of the dirty text must be exactly equivalent to.
+fn drop_lines(bytes: &[u8], dropped: &[usize]) -> Vec<u8> {
+    let text = std::str::from_utf8(bytes).unwrap();
+    let mut out = String::new();
+    for (i, line) in text.lines().enumerate() {
+        if !dropped.contains(&i) {
+            out.push_str(line);
+            out.push('\n');
+        }
+    }
+    out.into_bytes()
+}
+
+#[test]
+fn quarantined_fit_equals_the_clean_subset_fit() {
+    let ds = synth::gaussian_blobs(220, 3, 3, 8.0, 5);
+    let bytes = to_libsvm(&ds);
+    let (dirty, replaced) = corrupt_libsvm_text(&bytes, fault_seed(), 120);
+    assert!(!replaced.is_empty(), "the corruption plan must replace some lines");
+    let cfg = test_cfg(3, 24, 0.6);
+
+    let opts = quarantine_opts(3, 64);
+    let mut dirty_reader = LibsvmChunks::from_bytes(dirty, 37);
+    let fit_q = fit_streaming(&Env::new(cfg.clone()), &mut dirty_reader, &opts).unwrap();
+
+    // exact counts, capped samples, full source context on every sample
+    assert_eq!(fit_q.quarantine.skipped(), replaced.len(), "counts are exact");
+    assert_eq!(fit_q.n, 220 - replaced.len());
+    assert!(!fit_q.quarantine.samples.is_empty());
+    assert!(fit_q.quarantine.samples.len() <= opts.policy.sample_cap);
+    assert_eq!(fit_q.quarantine.samples[0].line, replaced[0] + 1);
+    for s in &fit_q.quarantine.samples {
+        assert_eq!(s.file, "<memory>");
+        assert!(s.line >= 1);
+    }
+
+    // skipping the bad rows is *exactly* dropping them: byte-identical to
+    // a strict fit on the clean subset
+    let mut clean_reader = LibsvmChunks::from_bytes(drop_lines(&bytes, &replaced), 37);
+    let fit_c = fit_streaming(&Env::new(cfg), &mut clean_reader, &base_opts(3, 64)).unwrap();
+    assert_eq!(fit_c.quarantine.skipped(), 0);
+    assert_eq!(
+        fit_q.model.to_bytes(),
+        fit_c.model.to_bytes(),
+        "quarantined fit must equal the clean-subset fit byte for byte"
+    );
+    assert_eq!(fit_q.output.labels, fit_c.output.labels);
+    assert_eq!(fit_q.y, fit_c.y);
+}
+
+#[test]
+fn strict_mode_surfaces_the_first_offender_with_location() {
+    let ds = synth::gaussian_blobs(100, 2, 2, 8.0, 9);
+    let bytes = to_libsvm(&ds);
+    let (dirty, replaced) = corrupt_libsvm_text(&bytes, fault_seed(), 150);
+    assert!(!replaced.is_empty());
+    // expected byte offset of the first corrupted line's start
+    let text = std::str::from_utf8(&dirty).unwrap();
+    let mut byte = 0u64;
+    for (i, line) in text.lines().enumerate() {
+        if i == replaced[0] {
+            break;
+        }
+        byte += line.len() as u64 + 1;
+    }
+
+    let cfg = test_cfg(2, 16, 0.5);
+    let mut reader = LibsvmChunks::from_bytes(dirty, 16);
+    let err = fit_streaming(&Env::new(cfg), &mut reader, &base_opts(2, 32)).unwrap_err();
+    let ScrbError::BadRecord(rec) = err else { panic!("expected BadRecord, got {err}") };
+    assert_eq!(rec.file, "<memory>");
+    assert_eq!(rec.line, replaced[0] + 1, "1-based line of the first corrupted row");
+    assert_eq!(rec.byte, byte, "byte offset of the offending line's start");
+    assert!(!rec.token.is_empty());
+}
+
+#[test]
+fn injected_transients_are_byte_invisible_after_retry() {
+    let ds = synth::gaussian_blobs(150, 3, 3, 8.0, 13);
+    let bytes = to_libsvm(&ds);
+    let cfg = test_cfg(3, 16, 0.6);
+    let reference = {
+        let mut r = LibsvmChunks::from_bytes(bytes.clone(), 29);
+        fit_streaming(&Env::new(cfg.clone()), &mut r, &base_opts(3, 64)).unwrap()
+    };
+
+    // every next_chunk call fails exactly once before succeeding
+    let mut inner = LibsvmChunks::from_bytes(bytes, 29);
+    let plan =
+        FaultPlan { seed: fault_seed(), transient_permille: 1000, ..FaultPlan::default() };
+    let mut faulty = FaultyReader::new(&mut inner, plan);
+    let fit = fit_streaming(&Env::new(cfg), &mut faulty, &base_opts(3, 64)).unwrap();
+    assert!(fit.quarantine.retries > 0, "the retry layer must have absorbed faults");
+    assert_eq!(fit.quarantine.skipped(), 0);
+    assert_eq!(
+        fit.model.to_bytes(),
+        reference.model.to_bytes(),
+        "absorbed transients must not change a single model byte"
+    );
+    assert_eq!(fit.output.labels, reference.output.labels);
+}
+
+#[test]
+fn exhausted_retries_surface_with_the_attempt_count() {
+    let ds = synth::gaussian_blobs(60, 2, 2, 8.0, 3);
+    let mut inner = LibsvmChunks::from_bytes(to_libsvm(&ds), 16);
+    // a permanent failure from the first stats-pass read
+    let plan = FaultPlan { seed: fault_seed(), fail_at: Some((0, 0)), ..FaultPlan::default() };
+    let mut faulty = FaultyReader::new(&mut inner, plan);
+    let mut opts = base_opts(2, 32);
+    opts.policy.max_retries = 2;
+    let err = fit_streaming(&Env::new(test_cfg(2, 8, 0.5)), &mut faulty, &opts).unwrap_err();
+    match err {
+        ScrbError::Transient { attempts, .. } => {
+            assert_eq!(attempts, 3, "max_retries + the final failing attempt")
+        }
+        other => panic!("expected Transient, got {other}"),
+    }
+}
+
+#[test]
+fn kill_and_resume_reproduces_the_uninterrupted_fit() {
+    let ds = synth::gaussian_blobs(200, 3, 3, 8.0, 7);
+    let bytes = to_libsvm(&ds);
+    let cfg = test_cfg(3, 16, 0.6);
+    let reference = {
+        let mut r = LibsvmChunks::from_bytes(bytes.clone(), 16);
+        fit_streaming(&Env::new(cfg.clone()), &mut r, &base_opts(3, 32)).unwrap()
+    };
+
+    let dir = tmpdir("resume");
+    let ckpt = |resume: bool| CheckpointCfg {
+        every_rows: 48,
+        resume,
+        ..CheckpointCfg::new(dir.clone())
+    };
+
+    // run 1: killed mid-featurize (pass 1) once 120 rows have streamed
+    let killed = {
+        let mut inner = LibsvmChunks::from_bytes(bytes.clone(), 16);
+        let plan =
+            FaultPlan { seed: fault_seed(), fail_at: Some((1, 120)), ..FaultPlan::default() };
+        let mut faulty = FaultyReader::new(&mut inner, plan);
+        let opts = StreamOpts { checkpoint: Some(ckpt(false)), ..base_opts(3, 32) };
+        fit_streaming(&Env::new(cfg.clone()), &mut faulty, &opts)
+    };
+    assert!(matches!(killed.unwrap_err(), ScrbError::Transient { .. }));
+    let d = std::path::Path::new(&dir);
+    assert!(d.join("stats.bin").exists(), "pass-1 stats persisted before the kill");
+    assert!(d.join("state.bin").exists(), "mid-pass state persisted before the kill");
+
+    // run 2: fresh "process", fault gone, --resume
+    let resumed = {
+        let mut r = LibsvmChunks::from_bytes(bytes.clone(), 16);
+        let opts = StreamOpts { checkpoint: Some(ckpt(true)), ..base_opts(3, 32) };
+        fit_streaming(&Env::new(cfg.clone()), &mut r, &opts).unwrap()
+    };
+    assert_eq!(
+        resumed.model.to_bytes(),
+        reference.model.to_bytes(),
+        "resumed fit must serialize byte-identically to the uninterrupted fit"
+    );
+    assert_eq!(resumed.output.labels, reference.output.labels);
+    assert_eq!(resumed.y, reference.y);
+
+    // resuming under different fit parameters is a typed checkpoint error
+    let err = {
+        let mut r = LibsvmChunks::from_bytes(bytes, 16);
+        let opts = StreamOpts { checkpoint: Some(ckpt(true)), ..base_opts(3, 32) };
+        fit_streaming(&Env::new(test_cfg(3, 16, 0.9)), &mut r, &opts).unwrap_err()
+    };
+    assert!(matches!(err, ScrbError::Checkpoint(_)), "got {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn kill_and_resume_stays_byte_identical_under_quarantine_and_transients() {
+    let ds = synth::gaussian_blobs(200, 3, 3, 8.0, 11);
+    let (dirty, replaced) = corrupt_libsvm_text(&to_libsvm(&ds), fault_seed(), 100);
+    assert!(!replaced.is_empty());
+    let cfg = test_cfg(3, 16, 0.6);
+
+    // uninterrupted reference: quarantine policy, no faults, no checkpoint
+    let reference = {
+        let mut r = LibsvmChunks::from_bytes(dirty.clone(), 14);
+        fit_streaming(&Env::new(cfg.clone()), &mut r, &quarantine_opts(3, 32)).unwrap()
+    };
+    assert_eq!(reference.quarantine.skipped(), replaced.len());
+
+    let dir = tmpdir("resume_faulty");
+    let ckpt = |resume: bool| CheckpointCfg {
+        every_rows: 40,
+        resume,
+        ..CheckpointCfg::new(dir.clone())
+    };
+
+    // run 1: transient faults throughout, killed mid-featurize
+    let killed = {
+        let mut inner = LibsvmChunks::from_bytes(dirty.clone(), 14);
+        let plan = FaultPlan {
+            seed: fault_seed(),
+            transient_permille: 300,
+            fail_at: Some((1, 120)),
+            ..FaultPlan::default()
+        };
+        let mut faulty = FaultyReader::new(&mut inner, plan);
+        let opts = StreamOpts { checkpoint: Some(ckpt(false)), ..quarantine_opts(3, 32) };
+        fit_streaming(&Env::new(cfg.clone()), &mut faulty, &opts)
+    };
+    assert!(matches!(killed.unwrap_err(), ScrbError::Transient { .. }));
+    assert!(std::path::Path::new(&dir).join("state.bin").exists());
+
+    // run 2: resume with the kill gone but transient faults still firing
+    let resumed = {
+        let mut inner = LibsvmChunks::from_bytes(dirty, 14);
+        let plan =
+            FaultPlan { seed: fault_seed(), transient_permille: 300, ..FaultPlan::default() };
+        let mut faulty = FaultyReader::new(&mut inner, plan);
+        let opts = StreamOpts { checkpoint: Some(ckpt(true)), ..quarantine_opts(3, 32) };
+        fit_streaming(&Env::new(cfg), &mut faulty, &opts).unwrap()
+    };
+    assert_eq!(resumed.quarantine.skipped(), replaced.len(), "per-pass skips stay exact");
+    assert_eq!(
+        resumed.model.to_bytes(),
+        reference.model.to_bytes(),
+        "resume under quarantine + transient faults must stay byte-identical"
+    );
+    assert_eq!(resumed.output.labels, reference.output.labels);
+    assert_eq!(resumed.y, reference.y);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn model_corruption_is_always_a_typed_error() {
+    // a small real model keeps the exhaustive position sweeps fast
+    let ds = synth::gaussian_blobs(40, 2, 2, 8.0, 3);
+    let fitted = sc_rb::fit(&Env::new(test_cfg(2, 4, 0.5)), &ds.x).unwrap();
+    let model = fitted.model.into_any().downcast::<ScRbModel>().ok().unwrap();
+    let bytes = model.to_bytes();
+    assert!(ScRbModel::from_bytes(&bytes).is_ok());
+
+    // every truncation length
+    for cut in 0..bytes.len() {
+        match ScRbModel::from_bytes(&bytes[..cut]) {
+            Err(ScrbError::Model(_)) => {}
+            Err(other) => panic!("cut at {cut}: expected Model error, got {other}"),
+            Ok(_) => panic!("cut at {cut} loaded"),
+        }
+    }
+    // a single-bit flip at every byte position (bit chosen by position)
+    for pos in 0..bytes.len() {
+        let mut b = bytes.clone();
+        b[pos] ^= 1 << (pos % 8);
+        match ScRbModel::from_bytes(&b) {
+            Err(ScrbError::Model(_)) => {}
+            Err(other) => panic!("flip at {pos}: expected Model error, got {other}"),
+            Ok(_) => panic!("flip at {pos} loaded"),
+        }
+    }
+    // seeded structured corruptions: flips, overwrites, truncations
+    let seed = fault_seed();
+    for i in 0..200u64 {
+        let b = corrupt_model_bytes(&bytes, seed.wrapping_add(i));
+        assert_ne!(b, bytes, "corrupter must change the image (seed {i})");
+        match ScRbModel::from_bytes(&b) {
+            Err(ScrbError::Model(_)) => {}
+            Err(other) => panic!("seed {i}: expected Model error, got {other}"),
+            Ok(_) => panic!("seed {i}: corrupted image loaded"),
+        }
+    }
+}
+
+#[test]
+fn drift_monitor_counts_unseen_bins_on_streamed_models() {
+    let ds = synth::gaussian_blobs(120, 3, 2, 8.0, 17);
+    let bytes = to_libsvm(&ds);
+    let cfg = test_cfg(2, 16, 0.5);
+    let mut reader = LibsvmChunks::from_bytes(bytes, 30);
+    let fit = fit_streaming(&Env::new(cfg), &mut reader, &base_opts(2, 64)).unwrap();
+    // far off the training distribution: every grid lookup misses
+    let far = scrb::linalg::Mat::from_vec(2, 3, vec![1.0e3; 6]);
+    fit.model.predict(&far).unwrap();
+    let stats = fit.model.drift_stats();
+    assert_eq!(stats.points, 2);
+    assert!(stats.unseen > 0, "far-out points must miss the fit-time codebook");
+    assert!(stats.rate() > 0.0);
+}

@@ -224,6 +224,8 @@ fn legacy_scrb(cfg: &PipelineConfig, x: &Mat) -> (Vec<u8>, Vec<usize>) {
         proj,
         centroids: Mat::zeros(0, 0),
         norm: None,
+        drift: Default::default(),
+        unseen_warn: scrb::model::DEFAULT_UNSEEN_WARN,
     };
     let emb = model.transform(x).unwrap();
     let km = kmeans(&emb, &kopts(cfg), &NativeAssign);

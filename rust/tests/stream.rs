@@ -191,7 +191,14 @@ fn coordinator_streams_from_disk() {
     let cfg = test_cfg(2, 16, 0.5);
     let coord = Coordinator::new(cfg.clone(), 1);
     // file-backed fit (exercises the seek-rewind between passes)
-    let from_disk = coord.fit_streaming(&path, 33, 0.5, Some(2), 64).unwrap();
+    let from_disk = coord
+        .fit_streaming(
+            &path,
+            33,
+            0.5,
+            StreamOpts { k: Some(2), block_rows: 64, ..StreamOpts::default() },
+        )
+        .unwrap();
     std::fs::remove_file(&path).ok();
     // must equal the in-memory-bytes streamed fit bit for bit
     let mut reader = LibsvmChunks::from_bytes(bytes, 33);
@@ -218,6 +225,7 @@ fn minibatch_path_engages_for_huge_n() {
             block_rows: 128,
             minibatch_threshold: 0,
             minibatch_size: 100,
+            ..StreamOpts::default()
         },
     )
     .unwrap();
@@ -257,7 +265,9 @@ fn streamed_fit_error_paths() {
     assert!(LibsvmChunks::from_path("/no/such/file.libsvm", 8).is_err());
     // degenerate streaming knobs are typed errors at the coordinator API
     let coord = Coordinator::new(test_cfg(2, 8, 0.5), 1);
-    assert!(coord.fit_streaming("/no/such.libsvm", 0, 0.5, None, 64).is_err());
-    assert!(coord.fit_streaming("/no/such.libsvm", 8, 0.5, None, 0).is_err());
-    assert!(coord.fit_streaming("/no/such.libsvm", 8, -1.0, None, 64).is_err());
+    let with_blocks =
+        |block_rows: usize| StreamOpts { block_rows, ..StreamOpts::default() };
+    assert!(coord.fit_streaming("/no/such.libsvm", 0, 0.5, with_blocks(64)).is_err());
+    assert!(coord.fit_streaming("/no/such.libsvm", 8, 0.5, with_blocks(0)).is_err());
+    assert!(coord.fit_streaming("/no/such.libsvm", 8, -1.0, with_blocks(64)).is_err());
 }
