@@ -13,8 +13,9 @@ use scrb::cluster::{Env, MethodKind};
 use scrb::config::{Engine, Kernel, PipelineConfig};
 use scrb::data::synth;
 use scrb::metrics::all_metrics;
-use scrb::model::FittedModel;
+use scrb::model::{FittedModel, ScRbModel};
 use scrb::pipeline::ArtifactCache;
+use scrb::serve::{ServeClient, ServeConfig, Server};
 use scrb::runtime::XlaRuntime;
 use scrb::stream::{
     corrupt_libsvm_text, fit_streaming, IngestPolicy, LibsvmChunks, OnBadRecord, StreamOpts,
@@ -166,4 +167,28 @@ fn main() {
         replaced.len(),
         quarantined.quarantine.summary()
     );
+
+    // 8. clustering-as-a-service: persist the streamed model, serve it
+    // over TCP (micro-batching, deadlines, load shedding), label points
+    // through the wire, hot-swap to the quarantined re-fit without
+    // dropping in-flight requests, and drain. In production the daemon
+    // is `scrb serve --model m.scrb --addr …`; see
+    // examples/serve_client.rs for the full tour (rollback, STATUS).
+    let dir = std::env::temp_dir().join(format!("scrb_quickstart_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("tmpdir");
+    let path_v1 = dir.join("moons_v1.scrb").to_str().unwrap().to_string();
+    let path_v2 = dir.join("moons_v2.scrb").to_str().unwrap().to_string();
+    streamed.model.save(&path_v1).expect("save streamed model");
+    quarantined.model.save(&path_v2).expect("save quarantined model");
+    let server = Server::bind(ServeConfig::default(), ScRbModel::load(&path_v1).expect("load"))
+        .expect("bind");
+    let handle = server.spawn().expect("spawn daemon");
+    let mut client = ServeClient::connect(&handle.addr().to_string()).expect("connect");
+    let (v, wire_labels) = client.predict(&ds.x.row_block(0, 8)).expect("predict over TCP");
+    println!("served 8 points over TCP by model v{v}: {wire_labels:?}");
+    let v2 = client.swap(&path_v2).expect("hot swap");
+    println!("hot-swapped the daemon to model v{v2}; in-flight requests unaffected");
+    client.drain().expect("drain");
+    handle.join().expect("daemon exits cleanly");
+    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -1,0 +1,92 @@
+//! Clustering-as-a-service, end to end: fit → serve → predict over TCP
+//! → hot-swap to a re-fitted model → attempt (and survive) a bad swap →
+//! drain.
+//!
+//!     cargo run --release --example serve_client
+//!
+//! The daemon here runs in-process on a loopback socket; in production
+//! it is the `scrb serve --model m.scrb --addr 0.0.0.0:7878` process and
+//! the client side is exactly the same [`ServeClient`] calls. See
+//! `examples/serve.rs` for the in-process (no daemon) serving shape and
+//! the crate docs' "Failure modes & recovery" for the full resilience
+//! contract (load shedding, deadlines, worker restarts, rollback).
+
+use scrb::cluster::{Env, MethodKind};
+use scrb::config::{Engine, Kernel, PipelineConfig};
+use scrb::data::synth;
+use scrb::model::{FittedModel, ScRbModel};
+use scrb::serve::{ErrorCode, ServeClient, ServeConfig, Server, ServeError};
+use std::time::Instant;
+
+fn fit_and_save(sigma: f64, seed: u64, path: &str) -> ScRbModel {
+    let ds = synth::two_moons(2_000, 0.06, seed);
+    let cfg = PipelineConfig::builder()
+        .k(2)
+        .r(128)
+        .kernel(Kernel::Laplacian { sigma })
+        .engine(Engine::Native)
+        .seed(seed)
+        .build();
+    let fitted = MethodKind::ScRb.fit(&Env::new(cfg), &ds.x).expect("fit");
+    fitted.model.save(path).expect("save model");
+    ScRbModel::load(path).expect("reload model")
+}
+
+fn main() {
+    let dir = std::env::temp_dir().join(format!("scrb_serve_client_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("tmpdir");
+    let path_v1 = dir.join("moons_v1.scrb").to_str().unwrap().to_string();
+    let path_v2 = dir.join("moons_v2.scrb").to_str().unwrap().to_string();
+
+    // 1. fit and persist two model generations (checksummed v2 format)
+    let t0 = Instant::now();
+    let model_v1 = fit_and_save(0.15, 7, &path_v1);
+    fit_and_save(0.18, 8, &path_v2);
+    println!("fit + saved two model generations in {:.2}s", t0.elapsed().as_secs_f64());
+
+    // 2. serve generation 1 — this is what `scrb serve` does
+    let server = Server::bind(ServeConfig::default(), model_v1).expect("bind");
+    let handle = server.spawn().expect("spawn");
+    let addr = handle.addr().to_string();
+    println!("daemon on {addr}");
+
+    // 3. label points over the wire; the response names the model version
+    let mut client = ServeClient::connect(&addr).expect("connect");
+    let probe = synth::two_moons(16, 0.06, 9).x;
+    let (version, labels) = client.predict(&probe).expect("predict");
+    println!("v{version} labeled {} points: {labels:?}", labels.len());
+
+    // 4. hot swap to generation 2: validated (checksummed load +
+    // self-check predict) before being atomically published
+    let new_version = client.swap(&path_v2).expect("swap");
+    let (v, _) = client.predict(&probe).expect("predict after swap");
+    assert_eq!(v, new_version);
+    println!("hot-swapped to v{new_version}; in-flight requests were unaffected");
+
+    // 5. a corrupt file is rejected with a typed error naming the path,
+    // and the daemon keeps serving the current model (rollback)
+    let bad = dir.join("corrupt.scrb").to_str().unwrap().to_string();
+    let mut bytes = std::fs::read(&path_v2).expect("read model");
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xff;
+    std::fs::write(&bad, &bytes).expect("write corrupt");
+    match client.swap(&bad) {
+        Err(ServeError::Rejected { code: ErrorCode::BadModel, message }) => {
+            println!("bad swap rejected as expected: {message}");
+        }
+        other => panic!("corrupt swap must be rejected, got {other:?}"),
+    }
+    let (v, _) = client.predict(&probe).expect("predict after rollback");
+    assert_eq!(v, new_version, "rollback keeps the last good model");
+
+    // 6. observability: queue depth, shed/timeout/restart counters,
+    // drift statistics, and the swap audit trail in one document
+    let status = client.status().expect("status");
+    println!("status: {}", status.to_string());
+
+    // 7. graceful drain: queued work finishes, then the daemon exits
+    client.drain().expect("drain");
+    handle.join().expect("clean exit");
+    println!("drained; daemon exited cleanly");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,193 @@
+//! Serving-daemon load benchmark: a real `scrb serve` daemon on a
+//! loopback socket, hammered by concurrent blocking clients.
+//!
+//!     cargo bench --bench bench_serve_load
+//!     SCRB_BENCH_BUDGET_MS=200 cargo bench --bench bench_serve_load  # quick
+//!     SCRB_BENCH_SMOKE=1 cargo bench --bench bench_serve_load        # CI smoke
+//!
+//! Two scenarios:
+//!
+//! 1. **Throughput/latency** at 1, 8, and 64 concurrent clients against
+//!    a healthy daemon: per-request p50/p99 round-trip latency and
+//!    aggregate points/sec (whole stack: framing, checksums, admission,
+//!    micro-batch coalescing, `predict_batch`, response).
+//! 2. **Overload**: one worker with an injected per-request stall and a
+//!    tiny queue, 32 clients — measures the shed rate, i.e. how much of
+//!    the offered load the daemon explicitly refuses (typed
+//!    `Overloaded`) instead of queueing into collapse.
+//!
+//! Results land in `BENCH_serve_load.json` (override with
+//! SCRB_BENCH_JSON): `metrics.serve_points_per_sec_c8` is the headline
+//! number; `metrics.serve_overload_shed_rate` must be > 0 — a daemon
+//! that never sheds under that setup is queueing unboundedly.
+
+use scrb::linalg::Mat;
+use scrb::serve::{test_model, ErrorCode, ServeClient, ServeConfig, ServeError, Server};
+use scrb::stream::ServeFaultPlan;
+use scrb::util::bench::Bencher;
+use scrb::util::rng::Pcg;
+use std::time::{Duration, Instant};
+
+fn batch(rows: usize, seed: u64) -> Mat {
+    let mut rng = Pcg::seed(seed);
+    Mat::from_vec(rows, 3, (0..rows * 3).map(|_| rng.f64()).collect())
+}
+
+fn percentile_us(sorted: &[Duration], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx].as_nanos() as f64 / 1e3
+}
+
+/// Run `clients` concurrent connections against `addr` for `dur`,
+/// returning (per-request latencies, requests, points).
+fn hammer(addr: &str, clients: usize, rows: usize, dur: Duration) -> (Vec<Duration>, u64, u64) {
+    let threads: Vec<_> = (0..clients)
+        .map(|t| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let mut c = ServeClient::connect(&addr).expect("connect");
+                let x = batch(rows, 0xbe7c ^ t as u64);
+                let mut lat = Vec::new();
+                let begin = Instant::now();
+                while begin.elapsed() < dur {
+                    let s = Instant::now();
+                    c.predict(&x).expect("predict under load");
+                    lat.push(s.elapsed());
+                }
+                lat
+            })
+        })
+        .collect();
+    let mut all = Vec::new();
+    for th in threads {
+        all.extend(th.join().expect("client thread"));
+    }
+    let requests = all.len() as u64;
+    (all, requests, requests * rows as u64)
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let smoke = std::env::var("SCRB_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let (model_n, model_r, model_k) = if smoke { (60, 8, 4) } else { (1000, 64, 10) };
+    let phase = if smoke { Duration::from_millis(150) } else { Duration::from_millis(1500) };
+    let rows = 16;
+
+    println!(
+        "== serve load bench (threads={}, model n={model_n} R={model_r} k={model_k}{}) ==",
+        scrb::util::threads::num_threads(),
+        if smoke { ", SMOKE" } else { "" }
+    );
+
+    // -- scenario 1: healthy daemon, rising concurrency
+    let cfg = ServeConfig {
+        workers: 4,
+        queue_cap: 1024,
+        max_batch: 64,
+        default_deadline_ms: 30_000,
+        ..ServeConfig::default()
+    };
+    let server = Server::bind(cfg, test_model(model_n, model_r, model_k, 42)).expect("bind");
+    let handle = server.spawn().expect("spawn");
+    let addr = handle.addr().to_string();
+
+    for &clients in &[1usize, 8, 64] {
+        let begin = Instant::now();
+        let (mut lat, requests, points) = hammer(&addr, clients, rows, phase);
+        let wall = begin.elapsed();
+        lat.sort();
+        let p50 = percentile_us(&lat, 0.50);
+        let p99 = percentile_us(&lat, 0.99);
+        let pts_per_sec = points as f64 / wall.as_secs_f64().max(1e-9);
+        b.record_once(&format!("serve load, {clients} client(s)"), wall);
+        b.metric(&format!("serve_p50_us_c{clients}"), p50);
+        b.metric(&format!("serve_p99_us_c{clients}"), p99);
+        b.metric(&format!("serve_points_per_sec_c{clients}"), pts_per_sec);
+        println!(
+            "  {clients:>2} client(s): {requests:>6} reqs, p50 {p50:.1} µs, p99 {p99:.1} µs, \
+             {pts_per_sec:.3e} points/s"
+        );
+    }
+    {
+        let mut c = ServeClient::connect(&addr).expect("connect for drain");
+        c.drain().expect("drain");
+    }
+    handle.join().expect("healthy daemon drains cleanly");
+
+    // -- scenario 2: overload — one stalled worker, tiny queue, 32 clients
+    let overload_cfg = ServeConfig {
+        workers: 1,
+        queue_cap: 8,
+        max_batch: 8,
+        default_deadline_ms: 30_000,
+        fault: ServeFaultPlan {
+            seed: 42,
+            panic_permille: 0,
+            stall_permille: 1000,
+            stall_ms: if smoke { 5 } else { 20 },
+        },
+        ..ServeConfig::default()
+    };
+    let server =
+        Server::bind(overload_cfg, test_model(model_n, model_r, model_k, 42)).expect("bind");
+    let handle = server.spawn().expect("spawn");
+    let addr = handle.addr().to_string();
+
+    let begin = Instant::now();
+    let outcomes: Vec<_> = (0..32usize)
+        .map(|t| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = ServeClient::connect(&addr).expect("connect");
+                let x = batch(4, 0x10ad ^ t as u64);
+                let (mut served, mut shed, mut timeout) = (0u64, 0u64, 0u64);
+                let begin = Instant::now();
+                while begin.elapsed() < phase {
+                    match c.predict(&x) {
+                        Ok(_) => served += 1,
+                        Err(ServeError::Rejected { code: ErrorCode::Overloaded, .. }) => shed += 1,
+                        Err(ServeError::Rejected { code: ErrorCode::Timeout, .. }) => timeout += 1,
+                        Err(e) => panic!("unexpected failure under overload: {e}"),
+                    }
+                }
+                (served, shed, timeout)
+            })
+        })
+        .collect();
+    let (mut served, mut shed, mut timeout) = (0u64, 0u64, 0u64);
+    for th in outcomes {
+        let (s, h, t) = th.join().expect("overload client");
+        served += s;
+        shed += h;
+        timeout += t;
+    }
+    let wall = begin.elapsed();
+    let total = served + shed + timeout;
+    let shed_rate = shed as f64 / (total as f64).max(1.0);
+    b.record_once("serve overload, 32 clients", wall);
+    b.metric("serve_overload_total", total as f64);
+    b.metric("serve_overload_served", served as f64);
+    b.metric("serve_overload_shed", shed as f64);
+    b.metric("serve_overload_timeouts", timeout as f64);
+    b.metric("serve_overload_shed_rate", shed_rate);
+    println!(
+        "  overload: {total} reqs -> {served} served, {shed} shed ({:.1}%), {timeout} timed out",
+        shed_rate * 100.0
+    );
+    {
+        let mut c = ServeClient::connect(&addr).expect("connect for drain");
+        c.drain().expect("drain");
+    }
+    handle.join().expect("overloaded daemon still drains cleanly");
+
+    println!("\n{}", b.report());
+    let json_path =
+        std::env::var("SCRB_BENCH_JSON").unwrap_or_else(|_| "BENCH_serve_load.json".into());
+    match b.write_json(&json_path) {
+        Ok(()) => println!("[saved {json_path}]"),
+        Err(e) => eprintln!("[failed to save {json_path}: {e}]"),
+    }
+}

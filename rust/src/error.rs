@@ -73,6 +73,11 @@ pub enum ScrbError {
     /// Model persistence failure: bad magic, unsupported version,
     /// truncated or corrupt payload.
     Model(String),
+    /// A serving-path failure: protocol framing, admission control
+    /// (shed/overload), a missed deadline, or a rejected model swap. The
+    /// daemon answers these on the wire as typed protocol errors (see
+    /// `serve::ErrorCode`); this is their library-side face.
+    Serve(String),
     /// An API input violates a shape/domain precondition (dimension
     /// mismatch, size cap, empty data).
     InvalidInput(String),
@@ -110,6 +115,10 @@ impl ScrbError {
         ScrbError::Model(msg.into())
     }
 
+    pub fn serve(msg: impl Into<String>) -> ScrbError {
+        ScrbError::Serve(msg.into())
+    }
+
     pub fn invalid_input(msg: impl Into<String>) -> ScrbError {
         ScrbError::InvalidInput(msg.into())
     }
@@ -131,6 +140,7 @@ impl fmt::Display for ScrbError {
             ScrbError::Checkpoint(m) => write!(f, "checkpoint error: {m}"),
             ScrbError::Config(m) => write!(f, "{m}"),
             ScrbError::Model(m) => write!(f, "model error: {m}"),
+            ScrbError::Serve(m) => write!(f, "serve error: {m}"),
             ScrbError::InvalidInput(m) => write!(f, "invalid input: {m}"),
             ScrbError::Unsupported(m) => write!(f, "unsupported: {m}"),
         }
@@ -181,6 +191,7 @@ mod tests {
             ScrbError::checkpoint("state written with different parameters"),
             ScrbError::config("unknown key 'nope'"),
             ScrbError::model("bad magic"),
+            ScrbError::serve("queue full: request shed"),
             ScrbError::invalid_input("expected 16 features, got 3"),
             ScrbError::unsupported("no spectral embedding"),
         ];

@@ -102,6 +102,26 @@
 //! model.predict_batch(&fresh.x, &mut ws, &mut labels).expect("predict failed");
 //! ```
 //!
+//! ## Clustering as a service
+//!
+//! `scrb serve --model m.scrb --addr 127.0.0.1:7878` turns a saved model
+//! into a long-lived daemon ([`serve`]): a checksummed binary protocol
+//! over TCP, micro-batched `predict_batch` workers, bounded admission
+//! with explicit load shedding, per-request deadlines, and atomic hot
+//! model swap with validate-before-publish and rollback. [`serve::ServeClient`]
+//! is the matching blocking client:
+//!
+//! ```no_run
+//! use scrb::linalg::Mat;
+//! use scrb::serve::ServeClient;
+//!
+//! let mut c = ServeClient::connect("127.0.0.1:7878").expect("connect");
+//! let (version, labels) = c.predict(&Mat::from_vec(1, 3, vec![0.2, 0.5, 0.8])).expect("predict");
+//! println!("model v{version} says {labels:?}");
+//! let new_version = c.swap("refit.scrb").expect("swap validated and published");
+//! # let _ = new_version;
+//! ```
+//!
 //! ## Out-of-core fit (streaming)
 //!
 //! Datasets too big to densify fit through the [`stream`] subsystem: the
@@ -156,6 +176,34 @@
 //!   that miss the fit-time codebook ([`model::ScRbModel::drift_stats`])
 //!   and warns when a call's unseen rate crosses
 //!   [`model::ScRbModel::unseen_warn`] (`--unseen-warn` at the CLI).
+//!   Warnings are rate-limited (at most one per [`model::WARN_EVERY`]
+//!   offending calls, with cumulative counts in the message) so sustained
+//!   drift cannot flood a daemon's stderr; the exact offender and warning
+//!   counts stay in [`model::DriftStats`].
+//!
+//! The serving daemon ([`serve`]) extends the same discipline to the
+//! request path (verified under seeded fault injection in
+//! `tests/serve.rs`):
+//!
+//! - **Overload** — a full admission queue sheds the request with a typed
+//!   [`serve::ErrorCode::Overloaded`] rejection (counted in `STATUS`);
+//!   nothing blocks, nothing is silently dropped.
+//! - **Missed deadlines** — a request a worker reaches after its deadline
+//!   is answered [`serve::ErrorCode::Timeout`] instead of served stale.
+//! - **Broken frames** — malformed, truncated, or oversized frames get
+//!   typed protocol errors, not dropped connections; only a destroyed
+//!   frame boundary (bad header) closes the connection.
+//! - **Worker panics** — contained per batch: the worker restarts with
+//!   fresh scratch, the poisoned batch is answered
+//!   [`serve::ErrorCode::Internal`], all other in-flight requests are
+//!   unaffected.
+//! - **Bad model swaps** — a swap candidate must pass the checksummed
+//!   loader and a self-check prediction before being atomically
+//!   published; failures roll back to the serving model and are recorded
+//!   in the swap history. Workers pin the model per batch, so in-flight
+//!   requests never straddle a swap.
+//! - **Shutdown** — SIGTERM or a `Drain` frame stops admission, answers
+//!   every queued request, then exits.
 //!
 //! ```no_run
 //! use scrb::cluster::Env;
@@ -206,6 +254,7 @@ pub mod pipeline;
 pub mod rb;
 pub mod rf;
 pub mod runtime;
+pub mod serve;
 pub mod stream;
 
 /// Crate version string.

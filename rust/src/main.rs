@@ -53,6 +53,7 @@ fn dispatch(args: &Args) -> Result<(), ScrbError> {
         "run" => cmd_run(args),
         "fit" => cmd_fit(args),
         "predict" => cmd_predict(args),
+        "serve" => cmd_serve(args),
         "table" => cmd_table(args),
         "fig" => cmd_fig(args),
         other => Err(ScrbError::config(format!("unknown command '{other}' (try: scrb help)"))),
@@ -84,6 +85,16 @@ fn print_help() {
          \x20   --out PATH                  write one label per line (optional)\n\
          \x20   --unseen-warn T             warn when a call's unseen-bin rate exceeds T\n\
          \x20                               (default 0.25; rate is printed after predict)\n\
+         \x20 serve                       serve a saved model as a daemon (TCP)\n\
+         \x20   --model PATH                model artifact from `scrb fit --save`\n\
+         \x20   --addr HOST:PORT            bind address (default 127.0.0.1:7878)\n\
+         \x20   --workers N                 micro-batching worker threads (default 2)\n\
+         \x20   --queue-cap N               admission queue bound; beyond it requests\n\
+         \x20                               are shed with a typed Overloaded reject (256)\n\
+         \x20   --max-batch N               requests coalesced per predict call (64)\n\
+         \x20   --deadline-ms N             default per-request deadline (1000)\n\
+         \x20   --max-frame-mb N            per-frame payload cap (64)\n\
+         \x20                               SIGTERM or a Drain frame exits gracefully\n\
          \x20 table <1|2|3>               regenerate a paper table\n\
          \x20 fig <2|3|4|5|theory>        regenerate a paper figure's series\n\n\
          common options:\n\
@@ -432,6 +443,35 @@ fn cmd_predict(args: &Args) -> Result<(), ScrbError> {
         std::fs::write(out_path, text).map_err(|e| ScrbError::io(out_path, e))?;
         println!("labels written to {out_path}");
     }
+    Ok(())
+}
+
+/// `scrb serve --model model.scrb --addr 127.0.0.1:7878`: run the
+/// clustering-as-a-service daemon until a `Drain` frame or SIGTERM
+/// completes a graceful drain (see [`scrb::serve`]).
+fn cmd_serve(args: &Args) -> Result<(), ScrbError> {
+    let model_path = args
+        .get("model")
+        .ok_or_else(|| ScrbError::config("serve: missing --model PATH (from `scrb fit --save`)"))?;
+    let model = ScRbModel::load(model_path)?;
+    let (clusters, dims) = (model.n_clusters(), model.input_dim());
+    let cfg = scrb::serve::ServeConfig {
+        addr: args.get_or("addr", "127.0.0.1:7878").to_string(),
+        workers: args.get_usize("workers", 2)?.max(1),
+        queue_cap: args.get_usize("queue-cap", 256)?.max(1),
+        max_batch: args.get_usize("max-batch", 64)?.max(1),
+        default_deadline_ms: args.get_u64("deadline-ms", 1000)?.max(1),
+        max_frame_bytes: args.get_usize("max-frame-mb", 64)?.max(1) << 20,
+        ..scrb::serve::ServeConfig::default()
+    };
+    scrb::serve::install_sigterm_drain();
+    let server = scrb::serve::Server::bind(cfg, model)?;
+    println!(
+        "serving {model_path} ({clusters} clusters, {dims} input dims) on {}",
+        server.local_addr()?
+    );
+    server.run()?;
+    println!("drained; exiting");
     Ok(())
 }
 

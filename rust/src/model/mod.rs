@@ -44,7 +44,7 @@
 pub mod persist;
 pub mod scrb;
 
-pub use self::scrb::{DriftMonitor, DriftStats, ScRbModel, DEFAULT_UNSEEN_WARN};
+pub use self::scrb::{DriftMonitor, DriftStats, ScRbModel, DEFAULT_UNSEEN_WARN, WARN_EVERY};
 
 use crate::cluster::{ClusterOutput, Env};
 use crate::error::ScrbError;

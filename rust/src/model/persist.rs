@@ -13,19 +13,10 @@
 //! field mid-parse (or worse, not at all).
 
 use crate::error::ScrbError;
-
-const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
-
-/// FNV-1a 64-bit digest (same hash family as the pipeline fingerprints;
-/// integrity against accidental corruption, not an adversary).
-pub(crate) fn fnv64(bytes: &[u8]) -> u64 {
-    let mut h = FNV_OFFSET;
-    for &b in bytes {
-        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
-    }
-    h
-}
+// The one FNV-1a definition of the crate (util::fnv): footer checksums
+// here must stay bit-compatible with the checkpoint footers and pipeline
+// fingerprints that share it.
+pub(crate) use crate::util::fnv::fnv64;
 
 /// Verify and strip the 8-byte checksum footer of an image produced by
 /// [`ByteWriter::finish_with_checksum`]. `None` means the image is

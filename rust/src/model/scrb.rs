@@ -54,6 +54,12 @@ const VERSION: u32 = 2;
 /// Default per-call unseen-bin-rate threshold above which serving warns.
 pub const DEFAULT_UNSEEN_WARN: f64 = 0.25;
 
+/// At most one stderr warning per this many threshold-crossing calls: a
+/// long-lived daemon seeing sustained drift must not turn every serving
+/// call into a log line. The first offending call always warns; after
+/// that, one warning (with cumulative counts) per `WARN_EVERY` offenders.
+pub const WARN_EVERY: u64 = 64;
+
 /// Cumulative unseen-bin counters (the drift signal incremental updates
 /// need). Atomic so `&self` serving paths can update them concurrently;
 /// relaxed ordering — these are statistics, not synchronization.
@@ -65,6 +71,12 @@ pub struct DriftMonitor {
     lookups: AtomicU64,
     /// Lookups that missed the codebook (bin unseen at fit time).
     unseen: AtomicU64,
+    /// Serving calls whose per-call unseen rate crossed the warn
+    /// threshold.
+    over_threshold: AtomicU64,
+    /// Warnings actually emitted to stderr (rate-limited: at most one per
+    /// [`WARN_EVERY`] threshold-crossing calls).
+    warnings: AtomicU64,
 }
 
 /// A point-in-time snapshot of a [`DriftMonitor`].
@@ -73,6 +85,10 @@ pub struct DriftStats {
     pub points: u64,
     pub lookups: u64,
     pub unseen: u64,
+    /// Calls whose unseen rate crossed the warn threshold.
+    pub over_threshold: u64,
+    /// Rate-limited warnings emitted so far.
+    pub warnings: u64,
 }
 
 impl DriftStats {
@@ -168,13 +184,18 @@ impl ScRbModel {
             points: self.drift.points.load(Ordering::Relaxed),
             lookups: self.drift.lookups.load(Ordering::Relaxed),
             unseen: self.drift.unseen.load(Ordering::Relaxed),
+            over_threshold: self.drift.over_threshold.load(Ordering::Relaxed),
+            warnings: self.drift.warnings.load(Ordering::Relaxed),
         }
     }
 
     /// Fold one serving call's counts into the drift monitor and warn on
     /// stderr when this call's unseen rate crosses the threshold. The
     /// clean-data path (missed == 0) touches only three relaxed atomics —
-    /// no formatting, no allocation.
+    /// no formatting, no allocation. Warnings are rate-limited to one per
+    /// [`WARN_EVERY`] threshold-crossing calls (the first always warns);
+    /// the cumulative offender count is carried in the message so nothing
+    /// is lost to the suppression.
     fn note_unseen(&self, points: u64, missed: u64) {
         let r = self.codebook.r as u64;
         self.drift.points.fetch_add(points, Ordering::Relaxed);
@@ -185,13 +206,20 @@ impl ScRbModel {
         self.drift.unseen.fetch_add(missed, Ordering::Relaxed);
         let rate = missed as f64 / (points * r).max(1) as f64;
         if rate > self.unseen_warn {
+            let prior = self.drift.over_threshold.fetch_add(1, Ordering::Relaxed);
+            if prior % WARN_EVERY != 0 {
+                return;
+            }
+            self.drift.warnings.fetch_add(1, Ordering::Relaxed);
             eprintln!(
                 "warning: {missed} of {} bin lookups ({:.1}%) hit bins unseen at fit time \
                  (threshold {:.1}%) — the serving data may have drifted off the training \
-                 distribution",
+                 distribution [{} call(s) over threshold so far; next warning after {} more]",
                 points * r,
                 rate * 100.0,
-                self.unseen_warn * 100.0
+                self.unseen_warn * 100.0,
+                prior + 1,
+                WARN_EVERY
             );
         }
     }
@@ -398,10 +426,15 @@ impl ScRbModel {
         })
     }
 
-    /// Load a model saved by [`ScRbModel::save`].
+    /// Load a model saved by [`ScRbModel::save`]. Every failure — missing
+    /// file, truncation, checksum mismatch, bad magic — names `path`, so
+    /// a CLI user staring at "corrupt model" knows *which* file is bad.
     pub fn load(path: &str) -> Result<ScRbModel, ScrbError> {
         let bytes = std::fs::read(path).map_err(|e| ScrbError::io(path, e))?;
-        ScRbModel::from_bytes(&bytes)
+        ScRbModel::from_bytes(&bytes).map_err(|e| match e {
+            ScrbError::Model(m) => ScrbError::model(format!("{path}: {m}")),
+            other => other,
+        })
     }
 
     /// Fit SC_RB out-of-core: two chunked passes over `reader` (stats,
@@ -670,5 +703,40 @@ mod tests {
         let s3 = model.drift_stats();
         assert_eq!(s3.points, 64);
         assert!(s3.unseen > s2.unseen, "misses accumulate across calls");
+    }
+
+    #[test]
+    fn drift_warning_is_rate_limited() {
+        let (model, x) = toy_model(60, 8, 4, 23);
+        // clean calls never count as offenders
+        model.transform(&x).unwrap();
+        let s = model.drift_stats();
+        assert_eq!((s.over_threshold, s.warnings), (0, 0));
+        // every far-out call crosses the threshold (all R bins miss), but
+        // only one in WARN_EVERY emits: calls 1, 65, 129, 193 of 200
+        let far = Mat::from_vec(1, 3, vec![1e3; 3]);
+        for _ in 0..200 {
+            model.transform(&far).unwrap();
+        }
+        let s = model.drift_stats();
+        assert_eq!(s.over_threshold, 200);
+        assert_eq!(s.warnings, 200_u64.div_ceil(WARN_EVERY));
+    }
+
+    #[test]
+    fn load_corrupt_file_error_names_the_path() {
+        let (model, _) = toy_model(40, 4, 3, 29);
+        let dir = std::env::temp_dir().join(format!("scrb_load_path_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("corrupt.scrb");
+        let mut bytes = model.to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let e = ScRbModel::load(path.to_str().unwrap()).unwrap_err();
+        assert!(matches!(e, ScrbError::Model(_)));
+        let msg = e.to_string();
+        assert!(msg.contains("corrupt.scrb"), "error must name the file: {msg}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -14,9 +14,7 @@
 //! collide on equal payloads).
 
 use crate::linalg::Mat;
-
-const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+use crate::util::fnv::Fnv64;
 
 /// Builder-style FNV-1a fingerprint accumulator.
 ///
@@ -28,20 +26,18 @@ const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
 /// assert_ne!(a, Fingerprint::new("stage/demo").usize(257).f64(0.25).finish());
 /// ```
 #[derive(Clone, Copy, Debug)]
-pub struct Fingerprint(u64);
+pub struct Fingerprint(Fnv64);
 
 impl Fingerprint {
     /// Start a fingerprint under a per-stage `tag` (namespaces the key so
     /// different artifact kinds never collide on equal payloads).
     pub fn new(tag: &str) -> Fingerprint {
-        Fingerprint(FNV_OFFSET).str(tag)
+        Fingerprint(Fnv64::new()).str(tag)
     }
 
     /// Fold a `u64` (little-endian bytes).
     pub fn u64(mut self, v: u64) -> Fingerprint {
-        for b in v.to_le_bytes() {
-            self.0 = (self.0 ^ b as u64).wrapping_mul(FNV_PRIME);
-        }
+        self.0.write_u64(v);
         self
     }
 
@@ -65,15 +61,13 @@ impl Fingerprint {
     /// Fold a string (length-prefixed so concatenations can't collide).
     pub fn str(mut self, s: &str) -> Fingerprint {
         self = self.usize(s.len());
-        for &b in s.as_bytes() {
-            self.0 = (self.0 ^ b as u64).wrapping_mul(FNV_PRIME);
-        }
+        self.0.write(s.as_bytes());
         self
     }
 
     /// The accumulated 64-bit fingerprint.
     pub fn finish(self) -> u64 {
-        self.0
+        self.0.finish()
     }
 }
 

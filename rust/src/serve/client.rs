@@ -1,0 +1,174 @@
+//! Blocking client for the serving daemon.
+//!
+//! One connection, synchronous request/response. Server-side rejections
+//! arrive as [`ServeError::Rejected`] carrying the typed
+//! [`ErrorCode`], so callers can branch on *why* (retry `Overloaded`,
+//! fix the batch on `Malformed`, give up on `Draining`) without parsing
+//! message text. Transport failures map to [`ServeError::Transport`].
+
+use super::protocol::{
+    decode_error, decode_labels, encode_frame, encode_predict, encode_swap, read_frame_blocking,
+    ErrorCode, Frame, FrameKind, DEFAULT_MAX_FRAME,
+};
+use crate::error::ScrbError;
+use crate::linalg::Mat;
+use crate::util::json::Json;
+use std::io::Write;
+use std::net::TcpStream;
+
+/// Why a client call failed.
+#[derive(Debug)]
+pub enum ServeError {
+    /// The connection or the protocol broke.
+    Transport(ScrbError),
+    /// The daemon answered with a typed rejection.
+    Rejected { code: ErrorCode, message: String },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Transport(e) => write!(f, "{e}"),
+            ServeError::Rejected { code, message } => {
+                write!(f, "rejected ({}): {message}", code.as_str())
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<ServeError> for ScrbError {
+    fn from(e: ServeError) -> ScrbError {
+        match e {
+            ServeError::Transport(inner) => inner,
+            ServeError::Rejected { code, message } => {
+                ScrbError::serve(format!("{}: {message}", code.as_str()))
+            }
+        }
+    }
+}
+
+fn transport(msg: impl Into<String>) -> ServeError {
+    ServeError::Transport(ScrbError::serve(msg))
+}
+
+/// A blocking connection to a `scrb serve` daemon.
+pub struct ServeClient {
+    stream: TcpStream,
+    next_id: u64,
+}
+
+impl ServeClient {
+    /// Connect to `addr` (e.g. `"127.0.0.1:7878"`).
+    pub fn connect(addr: &str) -> Result<ServeClient, ScrbError> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| ScrbError::serve(format!("cannot connect to {addr}: {e}")))?;
+        stream.set_nodelay(true).ok();
+        Ok(ServeClient { stream, next_id: 1 })
+    }
+
+    fn roundtrip(&mut self, kind: FrameKind, payload: &[u8]) -> Result<Frame, ServeError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let bytes = encode_frame(kind, id, payload);
+        self.stream
+            .write_all(&bytes)
+            .map_err(|e| transport(format!("send failed: {e}")))?;
+        let frame = read_frame_blocking(&mut self.stream, DEFAULT_MAX_FRAME)
+            .map_err(ServeError::Transport)?;
+        if frame.kind == FrameKind::Error {
+            let (code, message) = decode_error(&frame.payload)
+                .map_err(|m| transport(format!("undecodable error frame: {m}")))?;
+            return Err(ServeError::Rejected { code, message });
+        }
+        if frame.req_id != id {
+            return Err(transport(format!(
+                "response id {} does not match request id {id}",
+                frame.req_id
+            )));
+        }
+        Ok(frame)
+    }
+
+    fn expect(frame: Frame, want: FrameKind) -> Result<Frame, ServeError> {
+        if frame.kind != want {
+            return Err(transport(format!("expected {want:?} response, got {:?}", frame.kind)));
+        }
+        Ok(frame)
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> Result<(), ServeError> {
+        Self::expect(self.roundtrip(FrameKind::Ping, &[])?, FrameKind::Pong).map(|_| ())
+    }
+
+    /// Label a batch under the server's default deadline. Returns
+    /// `(model_version, labels)` — the version identifies exactly which
+    /// model produced the labels (stable across hot swaps mid-call).
+    pub fn predict(&mut self, x: &Mat) -> Result<(u32, Vec<usize>), ServeError> {
+        self.predict_deadline(x, 0)
+    }
+
+    /// Label a batch with an explicit deadline in milliseconds
+    /// (`0` = server default).
+    pub fn predict_deadline(
+        &mut self,
+        x: &Mat,
+        deadline_ms: u32,
+    ) -> Result<(u32, Vec<usize>), ServeError> {
+        let frame = Self::expect(
+            self.roundtrip(FrameKind::Predict, &encode_predict(deadline_ms, x))?,
+            FrameKind::Labels,
+        )?;
+        let (version, labels) = decode_labels(&frame.payload)
+            .map_err(|m| transport(format!("undecodable labels frame: {m}")))?;
+        if labels.len() != x.rows {
+            return Err(transport(format!(
+                "server answered {} labels for {} rows",
+                labels.len(),
+                x.rows
+            )));
+        }
+        Ok((version, labels))
+    }
+
+    /// Fetch the daemon's STATUS document.
+    pub fn status(&mut self) -> Result<Json, ServeError> {
+        let frame =
+            Self::expect(self.roundtrip(FrameKind::Status, &[])?, FrameKind::StatusReply)?;
+        let text = std::str::from_utf8(&frame.payload)
+            .map_err(|_| transport("non-UTF-8 status payload"))?;
+        Json::parse(text).map_err(|m| transport(format!("bad status JSON: {m}")))
+    }
+
+    /// Ask the daemon to hot-swap to the model file at `path`; returns
+    /// the new model version.
+    pub fn swap(&mut self, path: &str) -> Result<u32, ServeError> {
+        let frame =
+            Self::expect(self.roundtrip(FrameKind::Swap, &encode_swap(path))?, FrameKind::SwapOk)?;
+        if frame.payload.len() != 4 {
+            return Err(transport("bad SwapOk payload"));
+        }
+        Ok(u32::from_le_bytes(frame.payload[..4].try_into().unwrap()))
+    }
+
+    /// Begin a graceful drain: the daemon finishes in-flight work and
+    /// exits; new predictions are rejected with `Draining`.
+    pub fn drain(&mut self) -> Result<(), ServeError> {
+        Self::expect(self.roundtrip(FrameKind::Drain, &[])?, FrameKind::DrainOk).map(|_| ())
+    }
+
+    /// Send raw bytes on the connection (fault-injection tests: torn
+    /// frames, garbage, oversized headers).
+    pub fn send_raw(&mut self, bytes: &[u8]) -> Result<(), ScrbError> {
+        self.stream
+            .write_all(bytes)
+            .map_err(|e| ScrbError::serve(format!("raw send failed: {e}")))
+    }
+
+    /// Read one raw response frame (pairs with [`ServeClient::send_raw`]).
+    pub fn read_raw(&mut self) -> Result<Frame, ScrbError> {
+        read_frame_blocking(&mut self.stream, DEFAULT_MAX_FRAME)
+    }
+}

@@ -1,0 +1,94 @@
+//! Resilient clustering-as-a-service: the `scrb serve` daemon.
+//!
+//! Serves a fitted [`ScRbModel`] over TCP with a checksummed,
+//! length-prefixed binary protocol ([`protocol`]) — std-only, no async
+//! runtime, built on `std::net::TcpListener` and plain threads like the
+//! rest of the crate's parallelism ([`crate::util::threads`]).
+//!
+//! The resilience contract, piece by piece:
+//!
+//! - **Bounded admission + load shedding** ([`queue`]): a full queue
+//!   rejects with a typed [`ErrorCode::Overloaded`] instead of queueing
+//!   unboundedly or blocking the reader — under overload the daemon
+//!   degrades by saying "no" quickly, never by falling over.
+//! - **Micro-batching** ([`server`]): workers coalesce up to
+//!   `max_batch` queued requests into one [`FittedModel::predict_batch`]
+//!   call over a reused [`ServeWorkspace`] — zero steady-state
+//!   allocations in the hot path, and row-independent serving means the
+//!   coalesced labels are bit-equal to per-request predictions.
+//! - **Per-request deadlines**: a request that waits past its deadline
+//!   is answered [`ErrorCode::Timeout`] rather than served stale.
+//! - **Typed protocol errors**: malformed, truncated, or oversized
+//!   frames get [`ErrorCode`] responses, not dropped connections; an
+//!   oversized payload is discarded in bounded chunks and the
+//!   connection survives.
+//! - **Worker panic isolation**: a panicking worker is caught,
+//!   restarted with fresh scratch, and the poisoned batch answered with
+//!   [`ErrorCode::Internal`]; other in-flight requests are unaffected.
+//! - **Hot model swap with rollback** ([`swap`]): a swap validates the
+//!   candidate through the checksummed loader *and* a self-check
+//!   prediction before atomically publishing; any failure keeps the old
+//!   model. Workers pin the model `Arc` once per batch, so no request
+//!   is ever served by two versions.
+//! - **Graceful drain**: a `Drain` frame or SIGTERM
+//!   ([`install_sigterm_drain`]) stops admission, finishes every queued
+//!   request, and exits.
+//!
+//! Observability: a `Status` frame returns a JSON document with queue
+//! depth, shed/timeout/restart counters, drift statistics
+//! ([`crate::model::DriftStats`]), and the swap audit trail.
+//!
+//! [`FittedModel::predict_batch`]: crate::model::FittedModel::predict_batch
+//! [`ServeWorkspace`]: crate::model::ServeWorkspace
+//! [`ErrorCode`]: protocol::ErrorCode
+//! [`ErrorCode::Overloaded`]: protocol::ErrorCode::Overloaded
+//! [`ErrorCode::Timeout`]: protocol::ErrorCode::Timeout
+//! [`ErrorCode::Internal`]: protocol::ErrorCode::Internal
+
+pub mod client;
+pub mod protocol;
+mod queue;
+pub mod server;
+mod swap;
+
+pub use client::{ServeClient, ServeError};
+pub use protocol::{ErrorCode, Frame, FrameKind};
+pub use server::{install_sigterm_drain, ServeConfig, Server, ServerHandle};
+pub use swap::SwapRecord;
+
+use crate::model::ScRbModel;
+
+/// Build a tiny but fully serviceable [`ScRbModel`] (real codebook over
+/// random data, arbitrary projection/centroids) with `d_in = 3`.
+/// Support code for this crate's serve tests and benches — not part of
+/// the public API surface.
+#[doc(hidden)]
+pub fn test_model(n: usize, r: usize, k: usize, seed: u64) -> ScRbModel {
+    test_model_dim(n, r, k, 3, seed)
+}
+
+/// [`test_model`] with an explicit input dimensionality.
+#[doc(hidden)]
+pub fn test_model_dim(n: usize, r: usize, k: usize, d_in: usize, seed: u64) -> ScRbModel {
+    use crate::config::Kernel;
+    use crate::linalg::Mat;
+    use crate::model::{DriftMonitor, DEFAULT_UNSEEN_WARN};
+    use crate::rb::rb_features_with_codebook;
+    use crate::util::rng::Pcg;
+    let mut rng = Pcg::seed(seed);
+    let x = Mat::from_vec(n, d_in, (0..n * d_in).map(|_| rng.f64()).collect());
+    let (rb, codebook) = rb_features_with_codebook(&x, r, 0.5, seed ^ 0xab);
+    let dim = rb.dim();
+    let proj = Mat::from_vec(dim, k, (0..dim * k).map(|_| rng.range_f64(-1.0, 1.0)).collect());
+    let centroids = Mat::from_vec(2, k, (0..2 * k).map(|_| rng.range_f64(-1.0, 1.0)).collect());
+    ScRbModel {
+        codebook,
+        kernel: Kernel::Laplacian { sigma: 0.5 },
+        s: (0..k).map(|j| 1.0 / (j + 1) as f64).collect(),
+        proj,
+        centroids,
+        norm: None,
+        drift: DriftMonitor::default(),
+        unseen_warn: DEFAULT_UNSEEN_WARN,
+    }
+}

@@ -1,0 +1,473 @@
+//! Length-prefixed binary wire protocol of the serving daemon.
+//!
+//! Every message is one **frame**: a fixed 33-byte header followed by a
+//! payload. The header carries its own FNV-1a checksum *and* the
+//! payload's, so the reader can tell three failure classes apart and
+//! answer each differently (see [`crate::serve`]):
+//!
+//! - a broken header (bad magic, bad header checksum, truncation inside
+//!   the header) destroys framing — the daemon answers a typed
+//!   [`ErrorCode::Malformed`] and closes, because it can no longer find
+//!   the next frame boundary;
+//! - an intact header with an oversized declared length is answered with
+//!   [`ErrorCode::Oversized`] and the payload is *discarded in a bounded
+//!   stream*, keeping the connection usable;
+//! - an intact header whose payload fails its checksum (or fails to
+//!   decode) is answered with [`ErrorCode::Malformed`] but the connection
+//!   survives — exactly `len` bytes were consumed, so framing is intact.
+//!
+//! Wire layout (all little-endian):
+//!
+//! ```text
+//!   offset  size  field
+//!        0     4  magic  "SCRB"
+//!        4     1  kind          (FrameKind)
+//!        5     8  req_id        (echoed verbatim in the response)
+//!       13     4  len           (payload byte count)
+//!       17     8  payload_fnv   (FNV-1a of the payload bytes)
+//!       25     8  header_fnv    (FNV-1a of header bytes [0, 25))
+//!       33   len  payload
+//! ```
+
+use crate::error::ScrbError;
+use crate::linalg::Mat;
+use crate::util::fnv::fnv64;
+use std::io::Read;
+
+/// `"SCRB"` as little-endian bytes on the wire.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"SCRB");
+
+/// Fixed frame-header size in bytes.
+pub const HEADER_LEN: usize = 33;
+
+/// Default per-frame payload cap (64 MiB ≈ a one-million-point f64 batch
+/// at d=8); configurable per server.
+pub const DEFAULT_MAX_FRAME: usize = 64 << 20;
+
+/// What a frame is: requests flow client→server (low codes), responses
+/// server→client (high bit set).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Label a batch of points (payload: deadline_ms, rows, cols, data).
+    Predict,
+    /// Ask for the daemon's status JSON.
+    Status,
+    /// Hot-swap the served model to the file named in the payload.
+    Swap,
+    /// Begin a graceful drain (stop admitting, finish in-flight, exit).
+    Drain,
+    /// Liveness probe.
+    Ping,
+    /// Labels response (payload: model version, n, labels).
+    Labels,
+    /// Status response (payload: JSON text).
+    StatusReply,
+    /// Swap succeeded (payload: new model version).
+    SwapOk,
+    /// Typed rejection (payload: [`ErrorCode`] + message).
+    Error,
+    /// Ping response.
+    Pong,
+    /// Drain acknowledged.
+    DrainOk,
+}
+
+impl FrameKind {
+    pub fn as_u8(self) -> u8 {
+        match self {
+            FrameKind::Predict => 1,
+            FrameKind::Status => 2,
+            FrameKind::Swap => 3,
+            FrameKind::Drain => 4,
+            FrameKind::Ping => 5,
+            FrameKind::Labels => 0x81,
+            FrameKind::StatusReply => 0x82,
+            FrameKind::SwapOk => 0x83,
+            FrameKind::Error => 0x84,
+            FrameKind::Pong => 0x85,
+            FrameKind::DrainOk => 0x86,
+        }
+    }
+
+    pub fn from_u8(b: u8) -> Option<FrameKind> {
+        Some(match b {
+            1 => FrameKind::Predict,
+            2 => FrameKind::Status,
+            3 => FrameKind::Swap,
+            4 => FrameKind::Drain,
+            5 => FrameKind::Ping,
+            0x81 => FrameKind::Labels,
+            0x82 => FrameKind::StatusReply,
+            0x83 => FrameKind::SwapOk,
+            0x84 => FrameKind::Error,
+            0x85 => FrameKind::Pong,
+            0x86 => FrameKind::DrainOk,
+            _ => return None,
+        })
+    }
+
+    /// Is this a client→server request kind?
+    pub fn is_request(self) -> bool {
+        self.as_u8() < 0x80
+    }
+}
+
+/// Why the daemon rejected a request — the wire-level face of
+/// [`ScrbError::Serve`]. Every rejection carries one of these codes plus
+/// a human-readable message, so a client can branch on the code (retry
+/// on `Overloaded`, never on `Malformed`) without parsing text.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Broken framing or an undecodable/invalid payload.
+    Malformed,
+    /// Declared payload length exceeds the server's frame cap.
+    Oversized,
+    /// Admission queue full — request shed by load control.
+    Overloaded,
+    /// The request's deadline expired before a worker reached it.
+    Timeout,
+    /// A model swap was rejected (load/validation failed); old model kept.
+    BadModel,
+    /// The daemon is draining and admits no new work.
+    Draining,
+    /// A worker failed internally (e.g. panicked) while holding the
+    /// request; the worker was restarted.
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_u8(self) -> u8 {
+        match self {
+            ErrorCode::Malformed => 1,
+            ErrorCode::Oversized => 2,
+            ErrorCode::Overloaded => 3,
+            ErrorCode::Timeout => 4,
+            ErrorCode::BadModel => 5,
+            ErrorCode::Draining => 6,
+            ErrorCode::Internal => 7,
+        }
+    }
+
+    pub fn from_u8(b: u8) -> Option<ErrorCode> {
+        Some(match b {
+            1 => ErrorCode::Malformed,
+            2 => ErrorCode::Oversized,
+            3 => ErrorCode::Overloaded,
+            4 => ErrorCode::Timeout,
+            5 => ErrorCode::BadModel,
+            6 => ErrorCode::Draining,
+            7 => ErrorCode::Internal,
+            _ => return None,
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::Malformed => "malformed",
+            ErrorCode::Oversized => "oversized",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::Timeout => "timeout",
+            ErrorCode::BadModel => "bad-model",
+            ErrorCode::Draining => "draining",
+            ErrorCode::Internal => "internal",
+        }
+    }
+}
+
+/// One decoded frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub req_id: u64,
+    pub payload: Vec<u8>,
+}
+
+/// Encode a frame: header (with both checksums) + payload.
+pub fn encode_frame(kind: FrameKind, req_id: u64, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(kind.as_u8());
+    out.extend_from_slice(&req_id.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&fnv64(payload).to_le_bytes());
+    let hsum = fnv64(&out[..25]);
+    out.extend_from_slice(&hsum.to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// A validated frame header (framing survives; payload not yet read).
+pub(crate) struct Header {
+    pub kind: FrameKind,
+    pub req_id: u64,
+    pub len: usize,
+    pub payload_fnv: u64,
+}
+
+/// Validate 33 header bytes. `Err` messages feed
+/// [`ErrorCode::Malformed`] replies; a failure here is **fatal** to the
+/// connection (framing is lost).
+pub(crate) fn parse_header(h: &[u8; HEADER_LEN]) -> Result<Header, String> {
+    let stored = u64::from_le_bytes(h[25..33].try_into().unwrap());
+    if fnv64(&h[..25]) != stored {
+        return Err("frame header checksum mismatch".to_string());
+    }
+    let magic = u32::from_le_bytes(h[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        return Err(format!("bad magic 0x{magic:08x}"));
+    }
+    let kind = FrameKind::from_u8(h[4]).ok_or_else(|| format!("unknown frame kind {}", h[4]))?;
+    let req_id = u64::from_le_bytes(h[5..13].try_into().unwrap());
+    let len = u32::from_le_bytes(h[13..17].try_into().unwrap()) as usize;
+    let payload_fnv = u64::from_le_bytes(h[17..25].try_into().unwrap());
+    Ok(Header { kind, req_id, len, payload_fnv })
+}
+
+/// Blocking frame read for clients (no timeout games): returns a typed
+/// [`ScrbError::Serve`] on EOF or corruption.
+pub fn read_frame_blocking(r: &mut impl Read, max_frame: usize) -> Result<Frame, ScrbError> {
+    let mut h = [0u8; HEADER_LEN];
+    r.read_exact(&mut h)
+        .map_err(|e| ScrbError::serve(format!("connection lost reading frame header: {e}")))?;
+    let header = parse_header(&h).map_err(ScrbError::serve)?;
+    if header.len > max_frame {
+        return Err(ScrbError::serve(format!(
+            "frame payload of {} bytes exceeds cap {max_frame}",
+            header.len
+        )));
+    }
+    let mut payload = vec![0u8; header.len];
+    r.read_exact(&mut payload)
+        .map_err(|e| ScrbError::serve(format!("connection lost reading frame payload: {e}")))?;
+    if fnv64(&payload) != header.payload_fnv {
+        return Err(ScrbError::serve("frame payload checksum mismatch"));
+    }
+    Ok(Frame { kind: header.kind, req_id: header.req_id, payload })
+}
+
+// ---------------------------------------------------------------------
+// Payload codecs. Decoders return `Err(message)` — the message becomes a
+// `Malformed` reply; the connection survives (framing was intact).
+// ---------------------------------------------------------------------
+
+fn take<'a>(b: &mut &'a [u8], n: usize, what: &str) -> Result<&'a [u8], String> {
+    if b.len() < n {
+        return Err(format!("truncated payload: wanted {n} bytes for {what}, have {}", b.len()));
+    }
+    let (head, tail) = b.split_at(n);
+    *b = tail;
+    Ok(head)
+}
+
+fn take_u32(b: &mut &[u8], what: &str) -> Result<u32, String> {
+    Ok(u32::from_le_bytes(take(b, 4, what)?.try_into().unwrap()))
+}
+
+/// Encode a predict request: deadline (ms, 0 = server default) plus a
+/// row-major f64 batch.
+pub fn encode_predict(deadline_ms: u32, x: &Mat) -> Vec<u8> {
+    let mut p = Vec::with_capacity(12 + x.data.len() * 8);
+    p.extend_from_slice(&deadline_ms.to_le_bytes());
+    p.extend_from_slice(&(x.rows as u32).to_le_bytes());
+    p.extend_from_slice(&(x.cols as u32).to_le_bytes());
+    for &v in &x.data {
+        p.extend_from_slice(&v.to_le_bytes());
+    }
+    p
+}
+
+/// Decode a predict request into `(deadline_ms, batch)`.
+pub fn decode_predict(payload: &[u8]) -> Result<(u32, Mat), String> {
+    let mut b = payload;
+    let deadline_ms = take_u32(&mut b, "deadline")?;
+    let rows = take_u32(&mut b, "rows")? as usize;
+    let cols = take_u32(&mut b, "cols")? as usize;
+    if rows == 0 || cols == 0 {
+        return Err(format!("empty batch ({rows}x{cols})"));
+    }
+    let want = rows
+        .checked_mul(cols)
+        .and_then(|n| n.checked_mul(8))
+        .ok_or_else(|| format!("batch shape {rows}x{cols} overflows"))?;
+    if b.len() != want {
+        return Err(format!("batch {rows}x{cols} wants {want} data bytes, payload has {}", b.len()));
+    }
+    let data: Vec<f64> =
+        b.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect();
+    Ok((deadline_ms, Mat::from_vec(rows, cols, data)))
+}
+
+/// Encode a labels response: the serving model's version plus one u32
+/// label per input row.
+pub fn encode_labels(version: u32, labels: &[usize]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(8 + labels.len() * 4);
+    p.extend_from_slice(&version.to_le_bytes());
+    p.extend_from_slice(&(labels.len() as u32).to_le_bytes());
+    for &l in labels {
+        p.extend_from_slice(&(l as u32).to_le_bytes());
+    }
+    p
+}
+
+/// Decode a labels response into `(model_version, labels)`.
+pub fn decode_labels(payload: &[u8]) -> Result<(u32, Vec<usize>), String> {
+    let mut b = payload;
+    let version = take_u32(&mut b, "model version")?;
+    let n = take_u32(&mut b, "label count")? as usize;
+    if b.len() != n * 4 {
+        return Err(format!("{n} labels want {} bytes, have {}", n * 4, b.len()));
+    }
+    let labels =
+        b.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap()) as usize).collect();
+    Ok((version, labels))
+}
+
+/// Encode a typed error response.
+pub fn encode_error(code: ErrorCode, msg: &str) -> Vec<u8> {
+    let mut p = Vec::with_capacity(5 + msg.len());
+    p.push(code.as_u8());
+    p.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+    p.extend_from_slice(msg.as_bytes());
+    p
+}
+
+/// Decode a typed error response into `(code, message)`.
+pub fn decode_error(payload: &[u8]) -> Result<(ErrorCode, String), String> {
+    let mut b = payload;
+    let raw = take(&mut b, 1, "error code")?[0];
+    let code = ErrorCode::from_u8(raw).ok_or_else(|| format!("unknown error code {raw}"))?;
+    let n = take_u32(&mut b, "message length")? as usize;
+    let msg = take(&mut b, n, "message")?;
+    String::from_utf8(msg.to_vec()).map(|m| (code, m)).map_err(|_| "non-UTF-8 message".to_string())
+}
+
+/// Encode a swap request: the model file path.
+pub fn encode_swap(path: &str) -> Vec<u8> {
+    let mut p = Vec::with_capacity(4 + path.len());
+    p.extend_from_slice(&(path.len() as u32).to_le_bytes());
+    p.extend_from_slice(path.as_bytes());
+    p
+}
+
+/// Decode a swap request into the model file path.
+pub fn decode_swap(payload: &[u8]) -> Result<String, String> {
+    let mut b = payload;
+    let n = take_u32(&mut b, "path length")? as usize;
+    let raw = take(&mut b, n, "path")?;
+    String::from_utf8(raw.to_vec()).map_err(|_| "non-UTF-8 path".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let payload = encode_predict(250, &Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]));
+        let bytes = encode_frame(FrameKind::Predict, 77, &payload);
+        assert_eq!(bytes.len(), HEADER_LEN + payload.len());
+        let frame = read_frame_blocking(&mut &bytes[..], DEFAULT_MAX_FRAME).unwrap();
+        assert_eq!(frame.kind, FrameKind::Predict);
+        assert_eq!(frame.req_id, 77);
+        let (dl, x) = decode_predict(&frame.payload).unwrap();
+        assert_eq!(dl, 250);
+        assert_eq!((x.rows, x.cols), (2, 3));
+        assert_eq!(x.data, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn every_kind_and_code_roundtrips() {
+        for k in [
+            FrameKind::Predict,
+            FrameKind::Status,
+            FrameKind::Swap,
+            FrameKind::Drain,
+            FrameKind::Ping,
+            FrameKind::Labels,
+            FrameKind::StatusReply,
+            FrameKind::SwapOk,
+            FrameKind::Error,
+            FrameKind::Pong,
+            FrameKind::DrainOk,
+        ] {
+            assert_eq!(FrameKind::from_u8(k.as_u8()), Some(k));
+            assert_eq!(k.is_request(), k.as_u8() < 0x80);
+        }
+        assert_eq!(FrameKind::from_u8(0), None);
+        for c in [
+            ErrorCode::Malformed,
+            ErrorCode::Oversized,
+            ErrorCode::Overloaded,
+            ErrorCode::Timeout,
+            ErrorCode::BadModel,
+            ErrorCode::Draining,
+            ErrorCode::Internal,
+        ] {
+            assert_eq!(ErrorCode::from_u8(c.as_u8()), Some(c));
+            assert!(!c.as_str().is_empty());
+        }
+        assert_eq!(ErrorCode::from_u8(0), None);
+    }
+
+    #[test]
+    fn header_corruption_is_detected() {
+        let bytes = encode_frame(FrameKind::Ping, 1, b"");
+        // flip any header byte: parse_header must reject
+        for pos in 0..HEADER_LEN {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x40;
+            let h: [u8; HEADER_LEN] = bad[..HEADER_LEN].try_into().unwrap();
+            assert!(parse_header(&h).is_err(), "flip at {pos} undetected");
+        }
+        let good: [u8; HEADER_LEN] = bytes[..HEADER_LEN].try_into().unwrap();
+        assert!(parse_header(&good).is_ok());
+    }
+
+    #[test]
+    fn payload_corruption_is_detected() {
+        let bytes = encode_frame(FrameKind::Swap, 9, &encode_swap("/tmp/m.scrb"));
+        let mut bad = bytes.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x01;
+        let err = read_frame_blocking(&mut &bad[..], DEFAULT_MAX_FRAME).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn truncation_is_a_typed_error() {
+        let bytes = encode_frame(FrameKind::Ping, 3, b"xyz");
+        for cut in 0..bytes.len() {
+            assert!(
+                read_frame_blocking(&mut &bytes[..cut], DEFAULT_MAX_FRAME).is_err(),
+                "cut at {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn predict_decoder_rejects_bad_shapes() {
+        // empty batch
+        let p = encode_predict(0, &Mat::zeros(1, 1));
+        let mut b = p.clone();
+        b[4..8].copy_from_slice(&0u32.to_le_bytes());
+        assert!(decode_predict(&b).is_err());
+        // length mismatch (lying row count)
+        let mut b = p.clone();
+        b[4..8].copy_from_slice(&5u32.to_le_bytes());
+        assert!(decode_predict(&b).is_err());
+        // truncated data
+        assert!(decode_predict(&p[..p.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn labels_and_error_codecs_roundtrip() {
+        let p = encode_labels(3, &[0, 2, 1, 2]);
+        assert_eq!(decode_labels(&p).unwrap(), (3, vec![0, 2, 1, 2]));
+        assert!(decode_labels(&p[..p.len() - 2]).is_err());
+        let e = encode_error(ErrorCode::Overloaded, "queue full (cap 256)");
+        let (code, msg) = decode_error(&e).unwrap();
+        assert_eq!(code, ErrorCode::Overloaded);
+        assert_eq!(msg, "queue full (cap 256)");
+        assert_eq!(decode_swap(&encode_swap("/a/b.scrb")).unwrap(), "/a/b.scrb");
+    }
+}

@@ -1,0 +1,118 @@
+//! Bounded admission queue and the shared per-connection writer.
+//!
+//! Admission control is explicit: [`AdmitQueue::try_push`] either accepts
+//! a request or hands it straight back — the caller (the connection
+//! reader) answers the client with a typed
+//! [`ErrorCode::Overloaded`](super::protocol::ErrorCode::Overloaded)
+//! rejection. Nothing blocks on a full queue and nothing is silently
+//! dropped: under overload the daemon *sheds* load and says so.
+//!
+//! Workers take work through [`AdmitQueue::pop_batch`], which coalesces
+//! up to `max_batch` queued requests in one grab — the micro-batching
+//! window. The wait is a condvar with a short timeout so workers also
+//! observe drain without a dedicated wake-up.
+
+use super::protocol::{encode_frame, FrameKind};
+use crate::linalg::Mat;
+use std::collections::VecDeque;
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Shared write half of one client connection. Readers (typed rejects,
+/// control replies) and workers (prediction results) both respond
+/// through it; the mutex keeps concurrently-written frames from
+/// interleaving on the wire.
+pub(crate) struct Conn {
+    stream: Mutex<TcpStream>,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream) -> Conn {
+        Conn { stream: Mutex::new(stream) }
+    }
+
+    /// Write one response frame. A failure means the client is gone —
+    /// the daemon's obligation ends there, so the error is returned only
+    /// for accounting, never escalated.
+    pub fn send(&self, kind: FrameKind, req_id: u64, payload: &[u8]) -> std::io::Result<()> {
+        let bytes = encode_frame(kind, req_id, payload);
+        // a poisoned lock (panicked sender) must not cascade: the stream
+        // holds no partial frame unless the panic hit write_all itself,
+        // and the peer's checksums catch that case
+        let mut s = self.stream.lock().unwrap_or_else(|p| p.into_inner());
+        s.write_all(&bytes)
+    }
+}
+
+/// One admitted prediction request, waiting for a worker.
+pub(crate) struct PendingRequest {
+    pub conn: std::sync::Arc<Conn>,
+    pub req_id: u64,
+    pub x: Mat,
+    /// Absolute deadline; a worker reaching the request after this
+    /// answers `Timeout` instead of predicting.
+    pub deadline: Instant,
+}
+
+/// Bounded FIFO of admitted requests.
+pub(crate) struct AdmitQueue {
+    inner: Mutex<VecDeque<PendingRequest>>,
+    notify: Condvar,
+    cap: usize,
+}
+
+impl AdmitQueue {
+    pub fn new(cap: usize) -> AdmitQueue {
+        AdmitQueue { inner: Mutex::new(VecDeque::new()), notify: Condvar::new(), cap: cap.max(1) }
+    }
+
+    /// Admit `req`, or hand it back if the queue is at capacity (the
+    /// caller sheds it with a typed rejection).
+    pub fn try_push(&self, req: PendingRequest) -> Result<(), PendingRequest> {
+        let mut q = self.inner.lock().unwrap();
+        if q.len() >= self.cap {
+            return Err(req);
+        }
+        q.push_back(req);
+        drop(q);
+        self.notify.notify_one();
+        Ok(())
+    }
+
+    /// Move up to `max_batch` requests into `out` (cleared first).
+    /// Blocks in short condvar waits while empty; returns `false` once
+    /// `stopped()` holds *and* the queue is empty — the worker's signal
+    /// that the drain is complete and it should exit.
+    pub fn pop_batch(
+        &self,
+        max_batch: usize,
+        out: &mut Vec<PendingRequest>,
+        stopped: impl Fn() -> bool,
+    ) -> bool {
+        out.clear();
+        let mut q = self.inner.lock().unwrap();
+        while q.is_empty() {
+            if stopped() {
+                return false;
+            }
+            let (guard, _timeout) =
+                self.notify.wait_timeout(q, Duration::from_millis(20)).unwrap();
+            q = guard;
+        }
+        let take = q.len().min(max_batch.max(1));
+        out.extend(q.drain(..take));
+        true
+    }
+
+    /// Wake every waiting worker (used when drain begins).
+    pub fn wake_all(&self) {
+        self.notify.notify_all();
+    }
+
+    /// Current queue depth (for STATUS).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+}

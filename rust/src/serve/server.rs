@@ -1,0 +1,698 @@
+//! The serving daemon: acceptor, per-connection readers, and the
+//! micro-batching worker pool.
+//!
+//! Thread shape (all `std::thread`, no async runtime):
+//!
+//! ```text
+//!   run() thread ── accept loop ──┬── reader thread per connection
+//!                                 │     parse frames, answer control,
+//!                                 │     admit Predicts (or shed)
+//!                                 │
+//!   worker threads (cfg.workers) ─┴── pop_batch → coalesce → predict
+//! ```
+//!
+//! Readers poll with a 50 ms socket timeout so they observe drain and
+//! torn frames without extra machinery; workers wait on the queue's
+//! condvar. A worker pins the model `Arc` once per batch, so a hot swap
+//! never changes the model under an in-flight request. Worker panics are
+//! contained with `catch_unwind`: the batch's requests are answered with
+//! a typed `Internal` rejection, the worker rebuilds its scratch state
+//! ("restarts") and keeps serving — one poisoned request cannot take the
+//! daemon down.
+
+use super::protocol::{
+    encode_error, encode_labels, parse_header, ErrorCode, Frame, FrameKind, Header, HEADER_LEN,
+};
+use super::queue::{AdmitQueue, Conn, PendingRequest};
+use super::swap::{ModelSlot, VersionedModel};
+use crate::error::ScrbError;
+use crate::linalg::Mat;
+use crate::model::{FittedModel, ScRbModel, ServeWorkspace};
+use crate::stream::fault::ServeFaultPlan;
+use crate::util::json::Json;
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Serving daemon configuration. Defaults favor a small test footprint;
+/// the CLI exposes each knob.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address, e.g. `"127.0.0.1:7878"` (`:0` picks a free port).
+    pub addr: String,
+    /// Worker (micro-batcher) threads.
+    pub workers: usize,
+    /// Admission queue capacity; requests beyond it are shed.
+    pub queue_cap: usize,
+    /// Max requests coalesced into one `predict_batch` call.
+    pub max_batch: usize,
+    /// Deadline applied to requests that do not carry their own, in ms.
+    pub default_deadline_ms: u64,
+    /// Per-frame payload cap in bytes.
+    pub max_frame_bytes: usize,
+    /// How long a started frame may stall mid-read before it is declared
+    /// torn and the connection closed with a typed error, in ms.
+    pub frame_stall_ms: u64,
+    /// Seeded fault injection (tests/benches only; default: no faults).
+    pub fault: ServeFaultPlan,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            queue_cap: 256,
+            max_batch: 64,
+            default_deadline_ms: 1000,
+            max_frame_bytes: super::protocol::DEFAULT_MAX_FRAME,
+            frame_stall_ms: 5000,
+            fault: ServeFaultPlan::default(),
+        }
+    }
+}
+
+/// Monotonic counters surfaced by `STATUS`. Relaxed atomics: statistics,
+/// not synchronization — except where tests assert exactness, which
+/// holds because each event increments exactly one site.
+#[derive(Default)]
+pub(crate) struct Counters {
+    pub connections: AtomicU64,
+    pub served_requests: AtomicU64,
+    pub served_points: AtomicU64,
+    pub batches: AtomicU64,
+    pub shed: AtomicU64,
+    pub timeouts: AtomicU64,
+    pub restarts: AtomicU64,
+    pub protocol_errors: AtomicU64,
+    pub internal_rejects: AtomicU64,
+    pub drain_rejects: AtomicU64,
+    pub swaps_ok: AtomicU64,
+    pub swaps_failed: AtomicU64,
+}
+
+pub(crate) struct Shared {
+    pub cfg: ServeConfig,
+    pub slot: ModelSlot,
+    pub queue: AdmitQueue,
+    pub stats: Counters,
+    pub draining: AtomicBool,
+    pub readers_active: AtomicUsize,
+}
+
+/// Process-wide SIGTERM latch (see [`install_sigterm_drain`]).
+static SIGTERM_SEEN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" {
+    fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+}
+
+#[cfg(unix)]
+extern "C" fn on_sigterm(_sig: i32) {
+    // async-signal-safe: one atomic store, nothing else
+    SIGTERM_SEEN.store(true, Ordering::SeqCst);
+}
+
+/// Route SIGTERM into a graceful drain: the acceptor stops admitting,
+/// in-flight and queued requests finish, workers exit. Installed by the
+/// CLI entry point; library users typically drive drain via the protocol
+/// instead.
+#[cfg(unix)]
+pub fn install_sigterm_drain() {
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_sigterm);
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install_sigterm_drain() {}
+
+/// A bound (not yet running) serving daemon.
+pub struct Server {
+    listener: TcpListener,
+    shared: Arc<Shared>,
+}
+
+/// Handle to a daemon running on a background thread.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    join: JoinHandle<Result<(), ScrbError>>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Wait for the daemon to drain and exit.
+    pub fn join(self) -> Result<(), ScrbError> {
+        self.join
+            .join()
+            .unwrap_or_else(|_| Err(ScrbError::serve("server thread panicked")))
+    }
+}
+
+impl Server {
+    /// Bind `cfg.addr` and install `model` as version 1.
+    pub fn bind(cfg: ServeConfig, model: ScRbModel) -> Result<Server, ScrbError> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| ScrbError::serve(format!("cannot bind {}: {e}", cfg.addr)))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| ScrbError::serve(format!("cannot set nonblocking: {e}")))?;
+        let queue = AdmitQueue::new(cfg.queue_cap);
+        let shared = Arc::new(Shared {
+            cfg,
+            slot: ModelSlot::new(model),
+            queue,
+            stats: Counters::default(),
+            draining: AtomicBool::new(false),
+            readers_active: AtomicUsize::new(0),
+        });
+        Ok(Server { listener, shared })
+    }
+
+    /// The bound address (useful with `:0`).
+    pub fn local_addr(&self) -> Result<SocketAddr, ScrbError> {
+        self.listener
+            .local_addr()
+            .map_err(|e| ScrbError::serve(format!("cannot read local addr: {e}")))
+    }
+
+    /// Run the daemon on a background thread.
+    pub fn spawn(self) -> Result<ServerHandle, ScrbError> {
+        let addr = self.local_addr()?;
+        let join = std::thread::spawn(move || self.run());
+        Ok(ServerHandle { addr, join })
+    }
+
+    /// Run the daemon on the calling thread until a drain (protocol
+    /// `Drain` frame or SIGTERM) completes: every admitted request is
+    /// answered before this returns.
+    pub fn run(self) -> Result<(), ScrbError> {
+        let shared = self.shared;
+        let workers: Vec<JoinHandle<()>> = (0..shared.cfg.workers.max(1))
+            .map(|_| {
+                let sh = shared.clone();
+                std::thread::spawn(move || worker_loop(sh))
+            })
+            .collect();
+
+        let mut readers: Vec<JoinHandle<()>> = Vec::new();
+        loop {
+            if SIGTERM_SEEN.load(Ordering::SeqCst) {
+                shared.draining.store(true, Ordering::SeqCst);
+            }
+            if shared.draining.load(Ordering::SeqCst) {
+                break;
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    shared.stats.connections.fetch_add(1, Ordering::Relaxed);
+                    shared.readers_active.fetch_add(1, Ordering::SeqCst);
+                    let sh = shared.clone();
+                    readers.push(std::thread::spawn(move || {
+                        reader_loop(&sh, stream);
+                        sh.readers_active.fetch_sub(1, Ordering::SeqCst);
+                        sh.queue.wake_all();
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(_) => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        }
+        // drain: readers notice the flag at their next idle tick and
+        // exit; only then can no new request be admitted, so workers
+        // wait for readers_active == 0 *and* an empty queue
+        shared.queue.wake_all();
+        for r in readers {
+            let _ = r.join();
+        }
+        for w in workers {
+            let _ = w.join();
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Connection reader
+// ---------------------------------------------------------------------
+
+/// What one poll of the socket produced.
+enum ReadEvent {
+    Frame(Frame),
+    /// No byte arrived within the poll tick.
+    Idle,
+    /// Clean EOF at a frame boundary.
+    Closed,
+    /// Protocol violation: answer `code`, then close iff `fatal`.
+    Bad { code: ErrorCode, msg: String, fatal: bool },
+    /// Transport failure: close silently.
+    Dead,
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// Fill `buf` from a socket with a read timeout installed. `started`
+/// says whether the frame already has bytes on the floor (an initial
+/// quiet tick is `Idle`; a mid-frame stall longer than `stall` is torn).
+fn read_full(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    mut started: bool,
+    stall: Duration,
+) -> Result<(), ReadEvent> {
+    let mut filled = 0usize;
+    let begin = Instant::now();
+    while filled < buf.len() {
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(if started { torn("peer closed mid-frame") } else { ReadEvent::Closed })
+            }
+            Ok(n) => {
+                filled += n;
+                started = true;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) if is_timeout(&e) => {
+                if !started {
+                    return Err(ReadEvent::Idle);
+                }
+                if begin.elapsed() > stall {
+                    return Err(torn("frame stalled (peer too slow or died mid-write)"));
+                }
+            }
+            Err(_) => return Err(ReadEvent::Dead),
+        }
+    }
+    Ok(())
+}
+
+fn torn(msg: &str) -> ReadEvent {
+    ReadEvent::Bad { code: ErrorCode::Malformed, msg: msg.to_string(), fatal: true }
+}
+
+/// Read one frame (or an event) from the socket.
+fn read_event(stream: &mut TcpStream, max_frame: usize, stall: Duration) -> ReadEvent {
+    let mut h = [0u8; HEADER_LEN];
+    if let Err(ev) = read_full(stream, &mut h, false, stall) {
+        return ev;
+    }
+    let Header { kind, req_id, len, payload_fnv } = match parse_header(&h) {
+        Ok(hd) => hd,
+        // framing lost: typed reply, then close
+        Err(msg) => return ReadEvent::Bad { code: ErrorCode::Malformed, msg, fatal: true },
+    };
+    if len > max_frame {
+        // header is intact, so framing survives: stream the payload to
+        // the floor in bounded chunks, then reject — connection keeps
+        let mut remaining = len;
+        let mut sink = [0u8; 4096];
+        while remaining > 0 {
+            let want = remaining.min(sink.len());
+            if let Err(ev) = read_full(stream, &mut sink[..want], true, stall) {
+                return ev;
+            }
+            remaining -= want;
+        }
+        return ReadEvent::Bad {
+            code: ErrorCode::Oversized,
+            msg: format!("payload of {len} bytes exceeds cap {max_frame}"),
+            fatal: false,
+        };
+    }
+    let mut payload = vec![0u8; len];
+    if let Err(ev) = read_full(stream, &mut payload, true, stall) {
+        return ev;
+    }
+    if crate::util::fnv::fnv64(&payload) != payload_fnv {
+        // exactly `len` bytes consumed: framing intact, keep connection
+        return ReadEvent::Bad {
+            code: ErrorCode::Malformed,
+            msg: "payload checksum mismatch".to_string(),
+            fatal: false,
+        };
+    }
+    ReadEvent::Frame(Frame { kind, req_id, payload })
+}
+
+fn reader_loop(shared: &Arc<Shared>, stream: TcpStream) {
+    if stream.set_read_timeout(Some(Duration::from_millis(50))).is_err() {
+        return;
+    }
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let conn = Arc::new(Conn::new(write_half));
+    let stall = Duration::from_millis(shared.cfg.frame_stall_ms.max(1));
+    let mut stream = stream;
+    loop {
+        match read_event(&mut stream, shared.cfg.max_frame_bytes, stall) {
+            ReadEvent::Idle => {
+                if shared.draining.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            ReadEvent::Closed | ReadEvent::Dead => return,
+            ReadEvent::Bad { code, msg, fatal } => {
+                shared.stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                let _ = conn.send(FrameKind::Error, 0, &encode_error(code, &msg));
+                if fatal {
+                    return;
+                }
+            }
+            ReadEvent::Frame(frame) => {
+                if !handle_frame(shared, &conn, frame) {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Dispatch one request frame; `false` ends the connection.
+fn handle_frame(shared: &Arc<Shared>, conn: &Arc<Conn>, frame: Frame) -> bool {
+    let id = frame.req_id;
+    match frame.kind {
+        FrameKind::Ping => {
+            let _ = conn.send(FrameKind::Pong, id, &[]);
+            true
+        }
+        FrameKind::Status => {
+            let body = status_json(shared).to_string();
+            let _ = conn.send(FrameKind::StatusReply, id, body.as_bytes());
+            true
+        }
+        FrameKind::Drain => {
+            shared.draining.store(true, Ordering::SeqCst);
+            shared.queue.wake_all();
+            let _ = conn.send(FrameKind::DrainOk, id, &[]);
+            // stop reading; queued requests from this conn still answer
+            // through the shared writer before the daemon exits
+            false
+        }
+        FrameKind::Swap => {
+            let path = match super::protocol::decode_swap(&frame.payload) {
+                Ok(p) => p,
+                Err(msg) => {
+                    shared.stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = conn.send(FrameKind::Error, id, &encode_error(ErrorCode::Malformed, &msg));
+                    return true;
+                }
+            };
+            match shared.slot.swap_from_path(&path) {
+                Ok(version) => {
+                    shared.stats.swaps_ok.fetch_add(1, Ordering::Relaxed);
+                    let _ = conn.send(FrameKind::SwapOk, id, &version.to_le_bytes());
+                }
+                Err(e) => {
+                    shared.stats.swaps_failed.fetch_add(1, Ordering::Relaxed);
+                    let _ = conn
+                        .send(FrameKind::Error, id, &encode_error(ErrorCode::BadModel, &e.to_string()));
+                }
+            }
+            true
+        }
+        FrameKind::Predict => {
+            if shared.draining.load(Ordering::SeqCst) {
+                shared.stats.drain_rejects.fetch_add(1, Ordering::Relaxed);
+                let _ = conn.send(
+                    FrameKind::Error,
+                    id,
+                    &encode_error(ErrorCode::Draining, "daemon is draining"),
+                );
+                return true;
+            }
+            let (deadline_ms, x) = match super::protocol::decode_predict(&frame.payload) {
+                Ok(v) => v,
+                Err(msg) => {
+                    shared.stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = conn.send(FrameKind::Error, id, &encode_error(ErrorCode::Malformed, &msg));
+                    return true;
+                }
+            };
+            let d = shared.slot.current().model.input_dim();
+            if x.cols != d {
+                shared.stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                let msg = format!("model expects {d} input features, batch has {}", x.cols);
+                let _ = conn.send(FrameKind::Error, id, &encode_error(ErrorCode::Malformed, &msg));
+                return true;
+            }
+            let ms = if deadline_ms == 0 { shared.cfg.default_deadline_ms } else { deadline_ms as u64 };
+            let req = PendingRequest {
+                conn: conn.clone(),
+                req_id: id,
+                x,
+                deadline: Instant::now() + Duration::from_millis(ms),
+            };
+            if let Err(req) = shared.queue.try_push(req) {
+                shared.stats.shed.fetch_add(1, Ordering::Relaxed);
+                let msg = format!("admission queue full (cap {})", shared.cfg.queue_cap);
+                let _ =
+                    req.conn.send(FrameKind::Error, req.req_id, &encode_error(ErrorCode::Overloaded, &msg));
+            }
+            true
+        }
+        // response kinds arriving at the server are a protocol violation
+        _ => {
+            shared.stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            let _ = conn.send(
+                FrameKind::Error,
+                id,
+                &encode_error(ErrorCode::Malformed, "response frame sent to server"),
+            );
+            false
+        }
+    }
+}
+
+/// Build the STATUS document.
+fn status_json(shared: &Arc<Shared>) -> Json {
+    let cur = shared.slot.current();
+    let drift = cur.model.drift_stats();
+    let s = &shared.stats;
+    let mut o = Json::obj();
+    o.set("model_version", Json::Num(cur.version as f64))
+        .set("workers", Json::Num(shared.cfg.workers as f64))
+        .set("queue_depth", Json::Num(shared.queue.depth() as f64))
+        .set("queue_cap", Json::Num(shared.cfg.queue_cap as f64))
+        .set("draining", Json::Bool(shared.draining.load(Ordering::SeqCst)))
+        .set("connections", Json::Num(s.connections.load(Ordering::Relaxed) as f64))
+        .set("served_requests", Json::Num(s.served_requests.load(Ordering::Relaxed) as f64))
+        .set("served_points", Json::Num(s.served_points.load(Ordering::Relaxed) as f64))
+        .set("batches", Json::Num(s.batches.load(Ordering::Relaxed) as f64))
+        .set("shed", Json::Num(s.shed.load(Ordering::Relaxed) as f64))
+        .set("timeouts", Json::Num(s.timeouts.load(Ordering::Relaxed) as f64))
+        .set("restarts", Json::Num(s.restarts.load(Ordering::Relaxed) as f64))
+        .set("protocol_errors", Json::Num(s.protocol_errors.load(Ordering::Relaxed) as f64))
+        .set("internal_rejects", Json::Num(s.internal_rejects.load(Ordering::Relaxed) as f64))
+        .set("drain_rejects", Json::Num(s.drain_rejects.load(Ordering::Relaxed) as f64))
+        .set("swaps_ok", Json::Num(s.swaps_ok.load(Ordering::Relaxed) as f64))
+        .set("swaps_failed", Json::Num(s.swaps_failed.load(Ordering::Relaxed) as f64));
+    let mut drift_o = Json::obj();
+    drift_o
+        .set("points", Json::Num(drift.points as f64))
+        .set("lookups", Json::Num(drift.lookups as f64))
+        .set("unseen", Json::Num(drift.unseen as f64))
+        .set("over_threshold", Json::Num(drift.over_threshold as f64))
+        .set("warnings", Json::Num(drift.warnings as f64))
+        .set("rate", Json::Num(drift.rate()));
+    o.set("drift", drift_o);
+    let swaps: Vec<Json> = shared
+        .slot
+        .history()
+        .into_iter()
+        .map(|rec| {
+            let mut e = Json::obj();
+            e.set("version", Json::Num(rec.version as f64))
+                .set("path", Json::Str(rec.path))
+                .set("ok", Json::Bool(rec.ok))
+                .set("detail", Json::Str(rec.detail));
+            e
+        })
+        .collect();
+    o.set("swap_history", Json::Arr(swaps));
+    o
+}
+
+// ---------------------------------------------------------------------
+// Worker (micro-batcher)
+// ---------------------------------------------------------------------
+
+/// Per-worker reusable scratch: the serving workspace, the label buffer,
+/// and the coalesced input matrix. Rebuilt from scratch after a panic
+/// (that is the "restart" — the thread itself survives).
+struct WorkerState {
+    ws: ServeWorkspace,
+    labels: Vec<usize>,
+    coalesced: Mat,
+}
+
+impl WorkerState {
+    fn fresh() -> WorkerState {
+        WorkerState { ws: ServeWorkspace::new(), labels: Vec::new(), coalesced: Mat::zeros(0, 0) }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut state = WorkerState::fresh();
+    let mut batch: Vec<PendingRequest> = Vec::new();
+    loop {
+        let got = shared.queue.pop_batch(shared.cfg.max_batch, &mut batch, || {
+            shared.draining.load(Ordering::SeqCst)
+                && shared.readers_active.load(Ordering::SeqCst) == 0
+        });
+        if !got {
+            return;
+        }
+        let vm = shared.slot.current();
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            process_batch(&shared, &vm, &batch, &mut state);
+        }));
+        if outcome.is_err() {
+            // worker restart: rebuild scratch, answer the poisoned
+            // batch's requests with a typed Internal rejection
+            shared.stats.restarts.fetch_add(1, Ordering::Relaxed);
+            state = WorkerState::fresh();
+            for r in &batch {
+                shared.stats.internal_rejects.fetch_add(1, Ordering::Relaxed);
+                let _ = r.conn.send(
+                    FrameKind::Error,
+                    r.req_id,
+                    &encode_error(ErrorCode::Internal, "worker panicked; worker restarted"),
+                );
+            }
+        }
+        batch.clear();
+    }
+}
+
+/// Serve one popped batch against one pinned model version.
+fn process_batch(
+    shared: &Arc<Shared>,
+    vm: &Arc<VersionedModel>,
+    batch: &[PendingRequest],
+    state: &mut WorkerState,
+) {
+    let plan = &shared.cfg.fault;
+    // injected stalls first (they are what makes deadlines expire in
+    // tests), then the deadline gate, then injected panics
+    if plan.stall_ms > 0 {
+        for r in batch {
+            if plan.stalls(r.req_id) {
+                std::thread::sleep(Duration::from_millis(plan.stall_ms));
+            }
+        }
+    }
+    let now = Instant::now();
+    let mut live: Vec<&PendingRequest> = Vec::with_capacity(batch.len());
+    for r in batch {
+        if now > r.deadline {
+            shared.stats.timeouts.fetch_add(1, Ordering::Relaxed);
+            let _ = r.conn.send(
+                FrameKind::Error,
+                r.req_id,
+                &encode_error(ErrorCode::Timeout, "deadline expired before a worker was free"),
+            );
+        } else {
+            live.push(r);
+        }
+    }
+    if live.is_empty() {
+        return;
+    }
+    for r in &live {
+        if plan.panics(r.req_id) {
+            panic!("injected worker panic (req {})", r.req_id);
+        }
+    }
+    shared.stats.batches.fetch_add(1, Ordering::Relaxed);
+    if live.len() == 1 {
+        // single-request fast path: no copy into the coalesce buffer
+        let r = live[0];
+        reply_predict(shared, vm, r, &r.x, state);
+        return;
+    }
+    // coalesce rows of every live request into one matrix (capacity
+    // reused across batches), one predict_batch, split the label ranges
+    let cols = live[0].x.cols;
+    let total: usize = live.iter().map(|r| r.x.rows).sum();
+    state.coalesced.rows = total;
+    state.coalesced.cols = cols;
+    state.coalesced.data.clear();
+    state.coalesced.data.reserve(total * cols);
+    for r in &live {
+        state.coalesced.data.extend_from_slice(&r.x.data);
+    }
+    match vm.model.predict_batch(&state.coalesced, &mut state.ws, &mut state.labels) {
+        Ok(()) => {
+            let mut off = 0usize;
+            for r in &live {
+                let n = r.x.rows;
+                shared.stats.served_requests.fetch_add(1, Ordering::Relaxed);
+                shared.stats.served_points.fetch_add(n as u64, Ordering::Relaxed);
+                let _ = r.conn.send(
+                    FrameKind::Labels,
+                    r.req_id,
+                    &encode_labels(vm.version, &state.labels[off..off + n]),
+                );
+                off += n;
+            }
+        }
+        Err(e) => {
+            // admission validated shapes, so this is unexpected: typed
+            // Internal rejection for the whole coalesced batch
+            for r in &live {
+                shared.stats.internal_rejects.fetch_add(1, Ordering::Relaxed);
+                let _ = r.conn.send(
+                    FrameKind::Error,
+                    r.req_id,
+                    &encode_error(ErrorCode::Internal, &format!("predict failed: {e}")),
+                );
+            }
+        }
+    }
+}
+
+/// Predict and answer a single request against the pinned model.
+fn reply_predict(
+    shared: &Arc<Shared>,
+    vm: &Arc<VersionedModel>,
+    r: &PendingRequest,
+    x: &Mat,
+    state: &mut WorkerState,
+) {
+    match vm.model.predict_batch(x, &mut state.ws, &mut state.labels) {
+        Ok(()) => {
+            shared.stats.served_requests.fetch_add(1, Ordering::Relaxed);
+            shared.stats.served_points.fetch_add(x.rows as u64, Ordering::Relaxed);
+            let _ = r.conn.send(
+                FrameKind::Labels,
+                r.req_id,
+                &encode_labels(vm.version, &state.labels),
+            );
+        }
+        Err(e) => {
+            shared.stats.internal_rejects.fetch_add(1, Ordering::Relaxed);
+            let _ = r.conn.send(
+                FrameKind::Error,
+                r.req_id,
+                &encode_error(ErrorCode::Internal, &format!("predict failed: {e}")),
+            );
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! Atomic hot model swap with validate-before-publish and rollback.
+//!
+//! The served model lives behind an [`ModelSlot`]: workers take an
+//! `Arc` snapshot **once per batch**, so a swap can never change the
+//! model under an in-flight request — every response is computed, start
+//! to finish, against exactly one model version (the version is echoed
+//! in the response so clients can verify).
+//!
+//! A swap publishes only after the candidate passes two gates:
+//!
+//! 1. the checksummed v2 loader ([`ScRbModel::load`]) — bit-rot,
+//!    truncation and bad magic are all typed failures that name the file;
+//! 2. a self-check prediction on a probe batch — the model must accept
+//!    its own declared input width and emit in-range labels.
+//!
+//! Any failure leaves the current model untouched (rollback is simply
+//! "don't publish") and is recorded in the swap history surfaced by
+//! `STATUS`.
+
+use crate::error::ScrbError;
+use crate::linalg::Mat;
+use crate::model::{FittedModel, ScRbModel, ServeWorkspace};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// One served model plus its monotonically increasing version.
+pub(crate) struct VersionedModel {
+    pub version: u32,
+    pub model: ScRbModel,
+}
+
+/// One entry of the swap audit trail.
+#[derive(Clone, Debug)]
+pub struct SwapRecord {
+    /// Version published (on success) or the version that *stayed*
+    /// published (on a rolled-back failure).
+    pub version: u32,
+    /// Model file the swap was asked to load.
+    pub path: String,
+    pub ok: bool,
+    /// Human-readable outcome ("published" or the rejection reason).
+    pub detail: String,
+}
+
+/// The swappable model slot.
+pub(crate) struct ModelSlot {
+    cur: RwLock<Arc<VersionedModel>>,
+    history: Mutex<Vec<SwapRecord>>,
+}
+
+impl ModelSlot {
+    pub fn new(model: ScRbModel) -> ModelSlot {
+        ModelSlot {
+            cur: RwLock::new(Arc::new(VersionedModel { version: 1, model })),
+            history: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Snapshot the current model. Cheap (one `Arc` clone under a read
+    /// lock); callers hold the snapshot for the duration of a batch.
+    pub fn current(&self) -> Arc<VersionedModel> {
+        self.cur.read().unwrap().clone()
+    }
+
+    /// The swap audit trail, oldest first.
+    pub fn history(&self) -> Vec<SwapRecord> {
+        self.history.lock().unwrap().clone()
+    }
+
+    /// Validate the model file at `path` and atomically publish it.
+    /// On any failure the currently served model stays published and the
+    /// error (which names the offending path) is returned.
+    pub fn swap_from_path(&self, path: &str) -> Result<u32, ScrbError> {
+        match self.validate(path) {
+            Ok(candidate) => {
+                let mut w = self.cur.write().unwrap();
+                let version = w.version + 1;
+                *w = Arc::new(VersionedModel { version, model: candidate });
+                drop(w);
+                self.history.lock().unwrap().push(SwapRecord {
+                    version,
+                    path: path.to_string(),
+                    ok: true,
+                    detail: "published".to_string(),
+                });
+                Ok(version)
+            }
+            Err(e) => {
+                let kept = self.current().version;
+                self.history.lock().unwrap().push(SwapRecord {
+                    version: kept,
+                    path: path.to_string(),
+                    ok: false,
+                    detail: e.to_string(),
+                });
+                Err(e)
+            }
+        }
+    }
+
+    /// The two validation gates: checksummed load, then a self-check
+    /// prediction on a probe batch.
+    fn validate(&self, path: &str) -> Result<ScRbModel, ScrbError> {
+        let candidate = ScRbModel::load(path)?;
+        let cur = self.current();
+        let d = cur.model.input_dim();
+        if candidate.input_dim() != d {
+            return Err(ScrbError::serve(format!(
+                "swap rejected: {path} expects {} input features, serving traffic has {d}",
+                candidate.input_dim()
+            )));
+        }
+        if candidate.n_clusters() == 0 {
+            return Err(ScrbError::serve(format!("swap rejected: {path} has zero clusters")));
+        }
+        // self-check: the candidate must label a probe batch without
+        // erroring and stay in label range
+        let probe = Mat::zeros(2, d);
+        let mut ws = ServeWorkspace::new();
+        let mut labels = Vec::new();
+        candidate.predict_batch(&probe, &mut ws, &mut labels).map_err(|e| {
+            ScrbError::serve(format!("swap rejected: {path} failed self-check predict: {e}"))
+        })?;
+        if labels.iter().any(|&l| l >= candidate.n_clusters()) {
+            return Err(ScrbError::serve(format!(
+                "swap rejected: {path} emitted out-of-range labels in self-check"
+            )));
+        }
+        Ok(candidate)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("scrb_swap_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    // a tiny real model: fit-quality is irrelevant, only serving shape
+    fn toy(seed: u64) -> ScRbModel {
+        crate::serve::test_model(40, 4, 3, seed)
+    }
+
+    #[test]
+    fn swap_publishes_and_bumps_version() {
+        let slot = ModelSlot::new(toy(1));
+        assert_eq!(slot.current().version, 1);
+        let dir = tmpdir("pub");
+        let path = dir.join("next.scrb");
+        toy(2).save(path.to_str().unwrap()).unwrap();
+        let v = slot.swap_from_path(path.to_str().unwrap()).unwrap();
+        assert_eq!(v, 2);
+        assert_eq!(slot.current().version, 2);
+        let h = slot.history();
+        assert_eq!(h.len(), 1);
+        assert!(h[0].ok);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_swap_rolls_back_and_names_path() {
+        let slot = ModelSlot::new(toy(3));
+        let before = slot.current();
+        let dir = tmpdir("corrupt");
+        let path = dir.join("bad.scrb");
+        let mut bytes = toy(4).to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = slot.swap_from_path(path.to_str().unwrap()).unwrap_err();
+        assert!(err.to_string().contains("bad.scrb"), "{err}");
+        // rollback: same Arc still published, version unchanged
+        let after = slot.current();
+        assert_eq!(after.version, before.version);
+        assert!(Arc::ptr_eq(&before, &after));
+        let h = slot.history();
+        assert_eq!(h.len(), 1);
+        assert!(!h[0].ok);
+        assert_eq!(h[0].version, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dim_mismatch_is_rejected() {
+        let slot = ModelSlot::new(toy(5));
+        let dir = tmpdir("dim");
+        let path = dir.join("wide.scrb");
+        // d_in = 5 instead of the toy default 3
+        crate::serve::test_model_dim(40, 4, 3, 5, 6).save(path.to_str().unwrap()).unwrap();
+        let err = slot.swap_from_path(path.to_str().unwrap()).unwrap_err();
+        assert!(err.to_string().contains("input features"), "{err}");
+        assert_eq!(slot.current().version, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -133,15 +133,14 @@ impl GramScratch {
 /// FNV-1a over 16 evenly-spaced `col_ptr` samples — a cheap distribution
 /// fingerprint for [`GramScratch`] staleness detection (O(1), not O(D)).
 fn col_ptr_fingerprint(col_ptr: &[usize]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut h = crate::util::fnv::Fnv64::new();
     let n = col_ptr.len(); // always >= 1
     let samples = 16usize.min(n);
     let denom = (samples - 1).max(1);
     for s in 0..samples {
-        let v = col_ptr[s * (n - 1) / denom];
-        h = (h ^ v as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        h.write_u64(col_ptr[s * (n - 1) / denom] as u64);
     }
-    h
+    h.finish()
 }
 
 /// Partition `[0, cols)` into contiguous strips that are (a) narrow enough

@@ -40,8 +40,10 @@ const ROW_SALT: u64 = 0x5eed_f417_5eed_f417;
 
 /// Stateless position hash (splitmix64 finalizer over three words): fault
 /// decisions must be pure functions of (seed, site), never of draw order,
-/// or retries and second passes would see different faults.
-fn mix(a: u64, b: u64, c: u64) -> u64 {
+/// or retries and second passes would see different faults. Shared with
+/// the serving fault plan ([`ServeFaultPlan`]), which keys off request
+/// ids the same way this file keys off row/call sites.
+pub(crate) fn mix(a: u64, b: u64, c: u64) -> u64 {
     let mut x = a ^ b.wrapping_mul(0x9e37_79b9_7f4a_7c15) ^ c.wrapping_mul(0xbf58_476d_1ce4_e5b9);
     x ^= x >> 30;
     x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
@@ -241,6 +243,54 @@ pub fn corrupt_model_bytes(bytes: &[u8], seed: u64) -> Vec<u8> {
     out
 }
 
+/// Salt separating serving-panic decisions from serving-stall decisions.
+const SERVE_PANIC_SALT: u64 = 0x9a1c_0de0_9a1c_0de0;
+const SERVE_STALL_SALT: u64 = 0x57a1_1ed0_57a1_1ed0;
+
+/// Seeded fault plan for the serving daemon ([`crate::serve`]): which
+/// requests make a worker panic and which stall inside the batcher.
+/// Decisions are pure functions of `(seed, req_id)` — the same request id
+/// draws the same fate on every run and on every worker, so tests can
+/// predict exact panic/restart and timeout counts from the ids they send.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeFaultPlan {
+    pub seed: u64,
+    /// Per-mille of request ids that panic the worker processing them.
+    pub panic_permille: u32,
+    /// Per-mille of request ids that stall the worker for `stall_ms`
+    /// before the batch is processed (drives deadline/overload tests).
+    pub stall_permille: u32,
+    /// How long a stalled request sleeps, in milliseconds.
+    pub stall_ms: u64,
+}
+
+impl ServeFaultPlan {
+    /// Does `req_id` panic its worker under this plan?
+    pub fn panics(&self, req_id: u64) -> bool {
+        self.panic_permille > 0
+            && mix(self.seed ^ SERVE_PANIC_SALT, req_id, 0x7a71c) % 1000
+                < self.panic_permille as u64
+    }
+
+    /// Does `req_id` stall its worker under this plan?
+    pub fn stalls(&self, req_id: u64) -> bool {
+        self.stall_permille > 0
+            && mix(self.seed ^ SERVE_STALL_SALT, req_id, 0x57a11) % 1000
+                < self.stall_permille as u64
+    }
+}
+
+/// Seeded torn-frame corrupter for serving protocol tests: truncate an
+/// encoded frame to a strict prefix (at least 1 byte shorter, possibly
+/// empty), simulating a client that died mid-write.
+pub fn tear_frame(frame: &[u8], seed: u64) -> Vec<u8> {
+    if frame.is_empty() {
+        return Vec::new();
+    }
+    let cut = (mix(seed, frame.len() as u64, 0x7ea2) % frame.len() as u64) as usize;
+    frame[..cut].to_vec()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -339,5 +389,34 @@ mod tests {
         let m = corrupt_model_bytes(b"0123456789", 4);
         assert_eq!(m, corrupt_model_bytes(b"0123456789", 4));
         assert_ne!(m, b"0123456789");
+    }
+
+    #[test]
+    fn serve_plan_is_deterministic_and_rate_bounded() {
+        let plan =
+            ServeFaultPlan { seed: 42, panic_permille: 100, stall_permille: 100, stall_ms: 5 };
+        let panics: Vec<u64> = (0..1000).filter(|&id| plan.panics(id)).collect();
+        let stalls: Vec<u64> = (0..1000).filter(|&id| plan.stalls(id)).collect();
+        // same plan, same decisions
+        assert_eq!(panics, (0..1000).filter(|&id| plan.panics(id)).collect::<Vec<_>>());
+        // roughly the requested rate, and the two salts decorrelate
+        assert!(!panics.is_empty() && panics.len() < 300);
+        assert!(!stalls.is_empty() && stalls.len() < 300);
+        assert_ne!(panics, stalls);
+        // zero rate fires never
+        let off = ServeFaultPlan { seed: 42, ..ServeFaultPlan::default() };
+        assert!((0..1000).all(|id| !off.panics(id) && !off.stalls(id)));
+    }
+
+    #[test]
+    fn tear_frame_strictly_truncates() {
+        let frame = vec![7u8; 64];
+        for seed in 0..32 {
+            let torn = tear_frame(&frame, seed);
+            assert!(torn.len() < frame.len());
+            assert_eq!(&torn[..], &frame[..torn.len()]);
+            assert_eq!(torn, tear_frame(&frame, seed));
+        }
+        assert!(tear_frame(&[], 1).is_empty());
     }
 }

@@ -86,7 +86,9 @@ pub mod stats;
 
 pub use checkpoint::CheckpointCfg;
 pub use chunk::{RowMeta, SparseChunk};
-pub use fault::{corrupt_libsvm_text, corrupt_model_bytes, FaultPlan, FaultyReader};
+pub use fault::{
+    corrupt_libsvm_text, corrupt_model_bytes, tear_frame, FaultPlan, FaultyReader, ServeFaultPlan,
+};
 pub use featurize::{StreamFeaturizer, StreamFeatures};
 pub use fit::{fit_streaming, StreamFit, StreamOpts};
 pub use policy::{GuardedReader, IngestPolicy, OnBadRecord, Quarantine};

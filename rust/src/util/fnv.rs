@@ -1,0 +1,88 @@
+//! The one FNV-1a 64-bit implementation of the crate.
+//!
+//! Four subsystems checksum or fingerprint bytes — model-file footers
+//! (`model::persist`), checkpoint footers (`stream::checkpoint`, via the
+//! persist writer), pipeline stage fingerprints (`pipeline::fingerprint`),
+//! and the gram-scratch staleness fingerprint (`sparse::ell`). They all
+//! use the same hash family, and they used to each carry their own copy of
+//! the constants and fold loop; a typo'd prime in one copy would have let
+//! a "checksummed" artifact verify against the wrong digest. This module
+//! is the single definition they all fold through.
+//!
+//! FNV-1a is integrity against *accidental* corruption (bit rot,
+//! truncation, torn writes) and identity for cache keys — it is not a
+//! cryptographic MAC and none of the call sites treat it as one.
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// One-shot FNV-1a digest of a byte slice.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.write(bytes);
+    h.finish()
+}
+
+/// Incremental FNV-1a hasher: byte-for-byte identical to [`fnv64`] over
+/// the concatenation of everything written.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv64(u64);
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64(FNV_OFFSET)
+    }
+
+    /// Fold raw bytes.
+    #[inline]
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    /// Fold a `u64` as its little-endian bytes (the convention every
+    /// persisted format in the crate uses).
+    #[inline]
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    /// The accumulated digest.
+    #[inline]
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_reference_vectors() {
+        // published FNV-1a 64 test vectors
+        assert_eq!(fnv64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn incremental_equals_one_shot() {
+        let mut h = Fnv64::new();
+        h.write(b"foo");
+        h.write(b"bar");
+        assert_eq!(h.finish(), fnv64(b"foobar"));
+        let mut h2 = Fnv64::new();
+        h2.write_u64(0x0102_0304_0506_0708);
+        assert_eq!(h2.finish(), fnv64(&[8, 7, 6, 5, 4, 3, 2, 1]));
+    }
+}

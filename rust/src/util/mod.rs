@@ -3,6 +3,7 @@
 
 pub mod alloc_count;
 pub mod bench;
+pub mod fnv;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,675 @@
+//! Resilience contract of the `scrb serve` daemon (ISSUE 6 acceptance).
+//!
+//! Every scenario runs a real daemon on `127.0.0.1:0` and talks to it
+//! over TCP; fault injection is seeded through `SCRB_FAULT_SEED` (the
+//! same sweep CI uses for `tests/faults.rs`), so "passes for seed 42"
+//! is backed by passes for 7 and 1234 too. The load-bearing assertions:
+//!
+//! - every `Labels` response is **bit-equal** to `predict_batch` run
+//!   directly against whichever model version served it, including
+//!   responses coalesced into micro-batches and responses racing a hot
+//!   swap;
+//! - shed / timeout / restart counters are **exact**, not "at least
+//!   one" — lost updates or double counts fail the suite;
+//! - protocol abuse (garbage, torn frames, oversized frames, corrupt
+//!   payloads) gets *typed* errors and never kills the daemon.
+
+use scrb::linalg::Mat;
+use scrb::model::{FittedModel, ScRbModel, ServeWorkspace, WARN_EVERY};
+use scrb::serve::protocol::{decode_error, encode_frame, encode_predict, HEADER_LEN};
+use scrb::serve::{
+    test_model, ErrorCode, FrameKind, ServeClient, ServeConfig, ServeError, Server, ServerHandle,
+};
+use scrb::stream::{corrupt_model_bytes, tear_frame, ServeFaultPlan};
+use scrb::util::json::Json;
+use scrb::util::rng::Pcg;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+/// Seed for fault injection; CI sweeps SCRB_FAULT_SEED ∈ {42, 7, 1234}.
+fn fault_seed() -> u64 {
+    std::env::var("SCRB_FAULT_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(42)
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("scrb_serve_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create tmpdir");
+    dir
+}
+
+/// A d=3 batch matching [`test_model`]'s input dimensionality.
+fn batch(rows: usize, seed: u64) -> Mat {
+    let mut rng = Pcg::seed(seed);
+    Mat::from_vec(rows, 3, (0..rows * 3).map(|_| rng.f64()).collect())
+}
+
+/// Ground truth: `predict_batch` straight against a local model.
+fn direct_labels(model: &ScRbModel, x: &Mat) -> Vec<usize> {
+    let mut ws = ServeWorkspace::new();
+    let mut labels = Vec::new();
+    model.predict_batch(x, &mut ws, &mut labels).expect("direct predict");
+    labels
+}
+
+/// Default test config: short torn-frame bound so tear tests are fast.
+fn quick_cfg() -> ServeConfig {
+    ServeConfig { frame_stall_ms: 300, ..ServeConfig::default() }
+}
+
+fn start(cfg: ServeConfig, model: ScRbModel) -> (ServerHandle, String) {
+    let server = Server::bind(cfg, model).expect("bind");
+    let handle = server.spawn().expect("spawn");
+    let addr = handle.addr().to_string();
+    (handle, addr)
+}
+
+/// Drain through the protocol and require a clean daemon exit.
+fn drain_and_join(addr: &str, handle: ServerHandle) {
+    let mut c = ServeClient::connect(addr).expect("connect for drain");
+    c.drain().expect("drain ack");
+    handle.join().expect("daemon exits cleanly after drain");
+}
+
+fn stat_u64(status: &Json, key: &str) -> u64 {
+    status
+        .get(key)
+        .and_then(|j| j.as_f64())
+        .unwrap_or_else(|| panic!("status field {key} missing or not a number"))
+        as u64
+}
+
+// ---------------------------------------------------------------------
+// Happy path
+// ---------------------------------------------------------------------
+
+#[test]
+fn predict_roundtrip_is_bit_equal_to_direct() {
+    let seed = fault_seed();
+    let model = test_model(60, 8, 4, seed);
+    let reference = test_model(60, 8, 4, seed); // identical twin
+    let (handle, addr) = start(quick_cfg(), model);
+
+    let mut c = ServeClient::connect(&addr).unwrap();
+    c.ping().expect("ping");
+    for i in 0..5u64 {
+        let x = batch(7, seed ^ (i + 1));
+        let (version, labels) = c.predict(&x).expect("predict");
+        assert_eq!(version, 1, "no swap happened");
+        assert_eq!(labels, direct_labels(&reference, &x), "batch {i} must be bit-equal");
+    }
+    drop(c);
+    drain_and_join(&addr, handle);
+}
+
+#[test]
+fn concurrent_clients_coalesce_with_exact_counters_and_bit_equal_labels() {
+    let seed = fault_seed();
+    let model = test_model(60, 8, 4, seed);
+    let reference = Arc::new(test_model(60, 8, 4, seed));
+    let (handle, addr) =
+        start(ServeConfig { workers: 3, max_batch: 16, ..quick_cfg() }, model);
+
+    let threads: Vec<_> = (0..8u64)
+        .map(|t| {
+            let addr = addr.clone();
+            let reference = Arc::clone(&reference);
+            thread::spawn(move || {
+                let mut c = ServeClient::connect(&addr).unwrap();
+                for i in 0..20u64 {
+                    let x = batch(5, seed ^ (t * 1000 + i + 1));
+                    let (_, labels) = c.predict(&x).expect("predict under concurrency");
+                    assert_eq!(
+                        labels,
+                        direct_labels(&reference, &x),
+                        "client {t} batch {i} must be bit-equal even when coalesced"
+                    );
+                }
+            })
+        })
+        .collect();
+    for th in threads {
+        th.join().expect("client thread");
+    }
+
+    let mut c = ServeClient::connect(&addr).unwrap();
+    let status = c.status().expect("status");
+    assert_eq!(stat_u64(&status, "served_requests"), 160, "8 clients x 20 requests, none lost");
+    assert_eq!(stat_u64(&status, "served_points"), 800, "5 rows per request");
+    let batches = stat_u64(&status, "batches");
+    assert!((1..=160).contains(&batches), "batches {batches} out of range");
+    assert_eq!(stat_u64(&status, "shed"), 0);
+    assert_eq!(stat_u64(&status, "timeouts"), 0);
+    assert_eq!(stat_u64(&status, "restarts"), 0);
+    drop(c);
+    drain_and_join(&addr, handle);
+}
+
+// ---------------------------------------------------------------------
+// Protocol abuse
+// ---------------------------------------------------------------------
+
+#[test]
+fn garbage_header_gets_typed_error_then_close() {
+    let (handle, addr) = start(quick_cfg(), test_model(40, 8, 3, 7));
+    let mut c = ServeClient::connect(&addr).unwrap();
+    // 33 zero bytes: the header checksum cannot match, framing is lost
+    c.send_raw(&[0u8; HEADER_LEN]).unwrap();
+    let reply = c.read_raw().expect("typed reply before close");
+    assert_eq!(reply.kind, FrameKind::Error);
+    let (code, msg) = decode_error(&reply.payload).expect("decodable error");
+    assert_eq!(code, ErrorCode::Malformed);
+    assert!(!msg.is_empty());
+    assert!(c.read_raw().is_err(), "connection must be closed after broken framing");
+    drain_and_join(&addr, handle);
+}
+
+#[test]
+fn corrupt_payload_is_rejected_but_connection_survives() {
+    let seed = fault_seed();
+    let model = test_model(40, 8, 3, seed);
+    let reference = test_model(40, 8, 3, seed);
+    let (handle, addr) = start(quick_cfg(), model);
+    let mut c = ServeClient::connect(&addr).unwrap();
+
+    let x = batch(4, seed);
+    let mut bytes = encode_frame(FrameKind::Predict, 99, &encode_predict(0, &x));
+    // flip one payload byte (header stays intact → framing survives)
+    let flip = HEADER_LEN + (seed as usize % (bytes.len() - HEADER_LEN));
+    bytes[flip] ^= 0x40;
+    c.send_raw(&bytes).unwrap();
+    let reply = c.read_raw().expect("typed reply");
+    assert_eq!(reply.kind, FrameKind::Error);
+    let (code, _) = decode_error(&reply.payload).unwrap();
+    assert_eq!(code, ErrorCode::Malformed);
+
+    // the same connection still serves correct answers afterwards
+    let (_, labels) = c.predict(&x).expect("predict after recoverable error");
+    assert_eq!(labels, direct_labels(&reference, &x));
+    drop(c);
+    drain_and_join(&addr, handle);
+}
+
+#[test]
+fn oversized_frame_is_rejected_and_connection_survives() {
+    let seed = fault_seed();
+    let model = test_model(40, 8, 3, seed);
+    let reference = test_model(40, 8, 3, seed);
+    let (handle, addr) =
+        start(ServeConfig { max_frame_bytes: 4096, ..quick_cfg() }, model);
+    let mut c = ServeClient::connect(&addr).unwrap();
+
+    // 300 rows x 3 cols x 8 bytes ≈ 7.2 KB payload > the 4 KB cap
+    let big = batch(300, seed);
+    c.send_raw(&encode_frame(FrameKind::Predict, 5, &encode_predict(0, &big))).unwrap();
+    let reply = c.read_raw().expect("typed reply");
+    assert_eq!(reply.kind, FrameKind::Error);
+    let (code, msg) = decode_error(&reply.payload).unwrap();
+    assert_eq!(code, ErrorCode::Oversized);
+    assert!(msg.contains("4096"), "message should name the cap: {msg}");
+
+    // the oversized payload was discarded in bounded chunks; the
+    // connection is intact and a small batch goes through
+    let small = batch(3, seed ^ 1);
+    let (_, labels) = c.predict(&small).expect("predict after oversized reject");
+    assert_eq!(labels, direct_labels(&reference, &small));
+    drop(c);
+    drain_and_join(&addr, handle);
+}
+
+#[test]
+fn torn_frame_gets_typed_error_then_close() {
+    let seed = fault_seed();
+    let (handle, addr) =
+        start(ServeConfig { frame_stall_ms: 200, ..ServeConfig::default() }, test_model(40, 8, 3, seed));
+
+    let full = encode_frame(FrameKind::Predict, 1, &encode_predict(0, &batch(6, seed)));
+    let mut torn = tear_frame(&full, seed);
+    assert!(torn.len() < full.len(), "tear_frame must strictly truncate");
+    if torn.is_empty() {
+        // an empty tear is just "never connected"; send one byte so the
+        // server has a started frame to declare torn
+        torn = full[..1].to_vec();
+    }
+    let mut c = ServeClient::connect(&addr).unwrap();
+    c.send_raw(&torn).unwrap();
+    // send nothing more: within frame_stall_ms the daemon must declare
+    // the frame torn, answer with a typed error, and close
+    let reply = c.read_raw().expect("typed reply for torn frame");
+    assert_eq!(reply.kind, FrameKind::Error);
+    let (code, _) = decode_error(&reply.payload).unwrap();
+    assert_eq!(code, ErrorCode::Malformed);
+    assert!(c.read_raw().is_err(), "connection closed after torn frame");
+
+    // the daemon is unharmed
+    let mut c2 = ServeClient::connect(&addr).unwrap();
+    c2.ping().expect("daemon alive after torn frame");
+    drop(c2);
+    drain_and_join(&addr, handle);
+}
+
+// ---------------------------------------------------------------------
+// Load shedding and deadlines
+// ---------------------------------------------------------------------
+
+/// One worker stalled 400 ms per request + a 2-slot queue: requests
+/// 1..=3 are admitted, 4 and 5 must be shed — exactly, on both the
+/// client side and the daemon's counters.
+#[test]
+fn overload_sheds_excess_requests_with_exact_counts() {
+    let seed = fault_seed();
+    let cfg = ServeConfig {
+        workers: 1,
+        queue_cap: 2,
+        default_deadline_ms: 10_000,
+        fault: ServeFaultPlan { seed, panic_permille: 0, stall_permille: 1000, stall_ms: 600 },
+        ..quick_cfg()
+    };
+    let (handle, addr) = start(cfg, test_model(40, 8, 3, seed));
+
+    // (start delay ms, expect admitted). The single worker picks up the
+    // first request within a few ms and stalls on it until t=600; the
+    // next two fill the queue at t=150; the last two arrive at t=250
+    // against a full queue and a busy worker.
+    let plan = [(0u64, true), (150, true), (150, true), (250, false), (250, false)];
+    let threads: Vec<_> = plan
+        .iter()
+        .enumerate()
+        .map(|(i, &(delay, _))| {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                thread::sleep(Duration::from_millis(delay));
+                let mut c = ServeClient::connect(&addr).unwrap();
+                c.predict(&batch(3, seed ^ (i as u64 + 1)))
+            })
+        })
+        .collect();
+    let mut served = 0u64;
+    let mut shed = 0u64;
+    for (i, th) in threads.into_iter().enumerate() {
+        match th.join().expect("client thread") {
+            Ok(_) => served += 1,
+            Err(ServeError::Rejected { code: ErrorCode::Overloaded, message }) => {
+                assert!(message.contains("cap 2"), "shed message names the cap: {message}");
+                shed += 1;
+            }
+            Err(e) => panic!("client {i}: unexpected {e}"),
+        }
+    }
+    assert_eq!(served, 3, "worker slot + 2 queue slots");
+    assert_eq!(shed, 2, "exactly the overflow is shed");
+
+    let mut c = ServeClient::connect(&addr).unwrap();
+    let status = c.status().unwrap();
+    assert_eq!(stat_u64(&status, "shed"), 2);
+    assert_eq!(stat_u64(&status, "served_requests"), 3);
+    assert_eq!(stat_u64(&status, "timeouts"), 0);
+    drop(c);
+    drain_and_join(&addr, handle);
+}
+
+/// Requests whose deadline expires while queued behind a stalled worker
+/// are answered `Timeout` — exactly those, the patient request is served.
+#[test]
+fn expired_deadlines_get_timeout_with_exact_counts() {
+    let seed = fault_seed();
+    let cfg = ServeConfig {
+        workers: 1,
+        queue_cap: 16,
+        default_deadline_ms: 10_000,
+        fault: ServeFaultPlan { seed, panic_permille: 0, stall_permille: 1000, stall_ms: 400 },
+        ..quick_cfg()
+    };
+    let (handle, addr) = start(cfg, test_model(40, 8, 3, seed));
+
+    // patient request occupies the worker until t=400
+    let patient = {
+        let addr = addr.clone();
+        thread::spawn(move || {
+            let mut c = ServeClient::connect(&addr).unwrap();
+            c.predict(&batch(3, seed ^ 1))
+        })
+    };
+    thread::sleep(Duration::from_millis(120));
+    // two 100 ms-deadline requests queue at t=120, expire at t≈220,
+    // and are only reached by the worker at t≈400
+    let hasty: Vec<_> = (0..2u64)
+        .map(|i| {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                let mut c = ServeClient::connect(&addr).unwrap();
+                c.predict_deadline(&batch(3, seed ^ (i + 10)), 100)
+            })
+        })
+        .collect();
+
+    assert!(patient.join().unwrap().is_ok(), "patient request is served");
+    for th in hasty {
+        match th.join().unwrap() {
+            Err(ServeError::Rejected { code: ErrorCode::Timeout, .. }) => {}
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+    }
+
+    let mut c = ServeClient::connect(&addr).unwrap();
+    let status = c.status().unwrap();
+    assert_eq!(stat_u64(&status, "timeouts"), 2);
+    assert_eq!(stat_u64(&status, "served_requests"), 1);
+    assert_eq!(stat_u64(&status, "shed"), 0);
+    drop(c);
+    drain_and_join(&addr, handle);
+}
+
+// ---------------------------------------------------------------------
+// Hot swap
+// ---------------------------------------------------------------------
+
+/// The headline acceptance test: 8 clients stream predictions while the
+/// model is hot-swapped to a re-fitted one and then a swap to a
+/// *corrupted* file is rolled back. Zero requests may be dropped, and
+/// every response must be bit-equal to a direct `predict_batch` against
+/// whichever model version the daemon says served it.
+#[test]
+fn hot_swap_under_load_drops_nothing_and_labels_match_serving_version() {
+    let seed = fault_seed();
+    let dir = tmpdir("swap");
+    let v1 = test_model(60, 8, 4, seed);
+    let ref1 = Arc::new(test_model(60, 8, 4, seed));
+    let v2 = test_model(60, 8, 4, seed ^ 0x5eed);
+    let ref2 = Arc::new(test_model(60, 8, 4, seed ^ 0x5eed));
+
+    let good_path = dir.join("v2.scrb").to_str().unwrap().to_string();
+    v2.save(&good_path).expect("save v2");
+    let bad_path = dir.join("corrupt.scrb").to_str().unwrap().to_string();
+    std::fs::write(&bad_path, corrupt_model_bytes(&v2.to_bytes(), seed)).expect("write corrupt");
+
+    let (handle, addr) =
+        start(ServeConfig { workers: 3, default_deadline_ms: 10_000, ..quick_cfg() }, v1);
+
+    // clients stream until each has seen the new version several times
+    // (bounded by wall clock, not iterations, so a fast machine cannot
+    // finish before the swap lands)
+    let clients: Vec<_> = (0..8u64)
+        .map(|t| {
+            let addr = addr.clone();
+            thread::spawn(move || -> Vec<(u32, u64, Vec<usize>)> {
+                let mut c = ServeClient::connect(&addr).unwrap();
+                let mut seen: Vec<(u32, u64, Vec<usize>)> = Vec::new();
+                let mut v2_count = 0usize;
+                let begin = std::time::Instant::now();
+                let mut i = 0u64;
+                while begin.elapsed() < Duration::from_secs(10) {
+                    i += 1;
+                    let bseed = seed ^ (t * 10_000 + i);
+                    let (version, labels) = c.predict(&batch(4, bseed)).expect("no drops allowed");
+                    assert_eq!(labels.len(), 4);
+                    seen.push((version, bseed, labels));
+                    if version >= 2 {
+                        v2_count += 1;
+                        if v2_count >= 10 {
+                            break;
+                        }
+                    }
+                    thread::sleep(Duration::from_millis(1));
+                }
+                seen
+            })
+        })
+        .collect();
+
+    thread::sleep(Duration::from_millis(80));
+    let mut admin = ServeClient::connect(&addr).unwrap();
+    let new_version = admin.swap(&good_path).expect("swap to re-fitted model");
+    assert_eq!(new_version, 2);
+    match admin.swap(&bad_path) {
+        Err(ServeError::Rejected { code: ErrorCode::BadModel, message }) => {
+            assert!(message.contains("corrupt.scrb"), "rejection names the file: {message}");
+        }
+        other => panic!("corrupt swap must be rejected, got {other:?}"),
+    }
+
+    let mut v1_seen = 0usize;
+    let mut v2_seen = 0usize;
+    for th in clients {
+        let seen = th.join().expect("client thread");
+        assert!(!seen.is_empty());
+        for (version, bseed, labels) in seen {
+            let x = batch(4, bseed);
+            let want = match version {
+                1 => {
+                    v1_seen += 1;
+                    direct_labels(&ref1, &x)
+                }
+                2 => {
+                    v2_seen += 1;
+                    direct_labels(&ref2, &x)
+                }
+                v => panic!("impossible model version {v}"),
+            };
+            assert_eq!(
+                labels, want,
+                "response must be bit-equal to version {version}'s direct prediction"
+            );
+        }
+    }
+    assert!(v1_seen > 0, "some traffic must have been served by v1 before the swap");
+    assert!(v2_seen > 0, "every client loops until it sees v2");
+
+    // rollback is visible in the audit trail; the daemon still runs v2
+    let status = admin.status().unwrap();
+    assert_eq!(stat_u64(&status, "model_version"), 2, "failed swap must not unpublish v2");
+    assert_eq!(stat_u64(&status, "swaps_ok"), 1);
+    assert_eq!(stat_u64(&status, "swaps_failed"), 1);
+    let history = status.get("swap_history").and_then(|j| j.as_arr()).expect("swap_history");
+    assert_eq!(history.len(), 2);
+    assert_eq!(history[0].get("ok").and_then(|j| j.as_bool()), Some(true));
+    assert_eq!(history[1].get("ok").and_then(|j| j.as_bool()), Some(false));
+    drop(admin);
+    drain_and_join(&addr, handle);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// Worker panic isolation
+// ---------------------------------------------------------------------
+
+/// Seeded panic injection, serial traffic, `max_batch = 1`: the set of
+/// panicking request ids is known in advance, so restart and rejection
+/// counters must match it *exactly*, and every non-panicking request
+/// must still be answered bit-equal.
+#[test]
+fn injected_worker_panics_restart_worker_with_exact_counts() {
+    let seed = fault_seed();
+    let plan = ServeFaultPlan { seed, panic_permille: 250, stall_permille: 0, stall_ms: 0 };
+    let cfg = ServeConfig { workers: 1, max_batch: 1, fault: plan, ..quick_cfg() };
+    let model = test_model(40, 8, 3, seed);
+    let reference = test_model(40, 8, 3, seed);
+    let (handle, addr) = start(cfg, model);
+
+    let mut c = ServeClient::connect(&addr).unwrap();
+    let mut expected_panics = 0u64;
+    for id in 1..=30u64 {
+        // the client assigns ids 1, 2, 3, ... on this connection, so the
+        // injection decision for each request is known ahead of time
+        let x = batch(3, seed ^ (id + 100));
+        let result = c.predict(&x);
+        if plan.panics(id) {
+            expected_panics += 1;
+            match result {
+                Err(ServeError::Rejected { code: ErrorCode::Internal, message }) => {
+                    assert!(message.contains("restarted"), "reply explains the restart: {message}");
+                }
+                other => panic!("request {id} should hit an injected panic, got {other:?}"),
+            }
+        } else {
+            let (_, labels) = result.unwrap_or_else(|e| panic!("request {id} failed: {e}"));
+            assert_eq!(labels, direct_labels(&reference, &x), "request {id} served after restarts");
+        }
+    }
+    c.ping().expect("daemon alive after all injected panics");
+
+    let status = c.status().unwrap();
+    assert_eq!(stat_u64(&status, "restarts"), expected_panics, "one restart per injected panic");
+    assert_eq!(stat_u64(&status, "internal_rejects"), expected_panics);
+    assert_eq!(stat_u64(&status, "served_requests"), 30 - expected_panics);
+    drop(c);
+    drain_and_join(&addr, handle);
+}
+
+// ---------------------------------------------------------------------
+// Status & drift
+// ---------------------------------------------------------------------
+
+#[test]
+fn status_surfaces_drift_stats_and_config() {
+    let seed = fault_seed();
+    let cfg = ServeConfig { workers: 2, queue_cap: 31, ..quick_cfg() };
+    let (handle, addr) = start(cfg, test_model(60, 8, 4, seed));
+
+    let mut c = ServeClient::connect(&addr).unwrap();
+    // in-distribution batch, then one far off the training range: the
+    // served model's drift monitor must see both
+    c.predict(&batch(8, seed ^ 2)).unwrap();
+    let mut far = batch(8, seed ^ 3);
+    for v in far.data.iter_mut() {
+        *v += 1e4;
+    }
+    c.predict(&far).unwrap();
+
+    let status = c.status().unwrap();
+    assert_eq!(stat_u64(&status, "model_version"), 1);
+    assert_eq!(stat_u64(&status, "workers"), 2);
+    assert_eq!(stat_u64(&status, "queue_cap"), 31);
+    assert_eq!(status.get("draining").and_then(|j| j.as_bool()), Some(false));
+    let drift = status.get("drift").expect("drift object");
+    assert_eq!(drift.get("points").and_then(|j| j.as_f64()), Some(16.0), "8 + 8 served points");
+    let lookups = drift.get("lookups").and_then(|j| j.as_f64()).unwrap();
+    let unseen = drift.get("unseen").and_then(|j| j.as_f64()).unwrap();
+    assert!(lookups > 0.0);
+    assert!(unseen > 0.0, "the far-out batch must register unseen bins");
+    assert!(drift.get("rate").and_then(|j| j.as_f64()).unwrap() > 0.0);
+    assert!(drift.get("over_threshold").and_then(|j| j.as_f64()).is_some());
+    assert!(drift.get("warnings").and_then(|j| j.as_f64()).is_some());
+    let history = status.get("swap_history").and_then(|j| j.as_arr()).unwrap();
+    assert!(history.is_empty(), "no swaps yet");
+    drop(c);
+    drain_and_join(&addr, handle);
+}
+
+// ---------------------------------------------------------------------
+// Graceful drain
+// ---------------------------------------------------------------------
+
+/// Drain while one request is on the worker and another is queued:
+/// both must be answered before the daemon exits, and new work is
+/// rejected with a typed `Draining`.
+#[test]
+fn drain_finishes_inflight_work_and_rejects_new() {
+    let seed = fault_seed();
+    let cfg = ServeConfig {
+        workers: 1,
+        default_deadline_ms: 10_000,
+        fault: ServeFaultPlan { seed, panic_permille: 0, stall_permille: 1000, stall_ms: 400 },
+        ..quick_cfg()
+    };
+    let model = test_model(40, 8, 3, seed);
+    let reference = test_model(40, 8, 3, seed);
+    let (handle, addr) = start(cfg, model);
+
+    let spawn_predict = |delay_ms: u64, bseed: u64| {
+        let addr = addr.clone();
+        thread::spawn(move || {
+            thread::sleep(Duration::from_millis(delay_ms));
+            let mut c = ServeClient::connect(&addr).unwrap();
+            c.predict(&batch(3, bseed)).map(|(_, labels)| labels)
+        })
+    };
+    let on_worker = spawn_predict(0, seed ^ 21); // stalls on the worker until t≈400
+    let queued = spawn_predict(120, seed ^ 22); // sits in the queue behind it
+
+    thread::sleep(Duration::from_millis(200));
+    let mut lagging = ServeClient::connect(&addr).unwrap();
+    let mut admin = ServeClient::connect(&addr).unwrap();
+    admin.drain().expect("drain ack");
+
+    // new work after the drain is refused (typed) or the connection is
+    // already gone — but never silently hangs or gets served
+    match lagging.predict(&batch(3, seed ^ 23)) {
+        Err(ServeError::Rejected { code: ErrorCode::Draining, .. }) | Err(ServeError::Transport(_)) => {}
+        Ok(_) => panic!("a post-drain request must not be admitted"),
+        Err(e) => panic!("unexpected rejection: {e}"),
+    }
+
+    // both in-flight requests complete with correct answers
+    let a = on_worker.join().unwrap().expect("request on the worker survives drain");
+    assert_eq!(a, direct_labels(&reference, &batch(3, seed ^ 21)));
+    let b = queued.join().unwrap().expect("queued request survives drain");
+    assert_eq!(b, direct_labels(&reference, &batch(3, seed ^ 22)));
+
+    handle.join().expect("daemon exits after finishing in-flight work");
+}
+
+// ---------------------------------------------------------------------
+// Drift counters under concurrency (satellite: exactness, no lost
+// updates)
+// ---------------------------------------------------------------------
+
+/// Hammer one model with `predict_batch` from 8 threads and replay the
+/// identical batches serially on a twin: every drift counter must match
+/// exactly. Relaxed atomic increments may not lose updates.
+#[test]
+fn drift_counters_are_exact_under_concurrent_predict_batch() {
+    let seed = fault_seed();
+    let subject = Arc::new(test_model(60, 8, 4, seed));
+    let twin = test_model(60, 8, 4, seed);
+
+    // all batches far outside the training range so every call trips the
+    // drift threshold deterministically, independent of interleaving
+    let mk_far = |bseed: u64| {
+        let mut x = batch(6, bseed);
+        for v in x.data.iter_mut() {
+            *v += 1e3;
+        }
+        x
+    };
+
+    let threads: Vec<_> = (0..8u64)
+        .map(|t| {
+            let subject = Arc::clone(&subject);
+            thread::spawn(move || {
+                let mut ws = ServeWorkspace::new();
+                let mut labels = Vec::new();
+                for i in 0..50u64 {
+                    let x = mk_far(seed ^ (t * 777 + i + 1));
+                    subject.predict_batch(&x, &mut ws, &mut labels).expect("predict");
+                }
+            })
+        })
+        .collect();
+    for th in threads {
+        th.join().expect("stress thread");
+    }
+
+    let mut ws = ServeWorkspace::new();
+    let mut labels = Vec::new();
+    for t in 0..8u64 {
+        for i in 0..50u64 {
+            let x = mk_far(seed ^ (t * 777 + i + 1));
+            twin.predict_batch(&x, &mut ws, &mut labels).expect("predict");
+        }
+    }
+
+    let got = subject.drift_stats();
+    let want = twin.drift_stats();
+    assert_eq!(got.points, want.points, "points lost under concurrency");
+    assert_eq!(got.points, 8 * 50 * 6);
+    assert_eq!(got.lookups, want.lookups, "lookups lost under concurrency");
+    assert_eq!(got.unseen, want.unseen, "unseen lost under concurrency");
+    assert_eq!(got.over_threshold, want.over_threshold, "over_threshold drifted");
+    assert_eq!(
+        got.warnings,
+        (got.over_threshold).div_ceil(WARN_EVERY),
+        "rate-limited warning count is a pure function of over_threshold"
+    );
+}
