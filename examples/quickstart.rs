@@ -17,8 +17,10 @@ use scrb::model::{FittedModel, ScRbModel};
 use scrb::pipeline::ArtifactCache;
 use scrb::serve::{ServeClient, ServeConfig, Server};
 use scrb::runtime::XlaRuntime;
+use scrb::shard::{ShardFormat, ShardPlanner};
 use scrb::stream::{
-    corrupt_libsvm_text, fit_streaming, IngestPolicy, LibsvmChunks, OnBadRecord, StreamOpts,
+    corrupt_libsvm_text, fit_streaming, fit_streaming_sharded, ChunkReader, IngestPolicy,
+    LibsvmChunks, OnBadRecord, StreamOpts,
 };
 use std::fmt::Write as _;
 use std::time::Instant;
@@ -143,7 +145,39 @@ fn main() {
         m.accuracy, m.nmi
     );
 
-    // 7. the same fit, fault-tolerant: dirty inputs are the norm at the
+    // 7. the same fit, sharded: split the input into K shards (byte
+    // ranges of one file, or whole files of a multi-file dataset), run
+    // the two featurization passes on K worker threads, and merge the
+    // shard-local codebooks in canonical first-seen order. The merged
+    // fit is **bit-identical** to the sequential streamed fit for any
+    // shard count — the shard count is an execution detail, not part of
+    // the fit identity. At the CLI: `scrb fit --stream --shards 4`.
+    let shard_dir =
+        std::env::temp_dir().join(format!("scrb_quickstart_shards_{}", std::process::id()));
+    std::fs::create_dir_all(&shard_dir).expect("shard tmpdir");
+    let data_path = shard_dir.join("moons.libsvm").to_str().unwrap().to_string();
+    std::fs::write(&data_path, &clean_bytes).expect("write shard input");
+    let plan = ShardPlanner::new(4, 256, ShardFormat::Libsvm)
+        .plan(&[data_path])
+        .expect("shard plan");
+    let mut shard_readers = ShardPlanner::open(&plan).expect("open shards");
+    let mut shard_refs: Vec<&mut (dyn ChunkReader + Send)> =
+        shard_readers.iter_mut().map(|r| r.as_mut()).collect();
+    let sharded = fit_streaming_sharded(
+        &Env::new(cfg.clone()),
+        &mut shard_refs,
+        &StreamOpts { k: Some(2), ..StreamOpts::default() },
+    )
+    .expect("sharded fit failed");
+    assert_eq!(
+        sharded.model.to_bytes(),
+        streamed.model.to_bytes(),
+        "sharded == sequential, byte for byte"
+    );
+    println!("sharded SC_RB over 4 shards: model bytes identical to the sequential fit");
+    let _ = std::fs::remove_dir_all(&shard_dir);
+
+    // 8. the same fit, fault-tolerant: dirty inputs are the norm at the
     // scale streaming targets. Under `--on-bad-record quarantine` the fit
     // skips malformed/non-finite records deterministically in both passes
     // (exact counts, capped located samples) and equals a fit on the
@@ -168,7 +202,7 @@ fn main() {
         quarantined.quarantine.summary()
     );
 
-    // 8. clustering-as-a-service: persist the streamed model, serve it
+    // 9. clustering-as-a-service: persist the streamed model, serve it
     // over TCP (micro-batching, deadlines, load shedding), label points
     // through the wire, hot-swap to the quarantined re-fit without
     // dropping in-flight requests, and drain. In production the daemon

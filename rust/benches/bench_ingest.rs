@@ -6,7 +6,10 @@
 //! featurize with the quarantine policy layer engaged on the clean file
 //! (`metrics.policy_overhead_pct`) and on a copy with ~1% corrupted
 //! records (`metrics.degraded_featurize_rows_per_sec`,
-//! `metrics.quarantined_rows`).
+//! `metrics.quarantined_rows`). A fifth stage measures shard scaling:
+//! the full sharded featurization (plan → parallel workers → codebook
+//! merge) at 1/2/4/8 shards (`metrics.shard_scaling_rows_per_sec_K`,
+//! `metrics.shard_scaling_speedup_K`, `metrics.shard_merge_secs_K`).
 //!
 //!     cargo bench --bench bench_ingest
 //!     SCRB_BENCH_SMOKE=1 cargo bench --bench bench_ingest   # CI smoke
@@ -17,6 +20,7 @@
 //! (override with SCRB_BENCH_JSON): `metrics.featurize_rows_per_sec` is
 //! the headline number, `metrics.peak_block_bytes` the memory bound.
 
+use scrb::shard::{featurize_sharded, ShardFormat, ShardPlanner};
 use scrb::stream::{
     corrupt_libsvm_text, stats_pass, ChunkReader, GuardedReader, IngestPolicy, LibsvmChunks,
     OnBadRecord, SparseChunk, StreamFeaturizer,
@@ -168,6 +172,40 @@ fn main() {
     b.record_once(&format!("featurize degraded 1% bad n={n} r={r}"), deg_time);
     println!("    degraded:  {deg_rps:.3e} rows/s ({deg_skipped} rows quarantined)");
     std::fs::remove_file(&dirty_path).ok();
+
+    // stage 5: shard scaling (ISSUE 8) — the full sharded two-pass
+    // featurization (plan → K parallel workers → codebook merge) at 1, 2,
+    // 4 and 8 shards over the same file, with the merge step accounted
+    // separately. The merged fit is bit-identical at every K, so the
+    // rows/sec curve is a pure parallel-speedup measurement.
+    let mut base_rps = 0.0f64;
+    for shards in [1usize, 2, 4, 8] {
+        let plan = ShardPlanner::new(shards, chunk_rows, ShardFormat::Libsvm)
+            .plan(&[path.clone()])
+            .expect("shard plan");
+        let mut readers = ShardPlanner::open(&plan).expect("open shards");
+        let mut refs: Vec<&mut (dyn ChunkReader + Send)> =
+            readers.iter_mut().map(|r| r.as_mut()).collect();
+        let t0 = Instant::now();
+        let sharded = featurize_sharded(r, 0.5, 7, &mut refs, block_rows, &policy)
+            .expect("sharded featurize");
+        let total = t0.elapsed();
+        assert_eq!(sharded.n, n);
+        assert_eq!(sharded.features.codebook.dim, feats.codebook.dim, "codebooks must merge");
+        let rps = n as f64 / total.as_secs_f64().max(1e-12);
+        if shards == 1 {
+            base_rps = rps;
+        }
+        b.record_once(&format!("sharded featurize n={n} r={r} shards={shards}"), total);
+        println!(
+            "    shards={shards}: {rps:.3e} rows/s ({:.1}x vs 1 shard; merge {:.1} ms)",
+            rps / base_rps.max(1e-12),
+            sharded.merge_time.as_secs_f64() * 1e3
+        );
+        b.metric(&format!("shard_scaling_rows_per_sec_{shards}"), rps);
+        b.metric(&format!("shard_scaling_speedup_{shards}"), rps / base_rps.max(1e-12));
+        b.metric(&format!("shard_merge_secs_{shards}"), sharded.merge_time.as_secs_f64());
+    }
 
     // memory-bound accounting: resident input scratch vs substrate blocks
     let scratch_bytes = chunk_rows * dim * 8;

@@ -109,6 +109,7 @@ impl Featurize for ExactFeaturize {
             kappa: None,
             norm: None,
             stream_labels: None,
+            stream_quarantine: None,
             timer,
         })
     }

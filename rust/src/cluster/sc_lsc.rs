@@ -118,6 +118,7 @@ impl Featurize for LscFeaturize {
             feature_dim: p,
             norm: None,
             stream_labels: None,
+            stream_quarantine: None,
             timer,
         })
     }

@@ -107,6 +107,7 @@ impl Featurize for NysFeaturize {
             feature_dim: m,
             norm: None,
             stream_labels: None,
+            stream_quarantine: None,
             timer,
         })
     }

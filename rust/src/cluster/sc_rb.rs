@@ -95,6 +95,7 @@ impl Featurize for RbFeaturize {
                     feature_dim,
                     norm: None,
                     stream_labels: None,
+                    stream_quarantine: None,
                     timer,
                 })
             }
@@ -221,6 +222,40 @@ impl Featurize for RbFeaturize {
                     feature_dim,
                     norm: Some((lo, span)),
                     stream_labels: Some(feats.labels),
+                    stream_quarantine: None,
+                    timer,
+                })
+            }
+            DataSource::ShardedStream { mut readers, block_rows, policy } => {
+                let mut timer = StageTimer::new();
+                let sharded = crate::shard::featurize_sharded(
+                    self.r,
+                    self.sigma,
+                    self.seed,
+                    &mut readers,
+                    block_rows,
+                    &policy,
+                )?;
+                timer.add("stream_stats", sharded.stats_time);
+                timer.add("rb_features", sharded.featurize_time);
+                timer.add("shard_merge", sharded.merge_time);
+                let feats = sharded.features;
+                let feature_dim = feats.codebook.dim;
+                let mut z = feats.z;
+                // same Eq. 6 fold as the other arms (block-iterated)
+                timer.time("degrees", || {
+                    let d = z.implicit_degrees();
+                    z.normalize_by_degree(&d);
+                });
+                Ok(FeatureArtifact {
+                    fingerprint: fp,
+                    z: FeatureMatrix::Block(z),
+                    codebook: Some(feats.codebook),
+                    kappa: Some(feats.kappa),
+                    feature_dim,
+                    norm: Some((sharded.lo, sharded.span)),
+                    stream_labels: Some(feats.labels),
+                    stream_quarantine: Some(sharded.quarantine),
                     timer,
                 })
             }

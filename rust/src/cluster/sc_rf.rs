@@ -81,6 +81,7 @@ impl Featurize for RfFeaturize {
             feature_dim,
             norm: None,
             stream_labels: None,
+            stream_quarantine: None,
             timer,
         })
     }

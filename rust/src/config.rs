@@ -123,6 +123,10 @@ pub struct StreamConfig {
     pub chunk_rows: usize,
     /// Substrate block granularity in rows (independent of `chunk_rows`).
     pub block_rows: usize,
+    /// Parallel featurization shards (`scrb fit --stream --shards K`);
+    /// 1 = the sequential single-reader scan. Any K yields bit-identical
+    /// models (see [`crate::shard`]).
+    pub shards: usize,
 }
 
 /// Full pipeline configuration (Algorithm 2 + baselines).
@@ -237,6 +241,11 @@ impl PipelineConfig {
             if stream.chunk_rows < 1 || stream.block_rows < 1 {
                 return Err(ScrbError::config(
                     "streaming fit needs chunk_rows >= 1 and block_rows >= 1",
+                ));
+            }
+            if stream.shards < 1 {
+                return Err(ScrbError::config(
+                    "streaming fit needs shards >= 1 (1 = the sequential scan)",
                 ));
             }
             if !self.sigma_explicit {
@@ -435,7 +444,21 @@ impl PipelineConfigBuilder {
     /// Attach the streaming-ingestion section (`scrb fit --stream`
     /// knobs); validation then also requires an explicitly pinned σ.
     pub fn stream(mut self, chunk_rows: usize, block_rows: usize) -> Self {
-        self.cfg.stream = Some(StreamConfig { chunk_rows, block_rows });
+        let shards = self.cfg.stream.map_or(1, |s| s.shards);
+        self.cfg.stream = Some(StreamConfig { chunk_rows, block_rows, shards });
+        self
+    }
+
+    /// Number of parallel featurization shards for a streamed fit
+    /// (`--shards K`); attaches a default streaming section first if
+    /// [`Self::stream`] hasn't. Bit-identical models for any K.
+    pub fn shards(mut self, shards: usize) -> Self {
+        let mut s = self
+            .cfg
+            .stream
+            .unwrap_or(StreamConfig { chunk_rows: 4096, block_rows: 65_536, shards: 1 });
+        s.shards = shards;
+        self.cfg.stream = Some(s);
         self
     }
 
@@ -543,7 +566,7 @@ mod tests {
         assert_eq!(cfg.svd_tol, 1e-7);
         assert_eq!(cfg.svd_max_iters, 123);
         assert_eq!(cfg.embed_dim, Some(9));
-        assert_eq!(cfg.stream, Some(StreamConfig { chunk_rows: 1024, block_rows: 4096 }));
+        assert_eq!(cfg.stream, Some(StreamConfig { chunk_rows: 1024, block_rows: 4096, shards: 1 }));
         assert!(cfg.sigma_explicit);
         assert_eq!(cfg.artifacts_dir, "arts");
         assert!(cfg.verbose);
@@ -582,14 +605,26 @@ mod tests {
     fn stream_section_requires_explicit_sigma() {
         // stream knobs validated through the same routine
         let bad = PipelineConfig {
-            stream: Some(StreamConfig { chunk_rows: 0, block_rows: 64 }),
+            stream: Some(StreamConfig { chunk_rows: 0, block_rows: 64, shards: 1 }),
             sigma_explicit: true,
             ..Default::default()
         };
         assert!(bad.validate().is_err());
+        // zero shards is rejected the same way
+        let no_shards = PipelineConfig {
+            stream: Some(StreamConfig { chunk_rows: 64, block_rows: 64, shards: 0 }),
+            sigma_explicit: true,
+            ..Default::default()
+        };
+        assert!(no_shards.validate().is_err());
+        // `.shards()` composes with `.stream()` in either order
+        let sharded = PipelineConfig::builder().sigma(0.5).shards(4).stream(64, 64).build();
+        assert_eq!(sharded.stream, Some(StreamConfig { chunk_rows: 64, block_rows: 64, shards: 4 }));
+        let sharded = PipelineConfig::builder().sigma(0.5).stream(64, 64).shards(4).build();
+        assert_eq!(sharded.stream, Some(StreamConfig { chunk_rows: 64, block_rows: 64, shards: 4 }));
         // un-pinned sigma is rejected for streamed fits only
         let unpinned = PipelineConfig {
-            stream: Some(StreamConfig { chunk_rows: 64, block_rows: 64 }),
+            stream: Some(StreamConfig { chunk_rows: 64, block_rows: 64, shards: 1 }),
             ..Default::default()
         };
         let err = unpinned.validate().unwrap_err();

@@ -203,6 +203,35 @@ impl Coordinator {
         let mut reader = crate::stream::LibsvmChunks::from_path(path, chunk_rows)?;
         crate::stream::fit_streaming(&env, &mut reader, &opts)
     }
+
+    /// Sharded out-of-core SC_RB fit: plan `patterns` (file paths and/or
+    /// `*`/`?` globs) into `shards` parallel row ranges, featurize them
+    /// concurrently, and merge — bit-identical to [`Self::fit_streaming`]
+    /// over the same bytes, for any shard count (see [`crate::shard`]).
+    pub fn fit_streaming_sharded(
+        &self,
+        patterns: &[String],
+        shards: usize,
+        chunk_rows: usize,
+        sigma: f64,
+        opts: crate::stream::StreamOpts,
+    ) -> Result<crate::stream::StreamFit, ScrbError> {
+        let cfg = self.base_cfg.rebuild(|b| {
+            let b = b.sigma(sigma).stream(chunk_rows, opts.block_rows).shards(shards);
+            match opts.k {
+                Some(k) => b.k(k),
+                None => b,
+            }
+        })?;
+        let env = Env::with_xla(cfg, self.xla.as_ref());
+        let planner =
+            crate::shard::ShardPlanner::new(shards, chunk_rows, crate::shard::ShardFormat::Libsvm);
+        let plan = planner.plan(patterns)?;
+        let mut readers = crate::shard::ShardPlanner::open(&plan)?;
+        let mut refs: Vec<&mut (dyn crate::stream::ChunkReader + Send)> =
+            readers.iter_mut().map(|r| r.as_mut()).collect();
+        crate::stream::fit_streaming_sharded(&env, &mut refs, &opts)
+    }
 }
 
 /// Unsupervised bandwidth selection: evaluate candidate σ = median·f on a

@@ -145,6 +145,32 @@
 //! fitted.model.save("big.scrb").expect("save failed");
 //! ```
 //!
+//! When one scan thread can't keep the pipeline fed, the [`shard`]
+//! subsystem parallelizes the featurization across K shards — byte-range
+//! windows of one file, or whole-file runs over a multi-file/glob
+//! dataset — and merges the shard-local codebooks back into the
+//! canonical first-seen order. The merged fit stays **byte-identical**
+//! to the sequential one, for any shard count (`scrb fit --stream
+//! --shards K` at the CLI, [`stream::fit_streaming_sharded`] in code):
+//!
+//! ```no_run
+//! use scrb::cluster::Env;
+//! use scrb::config::PipelineConfig;
+//! use scrb::shard::{ShardFormat, ShardPlanner};
+//! use scrb::stream::{fit_streaming_sharded, ChunkReader, StreamOpts};
+//!
+//! let cfg = PipelineConfig::builder().r(256).sigma(0.25).build();
+//! let plan = ShardPlanner::new(8, 4096, ShardFormat::Libsvm)
+//!     .plan(&["parts/*.libsvm".to_string()])
+//!     .expect("plan failed");
+//! let mut readers = ShardPlanner::open(&plan).expect("open failed");
+//! let mut refs: Vec<&mut (dyn ChunkReader + Send)> =
+//!     readers.iter_mut().map(|r| r.as_mut()).collect();
+//! let fitted = fit_streaming_sharded(&Env::new(cfg), &mut refs, &StreamOpts::default())
+//!     .expect("sharded fit failed");
+//! fitted.model.save("big.scrb").expect("save failed");
+//! ```
+//!
 //! ## Failure modes & recovery
 //!
 //! Streamed fits run against real files on real infrastructure, so every
@@ -255,6 +281,7 @@ pub mod rb;
 pub mod rf;
 pub mod runtime;
 pub mod serve;
+pub mod shard;
 pub mod stream;
 
 /// Crate version string.

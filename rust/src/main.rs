@@ -71,8 +71,12 @@ fn print_help() {
          \x20   --save PATH                 model artifact to write (required)\n\
          \x20   --stream                    out-of-core fit from --data (two chunked passes;\n\
          \x20                               requires --sigma; input memory ~ chunk_rows x d)\n\
+         \x20                               --data takes comma-separated paths and/or\n\
+         \x20                               name globs (*.libsvm) for multi-file datasets\n\
          \x20   --chunk-rows M              rows per streamed chunk (default 4096)\n\
          \x20   --block-rows M              substrate block granularity (default 65536)\n\
+         \x20   --shards K                  parallel featurization shards (default 1);\n\
+         \x20                               any K yields bit-identical model bytes\n\
          \x20   --on-bad-record P           strict (fail on first bad line, default) |\n\
          \x20                               quarantine (skip, count, sample offenders)\n\
          \x20   --quarantine-sample N       offender samples kept in the report (default 16)\n\
@@ -291,22 +295,32 @@ fn cmd_fit(args: &Args) -> Result<(), ScrbError> {
 /// model.scrb`: the out-of-core fit — two chunked passes over the file
 /// (stats, then block-wise RB featurization), resident input memory
 /// bounded by `chunk_rows × d`, and a model byte-identical to the
-/// in-memory fit on the same data and seed. Fault handling rides on
-/// `--on-bad-record strict|quarantine` (plus `--quarantine-sample`,
-/// `--max-retries`); long fits add `--checkpoint DIR [--checkpoint-every
-/// N] [--resume]` to survive kills.
+/// in-memory fit on the same data and seed. `--shards K` featurizes K
+/// byte-range (or whole-file, for comma-separated/glob `--data`) shards
+/// in parallel and merges the codebooks — same model bytes for any K.
+/// Fault handling rides on `--on-bad-record strict|quarantine` (plus
+/// `--quarantine-sample`, `--max-retries`); long single-shard fits add
+/// `--checkpoint DIR [--checkpoint-every N] [--resume]` to survive
+/// kills.
 fn cmd_fit_stream(args: &Args, coord: &Coordinator, save: &str) -> Result<(), ScrbError> {
-    let path = args
-        .get("data")
-        .ok_or_else(|| ScrbError::config("fit --stream reads from a file; pass --data path.libsvm"))?;
+    if args.get("data").is_none() {
+        return Err(ScrbError::config(
+            "fit --stream reads from files; pass --data path.libsvm (comma-separated paths \
+             and/or globs for a multi-file dataset)",
+        ));
+    }
+    let paths = args.get_str_list("data", &[]);
+    let path = paths[0].as_str();
     let chunk_rows = args.get_usize("chunk-rows", 4096)?;
     let block_rows = args.get_usize("block-rows", 65_536)?;
+    let shards = args.get_usize("shards", 1)?;
     // Attach the streaming section and re-validate: the one
-    // `PipelineConfig::validate` routine now enforces chunk/block-rows ≥ 1
-    // *and* an explicitly pinned σ (no data matrix exists to run the
-    // eigengap bandwidth selection on — silently falling back to the
-    // config default would bake a wrong bandwidth into a persisted model).
-    let cfg = coord.base_cfg.rebuild(|b| b.stream(chunk_rows, block_rows))?;
+    // `PipelineConfig::validate` routine now enforces chunk/block-rows ≥ 1,
+    // shards ≥ 1, *and* an explicitly pinned σ (no data matrix exists to
+    // run the eigengap bandwidth selection on — silently falling back to
+    // the config default would bake a wrong bandwidth into a persisted
+    // model).
+    let cfg = coord.base_cfg.rebuild(|b| b.stream(chunk_rows, block_rows).shards(shards))?;
     let sigma = cfg.kernel.sigma();
     // K: explicit --k wins; otherwise the stream's label census decides.
     let k_override = args.get("k").is_some().then_some(coord.base_cfg.k);
@@ -332,6 +346,14 @@ fn cmd_fit_stream(args: &Args, coord: &Coordinator, save: &str) -> Result<(), Sc
             None
         }
     };
+    // loud typed refusal instead of a silently ignored flag — sharded
+    // checkpointing is tracked as follow-up work
+    if shards > 1 && checkpoint.is_some() {
+        return Err(ScrbError::config(
+            "checkpoint/resume (--checkpoint/--resume) is not yet supported with --shards > 1; \
+             drop the checkpoint flags or fit with --shards 1",
+        ));
+    }
     let opts = scrb::stream::StreamOpts {
         block_rows,
         k: k_override,
@@ -340,7 +362,14 @@ fn cmd_fit_stream(args: &Args, coord: &Coordinator, save: &str) -> Result<(), Sc
         ..scrb::stream::StreamOpts::default()
     };
     let t0 = Instant::now();
-    let fit = coord.fit_streaming(path, chunk_rows, sigma, opts)?;
+    // plain single-file single-shard fits keep the direct sequential path
+    // (and with it checkpoint/resume); anything wider goes through the
+    // planner — which yields the same model bytes either way
+    let fit = if shards == 1 && paths.len() == 1 && !path.contains('*') && !path.contains('?') {
+        coord.fit_streaming(path, chunk_rows, sigma, opts)?
+    } else {
+        coord.fit_streaming_sharded(&paths, shards, chunk_rows, sigma, opts)?
+    };
     let secs = t0.elapsed().as_secs_f64();
     if fit.quarantine.skipped() > 0 || fit.quarantine.retries > 0 {
         println!("quarantine: {}", fit.quarantine.summary());
@@ -349,7 +378,7 @@ fn cmd_fit_stream(args: &Args, coord: &Coordinator, save: &str) -> Result<(), Sc
         }
     }
     println!(
-        "dataset {path} (streamed) n={} d={} classes={} chunk_rows={chunk_rows}",
+        "dataset {path} (streamed) n={} d={} classes={} chunk_rows={chunk_rows} shards={shards}",
         fit.n, fit.d, fit.k_true
     );
     let m = all_metrics(&fit.output.labels, &fit.y);

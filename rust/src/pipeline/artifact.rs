@@ -14,6 +14,7 @@ use crate::eigen::{SvdOp, SvdStats};
 use crate::linalg::Mat;
 use crate::rb::RbCodebook;
 use crate::sparse::{BlockEllRb, Csr, EllRb};
+use crate::stream::Quarantine;
 use crate::util::timer::StageTimer;
 use std::sync::Arc;
 
@@ -105,6 +106,10 @@ pub struct FeatureArtifact {
     /// census pass (row order), used by the stream driver for K selection
     /// and scoring.
     pub stream_labels: Option<Vec<i64>>,
+    /// Merged shard-local quarantine/retry report from a *sharded*
+    /// streaming featurization (the single-reader stream path reports
+    /// through its `GuardedReader` instead; `None` everywhere else).
+    pub stream_quarantine: Option<Quarantine>,
     /// Wallclock of the stage execution that produced this artifact.
     pub timer: StageTimer,
 }

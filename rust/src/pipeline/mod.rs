@@ -74,7 +74,7 @@ use crate::cluster::{ClusterOutput, Env, MethodInfo};
 use crate::error::ScrbError;
 use crate::linalg::Mat;
 use crate::model::{CentroidModel, FitResult, FittedModel, ScRbModel};
-use crate::stream::{ChunkReader, StreamOpts};
+use crate::stream::{ChunkReader, IngestPolicy, StreamOpts};
 use crate::util::timer::StageTimer;
 use std::sync::Arc;
 
@@ -93,6 +93,22 @@ pub enum DataSource<'a> {
         /// Streaming knobs (substrate block granularity etc.).
         opts: &'a StreamOpts,
     },
+    /// K chunk sources covering disjoint contiguous row ranges of one
+    /// logical dataset, featurized concurrently by the [`crate::shard`]
+    /// subsystem and merged into a fit bit-identical to
+    /// [`DataSource::Stream`] over the concatenation.
+    ShardedStream {
+        /// One reader per shard, in dataset order (shard s's rows precede
+        /// shard s+1's). Each is rewound between passes independently.
+        readers: Vec<&'a mut (dyn ChunkReader + Send)>,
+        /// Substrate block granularity in rows (same knob as
+        /// [`StreamOpts::block_rows`]).
+        block_rows: usize,
+        /// Ingest fault policy, applied shard-locally (each shard gets
+        /// its own retry budget and quarantine report; reports merge
+        /// deterministically).
+        policy: IngestPolicy,
+    },
 }
 
 impl<'a> DataSource<'a> {
@@ -101,9 +117,11 @@ impl<'a> DataSource<'a> {
     pub fn matrix(&self, method: &str) -> Result<&Mat, ScrbError> {
         match self {
             DataSource::Matrix(x) => Ok(*x),
-            DataSource::Stream { .. } => Err(ScrbError::unsupported(format!(
-                "{method} cannot featurize a chunked stream; only SC_RB fits out-of-core"
-            ))),
+            DataSource::Stream { .. } | DataSource::ShardedStream { .. } => {
+                Err(ScrbError::unsupported(format!(
+                    "{method} cannot featurize a chunked stream; only SC_RB fits out-of-core"
+                )))
+            }
         }
     }
 }

@@ -75,6 +75,7 @@ impl Featurize for IdentityFeaturize {
             kappa: None,
             norm: None,
             stream_labels: None,
+            stream_quarantine: None,
             timer: StageTimer::new(),
         })
     }

@@ -1,0 +1,349 @@
+//! Codebook / substrate / report merging: turn K shard-local fits into
+//! the one fit the sequential stream would have produced.
+//!
+//! The byte-identity argument, grid by grid: a shard worker records its
+//! grid's bin hashes in *shard-local* first-seen order. Replaying those
+//! lists through a fresh [`BinTable::get_or_assign`] in shard order
+//! visits every bin hash in exactly the order the sequential pass first
+//! met it (shards are contiguous row ranges, and a hash's first shard-
+//! local occurrence is its first global occurrence), so the merged
+//! dictionary assigns the *same* dense ids the sequential fit assigns —
+//! by induction over shards. Collision counts are integer sums, so they
+//! are exact; κ is then recomputed from the merged counts with the
+//! sequential estimator. Shard-local substrate blocks only need their
+//! local ids rewritten through the per-shard remap tables — the blocks
+//! concatenate in shard order as they are, because every downstream
+//! kernel is block-partition invariant (locked by the partition tests in
+//! `sparse::block`) and the serialized model never encodes the
+//! partition.
+
+use crate::error::ScrbError;
+use crate::rb::codebook::BinTable;
+use crate::rb::features::codebook_table;
+use crate::rb::{sample_grids, RbCodebook};
+use crate::sparse::{BlockEllRb, EllRb};
+use crate::stream::{Quarantine, StreamFeatures};
+use crate::util::threads::{num_threads, parallel_chunks_mut, parallel_map};
+
+/// Everything a shard worker hands to the merger: the per-grid phase-1
+/// state (first-seen bin hashes + collision counts, shard-local id
+/// order), the local-id substrate blocks, and the label census — i.e.
+/// [`crate::stream::StreamFeaturizer::into_state`] for one shard.
+pub struct ShardState {
+    /// Per grid: (bin hashes in shard-local first-seen order, collision
+    /// count per local id). One entry per grid, length R.
+    pub grids: Vec<(Vec<u64>, Vec<usize>)>,
+    /// Local-id substrate blocks (flat `rows_b × R` each), shard row
+    /// order.
+    pub blocks: Vec<Vec<u32>>,
+    /// Raw labels in shard row order.
+    pub labels: Vec<i64>,
+}
+
+/// Per-grid merge result: the global first-seen dictionary plus each
+/// shard's local→global id remap.
+#[derive(Clone, Default)]
+struct GridMerge {
+    /// Bin hashes in global first-seen (= global id) order.
+    hashes: Vec<u64>,
+    /// Collision count per global id (exact integer sums).
+    counts: Vec<usize>,
+    /// `remaps[s][local_id] = global_id` for shard s.
+    remaps: Vec<Vec<u32>>,
+}
+
+/// Merges K shard-local fits into one [`StreamFeatures`], bit-identical
+/// to the sequential fit over the shard concatenation (see the module
+/// docs for why). The field values must match the ones every shard
+/// worker featurized with.
+pub struct CodebookMerger {
+    /// Number of grids R.
+    pub r: usize,
+    /// Input dimensionality d (the max over shard readers).
+    pub d_in: usize,
+    /// Kernel bandwidth σ.
+    pub sigma: f64,
+    /// Grid-sampling seed.
+    pub seed: u64,
+}
+
+impl CodebookMerger {
+    /// Union the shard codebooks (canonical first-seen order), relabel
+    /// every shard block into global columns, and rebuild κ and the
+    /// serving codebook. `states` must be in shard (= dataset) order;
+    /// zero-row shards are legal no-ops.
+    pub fn merge(&self, states: Vec<ShardState>) -> Result<StreamFeatures, ScrbError> {
+        let r = self.r;
+        for st in &states {
+            assert_eq!(st.grids.len(), r, "every shard state must carry R grids");
+        }
+        let n_rows: usize = states.iter().map(|s| s.labels.len()).sum();
+        if n_rows == 0 {
+            return Err(ScrbError::invalid_input("cannot fit on an empty dataset"));
+        }
+
+        // grid-by-grid dictionary union — grids are independent, so this
+        // fans out across the pool
+        let merges: Vec<GridMerge> = parallel_map(r, |j| {
+            let mut dict = BinTable::new();
+            let mut gm = GridMerge {
+                hashes: Vec::new(),
+                counts: Vec::new(),
+                remaps: Vec::with_capacity(states.len()),
+            };
+            for st in &states {
+                let (hashes, counts) = &st.grids[j];
+                let mut remap = Vec::with_capacity(hashes.len());
+                for (&h, &c) in hashes.iter().zip(counts.iter()) {
+                    let gid = dict.get_or_assign(h);
+                    if gid as usize == gm.hashes.len() {
+                        gm.hashes.push(h);
+                        gm.counts.push(0);
+                    }
+                    gm.counts[gid as usize] += c;
+                    remap.push(gid);
+                }
+                gm.remaps.push(remap);
+            }
+            gm
+        });
+
+        // global column offsets, cumulative over per-grid bin counts —
+        // the same layout the sequential finish computes
+        let mut offsets = Vec::with_capacity(r + 1);
+        offsets.push(0usize);
+        for gm in &merges {
+            offsets.push(offsets.last().unwrap() + gm.hashes.len());
+        }
+        let d_total = *offsets.last().unwrap();
+        if d_total >= u32::MAX as usize {
+            return Err(ScrbError::invalid_input(format!(
+                "feature dimension {d_total} overflows the u32 column index"
+            )));
+        }
+
+        // κ with the sequential estimator, over the merged exact counts
+        let kappa = merges
+            .iter()
+            .map(|gm| {
+                let max_count = gm.counts.iter().copied().max().unwrap_or(0);
+                if max_count > 0 {
+                    n_rows as f64 / max_count as f64
+                } else {
+                    1.0
+                }
+            })
+            .sum::<f64>()
+            / r as f64;
+
+        // relabel every shard block local→global in place and stack in
+        // shard order; the cursor walks (row-major) R-strided slots, so
+        // chunk starts land mid-row safely via `start % r`
+        let val = 1.0 / (r as f64).sqrt();
+        let mut ell_blocks = Vec::with_capacity(states.iter().map(|s| s.blocks.len()).sum());
+        let mut labels = Vec::with_capacity(n_rows);
+        for (s, st) in states.into_iter().enumerate() {
+            let ShardState { blocks, labels: shard_labels, .. } = st;
+            labels.extend(shard_labels);
+            for mut block in blocks {
+                parallel_chunks_mut(&mut block, num_threads(), |start, chunk| {
+                    let mut j = start % r;
+                    for slot in chunk.iter_mut() {
+                        let gid = merges[j].remaps[s][*slot as usize] as usize;
+                        *slot = (offsets[j] + gid) as u32;
+                        j += 1;
+                        if j == r {
+                            j = 0;
+                        }
+                    }
+                });
+                let rows_b = block.len() / r;
+                ell_blocks.push(EllRb::new(rows_b, d_total, r, block, vec![val; rows_b]));
+            }
+        }
+        let z = BlockEllRb::from_blocks(ell_blocks);
+
+        let bins_per_grid: Vec<usize> = merges.iter().map(|gm| gm.hashes.len()).collect();
+        let tables: Vec<BinTable> =
+            merges.iter().enumerate().map(|(j, gm)| codebook_table(&gm.hashes, offsets[j])).collect();
+        let codebook = RbCodebook {
+            r,
+            d_in: self.d_in,
+            sigma: self.sigma,
+            seed: self.seed,
+            dim: d_total,
+            grids: sample_grids(r, self.d_in, self.sigma, self.seed),
+            tables,
+        };
+        Ok(StreamFeatures { z, codebook, bins_per_grid, kappa, labels })
+    }
+}
+
+/// Merge per-shard quarantine reports into one: counts and retry totals
+/// are exact integer sums; located samples are ordered shard-index first,
+/// then (line, byte) within the shard, and truncated to `sample_cap`
+/// like a single reader's report would be.
+pub fn merge_quarantines(reports: Vec<Quarantine>, sample_cap: usize) -> Quarantine {
+    let mut out = Quarantine::default();
+    for mut q in reports {
+        out.malformed += q.malformed;
+        out.non_finite += q.non_finite;
+        out.retries += q.retries;
+        // a single shard's report interleaves screen (non-finite) and
+        // parse samples out of line order; sort_by is stable, so equal
+        // lines keep their within-shard arrival order
+        q.samples.sort_by(|a, b| (a.line, a.byte).cmp(&(b.line, b.byte)));
+        out.samples.extend(q.samples);
+    }
+    out.samples.truncate(sample_cap);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::{RecordError, RecordKind};
+    use crate::stream::{stats_pass, LibsvmChunks, SparseChunk, StreamFeaturizer};
+    use crate::util::rng::Pcg;
+
+    fn synth_libsvm(n: usize, d: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Pcg::seed(seed);
+        let mut text = String::new();
+        for i in 0..n {
+            text.push_str(&format!("{}", i % 3));
+            for j in 0..d {
+                if rng.f64() < 0.7 {
+                    text.push_str(&format!(" {}:{:.6}", j + 1, rng.range_f64(-2.0, 2.0)));
+                }
+            }
+            text.push('\n');
+        }
+        text.into_bytes()
+    }
+
+    fn featurize_rows(
+        bytes: &[u8],
+        r: usize,
+        sigma: f64,
+        seed: u64,
+        d: usize,
+        lo: &[f64],
+        span: &[f64],
+        block_rows: usize,
+    ) -> ShardState {
+        let mut reader = LibsvmChunks::from_bytes(bytes.to_vec(), 7);
+        let mut chunk = SparseChunk::new();
+        let mut fz = StreamFeaturizer::new(
+            r,
+            d,
+            sigma,
+            seed,
+            lo.to_vec(),
+            span.to_vec(),
+            block_rows,
+            0,
+        );
+        while reader.next_chunk(&mut chunk).unwrap() {
+            fz.push_chunk(&chunk);
+        }
+        let (grids, blocks, labels) = fz.into_state();
+        ShardState { grids, blocks, labels }
+    }
+
+    #[test]
+    fn merged_shards_equal_sequential_featurization() {
+        let (r, sigma, seed, d) = (16usize, 0.8f64, 7u64, 6usize);
+        let bytes = synth_libsvm(101, d, 3);
+        // shared frame from a stats pass over the whole stream
+        let mut reader = LibsvmChunks::from_bytes(bytes.clone(), 7);
+        let mut chunk = SparseChunk::new();
+        let stats = stats_pass(&mut reader, &mut chunk).unwrap();
+        let n = stats.n;
+        let (lo, span) = stats.finalize(d);
+
+        // sequential reference
+        reader.reset().unwrap();
+        let mut fz = StreamFeaturizer::new(r, d, sigma, seed, lo.clone(), span.clone(), 13, n);
+        while reader.next_chunk(&mut chunk).unwrap() {
+            fz.push_chunk(&chunk);
+        }
+        let want = fz.finish().unwrap();
+
+        // shard at line boundaries (incl. an empty middle shard) with a
+        // *different* block size, then merge
+        let text = String::from_utf8(bytes.clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        for cuts in [vec![0usize, 40, 101], vec![0, 33, 33, 70, 101], vec![0, 101]] {
+            let states: Vec<ShardState> = cuts
+                .windows(2)
+                .map(|w| {
+                    let part = lines[w[0]..w[1]].join("\n");
+                    let part = if part.is_empty() { part } else { part + "\n" };
+                    featurize_rows(part.as_bytes(), r, sigma, seed, d, &lo, &span, 9)
+                })
+                .collect();
+            let merger = CodebookMerger { r, d_in: d, sigma, seed };
+            let got = merger.merge(states).unwrap();
+            assert_eq!(got.labels, want.labels);
+            assert_eq!(got.bins_per_grid, want.bins_per_grid);
+            assert_eq!(got.kappa.to_bits(), want.kappa.to_bits());
+            assert_eq!(got.codebook.dim, want.codebook.dim);
+            // identical bin→column tables, grid by grid
+            for j in 0..r {
+                let mut a: Vec<(u64, u32)> = got.codebook.tables[j].iter().collect();
+                let mut b: Vec<(u64, u32)> = want.codebook.tables[j].iter().collect();
+                a.sort_unstable();
+                b.sort_unstable();
+                assert_eq!(a, b, "grid {j} table");
+            }
+            // identical substrate semantics: same gram row sums
+            let dg = got.z.implicit_degrees();
+            let dw = want.z.implicit_degrees();
+            assert_eq!(dg.len(), dw.len());
+            for (x, y) in dg.iter().zip(dw.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn merge_rejects_empty_dataset() {
+        let merger = CodebookMerger { r: 4, d_in: 2, sigma: 1.0, seed: 1 };
+        let empty = ShardState {
+            grids: vec![(Vec::new(), Vec::new()); 4],
+            blocks: Vec::new(),
+            labels: Vec::new(),
+        };
+        assert!(merger.merge(vec![empty]).is_err());
+    }
+
+    #[test]
+    fn quarantine_merge_orders_and_caps_samples() {
+        let sample = |line: usize, byte: u64| RecordError {
+            file: "f".to_string(),
+            line,
+            byte,
+            token: "t".to_string(),
+            reason: "r".to_string(),
+            kind: RecordKind::Malformed,
+        };
+        let mut q0 = Quarantine::default();
+        q0.malformed = 2;
+        q0.retries = 1;
+        // out of line order, as a screen/parse interleave produces
+        q0.samples.push(sample(9, 90));
+        q0.samples.push(sample(2, 20));
+        let mut q1 = Quarantine::default();
+        q1.non_finite = 1;
+        q1.samples.push(sample(1, 10));
+        let merged = merge_quarantines(vec![q0.clone(), q1.clone()], 16);
+        assert_eq!((merged.malformed, merged.non_finite, merged.retries), (2, 1, 1));
+        // shard order first, line order within a shard
+        let lines: Vec<usize> = merged.samples.iter().map(|s| s.line).collect();
+        assert_eq!(lines, vec![2, 9, 1]);
+        // cap applies to the merged list
+        let capped = merge_quarantines(vec![q0, q1], 2);
+        assert_eq!(capped.samples.len(), 2);
+        assert_eq!(capped.malformed, 2);
+    }
+}

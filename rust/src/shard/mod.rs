@@ -1,0 +1,280 @@
+//! Sharded parallel featurization with mergeable RB codebooks.
+//!
+//! The streaming fit in [`crate::stream`] is a two-pass, single-reader
+//! scan. This module parallelizes it across K independent readers —
+//! byte-range windows of one file or runs of whole files, planned by
+//! [`ShardPlanner`] — while keeping the headline guarantee of the
+//! sequential path: the merged fit is **bit-identical** to the
+//! sequential fit over the shard concatenation, for any shard count.
+//!
+//! The run has three phases:
+//!
+//! 1. **Stats** — K scoped worker threads each run the statistics pass
+//!    over their shard behind a fresh per-shard
+//!    [`GuardedReader`](crate::stream::GuardedReader); the per-shard
+//!    extrema/census merge exactly (min/max/sum are associative), fixing
+//!    the global `(lo, span)` frame and per-shard row counts.
+//! 2. **Featurize** — the workers reset their readers (the sequential
+//!    path's one reset, so per-shard fault injection sees identical
+//!    pass/retry semantics) and featurize their rows with a
+//!    [`StreamFeaturizer`] pinned to the *global* frame, emitting
+//!    shard-local codebooks and local-id substrate blocks. Each worker
+//!    gets `num_threads() / K` inner threads so K shards don't
+//!    oversubscribe the pool.
+//! 3. **Merge** — [`CodebookMerger`] unions the shard codebooks in
+//!    canonical first-seen order, relabels every block into global
+//!    columns, recomputes κ exactly, and concatenates labels and
+//!    quarantine reports ([`merge_quarantines`]) in shard order.
+//!
+//! Phase errors surface deterministically: the lowest-index failing
+//! shard wins, so a bad byte produces the same error no matter how the
+//! thread race falls.
+
+pub mod merge;
+pub mod planner;
+
+pub use merge::{merge_quarantines, CodebookMerger, ShardState};
+pub use planner::{expand_patterns, ShardFormat, ShardPart, ShardPlan, ShardPlanner};
+
+use crate::error::ScrbError;
+use crate::stream::stats::stats_pass;
+use crate::stream::{
+    ChunkReader, GuardedReader, IngestPolicy, Quarantine, SparseChunk, StreamFeaturizer,
+    StreamFeatures, StreamStats,
+};
+use crate::util::threads::num_threads;
+use std::time::{Duration, Instant};
+
+/// Result of a sharded featurization: the merged features plus the
+/// global frame and phase accounting the fit driver folds into its
+/// artifact and timers.
+pub struct ShardedFeatures {
+    /// Merged features, bit-identical to the sequential fit's.
+    pub features: StreamFeatures,
+    /// Total rows across shards.
+    pub n: usize,
+    /// Input dimensionality (max over shard readers).
+    pub d: usize,
+    /// Global per-column minimum from the merged stats pass.
+    pub lo: Vec<f64>,
+    /// Global per-column span from the merged stats pass.
+    pub span: Vec<f64>,
+    /// Merged quarantine/retry report, shard-then-line sample order.
+    pub quarantine: Quarantine,
+    /// Wallclock of the parallel stats phase.
+    pub stats_time: Duration,
+    /// Wallclock of the parallel featurize phase.
+    pub featurize_time: Duration,
+    /// Wallclock of the codebook/substrate merge.
+    pub merge_time: Duration,
+}
+
+/// Run the sharded two-pass featurization over `readers` (shard =
+/// dataset order) and merge the results. Each shard runs behind its own
+/// [`GuardedReader`] under `policy`; `block_rows` is the substrate block
+/// size within each shard (the cut points differ from the sequential
+/// run's, which is fine — the substrate kernels and the serialized model
+/// are partition-invariant).
+pub fn featurize_sharded(
+    r: usize,
+    sigma: f64,
+    seed: u64,
+    readers: &mut [&mut (dyn ChunkReader + Send)],
+    block_rows: usize,
+    policy: &IngestPolicy,
+) -> Result<ShardedFeatures, ScrbError> {
+    if readers.is_empty() {
+        return Err(ScrbError::config("sharded featurization needs at least one shard"));
+    }
+    let k = readers.len();
+
+    // phase 1: per-shard stats, in parallel
+    let t0 = Instant::now();
+    let phase_a: Vec<(StreamStats, usize, usize)> = par_shards(readers, |_s, reader| {
+        let mut guarded = GuardedReader::new(reader, policy.clone());
+        let mut chunk = SparseChunk::new();
+        let stats = stats_pass(&mut guarded, &mut chunk)?;
+        let d_s = guarded.dim();
+        let retries = guarded.report().retries;
+        Ok((stats, d_s, retries))
+    })?;
+    let stats_time = t0.elapsed();
+
+    let mut merged = StreamStats::new();
+    let mut d = 0usize;
+    let mut shard_rows = Vec::with_capacity(k);
+    let mut shard_retries = Vec::with_capacity(k);
+    for (stats, d_s, retries) in &phase_a {
+        shard_rows.push(stats.n);
+        shard_retries.push(*retries);
+        d = d.max(*d_s);
+        merged.merge(stats);
+    }
+    let n = merged.n;
+    if n == 0 {
+        return Err(ScrbError::invalid_input("cannot fit on an empty dataset"));
+    }
+    let (lo, span) = merged.finalize(d);
+
+    // phase 2: per-shard featurization against the global frame; divide
+    // the thread pool so K workers don't oversubscribe it
+    let inner_threads = (num_threads() / k).max(1);
+    let t1 = Instant::now();
+    let phase_b: Vec<(ShardState, Quarantine)> = par_shards(readers, |s, reader| {
+        let mut guarded = GuardedReader::new(reader, policy.clone());
+        guarded.reset()?;
+        let mut fz = StreamFeaturizer::new(
+            r,
+            d,
+            sigma,
+            seed,
+            lo.clone(),
+            span.clone(),
+            block_rows,
+            shard_rows[s],
+        )
+        .with_threads(inner_threads);
+        let mut chunk = SparseChunk::new();
+        while guarded.next_chunk(&mut chunk)? {
+            if guarded.dim() > d {
+                return Err(ScrbError::invalid_input(format!(
+                    "stream changed between passes: dimension grew from {d} to {} in shard {s}",
+                    guarded.dim()
+                )));
+            }
+            fz.push_chunk(&chunk);
+        }
+        if fz.rows() != shard_rows[s] {
+            return Err(ScrbError::invalid_input(format!(
+                "stream changed between passes: shard {s} had {} rows in the stats pass, {} in \
+                 the featurize pass",
+                shard_rows[s],
+                fz.rows()
+            )));
+        }
+        // the fresh phase-2 guard lost phase 1's transient-retry count;
+        // fold it back so the merged report covers both passes, like the
+        // sequential single-guard run
+        let mut report = guarded.report();
+        report.retries += shard_retries[s];
+        let (grids, blocks, labels) = fz.into_state();
+        Ok((ShardState { grids, blocks, labels }, report))
+    })?;
+    let featurize_time = t1.elapsed();
+
+    // phase 3: merge
+    let t2 = Instant::now();
+    let (states, reports): (Vec<ShardState>, Vec<Quarantine>) = phase_b.into_iter().unzip();
+    let quarantine = merge_quarantines(reports, policy.sample_cap);
+    let merger = CodebookMerger { r, d_in: d, sigma, seed };
+    let features = merger.merge(states)?;
+    let merge_time = t2.elapsed();
+
+    Ok(ShardedFeatures {
+        features,
+        n,
+        d,
+        lo,
+        span,
+        quarantine,
+        stats_time,
+        featurize_time,
+        merge_time,
+    })
+}
+
+/// Run `f` once per shard on scoped worker threads, collecting results
+/// in shard order. On failure the *lowest-index* shard's error is
+/// returned regardless of thread timing, keeping failures deterministic.
+fn par_shards<T, F>(
+    readers: &mut [&mut (dyn ChunkReader + Send)],
+    f: F,
+) -> Result<Vec<T>, ScrbError>
+where
+    T: Send,
+    F: Fn(usize, &mut (dyn ChunkReader + Send)) -> Result<T, ScrbError> + Sync,
+{
+    let mut slots: Vec<Option<Result<T, ScrbError>>> = Vec::with_capacity(readers.len());
+    slots.resize_with(readers.len(), || None);
+    std::thread::scope(|scope| {
+        for (s, (slot, reader)) in slots.iter_mut().zip(readers.iter_mut()).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                *slot = Some(f(s, &mut **reader));
+            });
+        }
+    });
+    let mut out = Vec::with_capacity(slots.len());
+    for slot in slots {
+        out.push(slot.expect("shard worker writes its slot before exiting")?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::LibsvmChunks;
+
+    fn reader_of(bytes: &[u8]) -> LibsvmChunks {
+        LibsvmChunks::from_bytes(bytes.to_vec(), 5)
+    }
+
+    #[test]
+    fn sharded_matches_sequential_single_shard() {
+        let text = b"0 1:0.5 2:1.5\n1 1:-0.5 2:0.25\n0 2:2.0\n1 1:1.0\n".to_vec();
+        let policy = IngestPolicy::default();
+        let mut seq = reader_of(&text);
+        let mut seq_ref: &mut (dyn ChunkReader + Send) = &mut seq;
+        let one = featurize_sharded(
+            8,
+            0.7,
+            11,
+            std::slice::from_mut(&mut seq_ref),
+            3,
+            &policy,
+        )
+        .unwrap();
+
+        let mut a = reader_of(b"0 1:0.5 2:1.5\n1 1:-0.5 2:0.25\n");
+        let mut b = reader_of(b"0 2:2.0\n1 1:1.0\n");
+        let mut refs: Vec<&mut (dyn ChunkReader + Send)> = vec![&mut a, &mut b];
+        let two = featurize_sharded(8, 0.7, 11, &mut refs, 3, &policy).unwrap();
+
+        assert_eq!(one.n, two.n);
+        assert_eq!(one.d, two.d);
+        assert_eq!(one.lo, two.lo);
+        assert_eq!(one.span, two.span);
+        assert_eq!(one.features.labels, two.features.labels);
+        assert_eq!(one.features.bins_per_grid, two.features.bins_per_grid);
+        assert_eq!(one.features.kappa.to_bits(), two.features.kappa.to_bits());
+    }
+
+    #[test]
+    fn empty_dataset_is_rejected() {
+        let mut a = reader_of(b"");
+        let mut b = reader_of(b"");
+        let mut refs: Vec<&mut (dyn ChunkReader + Send)> = vec![&mut a, &mut b];
+        let err = featurize_sharded(4, 1.0, 1, &mut refs, 2, &IngestPolicy::default());
+        assert!(err.is_err());
+        assert!(featurize_sharded(4, 1.0, 1, &mut [], 2, &IngestPolicy::default()).is_err());
+    }
+
+    #[test]
+    fn zero_row_shards_merge_as_noops() {
+        let text = b"0 1:0.5\n1 1:1.5\n0 1:2.5\n".to_vec();
+        let policy = IngestPolicy::default();
+        let mut seq = reader_of(&text);
+        let mut seq_ref: &mut (dyn ChunkReader + Send) = &mut seq;
+        let one =
+            featurize_sharded(4, 0.9, 5, std::slice::from_mut(&mut seq_ref), 2, &policy).unwrap();
+
+        let mut a = reader_of(b"");
+        let mut b = reader_of(&text);
+        let mut c = reader_of(b"");
+        let mut refs: Vec<&mut (dyn ChunkReader + Send)> = vec![&mut a, &mut b, &mut c];
+        let three = featurize_sharded(4, 0.9, 5, &mut refs, 2, &policy).unwrap();
+        assert_eq!(one.features.labels, three.features.labels);
+        assert_eq!(one.features.bins_per_grid, three.features.bins_per_grid);
+    }
+}

@@ -1,0 +1,401 @@
+//! Shard planning: split a dataset into K contiguous row ranges, each
+//! backed by its own independent [`ChunkReader`].
+//!
+//! Two dataset shapes are supported, both with a deterministic shard
+//! order (shard s's rows precede shard s+1's rows in the logical
+//! concatenation — the invariant the codebook merge's first-seen
+//! equivalence proof rests on):
+//!
+//! - **A single file** is split by byte range: the K-1 interior cut
+//!   points land at `i·size/K` and are then rolled forward to the next
+//!   line start, so every line belongs to exactly one shard and the cut
+//!   sequence is a pure function of (file bytes, K). Shards near the end
+//!   of a small file may be empty — a zero-row shard featurizes to
+//!   nothing and merges as a no-op.
+//! - **Multiple files** (explicit list and/or `*`/`?` globs, expanded in
+//!   sorted order) are partitioned contiguously by cumulative byte size:
+//!   file boundaries are the only cut points, each shard gets a
+//!   consecutive run of files (possibly none, possibly several chained
+//!   behind one [`ChainChunks`]).
+//!
+//! The plan is data: inspectable, loggable, and — because it is
+//! deterministic — reproducible across runs and machines reading the
+//! same bytes.
+
+use crate::error::ScrbError;
+use crate::stream::reader::{ChainChunks, CsvChunks, LibsvmChunks};
+use crate::stream::ChunkReader;
+use std::fs::File;
+use std::io::{BufRead, BufReader, Seek, SeekFrom};
+
+/// Text format of the dataset being sharded.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardFormat {
+    /// LibSVM sparse rows (`label idx:val ...`).
+    Libsvm,
+    /// Dense CSV rows (`label,v1,...,vd`).
+    Csv,
+}
+
+/// One contiguous byte window of one file — the unit a shard is made of.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPart {
+    /// Source file path.
+    pub path: String,
+    /// First byte of the window (always a line boundary).
+    pub start: u64,
+    /// One past the last byte of the window; `None` = to EOF. A line is
+    /// read iff it *starts* inside the window.
+    pub end: Option<u64>,
+}
+
+/// A complete sharding of a dataset: `shards[s]` lists shard s's parts in
+/// dataset order. Empty part lists are legal (zero-row shards).
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    /// Text format every part is parsed as.
+    pub format: ShardFormat,
+    /// Rows per chunk for the readers [`ShardPlanner::open`] builds.
+    pub chunk_rows: usize,
+    /// Per-shard part lists, shard order = dataset order.
+    pub shards: Vec<Vec<ShardPart>>,
+}
+
+impl ShardPlan {
+    /// Number of shards.
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// True when the plan has no shards (never produced by the planner).
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+}
+
+/// Plans and opens shard readers; see the module docs for the split
+/// rules.
+pub struct ShardPlanner {
+    shards: usize,
+    chunk_rows: usize,
+    format: ShardFormat,
+}
+
+impl ShardPlanner {
+    /// A planner for `shards` shards reading `chunk_rows`-row chunks.
+    pub fn new(shards: usize, chunk_rows: usize, format: ShardFormat) -> ShardPlanner {
+        assert!(shards >= 1, "need at least one shard");
+        assert!(chunk_rows >= 1, "chunk_rows must be at least 1");
+        ShardPlanner { shards, chunk_rows, format }
+    }
+
+    /// Build the shard plan for `patterns` (file paths and/or `*`/`?`
+    /// globs over file names). One matched file splits by byte range;
+    /// several partition contiguously by size.
+    pub fn plan(&self, patterns: &[String]) -> Result<ShardPlan, ScrbError> {
+        let files = expand_patterns(patterns)?;
+        let sized: Vec<(String, u64)> = files
+            .into_iter()
+            .map(|p| {
+                let meta = std::fs::metadata(&p).map_err(|e| ScrbError::io(&p, e))?;
+                Ok((p, meta.len()))
+            })
+            .collect::<Result<_, ScrbError>>()?;
+        let shards = if sized.len() == 1 {
+            let (path, size) = &sized[0];
+            plan_byte_ranges(path, *size, self.shards)?
+        } else {
+            plan_file_runs(&sized, self.shards)
+        };
+        Ok(ShardPlan { format: self.format, chunk_rows: self.chunk_rows, shards })
+    }
+
+    /// Open one independent reader per shard of `plan`. A one-part shard
+    /// gets a ranged reader on its window; a multi-part shard chains its
+    /// parts; a zero-part shard gets an empty in-memory reader.
+    pub fn open(plan: &ShardPlan) -> Result<Vec<Box<dyn ChunkReader + Send>>, ScrbError> {
+        plan.shards
+            .iter()
+            .map(|parts| match parts.len() {
+                0 => Ok(empty_reader(plan.format, plan.chunk_rows)),
+                1 => part_reader(plan.format, plan.chunk_rows, &parts[0]),
+                _ => {
+                    let readers = parts
+                        .iter()
+                        .map(|p| part_reader(plan.format, plan.chunk_rows, p))
+                        .collect::<Result<Vec<_>, ScrbError>>()?;
+                    Ok(Box::new(ChainChunks::new(readers)) as Box<dyn ChunkReader + Send>)
+                }
+            })
+            .collect()
+    }
+}
+
+fn empty_reader(format: ShardFormat, chunk_rows: usize) -> Box<dyn ChunkReader + Send> {
+    match format {
+        ShardFormat::Libsvm => Box::new(LibsvmChunks::from_bytes(Vec::new(), chunk_rows)),
+        ShardFormat::Csv => Box::new(CsvChunks::from_bytes(Vec::new(), chunk_rows)),
+    }
+}
+
+fn part_reader(
+    format: ShardFormat,
+    chunk_rows: usize,
+    part: &ShardPart,
+) -> Result<Box<dyn ChunkReader + Send>, ScrbError> {
+    Ok(match format {
+        ShardFormat::Libsvm => {
+            Box::new(LibsvmChunks::from_path_range(&part.path, chunk_rows, part.start, part.end)?)
+        }
+        ShardFormat::Csv => {
+            Box::new(CsvChunks::from_path_range(&part.path, chunk_rows, part.start, part.end)?)
+        }
+    })
+}
+
+/// Expand `patterns` into a flat file list. A `*`/`?` wildcard is only
+/// honored in the final path component; matches are sorted so the
+/// dataset order — and with it every shard's row range — is independent
+/// of directory-iteration order. Plain paths pass through untouched; a
+/// glob matching nothing is a config error (a silent empty dataset hides
+/// typos).
+pub fn expand_patterns(patterns: &[String]) -> Result<Vec<String>, ScrbError> {
+    if patterns.is_empty() {
+        return Err(ScrbError::config("no input files given"));
+    }
+    let mut out = Vec::new();
+    for pat in patterns {
+        if !pat.contains('*') && !pat.contains('?') {
+            out.push(pat.clone());
+            continue;
+        }
+        let (dir, name_pat) = match pat.rfind('/') {
+            Some(i) => (&pat[..i], &pat[i + 1..]),
+            None => (".", &pat[..]),
+        };
+        if dir.contains('*') || dir.contains('?') {
+            return Err(ScrbError::config(format!(
+                "glob wildcards are only supported in the file name, not in directories: '{pat}'"
+            )));
+        }
+        let entries = std::fs::read_dir(dir).map_err(|e| ScrbError::io(dir, e))?;
+        let mut matched = Vec::new();
+        for entry in entries {
+            let entry = entry.map_err(|e| ScrbError::io(dir, e))?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if wildcard_match(name_pat, name) && entry.path().is_file() {
+                matched.push(format!("{dir}/{name}"));
+            }
+        }
+        if matched.is_empty() {
+            return Err(ScrbError::config(format!("glob '{pat}' matched no files")));
+        }
+        matched.sort();
+        out.extend(matched);
+    }
+    Ok(out)
+}
+
+/// Glob-lite matcher: `*` spans any run (including empty), `?` any one
+/// character, everything else literal. Iterative backtracking — no
+/// recursion, no allocation.
+fn wildcard_match(pattern: &str, name: &str) -> bool {
+    let (p, n) = (pattern.as_bytes(), name.as_bytes());
+    let (mut pi, mut ni) = (0usize, 0usize);
+    let (mut star, mut mark) = (usize::MAX, 0usize);
+    while ni < n.len() {
+        if pi < p.len() && (p[pi] == b'?' || p[pi] == n[ni]) {
+            pi += 1;
+            ni += 1;
+        } else if pi < p.len() && p[pi] == b'*' {
+            star = pi;
+            mark = ni;
+            pi += 1;
+        } else if star != usize::MAX {
+            pi = star + 1;
+            mark += 1;
+            ni = mark;
+        } else {
+            return false;
+        }
+    }
+    while pi < p.len() && p[pi] == b'*' {
+        pi += 1;
+    }
+    pi == p.len()
+}
+
+/// Split one file of `size` bytes into `k` line-aligned byte windows:
+/// interior cuts start at `i·size/k` and roll forward to the next line
+/// start. Cuts are monotone by construction, so windows partition the
+/// file; trailing windows may be empty.
+fn plan_byte_ranges(path: &str, size: u64, k: usize) -> Result<Vec<Vec<ShardPart>>, ScrbError> {
+    let mut bounds = Vec::with_capacity(k + 1);
+    bounds.push(0u64);
+    if k > 1 {
+        let file = File::open(path).map_err(|e| ScrbError::io(path, e))?;
+        let mut reader = BufReader::new(file);
+        let mut scratch = Vec::new();
+        for i in 1..k {
+            let target = size * i as u64 / k as u64;
+            bounds.push(align_to_line(&mut reader, path, target, size, &mut scratch)?);
+        }
+    }
+    bounds.push(size);
+    Ok(bounds
+        .windows(2)
+        .map(|w| vec![ShardPart { path: path.to_string(), start: w[0], end: Some(w[1]) }])
+        .collect())
+}
+
+/// Roll `target` forward to the next line start of the open file (or to
+/// `size` if no newline follows). `target` itself is kept when it already
+/// sits on a line boundary.
+fn align_to_line(
+    reader: &mut BufReader<File>,
+    path: &str,
+    target: u64,
+    size: u64,
+    scratch: &mut Vec<u8>,
+) -> Result<u64, ScrbError> {
+    if target == 0 || target >= size {
+        return Ok(target.min(size));
+    }
+    // read from target-1: if that byte is '\n', target is a line start
+    // and the scan stops after one byte — otherwise it swallows the rest
+    // of the straddled line
+    reader.seek(SeekFrom::Start(target - 1)).map_err(|e| ScrbError::io(path, e))?;
+    scratch.clear();
+    let n = reader.read_until(b'\n', scratch).map_err(|e| ScrbError::io(path, e))?;
+    Ok((target - 1 + n as u64).min(size))
+}
+
+/// Partition `files` (in order) into `k` contiguous runs by cumulative
+/// byte size: a file starting at cumulative offset `c` of `total` bytes
+/// goes to shard `c·k/total`. Monotone in `c`, so runs are contiguous;
+/// shards a small dataset never reaches stay empty.
+fn plan_file_runs(files: &[(String, u64)], k: usize) -> Vec<Vec<ShardPart>> {
+    let total: u64 = files.iter().map(|(_, s)| s).sum();
+    let mut shards = vec![Vec::new(); k];
+    let mut cum = 0u64;
+    for (path, size) in files {
+        let s = if total == 0 { 0 } else { ((cum * k as u64) / total).min(k as u64 - 1) as usize };
+        shards[s].push(ShardPart { path: path.clone(), start: 0, end: None });
+        cum += size;
+    }
+    shards
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::SparseChunk;
+
+    fn temp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("scrb_planner_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn drain_labels(r: &mut dyn ChunkReader) -> Vec<i64> {
+        let mut chunk = SparseChunk::new();
+        let mut out = Vec::new();
+        while r.next_chunk(&mut chunk).unwrap() {
+            out.extend_from_slice(&chunk.labels);
+        }
+        out
+    }
+
+    #[test]
+    fn wildcard_matcher_basics() {
+        assert!(wildcard_match("*", "anything"));
+        assert!(wildcard_match("part-?.svm", "part-3.svm"));
+        assert!(!wildcard_match("part-?.svm", "part-33.svm"));
+        assert!(wildcard_match("*.svm", "a.svm"));
+        assert!(!wildcard_match("*.svm", "a.csv"));
+        assert!(wildcard_match("a*b*c", "aXXbYYc"));
+        assert!(!wildcard_match("a*b*c", "aXXbYY"));
+        assert!(wildcard_match("", ""));
+        assert!(!wildcard_match("", "x"));
+    }
+
+    #[test]
+    fn single_file_ranges_partition_all_rows() {
+        let dir = temp_dir("single");
+        let path = dir.join("data.svm").to_str().unwrap().to_string();
+        let mut text = String::new();
+        for i in 0..37 {
+            text.push_str(&format!("{} 1:{}.5\n", i % 5, i));
+        }
+        std::fs::write(&path, &text).unwrap();
+        let mut whole = LibsvmChunks::from_path(&path, 4).unwrap();
+        let all = drain_labels(&mut whole);
+        for k in [1usize, 2, 3, 8, 64] {
+            let plan = ShardPlanner::new(k, 4, ShardFormat::Libsvm).plan(&[path.clone()]).unwrap();
+            assert_eq!(plan.len(), k);
+            let mut readers = ShardPlanner::open(&plan).unwrap();
+            let mut got = Vec::new();
+            for r in &mut readers {
+                got.extend(drain_labels(r.as_mut()));
+            }
+            assert_eq!(got, all, "k={k}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn multi_file_and_glob_runs_cover_in_sorted_order() {
+        let dir = temp_dir("multi");
+        let mut all = Vec::new();
+        for f in 0..3 {
+            let mut text = String::new();
+            for i in 0..10 {
+                let label = f * 100 + i;
+                text.push_str(&format!("{label} 1:0.5\n"));
+                all.push(label as i64);
+            }
+            std::fs::write(dir.join(format!("part-{f}.svm")), text).unwrap();
+        }
+        let glob = format!("{}/part-?.svm", dir.to_str().unwrap());
+        for k in [1usize, 2, 3, 8] {
+            let plan = ShardPlanner::new(k, 4, ShardFormat::Libsvm).plan(&[glob.clone()]).unwrap();
+            assert_eq!(plan.len(), k);
+            // files are whole: no part may carry a byte range
+            for parts in &plan.shards {
+                for p in parts {
+                    assert_eq!((p.start, p.end), (0, None));
+                }
+            }
+            let mut readers = ShardPlanner::open(&plan).unwrap();
+            let mut got = Vec::new();
+            for r in &mut readers {
+                got.extend(drain_labels(r.as_mut()));
+            }
+            assert_eq!(got, all, "k={k}");
+        }
+        // a glob matching nothing is a loud config error
+        let bad = format!("{}/nope-*.svm", dir.to_str().unwrap());
+        assert!(ShardPlanner::new(2, 4, ShardFormat::Libsvm).plan(&[bad]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn plans_are_deterministic() {
+        let dir = temp_dir("det");
+        let path = dir.join("d.svm").to_str().unwrap().to_string();
+        std::fs::write(&path, "1 1:1.0\n2 1:2.0\n3 1:3.0\n4 1:4.0\n").unwrap();
+        let p1 = ShardPlanner::new(3, 2, ShardFormat::Libsvm).plan(&[path.clone()]).unwrap();
+        let p2 = ShardPlanner::new(3, 2, ShardFormat::Libsvm).plan(&[path.clone()]).unwrap();
+        assert_eq!(p1.shards, p2.shards);
+        // every interior bound sits on a line start
+        for parts in &p1.shards {
+            let start = parts[0].start;
+            if start > 0 {
+                let bytes = std::fs::read(&path).unwrap();
+                assert_eq!(bytes[start as usize - 1], b'\n');
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

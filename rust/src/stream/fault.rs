@@ -74,7 +74,10 @@ pub struct FaultPlan {
 /// Passes are counted by [`ChunkReader::reset`] calls (the streaming fit
 /// resets exactly once between stats and featurize).
 pub struct FaultyReader<'a> {
-    inner: &'a mut dyn ChunkReader,
+    /// `+ Send` so a per-shard `FaultyReader` can ride a shard worker
+    /// thread (every concrete reader is Send; the plain-trait-object
+    /// coercion at the call sites keeps working).
+    inner: &'a mut (dyn ChunkReader + Send),
     plan: FaultPlan,
     /// 0-based pass index, incremented on reset.
     pass: usize,
@@ -91,7 +94,7 @@ pub struct FaultyReader<'a> {
 }
 
 impl<'a> FaultyReader<'a> {
-    pub fn new(inner: &'a mut dyn ChunkReader, plan: FaultPlan) -> FaultyReader<'a> {
+    pub fn new(inner: &'a mut (dyn ChunkReader + Send), plan: FaultPlan) -> FaultyReader<'a> {
         FaultyReader {
             inner,
             plan,

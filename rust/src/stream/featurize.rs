@@ -29,7 +29,7 @@ use crate::rb::codebook::BinTable;
 use crate::rb::features::codebook_table;
 use crate::rb::{sample_grids, Grid, RbCodebook};
 use crate::sparse::{BlockEllRb, EllRb};
-use crate::util::threads::{num_threads, parallel_chunks_mut, parallel_rows_mut};
+use crate::util::threads::{num_threads, parallel_chunks_mut, parallel_rows_mut_in};
 
 /// Per-grid incremental phase-1 state.
 struct GridState {
@@ -89,6 +89,10 @@ pub struct StreamFeaturizer {
     /// each block exactly.
     expected_rows: usize,
     labels: Vec<i64>,
+    /// Worker-thread budget for the internal parallel sections. Defaults
+    /// to the process-wide pool; the sharded fit divides the pool across
+    /// K concurrent featurizers so shards don't oversubscribe the cores.
+    threads: usize,
 }
 
 impl StreamFeaturizer {
@@ -138,7 +142,16 @@ impl StreamFeaturizer {
             n_rows: 0,
             expected_rows,
             labels: Vec::with_capacity(expected_rows),
+            threads: num_threads(),
         }
+    }
+
+    /// Cap the internal parallel sections at `threads` workers (at least
+    /// one). The binning arithmetic is thread-count-invariant — this only
+    /// changes how work is scheduled, never what is computed.
+    pub fn with_threads(mut self, threads: usize) -> StreamFeaturizer {
+        self.threads = threads.max(1);
+        self
     }
 
     /// Rows featurized so far.
@@ -171,7 +184,7 @@ impl StreamFeaturizer {
         if d > 0 {
             let (lo, span, zero_row) = (&self.lo, &self.span, &self.zero_row);
             let scratch = &mut self.dense[..rows * d];
-            parallel_rows_mut(scratch, d, |row0, out| {
+            parallel_rows_mut_in(scratch, d, self.threads, |row0, out| {
                 for (dr, orow) in out.chunks_mut(d).enumerate() {
                     orow.copy_from_slice(zero_row);
                     let (cols, vals) = chunk.row(start + row0 + dr);
@@ -186,7 +199,7 @@ impl StreamFeaturizer {
         //    run of grids and extends their dictionaries independently
         let dense = &self.dense;
         let grids = &self.grids;
-        parallel_chunks_mut(&mut self.states, num_threads(), |start, slice| {
+        parallel_chunks_mut(&mut self.states, self.threads, |start, slice| {
             for (k, st) in slice.iter_mut().enumerate() {
                 let grid = &grids[start + k];
                 st.locals.clear();
@@ -303,6 +316,18 @@ impl StreamFeaturizer {
         Ok(())
     }
 
+    /// Tear the featurizer down into its raw pass-2 state — per-grid
+    /// `(first-seen bin hashes, collision counts)`, local-id blocks, and
+    /// labels — without resolving global columns. This is the shard-worker
+    /// exit: a shard's local ids stay local until the
+    /// [`crate::shard::CodebookMerger`] unions the per-shard dictionaries
+    /// and relabels. Unlike [`StreamFeaturizer::finish`], zero rows are
+    /// fine here (an empty shard merges as a no-op).
+    pub(crate) fn into_state(self) -> (Vec<(Vec<u64>, Vec<usize>)>, Vec<Vec<u32>>, Vec<i64>) {
+        let grids = self.states.into_iter().map(|st| (st.hashes, st.counts)).collect();
+        (grids, self.blocks, self.labels)
+    }
+
     /// Finish the pass: resolve global column offsets, shift every block
     /// in place, and assemble the [`BlockEllRb`] + serving codebook.
     pub fn finish(self) -> Result<StreamFeatures, ScrbError> {
@@ -316,6 +341,7 @@ impl StreamFeaturizer {
             blocks,
             n_rows,
             labels,
+            threads,
             ..
         } = self;
         if n_rows == 0 {
@@ -351,7 +377,7 @@ impl StreamFeaturizer {
         let ell_blocks: Vec<EllRb> = blocks
             .into_iter()
             .map(|mut block| {
-                parallel_chunks_mut(&mut block, num_threads(), |start, chunk| {
+                parallel_chunks_mut(&mut block, threads, |start, chunk| {
                     let mut j = start % r;
                     for slot in chunk.iter_mut() {
                         *slot = (offsets[j] + *slot as usize) as u32;

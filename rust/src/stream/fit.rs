@@ -130,8 +130,74 @@ pub fn fit_streaming(
     let feat =
         Arc::new(featurize.run(env, DataSource::Stream { reader: &mut guarded, opts }, fp)?);
     let d = guarded.dim();
-    let n = feat.z.nrows();
     let quarantine = guarded.report();
+    finish_stream_fit(env, feat, opts, d, quarantine)
+}
+
+/// Fit SC_RB out-of-core over K parallel shards (dataset order). The
+/// merged fit is **bit-identical** to [`fit_streaming`] over the shard
+/// concatenation, for any shard count — see [`crate::shard`] for the
+/// plan/merge machinery and the equivalence argument. A single shard
+/// delegates to the sequential path (keeping checkpoint/resume support);
+/// more than one shard currently refuses checkpointing with a typed
+/// config error rather than silently ignoring the flag.
+pub fn fit_streaming_sharded(
+    env: &Env,
+    readers: &mut [&mut (dyn ChunkReader + Send)],
+    opts: &StreamOpts,
+) -> Result<StreamFit, ScrbError> {
+    let cfg = &env.cfg;
+    if readers.is_empty() {
+        return Err(ScrbError::config("sharded streaming fit needs at least one shard"));
+    }
+    if readers.len() > 1 && opts.checkpoint.is_some() {
+        return Err(ScrbError::config(
+            "checkpoint/resume (--checkpoint/--resume) is not yet supported with --shards > 1; \
+             drop the checkpoint flags or fit with a single shard",
+        ));
+    }
+    if readers.len() == 1 {
+        // one shard *is* the sequential fit — same reader, same guard,
+        // same checkpoint support
+        return fit_streaming(env, &mut *readers[0], opts);
+    }
+    if let Some(0) = opts.k {
+        return Err(ScrbError::config("streaming fit needs k >= 1 clusters"));
+    }
+    if !cfg.sigma_explicit {
+        return Err(ScrbError::config(
+            "a streamed fit cannot run the in-memory bandwidth selection; pin the kernel \
+             bandwidth explicitly (builder .sigma()/.kernel(), or --sigma at the CLI)",
+        ));
+    }
+
+    let featurize = RbFeaturize { r: cfg.r, sigma: cfg.kernel.sigma(), seed: cfg.seed };
+    // same fingerprint chain as the sequential stream: the shard count is
+    // an execution detail, not part of the fit identity
+    let fp = featurize.fingerprint(Fingerprint::new("data/stream").finish());
+    let source = DataSource::ShardedStream {
+        readers: readers.iter_mut().map(|r| &mut **r).collect(),
+        block_rows: opts.block_rows,
+        policy: opts.policy.clone(),
+    };
+    let feat = Arc::new(featurize.run(env, source, fp)?);
+    let d = readers.iter().map(|r| r.dim()).max().unwrap_or(0);
+    let quarantine = feat.stream_quarantine.clone().unwrap_or_default();
+    finish_stream_fit(env, feat, opts, d, quarantine)
+}
+
+/// The shared tail of every streaming fit: K selection from the label
+/// census, the embed → cluster → assemble pipeline (the identical driver
+/// the in-memory fit runs), and model recovery.
+fn finish_stream_fit(
+    env: &Env,
+    feat: Arc<crate::pipeline::FeatureArtifact>,
+    opts: &StreamOpts,
+    d: usize,
+    quarantine: Quarantine,
+) -> Result<StreamFit, ScrbError> {
+    let cfg = &env.cfg;
+    let n = feat.z.nrows();
 
     // K: explicit override wins; otherwise the stream's label census.
     let raw_labels = feat.stream_labels.clone().unwrap_or_default();

@@ -90,7 +90,7 @@ pub use fault::{
     corrupt_libsvm_text, corrupt_model_bytes, tear_frame, FaultPlan, FaultyReader, ServeFaultPlan,
 };
 pub use featurize::{StreamFeaturizer, StreamFeatures};
-pub use fit::{fit_streaming, StreamFit, StreamOpts};
+pub use fit::{fit_streaming, fit_streaming_sharded, StreamFit, StreamOpts};
 pub use policy::{GuardedReader, IngestPolicy, OnBadRecord, Quarantine};
-pub use reader::{ChunkReader, CsvChunks, LibsvmChunks};
+pub use reader::{ChainChunks, ChunkReader, CsvChunks, LibsvmChunks};
 pub use stats::{stats_pass, StreamStats};

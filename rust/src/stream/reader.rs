@@ -276,37 +276,76 @@ struct TextChunks {
     policy: IngestPolicy,
     /// Per-pass line-level quarantine report; cleared on reset.
     quarantine: Quarantine,
+    /// Byte-range window for shard readers: reading starts at
+    /// `range_start` (a line boundary, the shard planner's job) and stops
+    /// at the first line starting at or beyond `range_end`. `None` means
+    /// "to EOF". Byte offsets in errors stay absolute, so a quarantine
+    /// sample from shard 3 points at the same file position a sequential
+    /// read would report.
+    range_start: u64,
+    range_end: Option<u64>,
 }
 
 impl TextChunks {
     fn from_path(path: &str, chunk_rows: usize) -> Result<TextChunks, ScrbError> {
+        TextChunks::from_path_range(path, chunk_rows, 0, None)
+    }
+
+    fn from_bytes(bytes: Vec<u8>, chunk_rows: usize) -> TextChunks {
+        TextChunks::from_bytes_range(bytes, chunk_rows, 0, None)
+    }
+
+    /// Open `path` restricted to the byte window `[start, end)`. `start`
+    /// must sit on a line boundary; `end` may fall mid-line (the line
+    /// *starting* before `end` is read whole, which is exactly how the
+    /// planner makes adjacent shards partition the file).
+    fn from_path_range(
+        path: &str,
+        chunk_rows: usize,
+        start: u64,
+        end: Option<u64>,
+    ) -> Result<TextChunks, ScrbError> {
         assert!(chunk_rows >= 1, "chunk_rows must be at least 1");
         let file = File::open(path).map_err(|e| ScrbError::io(path, e))?;
+        let mut reader = BufReader::new(file);
+        if start > 0 {
+            reader.seek(SeekFrom::Start(start)).map_err(|e| ScrbError::io(path, e))?;
+        }
         Ok(TextChunks {
-            source: Source::File(BufReader::new(file)),
+            source: Source::File(reader),
             name: path.to_string(),
-            pos: 0,
-            byte: 0,
+            pos: start as usize,
+            byte: start,
             line_buf: Vec::new(),
             lineno: 0,
             chunk_rows,
             policy: IngestPolicy::default(),
             quarantine: Quarantine::default(),
+            range_start: start,
+            range_end: end,
         })
     }
 
-    fn from_bytes(bytes: Vec<u8>, chunk_rows: usize) -> TextChunks {
+    /// In-memory variant of [`TextChunks::from_path_range`].
+    fn from_bytes_range(
+        bytes: Vec<u8>,
+        chunk_rows: usize,
+        start: u64,
+        end: Option<u64>,
+    ) -> TextChunks {
         assert!(chunk_rows >= 1, "chunk_rows must be at least 1");
         TextChunks {
             source: Source::Mem(bytes),
             name: "<memory>".to_string(),
-            pos: 0,
-            byte: 0,
+            pos: start as usize,
+            byte: start,
             line_buf: Vec::new(),
             lineno: 0,
             chunk_rows,
             policy: IngestPolicy::default(),
             quarantine: Quarantine::default(),
+            range_start: start,
+            range_end: end,
         }
     }
 
@@ -319,6 +358,11 @@ impl TextChunks {
     ) -> Result<bool, ScrbError> {
         chunk.clear();
         while chunk.rows() < self.chunk_rows {
+            // a line is read iff it *starts* inside the byte window, so
+            // for any cut sequence adjacent windows partition the lines
+            if self.range_end.is_some_and(|end| self.byte >= end) {
+                break;
+            }
             match &mut self.source {
                 Source::Mem(bytes) => {
                     if self.pos >= bytes.len() {
@@ -391,12 +435,14 @@ impl TextChunks {
     }
 
     fn reset(&mut self) -> Result<(), ScrbError> {
-        self.pos = 0;
-        self.byte = 0;
+        self.pos = self.range_start as usize;
+        self.byte = self.range_start;
         self.lineno = 0;
         self.quarantine.clear();
         if let Source::File(reader) = &mut self.source {
-            reader.seek(SeekFrom::Start(0)).map_err(|e| ScrbError::io(self.name.clone(), e))?;
+            reader
+                .seek(SeekFrom::Start(self.range_start))
+                .map_err(|e| ScrbError::io(self.name.clone(), e))?;
         }
         Ok(())
     }
@@ -417,6 +463,33 @@ impl LibsvmChunks {
     /// Read from in-memory LibSVM text.
     pub fn from_bytes(bytes: Vec<u8>, chunk_rows: usize) -> LibsvmChunks {
         LibsvmChunks { text: TextChunks::from_bytes(bytes, chunk_rows), max_dim: 0 }
+    }
+
+    /// Open `path` restricted to the byte window `[start, end)` — the
+    /// shard-reader form. `start` must sit on a line boundary (byte 0 or
+    /// one past a `\n`); a line is read iff it *starts* inside the
+    /// window, so adjacent windows partition the file's lines for any
+    /// cut sequence. `end = None` reads to EOF.
+    pub fn from_path_range(
+        path: &str,
+        chunk_rows: usize,
+        start: u64,
+        end: Option<u64>,
+    ) -> Result<LibsvmChunks, ScrbError> {
+        Ok(LibsvmChunks {
+            text: TextChunks::from_path_range(path, chunk_rows, start, end)?,
+            max_dim: 0,
+        })
+    }
+
+    /// In-memory variant of [`LibsvmChunks::from_path_range`].
+    pub fn from_bytes_range(
+        bytes: Vec<u8>,
+        chunk_rows: usize,
+        start: u64,
+        end: Option<u64>,
+    ) -> LibsvmChunks {
+        LibsvmChunks { text: TextChunks::from_bytes_range(bytes, chunk_rows, start, end), max_dim: 0 }
     }
 }
 
@@ -523,6 +596,27 @@ impl CsvChunks {
     pub fn from_bytes(bytes: Vec<u8>, chunk_rows: usize) -> CsvChunks {
         CsvChunks { text: TextChunks::from_bytes(bytes, chunk_rows), d: None }
     }
+
+    /// Open `path` restricted to the byte window `[start, end)`; see
+    /// [`LibsvmChunks::from_path_range`] for the window contract.
+    pub fn from_path_range(
+        path: &str,
+        chunk_rows: usize,
+        start: u64,
+        end: Option<u64>,
+    ) -> Result<CsvChunks, ScrbError> {
+        Ok(CsvChunks { text: TextChunks::from_path_range(path, chunk_rows, start, end)?, d: None })
+    }
+
+    /// In-memory variant of [`CsvChunks::from_path_range`].
+    pub fn from_bytes_range(
+        bytes: Vec<u8>,
+        chunk_rows: usize,
+        start: u64,
+        end: Option<u64>,
+    ) -> CsvChunks {
+        CsvChunks { text: TextChunks::from_bytes_range(bytes, chunk_rows, start, end), d: None }
+    }
 }
 
 impl ChunkReader for CsvChunks {
@@ -554,6 +648,87 @@ impl ChunkReader for CsvChunks {
 
     fn quarantine(&self) -> Option<&Quarantine> {
         Some(&self.text.quarantine)
+    }
+}
+
+/// A [`ChunkReader`] over a sequence of part readers, drained in order —
+/// the multi-file dataset backend (`scrb fit --data 'a.svm,b.svm'`, or a
+/// glob). Semantically the chain *is* the concatenation of its parts: a
+/// fit over a `ChainChunks` is byte-identical to a fit over one file
+/// holding the parts' lines in order.
+///
+/// Each part keeps its own per-pass quarantine (with its own file name
+/// and per-file line numbers); the chain absorbs a part's report the
+/// moment the part is exhausted, so after a full pass
+/// [`ChunkReader::quarantine`] is the deterministic part-ordered merge.
+pub struct ChainChunks {
+    parts: Vec<Box<dyn ChunkReader + Send>>,
+    cur: usize,
+    chunk_rows: usize,
+    name: String,
+    /// Part-ordered merge of exhausted parts' per-pass reports.
+    quarantine: Quarantine,
+}
+
+impl ChainChunks {
+    /// Chain `parts` in order. Panics on an empty part list (an empty
+    /// *part* is fine; a dataset with no sources is a planner bug).
+    pub fn new(parts: Vec<Box<dyn ChunkReader + Send>>) -> ChainChunks {
+        assert!(!parts.is_empty(), "ChainChunks needs at least one part");
+        let chunk_rows = parts[0].chunk_rows();
+        let name = if parts.len() == 1 {
+            parts[0].source_name().to_string()
+        } else {
+            format!("<chain of {} sources>", parts.len())
+        };
+        ChainChunks { parts, cur: 0, chunk_rows, name, quarantine: Quarantine::default() }
+    }
+}
+
+impl ChunkReader for ChainChunks {
+    fn next_chunk(&mut self, chunk: &mut SparseChunk) -> Result<bool, ScrbError> {
+        while self.cur < self.parts.len() {
+            if self.parts[self.cur].next_chunk(chunk)? {
+                return Ok(true);
+            }
+            if let Some(q) = self.parts[self.cur].quarantine() {
+                self.quarantine.absorb(q);
+            }
+            self.cur += 1;
+        }
+        chunk.clear();
+        Ok(false)
+    }
+
+    fn reset(&mut self) -> Result<(), ScrbError> {
+        for part in &mut self.parts {
+            part.reset()?;
+        }
+        self.cur = 0;
+        self.quarantine.clear();
+        Ok(())
+    }
+
+    fn dim(&self) -> usize {
+        self.parts.iter().map(|p| p.dim()).max().unwrap_or(0)
+    }
+
+    fn chunk_rows(&self) -> usize {
+        self.chunk_rows
+    }
+
+    fn source_name(&self) -> &str {
+        &self.name
+    }
+
+    fn set_policy(&mut self, policy: &IngestPolicy) {
+        for part in &mut self.parts {
+            part.set_policy(policy);
+        }
+    }
+
+    fn quarantine(&self) -> Option<&Quarantine> {
+        Some(&self.quarantine)
     }
 }
 
@@ -752,6 +927,89 @@ mod tests {
         r.reset().unwrap();
         assert!(r.next_chunk(&mut chunk).unwrap());
         assert_eq!(chunk.labels, vec![1, 4], "same rows skipped on every pass");
+    }
+
+    #[test]
+    fn byte_ranges_partition_the_lines() {
+        let bytes = TEXT.as_bytes().to_vec();
+        // collect (label, cols) per row for a reader
+        fn drain(r: &mut dyn ChunkReader) -> Vec<(i64, Vec<u32>)> {
+            let mut chunk = SparseChunk::new();
+            let mut out = Vec::new();
+            while r.next_chunk(&mut chunk).unwrap() {
+                for i in 0..chunk.rows() {
+                    out.push((chunk.labels[i], chunk.row(i).0.to_vec()));
+                }
+            }
+            out
+        }
+        let mut whole = LibsvmChunks::from_bytes(bytes.clone(), 2);
+        let all = drain(&mut whole);
+        assert_eq!(all.len(), 4);
+        // every line-boundary cut partitions the rows: the two windows
+        // together replay the sequential read exactly
+        let n = bytes.len() as u64;
+        for cut in 0..=n {
+            let on_boundary =
+                cut == 0 || cut == n || bytes[cut as usize - 1] == b'\n';
+            if !on_boundary {
+                continue; // mid-line starts are the planner's job to avoid
+            }
+            let mut a = LibsvmChunks::from_bytes_range(bytes.clone(), 2, 0, Some(cut));
+            let mut b = LibsvmChunks::from_bytes_range(bytes.clone(), 2, cut, None);
+            let head = drain(&mut a);
+            let tail = drain(&mut b);
+            let mut got = head.clone();
+            got.extend(tail.iter().cloned());
+            assert_eq!(got, all, "cut at byte {cut}");
+            // ranged readers rewind to their own window start, not byte 0
+            a.reset().unwrap();
+            b.reset().unwrap();
+            assert_eq!(drain(&mut a), head, "reset replays the head window");
+            assert_eq!(drain(&mut b), tail, "reset replays the tail window");
+        }
+        // an empty window yields zero rows and keeps returning false
+        let mut empty = LibsvmChunks::from_bytes_range(bytes.clone(), 2, 0, Some(0));
+        assert!(drain(&mut empty).is_empty());
+        let mut chunk = SparseChunk::new();
+        assert!(!empty.next_chunk(&mut chunk).unwrap());
+    }
+
+    #[test]
+    fn chain_concatenates_parts_and_merges_quarantine() {
+        let part_a = "1 1:0.5\n1 nocolon\n2 2:1.5\n";
+        let part_b = "# comment\n-1 3:2.0\nnan 1:1.0\n2 1:0.25\n";
+        let policy = IngestPolicy {
+            on_bad_record: OnBadRecord::Quarantine,
+            ..IngestPolicy::default()
+        };
+        let mut chain = ChainChunks::new(vec![
+            Box::new(LibsvmChunks::from_bytes(part_a.as_bytes().to_vec(), 2)),
+            Box::new(LibsvmChunks::from_bytes(part_b.as_bytes().to_vec(), 2)),
+        ]);
+        chain.set_policy(&policy);
+        let mut chunk = SparseChunk::new();
+        let mut labels = Vec::new();
+        while chain.next_chunk(&mut chunk).unwrap() {
+            labels.extend_from_slice(&chunk.labels);
+        }
+        assert_eq!(labels, vec![1, 2, -1, 2], "parts drained in order");
+        assert_eq!(chain.dim(), 3, "dim is the max over parts");
+        let q = chain.quarantine().unwrap();
+        assert_eq!(q.malformed, 1);
+        assert_eq!(q.non_finite, 1);
+        assert_eq!(q.samples.len(), 2);
+        assert_eq!(q.samples[0].line, 2, "per-part line numbers survive the merge");
+        assert_eq!(q.samples[1].line, 3);
+        // reset replays identically from a clean report
+        chain.reset().unwrap();
+        assert_eq!(chain.quarantine().unwrap().skipped(), 0);
+        let mut again = Vec::new();
+        while chain.next_chunk(&mut chunk).unwrap() {
+            again.extend_from_slice(&chunk.labels);
+        }
+        assert_eq!(again, labels);
+        assert_eq!(chain.quarantine().unwrap().skipped(), 2);
     }
 
     #[test]

@@ -65,6 +65,28 @@ impl StreamStats {
         }
     }
 
+    /// Fold another pass's statistics into this one — the shard-merge
+    /// step. Min/max/count/census are all order-independent reductions,
+    /// so merging per-shard stats then finalizing is bit-equal to one
+    /// sequential pass over the concatenated shards (`tests/shard.rs`
+    /// locks this through the full fit).
+    pub fn merge(&mut self, other: &StreamStats) {
+        self.n += other.n;
+        self.classes.extend(other.classes.iter().copied());
+        if other.lo.len() > self.lo.len() {
+            self.lo.resize(other.lo.len(), f64::INFINITY);
+            self.hi.resize(other.hi.len(), f64::NEG_INFINITY);
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (j, (&l, (&h, &c))) in
+            other.lo.iter().zip(other.hi.iter().zip(other.counts.iter())).enumerate()
+        {
+            self.lo[j] = self.lo[j].min(l);
+            self.hi[j] = self.hi[j].max(h);
+            self.counts[j] += c;
+        }
+    }
+
     /// Finish the pass: per-column `(min, span)` over `d` columns,
     /// bit-equal to [`crate::data::Dataset::minmax_params`] on the
     /// densified data (columns any row left implicit contribute a 0.0;
@@ -135,6 +157,42 @@ mod tests {
         assert_eq!(span, dspan);
         // column 3 (0-based) is the constant 1.0 column: span collapses
         assert_eq!(span[3], 1.0);
+    }
+
+    #[test]
+    fn merged_shard_stats_equal_sequential_stats() {
+        let text = "\
+1 1:2.0 2:-3.0 4:1.0
+2 1:4.0 4:1.0
+1 2:5.0 4:1.0
+3 1:-1.0 2:0.5 3:9.0 4:1.0
+";
+        let mut whole = LibsvmChunks::from_bytes(text.as_bytes().to_vec(), 2);
+        let mut chunk = SparseChunk::new();
+        let seq = stats_pass(&mut whole, &mut chunk).unwrap();
+        let d = whole.dim();
+        // split the lines 1|3 and 3|1 (covers a shard missing a column
+        // that another shard discovers, and an empty shard)
+        let lines: Vec<&str> = text.lines().collect();
+        for cut in [0usize, 1, 3, 4] {
+            let head = lines[..cut].join("\n") + "\n";
+            let tail = lines[cut..].join("\n") + "\n";
+            let mut merged = StreamStats::new();
+            for part in [head, tail] {
+                let mut r = LibsvmChunks::from_bytes(part.into_bytes(), 2);
+                let s = stats_pass(&mut r, &mut chunk).unwrap();
+                merged.merge(&s);
+            }
+            assert_eq!(merged.n, seq.n, "cut {cut}");
+            assert_eq!(merged.classes, seq.classes);
+            let (lo_a, span_a) = merged.finalize(d);
+            // finalize consumes; recompute the sequential reference
+            let mut whole = LibsvmChunks::from_bytes(text.as_bytes().to_vec(), 2);
+            let seq2 = stats_pass(&mut whole, &mut chunk).unwrap();
+            let (lo_b, span_b) = seq2.finalize(d);
+            assert_eq!(lo_a, lo_b);
+            assert_eq!(span_a, span_b);
+        }
     }
 
     #[test]

@@ -142,12 +142,25 @@ where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
 {
+    parallel_rows_mut_in(out, row_len, num_threads(), f)
+}
+
+/// [`parallel_rows_mut`] with an explicit worker budget instead of the
+/// process-wide pool — for callers that already run inside their own
+/// parallel section (the sharded featurize runs K featurizers at once and
+/// hands each `num_threads() / K` workers so the machine is not
+/// oversubscribed).
+pub fn parallel_rows_mut_in<T, F>(out: &mut [T], row_len: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
     assert!(row_len > 0 && out.len() % row_len == 0, "buffer not row-aligned");
     let n_rows = out.len() / row_len;
     if n_rows == 0 {
         return;
     }
-    let nt = num_threads().min(n_rows);
+    let nt = threads.clamp(1, n_rows);
     if nt <= 1 {
         // inline fast path: no fork/join, no spawn allocations
         f(0, out);
@@ -278,6 +291,21 @@ mod tests {
         });
         for (i, x) in v.iter().enumerate() {
             assert_eq!(*x, i);
+        }
+    }
+
+    #[test]
+    fn rows_mut_in_respects_budget_and_covers() {
+        for nt in [1usize, 2, 3, 16] {
+            let mut v = vec![0usize; 11 * 4];
+            parallel_rows_mut_in(&mut v, 4, nt, |row0, rows| {
+                for (k, x) in rows.iter_mut().enumerate() {
+                    *x = row0 * 4 + k;
+                }
+            });
+            for (i, x) in v.iter().enumerate() {
+                assert_eq!(*x, i, "nt={nt}");
+            }
         }
     }
 

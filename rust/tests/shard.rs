@@ -1,0 +1,316 @@
+//! Sharded-featurization acceptance tests (ISSUE 8):
+//!
+//! - **byte-identity**: `fit_streaming_sharded` over K byte-range shards
+//!   of one file — and over multi-file datasets — serializes the model
+//!   **byte-identically** to the sequential `fit_streaming` over the same
+//!   bytes, for K ∈ {1, 2, 3, 8}, including zero-row shards and shards
+//!   with disjoint or fully-overlapping bin populations;
+//! - the seeded-fault sweep (`SCRB_FAULT_SEED` ∈ {42, 7, 1234} in CI):
+//!   quarantined rows land in different shards, yet the model bytes, the
+//!   exact per-reason counts, and the deterministic sample order all
+//!   match the sequential quarantined fit;
+//! - per-shard transient faults retry transparently (counted in the
+//!   merged report) without touching the fitted bytes;
+//! - `--shards K > 1` plus checkpointing is a typed `Config` refusal,
+//!   not a silently ignored flag.
+
+use scrb::cluster::Env;
+use scrb::config::{Engine, Kernel, PipelineConfig};
+use scrb::data::{synth, Dataset};
+use scrb::shard::{ShardFormat, ShardPlanner};
+use scrb::stream::{
+    corrupt_libsvm_text, fit_streaming, fit_streaming_sharded, CheckpointCfg, ChunkReader,
+    FaultPlan, FaultyReader, IngestPolicy, LibsvmChunks, OnBadRecord, StreamFit, StreamOpts,
+};
+use std::fmt::Write as _;
+
+/// Injection seed: `SCRB_FAULT_SEED` env var, default 42. CI runs the
+/// suite at several values; the properties below must hold for all of
+/// them.
+fn fault_seed() -> u64 {
+    std::env::var("SCRB_FAULT_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(42)
+}
+
+fn to_libsvm(ds: &Dataset) -> Vec<u8> {
+    let mut s = String::new();
+    for i in 0..ds.n() {
+        write!(s, "{}", ds.y[i] as i64).unwrap();
+        for (j, &v) in ds.x.row(i).iter().enumerate() {
+            if v != 0.0 {
+                write!(s, " {}:{v}", j + 1).unwrap();
+            }
+        }
+        s.push('\n');
+    }
+    s.into_bytes()
+}
+
+fn test_cfg(k: usize, r: usize, sigma: f64) -> PipelineConfig {
+    PipelineConfig::builder()
+        .k(k)
+        .r(r)
+        .kernel(Kernel::Laplacian { sigma })
+        .engine(Engine::Native)
+        .kmeans_replicates(3)
+        .seed(42)
+        .build()
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("scrb_shard_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Sequential reference fit over `bytes`.
+fn fit_sequential(bytes: &[u8], cfg: &PipelineConfig, opts: &StreamOpts) -> StreamFit {
+    let mut reader = LibsvmChunks::from_bytes(bytes.to_vec(), 37);
+    fit_streaming(&Env::new(cfg.clone()), &mut reader, opts).unwrap()
+}
+
+/// Sharded fit over `patterns` planned into `shards` shards.
+fn fit_sharded(
+    patterns: &[String],
+    shards: usize,
+    cfg: &PipelineConfig,
+    opts: &StreamOpts,
+) -> StreamFit {
+    let plan = ShardPlanner::new(shards, 37, ShardFormat::Libsvm).plan(patterns).unwrap();
+    let mut readers = ShardPlanner::open(&plan).unwrap();
+    let mut refs: Vec<&mut (dyn ChunkReader + Send)> =
+        readers.iter_mut().map(|r| r.as_mut()).collect();
+    fit_streaming_sharded(&Env::new(cfg.clone()), &mut refs, opts).unwrap()
+}
+
+fn assert_fits_equal(got: &StreamFit, want: &StreamFit, ctx: &str) {
+    assert_eq!(got.n, want.n, "{ctx}: row count");
+    assert_eq!(got.d, want.d, "{ctx}: dimensionality");
+    assert_eq!(got.k_true, want.k_true, "{ctx}: class census");
+    assert_eq!(got.y, want.y, "{ctx}: ground-truth labels");
+    assert_eq!(got.output.labels, want.output.labels, "{ctx}: training labels");
+    assert_eq!(
+        got.model.to_bytes(),
+        want.model.to_bytes(),
+        "{ctx}: model bytes must be identical"
+    );
+}
+
+#[test]
+fn single_file_byte_range_shards_are_bit_identical_for_any_k() {
+    let ds = synth::gaussian_blobs(240, 3, 3, 8.0, 5);
+    let bytes = to_libsvm(&ds);
+    let dir = tmpdir("single");
+    let path = dir.join("data.libsvm").to_str().unwrap().to_string();
+    std::fs::write(&path, &bytes).unwrap();
+
+    let cfg = test_cfg(3, 32, 0.6);
+    let opts = StreamOpts { k: Some(3), block_rows: 64, ..StreamOpts::default() };
+    let want = fit_sequential(&bytes, &cfg, &opts);
+
+    for k in [1usize, 2, 3, 8] {
+        let got = fit_sharded(&[path.clone()], k, &cfg, &opts);
+        assert_fits_equal(&got, &want, &format!("shards={k}"));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn multi_file_and_glob_datasets_are_bit_identical_for_any_k() {
+    // three files of uneven size — shard plans will chain and split
+    // across file boundaries differently at each K
+    let dir = tmpdir("multi");
+    let mut all = Vec::new();
+    for (f, n) in [(0usize, 110usize), (1, 40), (2, 90)] {
+        let ds = synth::gaussian_blobs(n, 3, 3, 8.0, 5 + f as u64);
+        let bytes = to_libsvm(&ds);
+        all.extend_from_slice(&bytes);
+        std::fs::write(dir.join(format!("part-{f}.libsvm")), &bytes).unwrap();
+    }
+
+    let cfg = test_cfg(3, 32, 0.6);
+    let opts = StreamOpts { k: Some(3), block_rows: 64, ..StreamOpts::default() };
+    let want = fit_sequential(&all, &cfg, &opts);
+
+    let paths: Vec<String> = (0..3)
+        .map(|f| dir.join(format!("part-{f}.libsvm")).to_str().unwrap().to_string())
+        .collect();
+    for k in [2usize, 3, 8] {
+        let got = fit_sharded(&paths, k, &cfg, &opts);
+        assert_fits_equal(&got, &want, &format!("multi-file shards={k}"));
+    }
+    // the same dataset named by a glob (expanded in sorted order)
+    let glob = format!("{}/part-?.libsvm", dir.to_str().unwrap());
+    let got = fit_sharded(&[glob], 3, &cfg, &opts);
+    assert_fits_equal(&got, &want, "glob shards=3");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn zero_row_shards_and_empty_files_are_noops() {
+    // 5 rows over 8 shards: most byte-range shards hold 0 or 1 rows
+    let ds = synth::gaussian_blobs(5, 2, 2, 8.0, 9);
+    let bytes = to_libsvm(&ds);
+    let dir = tmpdir("tiny");
+    let path = dir.join("tiny.libsvm").to_str().unwrap().to_string();
+    std::fs::write(&path, &bytes).unwrap();
+
+    let cfg = test_cfg(2, 16, 0.6);
+    let opts = StreamOpts { k: Some(2), block_rows: 8, ..StreamOpts::default() };
+    let want = fit_sequential(&bytes, &cfg, &opts);
+    let got = fit_sharded(&[path.clone()], 8, &cfg, &opts);
+    assert_fits_equal(&got, &want, "tiny file, shards=8");
+
+    // a multi-file dataset with an empty member file
+    let empty = dir.join("empty.libsvm").to_str().unwrap().to_string();
+    std::fs::write(&empty, b"").unwrap();
+    let got = fit_sharded(&[empty, path], 3, &cfg, &opts);
+    assert_fits_equal(&got, &want, "empty member file, shards=3");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn disjoint_and_overlapping_bin_populations_merge_exactly() {
+    // first half of the file lives in one corner of the cube, the second
+    // half far away: front/back byte-range shards see *disjoint* bin
+    // sets. Then a file whose second half repeats the first: every shard
+    // sees the *same* bins. Both extremes must merge to the sequential
+    // codebook bit-exactly.
+    let ds = synth::gaussian_blobs(120, 3, 2, 40.0, 7);
+    let disjoint = to_libsvm(&ds);
+    let mut overlapping = to_libsvm(&ds);
+    overlapping.extend_from_slice(&to_libsvm(&ds));
+
+    let dir = tmpdir("bins");
+    let cfg = test_cfg(2, 32, 0.6);
+    let opts = StreamOpts { k: Some(2), block_rows: 32, ..StreamOpts::default() };
+    for (tag, bytes) in [("disjoint", &disjoint), ("overlapping", &overlapping)] {
+        let path = dir.join(format!("{tag}.libsvm")).to_str().unwrap().to_string();
+        std::fs::write(&path, bytes).unwrap();
+        let want = fit_sequential(bytes, &cfg, &opts);
+        for k in [2usize, 3, 8] {
+            let got = fit_sharded(&[path.clone()], k, &cfg, &opts);
+            assert_fits_equal(&got, &want, &format!("{tag} shards={k}"));
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn quarantined_rows_across_shards_match_the_sequential_report() {
+    let ds = synth::gaussian_blobs(360, 3, 3, 8.0, 13);
+    let clean = to_libsvm(&ds);
+    let (dirty, replaced) = corrupt_libsvm_text(&clean, fault_seed(), 25);
+    assert!(!replaced.is_empty(), "the sweep needs at least one corrupt row");
+    let dir = tmpdir("faults");
+    let path = dir.join("dirty.libsvm").to_str().unwrap().to_string();
+    std::fs::write(&path, &dirty).unwrap();
+
+    let cfg = test_cfg(3, 32, 0.6);
+    let opts = StreamOpts {
+        k: Some(3),
+        block_rows: 64,
+        policy: IngestPolicy {
+            on_bad_record: OnBadRecord::Quarantine,
+            sample_cap: 4096, // keep every offender so the reports compare exactly
+            ..IngestPolicy::default()
+        },
+        ..StreamOpts::default()
+    };
+    let want = fit_sequential(&dirty, &cfg, &opts);
+    assert!(want.quarantine.skipped() > 0, "corruption must actually quarantine rows");
+
+    for k in [2usize, 3, 8] {
+        let got = fit_sharded(&[path.clone()], k, &cfg, &opts);
+        assert_fits_equal(&got, &want, &format!("quarantine shards={k}"));
+        // exact per-reason counts survive the merge
+        assert_eq!(got.quarantine.malformed, want.quarantine.malformed, "shards={k}");
+        assert_eq!(got.quarantine.non_finite, want.quarantine.non_finite, "shards={k}");
+        assert_eq!(got.quarantine.samples.len(), want.quarantine.samples.len(), "shards={k}");
+        // samples are located (absolute byte offsets survive byte-range
+        // windows) and deterministically ordered: the merged order is
+        // shard-index first, line order within a shard — i.e. byte order
+        // overall, since shards are contiguous byte ranges
+        let got_bytes: Vec<u64> = got.quarantine.samples.iter().map(|s| s.byte).collect();
+        let mut want_bytes: Vec<u64> = want.quarantine.samples.iter().map(|s| s.byte).collect();
+        want_bytes.sort_unstable();
+        assert_eq!(got_bytes, want_bytes, "shards={k}: sample order");
+        // determinism: a second identical run reproduces the report
+        let again = fit_sharded(&[path.clone()], k, &cfg, &opts);
+        let again_bytes: Vec<u64> = again.quarantine.samples.iter().map(|s| s.byte).collect();
+        assert_eq!(got_bytes, again_bytes, "shards={k}: report must be deterministic");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn per_shard_transient_faults_retry_without_changing_the_fit() {
+    let ds = synth::gaussian_blobs(240, 3, 3, 8.0, 5);
+    let bytes = to_libsvm(&ds);
+    let dir = tmpdir("transient");
+    let path = dir.join("data.libsvm").to_str().unwrap().to_string();
+    std::fs::write(&path, &bytes).unwrap();
+
+    let cfg = test_cfg(3, 32, 0.6);
+    let opts = StreamOpts {
+        k: Some(3),
+        block_rows: 64,
+        policy: IngestPolicy { retry_backoff_ms: 0, ..IngestPolicy::default() },
+        ..StreamOpts::default()
+    };
+    let want = fit_sharded(&[path.clone()], 3, &cfg, &opts);
+
+    // same plan, but every shard reader wrapped in a transient-fault
+    // injector: each next_chunk call site fails once, then succeeds
+    let plan = ShardPlanner::new(3, 37, ShardFormat::Libsvm).plan(&[path.clone()]).unwrap();
+    let mut readers = ShardPlanner::open(&plan).unwrap();
+    let fault = FaultPlan {
+        seed: fault_seed(),
+        transient_permille: 1000,
+        ..FaultPlan::default()
+    };
+    let mut faulty: Vec<FaultyReader<'_>> =
+        readers.iter_mut().map(|r| FaultyReader::new(r.as_mut(), fault)).collect();
+    let mut refs: Vec<&mut (dyn ChunkReader + Send)> =
+        faulty.iter_mut().map(|r| r as &mut (dyn ChunkReader + Send)).collect();
+    let got = fit_streaming_sharded(&Env::new(cfg.clone()), &mut refs, &opts).unwrap();
+
+    assert_fits_equal(&got, &want, "transient faults");
+    assert!(got.quarantine.retries > 0, "retries must be counted in the merged report");
+    assert_eq!(got.quarantine.skipped(), 0, "transient errors must not quarantine rows");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sharded_checkpointing_is_a_typed_config_refusal() {
+    let ds = synth::gaussian_blobs(40, 2, 2, 8.0, 3);
+    let bytes = to_libsvm(&ds);
+    let dir = tmpdir("ckpt");
+    let path = dir.join("data.libsvm").to_str().unwrap().to_string();
+    std::fs::write(&path, &bytes).unwrap();
+    let ckpt_dir = dir.join("ckpt").to_str().unwrap().to_string();
+
+    let cfg = test_cfg(2, 16, 0.6);
+    let opts = StreamOpts {
+        k: Some(2),
+        block_rows: 8,
+        checkpoint: Some(CheckpointCfg::new(&ckpt_dir)),
+        ..StreamOpts::default()
+    };
+    let plan = ShardPlanner::new(2, 37, ShardFormat::Libsvm).plan(&[path.clone()]).unwrap();
+    let mut readers = ShardPlanner::open(&plan).unwrap();
+    let mut refs: Vec<&mut (dyn ChunkReader + Send)> =
+        readers.iter_mut().map(|r| r.as_mut()).collect();
+    let err = fit_streaming_sharded(&Env::new(cfg.clone()), &mut refs, &opts).unwrap_err();
+    assert!(matches!(err, scrb::error::ScrbError::Config(_)), "{err}");
+    assert!(err.to_string().contains("--shards"), "{err}");
+
+    // one shard delegates to the sequential path, where checkpointing is
+    // supported — the same opts must succeed
+    let plan = ShardPlanner::new(1, 37, ShardFormat::Libsvm).plan(&[path.clone()]).unwrap();
+    let mut readers = ShardPlanner::open(&plan).unwrap();
+    let mut refs: Vec<&mut (dyn ChunkReader + Send)> =
+        readers.iter_mut().map(|r| r.as_mut()).collect();
+    let fit = fit_streaming_sharded(&Env::new(cfg.clone()), &mut refs, &opts).unwrap();
+    assert_eq!(fit.n, 40);
+    std::fs::remove_dir_all(&dir).ok();
+}
