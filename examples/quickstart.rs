@@ -10,7 +10,7 @@
 //! `examples/serve.rs` for the fit-once/predict-many serving shape.
 
 use scrb::cluster::{Env, MethodKind};
-use scrb::config::{Engine, Kernel, PipelineConfig};
+use scrb::config::{Engine, Kernel, PipelineConfig, Solver};
 use scrb::data::synth;
 use scrb::metrics::all_metrics;
 use scrb::model::{FittedModel, ScRbModel};
@@ -73,7 +73,32 @@ fn main() {
     }
     println!("\nSC_RB separates the moons; K-means cannot — the paper's motivating contrast.");
 
-    // 5. a k-sweep with artifact reuse: stages emit fingerprinted,
+    // 5. the same fit with the compressive solver (`--solver
+    // compressive`): instead of extracting Ritz pairs with Davidson or
+    // Lanczos, Chebyshev-filter O(log n) random signals through the RB
+    // gram operator and cluster a row sample of the filtered signals.
+    // Three knobs trade accuracy for gram products: `cheb_order` (filter
+    // sharpness — each order is one fused gram product over the signal
+    // block), `cheb_signals` (embedding redundancy η), and `cheb_sample`
+    // (rows K-means sees before labels interpolate back over the graph).
+    // Prefer it over Lanczos when K is large or the spectrum is clustered
+    // near λ_K: filtering costs O(p·η) matvecs no matter how slowly Ritz
+    // pairs would converge. For small K with a clean spectral gap the
+    // eigensolvers stay cheaper and give tighter singular triplets.
+    let cfg_csc = cfg
+        .rebuild(|b| b.solver(Solver::Compressive).cheb_order(30).cheb_signals(8))
+        .expect("compressive config");
+    let env_csc = Env::with_xla(cfg_csc.clone(), xla.as_ref());
+    let fitted = MethodKind::ScRb.fit(&env_csc, &ds.x).expect("compressive fit failed");
+    let m = all_metrics(&fitted.output.labels, &ds.y);
+    println!(
+        "compressive SC_RB (p=30, η=8): acc={:.3} nmi={:.3}   [{}]",
+        m.accuracy,
+        m.nmi,
+        fitted.output.timer.summary()
+    );
+
+    // 6. a k-sweep with artifact reuse: stages emit fingerprinted,
     // cacheable artifacts, so with the embedding width pinned
     // (`embed_dim`) the expensive upstream stages — RB featurization and
     // the iterative SVD — run once and every further k only re-runs
@@ -107,7 +132,7 @@ fn main() {
         cache.misses
     );
 
-    // 6. the same fit, out-of-core: the featurize stage reads a chunked
+    // 7. the same fit, out-of-core: the featurize stage reads a chunked
     // stream (stats pass, then block-wise RB featurization) with resident
     // input memory bounded by chunk_rows × d; the embed → cluster →
     // assemble tail is the identical driver the in-memory fit runs, so a
@@ -145,7 +170,7 @@ fn main() {
         m.accuracy, m.nmi
     );
 
-    // 7. the same fit, sharded: split the input into K shards (byte
+    // 8. the same fit, sharded: split the input into K shards (byte
     // ranges of one file, or whole files of a multi-file dataset), run
     // the two featurization passes on K worker threads, and merge the
     // shard-local codebooks in canonical first-seen order. The merged
@@ -177,7 +202,7 @@ fn main() {
     println!("sharded SC_RB over 4 shards: model bytes identical to the sequential fit");
     let _ = std::fs::remove_dir_all(&shard_dir);
 
-    // 8. the same fit, fault-tolerant: dirty inputs are the norm at the
+    // 9. the same fit, fault-tolerant: dirty inputs are the norm at the
     // scale streaming targets. Under `--on-bad-record quarantine` the fit
     // skips malformed/non-finite records deterministically in both passes
     // (exact counts, capped located samples) and equals a fit on the
@@ -202,7 +227,7 @@ fn main() {
         quarantined.quarantine.summary()
     );
 
-    // 9. clustering-as-a-service: persist the streamed model, serve it
+    // 10. clustering-as-a-service: persist the streamed model, serve it
     // over TCP (micro-batching, deadlines, load shedding), label points
     // through the wire, hot-swap to the quarantined re-fit without
     // dropping in-flight requests, and drain. In production the daemon

@@ -1,0 +1,135 @@
+//! Solver shoot-out (ISSUE 9 acceptance): time-to-embedding of the three
+//! SVD solvers — Davidson, Lanczos, and the compressive Chebyshev filter
+//! at orders p ∈ {10, 25, 50} — on the same degree-normalized RB operator
+//! at pendigits scale, plus the end-to-end SC_RB NMI each solver reaches
+//! through the full pipeline.
+//!
+//!     cargo bench --bench bench_solvers
+//!     SCRB_BENCH_SMOKE=1 cargo bench --bench bench_solvers   # CI smoke
+//!
+//! Results land in `BENCH_solvers.json` (override with SCRB_BENCH_JSON):
+//! `metrics.compressive_best_embed_secs` vs `metrics.lanczos_embed_secs`
+//! is the acceptance pair — at full scale some swept order must reach an
+//! embedding at least as fast as Lanczos (`compressive_beats_lanczos`).
+//! All series share one warm `SolverWorkspace`, so the numbers are the
+//! steady-state solve cost a sweep driver sees, not first-call
+//! provisioning.
+
+use scrb::cluster::{Env, MethodKind};
+use scrb::config::{Engine, Kernel, PipelineConfig, Solver};
+use scrb::data::synth;
+use scrb::eigen::{svds_ws, SolverWorkspace, SvdsOpts};
+use scrb::metrics::all_metrics;
+use scrb::rb::rb_features;
+use scrb::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let smoke = std::env::var("SCRB_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let (scale, r) = if smoke { (16, 64) } else { (1, 256) };
+
+    // pendigits-scale workload: n = 10992/scale, d = 16, 10 classes
+    let ds = synth::paper_benchmark("pendigits", scale, 42);
+    let (n, k) = (ds.n(), ds.k);
+    println!(
+        "== solver bench (threads={}, n={n}, R={r}, k={k}{}) ==",
+        scrb::util::threads::num_threads(),
+        if smoke { ", SMOKE" } else { "" }
+    );
+
+    // ---- time-to-embedding on the identical operator: featurize once,
+    // degree-normalize, and hand every solver the same Ẑ through the
+    // shared `svds_ws` entry point (the SC_RB embed stage's hot call).
+    let rb = rb_features(&ds.x, r, 0.25, 7);
+    let mut zhat = rb.z.clone();
+    let zdeg = zhat.implicit_degrees();
+    zhat.normalize_by_degree(&zdeg);
+
+    let mut ws = SolverWorkspace::new();
+    let mut series: Vec<(String, Solver, usize)> = vec![
+        ("davidson".into(), Solver::Davidson, 0),
+        ("lanczos".into(), Solver::Lanczos, 0),
+    ];
+    for p in [10usize, 25, 50] {
+        series.push((format!("compressive p={p}"), Solver::Compressive, p));
+    }
+    let mut embed_secs: Vec<(String, f64)> = Vec::new();
+    for (name, solver, order) in &series {
+        let mut opts = SvdsOpts::new(k, *solver);
+        if *order > 0 {
+            opts.cheb_order = *order;
+        }
+        svds_ws(&zhat, &opts, 42, &mut ws); // warm the workspace
+        let stats = b.bench(&format!("{name:<16} embed k={k}"), || {
+            svds_ws(&zhat, &opts, 42, &mut ws)
+        });
+        let med = stats.median.as_secs_f64();
+        let matvecs = svds_ws(&zhat, &opts, 42, &mut ws).stats.matvecs;
+        println!("    {name:<16} {:.1} ms/solve, {matvecs} matvecs", med * 1e3);
+        embed_secs.push((name.clone(), med));
+    }
+    let lanczos_secs = embed_secs[1].1;
+    let best_csc = embed_secs[2..]
+        .iter()
+        .min_by(|a, c| a.1.total_cmp(&c.1))
+        .expect("compressive series present");
+    println!(
+        "    best compressive ({}, {:.1} ms) vs lanczos ({:.1} ms)",
+        best_csc.0,
+        best_csc.1 * 1e3,
+        lanczos_secs * 1e3
+    );
+    if !smoke && best_csc.1 > lanczos_secs {
+        println!("    !! no swept order reached an embedding as fast as Lanczos");
+    }
+
+    // ---- end-to-end NMI through the full pipeline: same data, same
+    // seed, only `--solver` changes (compressive at the default p=25).
+    let base = PipelineConfig::builder()
+        .k(k)
+        .r(r)
+        .kernel(Kernel::Laplacian { sigma: 0.25 })
+        .engine(Engine::Native)
+        .kmeans_replicates(2)
+        .seed(42)
+        .build();
+    for solver in Solver::ALL {
+        let cfg = base.rebuild(|bb| bb.solver(solver)).expect("solver point");
+        let env = Env::new(cfg);
+        let t0 = std::time::Instant::now();
+        let fitted = MethodKind::ScRb.fit(&env, &ds.x).expect("fit failed");
+        let fit_secs = t0.elapsed().as_secs_f64();
+        let m = all_metrics(&fitted.output.labels, &ds.y);
+        println!(
+            "    {:<12} end-to-end: nmi={:.3} acc={:.3} in {:.2}s",
+            solver.name(),
+            m.nmi,
+            m.accuracy,
+            fit_secs
+        );
+        b.metric(&format!("{}_nmi", solver.name()), m.nmi);
+        b.metric(&format!("{}_fit_secs", solver.name()), fit_secs);
+    }
+
+    b.metric("solver_n", n as f64);
+    b.metric("solver_r", r as f64);
+    b.metric("davidson_embed_secs", embed_secs[0].1);
+    b.metric("lanczos_embed_secs", lanczos_secs);
+    for (name, secs) in &embed_secs[2..] {
+        let p: String = name.chars().filter(|c| c.is_ascii_digit()).collect();
+        b.metric(&format!("compressive_p{p}_embed_secs"), *secs);
+    }
+    b.metric("compressive_best_embed_secs", best_csc.1);
+    b.metric(
+        "compressive_beats_lanczos",
+        if best_csc.1 <= lanczos_secs { 1.0 } else { 0.0 },
+    );
+
+    println!("\n{}", b.report());
+    let json_path =
+        std::env::var("SCRB_BENCH_JSON").unwrap_or_else(|_| "BENCH_solvers.json".into());
+    match b.write_json(&json_path) {
+        Ok(()) => println!("wrote {json_path}"),
+        Err(e) => eprintln!("[bench json not written: {e}]"),
+    }
+}

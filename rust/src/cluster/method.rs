@@ -174,6 +174,8 @@ impl MethodKind {
                 row_normalize,
                 scale_scores,
                 symmetric,
+                cheb_order: cfg.cheb_order,
+                cheb_signals: cfg.cheb_signals,
             })
         };
         let kmeans = || Box::new(KmeansCluster::from_cfg(cfg, cfg.k));

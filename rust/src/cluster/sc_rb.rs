@@ -27,14 +27,16 @@
 //! **bit-exactly** — not just within tolerance.
 
 use super::method::Env;
-use crate::config::PipelineConfig;
-use crate::eigen::{svds_ws, SolverWorkspace, SvdResult, SvdsOpts};
+use crate::config::{PipelineConfig, Solver};
+use crate::eigen::compressive::{compressive_parts_ws, sample_rows, tikhonov_interpolate};
+use crate::eigen::{svds_ws, CompressiveOpts, SolverWorkspace, SvdOp, SvdResult, SvdsOpts};
 use crate::error::ScrbError;
+use crate::kmeans::kmeans;
 use crate::linalg::Mat;
 use crate::model::FitResult;
 use crate::pipeline::{
-    Assemble, DataSource, Embed, FeatureArtifact, FeatureMatrix, Featurize, Fingerprint,
-    KmeansCluster, Pipeline,
+    Assemble, DataSource, Embed, EmbedArtifact, FeatureArtifact, FeatureMatrix, Featurize,
+    Fingerprint, KmeansCluster, Pipeline,
 };
 use crate::rb::{rb_features_with_codebook, RbFeatures};
 use crate::sparse::EllRb;
@@ -351,6 +353,152 @@ impl Embed for RbEmbed {
     }
 }
 
+/// SC_RB's compressive embed stage — full Compressive Spectral Clustering
+/// (`--solver compressive`) behind the same artifact contract as
+/// [`RbEmbed`]: Chebyshev-filter η random signals through the fused gram
+/// kernel, k-means a uniformly sampled row subset of the filtered
+/// signals, Tikhonov-interpolate the sample labels back to all N rows
+/// (a block-CG solve on the same kernel), then fold the cluster-score
+/// basis into the serving projection `P·C` so the clustering embedding
+/// is computed through the **serving gather path** — train-set `predict`
+/// reproduces fit labels bit-exactly, just like the eigensolver path.
+/// Works unchanged on both RB substrates (monolithic [`EllRb`] and
+/// streamed `BlockEllRb`), whose kernels are bit-identical.
+pub struct FilterEmbed {
+    /// Singular triplets extracted from the filtered span (embedding
+    /// basis width; ≥ `kc`).
+    pub k: usize,
+    /// Cluster count the sample k-means / interpolation works with (the
+    /// final embedding has `kc` columns).
+    pub kc: usize,
+    /// Number of RB grids R (folds into the serving projection).
+    pub r: usize,
+    /// Chebyshev filter order p.
+    pub order: usize,
+    /// Random-signal count η; `None` = O(log n) auto.
+    pub signals: Option<usize>,
+    /// Sampled-row count m; `None` = max(100, 4·kc·ln n).
+    pub sample: Option<usize>,
+    /// Filter/CG tolerance.
+    pub tol: f64,
+    /// Matvec budget (reported through `stats.converged`).
+    pub max_matvecs: usize,
+    /// Full solver seed (method seed ⊕ the SC_RB salt).
+    pub seed: u64,
+}
+
+impl FilterEmbed {
+    /// The substrate-generic body: `a` is the solver-operator view and
+    /// `blocks`/`row_offsets` its serving-gather view (one block for the
+    /// monolithic substrate, many for the streamed one).
+    fn embed_on<O: SvdOp + ?Sized>(
+        &self,
+        env: &Env,
+        a: &O,
+        blocks: &[EllRb],
+        row_offsets: &[usize],
+        fp: u64,
+    ) -> Result<EmbedArtifact, ScrbError> {
+        let mut timer = StageTimer::new();
+        let mut ws = SolverWorkspace::new();
+        let mut opts = CompressiveOpts::new(self.k);
+        opts.order = self.order;
+        opts.signals = self.signals;
+        opts.tol = self.tol;
+        opts.max_matvecs = self.max_matvecs;
+
+        // Spectral interval + Chebyshev filter + Rayleigh–Ritz triplets.
+        let parts = timer.time("svd", || compressive_parts_ws(a, &opts, self.seed, &mut ws));
+        let lmax = parts.lambda_max;
+        let mut filtered = parts.filtered;
+        let SvdResult { s, u, v, mut stats } = parts.svd;
+        let n = filtered.rows;
+        let kc = self.kc.max(1);
+
+        // CSC steps 3–4: cluster a uniform row sample of the (row
+        // normalized) filtered signals, then spread the sample labels to
+        // every row by the Tikhonov-regularized solve on the same kernel.
+        let scores = timer.time("interpolate", || {
+            filtered.normalize_rows();
+            let auto = (4.0 * kc as f64 * (n.max(2) as f64).ln()).ceil() as usize;
+            let m = self.sample.unwrap_or_else(|| auto.max(100)).clamp(kc.min(n), n);
+            // take the index scratch out of the workspace so the
+            // interpolation can borrow the workspace mutably alongside it
+            let mut idx = std::mem::take(&mut ws.cb_sample_idx);
+            sample_rows(n, m, self.seed ^ 0x5a17, &mut idx);
+            let xs = filtered.select_rows(&idx);
+            let mut kopts = env.kmeans_opts(kc);
+            kopts.seed = self.seed ^ 0x17aa;
+            let engine = env.assign_engine();
+            let km = kmeans(&xs, &kopts, &*engine);
+            let (x, cg_mv) = tikhonov_interpolate(
+                a,
+                &idx,
+                &km.labels,
+                kc,
+                lmax,
+                0.1,
+                self.tol.max(1e-8),
+                20,
+                &mut ws,
+            );
+            ws.cb_sample_idx = idx;
+            stats.matvecs += cg_mv;
+            x
+        });
+
+        // Serving-consistency fold: C = Uᵀ·X expresses the interpolated
+        // cluster scores in the Ritz basis, so `P·C` is a D×kc serving
+        // projection and the training embedding can be computed through
+        // the identical gather-sum + row normalization the model performs
+        // at predict time. Directions dropped by `fold_projection`'s σ
+        // threshold vanish automatically (their P columns are zero).
+        let proj = timer.time("projection", || {
+            let c = u.t_matmul(&scores);
+            fold_projection(v, &s, self.r).matmul(&c)
+        });
+        let u_emb = timer.time("embed", || gather_embedding(blocks, row_offsets, &proj));
+        Ok(EmbedArtifact {
+            fingerprint: fp,
+            s,
+            u: std::sync::Arc::new(u_emb),
+            proj: Some(proj),
+            stats: Some(stats),
+            timer,
+        })
+    }
+}
+
+impl Embed for FilterEmbed {
+    fn fingerprint(&self, upstream: u64) -> u64 {
+        Fingerprint::new("embed/filter")
+            .u64(upstream)
+            .usize(self.k)
+            .usize(self.kc)
+            .usize(self.r)
+            .usize(self.order)
+            .usize(self.signals.unwrap_or(0))
+            .usize(self.sample.unwrap_or(0))
+            .f64(self.tol)
+            .usize(self.max_matvecs)
+            .u64(self.seed)
+            .finish()
+    }
+
+    fn run(&self, env: &Env, feat: &FeatureArtifact, fp: u64) -> Result<EmbedArtifact, ScrbError> {
+        match &feat.z {
+            FeatureMatrix::EllRb(z0) => {
+                let offsets = [0usize, z0.rows];
+                self.embed_on(env, z0, std::slice::from_ref(z0), &offsets, fp)
+            }
+            FeatureMatrix::Block(z0) => self.embed_on(env, z0, &z0.blocks, &z0.row_offsets, fp),
+            _ => Err(ScrbError::unsupported(
+                "the compressive embed stage needs an RB substrate (EllRb or BlockEllRb)",
+            )),
+        }
+    }
+}
+
 /// Fold V, Σ⁻¹, and the shared RB value 1/√R into the serving projection
 /// `P = V·Σ⁻¹/√R` (D×K) — embedding a point becomes a plain gather-sum
 /// over its bins. Near-zero σ directions are dropped (scale 0) rather
@@ -412,18 +560,34 @@ fn gather_embedding(blocks: &[EllRb], row_offsets: &[usize], proj: &Mat) -> Mat 
 /// K and its huge-N batch switch; [`crate::cluster::MethodKind::pipeline`]
 /// uses `cfg.k` and full-batch.
 pub(crate) fn scrb_stages(cfg: &PipelineConfig, k: usize, batch: Option<usize>) -> Pipeline {
-    Pipeline::new(
-        Box::new(RbFeaturize { r: cfg.r, sigma: cfg.kernel.sigma(), seed: cfg.seed }),
+    // never narrower than K: a streamed fit derives K from the label
+    // census at run time, which config validation cannot see
+    let edim = cfg.embed_dim.unwrap_or(k).max(k);
+    let embed: Box<dyn Embed> = if cfg.solver == Solver::Compressive {
+        Box::new(FilterEmbed {
+            k: edim,
+            kc: k,
+            r: cfg.r,
+            order: cfg.cheb_order,
+            signals: cfg.cheb_signals,
+            sample: cfg.cheb_sample,
+            tol: cfg.svd_tol,
+            max_matvecs: cfg.svd_max_iters,
+            seed: cfg.seed ^ 0x5bd5,
+        })
+    } else {
         Box::new(RbEmbed {
-            // never narrower than K: a streamed fit derives K from the
-            // label census at run time, which config validation cannot see
-            k: cfg.embed_dim.unwrap_or(k).max(k),
+            k: edim,
             r: cfg.r,
             solver: cfg.solver,
             tol: cfg.svd_tol,
             max_matvecs: cfg.svd_max_iters,
             seed: cfg.seed ^ 0x5bd5,
-        }),
+        })
+    };
+    Pipeline::new(
+        Box::new(RbFeaturize { r: cfg.r, sigma: cfg.kernel.sigma(), seed: cfg.seed }),
+        embed,
         Box::new(KmeansCluster::from_cfg(cfg, k).with_batch(batch).with_relabel()),
         Assemble::ScRb,
     )
@@ -497,9 +661,9 @@ mod tests {
     }
 
     #[test]
-    fn works_with_both_solvers() {
+    fn works_with_every_solver() {
         let ds = synth::gaussian_blobs(200, 3, 2, 8.0, 7);
-        for solver in [crate::config::Solver::Davidson, crate::config::Solver::Lanczos] {
+        for solver in crate::config::Solver::ALL {
             let cfg = PipelineConfig::builder()
                 .k(2)
                 .r(64)
@@ -511,6 +675,26 @@ mod tests {
             let acc = accuracy(&out.labels, &ds.y);
             assert!(acc > 0.9, "{solver:?} accuracy {acc}");
         }
+    }
+
+    #[test]
+    fn compressive_train_predict_reproduces_fit_labels() {
+        // the serving-consistency contract must hold for the filter path
+        // too: the embed stage computes the training embedding through the
+        // same gather-sum the model performs at predict time
+        let ds = synth::gaussian_blobs(150, 3, 3, 8.0, 11);
+        let cfg = PipelineConfig::builder()
+            .k(3)
+            .r(32)
+            .solver(crate::config::Solver::Compressive)
+            .cheb_order(30)
+            .kernel(crate::config::Kernel::Laplacian { sigma: 0.6 })
+            .kmeans_replicates(2)
+            .build();
+        let fitted = ScRb::new(cfg).fit(&ds.x).unwrap();
+        use crate::model::FittedModel;
+        let predicted = fitted.model.predict(&ds.x).unwrap();
+        assert_eq!(predicted, fitted.output.labels, "train predict == fit labels, bit-exact");
     }
 
     #[test]

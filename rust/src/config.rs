@@ -66,14 +66,29 @@ pub enum Solver {
     Davidson,
     /// Matlab-`svds` analogue: restarted Lanczos bidiagonalization.
     Lanczos,
+    /// Compressive spectral clustering (Tremblay et al.): Chebyshev
+    /// low-pass filtering of random signals instead of eigendecomposition,
+    /// tuned by the `cheb_*` knobs.
+    Compressive,
 }
 
 impl Solver {
+    /// Every solver, in presentation order. `parse` derives its error
+    /// message from this list so it can never go stale.
+    pub const ALL: [Solver; 3] = [Solver::Davidson, Solver::Lanczos, Solver::Compressive];
+
     pub fn parse(s: &str) -> Result<Solver, ScrbError> {
         match s {
             "davidson" | "primme" | "gd+k" => Ok(Solver::Davidson),
             "lanczos" | "svds" | "lbd" => Ok(Solver::Lanczos),
-            other => Err(ScrbError::config(format!("unknown solver '{other}' (davidson|lanczos)"))),
+            "compressive" | "csc" | "cheb" => Ok(Solver::Compressive),
+            other => {
+                let names: Vec<&str> = Solver::ALL.iter().map(|s| s.name()).collect();
+                Err(ScrbError::config(format!(
+                    "unknown solver '{other}' ({})",
+                    names.join("|")
+                )))
+            }
         }
     }
 
@@ -81,6 +96,7 @@ impl Solver {
         match self {
             Solver::Davidson => "davidson",
             Solver::Lanczos => "lanczos",
+            Solver::Compressive => "compressive",
         }
     }
 }
@@ -150,6 +166,16 @@ pub struct PipelineConfig {
     /// Sweep drivers pin this so a k-sweep reuses one embedding artifact
     /// across every grid point (see [`crate::pipeline`]).
     pub embed_dim: Option<usize>,
+    /// Chebyshev filter order p for `--solver compressive`. Higher orders
+    /// sharpen the ideal-low-pass approximation (better cluster recovery)
+    /// at one fused gram product per order.
+    pub cheb_order: usize,
+    /// Number of random Gaussian signals η filtered by the compressive
+    /// solver; `None` = auto, O(log n) but at least the embedding width.
+    pub cheb_signals: Option<usize>,
+    /// Rows sampled for the compressive solver's k-means + label
+    /// interpolation stage; `None` = auto, O(k·log n).
+    pub cheb_sample: Option<usize>,
     /// Streaming-ingestion section; `Some` iff the fit reads a chunked
     /// source. Validation then additionally requires an explicit σ (no
     /// data matrix exists to run bandwidth selection on).
@@ -177,6 +203,9 @@ impl Default for PipelineConfig {
             svd_tol: 1e-5,
             svd_max_iters: 3000,
             embed_dim: None,
+            cheb_order: 25,
+            cheb_signals: None,
+            cheb_sample: None,
             stream: None,
             sigma_explicit: false,
             artifacts_dir: "artifacts".to_string(),
@@ -233,6 +262,27 @@ impl PipelineConfig {
                 return Err(ScrbError::config(format!(
                     "embed_dim must be >= k (clustering {k} clusters needs at least a \
                      {k}-dimensional embedding, got embed_dim={dim})",
+                    k = self.k
+                )));
+            }
+        }
+        if self.cheb_order < 2 {
+            return Err(ScrbError::config(
+                "cheb_order must be >= 2 (Chebyshev filter order for --solver compressive)",
+            ));
+        }
+        if let Some(eta) = self.cheb_signals {
+            if eta < 1 {
+                return Err(ScrbError::config(
+                    "cheb_signals must be >= 1 (random signals filtered by --solver compressive)",
+                ));
+            }
+        }
+        if let Some(m) = self.cheb_sample {
+            if m < self.k {
+                return Err(ScrbError::config(format!(
+                    "cheb_sample must be >= k (k-means on {k} clusters needs at least {k} \
+                     sampled rows, got cheb_sample={m})",
                     k = self.k
                 )));
             }
@@ -299,6 +349,9 @@ impl PipelineConfig {
             }
             "kernel" => self.kernel = Kernel::parse(val, self.kernel.sigma())?,
             "embed_dim" => self.embed_dim = Some(val.parse().map_err(|_| bad(key, val))?),
+            "cheb_order" => self.cheb_order = val.parse().map_err(|_| bad(key, val))?,
+            "cheb_signals" => self.cheb_signals = Some(val.parse().map_err(|_| bad(key, val))?),
+            "cheb_sample" => self.cheb_sample = Some(val.parse().map_err(|_| bad(key, val))?),
             "seed" => self.seed = val.parse().map_err(|_| bad(key, val))?,
             "solver" => self.solver = Solver::parse(val)?,
             "engine" => self.engine = Engine::parse(val)?,
@@ -334,6 +387,9 @@ impl PipelineConfig {
             "svd_tol",
             "svd_max_iters",
             "embed_dim",
+            "cheb_order",
+            "cheb_signals",
+            "cheb_sample",
             "artifacts_dir",
         ] {
             if let Some(v) = args.get(key) {
@@ -438,6 +494,24 @@ impl PipelineConfigBuilder {
     /// k-sweep so every grid point reuses one embedding artifact.
     pub fn embed_dim(mut self, dim: usize) -> Self {
         self.cfg.embed_dim = Some(dim);
+        self
+    }
+
+    /// Chebyshev filter order p for `--solver compressive`.
+    pub fn cheb_order(mut self, p: usize) -> Self {
+        self.cfg.cheb_order = p;
+        self
+    }
+
+    /// Number of random signals η for `--solver compressive`.
+    pub fn cheb_signals(mut self, eta: usize) -> Self {
+        self.cfg.cheb_signals = Some(eta);
+        self
+    }
+
+    /// Sampled-row count for the compressive k-means + interpolation.
+    pub fn cheb_sample(mut self, m: usize) -> Self {
+        self.cfg.cheb_sample = Some(m);
         self
     }
 
@@ -551,6 +625,9 @@ mod tests {
             .svd_tol(1e-7)
             .svd_max_iters(123)
             .embed_dim(9)
+            .cheb_order(40)
+            .cheb_signals(12)
+            .cheb_sample(500)
             .stream(1024, 4096)
             .artifacts_dir("arts")
             .verbose(true)
@@ -566,6 +643,9 @@ mod tests {
         assert_eq!(cfg.svd_tol, 1e-7);
         assert_eq!(cfg.svd_max_iters, 123);
         assert_eq!(cfg.embed_dim, Some(9));
+        assert_eq!(cfg.cheb_order, 40);
+        assert_eq!(cfg.cheb_signals, Some(12));
+        assert_eq!(cfg.cheb_sample, Some(500));
         assert_eq!(cfg.stream, Some(StreamConfig { chunk_rows: 1024, block_rows: 4096, shards: 1 }));
         assert!(cfg.sigma_explicit);
         assert_eq!(cfg.artifacts_dir, "arts");
@@ -594,6 +674,9 @@ mod tests {
             PipelineConfig { svd_tol: -1.0, ..Default::default() },
             PipelineConfig { svd_max_iters: 0, ..Default::default() },
             PipelineConfig { k: 5, embed_dim: Some(3), ..Default::default() },
+            PipelineConfig { cheb_order: 1, ..Default::default() },
+            PipelineConfig { cheb_signals: Some(0), ..Default::default() },
+            PipelineConfig { k: 5, cheb_sample: Some(3), ..Default::default() },
         ];
         for cfg in bad {
             let err = cfg.validate().unwrap_err();
@@ -672,7 +755,43 @@ mod tests {
     fn parse_enums() {
         assert_eq!(Solver::parse("primme").unwrap(), Solver::Davidson);
         assert_eq!(Solver::parse("svds").unwrap(), Solver::Lanczos);
+        assert_eq!(Solver::parse("csc").unwrap(), Solver::Compressive);
+        assert_eq!(Solver::parse("compressive").unwrap(), Solver::Compressive);
         assert_eq!(Engine::parse("xla").unwrap(), Engine::Xla);
         assert!(Kernel::parse("poly", 1.0).is_err());
+    }
+
+    #[test]
+    fn solver_parse_error_enumerates_every_canonical_name() {
+        // derived from Solver::ALL — adding a solver cannot leave the
+        // message stale
+        let err = Solver::parse("nope").unwrap_err().to_string();
+        for s in Solver::ALL {
+            assert!(err.contains(s.name()), "'{err}' missing '{}'", s.name());
+        }
+        // round-trip: every canonical name parses back to its variant
+        for s in Solver::ALL {
+            assert_eq!(Solver::parse(s.name()).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn cheb_knobs_layer_through_file_and_cli() {
+        let mut cfg = PipelineConfig::default();
+        let file = "solver = compressive\ncheb_order = 30\ncheb_signals = 8\n";
+        cfg.apply_map(&parse_kv_file(file).unwrap()).unwrap();
+        assert_eq!(cfg.solver, Solver::Compressive);
+        assert_eq!(cfg.cheb_order, 30);
+        assert_eq!(cfg.cheb_signals, Some(8));
+        assert_eq!(cfg.cheb_sample, None);
+        let args = Args::parse(
+            "run --cheb_order 50 --cheb_sample 400".split_whitespace().map(String::from),
+        )
+        .unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.cheb_order, 50);
+        assert_eq!(cfg.cheb_sample, Some(400));
+        assert_eq!(cfg.cheb_signals, Some(8)); // untouched key keeps file value
+        assert!(cfg.validate().is_ok());
     }
 }

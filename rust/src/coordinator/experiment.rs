@@ -160,16 +160,19 @@ pub fn fig2(
 
 // ------------------------------------------------------------------- Fig. 3
 
-/// Fig. 3: SC_RB accuracy + runtime vs R on covtype-like under the two SVD
-/// solvers (PRIMME-analogue Davidson vs Matlab-svds-analogue Lanczos).
+/// Fig. 3: SC_RB accuracy + runtime vs R on covtype-like under the three
+/// SVD solvers (PRIMME-analogue Davidson, Matlab-svds-analogue Lanczos,
+/// and the Chebyshev-filter compressive backend).
 pub fn fig3(coord: &Coordinator, rs: &[usize]) -> Result<Vec<Series>, ScrbError> {
     coord.clear_cache();
     let ds = dataset(coord, "covtype-mult");
     let cfg0 = coord.cfg_for(&ds, None);
     let mut out = Vec::new();
-    for (solver, label) in
-        [(Solver::Davidson, "PRIMME_SVDS (davidson)"), (Solver::Lanczos, "SVDS (lanczos)")]
-    {
+    for (solver, label) in [
+        (Solver::Davidson, "PRIMME_SVDS (davidson)"),
+        (Solver::Lanczos, "SVDS (lanczos)"),
+        (Solver::Compressive, "CSC (compressive)"),
+    ] {
         let mut points = Vec::new();
         for &r in rs {
             // the solver is an embed-stage knob: the second solver's

@@ -1,22 +1,28 @@
 //! Iterative sparse SVD substrate — the PRIMME role in Algorithm 2 step 3.
 //!
-//! Two solvers behind one driver:
+//! Three solvers behind one driver:
 //! - [`davidson`] — block Generalized Davidson (GD+k flavour) with thick
 //!   restart and diagonal preconditioning: the PRIMME_SVDS analogue.
 //! - [`lanczos`] — restarted Golub–Kahan bidiagonalization with naive
 //!   restart: the Matlab `svds` analogue used as the Fig. 3 comparator.
+//! - [`compressive`] — Chebyshev low-pass filtering of random signals
+//!   (Compressive Spectral Clustering): no basis orthogonalization per
+//!   iteration, just p fused gram block products, with Rayleigh–Ritz on
+//!   the filtered span when honest singular triplets are needed.
 //!
-//! Both touch the matrix only through [`op::SvdOp`] block products, so the
-//! sparse Ẑ never needs an explicit Laplacian. Every S·B = A·(Aᵀ·B)
+//! All three touch the matrix only through [`op::SvdOp`] block products,
+//! so the sparse Ẑ never needs an explicit Laplacian. Every S·B = A·(Aᵀ·B)
 //! product goes through the fused [`op::SvdOp::gram_matmat_into`] fast
-//! path, and both solvers thread a reusable [`SolverWorkspace`] so
+//! path, and each solver threads a reusable [`SolverWorkspace`] so
 //! steady-state iterations are allocation-free — see [`workspace`].
 
+pub mod compressive;
 pub mod davidson;
 pub mod lanczos;
 pub mod op;
 pub mod workspace;
 
+pub use compressive::{compressive_svd, compressive_svd_ws, CompressiveOpts};
 pub use davidson::{davidson_svd, davidson_svd_ws, DavidsonOpts};
 pub use lanczos::{lanczos_svd, lanczos_svd_ws, LanczosOpts};
 pub use op::{CountingOp, SvdOp};
@@ -52,11 +58,15 @@ pub struct SvdsOpts {
     pub tol: f64,
     pub max_matvecs: usize,
     pub solver: Solver,
+    /// Chebyshev filter order p (only read by [`Solver::Compressive`]).
+    pub cheb_order: usize,
+    /// Random-signal count η; `None` = O(log n) auto (compressive only).
+    pub cheb_signals: Option<usize>,
 }
 
 impl SvdsOpts {
     pub fn new(k: usize, solver: Solver) -> Self {
-        SvdsOpts { k, tol: 1e-5, max_matvecs: 5000, solver }
+        SvdsOpts { k, tol: 1e-5, max_matvecs: 5000, solver, cheb_order: 25, cheb_signals: None }
     }
 }
 
@@ -88,6 +98,14 @@ pub fn svds_ws<O: SvdOp + ?Sized>(
             o.tol = opts.tol;
             o.max_matvecs = opts.max_matvecs;
             lanczos_svd_ws(a, &o, seed, ws)
+        }
+        Solver::Compressive => {
+            let mut o = CompressiveOpts::new(opts.k);
+            o.order = opts.cheb_order;
+            o.signals = opts.cheb_signals;
+            o.tol = opts.tol;
+            o.max_matvecs = opts.max_matvecs;
+            compressive_svd_ws(a, &o, seed, ws)
         }
     }
 }

@@ -301,6 +301,71 @@ mod tests {
         assert_eq!(c.matvecs(), 10);
     }
 
+    /// Forwards only `apply`/`apply_t`, so every other method exercises
+    /// the trait's *default* implementation — the two-pass `gram_matmat`
+    /// and the allocating single-vector applies.
+    struct DefaultsOnly<'a, O: SvdOp>(&'a O);
+
+    impl<'a, O: SvdOp> SvdOp for DefaultsOnly<'a, O> {
+        fn nrows(&self) -> usize {
+            self.0.nrows()
+        }
+        fn ncols(&self) -> usize {
+            self.0.ncols()
+        }
+        fn apply(&self, b: &Mat) -> Mat {
+            self.0.apply(b)
+        }
+        fn apply_t(&self, b: &Mat) -> Mat {
+            self.0.apply_t(b)
+        }
+    }
+
+    #[test]
+    fn block_substrate_default_paths_match_monolithic() {
+        // one 4×6 stride-2 substrate, monolithic and split into two row
+        // blocks over the same column space
+        let idx = vec![0u32, 3, 1, 4, 2, 5, 0, 5];
+        let scale = vec![0.5, 1.0, 2.0, 0.25];
+        let mono = EllRb::new(4, 6, 2, idx.clone(), scale.clone());
+        let blocked = BlockEllRb::from_blocks(vec![
+            EllRb::new(2, 6, 2, idx[..4].to_vec(), scale[..2].to_vec()),
+            EllRb::new(2, 6, 2, idx[4..].to_vec(), scale[2..].to_vec()),
+        ]);
+
+        // default two-pass gram (via the defaults-only wrapper) vs the
+        // fused overrides, across substrates — all bitwise equal (the
+        // block kernels accumulate in the monolithic order by contract)
+        let b = Mat::from_vec(4, 3, (0..12).map(|i| (i as f64) * 0.5 - 2.0).collect());
+        let two_pass_block = DefaultsOnly(&blocked).gram_matmat(&b);
+        let fused_block = SvdOp::gram_matmat(&blocked, &b);
+        let fused_mono = SvdOp::gram_matmat(&mono, &b);
+        assert_eq!(two_pass_block.data, fused_block.data, "default vs fused on BlockEllRb");
+        assert_eq!(fused_block.data, fused_mono.data, "BlockEllRb vs EllRb gram");
+
+        // single-vector applies: the default (block apply of width 1) and
+        // the overridden matvec_into paths agree bitwise on both substrates
+        let x = vec![1.0, -2.0, 0.5, 3.0, -0.25, 4.0];
+        let mut y_def = vec![0.0; 4];
+        let mut y_block = vec![0.0; 4];
+        let mut y_mono = vec![0.0; 4];
+        DefaultsOnly(&blocked).apply_vec_into(&x, &mut y_def);
+        SvdOp::apply_vec_into(&blocked, &x, &mut y_block);
+        SvdOp::apply_vec_into(&mono, &x, &mut y_mono);
+        assert_eq!(y_def, y_block, "default vs overridden apply_vec_into");
+        assert_eq!(y_block, y_mono, "BlockEllRb vs EllRb apply_vec_into");
+
+        let u = vec![2.0, -1.0, 0.75, 1.5];
+        let mut t_def = vec![0.0; 6];
+        let mut t_block = vec![0.0; 6];
+        let mut t_mono = vec![0.0; 6];
+        DefaultsOnly(&blocked).apply_t_vec_into(&u, &mut t_def);
+        SvdOp::apply_t_vec_into(&blocked, &u, &mut t_block);
+        SvdOp::apply_t_vec_into(&mono, &u, &mut t_mono);
+        assert_eq!(t_def, t_block, "default vs overridden apply_t_vec_into");
+        assert_eq!(t_block, t_mono, "BlockEllRb vs EllRb apply_t_vec_into");
+    }
+
     #[test]
     fn ellrb_op_matches_csr_bridge() {
         // EllRb plugged into the solver interface agrees with its CSR view

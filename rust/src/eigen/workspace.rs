@@ -24,7 +24,7 @@
 //! R-sweep in `coordinator::experiment::theory_convergence`) amortize one
 //! workspace over a whole experiment grid.
 
-use crate::linalg::{dot, nrm2, Mat, SmallSvdWs, SymEigWs};
+use crate::linalg::{dot, nrm2, Mat, PowerIterWs, SmallSvdWs, SymEigWs};
 use crate::sparse::GramScratch;
 use crate::util::threads::{num_threads, parallel_chunks_mut, parallel_rows_mut};
 
@@ -392,6 +392,35 @@ pub struct SolverWorkspace {
     pub(crate) last_vals: Vec<f64>,
     pub(crate) bmat: Mat,
     pub(crate) svd: SmallSvdWs,
+    // ---- Compressive (Chebyshev filter + Tikhonov interpolation)
+    /// Random Gaussian signals (n×η), drawn once up front per solve.
+    pub(crate) cb_sig: Mat,
+    /// Leading-column slice of the signals used by the eigencount
+    /// dichotomy (narrower block → cheaper counting filters).
+    pub(crate) cb_cnt: Mat,
+    /// Chebyshev recurrence rotation: T_{j−1}·B, T_j·B, S·(T_j·B).
+    pub(crate) cb_prev: Mat,
+    pub(crate) cb_cur: Mat,
+    pub(crate) cb_sg: Mat,
+    /// Filter accumulator Σⱼ gⱼcⱼ·Tⱼ·B.
+    pub(crate) cb_acc: Mat,
+    /// Damped Chebyshev coefficients gⱼ·cⱼ, j = 0..=p.
+    pub(crate) cb_coef: Vec<f64>,
+    /// Orthonormalized filtered signals and their S-images (Rayleigh–Ritz).
+    pub(crate) cb_basis: ColBasis,
+    pub(crate) cb_sbasis: ColBasis,
+    /// λ_max power-iteration buffers.
+    pub(crate) power: PowerIterWs,
+    // block-CG buffers for the Tikhonov label interpolation
+    pub(crate) cg_x: Mat,
+    pub(crate) cg_r: Mat,
+    pub(crate) cg_p: Mat,
+    pub(crate) cg_ap: Mat,
+    pub(crate) cg_scal: Vec<f64>,
+    pub(crate) cg_rs: Vec<f64>,
+    pub(crate) cg_rs2: Vec<f64>,
+    pub(crate) cg_mask: Vec<f64>,
+    pub(crate) cb_sample_idx: Vec<usize>,
 }
 
 impl Default for SolverWorkspace {
@@ -432,6 +461,25 @@ impl SolverWorkspace {
             last_vals: Vec::new(),
             bmat: Mat::zeros(0, 0),
             svd: SmallSvdWs::new(),
+            cb_sig: Mat::zeros(0, 0),
+            cb_cnt: Mat::zeros(0, 0),
+            cb_prev: Mat::zeros(0, 0),
+            cb_cur: Mat::zeros(0, 0),
+            cb_sg: Mat::zeros(0, 0),
+            cb_acc: Mat::zeros(0, 0),
+            cb_coef: Vec::new(),
+            cb_basis: ColBasis::new(),
+            cb_sbasis: ColBasis::new(),
+            power: PowerIterWs::new(),
+            cg_x: Mat::zeros(0, 0),
+            cg_r: Mat::zeros(0, 0),
+            cg_p: Mat::zeros(0, 0),
+            cg_ap: Mat::zeros(0, 0),
+            cg_scal: Vec::new(),
+            cg_rs: Vec::new(),
+            cg_rs2: Vec::new(),
+            cg_mask: Vec::new(),
+            cb_sample_idx: Vec::new(),
         }
     }
 
@@ -477,6 +525,40 @@ impl SolverWorkspace {
         self.locked_vals.clear();
         self.last.clear_cols();
         self.last_vals.clear();
+    }
+
+    /// Provision every buffer a compressive run of (n rows, η signals,
+    /// order p, k interpolation columns) touches — the filter recurrence,
+    /// the Rayleigh–Ritz extraction, and the block-CG interpolation.
+    pub(crate) fn ensure_compressive(&mut self, n: usize, eta: usize, order: usize, k: usize) {
+        self.cb_sig.reserve_for(n, eta);
+        self.cb_cnt.reserve_for(n, eta);
+        self.cb_prev.reserve_for(n, eta);
+        self.cb_cur.reserve_for(n, eta);
+        self.cb_sg.reserve_for(n, eta);
+        self.cb_acc.reserve_for(n, eta);
+        reserve_vec(&mut self.cb_coef, order + 1);
+        self.cb_basis.reset(n, eta);
+        self.cb_sbasis.reset(n, eta);
+        self.blk.reserve_for(n, eta);
+        self.s_blk.reserve_for(n, eta);
+        self.h.reserve_for(eta, eta);
+        self.q.reserve_for(eta, eta);
+        self.eig.reserve(eta);
+        reserve_vec(&mut self.vals, eta);
+        reserve_vec(&mut self.coeff, eta);
+        reserve_vec(&mut self.tmp_col, n);
+        self.cg_x.reserve_for(n, k);
+        self.cg_r.reserve_for(n, k);
+        self.cg_p.reserve_for(n, k);
+        self.cg_ap.reserve_for(n, k);
+        reserve_vec(&mut self.cg_scal, k);
+        reserve_vec(&mut self.cg_rs, k);
+        reserve_vec(&mut self.cg_rs2, k);
+        reserve_vec(&mut self.cg_mask, n);
+        if self.cb_sample_idx.capacity() < n {
+            self.cb_sample_idx.reserve(n - self.cb_sample_idx.len());
+        }
     }
 }
 

@@ -68,6 +68,37 @@
 //!   [`sparse::EllRb::to_csr`] bridges between them, and property tests
 //!   pin the two substrates to agree on every solver-visible operation.
 //!
+//! ## Solver selection
+//!
+//! Three spectral backends sit behind `--solver` / the config's
+//! [`config::Solver`], all driving the same fused gram kernel:
+//!
+//! - **`davidson`** (default) — block Generalized Davidson with thick
+//!   restart and diagonal preconditioning. Fastest to tight tolerances;
+//!   the reference the paper's tables use.
+//! - **`lanczos`** — restarted Golub–Kahan bidiagonalization, the Matlab
+//!   `svds` analogue. Simpler per-iteration work, more iterations.
+//! - **`compressive`** — Compressive Spectral Clustering: an order-p
+//!   Chebyshev approximation of the ideal low-pass filter applied to
+//!   O(log n) random signals, k-means on a sampled row subset, and
+//!   Tikhonov label interpolation back to all rows. No per-iteration
+//!   orthogonalization at all — the whole solve is p fused gram block
+//!   products, so its cost is *fixed up front* and indifferent to
+//!   spectral gaps that stall the eigensolvers.
+//!
+//! The compressive backend trades along three axes ([`config::PipelineConfig`]
+//! knobs): `cheb_order` (sharper spectral cut ↔ linearly more gram
+//! products), `cheb_signals` (embedding fidelity ↔ wider blocks), and
+//! `cheb_sample` (k-means cost ↔ label-interpolation quality). Prefer it
+//! over `lanczos` when K is large (eigensolver orthogonalization costs
+//! grow with the basis; the filter never orthogonalizes), when the
+//! spectrum near λ_K is clustered (restarted Lanczos stalls, the filter
+//! does not care), or when a fixed compute budget matters more than a
+//! certified tolerance. Prefer the eigensolvers when K is small and
+//! tight Ritz accuracy is the point. `cargo bench --bench bench_solvers`
+//! sweeps all three (plus the compressive order axis) and reports
+//! time-to-embedding and end-to-end NMI side by side.
+//!
 //! ## Quickstart
 //!
 //! ```no_run

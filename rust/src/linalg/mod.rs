@@ -4,12 +4,14 @@
 
 pub mod chol;
 pub mod dense;
+pub mod power;
 pub mod qr;
 pub mod svd_small;
 pub mod symeig;
 
 pub use chol::{cholesky_jittered, whiten_rows};
 pub use dense::{axpy, dot, l1dist, nrm2, sqdist, Mat};
+pub use power::{power_lambda_max, PowerIterWs};
 pub use qr::{orthonormalize_against, thin_qr, ThinQr};
 pub use svd_small::{svd_thin, svd_thin_into, sym_inv_sqrt, top_left_singular, SmallSvdWs, Svd};
 pub use symeig::{sym_eig, sym_eig_into, SymEig, SymEigWs};

@@ -11,7 +11,8 @@
 //!   scrb fig <2|3|4|5|theory> [opts]  regenerate a paper figure's data
 //!
 //! Common options: --method NAME --r N --sigma S --kernel laplacian|gaussian
-//! --k K --seed S --solver davidson|lanczos --engine native|xla|auto
+//! --k K --seed S --solver davidson|lanczos|compressive --engine native|xla|auto
+//! --cheb_order P --cheb_signals N --cheb_sample M (compressive-solver knobs)
 //! --scale DIV (dataset size divisor; --full = paper sizes) --verbose
 //! --data path.libsvm (real data instead of the synthetic stand-in)
 
@@ -106,7 +107,13 @@ fn print_help() {
          \x20 --r N           grids/features/landmarks rank (default 256)\n\
          \x20 --sigma S       kernel bandwidth (default: median heuristic)\n\
          \x20 --kernel NAME   laplacian (RB-native) | gaussian\n\
-         \x20 --solver NAME   davidson (PRIMME-like) | lanczos (svds-like)\n\
+         \x20 --solver NAME   davidson (PRIMME-like) | lanczos (svds-like) |\n\
+         \x20                 compressive (Chebyshev filter, CSC)\n\
+         \x20 --cheb_order P  compressive filter order (default 25; higher = sharper\n\
+         \x20                 spectral cut, linearly more gram products)\n\
+         \x20 --cheb_signals N  compressive random signals (default: O(log n))\n\
+         \x20 --cheb_sample M   rows clustered before label interpolation\n\
+         \x20                 (default: max(100, 4K·ln n))\n\
          \x20 --embed_dim N   spectral embedding width (default: K; pin it so a\n\
          \x20                 k-sweep reuses one cached embedding artifact)\n\
          \x20 --engine NAME   native | xla | auto (default auto)\n\

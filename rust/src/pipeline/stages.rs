@@ -188,6 +188,11 @@ pub struct SvdEmbed {
     /// Treat the dense feature matrix as the symmetric operator S itself
     /// (exact SC): the solver runs on S with `apply == apply_t`.
     pub symmetric: bool,
+    /// Chebyshev filter order (read when `solver` is
+    /// [`Solver::Compressive`], part of the fingerprint regardless).
+    pub cheb_order: usize,
+    /// Random-signal count override for the compressive solver.
+    pub cheb_signals: Option<usize>,
 }
 
 impl Embed for SvdEmbed {
@@ -203,6 +208,8 @@ impl Embed for SvdEmbed {
             .bool(self.row_normalize)
             .bool(self.scale_scores)
             .bool(self.symmetric)
+            .usize(self.cheb_order)
+            .usize(self.cheb_signals.unwrap_or(0))
             .finish()
     }
 
@@ -211,6 +218,8 @@ impl Embed for SvdEmbed {
         let mut sopts = SvdsOpts::new(self.k, self.solver);
         sopts.tol = self.tol;
         sopts.max_matvecs = self.max_matvecs;
+        sopts.cheb_order = self.cheb_order;
+        sopts.cheb_signals = self.cheb_signals;
         let svd = match &feat.z {
             FeatureMatrix::Dense(m) if self.degree == DegreeMode::DenseClamped => {
                 let zhat = timer.time("degrees", || {

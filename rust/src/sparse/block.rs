@@ -527,14 +527,14 @@ mod tests {
 
     #[test]
     fn solver_runs_on_block_substrate_identically() {
-        // end-to-end: both solvers on blocked vs monolithic Ẑ agree bitwise
+        // end-to-end: every solver on blocked vs monolithic Ẑ agrees bitwise
         use crate::eigen::{svds, SvdsOpts};
         let mut rng = Pcg::seed(306);
         let (mut mono, mut blocked) = random_pair(&mut rng, 80, 6, 7, &[33, 60]);
         let d = mono.implicit_degrees();
         mono.normalize_by_degree(&d);
         blocked.normalize_by_degree(&d);
-        for solver in [crate::config::Solver::Davidson, crate::config::Solver::Lanczos] {
+        for solver in crate::config::Solver::ALL {
             let opts = SvdsOpts::new(3, solver);
             let a = svds(&mono, &opts, 7);
             let b = svds(&blocked, &opts, 7);

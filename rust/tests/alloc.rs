@@ -4,7 +4,9 @@
 //! steady-state iterations allocate nothing — runs with different matvec
 //! budgets (hence different iteration counts) perform *identical* numbers
 //! of allocations, because only entry provisioning and the returned
-//! triplets ever touch the heap.
+//! triplets ever touch the heap. The compressive filter and its Tikhonov
+//! CG interpolation (ISSUE 9) are held to the same bar: allocations are
+//! invariant to the Chebyshev order and the CG iteration budget.
 //!
 //! The serving contract (ISSUE 3 acceptance) is verified the same way:
 //! once a `ServeWorkspace` is warm and the output vector is sized,
@@ -17,8 +19,10 @@
 
 use scrb::cluster::{Env, MethodKind};
 use scrb::config::{Engine, Kernel, PipelineConfig};
+use scrb::eigen::compressive::{sample_rows, tikhonov_interpolate};
 use scrb::eigen::{
-    davidson_svd_ws, lanczos_svd_ws, DavidsonOpts, LanczosOpts, SolverWorkspace,
+    compressive_svd_ws, davidson_svd_ws, lanczos_svd_ws, CompressiveOpts, DavidsonOpts,
+    LanczosOpts, SolverWorkspace,
 };
 use scrb::linalg::Mat;
 use scrb::model::{FittedModel, ServeWorkspace};
@@ -107,6 +111,59 @@ fn fused_gram_and_solver_steady_state_are_allocation_free() {
         "Lanczos restart cycles allocate: {short_allocs} vs {long_allocs} \
          ({} vs {} cycles)",
         short.stats.iterations, long.stats.iterations
+    );
+
+    // -- compressive filter: the matvec cost is fixed by (p, η) up front,
+    // so runs at different orders take different numbers of recurrence
+    // steps — yet must allocate identically, because the filter loop, the
+    // dichotomy, and the Rayleigh–Ritz epilogue all live in the warm
+    // workspace. Warm at the LARGEST order first so the coefficient
+    // buffer's capacity covers every measured run.
+    let copts = |order: usize| {
+        let mut o = CompressiveOpts::new(4);
+        o.order = order;
+        o.signals = Some(8);
+        o
+    };
+    let _warm = compressive_svd_ws(&zhat, &copts(60), 9, &mut ws);
+    let a4 = allocations();
+    let short = compressive_svd_ws(&zhat, &copts(20), 9, &mut ws);
+    let short_allocs = allocations() - a4;
+    let a5 = allocations();
+    let long = compressive_svd_ws(&zhat, &copts(60), 9, &mut ws);
+    let long_allocs = allocations() - a5;
+    assert!(
+        long.stats.matvecs > short.stats.matvecs,
+        "order did not scale the filter cost: {:?} vs {:?}",
+        short.stats,
+        long.stats
+    );
+    assert_eq!(
+        short_allocs, long_allocs,
+        "compressive filter orders allocate differently: {short_allocs} vs {long_allocs} \
+         ({} vs {} matvecs)",
+        short.stats.matvecs, long.stats.matvecs
+    );
+
+    // -- Tikhonov interpolation: CG iterations are one warm gram product
+    // plus scalar recurrences each — budgets that run more iterations
+    // must not allocate more (only the returned score matrix does).
+    let mut idx = Vec::new();
+    sample_rows(n, 40, 3, &mut idx);
+    let labs: Vec<u32> = (0..idx.len()).map(|i| (i % 4) as u32).collect();
+    let lmax = long.s[0] * long.s[0] * 1.05;
+    let _warm = tikhonov_interpolate(&zhat, &idx, &labs, 4, lmax, 0.1, 1e-14, 20, &mut ws);
+    let a6 = allocations();
+    let (_, mv_short) = tikhonov_interpolate(&zhat, &idx, &labs, 4, lmax, 0.1, 1e-14, 5, &mut ws);
+    let short_allocs = allocations() - a6;
+    let a7 = allocations();
+    let (_, mv_long) = tikhonov_interpolate(&zhat, &idx, &labs, 4, lmax, 0.1, 1e-14, 20, &mut ws);
+    let long_allocs = allocations() - a7;
+    assert!(mv_long > mv_short, "CG budget did not add iterations");
+    assert_eq!(
+        short_allocs, long_allocs,
+        "Tikhonov CG iterations allocate: {short_allocs} vs {long_allocs} \
+         ({mv_short} vs {mv_long} matvecs)"
     );
 
     // -- serving hot path: once the workspace is warm and the output

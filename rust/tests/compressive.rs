@@ -1,0 +1,184 @@
+//! Integration contract of the compressive solver (ISSUE 9 acceptance):
+//!
+//! - end-to-end SC_RB quality with `--solver compressive` stays within
+//!   0.05 NMI of the Davidson reference on the same data and seed;
+//! - the compressive embed path runs on the block substrate (streamed
+//!   fits) and is invariant to the chunk/block layout;
+//! - the compressive core — filter, Rayleigh–Ritz, Tikhonov
+//!   interpolation — is **bit-identical across thread counts**, verified
+//!   by respawning this test binary under different `SCRB_THREADS`
+//!   (thread count is resolved once per process, so in-process toggling
+//!   cannot exercise it). The signals are drawn once up front and the
+//!   fused gram kernel accumulates in a fixed order regardless of
+//!   partitioning, which is what makes this a guarantee rather than a
+//!   probability. The k-means stages are deliberately outside the hash:
+//!   their centroid partial sums are grouped by worker count, so their
+//!   floating-point association — unlike the compressive core — is
+//!   thread-count-dependent.
+
+use scrb::cluster::{Env, MethodKind};
+use scrb::config::{Engine, Kernel, PipelineConfig, Solver};
+use scrb::data::synth;
+use scrb::eigen::compressive::{sample_rows, tikhonov_interpolate};
+use scrb::eigen::{compressive_svd_ws, CompressiveOpts, SolverWorkspace};
+use scrb::metrics::all_metrics;
+use scrb::rb::rb_features;
+use scrb::stream::{fit_streaming, LibsvmChunks, StreamOpts};
+use std::fmt::Write as _;
+use std::process::Command;
+
+fn base_cfg(k: usize, r: usize, solver: Solver) -> PipelineConfig {
+    PipelineConfig::builder()
+        .k(k)
+        .r(r)
+        .kernel(Kernel::Laplacian { sigma: 0.25 })
+        .engine(Engine::Native)
+        .solver(solver)
+        .seed(42)
+        .build()
+}
+
+/// The acceptance pin: on the pendigits stand-in, the compressive path
+/// must land within 0.05 NMI of the Davidson reference fit.
+#[test]
+fn compressive_nmi_within_pin_of_davidson() {
+    let ds = synth::paper_benchmark("pendigits", 16, 42);
+    let mut nmi = [0.0f64; 2];
+    for (slot, solver) in [Solver::Davidson, Solver::Compressive].into_iter().enumerate() {
+        let env = Env::new(base_cfg(ds.k, 64, solver));
+        let fitted = MethodKind::ScRb.fit(&env, &ds.x).expect("fit failed");
+        nmi[slot] = all_metrics(&fitted.output.labels, &ds.y).nmi;
+    }
+    let (davidson, compressive) = (nmi[0], nmi[1]);
+    assert!(davidson > 0.5, "davidson reference degenerated: nmi={davidson:.3}");
+    assert!(
+        compressive >= davidson - 0.05,
+        "compressive nmi {compressive:.3} fell more than 0.05 below davidson {davidson:.3}"
+    );
+}
+
+/// Streamed fits featurize into `BlockEllRb`, so this exercises the
+/// compressive embed on the block substrate — and because every block
+/// kernel reproduces the monolithic result bit for bit, the labels must
+/// not depend on the chunk/block layout at all.
+#[test]
+fn streamed_compressive_is_chunk_layout_invariant() {
+    let ds = synth::gaussian_blobs(600, 4, 3, 8.0, 11);
+    let mut text = String::new();
+    for i in 0..ds.n() {
+        write!(text, "{}", ds.y[i]).unwrap();
+        for (j, &v) in ds.x.row(i).iter().enumerate() {
+            if v != 0.0 {
+                write!(text, " {}:{v}", j + 1).unwrap();
+            }
+        }
+        text.push('\n');
+    }
+    let bytes = text.into_bytes();
+    let cfg = base_cfg(3, 64, Solver::Compressive);
+    let mut labels_by_chunk = Vec::new();
+    for chunk_rows in [96usize, 512] {
+        let mut reader = LibsvmChunks::from_bytes(bytes.clone(), chunk_rows);
+        let streamed = fit_streaming(
+            &Env::new(cfg.clone()),
+            &mut reader,
+            &StreamOpts { k: Some(3), ..StreamOpts::default() },
+        )
+        .expect("streamed compressive fit failed");
+        let m = all_metrics(&streamed.output.labels, &streamed.y);
+        assert!(m.accuracy > 0.9, "chunk_rows={chunk_rows}: acc={:.3}", m.accuracy);
+        labels_by_chunk.push(streamed.output.labels.clone());
+    }
+    assert_eq!(
+        labels_by_chunk[0], labels_by_chunk[1],
+        "labels changed with the chunk/block layout"
+    );
+}
+
+const CHILD_ENV: &str = "SCRB_COMPRESSIVE_CHILD";
+const HASH_PREFIX: &str = "COMPRESSIVE_HASH ";
+
+fn fnv1a64(acc: u64, word: u64) -> u64 {
+    let mut h = acc;
+    for b in word.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Child half of the cross-thread-count determinism test: runs the full
+/// compressive core on a fixed seed and prints one hash line. A no-op
+/// under a normal `cargo test` run (the parent sets `CHILD_ENV` when
+/// respawning).
+#[test]
+fn child_emits_compressive_hash() {
+    if std::env::var(CHILD_ENV).is_err() {
+        return;
+    }
+    let ds = synth::gaussian_blobs(400, 4, 3, 6.0, 13);
+    let mut zhat = rb_features(&ds.x, 48, 0.3, 7).z;
+    let deg = zhat.implicit_degrees();
+    zhat.normalize_by_degree(&deg);
+    let n = zhat.rows;
+
+    let mut opts = CompressiveOpts::new(3);
+    opts.order = 20;
+    opts.signals = Some(8);
+    let mut ws = SolverWorkspace::new();
+    let res = compressive_svd_ws(&zhat, &opts, 5, &mut ws);
+
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &s in &res.s {
+        h = fnv1a64(h, s.to_bits());
+    }
+    for &v in &res.u.data {
+        h = fnv1a64(h, v.to_bits());
+    }
+    h = fnv1a64(h, res.stats.matvecs as u64);
+
+    // Interpolate deterministic sample labels (no k-means in the loop —
+    // see the module docs) and fold the interpolated labels in too.
+    let mut idx = Vec::new();
+    sample_rows(n, 80, 99, &mut idx);
+    let labs: Vec<u32> = (0..idx.len()).map(|i| (i % 3) as u32).collect();
+    let lmax = res.s[0] * res.s[0] * 1.05;
+    let (scores, _mv) = tikhonov_interpolate(&zhat, &idx, &labs, 3, lmax, 0.1, 1e-8, 20, &mut ws);
+    for i in 0..n {
+        let row = scores.row(i);
+        let mut best = 0usize;
+        for j in 1..row.len() {
+            if row[j] > row[best] {
+                best = j;
+            }
+        }
+        h = fnv1a64(h, best as u64);
+    }
+    println!("{HASH_PREFIX}{h:016x}");
+}
+
+/// Respawn this test binary under `SCRB_THREADS` 1 and 3 and demand the
+/// child hashes — singular values, embedding bits, matvec count, and
+/// interpolated labels — agree exactly.
+#[test]
+fn compressive_core_is_bit_identical_across_thread_counts() {
+    let exe = std::env::current_exe().expect("test binary path");
+    let mut hashes = Vec::new();
+    for nt in ["1", "3"] {
+        let out = Command::new(&exe)
+            .args(["child_emits_compressive_hash", "--exact", "--nocapture", "--test-threads", "1"])
+            .env(CHILD_ENV, "1")
+            .env("SCRB_THREADS", nt)
+            .output()
+            .expect("respawn test binary");
+        let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+        assert!(out.status.success(), "child (SCRB_THREADS={nt}) failed:\n{stdout}");
+        let hash = stdout
+            .lines()
+            .find_map(|l| l.strip_prefix(HASH_PREFIX))
+            .unwrap_or_else(|| panic!("no hash line from child (SCRB_THREADS={nt}):\n{stdout}"))
+            .to_string();
+        hashes.push(hash);
+    }
+    assert_eq!(hashes[0], hashes[1], "compressive core drifted across thread counts");
+}
