@@ -1,0 +1,212 @@
+//! Online-maintenance benchmark (ISSUE 10): per-chunk incremental update
+//! cost against the full streamed refit it replaces, plus admission
+//! throughput and the drift-signal trajectory under sustained shift.
+//!
+//!     cargo bench --bench bench_update
+//!     SCRB_BENCH_SMOKE=1 cargo bench --bench bench_update   # CI smoke
+//!
+//! Full mode runs at pendigits scale (n=12,000, d=16, K=10); smoke mode
+//! shrinks the row count. Results land in `BENCH_update.json` (override
+//! with SCRB_BENCH_JSON). Headline numbers:
+//!
+//! - `metrics.update_speedup_vs_refit`: full-refit seconds over mean
+//!   per-chunk update seconds — the acceptance bar is >= 5x;
+//! - `metrics.update_rows_per_sec`: steady-state absorption rate;
+//! - `metrics.admit_rows_per_sec`: absorption rate when every row
+//!   admits new bins (codebook growth engaged);
+//! - `metrics.residual_ewma_step_T` / `metrics.unseen_ewma_step_T`: the
+//!   drift trajectory that feeds the refit trigger.
+
+use scrb::cluster::Env;
+use scrb::config::{Kernel, PipelineConfig, UpdateConfig};
+use scrb::data::synth;
+use scrb::linalg::Mat;
+use scrb::stream::{fit_streaming, LibsvmChunks, SparseChunk, StreamOpts};
+use scrb::update::{UpdateOutcome, UpdateWorkspace};
+use scrb::util::bench::Bencher;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+fn to_libsvm(x: &Mat, y: &[usize]) -> Vec<u8> {
+    let mut s = String::new();
+    for i in 0..x.rows {
+        write!(s, "{}", y[i]).unwrap();
+        for (j, &v) in x.row(i).iter().enumerate() {
+            if v != 0.0 {
+                write!(s, " {}:{v}", j + 1).unwrap();
+            }
+        }
+        s.push('\n');
+    }
+    s.into_bytes()
+}
+
+fn chunk_of(x: &Mat, lo: usize, hi: usize) -> SparseChunk {
+    let mut c = SparseChunk::new();
+    for i in lo..hi {
+        c.begin_row(0);
+        for (j, &v) in x.row(i).iter().enumerate() {
+            if v != 0.0 {
+                c.push_entry(j as u32, v);
+            }
+        }
+        c.end_row();
+    }
+    c
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let smoke = std::env::var("SCRB_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    // pendigits scale: n ~= 11k, d = 16, K = 10
+    let n: usize = if smoke { 1_600 } else { 12_000 };
+    let n_base = n * 2 / 3; // fit on two thirds, maintain with the rest
+    let (d, k, r) = (16usize, 10usize, 128usize);
+    let chunk_rows: usize = 512;
+    println!(
+        "== update bench (threads={}, n={n}, d={d}, k={k}, r={r}{}) ==",
+        scrb::util::threads::num_threads(),
+        if smoke { ", SMOKE" } else { "" }
+    );
+
+    let ds = synth::gaussian_blobs(n, d, k, 9.0, 42);
+    let cfg = PipelineConfig::builder()
+        .k(k)
+        .r(r)
+        .kernel(Kernel::Laplacian { sigma: 0.7 })
+        .kmeans_replicates(2)
+        .seed(42)
+        .build();
+    let opts = StreamOpts { k: Some(k), ..Default::default() };
+
+    // baseline 1: streamed fit over the base two thirds (the model being
+    // maintained)
+    let base_text = to_libsvm(&ds.x.row_block(0, n_base), &ds.y[..n_base]);
+    let mut reader = LibsvmChunks::from_bytes(base_text, 4096);
+    let t0 = Instant::now();
+    let fit = fit_streaming(&Env::new(cfg.clone()), &mut reader, &opts).expect("base fit");
+    let base_secs = t0.elapsed().as_secs_f64();
+    let mut model = fit.model;
+    println!("    base fit:   {n_base} rows in {base_secs:.3}s (D={})", model.codebook.dim);
+    b.record_once(&format!("streamed fit n={n_base}"), t0.elapsed());
+
+    // baseline 2: the full streamed refit an update replaces — fit over
+    // everything (base + maintenance rows)
+    let full_text = to_libsvm(&ds.x, &ds.y);
+    let mut reader = LibsvmChunks::from_bytes(full_text, 4096);
+    let t0 = Instant::now();
+    let _refit = fit_streaming(&Env::new(cfg), &mut reader, &opts).expect("full refit");
+    let refit_secs = t0.elapsed().as_secs_f64();
+    println!("    full refit: {n} rows in {refit_secs:.3}s");
+    b.record_once(&format!("streamed refit n={n}"), t0.elapsed());
+
+    // stage 1: per-chunk incremental updates over the held-out third —
+    // same distribution, so this is the steady-state maintenance cost
+    let ucfg = UpdateConfig::default();
+    let mut ws = UpdateWorkspace::new();
+    let mut lo = n_base;
+    let mut chunks = 0usize;
+    let mut admitted = 0usize;
+    let t0 = Instant::now();
+    while lo < n {
+        let hi = (lo + chunk_rows).min(n);
+        let rep = model.update(&chunk_of(&ds.x, lo, hi), &ucfg, &mut ws).expect("update");
+        admitted += rep.admitted;
+        chunks += 1;
+        lo = hi;
+    }
+    let upd_secs = t0.elapsed().as_secs_f64();
+    let upd_rows = n - n_base;
+    let chunk_secs = upd_secs / chunks.max(1) as f64;
+    let speedup = refit_secs / chunk_secs.max(1e-12);
+    let upd_rps = upd_rows as f64 / upd_secs.max(1e-12);
+    b.record_once(&format!("update {chunks} chunks of {chunk_rows}"), t0.elapsed());
+    println!(
+        "    update:     {upd_rows} rows in {upd_secs:.3}s ({upd_rps:.3e} rows/s, \
+         {admitted} bins admitted)"
+    );
+    println!(
+        "    per chunk:  {:.3} ms -> {speedup:.1}x faster than the full refit",
+        chunk_secs * 1e3
+    );
+
+    // stage 2: admission throughput — every row lands outside the fitted
+    // frame, so codebook growth and projection widening run on each chunk
+    let mut shifted = ds.x.row_block(n_base, n);
+    for v in shifted.data.iter_mut() {
+        *v += 50.0;
+    }
+    let dim_before = model.codebook.dim;
+    let t0 = Instant::now();
+    let mut lo = 0usize;
+    while lo < shifted.rows {
+        let hi = (lo + chunk_rows).min(shifted.rows);
+        model.update(&chunk_of(&shifted, lo, hi), &ucfg, &mut ws).expect("admit update");
+        lo = hi;
+    }
+    let admit_secs = t0.elapsed().as_secs_f64();
+    let admit_rps = shifted.rows as f64 / admit_secs.max(1e-12);
+    let grown = model.codebook.dim - dim_before;
+    b.record_once(&format!("admitting update {} rows", shifted.rows), t0.elapsed());
+    println!(
+        "    admission:  {} rows in {admit_secs:.3}s ({admit_rps:.3e} rows/s, D {} -> {})",
+        shifted.rows, dim_before, model.codebook.dim
+    );
+
+    // stage 3: drift trajectory — progressive shift until the trigger
+    // fires; the EWMAs are what `scrb serve` STATUS exposes
+    let ds2 = synth::gaussian_blobs(n_base, d, k, 9.0, 43);
+    let base_text = to_libsvm(&ds2.x, &ds2.y);
+    let mut reader = LibsvmChunks::from_bytes(base_text, 4096);
+    let cfg2 = PipelineConfig::builder()
+        .k(k)
+        .r(r)
+        .kernel(Kernel::Laplacian { sigma: 0.7 })
+        .kmeans_replicates(2)
+        .seed(43)
+        .build();
+    let mut model = fit_streaming(&Env::new(cfg2), &mut reader, &opts).expect("fit").model;
+    let steps = 8usize;
+    let probe = (n_base / 4).max(64).min(1_000);
+    let mut fired = None;
+    for step in 0..steps {
+        let mut xs = ds2.x.row_block(0, probe);
+        for v in xs.data.iter_mut() {
+            *v += 4.0 * (step + 1) as f64;
+        }
+        let rep = model.update(&chunk_of(&xs, 0, probe), &ucfg, &mut ws).expect("drift update");
+        b.metric(&format!("unseen_ewma_step_{step}"), rep.unseen_ewma);
+        b.metric(&format!("residual_ewma_step_{step}"), rep.residual_ewma);
+        println!(
+            "    drift {step}: unseen_ewma={:.4} residual_ewma={:.4}{}",
+            rep.unseen_ewma,
+            rep.residual_ewma,
+            if rep.outcome == UpdateOutcome::RefitNeeded { "  [refit signaled]" } else { "" }
+        );
+        if rep.outcome == UpdateOutcome::RefitNeeded {
+            fired = Some(step);
+            break;
+        }
+    }
+    if let Some(step) = fired {
+        b.metric("refit_trigger_step", step as f64);
+    }
+
+    b.metric("update_n", n as f64);
+    b.metric("update_chunk_rows", chunk_rows as f64);
+    b.metric("base_fit_secs", base_secs);
+    b.metric("refit_secs", refit_secs);
+    b.metric("update_chunk_secs", chunk_secs);
+    b.metric("update_speedup_vs_refit", speedup);
+    b.metric("update_rows_per_sec", upd_rps);
+    b.metric("admit_rows_per_sec", admit_rps);
+    b.metric("bins_admitted", grown as f64);
+
+    println!("\n{}", b.report());
+    let json_path =
+        std::env::var("SCRB_BENCH_JSON").unwrap_or_else(|_| "BENCH_update.json".into());
+    match b.write_json(&json_path) {
+        Ok(()) => println!("[saved {json_path}]"),
+        Err(e) => eprintln!("[failed to save {json_path}: {e}]"),
+    }
+}

@@ -145,6 +145,98 @@ pub struct StreamConfig {
     pub shards: usize,
 }
 
+/// Online-maintenance knobs for [`crate::update`] (`scrb update` /
+/// [`crate::model::ScRbModel`]`::update`): EWMA smoothing of the drift
+/// signals, the refit-trigger thresholds, and the bounded warm-start
+/// K-means polish. Standalone (not a [`PipelineConfig`] section) because
+/// updates run against a *fitted* model, whose pipeline parameters are
+/// already frozen inside the artifact.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct UpdateConfig {
+    /// EWMA decay α for the per-update drift signals (`new = α·obs +
+    /// (1−α)·old`). Larger = more reactive trigger.
+    pub ewma: f64,
+    /// Refit trigger: unseen-bin-rate EWMA above this returns
+    /// [`crate::update::UpdateOutcome::RefitNeeded`].
+    pub unseen_refit: f64,
+    /// Refit trigger: subspace-residual EWMA above this returns
+    /// `RefitNeeded` (fraction of chunk embedding energy the tracked
+    /// subspace cannot express).
+    pub residual_refit: f64,
+    /// Chunks with **no** admitted bins skip the subspace refresh unless
+    /// their residual ratio exceeds this — the gate that keeps all-known
+    /// in-distribution chunks byte-invisible (only the persisted update
+    /// counters move). Set negative to force the refresh on every chunk.
+    pub residual_tol: f64,
+    /// Bounded warm-start Lloyd passes over each update chunk's
+    /// embedding (centroids re-seeded from the previous solution).
+    pub lloyd_iters: usize,
+    /// Rows per incremental-SVD sub-block (the rank of one Brand-style
+    /// subspace fold; bounds the small-SVD cost per step).
+    pub block: usize,
+    /// Seed for the drift tracker's jittered re-arm delay after a refit
+    /// signal (deterministic trigger under a fixed seed).
+    pub seed: u64,
+}
+
+impl Default for UpdateConfig {
+    fn default() -> Self {
+        UpdateConfig {
+            ewma: 0.3,
+            unseen_refit: 0.2,
+            residual_refit: 0.98,
+            residual_tol: 0.999,
+            lloyd_iters: 3,
+            block: 64,
+            seed: 42,
+        }
+    }
+}
+
+impl UpdateConfig {
+    /// Validate ranges; the same typed-rejection posture as
+    /// [`PipelineConfig::validate`].
+    pub fn validate(&self) -> Result<(), ScrbError> {
+        if !(self.ewma > 0.0 && self.ewma <= 1.0) {
+            return Err(ScrbError::config(format!(
+                "update: ewma must be in (0, 1], got {}",
+                self.ewma
+            )));
+        }
+        for (name, v) in [("unseen-refit", self.unseen_refit), ("residual-refit", self.residual_refit)]
+        {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(ScrbError::config(format!(
+                    "update: {name} must be a rate in [0, 1], got {v}"
+                )));
+            }
+        }
+        if !self.residual_tol.is_finite() || self.residual_tol > 1.0 {
+            return Err(ScrbError::config(format!(
+                "update: residual-tol must be finite and <= 1, got {}",
+                self.residual_tol
+            )));
+        }
+        if self.block == 0 {
+            return Err(ScrbError::config("update: block must be >= 1 rows"));
+        }
+        Ok(())
+    }
+
+    /// Apply the `scrb update` CLI options (highest precedence), then
+    /// validate.
+    pub fn apply_args(&mut self, args: &Args) -> Result<(), ScrbError> {
+        self.ewma = args.get_f64("ewma", self.ewma)?;
+        self.unseen_refit = args.get_f64("unseen-refit", self.unseen_refit)?;
+        self.residual_refit = args.get_f64("residual-refit", self.residual_refit)?;
+        self.residual_tol = args.get_f64("residual-tol", self.residual_tol)?;
+        self.lloyd_iters = args.get_usize("lloyd-iters", self.lloyd_iters)?;
+        self.block = args.get_usize("update-block", self.block)?;
+        self.seed = args.get_u64("seed", self.seed)?;
+        self.validate()
+    }
+}
+
 /// Full pipeline configuration (Algorithm 2 + baselines).
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {

@@ -131,6 +131,57 @@
 //! let mut ws = ServeWorkspace::new();
 //! let mut labels = Vec::new();
 //! model.predict_batch(&fresh.x, &mut ws, &mut labels).expect("predict failed");
+//!
+//! // keep the model current as new data arrives — no refit unless drift
+//! // says so (see "Model lifecycle" below)
+//! # use scrb::update::{UpdateConfig, UpdateWorkspace};
+//! # use scrb::stream::SparseChunk;
+//! # let mut model = model; let chunk = SparseChunk::new();
+//! let mut uws = UpdateWorkspace::new();
+//! let report = model.update(&chunk, &UpdateConfig::default(), &mut uws).expect("update failed");
+//! println!("absorbed {} rows, admitted {} new bins", report.rows, report.admitted);
+//! ```
+//!
+//! ## Model lifecycle: fit → serve → update → refit
+//!
+//! A model is not a one-shot artifact; [`update`] keeps it live as the
+//! data moves:
+//!
+//! 1. **fit** — `scrb fit --save m.scrb` (in-memory or `--stream`).
+//! 2. **serve** — `scrb serve --model m.scrb`: predictions, drift
+//!    counters, hot swap.
+//! 3. **update** — `scrb update --model m.scrb --data new.libsvm --save
+//!    m2.scrb`: incremental maintenance at a fraction of refit cost.
+//!    Unseen bins are *admitted* as new codebook columns (fit-time
+//!    columns never move), the spectral subspace absorbs the new rows by
+//!    a rank-k incremental SVD, and the k-means centroids are polished
+//!    from the previous solution — no reseeding. Steady-state updates
+//!    allocate nothing; in-distribution chunks change nothing but the
+//!    persisted counters (SCRBMODL v3 trailer, [`model::UpdateState`]).
+//! 4. **refit** — each update folds its pre-admission unseen-bin rate
+//!    and subspace residual into persisted EWMAs
+//!    ([`update::DriftTracker`]); past the configured thresholds the
+//!    update returns [`update::UpdateOutcome::RefitNeeded`] and the
+//!    incremental path *escalates*: `scrb update --refit` runs the full
+//!    streamed refit with the model's frozen parameters and can publish
+//!    it to a running daemon through the validated hot-swap slot
+//!    (`--swap ADDR`). The trigger is deterministic under a fixed seed.
+//!
+//! ```no_run
+//! use scrb::model::ScRbModel;
+//! use scrb::stream::{IngestPolicy, LibsvmChunks};
+//! use scrb::update::{update_streaming, UpdateConfig, UpdateWorkspace};
+//!
+//! let mut model = ScRbModel::load("m.scrb").expect("load failed");
+//! let mut reader = LibsvmChunks::from_path("new.libsvm", 4096).expect("open failed");
+//! let mut ws = UpdateWorkspace::new();
+//! let out = update_streaming(
+//!     &mut model, &mut reader, &UpdateConfig::default(), IngestPolicy::default(), &mut ws,
+//! ).expect("update failed");
+//! if out.refit_needed {
+//!     eprintln!("drift thresholds crossed after {} rows: run `scrb update --refit`", out.rows);
+//! }
+//! model.save("m2.scrb").expect("save failed");
 //! ```
 //!
 //! ## Clustering as a service
@@ -314,6 +365,7 @@ pub mod runtime;
 pub mod serve;
 pub mod shard;
 pub mod stream;
+pub mod update;
 
 /// Crate version string.
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

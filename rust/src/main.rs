@@ -7,6 +7,9 @@
 //!   scrb fit --stream --data f.libsvm --chunk-rows M --sigma S --save m.scrb
 //!                                     out-of-core fit (bounded input memory)
 //!   scrb predict --model m.scrb ...   label new points with a saved model
+//!   scrb update --model m.scrb --data new.libsvm --save m2.scrb
+//!                                     absorb new data incrementally; escalates
+//!                                     to a full refit when drift demands it
 //!   scrb table <1|2|3> [opts]         regenerate a paper table
 //!   scrb fig <2|3|4|5|theory> [opts]  regenerate a paper figure's data
 //!
@@ -54,6 +57,7 @@ fn dispatch(args: &Args) -> Result<(), ScrbError> {
         "run" => cmd_run(args),
         "fit" => cmd_fit(args),
         "predict" => cmd_predict(args),
+        "update" => cmd_update(args),
         "serve" => cmd_serve(args),
         "table" => cmd_table(args),
         "fig" => cmd_fig(args),
@@ -90,6 +94,23 @@ fn print_help() {
          \x20   --out PATH                  write one label per line (optional)\n\
          \x20   --unseen-warn T             warn when a call's unseen-bin rate exceeds T\n\
          \x20                               (default 0.25; rate is printed after predict)\n\
+         \x20 update                      maintain a saved model from new data\n\
+         \x20   --model PATH                model to update (from `scrb fit --save`)\n\
+         \x20   --data PATH                 new rows (LibSVM), streamed in chunks\n\
+         \x20   --save PATH                 updated (or refitted) model to write\n\
+         \x20   --chunk-rows M              rows per streamed chunk (default 4096)\n\
+         \x20   --update-block M            rows per incremental-SVD fold (default 64)\n\
+         \x20   --ewma A                    drift EWMA decay (default 0.3)\n\
+         \x20   --unseen-refit T            unseen-bin-rate EWMA refit trigger (0.2)\n\
+         \x20   --residual-refit T          subspace-residual EWMA refit trigger (0.98)\n\
+         \x20   --residual-tol T            fold gate for no-admission chunks (0.999)\n\
+         \x20   --lloyd-iters N             warm-start k-means polish passes (3)\n\
+         \x20   --on-bad-record P           strict | quarantine (as in fit --stream)\n\
+         \x20   --refit                     on a drift signal, run the full streamed\n\
+         \x20                               refit (model-frozen r/sigma/k/seed) over\n\
+         \x20                               --refit-data (default: --data)\n\
+         \x20   --swap HOST:PORT            publish the saved model to a running\n\
+         \x20                               daemon via validated hot swap\n\
          \x20 serve                       serve a saved model as a daemon (TCP)\n\
          \x20   --model PATH                model artifact from `scrb fit --save`\n\
          \x20   --addr HOST:PORT            bind address (default 127.0.0.1:7878)\n\
@@ -470,6 +491,22 @@ fn cmd_predict(args: &Args) -> Result<(), ScrbError> {
         drift.unseen,
         drift.lookups
     );
+    if args.get("unseen-warn").is_some() {
+        // the caller asked for drift sensitivity: close with the same
+        // summary the serve daemon's STATUS reports, so a scripted
+        // predict can grep one line to decide on `scrb update`.
+        let st = model.update_state;
+        println!(
+            "drift summary: {} serving call(s) over the {:.1}% unseen threshold, {} warning(s) \
+             emitted; model history: {} update(s), {} bins admitted, unseen EWMA {:.4}",
+            drift.over_threshold,
+            model.unseen_warn * 100.0,
+            drift.warnings,
+            st.updates,
+            st.bins_admitted,
+            st.unseen_ewma
+        );
+    }
     if let Some(out_path) = args.get("out") {
         let mut text = String::with_capacity(labels.len() * 3);
         for l in &labels {
@@ -479,6 +516,143 @@ fn cmd_predict(args: &Args) -> Result<(), ScrbError> {
         std::fs::write(out_path, text).map_err(|e| ScrbError::io(out_path, e))?;
         println!("labels written to {out_path}");
     }
+    Ok(())
+}
+
+/// `scrb update --model m.scrb --data new.libsvm --save m2.scrb`:
+/// online model maintenance ([`scrb::update`]). New rows stream through
+/// the hardened ingest stack and are absorbed incrementally — unseen
+/// bins admitted as new codebook columns, the spectral subspace folded
+/// forward, centroids warm-start polished. When the persisted drift
+/// EWMAs cross their thresholds the pass stops with a refit signal;
+/// `--refit` then escalates to the full streamed refit using the
+/// model's frozen parameters (r, σ, K, seed), and `--swap HOST:PORT`
+/// publishes whichever model was saved to a running daemon through the
+/// validated hot-swap slot.
+fn cmd_update(args: &Args) -> Result<(), ScrbError> {
+    let model_path = args
+        .get("model")
+        .ok_or_else(|| ScrbError::config("update: missing --model PATH (from `scrb fit --save`)"))?;
+    let data = args
+        .get("data")
+        .ok_or_else(|| ScrbError::config("update: missing --data PATH (new rows, LibSVM)"))?;
+    let save = args
+        .get("save")
+        .ok_or_else(|| ScrbError::config("update: missing --save PATH for the updated model"))?;
+    let mut ucfg = scrb::config::UpdateConfig::default();
+    ucfg.apply_args(args)?;
+    let chunk_rows = args.get_usize("chunk-rows", 4096)?;
+    let policy = scrb::stream::IngestPolicy {
+        on_bad_record: scrb::stream::OnBadRecord::parse(args.get_or("on-bad-record", "strict"))?,
+        sample_cap: args.get_usize("quarantine-sample", 16)?,
+        max_retries: args.get_usize("max-retries", 3)? as u32,
+        ..scrb::stream::IngestPolicy::default()
+    };
+    let mut model = ScRbModel::load(model_path)?;
+    let dim0 = model.codebook.dim;
+    let mut reader = scrb::stream::LibsvmChunks::from_path(data, chunk_rows)?;
+    let mut ws = scrb::update::UpdateWorkspace::new();
+    let t0 = Instant::now();
+    let out = scrb::update::update_streaming(&mut model, &mut reader, &ucfg, policy, &mut ws)?;
+    let secs = t0.elapsed().as_secs_f64();
+    if out.quarantine.skipped() > 0 || out.quarantine.retries > 0 {
+        println!("quarantine: {}", out.quarantine.summary());
+        for rec in &out.quarantine.samples {
+            println!("  skipped {rec}");
+        }
+    }
+    let st = model.update_state;
+    println!(
+        "update {model_path}: absorbed {} rows in {} chunk(s), admitted {} bins \
+         (D {dim0} -> {}) in {}s",
+        out.rows,
+        out.reports.len(),
+        out.admitted,
+        model.codebook.dim,
+        fnum(secs)
+    );
+    println!(
+        "drift: unseen EWMA {:.4} (trigger {}), residual EWMA {:.4} (trigger {}); \
+         lifetime: {} update(s), {} rows, {} refit signal(s)",
+        st.unseen_ewma,
+        ucfg.unseen_refit,
+        st.residual_ewma,
+        ucfg.residual_refit,
+        st.updates,
+        st.rows_absorbed,
+        st.refits_signaled
+    );
+    if out.refit_needed && args.flag("refit") {
+        println!("drift thresholds crossed: escalating to a full streamed refit");
+        cmd_update_refit(args, &model, data, save, chunk_rows, policy)?;
+    } else {
+        if out.refit_needed {
+            println!(
+                "drift thresholds crossed after {} rows — the incremental path stopped; \
+                 rerun with --refit to rebuild from the model's frozen parameters",
+                out.rows
+            );
+        }
+        model.save(save)?;
+        let bytes = std::fs::metadata(save).map(|m| m.len()).unwrap_or(0);
+        println!("updated model saved to {save} ({} KB)", bytes / 1024);
+    }
+    if let Some(addr) = args.get("swap") {
+        let mut c = scrb::serve::ServeClient::connect(addr)
+            .map_err(|e| ScrbError::config(format!("swap: cannot reach daemon at {addr}: {e}")))?;
+        let version = c
+            .swap(save)
+            .map_err(|e| ScrbError::config(format!("swap rejected by daemon at {addr}: {e}")))?;
+        println!("published {save} to {addr} as model version {version}");
+    }
+    Ok(())
+}
+
+/// The `--refit` escalation: a full streamed fit over `--refit-data`
+/// (default: the update's `--data`) with the pipeline parameters frozen
+/// inside the drifted model — same R, kernel bandwidth, cluster count,
+/// and seed — so the rebuilt model is the one the original fit would
+/// have produced on the wider data.
+fn cmd_update_refit(
+    args: &Args,
+    model: &ScRbModel,
+    data: &str,
+    save: &str,
+    chunk_rows: usize,
+    policy: scrb::stream::IngestPolicy,
+) -> Result<(), ScrbError> {
+    let refit_data = args.get_or("refit-data", data);
+    let block_rows = args.get_usize("block-rows", 65_536)?;
+    let cfg = PipelineConfig::builder()
+        .r(model.codebook.r)
+        .kernel(model.kernel)
+        .k(model.n_clusters())
+        .seed(model.codebook.seed)
+        .stream(chunk_rows, block_rows)
+        .build();
+    let opts = scrb::stream::StreamOpts {
+        block_rows,
+        k: Some(model.n_clusters()),
+        policy,
+        ..scrb::stream::StreamOpts::default()
+    };
+    let mut reader = scrb::stream::LibsvmChunks::from_path(refit_data, chunk_rows)?;
+    let t0 = Instant::now();
+    let fit = scrb::stream::fit_streaming(&Env::new(cfg), &mut reader, &opts)?;
+    let secs = t0.elapsed().as_secs_f64();
+    if fit.quarantine.skipped() > 0 || fit.quarantine.retries > 0 {
+        println!("refit quarantine: {}", fit.quarantine.summary());
+    }
+    println!(
+        "refit over {refit_data}: n={} d={} D={} bins in {}s",
+        fit.n,
+        fit.d,
+        fit.model.codebook.dim,
+        fnum(secs)
+    );
+    fit.model.save(save)?;
+    let bytes = std::fs::metadata(save).map(|m| m.len()).unwrap_or(0);
+    println!("refitted model saved to {save} ({} KB)", bytes / 1024);
     Ok(())
 }
 

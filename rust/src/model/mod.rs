@@ -44,7 +44,10 @@
 pub mod persist;
 pub mod scrb;
 
-pub use self::scrb::{DriftMonitor, DriftStats, ScRbModel, DEFAULT_UNSEEN_WARN, WARN_EVERY};
+pub use self::scrb::{
+    DriftMonitor, DriftStats, ScRbModel, UpdateState, DEFAULT_UNSEEN_WARN, UPDATE_TRAILER_BYTES,
+    WARN_EVERY,
+};
 
 use crate::cluster::{ClusterOutput, Env};
 use crate::error::ScrbError;

@@ -18,15 +18,19 @@
 //! # Persistence
 //!
 //! [`ScRbModel::save`]/[`ScRbModel::load`] use a versioned little-endian
-//! binary format (magic `SCRBMODL`, version 2) with bounds-checked reads:
+//! binary format (magic `SCRBMODL`, version 3) with bounds-checked reads:
 //! truncation, bad magic, or an unsupported version is a clean
-//! [`ScrbError::Model`]. Version 2 ends with an FNV-1a checksum footer
-//! over the whole image, verified before any field is parsed — so a
-//! truncated or bit-rotted file is *always* a typed error, never a
-//! silently-wrong model; version-1 files (no footer) still load. Grid
-//! parameters are stored explicitly (widths + biases), not re-derived
-//! from the seed, so a saved model does not depend on RNG stream
-//! stability across versions.
+//! [`ScrbError::Model`]. Since version 2 the image ends with an FNV-1a
+//! checksum footer over the whole image, verified before any field is
+//! parsed — so a truncated or bit-rotted file is *always* a typed error,
+//! never a silently-wrong model. Version 3 adds a fixed 48-byte
+//! [`UpdateState`] trailer (update/admission counters + drift EWMAs)
+//! between the payload and the footer, persisting the online-maintenance
+//! state across save/load; version-1 (no footer) and version-2 (no
+//! trailer) files still load, with a default state. Grid parameters are
+//! stored explicitly (widths + biases), not re-derived from the seed, so
+//! a saved model does not depend on RNG stream stability across
+//! versions.
 //!
 //! # Drift
 //!
@@ -49,7 +53,11 @@ use crate::util::threads::{parallel_row_ranges_mut, parallel_rows_mut};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 const MAGIC: &[u8; 8] = b"SCRBMODL";
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
+
+/// Byte length of the version-3 [`UpdateState`] trailer (six 8-byte
+/// fields, written between the model payload and the checksum footer).
+pub const UPDATE_TRAILER_BYTES: usize = 48;
 
 /// Default per-call unseen-bin-rate threshold above which serving warns.
 pub const DEFAULT_UNSEEN_WARN: f64 = 0.25;
@@ -59,6 +67,29 @@ pub const DEFAULT_UNSEEN_WARN: f64 = 0.25;
 /// call into a log line. The first offending call always warns; after
 /// that, one warning (with cumulative counts) per `WARN_EVERY` offenders.
 pub const WARN_EVERY: u64 = 64;
+
+/// Persisted online-maintenance state (the SCRBMODL v3 trailer): how
+/// much the model has been incrementally updated since fit, and where
+/// the drift signals stood after the last update. Plain (non-atomic)
+/// because [`ScRbModel::update`] takes `&mut self`; the serve daemon
+/// reads it from its per-version model snapshot.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct UpdateState {
+    /// `update()` calls absorbed (including gated no-op chunks).
+    pub updates: u64,
+    /// Data rows folded into the model across all updates.
+    pub rows_absorbed: u64,
+    /// Bins admitted after fit (global columns appended to the
+    /// codebook/projection).
+    pub bins_admitted: u64,
+    /// Times the drift tracker escalated with `RefitNeeded`.
+    pub refits_signaled: u64,
+    /// EWMA of the per-update pre-admission unseen-bin rate.
+    pub unseen_ewma: f64,
+    /// EWMA of the per-update subspace residual ratio (chunk embedding
+    /// energy the tracked subspace could not express).
+    pub residual_ewma: f64,
+}
 
 /// Cumulative unseen-bin counters (the drift signal incremental updates
 /// need). Atomic so `&self` serving paths can update them concurrently;
@@ -135,6 +166,9 @@ pub struct ScRbModel {
     /// stderr ([`DEFAULT_UNSEEN_WARN`] unless reconfigured; not
     /// persisted).
     pub unseen_warn: f64,
+    /// Online-maintenance counters + drift EWMAs (persisted as the v3
+    /// trailer; see [`crate::update`]).
+    pub update_state: UpdateState,
 }
 
 impl ScRbModel {
@@ -293,13 +327,22 @@ impl ScRbModel {
         }
         w.f64_slice(&self.proj.data);
         w.f64_slice(&self.centroids.data);
-        // v2: FNV-1a checksum footer over everything above (magic and
+        // v3: fixed 48-byte update-state trailer (counters + drift EWMAs)
+        let st = &self.update_state;
+        w.u64(st.updates);
+        w.u64(st.rows_absorbed);
+        w.u64(st.bins_admitted);
+        w.u64(st.refits_signaled);
+        w.f64(st.unseen_ewma);
+        w.f64(st.residual_ewma);
+        // v2+: FNV-1a checksum footer over everything above (magic and
         // version included)
         w.finish_with_checksum()
     }
 
-    /// Deserialize from the versioned binary format (v2 with checksum
-    /// footer, or legacy v1 without).
+    /// Deserialize from the versioned binary format (v3 with update
+    /// trailer + checksum footer, v2 with footer only, or legacy v1 with
+    /// neither).
     pub fn from_bytes(bytes: &[u8]) -> Result<ScRbModel, ScrbError> {
         // magic + version are peeked outside the checksum machinery: the
         // version decides whether a footer exists at all
@@ -310,7 +353,7 @@ impl ScRbModel {
         let version = peek.u32()?;
         let payload = match version {
             1 => bytes,
-            VERSION => split_checksummed(bytes).ok_or_else(|| {
+            2 | VERSION => split_checksummed(bytes).ok_or_else(|| {
                 ScrbError::model("checksum mismatch: the model file is corrupt or truncated")
             })?,
             other => {
@@ -407,6 +450,33 @@ impl ScRbModel {
         }
         let proj = Mat::from_vec(dim, k_embed, r.f64_vec(dim * k_embed)?);
         let centroids = Mat::from_vec(k_clusters, k_embed, r.f64_vec(k_clusters * k_embed)?);
+        // v3 trailer: update counters + drift EWMAs; earlier versions
+        // carry none and load with a default (never-updated) state
+        let update_state = if version >= 3 {
+            let st = UpdateState {
+                updates: r.u64()?,
+                rows_absorbed: r.u64()?,
+                bins_admitted: r.u64()?,
+                refits_signaled: r.u64()?,
+                unseen_ewma: r.f64()?,
+                residual_ewma: r.f64()?,
+            };
+            if !(0.0..=1.0).contains(&st.unseen_ewma) || !(0.0..=1.0).contains(&st.residual_ewma) {
+                return Err(ScrbError::model(format!(
+                    "update-state EWMAs must be rates in [0, 1], got unseen={} residual={}",
+                    st.unseen_ewma, st.residual_ewma
+                )));
+            }
+            if st.bins_admitted > dim as u64 {
+                return Err(ScrbError::model(format!(
+                    "update state admits {} bins but the codebook only holds D={dim}",
+                    st.bins_admitted
+                )));
+            }
+            st
+        } else {
+            UpdateState::default()
+        };
         if r.remaining() != 0 {
             return Err(ScrbError::model(format!(
                 "{} trailing bytes after model payload",
@@ -423,6 +493,7 @@ impl ScRbModel {
             norm,
             drift: DriftMonitor::default(),
             unseen_warn: DEFAULT_UNSEEN_WARN,
+            update_state,
         })
     }
 
@@ -570,6 +641,7 @@ mod tests {
             norm: None,
             drift: DriftMonitor::default(),
             unseen_warn: DEFAULT_UNSEEN_WARN,
+            update_state: UpdateState::default(),
         };
         (model, x)
     }
@@ -663,20 +735,60 @@ mod tests {
     }
 
     #[test]
-    fn v1_files_without_checksum_still_load() {
+    fn v1_and_v2_files_still_load() {
         let (model, x) = toy_model(50, 5, 3, 17);
-        let v2 = model.to_bytes();
-        // rewrite as a v1 image: drop the footer, flip the version field
-        let mut v1 = v2[..v2.len() - 8].to_vec();
+        let v3 = model.to_bytes();
+        // a v1 image is the payload without trailer or footer
+        let strip = UPDATE_TRAILER_BYTES + 8;
+        let mut v1 = v3[..v3.len() - strip].to_vec();
         v1[8..12].copy_from_slice(&1u32.to_le_bytes());
         let back = ScRbModel::from_bytes(&v1).unwrap();
         assert_eq!(back.transform(&x).unwrap().data, model.transform(&x).unwrap().data);
-        // saving a legacy load re-emits the current (checksummed) format
-        assert_eq!(back.to_bytes(), v2);
-        // a v2 image relabeled v1 leaves the 8-byte footer dangling → typed error
-        let mut relabeled = v2.clone();
+        assert_eq!(back.update_state, UpdateState::default());
+        // saving a legacy load re-emits the current (v3) format
+        assert_eq!(back.to_bytes(), v3);
+        // a v2 image adds the checksum footer but no update trailer
+        let mut v2 = v3[..v3.len() - strip].to_vec();
+        v2[8..12].copy_from_slice(&2u32.to_le_bytes());
+        let sum = crate::util::fnv::fnv64(&v2);
+        v2.extend_from_slice(&sum.to_le_bytes());
+        let back2 = ScRbModel::from_bytes(&v2).unwrap();
+        assert_eq!(back2.transform(&x).unwrap().data, model.transform(&x).unwrap().data);
+        assert_eq!(back2.to_bytes(), v3);
+        // a v3 image relabeled v1 leaves trailer + footer dangling → typed error
+        let mut relabeled = v3.clone();
         relabeled[8..12].copy_from_slice(&1u32.to_le_bytes());
         assert!(matches!(ScRbModel::from_bytes(&relabeled), Err(ScrbError::Model(_))));
+        // a v3 image relabeled v2 fails the checksum (version is covered)
+        let mut relabeled = v3.clone();
+        relabeled[8..12].copy_from_slice(&2u32.to_le_bytes());
+        assert!(matches!(ScRbModel::from_bytes(&relabeled), Err(ScrbError::Model(_))));
+    }
+
+    #[test]
+    fn update_state_round_trips_in_the_v3_trailer() {
+        let (mut model, _) = toy_model(40, 4, 3, 31);
+        model.update_state = UpdateState {
+            updates: 7,
+            rows_absorbed: 4096,
+            bins_admitted: 5,
+            refits_signaled: 1,
+            unseen_ewma: 0.125,
+            residual_ewma: 0.5,
+        };
+        // bins_admitted must stay plausible against the header D
+        assert!(model.update_state.bins_admitted <= model.codebook.dim as u64);
+        let bytes = model.to_bytes();
+        let back = ScRbModel::from_bytes(&bytes).unwrap();
+        assert_eq!(back.update_state, model.update_state);
+        assert_eq!(back.to_bytes(), bytes);
+        // corrupt EWMAs are typed errors even when the checksum is fixed up
+        let mut bad = bytes[..bytes.len() - 8].to_vec();
+        let at = bad.len() - 16; // unseen_ewma field
+        bad[at..at + 8].copy_from_slice(&2.5f64.to_le_bytes());
+        let sum = crate::util::fnv::fnv64(&bad);
+        bad.extend_from_slice(&sum.to_le_bytes());
+        assert!(matches!(ScRbModel::from_bytes(&bad), Err(ScrbError::Model(_))));
     }
 
     #[test]

@@ -434,5 +434,6 @@ pub fn assemble_scrb(
         norm: feat.norm.clone(),
         drift: Default::default(),
         unseen_warn: crate::model::DEFAULT_UNSEEN_WARN,
+        update_state: Default::default(),
     })
 }

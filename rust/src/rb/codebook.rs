@@ -118,6 +118,40 @@ impl BinTable {
         }
     }
 
+    /// Look up `key`, inserting it with the *caller-chosen* column `col`
+    /// if absent; returns `(column, inserted)`. This is the post-fit
+    /// *admission* operation: unlike [`BinTable::get_or_assign`] (whose
+    /// dense first-seen ids are local to one growing dictionary), the
+    /// caller supplies the next **global** column id, so a fitted
+    /// codebook whose tables already hold global columns can keep
+    /// growing after fit. Growth (rehash) happens only on an actual
+    /// insert — looking up known bins stays allocation-free.
+    pub fn get_or_insert(&mut self, key: u64, col: u32) -> (u32, bool) {
+        debug_assert!(col != EMPTY, "column id collides with the empty sentinel");
+        let mut i = (key as usize) & self.mask;
+        loop {
+            let c = self.cols[i];
+            if c == EMPTY {
+                break;
+            }
+            if self.keys[i] == key {
+                return (c, false);
+            }
+            i = (i + 1) & self.mask;
+        }
+        if 2 * (self.len + 1) > self.cols.len() {
+            self.grow();
+            i = (key as usize) & self.mask;
+            while self.cols[i] != EMPTY {
+                i = (i + 1) & self.mask;
+            }
+        }
+        self.keys[i] = key;
+        self.cols[i] = col;
+        self.len += 1;
+        (col, true)
+    }
+
     /// Insert (or overwrite) a bin-hash → column entry. Panics rather
     /// than hangs if the fixed-capacity table would become completely
     /// full — size it with `with_capacity(n)` for `n` distinct keys.
@@ -211,6 +245,24 @@ impl RbCodebook {
     #[inline]
     pub fn lookup(&self, j: usize, row: &[f64]) -> Option<u32> {
         self.tables[j].get(self.grids[j].bin_hash(row))
+    }
+
+    /// Bin `row` in grid `j`, **admitting** the bin as a new global
+    /// column (`self.dim`) if it was never seen before; returns
+    /// `(column, admitted)`. RB's feature map is data-independent, so
+    /// new data only ever grows the codebook — admitted bins extend the
+    /// global column space at the end, leaving every fit-time column
+    /// untouched (the incremental-update path widens the projection with
+    /// matching zero rows).
+    #[inline]
+    pub fn admit(&mut self, j: usize, row: &[f64]) -> (u32, bool) {
+        let key = self.grids[j].bin_hash(row);
+        debug_assert!(self.dim < u32::MAX as usize - 1, "column space exhausted");
+        let (col, admitted) = self.tables[j].get_or_insert(key, self.dim as u32);
+        if admitted {
+            self.dim += 1;
+        }
+        (col, admitted)
     }
 
     /// Fraction of `row`'s R bins that map to fit-time columns — a serving
@@ -310,6 +362,64 @@ mod tests {
             assert_eq!(t.get_or_assign(k), want);
         }
         assert_eq!(t.len(), h.len());
+    }
+
+    #[test]
+    fn get_or_insert_admits_caller_chosen_columns() {
+        let mut t = BinTable::with_capacity(4);
+        t.insert(10, 100);
+        t.insert(20, 200);
+        // known keys return their existing global column untouched
+        assert_eq!(t.get_or_insert(10, 999), (100, false));
+        assert_eq!(t.get_or_insert(20, 999), (200, false));
+        assert_eq!(t.len(), 2);
+        // unknown keys take exactly the caller's column
+        assert_eq!(t.get_or_insert(30, 300), (300, true));
+        assert_eq!(t.get(30), Some(300));
+        assert_eq!(t.len(), 3);
+        // admission grows past the original capacity without losing entries
+        for i in 0..200u32 {
+            let (col, ins) = t.get_or_insert(1000 + i as u64, 1000 + i);
+            assert_eq!((col, ins), (1000 + i, true));
+        }
+        assert_eq!(t.len(), 203);
+        for i in 0..200u32 {
+            assert_eq!(t.get(1000 + i as u64), Some(1000 + i));
+        }
+        assert_eq!(t.get(10), Some(100));
+    }
+
+    #[test]
+    fn codebook_admit_extends_the_global_column_space() {
+        use crate::rb::grid::sample_grids;
+        let grids = sample_grids(3, 2, 0.5, 7);
+        let tables = vec![BinTable::new(), BinTable::new(), BinTable::new()];
+        let mut cb = RbCodebook { r: 3, d_in: 2, sigma: 0.5, seed: 7, dim: 0, grids, tables };
+        let a = [0.1, 0.2];
+        let b = [5.0, -3.0];
+        // first sight of each (grid, bin) admits a fresh global column
+        let mut dim_before = cb.dim;
+        for j in 0..3 {
+            let (col, admitted) = cb.admit(j, &a);
+            assert!(admitted);
+            assert_eq!(col as usize, dim_before);
+            dim_before += 1;
+        }
+        assert_eq!(cb.dim, 3);
+        // the same point re-binned admits nothing and agrees with lookup
+        for j in 0..3 {
+            let (col, admitted) = cb.admit(j, &a);
+            assert!(!admitted);
+            assert_eq!(cb.lookup(j, &a), Some(col));
+        }
+        assert_eq!(cb.dim, 3);
+        // a far-away point lands in distinct bins appended at the end
+        for j in 0..3 {
+            let (col, admitted) = cb.admit(j, &b);
+            assert!(admitted, "far point must occupy new bins");
+            assert!(col >= 3);
+        }
+        assert_eq!(cb.dim, 6);
     }
 
     #[test]

@@ -90,5 +90,6 @@ pub fn test_model_dim(n: usize, r: usize, k: usize, d_in: usize, seed: u64) -> S
         norm: None,
         drift: DriftMonitor::default(),
         unseen_warn: DEFAULT_UNSEEN_WARN,
+        update_state: Default::default(),
     }
 }

@@ -512,6 +512,17 @@ fn status_json(shared: &Arc<Shared>) -> Json {
         .set("warnings", Json::Num(drift.warnings as f64))
         .set("rate", Json::Num(drift.rate()));
     o.set("drift", drift_o);
+    // online-maintenance history carried in the model artifact itself
+    // (SCRBMODL v3 trailer): admissions, absorbed rows, drift EWMAs.
+    let up = cur.model.update_state;
+    let mut up_o = Json::obj();
+    up_o.set("updates", Json::Num(up.updates as f64))
+        .set("rows_absorbed", Json::Num(up.rows_absorbed as f64))
+        .set("bins_admitted", Json::Num(up.bins_admitted as f64))
+        .set("refits_signaled", Json::Num(up.refits_signaled as f64))
+        .set("unseen_ewma", Json::Num(up.unseen_ewma))
+        .set("residual_ewma", Json::Num(up.residual_ewma));
+    o.set("update", up_o);
     let swaps: Vec<Json> = shared
         .slot
         .history()

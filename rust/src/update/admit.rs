@@ -1,0 +1,208 @@
+//! Chunk binning with codebook admission.
+//!
+//! Incoming update rows are brought into the model's stored input frame
+//! (the same densify + min-max mapping the streamed fit applies:
+//! implicit zeros map to `(0 − min)/span`, explicit entries to
+//! `(v − min)/span`), then binned against the fitted codebook with
+//! **admission**: a bin never seen before gets the next global column
+//! via [`RbCodebook::admit`], growing the column space at the end so
+//! every fit-time column keeps its meaning. The caller widens the
+//! projection with matching zero rows before any embedding math runs.
+//!
+//! All scratch lives in [`ChunkBins`] — once provisioned for the model's
+//! input width and the configured block size, re-binning chunks whose
+//! bins are already known allocates nothing (only an actual admission
+//! can grow the underlying tables).
+
+use crate::error::ScrbError;
+use crate::rb::RbCodebook;
+use crate::stream::SparseChunk;
+
+/// Reusable binning scratch: the dense row buffer, the precomputed
+/// normalized-zero row, and the flattened `rows × R` bin-column output.
+#[derive(Default)]
+pub struct ChunkBins {
+    dense: Vec<f64>,
+    zero_row: Vec<f64>,
+    /// Global column of every (row, grid) lookup for the most recent
+    /// [`ChunkBins::bin_rows`] call, row-major `c × R`.
+    pub bins: Vec<u32>,
+}
+
+impl ChunkBins {
+    pub fn new() -> ChunkBins {
+        ChunkBins::default()
+    }
+
+    /// Size the dense scratch for `d_in` input features and refresh the
+    /// implicit-zero row for `norm`. Idempotent and allocation-free once
+    /// the buffers have seen `d_in`.
+    fn ensure(&mut self, d_in: usize, norm: Option<(&[f64], &[f64])>) {
+        self.dense.resize(d_in, 0.0);
+        self.zero_row.resize(d_in, 0.0);
+        match norm {
+            Some((lo, span)) => {
+                for c in 0..d_in {
+                    self.zero_row[c] = (0.0 - lo[c]) / span[c];
+                }
+            }
+            None => self.zero_row.fill(0.0),
+        }
+    }
+
+    /// Densify, normalize and bin chunk rows `[r0, r1)` against
+    /// `codebook`, admitting unseen bins. `chunk_base` is the codebook
+    /// dimension at the start of the whole update chunk: every lookup
+    /// that lands at or past it would have missed the *fit-time*
+    /// codebook, which is the pre-admission unseen count the drift
+    /// tracker wants. Returns `(admitted, unseen_hits)`; the per-lookup
+    /// columns land in `self.bins` (row-major `(r1 − r0) × R`).
+    pub fn bin_rows(
+        &mut self,
+        codebook: &mut RbCodebook,
+        norm: Option<(&[f64], &[f64])>,
+        chunk: &SparseChunk,
+        r0: usize,
+        r1: usize,
+        chunk_base: usize,
+    ) -> Result<(usize, usize), ScrbError> {
+        let d_in = codebook.d_in;
+        let r = codebook.r;
+        self.ensure(d_in, norm);
+        self.bins.clear();
+        self.bins.resize((r1 - r0) * r, 0);
+        let mut admitted = 0usize;
+        let mut unseen = 0usize;
+        for (bi, i) in (r0..r1).enumerate() {
+            let (cols, vals) = chunk.row(i);
+            self.dense.copy_from_slice(&self.zero_row);
+            for (&c, &v) in cols.iter().zip(vals.iter()) {
+                let c = c as usize;
+                if c >= d_in {
+                    return Err(ScrbError::invalid_input(format!(
+                        "update chunk row {i} has feature index {c}, but the model was \
+                         fitted on {d_in} input features"
+                    )));
+                }
+                self.dense[c] = match norm {
+                    Some((lo, span)) => (v - lo[c]) / span[c],
+                    None => v,
+                };
+            }
+            let out = &mut self.bins[bi * r..(bi + 1) * r];
+            for (j, slot) in out.iter_mut().enumerate() {
+                let (col, was_admitted) = codebook.admit(j, &self.dense);
+                admitted += was_admitted as usize;
+                unseen += (col as usize >= chunk_base) as usize;
+                *slot = col;
+            }
+        }
+        Ok((admitted, unseen))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rb::rb_features_with_codebook;
+    use crate::util::rng::Pcg;
+
+    fn chunk_from_rows(x: &Mat, rows: std::ops::Range<usize>) -> SparseChunk {
+        let mut c = SparseChunk::new();
+        for i in rows {
+            c.begin_row(0);
+            for (j, &v) in x.row(i).iter().enumerate() {
+                c.push_entry(j as u32, v);
+            }
+            c.end_row();
+        }
+        c
+    }
+
+    #[test]
+    fn known_rows_bin_without_admission_and_match_lookup() {
+        let mut rng = Pcg::seed(5);
+        let n = 40;
+        let x = Mat::from_vec(n, 3, (0..n * 3).map(|_| rng.f64()).collect());
+        let (_, mut cb) = rb_features_with_codebook(&x, 6, 0.5, 11);
+        let dim0 = cb.dim;
+        let chunk = chunk_from_rows(&x, 0..n);
+        let mut ws = ChunkBins::new();
+        let (admitted, unseen) = ws.bin_rows(&mut cb, None, &chunk, 0, n, dim0).unwrap();
+        assert_eq!((admitted, unseen), (0, 0), "training rows are all known");
+        assert_eq!(cb.dim, dim0);
+        for i in 0..n {
+            for j in 0..cb.r {
+                assert_eq!(Some(ws.bins[i * cb.r + j]), cb.lookup(j, x.row(i)));
+            }
+        }
+    }
+
+    #[test]
+    fn shifted_rows_admit_new_tail_columns() {
+        let mut rng = Pcg::seed(6);
+        let n = 30;
+        let x = Mat::from_vec(n, 3, (0..n * 3).map(|_| rng.f64()).collect());
+        let (_, mut cb) = rb_features_with_codebook(&x, 4, 0.5, 13);
+        let dim0 = cb.dim;
+        let far = Mat::from_vec(2, 3, vec![50.0, -40.0, 30.0, 51.0, -41.0, 31.0]);
+        let chunk = chunk_from_rows(&far, 0..2);
+        let mut ws = ChunkBins::new();
+        let (admitted, unseen) = ws.bin_rows(&mut cb, None, &chunk, 0, 2, dim0).unwrap();
+        assert!(admitted > 0, "far rows must admit");
+        assert!(unseen >= admitted, "every admitted lookup counts as unseen");
+        assert_eq!(cb.dim, dim0 + admitted);
+        // admitted columns are contiguous at the end of the column space
+        for &c in &ws.bins {
+            assert!((c as usize) < cb.dim);
+        }
+        // binning the same rows again: fully known now
+        let (a2, u2) = ws.bin_rows(&mut cb, None, &chunk, 0, 2, cb.dim).unwrap();
+        assert_eq!((a2, u2), (0, 0));
+    }
+
+    #[test]
+    fn normalization_matches_the_streamed_frame() {
+        // one feature, norm (min=1, span=2): implicit zero -> -0.5, v=3 -> 1.0
+        use crate::rb::grid::sample_grids;
+        use crate::rb::BinTable;
+        let grids = sample_grids(2, 2, 0.7, 3);
+        let mut cb = RbCodebook {
+            r: 2,
+            d_in: 2,
+            sigma: 0.7,
+            seed: 3,
+            dim: 0,
+            grids,
+            tables: vec![BinTable::new(), BinTable::new()],
+        };
+        let lo = vec![1.0, 1.0];
+        let span = vec![2.0, 2.0];
+        let mut sparse = SparseChunk::new();
+        sparse.begin_row(0);
+        sparse.push_entry(1, 3.0); // feature 0 implicit zero
+        sparse.end_row();
+        let mut ws = ChunkBins::new();
+        ws.bin_rows(&mut cb, Some((&lo, &span)), &sparse, 0, 1, 0).unwrap();
+        // the dense frame the row was binned in is [-0.5, 1.0]
+        let expect = [-0.5, 1.0];
+        for j in 0..2 {
+            assert_eq!(Some(ws.bins[j]), cb.lookup(j, &expect));
+        }
+    }
+
+    #[test]
+    fn out_of_range_feature_is_a_typed_error() {
+        let mut rng = Pcg::seed(7);
+        let x = Mat::from_vec(10, 2, (0..20).map(|_| rng.f64()).collect());
+        let (_, mut cb) = rb_features_with_codebook(&x, 3, 0.5, 17);
+        let mut sparse = SparseChunk::new();
+        sparse.begin_row(0);
+        sparse.push_entry(9, 1.0);
+        sparse.end_row();
+        let mut ws = ChunkBins::new();
+        let e = ws.bin_rows(&mut cb, None, &sparse, 0, 1, cb.dim).unwrap_err();
+        assert!(matches!(e, ScrbError::InvalidInput(_)), "{e}");
+    }
+}

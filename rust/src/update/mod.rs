@@ -1,0 +1,431 @@
+//! Online model maintenance: incremental codebook expansion, subspace
+//! tracking, and the drift-triggered refit escalation.
+//!
+//! A fitted [`ScRbModel`] ages as the data distribution moves: serving
+//! rows start landing in bins the fit never saw (counted by the serving
+//! [`DriftMonitor`]), and even in-vocabulary rows stop being expressible
+//! by the tracked rank-k subspace. Refitting from scratch on every batch
+//! of new data throws away the paper's R-sparsity advantage — the model
+//! is a *codebook*, and codebooks can grow. This module maintains a live
+//! model from data chunks at a small fraction of refit cost:
+//!
+//! 1. **Admission** ([`admit`]): new rows are binned against the fitted
+//!    codebook; unseen bins get fresh global columns at the end of the
+//!    column space ([`RbCodebook::admit`]) and the projection `P` is
+//!    widened with matching zero rows. Fit-time columns never move.
+//! 2. **Subspace tracking** ([`subspace`]): each sub-block of rows is
+//!    folded into `(P, σ)` by a Brand-style rank-k incremental SVD. The
+//!    residual basis is restricted to the sub-block's freshly admitted
+//!    columns (orthogonal to the old basis by construction); the dropped
+//!    in-span residual mass is *measured* and fed to the drift tracker.
+//! 3. **Warm-start K-means**: after the subspace refresh, the previous
+//!    centroids — rotated into the new coordinates — are polished by a
+//!    few damped Lloyd passes over the chunk's embedding. No reseeding,
+//!    no replicates: the previous solution is the seed.
+//! 4. **Drift-triggered refit** ([`drift`]): EWMAs of the unseen-bin
+//!    rate and the subspace residual persist in the model
+//!    ([`UpdateState`], the SCRBMODL v3 trailer). Past a configured
+//!    threshold, [`ScRbModel::update`] returns
+//!    [`UpdateOutcome::RefitNeeded`] and the caller escalates to the
+//!    full streamed refit (`scrb update --refit`, or the serve daemon's
+//!    validated hot-swap slot).
+//!
+//! The hot path is allocation-free at steady state: all scratch lives in
+//! a caller-owned [`UpdateWorkspace`] (the same reusable-workspace
+//! discipline as the solver and serving paths), and only an actual
+//! admission — a genuinely new bin — touches the heap.
+//!
+//! In-distribution chunks are **byte-invisible**: a chunk that admits
+//! nothing and whose residual stays under [`UpdateConfig::residual_tol`]
+//! skips the subspace fold entirely, so the saved model changes only in
+//! its persisted update counters (a property `tests/update.rs` checks
+//! byte for byte).
+//!
+//! [`DriftMonitor`]: crate::model::DriftMonitor
+//! [`RbCodebook::admit`]: crate::rb::RbCodebook::admit
+//! [`UpdateState`]: crate::model::UpdateState
+
+pub mod admit;
+pub mod drift;
+pub mod subspace;
+
+pub use admit::ChunkBins;
+pub use drift::{DriftTracker, UpdateOutcome};
+pub use subspace::SubspaceStep;
+
+pub use crate::config::UpdateConfig;
+
+use crate::error::ScrbError;
+use crate::kmeans::nearest_centroid;
+use crate::linalg::Mat;
+use crate::model::ScRbModel;
+use crate::stream::{ChunkReader, GuardedReader, IngestPolicy, Quarantine, SparseChunk};
+
+/// What one [`ScRbModel::update`] call did.
+#[derive(Clone, Debug)]
+pub struct UpdateReport {
+    /// Keep serving incrementally, or escalate to a full refit.
+    pub outcome: UpdateOutcome,
+    /// Rows absorbed from this chunk.
+    pub rows: usize,
+    /// Bins admitted (new global columns) by this chunk.
+    pub admitted: usize,
+    /// This chunk's pre-admission unseen-bin rate over `rows × R`
+    /// lookups.
+    pub unseen_rate: f64,
+    /// Mean fraction of per-row embedding energy outside the tracked
+    /// subspace (before the fold).
+    pub residual_ratio: f64,
+    /// Persisted EWMA of `unseen_rate` after this update.
+    pub unseen_ewma: f64,
+    /// Persisted EWMA of `residual_ratio` after this update.
+    pub residual_ewma: f64,
+}
+
+/// Caller-owned scratch for [`ScRbModel::update`]: binning buffers, the
+/// incremental-SVD step, Lloyd-polish accumulators, and the drift
+/// tracker (created lazily from the first update's
+/// [`UpdateConfig::seed`], so a fresh workspace replays the same
+/// trigger pattern). Reuse one workspace across a maintenance session —
+/// steady-state updates then never allocate.
+#[derive(Default)]
+pub struct UpdateWorkspace {
+    bins: ChunkBins,
+    step: SubspaceStep,
+    /// Whole-chunk bin table (rows × R) for the post-fold Lloyd polish.
+    all_bins: Vec<u32>,
+    emb: Vec<f64>,
+    accum: Mat,
+    counts: Vec<f64>,
+    tracker: Option<DriftTracker>,
+}
+
+impl UpdateWorkspace {
+    pub fn new() -> UpdateWorkspace {
+        UpdateWorkspace::default()
+    }
+}
+
+impl ScRbModel {
+    /// Absorb one chunk of new rows into the fitted model: admit unseen
+    /// bins, fold the rows into the spectral subspace, polish the
+    /// k-means centroids, and account the drift (see the [module
+    /// docs](crate::update)). Returns
+    /// [`UpdateOutcome::RefitNeeded`] in the report when the persisted
+    /// drift EWMAs cross the configured thresholds — the model is still
+    /// updated and serviceable, but a full refit is advised.
+    ///
+    /// Rows must be in the model's *raw* input frame (the same frame the
+    /// fit ingested); the stored normalization is re-applied here.
+    pub fn update(
+        &mut self,
+        chunk: &SparseChunk,
+        cfg: &UpdateConfig,
+        ws: &mut UpdateWorkspace,
+    ) -> Result<UpdateReport, ScrbError> {
+        cfg.validate()?;
+        let rows = chunk.rows();
+        if rows == 0 {
+            // Nothing observed: bump the call counter, leave every other
+            // byte of the model — EWMAs included — untouched.
+            self.update_state.updates += 1;
+            return Ok(UpdateReport {
+                outcome: UpdateOutcome::Updated,
+                rows: 0,
+                admitted: 0,
+                unseen_rate: 0.0,
+                residual_ratio: 0.0,
+                unseen_ewma: self.update_state.unseen_ewma,
+                residual_ewma: self.update_state.residual_ewma,
+            });
+        }
+        let k = self.embed_dim();
+        let r = self.codebook.r;
+        let chunk_base = self.codebook.dim;
+        let mut admitted_total = 0usize;
+        let mut unseen_total = 0usize;
+        let mut rho2_total = 0.0f64;
+        let mut did_fold = false;
+        ws.all_bins.clear();
+        let mut r0 = 0usize;
+        while r0 < rows {
+            let r1 = (r0 + cfg.block).min(rows);
+            let block_base = self.codebook.dim;
+            let norm = self.norm.as_ref().map(|(lo, span)| (lo.as_slice(), span.as_slice()));
+            let (admitted, unseen) =
+                ws.bins.bin_rows(&mut self.codebook, norm, chunk, r0, r1, chunk_base)?;
+            if admitted > 0 {
+                // Widen P with zero rows for the admitted columns; the
+                // fold below rotates real mass into them.
+                self.proj.data.resize(self.codebook.dim * k, 0.0);
+                self.proj.rows = self.codebook.dim;
+            }
+            let c = r1 - r0;
+            let rho2 = ws.step.measure(&self.proj, &self.s, &ws.bins.bins, c, r, block_base);
+            if admitted > 0 || rho2 / c as f64 > cfg.residual_tol {
+                ws.step.fold(&mut self.proj, &mut self.s, &mut self.centroids, block_base);
+                did_fold = true;
+            }
+            admitted_total += admitted;
+            unseen_total += unseen;
+            rho2_total += rho2;
+            ws.all_bins.extend_from_slice(&ws.bins.bins);
+            r0 = r1;
+        }
+        if did_fold {
+            self.polish_centroids(cfg, ws, rows);
+        }
+        let unseen_rate = unseen_total as f64 / (rows * r) as f64;
+        let residual_ratio = rho2_total / rows as f64;
+        let tracker = ws.tracker.get_or_insert_with(|| DriftTracker::new(cfg));
+        let st = &mut self.update_state;
+        let outcome = tracker.observe(st, cfg, unseen_rate, residual_ratio);
+        st.updates += 1;
+        st.rows_absorbed += rows as u64;
+        st.bins_admitted += admitted_total as u64;
+        Ok(UpdateReport {
+            outcome,
+            rows,
+            admitted: admitted_total,
+            unseen_rate,
+            residual_ratio,
+            unseen_ewma: st.unseen_ewma,
+            residual_ewma: st.residual_ewma,
+        })
+    }
+
+    /// Damped warm-start Lloyd passes over the chunk's (post-fold)
+    /// embedding: each centroid carries a pseudo-count of prior mass so
+    /// a small chunk nudges rather than overwrites the solution.
+    /// Deterministic — no reseeding, fixed iteration count.
+    fn polish_centroids(&mut self, cfg: &UpdateConfig, ws: &mut UpdateWorkspace, rows: usize) {
+        let kc = self.centroids.rows;
+        let k = self.embed_dim();
+        if kc == 0 || cfg.lloyd_iters == 0 {
+            return;
+        }
+        let r = self.codebook.r;
+        let prior = (self.update_state.rows_absorbed as f64 / kc as f64).max(16.0);
+        ws.emb.resize(k, 0.0);
+        ws.counts.resize(kc, 0.0);
+        for _ in 0..cfg.lloyd_iters {
+            ws.accum.reset(kc, k);
+            for ci in 0..kc {
+                let crow = self.centroids.row(ci);
+                for (a, &cv) in ws.accum.row_mut(ci).iter_mut().zip(crow.iter()) {
+                    *a = prior * cv;
+                }
+                ws.counts[ci] = prior;
+            }
+            for i in 0..rows {
+                ws.emb.fill(0.0);
+                for &b in &ws.all_bins[i * r..(i + 1) * r] {
+                    for (e, p) in ws.emb.iter_mut().zip(self.proj.row(b as usize).iter()) {
+                        *e += *p;
+                    }
+                }
+                let nrm = ws.emb.iter().map(|v| v * v).sum::<f64>().sqrt();
+                if nrm > 1e-300 {
+                    for v in ws.emb.iter_mut() {
+                        *v /= nrm;
+                    }
+                }
+                let (best, _) = nearest_centroid(&ws.emb, &self.centroids);
+                let arow = ws.accum.row_mut(best as usize);
+                for (a, &e) in arow.iter_mut().zip(ws.emb.iter()) {
+                    *a += e;
+                }
+                ws.counts[best as usize] += 1.0;
+            }
+            for ci in 0..kc {
+                let inv = 1.0 / ws.counts[ci];
+                for (cv, &a) in self.centroids.row_mut(ci).iter_mut().zip(ws.accum.row(ci).iter())
+                {
+                    *cv = a * inv;
+                }
+            }
+        }
+    }
+}
+
+/// Aggregate result of [`update_streaming`].
+#[derive(Debug, Default)]
+pub struct StreamUpdate {
+    /// One report per absorbed chunk, in stream order.
+    pub reports: Vec<UpdateReport>,
+    /// Total rows absorbed.
+    pub rows: usize,
+    /// Total bins admitted.
+    pub admitted: usize,
+    /// `RefitNeeded` iff the pass stopped early on a drift signal.
+    pub refit_needed: bool,
+    /// Ingest-policy report (quarantined rows, absorbed retries) for the
+    /// pass.
+    pub quarantine: Quarantine,
+}
+
+/// Maintain `model` from a whole stream: chunks pass through the same
+/// hardened ingest stack as the streamed fit ([`GuardedReader`]:
+/// bounded transient retries, quarantine screening under the configured
+/// [`IngestPolicy`]), each absorbed by [`ScRbModel::update`]. Stops at
+/// the first [`UpdateOutcome::RefitNeeded`] — absorbing more chunks
+/// incrementally once the model has asked for a refit only compounds
+/// the drift — and reports how far it got.
+pub fn update_streaming(
+    model: &mut ScRbModel,
+    reader: &mut dyn ChunkReader,
+    cfg: &UpdateConfig,
+    policy: IngestPolicy,
+    ws: &mut UpdateWorkspace,
+) -> Result<StreamUpdate, ScrbError> {
+    let mut guarded = GuardedReader::new(reader, policy);
+    let mut chunk = SparseChunk::new();
+    let mut out = StreamUpdate::default();
+    while guarded.next_chunk(&mut chunk)? {
+        if chunk.rows() == 0 {
+            continue;
+        }
+        let rep = model.update(&chunk, cfg, ws)?;
+        out.rows += rep.rows;
+        out.admitted += rep.admitted;
+        let refit = rep.outcome == UpdateOutcome::RefitNeeded;
+        out.reports.push(rep);
+        if refit {
+            out.refit_needed = true;
+            break;
+        }
+    }
+    out.quarantine = guarded.report();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::UPDATE_TRAILER_BYTES;
+    use crate::serve::test_model;
+    use crate::stream::LibsvmChunks;
+    use crate::util::rng::Pcg;
+
+    /// Model bytes with the mutable tail (update trailer + checksum)
+    /// masked off.
+    fn frozen_prefix(m: &ScRbModel) -> Vec<u8> {
+        let mut b = m.to_bytes();
+        b.truncate(b.len() - UPDATE_TRAILER_BYTES - 8);
+        b
+    }
+
+    fn known_chunk(seed: u64, rows: usize) -> SparseChunk {
+        // test_model(seed) builds its codebook over Pcg(seed) uniforms —
+        // replaying the generator reproduces in-vocabulary rows.
+        let mut rng = Pcg::seed(seed);
+        let mut c = SparseChunk::new();
+        for _ in 0..rows {
+            c.begin_row(0);
+            for j in 0..3 {
+                c.push_entry(j, rng.f64());
+            }
+            c.end_row();
+        }
+        c
+    }
+
+    #[test]
+    fn zero_row_chunk_only_bumps_the_call_counter() {
+        let mut m = test_model(50, 4, 3, 9);
+        let before = frozen_prefix(&m);
+        let chunk = SparseChunk::new();
+        let mut ws = UpdateWorkspace::new();
+        let rep = m.update(&chunk, &UpdateConfig::default(), &mut ws).unwrap();
+        assert_eq!(rep.outcome, UpdateOutcome::Updated);
+        assert_eq!(m.update_state.updates, 1);
+        assert_eq!(m.update_state.rows_absorbed, 0);
+        assert_eq!((m.update_state.unseen_ewma, m.update_state.residual_ewma), (0.0, 0.0));
+        assert_eq!(frozen_prefix(&m), before, "no byte outside the trailer moved");
+    }
+
+    #[test]
+    fn all_known_chunk_below_threshold_is_byte_invisible() {
+        let mut m = test_model(50, 4, 3, 9);
+        let before = frozen_prefix(&m);
+        let chunk = known_chunk(9, 50);
+        let mut ws = UpdateWorkspace::new();
+        let rep = m.update(&chunk, &UpdateConfig::default(), &mut ws).unwrap();
+        assert_eq!(rep.admitted, 0, "replayed training rows are all in vocabulary");
+        assert_eq!(rep.unseen_rate, 0.0);
+        assert_eq!(frozen_prefix(&m), before, "gate kept the fold off");
+        assert_eq!(m.update_state.rows_absorbed, 50);
+    }
+
+    #[test]
+    fn drifted_chunk_admits_widens_and_roundtrips() {
+        let mut m = test_model(40, 4, 3, 11);
+        let dim0 = m.codebook.dim;
+        let mut c = SparseChunk::new();
+        for i in 0..8 {
+            c.begin_row(0);
+            for j in 0..3u32 {
+                c.push_entry(j, 40.0 + (i * 3 + j as usize) as f64);
+            }
+            c.end_row();
+        }
+        let mut ws = UpdateWorkspace::new();
+        let rep = m.update(&c, &UpdateConfig::default(), &mut ws).unwrap();
+        assert!(rep.admitted > 0);
+        assert!(rep.unseen_rate > 0.0);
+        assert_eq!(m.codebook.dim, dim0 + rep.admitted);
+        assert_eq!(m.proj.rows, m.codebook.dim, "P widened to cover admissions");
+        assert_eq!(m.update_state.bins_admitted, rep.admitted as u64);
+        // the grown model persists and reloads exactly
+        let bytes = m.to_bytes();
+        let back = ScRbModel::from_bytes(&bytes).unwrap();
+        assert_eq!(back.codebook.dim, m.codebook.dim);
+        assert_eq!(back.update_state, m.update_state);
+        assert_eq!(back.to_bytes(), bytes);
+    }
+
+    #[test]
+    fn update_streaming_quarantines_and_reports() {
+        let mut m = test_model(40, 4, 3, 13);
+        let text = b"0 1:0.5 2:0.5 3:0.5\n0 1:bad 2:x\n0 1:0.2 2:0.4 3:0.1\n".to_vec();
+        let mut reader = LibsvmChunks::from_bytes(text, 2);
+        let mut ws = UpdateWorkspace::new();
+        let policy = IngestPolicy {
+            on_bad_record: crate::stream::OnBadRecord::Quarantine,
+            retry_backoff_ms: 0,
+            ..Default::default()
+        };
+        let out =
+            update_streaming(&mut m, &mut reader, &UpdateConfig::default(), policy, &mut ws)
+                .unwrap();
+        assert_eq!(out.rows, 2, "good rows absorbed");
+        assert_eq!(out.quarantine.skipped(), 1, "bad row quarantined, not fatal");
+        assert!(!out.refit_needed);
+        assert_eq!(m.update_state.rows_absorbed, 2);
+    }
+
+    #[test]
+    fn sustained_drift_escalates_to_refit() {
+        let mut m = test_model(40, 4, 3, 17);
+        let cfg = UpdateConfig { ewma: 0.9, unseen_refit: 0.3, ..Default::default() };
+        let mut ws = UpdateWorkspace::new();
+        let mut fired_at = None;
+        for step in 0..6 {
+            let mut c = SparseChunk::new();
+            for i in 0..10 {
+                c.begin_row(0);
+                for j in 0..3u32 {
+                    c.push_entry(j, 1000.0 + (step * 100 + i * 3 + j as usize) as f64);
+                }
+                c.end_row();
+            }
+            let rep = m.update(&c, &cfg, &mut ws).unwrap();
+            if rep.outcome == UpdateOutcome::RefitNeeded {
+                fired_at = Some(step);
+                break;
+            }
+        }
+        assert!(fired_at.is_some(), "saturated unseen rate must trigger");
+        assert_eq!(m.update_state.refits_signaled, 1);
+    }
+}

@@ -12,22 +12,29 @@
 //! once a `ServeWorkspace` is warm and the output vector is sized,
 //! steady-state `predict_batch` calls perform **zero** heap allocations.
 //!
+//! The online-maintenance contract (ISSUE 10) too: once an
+//! `UpdateWorkspace` is warm, in-vocabulary update chunks — with the
+//! subspace fold *forced* via a negative `residual_tol`, so the whole
+//! incremental-SVD + Lloyd-polish path runs — allocate nothing, and the
+//! allocation count is invariant to the Lloyd iteration budget.
+//!
 //! Measured single-threaded (`SCRB_THREADS=1`): with worker threads the
 //! scoped fork/join bookkeeping allocates O(threads) per parallel section —
 //! data-size independent — which is the documented residual. Everything is
 //! in one #[test] because the allocator counters are process-global.
 
 use scrb::cluster::{Env, MethodKind};
-use scrb::config::{Engine, Kernel, PipelineConfig};
+use scrb::config::{Engine, Kernel, PipelineConfig, UpdateConfig};
 use scrb::eigen::compressive::{sample_rows, tikhonov_interpolate};
 use scrb::eigen::{
     compressive_svd_ws, davidson_svd_ws, lanczos_svd_ws, CompressiveOpts, DavidsonOpts,
     LanczosOpts, SolverWorkspace,
 };
 use scrb::linalg::Mat;
-use scrb::model::{FittedModel, ServeWorkspace};
+use scrb::model::{FittedModel, ScRbModel, ServeWorkspace};
 use scrb::rb::rb_features;
 use scrb::stream::{ChunkReader, LibsvmChunks, SparseChunk, StreamFeaturizer, StreamStats};
+use scrb::update::UpdateWorkspace;
 use scrb::util::alloc_count::{allocations, CountingAlloc};
 use scrb::util::rng::Pcg;
 
@@ -246,4 +253,47 @@ fn fused_gram_and_solver_steady_state_are_allocation_free() {
     let feats = fz.finish().unwrap();
     assert_eq!(feats.z.rows, n_stream);
     assert_eq!(feats.labels.len(), n_stream);
+
+    // -- online update hot path (ISSUE 10): in-vocabulary chunks with the
+    // subspace fold FORCED (residual_tol < 0), so every stage runs —
+    // binning, incremental SVD, centroid rotation, Lloyd polish, drift
+    // tracking. Once the workspace is warm, steady-state updates must not
+    // touch the heap: only an actual bin admission may allocate.
+    let mut model = *fitted.model.into_any().downcast::<ScRbModel>().ok().unwrap();
+    chunk.clear();
+    for i in 0..64 {
+        chunk.begin_row(0);
+        for (j, &v) in x.row(i).iter().enumerate() {
+            chunk.push_entry(j as u32, v);
+        }
+        chunk.end_row();
+    }
+    let ucfg = |lloyd: usize| UpdateConfig {
+        residual_tol: -1.0,
+        lloyd_iters: lloyd,
+        ..Default::default()
+    };
+    let mut uws = UpdateWorkspace::new();
+    // warm twice: the first call provisions every buffer and the tracker
+    for _ in 0..2 {
+        let rep = model.update(&chunk, &ucfg(3), &mut uws).unwrap();
+        assert_eq!(rep.admitted, 0, "training rows must all be in vocabulary");
+    }
+    let before = allocations();
+    for _ in 0..5 {
+        model.update(&chunk, &ucfg(3), &mut uws).unwrap();
+    }
+    assert_eq!(allocations() - before, 0, "update allocated in steady state");
+
+    // the Lloyd budget changes the work, not the allocation count
+    let a8 = allocations();
+    model.update(&chunk, &ucfg(1), &mut uws).unwrap();
+    let lloyd_short = allocations() - a8;
+    let a9 = allocations();
+    model.update(&chunk, &ucfg(5), &mut uws).unwrap();
+    let lloyd_long = allocations() - a9;
+    assert_eq!(
+        lloyd_short, lloyd_long,
+        "Lloyd passes allocate: {lloyd_short} vs {lloyd_long}"
+    );
 }

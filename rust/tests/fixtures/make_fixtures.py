@@ -1,0 +1,81 @@
+#!/usr/bin/env python3
+"""Generate the committed SCRBMODL v1/v2 fixture files.
+
+The version-compat contract ("old model files keep loading") is only
+testable against images whose bytes are *frozen* — re-deriving them from
+the current writer would test nothing (the writer only emits the current
+version). This script is the provenance of `model_v1.scrb` and
+`model_v2.scrb`: a tiny but loader-valid model laid out by hand,
+byte-compatible with the v1/v2 readers:
+
+  v1: no checksum footer, no update trailer
+  v2: FNV-1a 64 footer over the payload, no update trailer
+
+Layout (little-endian; see rust/src/model/scrb.rs):
+  magic "SCRBMODL" | u32 version | u8 ktag | f64 ksigma | u64 seed |
+  u32 r | u32 d_in | u64 dim | u32 k_embed | u32 k_clusters |
+  f64 cb_sigma | u8 norm_tag (0) | f64 s[k_embed] |
+  r × (f64 widths[d_in], f64 biases[d_in]) |
+  r × (u32 n, n × (u64 hash, u32 col)) |
+  f64 proj[dim × k_embed] | f64 centroids[k_clusters × k_embed]
+
+Run from this directory: python3 make_fixtures.py
+"""
+
+import struct
+from pathlib import Path
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x00000100000001B3
+
+
+def fnv64(data: bytes) -> int:
+    h = FNV_OFFSET
+    for b in data:
+        h ^= b
+        h = (h * FNV_PRIME) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def payload(version: int) -> bytes:
+    out = bytearray()
+    out += b"SCRBMODL"
+    out += struct.pack("<I", version)
+    out += struct.pack("<B", 0)  # kernel tag: laplacian
+    out += struct.pack("<d", 0.5)  # kernel sigma
+    out += struct.pack("<Q", 7)  # codebook seed
+    out += struct.pack("<I", 2)  # r (grids)
+    out += struct.pack("<I", 2)  # d_in
+    out += struct.pack("<Q", 4)  # dim (global bins)
+    out += struct.pack("<I", 2)  # k_embed
+    out += struct.pack("<I", 2)  # k_clusters
+    out += struct.pack("<d", 0.5)  # codebook sigma
+    out += struct.pack("<B", 0)  # no input normalization
+    out += struct.pack("<2d", 1.0, 0.5)  # singular values, descending
+    # grids: widths must be positive/finite, biases finite
+    for bias in (0.1, 0.2):
+        out += struct.pack("<2d", 0.7, 0.7)  # widths
+        out += struct.pack("<2d", bias, bias / 2)  # biases
+    # bin tables: columns partition 0..dim, ascending per table
+    for cols in ((0, 1), (2, 3)):
+        out += struct.pack("<I", len(cols))
+        for col in cols:
+            out += struct.pack("<QI", 0x1000 + 7 * col, col)
+    # projection rows (dim × k_embed) and centroids (k_clusters × k_embed)
+    out += struct.pack("<8d", 0.5, 0.1, -0.2, 0.4, 0.3, -0.1, 0.0, 0.25)
+    out += struct.pack("<4d", 0.9, 0.1, -0.1, 0.8)
+    return bytes(out)
+
+
+def main() -> None:
+    here = Path(__file__).resolve().parent
+    v1 = payload(1)
+    (here / "model_v1.scrb").write_bytes(v1)
+    v2 = payload(2)
+    (here / "model_v2.scrb").write_bytes(v2 + struct.pack("<Q", fnv64(v2)))
+    print(f"model_v1.scrb: {len(v1)} bytes")
+    print(f"model_v2.scrb: {len(v2) + 8} bytes")
+
+
+if __name__ == "__main__":
+    main()

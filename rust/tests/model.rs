@@ -201,6 +201,107 @@ fn every_method_fits_through_the_model_trait() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// SCRBMODL version compatibility (ISSUE 10 satellite)
+//
+// The committed fixtures under tests/fixtures/ are byte-frozen v1 and v2
+// images (provenance: tests/fixtures/make_fixtures.py). They pin the
+// promise that files written by older builds keep loading verbatim — a
+// promise that cannot be tested by round-tripping through the current
+// writer, which only emits the current version.
+// ---------------------------------------------------------------------------
+
+/// The two frozen pre-v3 images, as (version, bytes).
+const FIXTURES: [(u32, &[u8]); 2] = [
+    (1, include_bytes!("fixtures/model_v1.scrb")),
+    (2, include_bytes!("fixtures/model_v2.scrb")),
+];
+
+#[test]
+fn committed_v1_and_v2_fixtures_load_under_the_v3_reader() {
+    use scrb::model::UpdateState;
+    for (version, bytes) in FIXTURES {
+        let model = ScRbModel::from_bytes(bytes)
+            .unwrap_or_else(|e| panic!("v{version} fixture failed to load: {e}"));
+        // header fields as written by make_fixtures.py
+        assert_eq!(model.codebook.r, 2, "v{version}");
+        assert_eq!(model.codebook.d_in, 2, "v{version}");
+        assert_eq!(model.codebook.dim, 4, "v{version}");
+        assert_eq!(model.codebook.seed, 7, "v{version}");
+        assert_eq!(model.s.len(), 2, "v{version}");
+        assert_eq!(model.n_clusters(), 2, "v{version}");
+        assert_eq!(model.input_dim(), 2, "v{version}");
+        assert!(model.norm.is_none(), "v{version}");
+        // pre-v3 files carry no trailer: maintenance state starts fresh
+        assert_eq!(model.update_state, UpdateState::default(), "v{version}");
+        // the hand-written model must actually serve
+        let x = Mat::from_vec(2, 2, vec![0.3, 0.9, 1.4, 0.2]);
+        let labels = model.predict(&x).unwrap();
+        assert!(labels.iter().all(|&l| l < 2), "v{version}: {labels:?}");
+        // and re-saving writes a loadable v3 image with the same behavior
+        let v3 = model.to_bytes();
+        let reloaded = ScRbModel::from_bytes(&v3).unwrap();
+        assert_eq!(reloaded.predict(&x).unwrap(), labels, "v{version}");
+    }
+}
+
+#[test]
+fn v2_fixture_with_flipped_payload_fails_its_checksum() {
+    // the v2 footer guards the payload: any flipped bit is caught
+    let (_, bytes) = FIXTURES[1];
+    let mut bad = bytes.to_vec();
+    bad[40] ^= 0x10; // somewhere in the header scalars
+    assert!(matches!(
+        ScRbModel::from_bytes(&bad).unwrap_err(),
+        ScrbError::Model(_)
+    ));
+}
+
+/// Fit a small real model and return its v3 bytes.
+fn v3_bytes() -> Vec<u8> {
+    let ds = synth::gaussian_blobs(150, 3, 2, 8.0, 81);
+    let fitted = fit_scrb(rb_cfg(2, 32, 0.7, 81), &ds.x);
+    fitted.model.to_bytes()
+}
+
+#[test]
+fn v3_truncation_at_any_cut_is_a_typed_model_error() {
+    let bytes = v3_bytes();
+    let n = bytes.len();
+    // every cut through the trailer + footer, plus strided interior cuts
+    let cuts = (0..n)
+        .filter(|&c| c + 128 >= n || c % 101 == 0)
+        .collect::<Vec<_>>();
+    for cut in cuts {
+        match ScRbModel::from_bytes(&bytes[..cut]) {
+            Err(ScrbError::Model(_)) => {}
+            Err(other) => panic!("cut at {cut}/{n}: wrong error kind {other}"),
+            Ok(_) => panic!("cut at {cut}/{n} still loaded"),
+        }
+    }
+}
+
+#[test]
+fn v3_bit_flips_are_typed_model_errors() {
+    let bytes = v3_bytes();
+    let n = bytes.len();
+    // every bit of the trailer + footer, plus strided interior bytes
+    let positions = (0..n)
+        .filter(|&p| p + 56 + 8 >= n || p % 61 == 0)
+        .collect::<Vec<_>>();
+    for pos in positions {
+        for bit in 0..8 {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 1 << bit;
+            match ScRbModel::from_bytes(&bad) {
+                Err(ScrbError::Model(_)) => {}
+                Err(other) => panic!("flip {pos}.{bit}: wrong error kind {other}"),
+                Ok(_) => panic!("flip {pos}.{bit} still loaded"),
+            }
+        }
+    }
+}
+
 #[test]
 fn model_error_paths_are_typed() {
     let ds = synth::gaussian_blobs(150, 3, 2, 8.0, 71);

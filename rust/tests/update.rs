@@ -1,0 +1,253 @@
+//! Online model maintenance, end to end (ISSUE 10 acceptance):
+//!
+//! - **Byte invisibility**: a zero-row chunk and an all-known,
+//!   below-threshold chunk leave the saved model byte-identical except
+//!   for the persisted update counters (the v3 trailer + checksum).
+//! - **Admission**: drifted rows grow the codebook and the projection in
+//!   lockstep, and the grown model save/load round-trips exactly.
+//! - **Quality**: after absorbing held-out chunks incrementally, the
+//!   updated model's NMI on the full set is within 0.05 of a full refit
+//!   over everything.
+//! - **Determinism**: under a fixed [`UpdateConfig::seed`] the
+//!   drift-triggered refit escalation fires at the same chunk index on
+//!   every run.
+//! - **Hardened ingest**: `update_streaming` passes chunks through the
+//!   same quarantine/retry stack as the streamed fit.
+//!
+//! The suite honors `SCRB_FAULT_SEED` (default 42); CI sweeps several
+//! values.
+
+use scrb::cluster::{Env, MethodKind};
+use scrb::config::{Engine, Kernel, PipelineConfig, UpdateConfig};
+use scrb::data::synth;
+use scrb::linalg::Mat;
+use scrb::metrics::nmi;
+use scrb::model::{FittedModel as _, ScRbModel, UPDATE_TRAILER_BYTES};
+use scrb::stream::{IngestPolicy, LibsvmChunks, OnBadRecord, SparseChunk};
+use scrb::update::{update_streaming, UpdateOutcome, UpdateWorkspace};
+use std::fmt::Write as _;
+
+/// Scenario seed: `SCRB_FAULT_SEED` env var, default 42. The properties
+/// below must hold at every swept value.
+fn fault_seed() -> u64 {
+    std::env::var("SCRB_FAULT_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(42)
+}
+
+fn rb_cfg(k: usize, r: usize, sigma: f64, seed: u64) -> PipelineConfig {
+    PipelineConfig::builder()
+        .engine(Engine::Native)
+        .k(k)
+        .r(r)
+        .kernel(Kernel::Laplacian { sigma })
+        .kmeans_replicates(3)
+        .seed(seed)
+        .build()
+}
+
+/// Fit SC_RB and hand back the concrete serving model.
+fn fit_model(cfg: PipelineConfig, x: &Mat) -> ScRbModel {
+    let fitted = MethodKind::ScRb.fit(&Env::new(cfg), x).expect("SC_RB fit");
+    *fitted.model.into_any().downcast::<ScRbModel>().ok().unwrap()
+}
+
+/// Rows `lo..hi` of a dense matrix as one sparse update chunk.
+fn chunk_of(x: &Mat, lo: usize, hi: usize) -> SparseChunk {
+    let mut c = SparseChunk::new();
+    for i in lo..hi {
+        c.begin_row(0);
+        for (j, &v) in x.row(i).iter().enumerate() {
+            if v != 0.0 {
+                c.push_entry(j as u32, v);
+            }
+        }
+        c.end_row();
+    }
+    c
+}
+
+/// Model bytes with the mutable tail (v3 trailer + checksum) stripped.
+fn frozen_prefix(m: &ScRbModel) -> Vec<u8> {
+    let mut b = m.to_bytes();
+    b.truncate(b.len() - UPDATE_TRAILER_BYTES - 8);
+    b
+}
+
+#[test]
+fn benign_chunks_are_byte_invisible_modulo_counters() {
+    let seed = fault_seed();
+    let ds = synth::gaussian_blobs(300, 4, 3, 8.0, seed);
+    let mut m = fit_model(rb_cfg(3, 64, 0.7, seed), &ds.x);
+    let before = frozen_prefix(&m);
+    let full_before = m.to_bytes();
+    let mut ws = UpdateWorkspace::new();
+    let cfg = UpdateConfig { seed, ..Default::default() };
+
+    // zero rows: only the call counter moves
+    let rep = m.update(&SparseChunk::new(), &cfg, &mut ws).unwrap();
+    assert_eq!(rep.outcome, UpdateOutcome::Updated);
+    assert_eq!(m.update_state.updates, 1);
+    assert_eq!(m.update_state.rows_absorbed, 0);
+    assert_eq!(frozen_prefix(&m), before);
+
+    // training rows replayed: all in vocabulary, below the residual
+    // gate, so the fold never runs
+    let rep = m.update(&chunk_of(&ds.x, 0, 300), &cfg, &mut ws).unwrap();
+    assert_eq!(rep.outcome, UpdateOutcome::Updated);
+    assert_eq!(rep.admitted, 0, "training rows admit nothing");
+    assert_eq!(rep.unseen_rate, 0.0);
+    assert_eq!(frozen_prefix(&m), before, "model bytes unchanged outside the trailer");
+    assert_eq!(m.update_state.rows_absorbed, 300);
+
+    // the full images differ only in the trailer+checksum suffix
+    let full_after = m.to_bytes();
+    assert_eq!(full_after.len(), full_before.len());
+    let cut = full_before.len() - UPDATE_TRAILER_BYTES - 8;
+    assert_eq!(full_after[..cut], full_before[..cut]);
+    assert_ne!(full_after[cut..], full_before[cut..], "counters did persist");
+}
+
+#[test]
+fn admission_grows_codebook_and_projection_in_lockstep() {
+    let seed = fault_seed();
+    let ds = synth::gaussian_blobs(250, 4, 3, 8.0, seed ^ 1);
+    let mut m = fit_model(rb_cfg(3, 64, 0.7, seed ^ 1), &ds.x);
+    let dim0 = m.codebook.dim;
+
+    // shift the frame far outside every fitted bin
+    let mut shifted = ds.x.clone();
+    for v in shifted.data.iter_mut() {
+        *v += 25.0;
+    }
+    let mut ws = UpdateWorkspace::new();
+    let cfg = UpdateConfig { seed, ..Default::default() };
+    let rep = m.update(&chunk_of(&shifted, 0, 120), &cfg, &mut ws).unwrap();
+    assert!(rep.admitted > 0, "shifted rows must admit new bins");
+    assert!(rep.unseen_rate > 0.5, "unseen rate {}", rep.unseen_rate);
+    assert_eq!(m.codebook.dim, dim0 + rep.admitted);
+    assert_eq!(m.proj.rows, m.codebook.dim, "P widened with the codebook");
+    assert_eq!(m.proj.cols, m.s.len());
+
+    // the grown model persists through the file round-trip exactly
+    let dir = std::env::temp_dir().join("scrb_test_update");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("grown_{seed}.scrb"));
+    let path = path.to_str().unwrap();
+    m.save(path).unwrap();
+    let back = ScRbModel::load(path).unwrap();
+    assert_eq!(back.to_bytes(), m.to_bytes());
+    assert_eq!(back.update_state, m.update_state);
+
+    // both frames serve without error, and identically across the trip
+    assert_eq!(m.predict(&ds.x).unwrap(), back.predict(&ds.x).unwrap());
+    assert_eq!(m.predict(&shifted).unwrap(), back.predict(&shifted).unwrap());
+}
+
+#[test]
+fn incremental_updates_track_full_refit_quality() {
+    // fit on half the data, absorb the rest in chunks; clustering
+    // quality on everything must stay within 0.05 NMI of refitting on
+    // everything (ISSUE 10 acceptance)
+    let seed = fault_seed();
+    let mut ds = synth::gaussian_blobs(600, 4, 3, 9.0, seed);
+    ds.shuffle(&mut scrb::util::rng::Pcg::seed(seed ^ 0xabc));
+    let mut m = fit_model(rb_cfg(3, 128, 0.7, seed), &ds.x.row_block(0, 300));
+    let mut ws = UpdateWorkspace::new();
+    let cfg = UpdateConfig { seed, ..Default::default() };
+    let mut lo = 300usize;
+    while lo < 600 {
+        let hi = (lo + 100).min(600);
+        m.update(&chunk_of(&ds.x, lo, hi), &cfg, &mut ws).unwrap();
+        lo = hi;
+    }
+    assert_eq!(m.update_state.rows_absorbed, 300);
+
+    let upd_nmi = nmi(&m.predict(&ds.x).unwrap(), &ds.y);
+    let refit = fit_model(rb_cfg(3, 128, 0.7, seed), &ds.x);
+    let refit_nmi = nmi(&refit.predict(&ds.x).unwrap(), &ds.y);
+    assert!(refit_nmi > 0.9, "refit baseline degenerate: {refit_nmi}");
+    assert!(
+        upd_nmi >= refit_nmi - 0.05,
+        "updated NMI {upd_nmi} vs refit NMI {refit_nmi}"
+    );
+}
+
+#[test]
+fn refit_trigger_is_deterministic_under_a_fixed_seed() {
+    let seed = fault_seed();
+    let ds = synth::gaussian_blobs(200, 4, 3, 8.0, seed ^ 2);
+    let cfg = UpdateConfig {
+        seed,
+        ewma: 0.6,
+        unseen_refit: 0.25,
+        ..Default::default()
+    };
+
+    // drifting scenario: each step shifts further off the training frame
+    let run = || {
+        let mut m = fit_model(rb_cfg(3, 64, 0.7, seed ^ 2), &ds.x);
+        let mut ws = UpdateWorkspace::new();
+        let mut fired_at = None;
+        for step in 0..8usize {
+            let mut shifted = ds.x.clone();
+            for v in shifted.data.iter_mut() {
+                *v += 30.0 * (step + 1) as f64;
+            }
+            let rep = m.update(&chunk_of(&shifted, 0, 60), &cfg, &mut ws).unwrap();
+            if rep.outcome == UpdateOutcome::RefitNeeded {
+                fired_at = Some(step);
+                break;
+            }
+        }
+        (fired_at, m.update_state)
+    };
+
+    let (fire_a, state_a) = run();
+    let (fire_b, state_b) = run();
+    assert!(fire_a.is_some(), "sustained drift must escalate");
+    assert_eq!(fire_a, fire_b, "trigger step must replay exactly");
+    assert_eq!(state_a, state_b, "persisted drift state must replay exactly");
+    assert_eq!(state_a.refits_signaled, 1);
+}
+
+#[test]
+fn update_streaming_quarantines_bad_records_like_the_fit() {
+    let seed = fault_seed();
+    let ds = synth::gaussian_blobs(120, 3, 2, 8.0, seed ^ 3);
+    let mut m = fit_model(rb_cfg(2, 32, 0.7, seed ^ 3), &ds.x);
+
+    // libsvm text of the training rows with two corrupt lines spliced in
+    let mut text = String::new();
+    for i in 0..60 {
+        write!(text, "{}", ds.y[i]).unwrap();
+        for (j, &v) in ds.x.row(i).iter().enumerate() {
+            if v != 0.0 {
+                write!(text, " {}:{v}", j + 1).unwrap();
+            }
+        }
+        text.push('\n');
+        if i == 20 || i == 40 {
+            text.push_str("0 1:not_a_number 2:nan\n");
+        }
+    }
+    let cfg = UpdateConfig { seed, ..Default::default() };
+    let mut ws = UpdateWorkspace::new();
+
+    // strict: the first offender is fatal, as in the streamed fit
+    let mut strict = LibsvmChunks::from_bytes(text.clone().into_bytes(), 16);
+    let policy = IngestPolicy { retry_backoff_ms: 0, ..Default::default() };
+    assert!(update_streaming(&mut m, &mut strict, &cfg, policy, &mut ws).is_err());
+
+    // quarantine: both offenders skipped, every clean row absorbed
+    let mut m = fit_model(rb_cfg(2, 32, 0.7, seed ^ 3), &ds.x);
+    let mut reader = LibsvmChunks::from_bytes(text.into_bytes(), 16);
+    let policy = IngestPolicy {
+        on_bad_record: OnBadRecord::Quarantine,
+        retry_backoff_ms: 0,
+        ..Default::default()
+    };
+    let out = update_streaming(&mut m, &mut reader, &cfg, policy, &mut ws).unwrap();
+    assert_eq!(out.quarantine.skipped(), 2, "both corrupt lines quarantined");
+    assert_eq!(out.rows, 60, "clean rows all absorbed");
+    assert!(!out.refit_needed, "in-vocabulary rows must not trigger a refit");
+    assert_eq!(m.update_state.rows_absorbed, 60);
+}
